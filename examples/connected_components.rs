@@ -1,0 +1,68 @@
+//! The paper's first evaluation app (Listing 1): connected components
+//! over the (synthetic) Amazon co-purchase graph, swept over all eleven
+//! partitioning schemes natively, then reproduced on the modelled
+//! Broadwell/Cascade Lake machines via the DES.
+//!
+//! ```sh
+//! cargo run --release --example connected_components [nodes] [scale]
+//! ```
+
+use daphne_sched::apps::cc;
+use daphne_sched::bench::AppCosts;
+use daphne_sched::config::SchedConfig;
+use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
+use daphne_sched::sched::Scheme;
+use daphne_sched::sim::CostModel;
+use daphne_sched::topology::Topology;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let nodes: usize =
+        args.next().and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let scale: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let g = amazon_like(&GraphSpec::small(nodes, 1)).symmetrize();
+    let g = if scale > 1 { scale_up(&g, scale) } else { g };
+    println!(
+        "graph: {} nodes / {} edges; host has {} cores\n",
+        g.rows,
+        g.nnz(),
+        Topology::host().n_cores()
+    );
+
+    // -- native execution on this host, all schemes --------------------
+    println!("native execution (host):");
+    let topo = Topology::host();
+    for scheme in Scheme::ALL {
+        let cfg = SchedConfig::default().with_scheme(scheme);
+        let r = cc::run_native(&g, &topo, &cfg, 100);
+        println!(
+            "  {:<7} {:.4}s  ({} iterations, {} components)",
+            scheme.name(),
+            r.total_time(),
+            r.iterations,
+            r.components
+        );
+    }
+
+    // -- modelled machines (the paper's testbeds) ----------------------
+    let iters = cc::converge_iterations(&g, 100);
+    let costs = CostModel::daphne_like();
+    let app = AppCosts::recorded();
+    for machine in [Topology::broadwell20(), Topology::cascadelake56()] {
+        println!("\nsimulated on {} ({} cores):", machine.name, machine.n_cores());
+        for scheme in Scheme::FIGURES {
+            let cfg = SchedConfig::default().with_scheme(scheme).with_seed(1);
+            let (t, _) = cc::simulate_run(
+                &g,
+                &machine,
+                &cfg,
+                &costs,
+                iters,
+                app.cc_per_row,
+                app.cc_per_nnz,
+            );
+            println!("  {:<7} {t:.4}s", scheme.name());
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! The paper's second evaluation app (Listing 2): linear-regression
+//! training on dense random data — natively, and through the AOT
+//! JAX/Pallas artifacts over PJRT when `artifacts/` is built.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example linear_regression
+//! ```
+
+use daphne_sched::apps::linreg::{self, LinregSpec};
+use daphne_sched::config::SchedConfig;
+use daphne_sched::runtime::{DeviceService, Runtime};
+use daphne_sched::sched::Scheme;
+use daphne_sched::topology::Topology;
+
+fn main() {
+    let spec = LinregSpec { rows: 50_000, cols: 33, lambda: 1e-3, seed: 3 };
+    let (x, y) = linreg::generate(&spec);
+    let topo = Topology::host();
+    println!(
+        "design matrix {}x{}, host {} cores",
+        x.rows,
+        x.cols,
+        topo.n_cores()
+    );
+
+    println!("\nnative execution, all schemes:");
+    for scheme in Scheme::ALL {
+        let cfg = SchedConfig::default().with_scheme(scheme);
+        let r = linreg::run_native(&x, &y, spec.lambda, &topo, &cfg).unwrap();
+        println!(
+            "  {:<7} scheduled {:.4}s  rmse={:.4}",
+            scheme.name(),
+            r.report.total_time(),
+            linreg::rmse(&x, &y, &r.beta)
+        );
+    }
+
+    // -- PJRT path: the same pipeline through the AOT artifacts ---------
+    if Runtime::default_dir().join("manifest.json").exists() {
+        let (service, client) = DeviceService::start_default().unwrap();
+        println!("\npjrt path (platform: {}):", service.platform);
+        // artifact feature width is fixed; regenerate at that width
+        let (_, d) = service.manifest.lr_block;
+        let spec = LinregSpec { rows: 4096, cols: d + 1, lambda: 1e-3, seed: 3 };
+        let (xp, yp) = linreg::generate(&spec);
+        let cfg = SchedConfig::default().with_scheme(Scheme::Gss);
+        let native =
+            linreg::run_native(&xp, &yp, spec.lambda, &topo, &cfg).unwrap();
+        let pjrt = linreg::run_pjrt(
+            &xp,
+            &yp,
+            spec.lambda,
+            &client,
+            &service.manifest,
+            &topo,
+            &cfg,
+        )
+        .unwrap();
+        let max_diff = native
+            .beta
+            .iter()
+            .zip(&pjrt.beta)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!(
+            "  native vs pjrt beta max |diff| = {max_diff:.2e} over {} coeffs",
+            pjrt.beta.len()
+        );
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` for the PJRT path)");
+    }
+}

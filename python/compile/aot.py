@@ -1,0 +1,83 @@
+"""AOT lowering: JAX stage functions -> HLO-text artifacts for rust/PJRT.
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<stage>.hlo.txt`` per entry in ``model.STAGES`` plus a
+``manifest.json`` describing shapes, which the rust artifact registry
+cross-checks at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(name: str):
+    fn, arg_shapes = model.STAGES[name]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in arg_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    n_outputs = len(lowered.out_info)
+    return to_hlo_text(lowered), n_outputs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--stages",
+        nargs="*",
+        default=sorted(model.STAGES),
+        help="subset of stages to lower (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "block_shapes": {
+            "cc": [model.CC_ROWS, model.CC_COLS],
+            "lr": [model.LR_ROWS, model.LR_COLS],
+        },
+        "stages": {},
+    }
+    for name in args.stages:
+        text, n_outputs = lower_stage(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["stages"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(s) for s in model.STAGES[name][1]],
+            "outputs": n_outputs,
+            "dtype": "f32",
+        }
+        print(f"lowered {name:>16} -> {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

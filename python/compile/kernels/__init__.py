@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+``ref`` holds the pure-jnp oracles; every kernel here is validated against
+them by ``python/tests/``.
+"""
+
+from . import cc_propagate, linreg, ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""Pallas kernel for the connected-components neighbour-propagation step.
+
+This is the compute hot-spot of Listing 1: ``u = max(rowMaxs(G * t(c)), c)``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the DAPHNE CPU runtime
+row-partitions G across worker threads; here the same schedule is
+expressed as a Pallas grid over column tiles with the row block resident
+in VMEM. The output block acts as a max-accumulator across the column
+grid — the classic reduction-into-output pattern that replaces the CPU
+runtime's per-thread row loop.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is still what a real TPU build
+would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 8x128 is the float32 VPU lane layout; the row tile
+# is kept at 128 so the (row, col) block is one MXU-shaped 128x128 tile.
+ROW_TILE = 128
+COL_TILE = 128
+
+
+def _kernel(g_ref, c_ref, crow_ref, u_ref):
+    """One (row-block, col-tile) grid step.
+
+    g_ref:    [TR, TC] adjacency tile.
+    c_ref:    [1, TC]  component ids of the column vertices of this tile.
+    crow_ref: [TR]     component ids of the row vertices (same for all j).
+    u_ref:    [TR]     output accumulator (max across column tiles).
+    """
+    j = pl.program_id(0)
+
+    # rowMaxs(G * t(c)) over this column tile.
+    prod = g_ref[...] * c_ref[...]  # [TR, TC]
+    tile_max = jnp.max(prod, axis=1)  # [TR]
+
+    # First column tile initialises the accumulator with the row's own id
+    # (the `max(..., c)` part of Listing 1); later tiles fold in.
+    @pl.when(j == 0)
+    def _init():
+        u_ref[...] = jnp.maximum(tile_max, crow_ref[...])
+
+    @pl.when(j != 0)
+    def _fold():
+        u_ref[...] = jnp.maximum(u_ref[...], tile_max)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "col_tile"))
+def cc_propagate(g, c, c_row, *, row_tile=ROW_TILE, col_tile=COL_TILE):
+    """Tiled ``max(rowMaxs(G * t(c)), c)``.
+
+    Args:
+      g: ``[R, C]`` f32 dense adjacency block. R % row_tile == 0,
+         C % col_tile == 0 (callers zero-pad; padding is inert because
+         component ids are >= 1).
+      c: ``[C]`` f32 column-vertex ids.
+      c_row: ``[R]`` f32 row-vertex ids.
+
+    Returns:
+      ``[R]`` f32 updated row ids.
+    """
+    rows, cols = g.shape
+    assert rows % row_tile == 0 and cols % col_tile == 0, (rows, cols)
+    grid = (cols // col_tile, rows // row_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, col_tile), lambda j, i: (i, j)),
+            pl.BlockSpec((1, col_tile), lambda j, i: (0, j)),
+            pl.BlockSpec((row_tile,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda j, i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(g, c.reshape(1, cols), c_row)

@@ -1,0 +1,142 @@
+"""Pallas kernels for the linear-regression pipeline (Listing 2).
+
+Four kernels cover the dense hot-spots of the pipeline:
+
+- ``colstats``    — column sum / sum-of-squares (lines 8-9, mean/stddev)
+- ``standardize`` — ``(X - mean) / std`` (line 10)
+- ``syrk``        — ``A = X^T X`` row-block partial (line 12)
+- ``gemv``        — ``b = X^T y`` row-block partial (line 15)
+
+TPU adaptation: ``syrk`` is expressed as an MXU-shaped 128x128-tile
+matmul with a k-grid accumulating into the output block; ``colstats`` /
+``standardize`` are VPU elementwise tiles. All are lowered with
+``interpret=True`` for CPU-PJRT execution (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128  # k-dimension tile for syrk/gemv, row tile elsewhere
+COL_TILE = 128
+
+
+def _colstats_kernel(x_ref, s_ref, sq_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.sum(x, axis=0)
+        sq_ref[...] = jnp.sum(x * x, axis=0)
+
+    @pl.when(i != 0)
+    def _fold():
+        s_ref[...] += jnp.sum(x, axis=0)
+        sq_ref[...] += jnp.sum(x * x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def colstats(x, *, row_tile=ROW_TILE):
+    """``(sum(X, axis=0), sum(X*X, axis=0))`` for an ``[R, C]`` block."""
+    rows, cols = x.shape
+    assert rows % row_tile == 0, rows
+    out = jax.ShapeDtypeStruct((cols,), jnp.float32)
+    return pl.pallas_call(
+        _colstats_kernel,
+        grid=(rows // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, cols), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ),
+        out_shape=(out, out),
+        interpret=True,
+    )(x)
+
+
+def _standardize_kernel(x_ref, m_ref, s_ref, o_ref):
+    o_ref[...] = (x_ref[...] - m_ref[...]) / s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def standardize(x, mean, std, *, row_tile=ROW_TILE):
+    """``(X - mean) / std`` column-broadcast over an ``[R, C]`` block."""
+    rows, cols = x.shape
+    assert rows % row_tile == 0, rows
+    return pl.pallas_call(
+        _standardize_kernel,
+        grid=(rows // row_tile,),
+        in_specs=[
+            pl.BlockSpec((row_tile, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, mean.reshape(1, cols), std.reshape(1, cols))
+
+
+def _syrk_kernel(x_ref, a_ref):
+    k = pl.program_id(0)
+    x = x_ref[...]  # [KT, C] slab of X
+    partial = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        a_ref[...] = partial
+
+    @pl.when(k != 0)
+    def _fold():
+        a_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def syrk(x, *, row_tile=ROW_TILE):
+    """``X^T X`` for an ``[R, C]`` block, accumulated over k-tiles of rows."""
+    rows, cols = x.shape
+    assert rows % row_tile == 0, rows
+    return pl.pallas_call(
+        _syrk_kernel,
+        grid=(rows // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, cols), lambda k: (k, 0))],
+        out_specs=pl.BlockSpec((cols, cols), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((cols, cols), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _gemv_kernel(x_ref, y_ref, b_ref):
+    k = pl.program_id(0)
+    partial = jnp.dot(
+        x_ref[...].T, y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        b_ref[...] = partial
+
+    @pl.when(k != 0)
+    def _fold():
+        b_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def gemv(x, y, *, row_tile=ROW_TILE):
+    """``X^T y`` for an ``[R, C]`` block, accumulated over k-tiles of rows."""
+    rows, cols = x.shape
+    assert rows % row_tile == 0, rows
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=(rows // row_tile,),
+        in_specs=[
+            pl.BlockSpec((row_tile, cols), lambda k: (k, 0)),
+            pl.BlockSpec((row_tile,), lambda k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((cols,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((cols,), jnp.float32),
+        interpret=True,
+    )(x, y)

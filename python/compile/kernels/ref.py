@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle here (pytest + hypothesis-style sweeps in
+``python/tests/``). They intentionally mirror the DaphneDSL semantics of
+the paper's Listings 1 and 2.
+"""
+
+import jax.numpy as jnp
+
+
+def cc_propagate(g, c, c_row):
+    """One neighbour-propagation step of connected components (Listing 1).
+
+    ``u = max(rowMaxs(G * t(c)), c)`` — for each row i, the max component
+    id among i's neighbours (``G[i, j] != 0`` selects ``c[j]``) combined
+    with i's own current id.
+
+    Args:
+      g: ``[R, C]`` dense adjacency block (0 = no edge, 1 = edge).
+      c: ``[C]`` current component ids of the column vertices.
+      c_row: ``[R]`` current component ids of the row vertices.
+
+    Returns:
+      ``[R]`` updated ids for the row vertices.
+
+    Matches DaphneDSL exactly: ``G * t(c)`` is an elementwise product with
+    a broadcast row vector, so absent edges contribute 0. Component ids
+    are >= 1, hence the 0 contribution never wins the max. This also makes
+    zero-padding of partial blocks semantically inert.
+    """
+    prod = g * c[None, :]
+    return jnp.maximum(jnp.max(prod, axis=1), c_row)
+
+
+def colstats(x):
+    """Column sums and sums of squares (Listing 2 lines 8-9).
+
+    Returns ``(sum[C], sumsq[C])``; the caller accumulates across row
+    blocks and finalises ``mean = sum/n``, ``std = sqrt(sumsq/n - mean^2)``.
+    """
+    return jnp.sum(x, axis=0), jnp.sum(x * x, axis=0)
+
+
+def standardize(x, mean, std):
+    """``(X - mean) / std`` with column-wise broadcast (Listing 2 line 10)."""
+    return (x - mean[None, :]) / std[None, :]
+
+
+def syrk(x):
+    """``A = X^T X`` (Listing 2 line 12) for one row block.
+
+    The full A is the sum of per-row-block partials; the rust VEE
+    accumulates them, which is exactly how DAPHNE parallelises ``syrk``.
+    """
+    return x.T @ x
+
+
+def gemv(x, y):
+    """``b = X^T y`` (Listing 2 line 15) for one row block."""
+    return x.T @ y

@@ -1,0 +1,88 @@
+"""L2: JAX stage functions for the two IDA pipelines, calling L1 kernels.
+
+Each public function here is a *pipeline stage* the rust VEE schedules as
+a task body. They are lowered once by ``aot.py`` to HLO-text artifacts
+with the fixed block shapes below; the rust runtime pads/partitions real
+data onto these shapes (zero padding is semantically inert for every
+stage — see the kernel docstrings).
+
+All functions return tuples: ``aot.py`` lowers with ``return_tuple=True``
+and the rust side unwraps with ``to_tuple1()`` / ``to_tuple()``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cc_propagate as cc_k
+from .kernels import linreg as lr_k
+
+# ---------------------------------------------------------------------------
+# Fixed artifact block shapes (f32 everywhere).
+#
+# CC_ROWS x CC_COLS is the dense adjacency tile the scheduler hands to one
+# task on the PJRT path; LR_ROWS x LR_COLS is the row-block of the design
+# matrix. 128 columns keeps syrk's output an MXU-shaped 128x128 tile.
+# ---------------------------------------------------------------------------
+CC_ROWS, CC_COLS = 128, 1024
+LR_ROWS, LR_COLS = 256, 128
+
+
+def cc_propagate_block(g, c, c_row):
+    """Listing 1 line 13 over one [CC_ROWS, CC_COLS] adjacency tile."""
+    return (cc_k.cc_propagate(g, c, c_row),)
+
+
+def lr_colstats_block(x):
+    """Listing 2 lines 8-9 partials over one row block."""
+    s, sq = lr_k.colstats(x)
+    return (s, sq)
+
+
+def lr_standardize_block(x, mean, std):
+    """Listing 2 line 10 over one row block."""
+    return (lr_k.standardize(x, mean, std),)
+
+
+def lr_syrk_block(x):
+    """Listing 2 line 12 partial (X^T X) over one row block."""
+    return (lr_k.syrk(x),)
+
+
+def lr_gemv_block(x, y):
+    """Listing 2 line 15 partial (X^T y) over one row block."""
+    return (lr_k.gemv(x, y),)
+
+
+def lr_fused_block(x, mean, std, y):
+    """Fused standardize + syrk + gemv over one row block.
+
+    One dispatch instead of three on the hot path; XLA fuses the
+    standardize into both contractions. The +1-bias column of Listing 2
+    line 11 is appended here so A and b already include the intercept.
+    """
+    xn = lr_k.standardize(x, mean, std)
+    ones = jnp.ones((xn.shape[0], 1), jnp.float32)
+    xb = jnp.concatenate([xn, ones], axis=1)  # [R, C+1]
+    a = lr_k.syrk(xb, row_tile=xb.shape[0])
+    b = lr_k.gemv(xb, y, row_tile=xb.shape[0])
+    return (a, b)
+
+
+# name -> (fn, example-arg shapes); consumed by aot.py and mirrored in the
+# rust artifact registry (runtime/artifact.rs).
+STAGES = {
+    "cc_propagate": (
+        cc_propagate_block,
+        ((CC_ROWS, CC_COLS), (CC_COLS,), (CC_ROWS,)),
+    ),
+    "lr_colstats": (lr_colstats_block, ((LR_ROWS, LR_COLS),)),
+    "lr_standardize": (
+        lr_standardize_block,
+        ((LR_ROWS, LR_COLS), (LR_COLS,), (LR_COLS,)),
+    ),
+    "lr_syrk": (lr_syrk_block, ((LR_ROWS, LR_COLS),)),
+    "lr_gemv": (lr_gemv_block, ((LR_ROWS, LR_COLS), (LR_ROWS,))),
+    "lr_fused": (
+        lr_fused_block,
+        ((LR_ROWS, LR_COLS), (LR_COLS,), (LR_COLS,), (LR_ROWS,)),
+    ),
+}

@@ -1,0 +1,216 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and the CC id distribution); fixed-seed numpy
+cases cover the exact artifact shapes used by the rust runtime.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import cc_propagate as cc_k
+from compile.kernels import linreg as lr_k
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xDA9)
+
+
+def rand_adj(rows, cols, density=0.05):
+    g = (RNG.random((rows, cols)) < density).astype(np.float32)
+    return jnp.asarray(g)
+
+
+def rand_ids(n, hi):
+    return jnp.asarray(RNG.integers(1, hi + 1, n).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# cc_propagate
+# ---------------------------------------------------------------------------
+
+
+class TestCcPropagate:
+    def test_artifact_shape(self):
+        """Exact block shape the rust runtime executes."""
+        g = rand_adj(model.CC_ROWS, model.CC_COLS)
+        c = rand_ids(model.CC_COLS, 10_000)
+        c_row = rand_ids(model.CC_ROWS, 10_000)
+        got = cc_k.cc_propagate(g, c, c_row)
+        want = ref.cc_propagate(g, c, c_row)
+        np.testing.assert_array_equal(got, want)
+
+    def test_no_edges_keeps_own_id(self):
+        g = jnp.zeros((128, 128), jnp.float32)
+        c = rand_ids(128, 50)
+        c_row = rand_ids(128, 50)
+        np.testing.assert_array_equal(
+            cc_k.cc_propagate(g, c, c_row), c_row
+        )
+
+    def test_full_graph_propagates_global_max(self):
+        g = jnp.ones((128, 256), jnp.float32)
+        c = rand_ids(256, 999)
+        c_row = rand_ids(128, 999)
+        got = cc_k.cc_propagate(g, c, c_row)
+        want = jnp.maximum(jnp.max(c), c_row)
+        np.testing.assert_array_equal(got, want)
+
+    def test_zero_padding_is_inert(self):
+        """Zero-padded columns must not change the result (ids >= 1)."""
+        g = rand_adj(128, 256)
+        c = rand_ids(256, 100)
+        c_row = rand_ids(128, 100)
+        base = cc_k.cc_propagate(g, c, c_row)
+        g_pad = jnp.pad(g, ((0, 0), (0, 128)))
+        c_pad = jnp.pad(c, (0, 128))
+        padded = cc_k.cc_propagate(g_pad, c_pad, c_row)
+        np.testing.assert_array_equal(base, padded)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rt=st.sampled_from([8, 32, 128]),
+        row_blocks=st.integers(1, 3),
+        col_blocks=st.integers(1, 4),
+        density=st.floats(0.0, 0.5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(
+        self, rt, row_blocks, col_blocks, density, seed
+    ):
+        rng = np.random.default_rng(seed)
+        rows, cols = rt * row_blocks, rt * col_blocks
+        g = jnp.asarray((rng.random((rows, cols)) < density).astype(np.float32))
+        c = jnp.asarray(rng.integers(1, 1000, cols).astype(np.float32))
+        c_row = jnp.asarray(rng.integers(1, 1000, rows).astype(np.float32))
+        got = cc_k.cc_propagate(g, c, c_row, row_tile=rt, col_tile=rt)
+        want = ref.cc_propagate(g, c, c_row)
+        np.testing.assert_array_equal(got, want)
+
+    def test_fixpoint_of_converged_labels(self):
+        """Once labels equal the component max, propagate is the identity."""
+        # two cliques: {0..63} and {64..127}
+        g = np.zeros((128, 128), np.float32)
+        g[:64, :64] = 1.0
+        g[64:, 64:] = 1.0
+        c = np.zeros(128, np.float32)
+        c[:64] = 64.0
+        c[64:] = 128.0
+        g, c = jnp.asarray(g), jnp.asarray(c)
+        got = cc_k.cc_propagate(g, c, c)
+        np.testing.assert_array_equal(got, c)
+
+
+# ---------------------------------------------------------------------------
+# linear-regression kernels
+# ---------------------------------------------------------------------------
+
+
+class TestColstats:
+    def test_artifact_shape(self):
+        x = jnp.asarray(RNG.random((model.LR_ROWS, model.LR_COLS)), jnp.float32)
+        s, sq = lr_k.colstats(x)
+        rs, rsq = ref.colstats(x)
+        np.testing.assert_allclose(s, rs, rtol=1e-5)
+        np.testing.assert_allclose(sq, rsq, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        cols=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, blocks, cols, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((128 * blocks, cols)), jnp.float32)
+        s, sq = lr_k.colstats(x)
+        rs, rsq = ref.colstats(x)
+        np.testing.assert_allclose(s, rs, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(sq, rsq, rtol=1e-4, atol=1e-4)
+
+
+class TestStandardize:
+    def test_artifact_shape(self):
+        x = jnp.asarray(RNG.random((model.LR_ROWS, model.LR_COLS)), jnp.float32)
+        mean = jnp.asarray(RNG.random(model.LR_COLS), jnp.float32)
+        std = jnp.asarray(RNG.random(model.LR_COLS) + 0.5, jnp.float32)
+        got = lr_k.standardize(x, mean, std)
+        np.testing.assert_allclose(
+            got, ref.standardize(x, mean, std), rtol=1e-6
+        )
+
+    def test_roundtrip(self):
+        """standardize(x, 0, 1) == x."""
+        x = jnp.asarray(RNG.random((128, 64)), jnp.float32)
+        got = lr_k.standardize(
+            x, jnp.zeros(64, jnp.float32), jnp.ones(64, jnp.float32)
+        )
+        np.testing.assert_array_equal(got, x)
+
+
+class TestSyrk:
+    def test_artifact_shape(self):
+        x = jnp.asarray(
+            RNG.standard_normal((model.LR_ROWS, model.LR_COLS)), jnp.float32
+        )
+        np.testing.assert_allclose(
+            lr_k.syrk(x), ref.syrk(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_symmetry(self):
+        x = jnp.asarray(RNG.standard_normal((256, 64)), jnp.float32)
+        a = np.asarray(lr_k.syrk(x))
+        np.testing.assert_allclose(a, a.T, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        cols=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, blocks, cols, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((128 * blocks, cols)), jnp.float32)
+        np.testing.assert_allclose(
+            lr_k.syrk(x), ref.syrk(x), rtol=1e-3, atol=1e-3
+        )
+
+    def test_block_accumulation(self):
+        """syrk(top) + syrk(bottom) == syrk(whole) — the VEE contract."""
+        x = jnp.asarray(RNG.standard_normal((512, 32)), jnp.float32)
+        whole = lr_k.syrk(x)
+        parts = lr_k.syrk(x[:256]) + lr_k.syrk(x[256:])
+        np.testing.assert_allclose(whole, parts, rtol=1e-4, atol=1e-4)
+
+
+class TestGemv:
+    def test_artifact_shape(self):
+        x = jnp.asarray(
+            RNG.standard_normal((model.LR_ROWS, model.LR_COLS)), jnp.float32
+        )
+        y = jnp.asarray(RNG.standard_normal(model.LR_ROWS), jnp.float32)
+        np.testing.assert_allclose(
+            lr_k.gemv(x, y), ref.gemv(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_block_accumulation(self):
+        x = jnp.asarray(RNG.standard_normal((512, 32)), jnp.float32)
+        y = jnp.asarray(RNG.standard_normal(512), jnp.float32)
+        whole = lr_k.gemv(x, y)
+        parts = lr_k.gemv(x[:256], y[:256]) + lr_k.gemv(x[256:], y[256:])
+        np.testing.assert_allclose(whole, parts, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        blocks=st.integers(1, 3),
+        cols=st.sampled_from([8, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, blocks, cols, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((128 * blocks, cols)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal(128 * blocks), jnp.float32)
+        np.testing.assert_allclose(
+            lr_k.gemv(x, y), ref.gemv(x, y), rtol=1e-3, atol=1e-3
+        )

@@ -1,0 +1,106 @@
+"""L2 stage-function tests: shapes, fused-vs-unfused consistency, and the
+end-to-end linear-regression semantics of Listing 2 reproduced in JAX."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def test_stage_table_consistent():
+    """Every STAGES entry must be callable on its declared shapes."""
+    for name, (fn, shapes) in model.STAGES.items():
+        args = [
+            jnp.asarray(RNG.random(s).astype(np.float32)) for s in shapes
+        ]
+        out = fn(*args)
+        assert isinstance(out, tuple), name
+        assert all(o is not None for o in out), name
+
+
+def test_fused_matches_unfused():
+    """lr_fused == standardize -> cbind(ones) -> syrk/gemv composition."""
+    x = jnp.asarray(
+        RNG.standard_normal((model.LR_ROWS, model.LR_COLS)), jnp.float32
+    )
+    y = jnp.asarray(RNG.standard_normal(model.LR_ROWS), jnp.float32)
+    mean = jnp.asarray(RNG.standard_normal(model.LR_COLS), jnp.float32)
+    std = jnp.asarray(
+        RNG.random(model.LR_COLS).astype(np.float32) + 0.5, jnp.float32
+    )
+    a, b = model.lr_fused_block(x, mean, std, y)
+
+    xn = ref.standardize(x, mean, std)
+    xb = jnp.concatenate(
+        [xn, jnp.ones((model.LR_ROWS, 1), jnp.float32)], axis=1
+    )
+    np.testing.assert_allclose(a, ref.syrk(xb), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(b, ref.gemv(xb, y), rtol=1e-3, atol=1e-3)
+
+
+def test_listing2_end_to_end_recovers_coefficients():
+    """Full Listing 2 semantics composed from the stage functions recovers
+    planted regression coefficients on noiseless data."""
+    n, d = 1024, 16
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    beta_true = rng.standard_normal(d).astype(np.float32)
+    intercept = 0.75
+    y = x @ beta_true + intercept
+
+    # lines 8-10: colstats partials -> mean/std -> standardize
+    s = np.zeros(d, np.float32)
+    sq = np.zeros(d, np.float32)
+    for lo in range(0, n, 256):
+        bs, bsq = model.lr_colstats_block(jnp.asarray(x[lo : lo + 256]))
+        s += np.asarray(bs)
+        sq += np.asarray(bsq)
+    mean = s / n
+    std = np.sqrt(np.maximum(sq / n - mean * mean, 1e-12))
+
+    # lines 11-15 via the fused block, accumulated across row blocks
+    a = np.zeros((d + 1, d + 1), np.float32)
+    b = np.zeros(d + 1, np.float32)
+    for lo in range(0, n, 256):
+        pa, pb = model.lr_fused_block(
+            jnp.asarray(x[lo : lo + 256]),
+            jnp.asarray(mean),
+            jnp.asarray(std),
+            jnp.asarray(y[lo : lo + 256]),
+        )
+        a += np.asarray(pa)
+        b += np.asarray(pb)
+
+    # lines 13-16: ridge + solve (rust does this natively; numpy here)
+    a += np.eye(d + 1, dtype=np.float32) * 1e-3
+    beta = np.linalg.solve(a.astype(np.float64), b.astype(np.float64))
+
+    # prediction on standardized features must match y
+    xn = (x - mean) / std
+    pred = xn @ beta[:-1] + beta[-1]
+    np.testing.assert_allclose(pred, y, rtol=2e-2, atol=2e-2)
+
+
+def test_cc_block_composition_matches_whole():
+    """Tiling the CC step across column blocks with max-accumulation (what
+    the rust VEE does across tasks) equals the whole-matrix step."""
+    n = 2 * model.CC_COLS
+    rng = np.random.default_rng(3)
+    g = (rng.random((model.CC_ROWS, n)) < 0.01).astype(np.float32)
+    c = rng.integers(1, 500, n).astype(np.float32)
+    c_row = rng.integers(1, 500, model.CC_ROWS).astype(np.float32)
+
+    whole = ref.cc_propagate(jnp.asarray(g), jnp.asarray(c), jnp.asarray(c_row))
+
+    acc = np.asarray(c_row)
+    for lo in range(0, n, model.CC_COLS):
+        (u,) = model.cc_propagate_block(
+            jnp.asarray(g[:, lo : lo + model.CC_COLS]),
+            jnp.asarray(c[lo : lo + model.CC_COLS]),
+            jnp.asarray(acc),
+        )
+        acc = np.maximum(acc, np.asarray(u))
+    np.testing.assert_array_equal(acc, np.asarray(whole))

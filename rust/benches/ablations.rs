@@ -1,0 +1,43 @@
+//! Ablations from the paper's discussion:
+//!
+//! - §4: SS under central-queue locking "explodes" (why Figs 7-10 omit
+//!   it);
+//! - §5 future work: atomic operations instead of locks on the central
+//!   queue — implemented here as `CentralAtomic` and compared.
+//!
+//! ```sh
+//! cargo bench --bench ablations
+//! ```
+
+use daphne_sched::bench::{figures, FigureParams};
+use daphne_sched::topology::Topology;
+
+fn main() {
+    let params = FigureParams {
+        iterations: Some(10),
+        ..Default::default()
+    };
+
+    println!("== ablation 1: SS central-queue explosion (§4) ==");
+    for (machine, t_ss, t_mfsc) in figures::ablation_ss(&params) {
+        println!(
+            "  {machine:<14} SS={t_ss:>9.3}s  MFSC={t_mfsc:>8.3}s  \
+             ({:.0}x worse)",
+            t_ss / t_mfsc
+        );
+    }
+
+    println!("\n== ablation 2: locked vs atomic central queue (§5) ==");
+    for machine in [Topology::broadwell20(), Topology::cascadelake56()] {
+        println!("  {} ({} cores):", machine.name, machine.n_cores());
+        for (scheme, locked, atomic) in
+            figures::ablation_lock_vs_atomic(&machine, &params)
+        {
+            println!(
+                "    {scheme:<6} locked={locked:>9.4}s atomic={atomic:>9.4}s \
+                 speedup={:>5.2}x",
+                locked / atomic
+            );
+        }
+    }
+}

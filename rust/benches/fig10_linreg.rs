@@ -1,0 +1,41 @@
+//! Regenerates Figures 10a and 10b: linear-regression training on dense
+//! random data with the centralized queue — the workload where STATIC
+//! wins and fine-grained dynamic schemes pay ~2x.
+//!
+//! ```sh
+//! cargo bench --bench fig10_linreg
+//! ```
+
+use daphne_sched::bench::{figures, FigureId, FigureParams};
+
+fn main() {
+    let params = FigureParams::default();
+    println!("workload: dense rand {} rows, 3 repetitions\n", params.lr_rows);
+    let a = figures::print_figure(FigureId::Fig10a, &params);
+    let b = figures::print_figure(FigureId::Fig10b, &params);
+
+    let ratio = |rows: &[figures::Row], scheme: &str| {
+        rows.iter().find(|r| r.scheme == scheme).unwrap().vs_static
+    };
+    println!("\npaper vs measured (slowdown vs STATIC):");
+    println!(
+        "  Fig 10a MFSC: paper ~2.0x   measured {:.2}x",
+        ratio(&a, "MFSC")
+    );
+    println!(
+        "  Fig 10a TSS:  paper 1.16x  measured {:.2}x",
+        ratio(&a, "TSS")
+    );
+    println!(
+        "  Fig 10a FISS: paper 1.24x  measured {:.2}x",
+        ratio(&a, "FISS")
+    );
+    println!(
+        "  Fig 10b TSS:  paper 1.50x  measured {:.2}x",
+        ratio(&b, "TSS")
+    );
+    println!(
+        "  Fig 10b FISS: paper 1.60x  measured {:.2}x",
+        ratio(&b, "FISS")
+    );
+}

@@ -1,0 +1,48 @@
+//! Regenerates Figures 8a/8b (Broadwell) and 9a/9b (Cascade Lake):
+//! connected components with multiple work queues — PERCORE (globally
+//! dealt chunks) and PERCPU (per-NUMA pre-partitioned blocks) — across
+//! all four victim-selection strategies.
+//!
+//! ```sh
+//! cargo bench --bench fig8_9_cc_multiqueue
+//! ```
+
+use daphne_sched::bench::{figures, FigureId, FigureParams};
+
+fn main() {
+    let params = FigureParams::default();
+    println!(
+        "workload: synthetic amazon ({} nodes), 3 repetitions\n",
+        params.nodes
+    );
+    let a8 = figures::print_figure(FigureId::Fig8a, &params);
+    let b8 = figures::print_figure(FigureId::Fig8b, &params);
+    let _a9 = figures::print_figure(FigureId::Fig9a, &params);
+    let b9 = figures::print_figure(FigureId::Fig9b, &params);
+
+    // paper-shape checks
+    let static_rank = |rows: &[figures::Row], victim: &str| {
+        let mut v: Vec<&figures::Row> = rows
+            .iter()
+            .filter(|r| r.victim == Some(victim))
+            .collect();
+        v.sort_by(|x, y| x.time.total_cmp(&y.time));
+        v.iter().position(|r| r.scheme == "STATIC").unwrap() + 1
+    };
+    println!("\npaper vs measured shape:");
+    println!(
+        "  Fig 8a PERCORE: paper says STATIC is lowest-performing; measured \
+         STATIC rank {}/10 (SEQ)",
+        static_rank(&a8, "SEQ")
+    );
+    println!(
+        "  Fig 8b PERCPU:  paper says STATIC is highest-performing with \
+         SEQPRI; measured rank {}/10 (SEQPRI)",
+        static_rank(&b8, "SEQPRI")
+    );
+    println!(
+        "  Fig 9b PERCPU:  paper says STATIC highest on Cascade Lake; \
+         measured rank {}/10 (SEQPRI)",
+        static_rank(&b9, "SEQPRI")
+    );
+}

@@ -1,0 +1,110 @@
+//! Microbenchmarks of the scheduler hot paths (the §Perf targets):
+//!
+//! - partitioner `next_chunk` per scheme (the `getNextChunk` cost),
+//! - locked vs atomic central-queue pull,
+//! - multi-queue pull + steal round,
+//! - DES event throughput,
+//! - native CC propagate kernel throughput.
+//!
+//! ```sh
+//! cargo bench --bench micro
+//! ```
+
+use std::time::Instant;
+
+use daphne_sched::config::SchedConfig;
+use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::matrix::ops;
+use daphne_sched::sched::partitioner::{Partitioner, PartitionerOptions};
+use daphne_sched::sched::queue::{
+    build_source, CentralAtomic, CentralLocked, QueueLayout, TaskSource,
+};
+use daphne_sched::sched::{Scheme, VictimStrategy};
+use daphne_sched::sim::{simulate, CostModel, Workload};
+use daphne_sched::topology::Topology;
+use daphne_sched::util::fmt_duration;
+
+fn bench<F: FnMut() -> usize>(label: &str, mut f: F) {
+    // warmup
+    let mut ops = f();
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        ops = f();
+    }
+    let per_op = t0.elapsed().as_secs_f64() / (reps * ops) as f64;
+    println!("  {label:<44} {:>12}/op  ({ops} ops/rep)", fmt_duration(per_op));
+}
+
+fn main() {
+    let opts = PartitionerOptions::default();
+
+    println!("== partitioner next_chunk (N=1M, P=20) ==");
+    for scheme in Scheme::ALL {
+        bench(scheme.name(), || {
+            let p = Partitioner::new(scheme, 0, 1_000_000, 20, &opts);
+            let mut n = 0;
+            while p.next_chunk().is_some() {
+                n += 1;
+            }
+            n
+        });
+    }
+
+    println!("\n== central queue pull (SS chunks, N=1M) ==");
+    bench("locked (mutex + getNextChunk)", || {
+        let src = CentralLocked::new(Scheme::Ss, 1_000_000, 20, &opts);
+        let mut n = 0;
+        while src.pull_local(0).is_some() {
+            n += 1;
+        }
+        n
+    });
+    bench("atomic (precomputed + fetch_add)", || {
+        let src = CentralAtomic::new(Scheme::Ss, 1_000_000, 20, &opts);
+        let mut n = 0;
+        while src.pull_local(0).is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    println!("\n== multi-queue pull+steal (FAC2, N=1M, broadwell20) ==");
+    let topo = Topology::broadwell20();
+    bench("percore drain via pull_from", || {
+        let src = build_source(
+            QueueLayout::PerCore,
+            Scheme::Fac2,
+            1_000_000,
+            &topo,
+            &opts,
+        );
+        let mut n = 0;
+        for q in 0..src.n_queues() {
+            while src.pull_from(q, 0).is_some() {
+                n += 1;
+            }
+        }
+        n
+    });
+
+    println!("\n== DES event throughput ==");
+    let w = Workload::uniform("u", 200_000, 1e-7);
+    let costs = CostModel::recorded();
+    bench("simulate(mfsc, central, cascadelake56)", || {
+        let cfg = SchedConfig::default().with_scheme(Scheme::Ss);
+        let out = simulate(&topo, &cfg, &w, &costs);
+        out.acquisitions
+    });
+    let _ = VictimStrategy::ALL;
+
+    println!("\n== native CC propagate kernel ==");
+    let g = amazon_like(&GraphSpec::small(200_000, 1)).symmetrize();
+    let ids: Vec<f32> = (0..g.rows).map(|i| (i + 1) as f32).collect();
+    let mut out = vec![0f32; g.rows];
+    let nnz = g.nnz();
+    bench("cc_propagate_rows (per nnz)", || {
+        ops::cc_propagate_rows(&g, &ids, &mut out, 0, g.rows);
+        nnz
+    });
+}

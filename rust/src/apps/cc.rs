@@ -1,0 +1,312 @@
+//! Connected components (Listing 1) over the co-purchase graph.
+//!
+//! ```text
+//! c = seq(1, n);
+//! while (diff > 0 & iter <= maxi) {
+//!     u = max(rowMaxs(G * t(c)), c);   # neighbour propagation
+//!     diff = sum(u != c);
+//!     c = u;
+//! }
+//! ```
+//!
+//! The propagation step is the scheduled vectorized operator: work items
+//! are matrix rows, per-item cost ∝ row nnz (highly skewed — this is the
+//! workload where the paper's dynamic schemes beat STATIC). Two
+//! executions of the same pipeline exist:
+//!
+//! - **native**: CSR row kernel ([`crate::matrix::ops::cc_propagate_rows`]),
+//!   the production path for the 20M-node scaled graph;
+//! - **pjrt**: the AOT Pallas artifact `cc_propagate` over dense tiles,
+//!   proving the three-layer composition (used on small graphs).
+
+use crate::config::SchedConfig;
+use crate::matrix::CsrMatrix;
+use crate::runtime::{DeviceClient, Manifest};
+use crate::sched::SchedReport;
+use crate::sim::{self, CostModel, Workload};
+use crate::topology::Topology;
+use crate::util::DisjointMut;
+use crate::vee::Vee;
+
+/// Result of a connected-components run.
+#[derive(Debug, Clone)]
+pub struct CcResult {
+    /// Final component label per vertex.
+    pub labels: Vec<f32>,
+    /// Iterations until fixpoint (or maxi).
+    pub iterations: usize,
+    /// Number of distinct components.
+    pub components: usize,
+    /// Per-iteration scheduling reports of the propagate operator.
+    pub reports: Vec<SchedReport>,
+}
+
+impl CcResult {
+    pub fn total_time(&self) -> f64 {
+        self.reports.iter().map(|r| r.makespan).sum()
+    }
+}
+
+fn count_components(labels: &[f32]) -> usize {
+    // labels converge to the max vertex id of each component; count
+    // fixpoints where label(v) == v+1 (ids are 1-based).
+    labels
+        .iter()
+        .enumerate()
+        .filter(|(i, &l)| l == (*i as f32) + 1.0)
+        .count()
+}
+
+/// Native CSR execution under the given scheduling configuration.
+pub fn run_native(
+    g: &CsrMatrix,
+    topo: &Topology,
+    sched: &SchedConfig,
+    maxi: usize,
+) -> CcResult {
+    let n = g.rows;
+    let vee = Vee::new(topo.clone(), sched.clone());
+    // c = seq(1, n)
+    let mut c: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+    let mut u = vec![0f32; n];
+    let mut reports = Vec::new();
+    let mut iterations = 0;
+
+    for _ in 0..maxi {
+        iterations += 1;
+        let out = DisjointMut::new(&mut u);
+        let c_ref = &c;
+        let report = vee.execute(n, |_w, range| {
+            let slice = out.slice_mut(range.start, range.end);
+            // write into the task's disjoint window
+            for (off, r) in range.iter().enumerate() {
+                let mut m = c_ref[r];
+                for &col in g.row(r) {
+                    let v = c_ref[col as usize];
+                    if v > m {
+                        m = v;
+                    }
+                }
+                slice[off] = m;
+            }
+        });
+        reports.push(report);
+        // diff = sum(u != c)
+        let diff = c.iter().zip(&u).filter(|(a, b)| a != b).count();
+        std::mem::swap(&mut c, &mut u);
+        if diff == 0 {
+            break;
+        }
+    }
+
+    let components = count_components(&c);
+    CcResult { labels: c, iterations, components, reports }
+}
+
+/// PJRT execution: the propagate step runs the AOT `cc_propagate`
+/// artifact over dense `[cc_rows, cc_cols]` tiles (zero-padded; inert
+/// because ids >= 1). A task = one row block; the scheduler hands out
+/// row-block ranges exactly as in the native path. Kernel launches go
+/// through the device-service thread (see `runtime::service`).
+pub fn run_pjrt(
+    g: &CsrMatrix,
+    device: &DeviceClient,
+    manifest: &Manifest,
+    topo: &Topology,
+    sched: &SchedConfig,
+    maxi: usize,
+) -> anyhow::Result<CcResult> {
+    let (block_rows, block_cols) = manifest.cc_block;
+    let n = g.rows;
+    let n_row_blocks = n.div_ceil(block_rows);
+    let n_col_blocks = n.div_ceil(block_cols);
+    let vee = Vee::new(topo.clone(), sched.clone());
+
+    let mut c: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+    let mut u = vec![0f32; n];
+    let mut reports = Vec::new();
+    let mut iterations = 0;
+
+    // padded column vector of ids, rebuilt each iteration
+    for _ in 0..maxi {
+        iterations += 1;
+        let mut c_pad = vec![0f32; n_col_blocks * block_cols];
+        c_pad[..n].copy_from_slice(&c);
+        let c_pad = &c_pad;
+        let c_ref = &c;
+        let out = DisjointMut::new(&mut u);
+
+        // work items are row *blocks* on this path
+        let report = vee.execute(n_row_blocks, |_w, range| {
+            for rb in range.iter() {
+                let r0 = rb * block_rows;
+                let r1 = ((rb + 1) * block_rows).min(n);
+                // c_row block, zero-padded
+                let mut c_row = vec![0f32; block_rows];
+                c_row[..r1 - r0].copy_from_slice(&c_ref[r0..r1]);
+                let mut acc = c_row.clone();
+                for cb in 0..n_col_blocks {
+                    let g_tile = g.densify_window(
+                        r0,
+                        r0 + block_rows,
+                        cb * block_cols,
+                        (cb + 1) * block_cols,
+                    );
+                    let c_tile =
+                        c_pad[cb * block_cols..(cb + 1) * block_cols].to_vec();
+                    let outs = device
+                        .run_f32(
+                            "cc_propagate",
+                            vec![g_tile.data, c_tile, acc.clone()],
+                        )
+                        .expect("cc_propagate artifact failed");
+                    acc.copy_from_slice(&outs[0]);
+                }
+                out.slice_mut(r0, r1).copy_from_slice(&acc[..r1 - r0]);
+            }
+        });
+        reports.push(report);
+        let diff = c.iter().zip(&u).filter(|(a, b)| a != b).count();
+        std::mem::swap(&mut c, &mut u);
+        if diff == 0 {
+            break;
+        }
+    }
+
+    let components = count_components(&c);
+    Ok(CcResult { labels: c, iterations, components, reports })
+}
+
+/// Count iterations to convergence without timing anything (cheap
+/// native fixpoint, used to parameterize the DES figures).
+pub fn converge_iterations(g: &CsrMatrix, maxi: usize) -> usize {
+    let topo = Topology::symmetric("seq", 1, 1, 1.0, 1.0);
+    run_native(g, &topo, &SchedConfig::default(), maxi).iterations
+}
+
+/// DES workload for one propagate pass: per-row cost is affine in the
+/// row's nnz, with constants from host calibration of the native kernel.
+pub fn workload(g: &CsrMatrix, per_row: f64, per_nnz: f64) -> Workload {
+    let costs: Vec<f64> = (0..g.rows)
+        .map(|r| per_row + per_nnz * g.row_nnz(r) as f64)
+        .collect();
+    Workload::from_costs("cc_propagate", &costs)
+}
+
+/// Simulate the full CC run (iterations × one propagate pass) on a
+/// modelled machine. Chunk sequences re-randomize per iteration via the
+/// seed so PSS/RND* average sensibly.
+pub fn simulate_run(
+    g: &CsrMatrix,
+    topo: &Topology,
+    sched: &SchedConfig,
+    costs: &CostModel,
+    iterations: usize,
+    per_row: f64,
+    per_nnz: f64,
+) -> (f64, Vec<sim::SimOutcome>) {
+    let w = workload(g, per_row, per_nnz);
+    let mut outcomes = Vec::with_capacity(iterations);
+    let mut total = 0.0;
+    for it in 0..iterations {
+        let cfg = SchedConfig {
+            seed: sched.seed.wrapping_add(it as u64),
+            ..sched.clone()
+        };
+        let out = sim::simulate(topo, &cfg, &w, costs);
+        total += out.makespan();
+        outcomes.push(out);
+    }
+    (total, outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{amazon_like, GraphSpec};
+    use crate::matrix::CsrMatrix;
+    use crate::sched::{QueueLayout, Scheme, VictimStrategy};
+
+    fn two_triangles() -> CsrMatrix {
+        // components {0,1,2} and {3,4}
+        CsrMatrix::from_edges(
+            5,
+            5,
+            &[(0, 1), (1, 0), (1, 2), (2, 1), (3, 4), (4, 3)],
+        )
+    }
+
+    #[test]
+    fn finds_two_components() {
+        let g = two_triangles();
+        let topo = Topology::symmetric("t", 1, 2, 1.0, 1.0);
+        let r = run_native(&g, &topo, &SchedConfig::default(), 100);
+        assert_eq!(r.components, 2);
+        // labels converge to max id of each component (1-based)
+        assert_eq!(r.labels, vec![3.0, 3.0, 3.0, 5.0, 5.0]);
+        assert!(r.iterations >= 2);
+    }
+
+    #[test]
+    fn connected_graph_single_component() {
+        let g = amazon_like(&GraphSpec::small(300, 3)).symmetrize();
+        let topo = Topology::symmetric("t", 1, 4, 1.0, 1.0);
+        let r = run_native(&g, &topo, &SchedConfig::default(), 100);
+        assert_eq!(r.components, 1);
+        assert!(r.labels.iter().all(|&l| l == 300.0));
+    }
+
+    #[test]
+    fn all_schemes_agree_on_labels() {
+        let g = amazon_like(&GraphSpec::small(500, 9)).symmetrize();
+        let topo = Topology::symmetric("t", 2, 2, 1.5, 1.0);
+        let baseline =
+            run_native(&g, &topo, &SchedConfig::default(), 100).labels;
+        for scheme in Scheme::ALL {
+            let cfg = SchedConfig::default()
+                .with_scheme(scheme)
+                .with_layout(QueueLayout::PerCore)
+                .with_victim(VictimStrategy::RndPri);
+            let r = run_native(&g, &topo, &cfg, 100);
+            assert_eq!(r.labels, baseline, "{scheme:?} diverged");
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_are_their_own_component() {
+        let g = CsrMatrix::from_edges(4, 4, &[(0, 1), (1, 0)]);
+        let topo = Topology::symmetric("t", 1, 1, 1.0, 1.0);
+        let r = run_native(&g, &topo, &SchedConfig::default(), 100);
+        assert_eq!(r.components, 3); // {0,1}, {2}, {3}
+    }
+
+    #[test]
+    fn converge_iterations_matches_run() {
+        let g = amazon_like(&GraphSpec::small(200, 4)).symmetrize();
+        let topo = Topology::symmetric("t", 1, 2, 1.0, 1.0);
+        let r = run_native(&g, &topo, &SchedConfig::default(), 100);
+        assert_eq!(converge_iterations(&g, 100), r.iterations);
+    }
+
+    #[test]
+    fn workload_costs_follow_nnz() {
+        let g = two_triangles();
+        let w = workload(&g, 1e-9, 1e-8);
+        // row 1 has 2 nnz, rows 0,2,3,4 have 1
+        assert!((w.chunk_cost(1, 2) - 21e-9).abs() < 1e-15);
+        assert!((w.chunk_cost(0, 1) - 11e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn simulate_run_scales_with_iterations() {
+        let g = amazon_like(&GraphSpec::small(2_000, 5)).symmetrize();
+        let topo = Topology::broadwell20();
+        let cm = CostModel::recorded();
+        let sched = SchedConfig::default().with_scheme(Scheme::Mfsc);
+        let (t2, o2) = simulate_run(&g, &topo, &sched, &cm, 2, 1e-8, 5e-9);
+        let (t4, o4) = simulate_run(&g, &topo, &sched, &cm, 4, 1e-8, 5e-9);
+        assert_eq!(o2.len(), 2);
+        assert_eq!(o4.len(), 4);
+        assert!(t4 > 1.8 * t2 && t4 < 2.2 * t2);
+    }
+}

@@ -1,0 +1,411 @@
+//! Linear-regression model training (Listing 2).
+//!
+//! ```text
+//! XY = rand(numRows, numCols, 0.0, 1.0, 1, -1);
+//! X = XY[, 0:numCols-1];  y = XY[, numCols-1];
+//! X = (X - mean(X)) / stddev(X);  X = cbind(X, 1);
+//! A = syrk(X) + diag(lambda);  b = gemv(X, y);  beta = solve(A, b);
+//! ```
+//!
+//! Work items are rows of X; per-row cost is uniform (dense data) — the
+//! workload where STATIC wins and every dynamic scheme only adds
+//! overhead (Fig. 10). The scheduled vectorized operators are colstats,
+//! standardize and the fused syrk+gemv accumulation; `solve` is a small
+//! sequential epilogue (d×d system).
+
+use std::sync::Mutex;
+
+use crate::config::SchedConfig;
+use crate::matrix::{ops, DenseMatrix};
+use crate::runtime::{DeviceClient, Manifest};
+use crate::sim::Workload;
+use crate::topology::Topology;
+use crate::util::DisjointMut;
+use crate::vee::{Pipeline, PipelineReport, Vee};
+
+/// Result of one training run.
+#[derive(Debug, Clone)]
+pub struct LinregResult {
+    /// Coefficients (d features + intercept).
+    pub beta: Vec<f32>,
+    pub report: PipelineReport,
+}
+
+/// Workload parameters (paper uses an unspecified random dense matrix;
+/// defaults sized so a run takes seconds, like Fig. 10's ~4-40s range).
+#[derive(Debug, Clone)]
+pub struct LinregSpec {
+    pub rows: usize,
+    /// Total XY columns (features = cols - 1).
+    pub cols: usize,
+    pub lambda: f32,
+    pub seed: u64,
+}
+
+impl Default for LinregSpec {
+    fn default() -> Self {
+        LinregSpec { rows: 100_000, cols: 65, lambda: 1e-3, seed: 1 }
+    }
+}
+
+/// Generate XY and split into (X, y) per Listing 2 lines 3-6.
+pub fn generate(spec: &LinregSpec) -> (DenseMatrix, Vec<f32>) {
+    let xy = DenseMatrix::rand(spec.rows, spec.cols, 0.0, 1.0, spec.seed);
+    let x = xy.cols_range(0, spec.cols - 1);
+    let y = xy.col(spec.cols - 1);
+    (x, y)
+}
+
+/// Native execution of the full pipeline under a scheduling config.
+pub fn run_native(
+    x: &DenseMatrix,
+    y: &[f32],
+    lambda: f32,
+    topo: &Topology,
+    sched: &SchedConfig,
+) -> Result<LinregResult, String> {
+    let n = x.rows;
+    let d = x.cols;
+    let vee = Vee::new(topo.clone(), sched.clone());
+
+    // --- stage 1: colstats (mean/stddev partials) --------------------
+    let stats_acc: Mutex<(Vec<f32>, Vec<f32>)> =
+        Mutex::new((vec![0.0; d], vec![0.0; d]));
+    let rep1 = {
+        let stats_acc = &stats_acc;
+        let pipeline = Pipeline::new("linreg:stats").stage(
+            "colstats",
+            n,
+            move |_w, range| {
+                let mut s = vec![0.0; d];
+                let mut sq = vec![0.0; d];
+                ops::colstats_rows(x, &mut s, &mut sq, range.start, range.end);
+                let mut acc = stats_acc.lock().unwrap();
+                for c in 0..d {
+                    acc.0[c] += s[c];
+                    acc.1[c] += sq[c];
+                }
+            },
+        );
+        vee.run_pipeline(&pipeline)
+    };
+    let (sum, sumsq) = stats_acc.into_inner().unwrap();
+    let mean: Vec<f32> = sum.iter().map(|&s| s / n as f32).collect();
+    let std: Vec<f32> = sumsq
+        .iter()
+        .zip(&mean)
+        .map(|(&sq, &m)| (sq / n as f32 - m * m).max(1e-12).sqrt())
+        .collect();
+
+    // --- stages 2+3: standardize (in place, disjoint rows), then
+    //     fused syrk+gemv over the standardized rows -------------------
+    let mut x_std = x.clone();
+    let ab_acc: Mutex<(Vec<f32>, Vec<f32>)> = Mutex::new((
+        vec![0.0; (d + 1) * (d + 1)],
+        vec![0.0; d + 1],
+    ));
+    let rep23 = {
+        let x_view = DisjointMut::new(&mut x_std.data);
+        let x_view = &x_view;
+        let mean = &mean;
+        let std = &std;
+        let ab_acc = &ab_acc;
+        let pipeline = Pipeline::new("linreg:main")
+            .stage("standardize", n, move |_w, range| {
+                let rows = x_view.slice_mut(range.start * d, range.end * d);
+                for row in rows.chunks_mut(d) {
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v = (*v - mean[c]) / std[c];
+                    }
+                }
+            })
+            .stage("syrk+gemv", n, move |_w, range| {
+                // read-only view of the standardized rows + bias column
+                let rows = x_view.slice_mut(range.start * d, range.end * d);
+                let dd = d + 1;
+                let mut a = vec![0.0f32; dd * dd];
+                let mut b = vec![0.0f32; dd];
+                for (off, row) in rows.chunks(d).enumerate() {
+                    let yr = y[range.start + off];
+                    for i in 0..d {
+                        let xi = row[i];
+                        let arow = &mut a[i * dd..i * dd + d];
+                        for (j, &xj) in row.iter().enumerate() {
+                            arow[j] += xi * xj;
+                        }
+                        a[i * dd + d] += xi; // bias column
+                        b[i] += xi * yr;
+                    }
+                    // bias row: sum of features and count
+                    for (j, &xj) in row.iter().enumerate() {
+                        a[d * dd + j] += xj;
+                    }
+                    a[d * dd + d] += 1.0;
+                    b[d] += yr;
+                }
+                let mut acc = ab_acc.lock().unwrap();
+                for (dst, src) in acc.0.iter_mut().zip(&a) {
+                    *dst += src;
+                }
+                for (dst, src) in acc.1.iter_mut().zip(&b) {
+                    *dst += src;
+                }
+            });
+        vee.run_pipeline(&pipeline)
+    };
+
+    // --- epilogue: ridge + solve (Listing 2 lines 13-16) -------------
+    let (mut a_flat, b) = ab_acc.into_inner().unwrap();
+    let dd = d + 1;
+    for i in 0..dd {
+        a_flat[i * dd + i] += lambda;
+    }
+    let a = DenseMatrix::from_vec(dd, dd, a_flat);
+    let beta = ops::cholesky_solve(&a, &b)?;
+
+    let mut stages = rep1.stages;
+    stages.extend(rep23.stages);
+    Ok(LinregResult {
+        beta,
+        report: PipelineReport { pipeline: "linreg".into(), stages },
+    })
+}
+
+/// PJRT execution of the fused stage: standardize+syrk+gemv per
+/// `[lr_rows, lr_cols]` row block via the `lr_fused` artifact; colstats
+/// via the `lr_colstats` artifact. Proves the three-layer composition.
+pub fn run_pjrt(
+    x: &DenseMatrix,
+    y: &[f32],
+    lambda: f32,
+    device: &DeviceClient,
+    manifest: &Manifest,
+    topo: &Topology,
+    sched: &SchedConfig,
+) -> anyhow::Result<LinregResult> {
+    let (block_rows, block_cols) = manifest.lr_block;
+    anyhow::ensure!(
+        x.cols == block_cols,
+        "pjrt linreg path requires {} feature columns (artifact shape), got {}",
+        block_cols,
+        x.cols
+    );
+    let n = x.rows;
+    let d = x.cols;
+    let n_blocks = n.div_ceil(block_rows);
+    let vee = Vee::new(topo.clone(), sched.clone());
+
+    let pad_block = |range_start: usize| -> (Vec<f32>, Vec<f32>, usize) {
+        let r0 = range_start * block_rows;
+        let r1 = ((range_start + 1) * block_rows).min(n);
+        let mut xb = vec![0f32; block_rows * d];
+        xb[..(r1 - r0) * d]
+            .copy_from_slice(&x.data[r0 * d..r1 * d]);
+        let mut yb = vec![0f32; block_rows];
+        yb[..r1 - r0].copy_from_slice(&y[r0..r1]);
+        (xb, yb, r1 - r0)
+    };
+
+    // stage 1: colstats partials (items = row blocks)
+    let acc: Mutex<(Vec<f32>, Vec<f32>)> =
+        Mutex::new((vec![0.0; d], vec![0.0; d]));
+    let rep1 = vee.execute(n_blocks, |_w, range| {
+        for rb in range.iter() {
+            let (xb, _yb, _valid) = pad_block(rb);
+            let outs = device
+                .run_f32("lr_colstats", vec![xb])
+                .expect("lr_colstats failed");
+            let mut a = acc.lock().unwrap();
+            for c in 0..d {
+                a.0[c] += outs[0][c];
+                a.1[c] += outs[1][c];
+            }
+        }
+    });
+    let (sum, sumsq) = acc.into_inner().unwrap();
+    let mean: Vec<f32> = sum.iter().map(|&s| s / n as f32).collect();
+    let std: Vec<f32> = sumsq
+        .iter()
+        .zip(&mean)
+        .map(|(&sq, &m)| (sq / n as f32 - m * m).max(1e-12).sqrt())
+        .collect();
+
+    // stage 2: fused standardize+syrk+gemv partials.
+    //
+    // Zero-padded rows standardize to (0-mean)/std != 0, so instead of
+    // relying on inert padding we run the artifact on the padded block
+    // and subtract the padding rows' closed-form contribution: each pad
+    // row contributes z z^T to A (z = (-mean/std)·featured, 1 bias) and
+    // 0 to b (y pad = 0).
+    let dd = d + 1;
+    let mut z = vec![0f32; dd];
+    for c in 0..d {
+        z[c] = -mean[c] / std[c];
+    }
+    z[d] = 1.0;
+    let acc2: Mutex<(Vec<f32>, Vec<f32>)> =
+        Mutex::new((vec![0.0; dd * dd], vec![0.0; dd]));
+    let rep2 = vee.execute(n_blocks, |_w, range| {
+        for rb in range.iter() {
+            let (xb, yb, valid) = pad_block(rb);
+            let outs = device
+                .run_f32(
+                    "lr_fused",
+                    vec![xb, mean.clone(), std.clone(), yb],
+                )
+                .expect("lr_fused failed");
+            let pad = block_rows - valid;
+            let mut a = acc2.lock().unwrap();
+            for i in 0..dd {
+                for j in 0..dd {
+                    let mut v = outs[0][i * dd + j];
+                    if pad > 0 {
+                        v -= pad as f32 * z[i] * z[j];
+                    }
+                    a.0[i * dd + j] += v;
+                }
+                a.1[i] += outs[1][i];
+            }
+        }
+    });
+
+    let (mut a_flat, b) = acc2.into_inner().unwrap();
+    for i in 0..dd {
+        a_flat[i * dd + i] += lambda;
+    }
+    let a = DenseMatrix::from_vec(dd, dd, a_flat);
+    let beta = ops::cholesky_solve(&a, &b).map_err(anyhow::Error::msg)?;
+
+    Ok(LinregResult {
+        beta,
+        report: PipelineReport {
+            pipeline: "linreg(pjrt)".into(),
+            stages: vec![
+                ("colstats".into(), rep1),
+                ("fused".into(), rep2),
+            ],
+        },
+    })
+}
+
+/// DES workload for the three scheduled passes over the rows: uniform
+/// per-row cost (dense data). `per_row` comes from host calibration.
+pub fn workload(rows: usize, per_row: f64) -> Workload {
+    Workload::uniform("linreg_row", rows, per_row)
+}
+
+/// Fit quality: RMSE of predictions vs targets on standardized features.
+pub fn rmse(x: &DenseMatrix, y: &[f32], beta: &[f32]) -> f64 {
+    let d = x.cols;
+    // recompute mean/std like the pipeline
+    let n = x.rows;
+    let mut mean = vec![0f32; d];
+    let mut sq = vec![0f32; d];
+    ops::colstats_rows(x, &mut mean, &mut sq, 0, n);
+    for c in 0..d {
+        mean[c] /= n as f32;
+        sq[c] = (sq[c] / n as f32 - mean[c] * mean[c]).max(1e-12).sqrt();
+    }
+    let mut err = 0f64;
+    for r in 0..n {
+        let row = x.row(r);
+        let mut pred = beta[d]; // intercept
+        for c in 0..d {
+            pred += beta[c] * (row[c] - mean[c]) / sq[c];
+        }
+        err += ((pred - y[r]) as f64).powi(2);
+    }
+    (err / n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{QueueLayout, Scheme, VictimStrategy};
+    use crate::util::Rng;
+
+    fn planted(n: usize, d: usize, seed: u64) -> (DenseMatrix, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x = DenseMatrix::rand(n, d, -1.0, 1.0, rng.next_u64());
+        let beta: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|r| {
+                x.row(r).iter().zip(&beta).map(|(a, b)| a * b).sum::<f32>()
+                    + 0.5
+            })
+            .collect();
+        (x, y, beta)
+    }
+
+    fn topo() -> Topology {
+        Topology::symmetric("t", 1, 4, 1.0, 1.0)
+    }
+
+    #[test]
+    fn recovers_planted_model() {
+        let (x, y, _) = planted(2000, 8, 42);
+        let r = run_native(&x, &y, 1e-4, &topo(), &SchedConfig::default())
+            .unwrap();
+        assert_eq!(r.beta.len(), 9);
+        let e = rmse(&x, &y, &r.beta);
+        assert!(e < 1e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn all_schemes_agree_on_beta() {
+        let (x, y, _) = planted(1500, 6, 7);
+        let base = run_native(&x, &y, 1e-4, &topo(), &SchedConfig::default())
+            .unwrap()
+            .beta;
+        for scheme in Scheme::ALL {
+            for layout in [
+                QueueLayout::Centralized { atomic: true },
+                QueueLayout::PerCore,
+            ] {
+                let cfg = SchedConfig::default()
+                    .with_scheme(scheme)
+                    .with_layout(layout)
+                    .with_victim(VictimStrategy::Rnd);
+                let beta =
+                    run_native(&x, &y, 1e-4, &topo(), &cfg).unwrap().beta;
+                for (a, b) in base.iter().zip(&beta) {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "{scheme:?}/{layout:?}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generate_splits_xy() {
+        let spec = LinregSpec { rows: 100, cols: 9, lambda: 1e-3, seed: 3 };
+        let (x, y) = generate(&spec);
+        assert_eq!(x.rows, 100);
+        assert_eq!(x.cols, 8);
+        assert_eq!(y.len(), 100);
+    }
+
+    #[test]
+    fn report_covers_three_stages() {
+        let (x, y, _) = planted(500, 4, 9);
+        let r = run_native(&x, &y, 1e-3, &topo(), &SchedConfig::default())
+            .unwrap();
+        let names: Vec<&str> =
+            r.report.stages.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["colstats", "standardize", "syrk+gemv"]);
+        for (_, rep) in &r.report.stages {
+            assert_eq!(rep.total_items(), 500);
+        }
+    }
+
+    #[test]
+    fn workload_is_uniform() {
+        let w = workload(1000, 2e-8);
+        assert!((w.total_cost() - 2e-5).abs() / 2e-5 < 1e-9);
+        // prefix-sum float rounding: compare halves approximately
+        let (a, b) = (w.chunk_cost(0, 500), w.chunk_cost(500, 1000));
+        assert!((a - b).abs() / a < 1e-9, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,9 @@
+//! The paper's two evaluated IDA pipelines (§4):
+//!
+//! - [`cc`] — connected components over a co-purchase graph (Listing 1):
+//!   sparse, heavy-tailed row costs → dynamic partitioning wins.
+//! - [`linreg`] — linear-regression model training (Listing 2): dense,
+//!   uniform row costs → STATIC wins, scheduling overhead only hurts.
+
+pub mod cc;
+pub mod linreg;

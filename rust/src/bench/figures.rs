@@ -1,0 +1,538 @@
+//! One function per paper figure; each returns the printed rows so the
+//! bench binaries and the CLI share the implementation.
+
+use crate::apps::{cc, linreg};
+use crate::config::SchedConfig;
+use crate::graph::{amazon_like, scale_up, GraphSpec};
+use crate::matrix::CsrMatrix;
+use crate::sched::{QueueLayout, Scheme, VictimStrategy};
+use crate::sim::{self, CostModel};
+use crate::topology::Topology;
+
+use super::calibration::AppCosts;
+
+/// Which figure to regenerate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FigureId {
+    Fig7a,
+    Fig7b,
+    Fig8a,
+    Fig8b,
+    Fig9a,
+    Fig9b,
+    Fig10a,
+    Fig10b,
+}
+
+impl FigureId {
+    pub const ALL: [FigureId; 8] = [
+        FigureId::Fig7a,
+        FigureId::Fig7b,
+        FigureId::Fig8a,
+        FigureId::Fig8b,
+        FigureId::Fig9a,
+        FigureId::Fig9b,
+        FigureId::Fig10a,
+        FigureId::Fig10b,
+    ];
+
+    pub fn parse(s: &str) -> Option<FigureId> {
+        match s.to_ascii_lowercase().as_str() {
+            "7a" | "fig7a" => Some(FigureId::Fig7a),
+            "7b" | "fig7b" => Some(FigureId::Fig7b),
+            "8a" | "fig8a" => Some(FigureId::Fig8a),
+            "8b" | "fig8b" => Some(FigureId::Fig8b),
+            "9a" | "fig9a" => Some(FigureId::Fig9a),
+            "9b" | "fig9b" => Some(FigureId::Fig9b),
+            "10a" | "fig10a" => Some(FigureId::Fig10a),
+            "10b" | "fig10b" => Some(FigureId::Fig10b),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FigureId::Fig7a => "Fig 7a: CC, centralized queue, Broadwell(2x10)",
+            FigureId::Fig7b => {
+                "Fig 7b: CC, centralized queue, CascadeLake(2x28)"
+            }
+            FigureId::Fig8a => {
+                "Fig 8a: CC, PERCORE queues x victims, Broadwell(2x10)"
+            }
+            FigureId::Fig8b => {
+                "Fig 8b: CC, PERCPU queues x victims, Broadwell(2x10)"
+            }
+            FigureId::Fig9a => {
+                "Fig 9a: CC, PERCORE queues x victims, CascadeLake(2x28)"
+            }
+            FigureId::Fig9b => {
+                "Fig 9b: CC, PERCPU queues x victims, CascadeLake(2x28)"
+            }
+            FigureId::Fig10a => {
+                "Fig 10a: LinReg, centralized queue, Broadwell(2x10)"
+            }
+            FigureId::Fig10b => {
+                "Fig 10b: LinReg, centralized queue, CascadeLake(2x28)"
+            }
+        }
+    }
+
+    pub fn machine(&self) -> Topology {
+        match self {
+            FigureId::Fig7a
+            | FigureId::Fig8a
+            | FigureId::Fig8b
+            | FigureId::Fig10a => Topology::broadwell20(),
+            _ => Topology::cascadelake56(),
+        }
+    }
+}
+
+/// Workload parameters. Defaults regenerate the figures at the
+/// *unscaled* SNAP size (403k nodes) so a full sweep runs in minutes;
+/// `scale = 50` reproduces the paper's full 20.17M-node input.
+#[derive(Debug, Clone)]
+pub struct FigureParams {
+    pub nodes: usize,
+    pub scale: usize,
+    pub seed: u64,
+    /// CC convergence iterations; `None` = compute natively once.
+    pub iterations: Option<usize>,
+    /// Linear-regression rows (paper does not state its size; chosen so
+    /// the modelled run lands in Fig. 10's seconds range).
+    pub lr_rows: usize,
+    /// Independent repetitions (fresh graph + noise seeds) averaged per
+    /// row, as the paper's measurements average repeated runs.
+    pub repetitions: usize,
+    pub costs: CostModel,
+    pub app_costs: AppCosts,
+}
+
+impl Default for FigureParams {
+    fn default() -> Self {
+        FigureParams {
+            nodes: 403_394,
+            scale: 1,
+            // canonical dataset-instance seed: seeds 1-8 all yield the
+            // paper-representative block imbalance (EXPERIMENTS.md
+            // records the sweep); 1 is the documented default.
+            seed: 1,
+            iterations: None,
+            lr_rows: 2_000_000,
+            repetitions: 3,
+            // DAPHNE-runtime-like dispatch costs + OS interference: the
+            // environment the paper measured (see CostModel docs).
+            costs: CostModel::daphne_like(),
+            app_costs: AppCosts::recorded(),
+        }
+    }
+}
+
+impl FigureParams {
+    /// Small parameters for tests.
+    pub fn tiny() -> Self {
+        FigureParams {
+            nodes: 20_000,
+            scale: 1,
+            lr_rows: 100_000,
+            ..Default::default()
+        }
+    }
+
+    pub fn build_graph(&self) -> CsrMatrix {
+        let g = amazon_like(&GraphSpec {
+            nodes: self.nodes,
+            out_degree: 8,
+            copy_prob: 0.7,
+            seed: self.seed,
+        })
+        .symmetrize();
+        if self.scale > 1 {
+            scale_up(&g, self.scale)
+        } else {
+            g
+        }
+    }
+}
+
+/// One output row (matches what the paper plots: a bar per
+/// technique/victim combination).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub scheme: &'static str,
+    pub victim: Option<&'static str>,
+    /// Modelled execution time, seconds.
+    pub time: f64,
+    /// Relative to STATIC with the same victim (1.0 = parity; < 1 is
+    /// faster than STATIC).
+    pub vs_static: f64,
+    pub steals: usize,
+    pub cov: f64,
+}
+
+impl Row {
+    pub fn print(&self) {
+        let victim = self.victim.unwrap_or("-");
+        println!(
+            "  {:<7} {:<7} time={:>9.3}s vs_STATIC={:>6.3} steals={:<8} cov={:.3}",
+            self.scheme, victim, self.time, self.vs_static, self.steals, self.cov
+        );
+    }
+}
+
+fn fill_vs_static(rows: &mut [Row]) {
+    let mut statics: Vec<(Option<&'static str>, f64)> = Vec::new();
+    for r in rows.iter() {
+        if r.scheme == "STATIC" {
+            statics.push((r.victim, r.time));
+        }
+    }
+    for r in rows.iter_mut() {
+        if let Some(&(_, t)) =
+            statics.iter().find(|(v, _)| *v == r.victim)
+        {
+            r.vs_static = r.time / t;
+        }
+    }
+}
+
+/// CC figures 7-9. `layout` selects centralized (Figs 7) / PERCORE
+/// (8a, 9a) / PERCPU (8b, 9b); stealing layouts sweep all four victim
+/// strategies.
+pub fn cc_figure(
+    machine: &Topology,
+    layout: QueueLayout,
+    params: &FigureParams,
+) -> Vec<Row> {
+    // one graph per repetition (fresh seed), shared across all rows so
+    // schemes are compared on identical inputs within a repetition
+    let reps: Vec<(CsrMatrix, usize)> = (0..params.repetitions.max(1))
+        .map(|rep| {
+            let p = FigureParams {
+                seed: params.seed.wrapping_add(rep as u64 * 0x9E37),
+                ..params.clone()
+            };
+            let g = p.build_graph();
+            let iters = params
+                .iterations
+                .unwrap_or_else(|| cc::converge_iterations(&g, 100));
+            (g, iters)
+        })
+        .collect();
+    let victims: &[Option<VictimStrategy>] = if layout.steals() {
+        &[
+            Some(VictimStrategy::Seq),
+            Some(VictimStrategy::SeqPri),
+            Some(VictimStrategy::Rnd),
+            Some(VictimStrategy::RndPri),
+        ]
+    } else {
+        &[None]
+    };
+    let mut rows = Vec::new();
+    for &victim in victims {
+        for scheme in Scheme::FIGURES {
+            let mut time = 0.0;
+            let mut steals = 0usize;
+            let mut cov = 0.0;
+            for (rep, (g, iters)) in reps.iter().enumerate() {
+                let sched = SchedConfig {
+                    scheme,
+                    layout,
+                    victim: victim.unwrap_or(VictimStrategy::Seq),
+                    seed: params.seed.wrapping_add(rep as u64 * 0x517C_C1B7),
+                    stages: None,
+                    pls_swr: 0.5,
+                };
+                let (t, outcomes) = cc::simulate_run(
+                    g,
+                    machine,
+                    &sched,
+                    &params.costs,
+                    *iters,
+                    params.app_costs.cc_per_row,
+                    params.app_costs.cc_per_nnz,
+                );
+                time += t;
+                steals += outcomes
+                    .iter()
+                    .map(|o| o.report.total_steals())
+                    .sum::<usize>();
+                cov += outcomes
+                    .first()
+                    .map(|o| o.report.cov())
+                    .unwrap_or(0.0);
+            }
+            let n = reps.len() as f64;
+            rows.push(Row {
+                scheme: scheme.name(),
+                victim: victim.map(|v| v.name()),
+                time: time / n,
+                vs_static: 1.0,
+                steals: steals / reps.len(),
+                cov: cov / n,
+            });
+        }
+    }
+    fill_vs_static(&mut rows);
+    rows
+}
+
+/// LinReg figures 10a/10b: dense uniform workload, centralized queue.
+pub fn linreg_figure(machine: &Topology, params: &FigureParams) -> Vec<Row> {
+    // three scheduled passes per training run (colstats, standardize,
+    // fused syrk+gemv), each a full sweep over the rows
+    let passes = 3;
+    let w = linreg::workload(params.lr_rows, params.app_costs.lr_per_row);
+    let mut rows = Vec::new();
+    for scheme in Scheme::FIGURES {
+        let sched = SchedConfig {
+            scheme,
+            layout: QueueLayout::Centralized { atomic: false },
+            victim: VictimStrategy::Seq,
+            seed: params.seed,
+            stages: None,
+            pls_swr: 0.5,
+        };
+        let mut time = 0.0;
+        let mut steals = 0;
+        let mut cov = 0.0;
+        let reps = params.repetitions.max(1);
+        for rep in 0..reps {
+            for pass in 0..passes {
+                let cfg = SchedConfig {
+                    seed: sched
+                        .seed
+                        .wrapping_add(pass as u64)
+                        .wrapping_add(rep as u64 * 0x517C_C1B7),
+                    ..sched.clone()
+                };
+                // the syrk+gemv pass pays the serialized d×d reduction
+                // merge per task; modelled as an extension of the
+                // queue's critical section (the merge lock)
+                let mut costs = params.costs.clone();
+                if pass == passes - 1 {
+                    costs.serialized_extra += params.app_costs.lr_merge;
+                }
+                let out = sim::simulate(machine, &cfg, &w, &costs);
+                time += out.makespan();
+                steals += out.report.total_steals();
+                cov = out.report.cov();
+            }
+        }
+        let (time, steals) = (time / reps as f64, steals / reps);
+        rows.push(Row {
+            scheme: scheme.name(),
+            victim: None,
+            time,
+            vs_static: 1.0,
+            steals,
+            cov,
+        });
+    }
+    fill_vs_static(&mut rows);
+    rows
+}
+
+/// Regenerate one figure.
+pub fn run_figure(id: FigureId, params: &FigureParams) -> Vec<Row> {
+    let machine = id.machine();
+    match id {
+        FigureId::Fig7a | FigureId::Fig7b => cc_figure(
+            &machine,
+            QueueLayout::Centralized { atomic: false },
+            params,
+        ),
+        FigureId::Fig8a | FigureId::Fig9a => {
+            cc_figure(&machine, QueueLayout::PerCore, params)
+        }
+        FigureId::Fig8b | FigureId::Fig9b => {
+            cc_figure(&machine, QueueLayout::PerGroup, params)
+        }
+        FigureId::Fig10a | FigureId::Fig10b => {
+            linreg_figure(&machine, params)
+        }
+    }
+}
+
+/// Print a figure with the paper's expected shape annotated.
+pub fn print_figure(id: FigureId, params: &FigureParams) -> Vec<Row> {
+    println!("== {} ==", id.name());
+    let rows = run_figure(id, params);
+    for r in &rows {
+        r.print();
+    }
+    if let Some(best) = rows
+        .iter()
+        .min_by(|a, b| a.time.total_cmp(&b.time))
+    {
+        println!(
+            "  -> best: {} {} ({:.1}% vs STATIC)",
+            best.scheme,
+            best.victim.unwrap_or("-"),
+            (1.0 - best.vs_static) * 100.0
+        );
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// ablations (§4 SS omission, §5 lock vs atomic)
+// ---------------------------------------------------------------------------
+
+/// §4: SS under central-queue contention vs MFSC (why SS is omitted
+/// from the figures). Returns `(ss_time, mfsc_time)` per machine.
+pub fn ablation_ss(params: &FigureParams) -> Vec<(String, f64, f64)> {
+    let g = params.build_graph();
+    let iters = params.iterations.unwrap_or(3);
+    let mut out = Vec::new();
+    for machine in [Topology::broadwell20(), Topology::cascadelake56()] {
+        let base = SchedConfig { seed: params.seed, ..SchedConfig::default() };
+        let (t_ss, _) = cc::simulate_run(
+            &g,
+            &machine,
+            &base.clone().with_scheme(Scheme::Ss),
+            &params.costs,
+            iters,
+            params.app_costs.cc_per_row,
+            params.app_costs.cc_per_nnz,
+        );
+        let (t_mfsc, _) = cc::simulate_run(
+            &g,
+            &machine,
+            &base.clone().with_scheme(Scheme::Mfsc),
+            &params.costs,
+            iters,
+            params.app_costs.cc_per_row,
+            params.app_costs.cc_per_nnz,
+        );
+        out.push((machine.name.clone(), t_ss, t_mfsc));
+    }
+    out
+}
+
+/// §5: locked vs atomic central queue across schemes.
+/// Returns `(scheme, locked_time, atomic_time)`.
+pub fn ablation_lock_vs_atomic(
+    machine: &Topology,
+    params: &FigureParams,
+) -> Vec<(&'static str, f64, f64)> {
+    let g = params.build_graph();
+    let iters = params.iterations.unwrap_or(3);
+    let mut out = Vec::new();
+    for scheme in [Scheme::Ss, Scheme::Mfsc, Scheme::Gss, Scheme::Fac2] {
+        let time = |atomic: bool| {
+            let sched = SchedConfig {
+                scheme,
+                layout: QueueLayout::Centralized { atomic },
+                seed: params.seed,
+                ..SchedConfig::default()
+            };
+            cc::simulate_run(
+                &g,
+                machine,
+                &sched,
+                &params.costs,
+                iters,
+                params.app_costs.cc_per_row,
+                params.app_costs.cc_per_nnz,
+            )
+            .0
+        };
+        out.push((scheme.name(), time(false), time(true)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_ids_parse() {
+        for id in FigureId::ALL {
+            let key = &id.name()[4..7]; // "7a:" etc
+            let key = key.trim_end_matches([':', ' ']);
+            assert_eq!(FigureId::parse(key), Some(id), "{key}");
+        }
+        assert_eq!(FigureId::parse("11z"), None);
+    }
+
+    #[test]
+    fn fig7a_shape_dynamic_beats_static() {
+        // Full SNAP-size graph, fixed iteration count: the Fig. 7a
+        // headline — MFSC (and the dynamic pack) beats STATIC on the
+        // sparse CC workload.
+        let params = FigureParams {
+            iterations: Some(8),
+            ..FigureParams::default()
+        };
+        let rows = run_figure(FigureId::Fig7a, &params);
+        assert_eq!(rows.len(), 10);
+        let get = |s: &str| rows.iter().find(|r| r.scheme == s).unwrap();
+        assert!(
+            get("MFSC").time < get("STATIC").time,
+            "MFSC {} vs STATIC {}",
+            get("MFSC").time,
+            get("STATIC").time
+        );
+        // "almost all scheduling techniques outperform the default
+        // STATIC" (§4; the paper's own exception is FISS)
+        let winners = rows
+            .iter()
+            .filter(|r| r.scheme != "STATIC" && r.vs_static < 1.0)
+            .count();
+        assert!(winners >= 6, "only {winners}/9 dynamic schemes beat STATIC");
+        // STATIC is a valid baseline row
+        assert!((get("STATIC").vs_static - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig10_shape_static_wins_tiny() {
+        let params = FigureParams::tiny();
+        let rows = run_figure(FigureId::Fig10a, &params);
+        let t_static =
+            rows.iter().find(|r| r.scheme == "STATIC").unwrap().time;
+        for r in &rows {
+            assert!(
+                r.time >= t_static * 0.98,
+                "{} ({}) beat STATIC ({t_static}) on dense LR",
+                r.scheme,
+                r.time
+            );
+        }
+    }
+
+    #[test]
+    fn stealing_figures_have_40_rows() {
+        let params = FigureParams::tiny();
+        let rows = run_figure(FigureId::Fig8a, &params);
+        assert_eq!(rows.len(), 40, "10 schemes x 4 victims");
+        assert!(rows.iter().all(|r| r.victim.is_some()));
+    }
+
+    #[test]
+    fn ablation_ss_explodes_tiny() {
+        let params = FigureParams::tiny();
+        for (machine, t_ss, t_mfsc) in ablation_ss(&params) {
+            assert!(
+                t_ss > 2.0 * t_mfsc,
+                "{machine}: SS {t_ss} vs MFSC {t_mfsc}"
+            );
+        }
+    }
+
+    #[test]
+    fn ablation_atomic_helps_fine_grained_tiny() {
+        let params = FigureParams::tiny();
+        let rows =
+            ablation_lock_vs_atomic(&Topology::cascadelake56(), &params);
+        let ss = rows.iter().find(|(s, _, _)| *s == "SS").unwrap();
+        assert!(
+            ss.2 < ss.1,
+            "atomic must beat locked for SS: {} vs {}",
+            ss.2,
+            ss.1
+        );
+    }
+}

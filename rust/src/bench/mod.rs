@@ -1,0 +1,14 @@
+//! Figure harness: regenerates every figure of the paper's evaluation
+//! (§4) on the modelled machines, printing the same series the paper
+//! plots. Used by `cargo bench` targets and the `daphne-sched figure`
+//! CLI subcommand.
+//!
+//! The paper's absolute times came from real 20/56-core Xeons; here the
+//! DES (calibrated in host-seconds, DESIGN.md §3) reproduces the
+//! *shape*: who wins, by roughly what factor, where behaviour flips.
+
+pub mod calibration;
+pub mod figures;
+
+pub use calibration::AppCosts;
+pub use figures::{FigureId, FigureParams, Row};

@@ -1,0 +1,242 @@
+//! Configuration system: scheduling options, machine selection, workload
+//! parameters. Parsed from CLI-style `key=value` pairs and simple config
+//! files (a `key = value` line format, TOML-flavoured but std-only).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::sched::{QueueLayout, Scheme, VictimStrategy};
+use crate::topology::Topology;
+
+/// Everything needed to schedule one pipeline run.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Task-partitioning scheme (paper: 11 options).
+    pub scheme: Scheme,
+    /// Work-queue layout (paper: centralized / per-CPU-group / per-core).
+    pub layout: QueueLayout,
+    /// Victim-selection strategy for work-stealing layouts.
+    pub victim: VictimStrategy,
+    /// RNG seed (PSS chunking, RND/RNDPRI victims, workloads).
+    pub seed: u64,
+    /// FISS/VISS stage count; `None` = ceil(log2 P) + 1.
+    pub stages: Option<usize>,
+    /// PLS static workload ratio (fraction scheduled statically first).
+    pub pls_swr: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            scheme: Scheme::Static,
+            layout: QueueLayout::Centralized { atomic: false },
+            victim: VictimStrategy::Seq,
+            seed: 0xDA9E,
+            stages: None,
+            pls_swr: 0.5,
+        }
+    }
+}
+
+impl SchedConfig {
+    pub fn with_scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn with_layout(mut self, layout: QueueLayout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    pub fn with_victim(mut self, victim: VictimStrategy) -> Self {
+        self.victim = victim;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// A full experiment configuration (scheduling + machine + workload).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub sched: SchedConfig,
+    pub topology: Topology,
+    /// Free-form workload parameters (apps interpret their own keys).
+    pub params: BTreeMap<String, String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            sched: SchedConfig::default(),
+            topology: Topology::host(),
+            params: BTreeMap::new(),
+        }
+    }
+}
+
+/// Error for config parsing.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl RunConfig {
+    /// Apply one `key=value` option.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        match key {
+            "scheme" | "partitioning" => {
+                self.sched.scheme = Scheme::parse(value)
+                    .ok_or_else(|| ConfigError(format!("unknown scheme '{value}'")))?;
+            }
+            "layout" | "queue" => {
+                self.sched.layout = QueueLayout::parse(value)
+                    .ok_or_else(|| ConfigError(format!("unknown layout '{value}'")))?;
+            }
+            "victim" => {
+                self.sched.victim = VictimStrategy::parse(value)
+                    .ok_or_else(|| ConfigError(format!("unknown victim '{value}'")))?;
+            }
+            "machine" | "topology" => {
+                self.topology = Topology::preset(value)
+                    .ok_or_else(|| ConfigError(format!("unknown machine '{value}'")))?;
+            }
+            "seed" => {
+                self.sched.seed = value
+                    .parse()
+                    .map_err(|_| ConfigError(format!("bad seed '{value}'")))?;
+            }
+            "stages" => {
+                self.sched.stages = Some(
+                    value
+                        .parse()
+                        .map_err(|_| ConfigError(format!("bad stages '{value}'")))?,
+                );
+            }
+            "pls_swr" => {
+                self.sched.pls_swr = value
+                    .parse()
+                    .map_err(|_| ConfigError(format!("bad pls_swr '{value}'")))?;
+            }
+            _ => {
+                self.params.insert(key.to_string(), value.to_string());
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a sequence of `key=value` CLI options.
+    pub fn from_pairs<'a>(
+        pairs: impl IntoIterator<Item = &'a str>,
+    ) -> Result<Self, ConfigError> {
+        let mut cfg = RunConfig::default();
+        for pair in pairs {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| ConfigError(format!("expected key=value, got '{pair}'")))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load a `key = value` config file; '#' starts a comment.
+    pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
+        let mut cfg = RunConfig::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                ConfigError(format!("{}:{}: expected key = value", path.display(), lineno + 1))
+            })?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Integer workload parameter with default.
+    pub fn param_usize(&self, key: &str, default: usize) -> usize {
+        self.params
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Float workload parameter with default.
+    pub fn param_f64(&self, key: &str, default: f64) -> f64 {
+        self.params
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_pairs() {
+        let cfg = RunConfig::from_pairs([
+            "scheme=mfsc",
+            "layout=percore",
+            "victim=rndpri",
+            "machine=broadwell20",
+            "seed=7",
+            "rows=100000",
+        ])
+        .unwrap();
+        assert_eq!(cfg.sched.scheme, Scheme::Mfsc);
+        assert_eq!(cfg.sched.victim, VictimStrategy::RndPri);
+        assert_eq!(cfg.topology.n_cores(), 20);
+        assert_eq!(cfg.sched.seed, 7);
+        assert_eq!(cfg.param_usize("rows", 0), 100_000);
+    }
+
+    #[test]
+    fn unknown_scheme_is_error() {
+        assert!(RunConfig::from_pairs(["scheme=bogus"]).is_err());
+        assert!(RunConfig::from_pairs(["machine=bogus"]).is_err());
+        assert!(RunConfig::from_pairs(["noequals"]).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("daphne_sched_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(
+            &path,
+            "# experiment\nscheme = gss\nmachine = cascadelake56\nrows = 42\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.sched.scheme, Scheme::Gss);
+        assert_eq!(cfg.topology.n_cores(), 56);
+        assert_eq!(cfg.param_usize("rows", 0), 42);
+    }
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.sched.scheme, Scheme::Static); // DAPHNE default
+        assert!(matches!(
+            cfg.sched.layout,
+            QueueLayout::Centralized { atomic: false }
+        ));
+    }
+}

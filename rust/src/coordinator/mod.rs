@@ -1,0 +1,239 @@
+//! Distributed DaphneSched (Fig. 5): a coordinator (leader) fronting
+//! multiple shared-memory DaphneSched instances (workers) over TCP.
+//!
+//! The leader is the entry point the DAPHNE runtime talks to: it
+//! *distributes* pipeline inputs (row-partitioned sparse blocks),
+//! *broadcasts* shared inputs, ships code (DaphneDSL text — the subset
+//! interpreter is each worker's local compiler), and collects results.
+//! Workers store inputs as they arrive and schedule local tasks with
+//! their own shared-memory DaphneSched.
+//!
+//! std-net threads, no async runtime (tokio is not in the vendored
+//! crate set; one blocking thread per connection is plenty for the
+//! coordination plane).
+
+pub mod proto;
+pub mod worker;
+
+use std::io::{self, BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use proto::{read_msg, write_msg, Msg};
+
+use crate::matrix::CsrMatrix;
+
+/// A connected worker.
+struct Remote {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    pub cores: u32,
+}
+
+impl Remote {
+    fn send(&mut self, msg: &Msg) -> io::Result<()> {
+        write_msg(&mut self.writer, msg)
+    }
+
+    fn recv(&mut self) -> io::Result<Msg> {
+        read_msg(&mut self.reader)
+    }
+
+    fn expect_ok(&mut self) -> io::Result<()> {
+        match self.recv()? {
+            Msg::Ok => Ok(()),
+            Msg::Error { message } => {
+                Err(io::Error::other(format!("worker error: {message}")))
+            }
+            other => Err(io::Error::other(format!(
+                "expected Ok, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// The Fig. 5 coordinator.
+pub struct Leader {
+    workers: Vec<Remote>,
+    /// Row ranges assigned by the last `distribute_sparse`.
+    blocks: Vec<(usize, usize)>,
+}
+
+/// A collected worker result.
+#[derive(Debug, Clone)]
+pub struct WorkerResult {
+    pub name: String,
+    pub scheduled_time: f64,
+    pub data: Vec<f32>,
+}
+
+impl Leader {
+    /// Connect to worker daemons (they listen; see [`worker::serve`]).
+    pub fn connect<A: ToSocketAddrs>(addrs: &[A]) -> io::Result<Leader> {
+        let mut workers = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let stream = TcpStream::connect(addr)?;
+            stream.set_nodelay(true)?;
+            let reader = BufReader::new(stream.try_clone()?);
+            let writer = BufWriter::new(stream);
+            let mut remote = Remote { reader, writer, cores: 0 };
+            match remote.recv()? {
+                Msg::Hello { cores } => remote.cores = cores,
+                other => {
+                    return Err(io::Error::other(format!(
+                        "expected Hello, got {other:?}"
+                    )))
+                }
+            }
+            workers.push(remote);
+        }
+        Ok(Leader { workers, blocks: Vec::new() })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Row ranges from the last `distribute_sparse`.
+    pub fn blocks(&self) -> &[(usize, usize)] {
+        &self.blocks
+    }
+
+    /// Distribute `g` row-wise (one contiguous block per worker).
+    pub fn distribute_sparse(
+        &mut self,
+        name: &str,
+        g: &CsrMatrix,
+    ) -> io::Result<()> {
+        let n = self.workers.len().max(1);
+        let base = g.rows / n;
+        let extra = g.rows % n;
+        self.blocks.clear();
+        let mut start = 0;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let len = base + usize::from(i < extra);
+            let end = start + len;
+            w.send(&proto::sparse_block_msg(name, g, start, end))?;
+            w.expect_ok()?;
+            self.blocks.push((start, end));
+            start = end;
+        }
+        Ok(())
+    }
+
+    /// Broadcast a dense vector/matrix to every worker.
+    pub fn broadcast_dense(
+        &mut self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        data: &[f32],
+    ) -> io::Result<()> {
+        for w in &mut self.workers {
+            w.send(&Msg::Dense {
+                name: name.to_string(),
+                rows: rows as u64,
+                cols: cols as u64,
+                data: data.to_vec(),
+            })?;
+            w.expect_ok()?;
+        }
+        Ok(())
+    }
+
+    /// Ship a DaphneDSL script to every worker and collect results.
+    pub fn run_script_all(
+        &mut self,
+        script: &str,
+        params: &[(String, String)],
+    ) -> io::Result<Vec<WorkerResult>> {
+        for w in &mut self.workers {
+            w.send(&Msg::RunScript {
+                script: script.to_string(),
+                params: params.to_vec(),
+            })?;
+        }
+        self.collect()
+    }
+
+    fn collect(&mut self) -> io::Result<Vec<WorkerResult>> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        for w in &mut self.workers {
+            match w.recv()? {
+                Msg::Result { name, scheduled_time, data } => {
+                    out.push(WorkerResult { name, scheduled_time, data })
+                }
+                Msg::Error { message } => {
+                    return Err(io::Error::other(format!(
+                        "worker error: {message}"
+                    )))
+                }
+                other => {
+                    return Err(io::Error::other(format!(
+                        "expected Result, got {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Distributed connected components: `G` row blocks stay resident on
+    /// the workers; the leader broadcasts `c` each round, workers run one
+    /// locally-scheduled propagate pass, the leader merges `u` and
+    /// checks the fixpoint (Listing 1's loop, distributed per Fig. 5).
+    pub fn cc_distributed(
+        &mut self,
+        g: &CsrMatrix,
+        maxi: usize,
+    ) -> io::Result<DistributedCc> {
+        let n = g.rows;
+        self.distribute_sparse("G", g)?;
+        let mut c: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+        let mut iterations = 0;
+        let mut scheduled_time = 0f64;
+        for _ in 0..maxi {
+            iterations += 1;
+            self.broadcast_dense("c", n, 1, &c)?;
+            for w in &mut self.workers {
+                w.send(&Msg::CcIterate)?;
+            }
+            let results = self.collect()?;
+            let mut u = vec![0f32; n];
+            for (res, &(start, end)) in results.iter().zip(&self.blocks) {
+                if res.data.len() != end - start {
+                    return Err(io::Error::other(format!(
+                        "block result size {} != {}",
+                        res.data.len(),
+                        end - start
+                    )));
+                }
+                u[start..end].copy_from_slice(&res.data);
+                scheduled_time = scheduled_time.max(res.scheduled_time);
+            }
+            let diff = c.iter().zip(&u).filter(|(a, b)| a != b).count();
+            c = u;
+            if diff == 0 {
+                break;
+            }
+        }
+        Ok(DistributedCc { labels: c, iterations, scheduled_time })
+    }
+
+    /// Shut every worker down and close connections.
+    pub fn shutdown(mut self) -> io::Result<()> {
+        for w in &mut self.workers {
+            w.send(&Msg::Shutdown)?;
+        }
+        Ok(())
+    }
+}
+
+/// Result of [`Leader::cc_distributed`].
+#[derive(Debug, Clone)]
+pub struct DistributedCc {
+    pub labels: Vec<f32>,
+    pub iterations: usize,
+    /// Max per-worker scheduled time (critical path of the local
+    /// propagate passes).
+    pub scheduled_time: f64,
+}

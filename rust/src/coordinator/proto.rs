@@ -1,0 +1,381 @@
+//! Wire protocol between the coordinator (leader) and DaphneSched
+//! workers (Fig. 5): length-prefixed binary frames over TCP, std-only.
+//!
+//! Message kinds mirror the paper's list: *distribute pipeline inputs*
+//! (a row-partition of a matrix), *broadcast pipeline inputs* (shared
+//! vectors), and *code shipment* (here: DaphneDSL text instead of MLIR —
+//! the subset interpreter is the local compiler).
+
+use std::io::{self, Read, Write};
+
+use crate::matrix::CsrMatrix;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> leader greeting with its advertised parallelism.
+    Hello { cores: u32 },
+    /// Leader -> worker: a named dense buffer (broadcast input).
+    Dense { name: String, rows: u64, cols: u64, data: Vec<f32> },
+    /// Leader -> worker: a named sparse row-block (distributed input).
+    /// `row_offset` is the block's first global row.
+    SparseBlock {
+        name: String,
+        row_offset: u64,
+        rows: u64,
+        cols: u64,
+        indptr: Vec<u64>,
+        indices: Vec<u32>,
+    },
+    /// Leader -> worker: run a DaphneDSL script against stored inputs.
+    RunScript { script: String, params: Vec<(String, String)> },
+    /// Leader -> worker: one CC propagate pass over the stored block
+    /// (`G` sparse block + broadcast `c`), returning the block's `u`.
+    CcIterate,
+    /// Worker -> leader: a result buffer plus scheduled time.
+    Result { name: String, scheduled_time: f64, data: Vec<f32> },
+    /// Worker -> leader: failure.
+    Error { message: String },
+    /// Acknowledgement.
+    Ok,
+    /// Leader -> worker: disconnect.
+    Shutdown,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_DENSE: u8 = 2;
+const TAG_SPARSE: u8 = 3;
+const TAG_RUN: u8 = 4;
+const TAG_CC_ITER: u8 = 5;
+const TAG_RESULT: u8 = 6;
+const TAG_ERROR: u8 = 7;
+const TAG_OK: u8 = 8;
+const TAG_SHUTDOWN: u8 = 9;
+
+/// Hard cap on frame payloads (guards against corrupt length prefixes).
+pub const MAX_FRAME: u64 = 8 << 30;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u64(buf, v.len() as u64);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u64s(buf: &mut Vec<u8>, v: &[u64]) {
+    put_u64(buf, v.len() as u64);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u64(buf, v.len() as u64);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "truncated frame",
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> io::Result<String> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "bad utf8 in frame")
+        })
+    }
+
+    fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self) -> io::Result<Vec<u64>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self) -> io::Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Serialize and frame a message.
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut body = Vec::new();
+    match msg {
+        Msg::Hello { cores } => {
+            body.push(TAG_HELLO);
+            put_u32(&mut body, *cores);
+        }
+        Msg::Dense { name, rows, cols, data } => {
+            body.push(TAG_DENSE);
+            put_str(&mut body, name);
+            put_u64(&mut body, *rows);
+            put_u64(&mut body, *cols);
+            put_f32s(&mut body, data);
+        }
+        Msg::SparseBlock { name, row_offset, rows, cols, indptr, indices } => {
+            body.push(TAG_SPARSE);
+            put_str(&mut body, name);
+            put_u64(&mut body, *row_offset);
+            put_u64(&mut body, *rows);
+            put_u64(&mut body, *cols);
+            put_u64s(&mut body, indptr);
+            put_u32s(&mut body, indices);
+        }
+        Msg::RunScript { script, params } => {
+            body.push(TAG_RUN);
+            put_str(&mut body, script);
+            put_u64(&mut body, params.len() as u64);
+            for (k, v) in params {
+                put_str(&mut body, k);
+                put_str(&mut body, v);
+            }
+        }
+        Msg::CcIterate => body.push(TAG_CC_ITER),
+        Msg::Result { name, scheduled_time, data } => {
+            body.push(TAG_RESULT);
+            put_str(&mut body, name);
+            put_f64(&mut body, *scheduled_time);
+            put_f32s(&mut body, data);
+        }
+        Msg::Error { message } => {
+            body.push(TAG_ERROR);
+            put_str(&mut body, message);
+        }
+        Msg::Ok => body.push(TAG_OK),
+        Msg::Shutdown => body.push(TAG_SHUTDOWN),
+    }
+    let mut frame = Vec::with_capacity(body.len() + 8);
+    put_u64(&mut frame, body.len() as u64);
+    frame.extend_from_slice(&body);
+    frame
+}
+
+/// Write one framed message.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> io::Result<()> {
+    w.write_all(&encode(msg))?;
+    w.flush()
+}
+
+/// Read one framed message.
+pub fn read_msg(r: &mut impl Read) -> io::Result<Msg> {
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let len = u64::from_le_bytes(len);
+    if len == 0 || len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode(&body)
+}
+
+fn decode(body: &[u8]) -> io::Result<Msg> {
+    let mut c = Cursor { b: body, i: 1 };
+    match body.first() {
+        Some(&TAG_HELLO) => Ok(Msg::Hello { cores: c.u32()? }),
+        Some(&TAG_DENSE) => Ok(Msg::Dense {
+            name: c.str()?,
+            rows: c.u64()?,
+            cols: c.u64()?,
+            data: c.f32s()?,
+        }),
+        Some(&TAG_SPARSE) => Ok(Msg::SparseBlock {
+            name: c.str()?,
+            row_offset: c.u64()?,
+            rows: c.u64()?,
+            cols: c.u64()?,
+            indptr: c.u64s()?,
+            indices: c.u32s()?,
+        }),
+        Some(&TAG_RUN) => {
+            let script = c.str()?;
+            let n = c.u64()? as usize;
+            let mut params = Vec::with_capacity(n);
+            for _ in 0..n {
+                params.push((c.str()?, c.str()?));
+            }
+            Ok(Msg::RunScript { script, params })
+        }
+        Some(&TAG_CC_ITER) => Ok(Msg::CcIterate),
+        Some(&TAG_RESULT) => Ok(Msg::Result {
+            name: c.str()?,
+            scheduled_time: c.f64()?,
+            data: c.f32s()?,
+        }),
+        Some(&TAG_ERROR) => Ok(Msg::Error { message: c.str()? }),
+        Some(&TAG_OK) => Ok(Msg::Ok),
+        Some(&TAG_SHUTDOWN) => Ok(Msg::Shutdown),
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unknown tag {other:?}"),
+        )),
+    }
+}
+
+/// Build the sparse-block message for rows `[start, end)` of `g`.
+pub fn sparse_block_msg(
+    name: &str,
+    g: &CsrMatrix,
+    start: usize,
+    end: usize,
+) -> Msg {
+    let base = g.indptr[start];
+    let indptr: Vec<u64> = g.indptr[start..=end]
+        .iter()
+        .map(|&p| (p - base) as u64)
+        .collect();
+    let indices = g.indices[g.indptr[start]..g.indptr[end]].to_vec();
+    Msg::SparseBlock {
+        name: name.to_string(),
+        row_offset: start as u64,
+        rows: (end - start) as u64,
+        cols: g.cols as u64,
+        indptr,
+        indices,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let bytes = encode(&msg);
+        let mut r = &bytes[..];
+        let got = read_msg(&mut r).unwrap();
+        assert_eq!(got, msg);
+        assert!(r.is_empty(), "unconsumed bytes");
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Hello { cores: 8 });
+        roundtrip(Msg::Dense {
+            name: "c".into(),
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, -2.5, 3.0, 0.0],
+        });
+        roundtrip(Msg::SparseBlock {
+            name: "G".into(),
+            row_offset: 100,
+            rows: 2,
+            cols: 10,
+            indptr: vec![0, 1, 3],
+            indices: vec![5, 2, 9],
+        });
+        roundtrip(Msg::RunScript {
+            script: "x = 1;".into(),
+            params: vec![("a".into(), "1".into()), ("b".into(), "z".into())],
+        });
+        roundtrip(Msg::CcIterate);
+        roundtrip(Msg::Result {
+            name: "u".into(),
+            scheduled_time: 0.125,
+            data: vec![9.0; 3],
+        });
+        roundtrip(Msg::Error { message: "boom".into() });
+        roundtrip(Msg::Ok);
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn sparse_block_extracts_window() {
+        let g = CsrMatrix::from_edges(
+            4,
+            4,
+            &[(0, 1), (1, 2), (1, 3), (2, 0), (3, 1)],
+        );
+        let Msg::SparseBlock { row_offset, rows, indptr, indices, .. } =
+            sparse_block_msg("G", &g, 1, 3)
+        else {
+            panic!()
+        };
+        assert_eq!(row_offset, 1);
+        assert_eq!(rows, 2);
+        assert_eq!(indptr, vec![0, 2, 3]); // rows 1 (2 nnz) and 2 (1 nnz)
+        assert_eq!(indices, vec![2, 3, 0]);
+    }
+
+    #[test]
+    fn rejects_bad_frames() {
+        // zero length
+        let z = 0u64.to_le_bytes();
+        assert!(read_msg(&mut &z[..]).is_err());
+        // unknown tag
+        let mut f = Vec::new();
+        f.extend_from_slice(&1u64.to_le_bytes());
+        f.push(0xFF);
+        assert!(read_msg(&mut &f[..]).is_err());
+        // truncated body
+        let mut f = Vec::new();
+        f.extend_from_slice(&100u64.to_le_bytes());
+        f.push(TAG_OK);
+        assert!(read_msg(&mut &f[..]).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! DaphneSched worker daemon (Fig. 5 right-hand side): listens for the
+//! coordinator, stores inputs as they arrive, and executes shipped code
+//! with its local shared-memory DaphneSched.
+
+use std::collections::BTreeMap;
+use std::io::{self, BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::proto::{read_msg, write_msg, Msg};
+use crate::matrix::CsrMatrix;
+use crate::util::DisjointMut;
+use crate::vee::Vee;
+
+/// Stored worker inputs.
+#[derive(Default)]
+struct Store {
+    dense: BTreeMap<String, (usize, usize, Vec<f32>)>,
+    sparse: BTreeMap<String, (usize, Arc<CsrMatrix>)>, // (row_offset, block)
+}
+
+/// Serve one coordinator connection until `Shutdown`/EOF. Returns the
+/// number of messages handled.
+pub fn serve_connection(stream: TcpStream, vee: &Vee) -> io::Result<usize> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    write_msg(
+        &mut writer,
+        &Msg::Hello { cores: vee.topo.n_cores() as u32 },
+    )?;
+
+    let mut store = Store::default();
+    let mut handled = 0usize;
+    loop {
+        let msg = match read_msg(&mut reader) {
+            Ok(m) => m,
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        };
+        handled += 1;
+        match msg {
+            Msg::Dense { name, rows, cols, data } => {
+                store
+                    .dense
+                    .insert(name, (rows as usize, cols as usize, data));
+                write_msg(&mut writer, &Msg::Ok)?;
+            }
+            Msg::SparseBlock { name, row_offset, rows, cols, indptr, indices } => {
+                let block = CsrMatrix {
+                    rows: rows as usize,
+                    cols: cols as usize,
+                    indptr: indptr.iter().map(|&p| p as usize).collect(),
+                    indices,
+                    vals: None,
+                };
+                store
+                    .sparse
+                    .insert(name, (row_offset as usize, Arc::new(block)));
+                write_msg(&mut writer, &Msg::Ok)?;
+            }
+            Msg::CcIterate => {
+                let reply = cc_iterate(&store, vee);
+                write_msg(&mut writer, &reply)?;
+            }
+            Msg::RunScript { script, params } => {
+                let params: BTreeMap<String, String> =
+                    params.into_iter().collect();
+                let reply = match crate::dsl::run_script(&script, &params, vee)
+                {
+                    Ok(out) => {
+                        // convention: result variable named `result`,
+                        // else the scheduled time alone is returned
+                        let data = out
+                            .mat("result")
+                            .map(|m| m.data.clone())
+                            .unwrap_or_default();
+                        Msg::Result {
+                            name: "result".into(),
+                            scheduled_time: out.scheduled_time(),
+                            data,
+                        }
+                    }
+                    Err(e) => Msg::Error { message: e },
+                };
+                write_msg(&mut writer, &reply)?;
+            }
+            Msg::Shutdown => break,
+            other => {
+                write_msg(
+                    &mut writer,
+                    &Msg::Error {
+                        message: format!("unexpected message {other:?}"),
+                    },
+                )?;
+            }
+        }
+    }
+    Ok(handled)
+}
+
+/// One locally-scheduled propagate pass over the stored block.
+fn cc_iterate(store: &Store, vee: &Vee) -> Msg {
+    let Some((row_offset, g)) = store.sparse.get("G") else {
+        return Msg::Error { message: "no sparse input 'G'".into() };
+    };
+    let Some((_, _, c)) = store.dense.get("c") else {
+        return Msg::Error { message: "no broadcast input 'c'".into() };
+    };
+    if c.len() != g.cols {
+        return Msg::Error {
+            message: format!("c has {} entries, G has {} cols", c.len(), g.cols),
+        };
+    }
+    let rows = g.rows;
+    let row_offset = *row_offset;
+    let mut u = vec![0f32; rows];
+    let view = DisjointMut::new(&mut u);
+    let (gref, view) = (g.clone(), &view);
+    let report = vee.execute(rows, move |_w, range| {
+        let slice = view.slice_mut(range.start, range.end);
+        for (off, r) in range.iter().enumerate() {
+            // own id lives at global row index
+            let mut m = c[row_offset + r];
+            for &col in gref.row(r) {
+                let v = c[col as usize];
+                if v > m {
+                    m = v;
+                }
+            }
+            slice[off] = m;
+        }
+    });
+    Msg::Result {
+        name: "u".into(),
+        scheduled_time: report.makespan,
+        data: u,
+    }
+}
+
+/// Listen on `addr` and serve coordinators until the process exits (or,
+/// with `max_connections`, until that many have been served).
+pub fn serve(
+    listener: TcpListener,
+    vee: Vee,
+    max_connections: Option<usize>,
+) -> io::Result<()> {
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        serve_connection(stream?, &vee)?;
+        served += 1;
+        if let Some(max) = max_connections {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! DaphneDSL abstract syntax tree.
+
+/// Binary operators in precedence groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Gt,
+    Lt,
+    Ge,
+    Le,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    Str(String),
+    /// `$name` CLI parameter.
+    Param(String),
+    Var(String),
+    /// `f(a, b, ...)` builtin call.
+    Call(String, Vec<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Unary minus.
+    Neg(Box<Expr>),
+    /// `X[, cols]` right (column) indexing — the only indexing form the
+    /// listings use.
+    ColIndex(Box<Expr>, Box<Expr>),
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `name = expr;`
+    Assign(String, Expr),
+    /// `while (cond) { body }`
+    While(Expr, Vec<Stmt>),
+    /// bare expression statement (e.g. `print(x);`)
+    Expr(Expr),
+}
+
+/// A parsed program.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub stmts: Vec<Stmt>,
+}

@@ -1,0 +1,736 @@
+//! The DaphneDSL interpreter: evaluates programs, lowering vectorizable
+//! operators onto the VEE so they execute under the configured
+//! scheduler (the DSL analog of DAPHNE's vectorized execution engine).
+//!
+//! Scheduled operators (items = matrix rows): `rowMaxs(G * t(c))`,
+//! elementwise dense binary ops, `mean`/`stddev`, `syrk`, `gemv`.
+//! Everything else (scalars, small epilogues like `solve`) runs inline.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use super::ast::{BinOp, Expr, Program, Stmt};
+use super::value::{apply_rows, broadcast_mode, Value};
+use crate::graph::{amazon_like, scale_up, GraphSpec};
+use crate::matrix::{ops, DenseMatrix};
+use crate::sched::SchedReport;
+use crate::util::DisjointMut;
+use crate::vee::Vee;
+
+/// Result of running a program.
+#[derive(Debug)]
+pub struct RunOutput {
+    /// Final variable bindings.
+    pub vars: BTreeMap<String, Value>,
+    /// `(operator, report)` for every VEE-scheduled operator execution.
+    pub reports: Vec<(String, SchedReport)>,
+}
+
+impl RunOutput {
+    pub fn num(&self, name: &str) -> Option<f64> {
+        self.vars.get(name).and_then(|v| v.as_num().ok())
+    }
+
+    pub fn mat(&self, name: &str) -> Option<&DenseMatrix> {
+        match self.vars.get(name) {
+            Some(Value::Mat(m)) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Sum of scheduled-operator makespans (the "execution time" the
+    /// paper's figures report).
+    pub fn scheduled_time(&self) -> f64 {
+        self.reports.iter().map(|(_, r)| r.makespan).sum()
+    }
+}
+
+/// Interpreter state.
+pub struct Interp {
+    params: BTreeMap<String, String>,
+    vee: Vee,
+    vars: BTreeMap<String, Value>,
+    reports: Vec<(String, SchedReport)>,
+    /// Row threshold below which ops run inline (scheduling a 5-row
+    /// matrix is pure overhead).
+    pub parallel_threshold: usize,
+}
+
+impl Interp {
+    pub fn new(params: BTreeMap<String, String>, vee: Vee) -> Self {
+        Interp {
+            params,
+            vee,
+            vars: BTreeMap::new(),
+            reports: Vec::new(),
+            parallel_threshold: 256,
+        }
+    }
+
+    pub fn run(mut self, program: &Program) -> Result<RunOutput, String> {
+        self.exec_block(&program.stmts)?;
+        Ok(RunOutput { vars: self.vars, reports: self.reports })
+    }
+
+    fn exec_block(&mut self, stmts: &[Stmt]) -> Result<(), String> {
+        for stmt in stmts {
+            self.exec(stmt)?;
+        }
+        Ok(())
+    }
+
+    fn exec(&mut self, stmt: &Stmt) -> Result<(), String> {
+        match stmt {
+            Stmt::Assign(name, expr) => {
+                let v = self.eval(expr)?;
+                self.vars.insert(name.clone(), v);
+                Ok(())
+            }
+            Stmt::While(cond, body) => {
+                let mut guard = 0usize;
+                while self.eval(cond)?.truthy()? {
+                    self.exec_block(body)?;
+                    guard += 1;
+                    if guard > 1_000_000 {
+                        return Err("while loop exceeded 1e6 iterations".into());
+                    }
+                }
+                Ok(())
+            }
+            Stmt::Expr(e) => {
+                self.eval(e)?;
+                Ok(())
+            }
+        }
+    }
+
+    fn eval(&mut self, expr: &Expr) -> Result<Value, String> {
+        match expr {
+            Expr::Num(n) => Ok(Value::Num(*n)),
+            Expr::Str(s) => Ok(Value::Str(s.clone())),
+            Expr::Param(p) => {
+                let raw = self
+                    .params
+                    .get(p)
+                    .ok_or_else(|| format!("missing parameter ${p}"))?;
+                Ok(match raw.parse::<f64>() {
+                    Ok(n) => Value::Num(n),
+                    Err(_) => Value::Str(raw.clone()),
+                })
+            }
+            Expr::Var(name) => match name.as_str() {
+                "inf" => Ok(Value::Num(f64::INFINITY)),
+                "nan" => Ok(Value::Num(f64::NAN)),
+                _ => self
+                    .vars
+                    .get(name)
+                    .cloned()
+                    .ok_or_else(|| format!("undefined variable '{name}'")),
+            },
+            Expr::Neg(e) => {
+                let v = self.eval(e)?;
+                match v {
+                    Value::Num(n) => Ok(Value::Num(-n)),
+                    Value::Mat(mut m) => {
+                        for x in &mut m.data {
+                            *x = -*x;
+                        }
+                        Ok(Value::Mat(m))
+                    }
+                    other => {
+                        Err(format!("cannot negate {}", other.type_name()))
+                    }
+                }
+            }
+            Expr::Binary(op, l, r) => {
+                let lv = self.eval(l)?;
+                let rv = self.eval(r)?;
+                self.binary(*op, lv, rv)
+            }
+            Expr::ColIndex(target, cols) => {
+                let m = self.eval(target)?;
+                let idx = self.eval(cols)?;
+                let m = m.as_mat()?.clone();
+                let idx = idx.as_mat()?;
+                let mut out = DenseMatrix::zeros(m.rows, idx.data.len());
+                for (k, &ci) in idx.data.iter().enumerate() {
+                    let ci = ci as usize;
+                    if ci >= m.cols {
+                        return Err(format!(
+                            "column index {ci} out of range ({})",
+                            m.cols
+                        ));
+                    }
+                    for r in 0..m.rows {
+                        out[(r, k)] = m[(r, ci)];
+                    }
+                }
+                Ok(Value::Mat(out))
+            }
+            Expr::Call(name, args) => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a)?);
+                }
+                self.call(name, vals)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // binary operators
+    // ------------------------------------------------------------------
+
+    fn binary(&mut self, op: BinOp, l: Value, r: Value) -> Result<Value, String> {
+        // sparse * t(c) — the Listing 1 hot pattern: stay lazy
+        if let (BinOp::Mul, Value::Sparse(g), Value::Mat(m)) = (&op, &l, &r) {
+            if m.rows == 1 && m.cols == g.cols {
+                return Ok(Value::SparseColScaled(
+                    g.clone(),
+                    Arc::new(m.data.clone()),
+                ));
+            }
+        }
+        let f = scalar_op(op);
+        match (l, r) {
+            (Value::Num(a), Value::Num(b)) => {
+                Ok(Value::Num(f(a as f32, b as f32) as f64))
+            }
+            (Value::Mat(a), Value::Num(b)) => {
+                let b = DenseMatrix::from_vec(1, 1, vec![b as f32]);
+                self.elementwise(op, a, b)
+            }
+            (Value::Num(a), Value::Mat(b)) => {
+                // a (op) B == map over B with a on the left
+                let a = DenseMatrix::fill(a as f32, b.rows, b.cols);
+                self.elementwise(op, a, b)
+            }
+            (Value::Mat(a), Value::Mat(b)) => {
+                // (1,1) on either side degrades to scalar broadcast
+                if a.rows * a.cols == 1 && b.rows * b.cols > 1 {
+                    let av = DenseMatrix::fill(a.data[0], b.rows, b.cols);
+                    self.elementwise(op, av, b)
+                } else {
+                    self.elementwise(op, a, b)
+                }
+            }
+            (l, r) => Err(format!(
+                "unsupported operands {} {op:?} {}",
+                l.type_name(),
+                r.type_name()
+            )),
+        }
+    }
+
+    /// Dense elementwise with broadcast; scheduled when large enough.
+    fn elementwise(
+        &mut self,
+        op: BinOp,
+        a: DenseMatrix,
+        b: DenseMatrix,
+    ) -> Result<Value, String> {
+        let mode = broadcast_mode(&a, &b)?;
+        let f = scalar_op(op);
+        let mut out = vec![0f32; a.rows * a.cols];
+        if a.rows >= self.parallel_threshold {
+            let view = DisjointMut::new(&mut out);
+            let (aref, bref, mref, view) = (&a, &b, &mode, &view);
+            let d = a.cols;
+            let report = self.vee.execute(a.rows, move |_w, range| {
+                let slice = view.slice_mut(range.start * d, range.end * d);
+                apply_rows(aref, bref, mref, f, slice, range.start, range.end);
+            });
+            self.reports.push((format!("ewise:{op:?}"), report));
+        } else {
+            apply_rows(&a, &b, &mode, f, &mut out, 0, a.rows);
+        }
+        Ok(Value::Mat(DenseMatrix::from_vec(a.rows, a.cols, out)))
+    }
+
+    // ------------------------------------------------------------------
+    // builtins
+    // ------------------------------------------------------------------
+
+    fn call(&mut self, name: &str, args: Vec<Value>) -> Result<Value, String> {
+        match name {
+            "readMatrix" => self.read_matrix(&args),
+            "nrow" => Ok(Value::Num(match &args[0] {
+                Value::Mat(m) => m.rows as f64,
+                Value::Sparse(g) => g.rows as f64,
+                v => return Err(format!("nrow of {}", v.type_name())),
+            })),
+            "ncol" => Ok(Value::Num(match &args[0] {
+                Value::Mat(m) => m.cols as f64,
+                Value::Sparse(g) => g.cols as f64,
+                v => return Err(format!("ncol of {}", v.type_name())),
+            })),
+            "seq" => {
+                let a = args[0].as_num()? as i64;
+                let b = args[1].as_num()? as i64;
+                let step = if args.len() > 2 {
+                    args[2].as_num()? as i64
+                } else {
+                    1
+                };
+                if step == 0 {
+                    return Err("seq: zero step".into());
+                }
+                let mut data = Vec::new();
+                let mut v = a;
+                while (step > 0 && v <= b) || (step < 0 && v >= b) {
+                    data.push(v as f32);
+                    v += step;
+                }
+                let n = data.len();
+                Ok(Value::Mat(DenseMatrix::from_vec(n, 1, data)))
+            }
+            "t" => {
+                let m = args[0].as_mat()?;
+                Ok(Value::Mat(m.transpose()))
+            }
+            "max" => self.builtin_max(args),
+            "rowMaxs" => self.builtin_rowmaxs(args),
+            "sum" => {
+                let m = args[0].as_mat()?;
+                Ok(Value::Num(m.data.iter().map(|&x| x as f64).sum()))
+            }
+            "mean" | "stddev" => self.builtin_colstats(name, args),
+            "rand" => {
+                let rows = args[0].as_num()? as usize;
+                let cols = args[1].as_num()? as usize;
+                let lo = args[2].as_num()? as f32;
+                let hi = args[3].as_num()? as f32;
+                // args[4] sparsity (1 = dense, the only supported value)
+                let seed_arg = args[5].as_num()?;
+                let seed = if seed_arg < 0.0 {
+                    self.vee.sched.seed
+                } else {
+                    seed_arg as u64
+                };
+                Ok(Value::Mat(DenseMatrix::rand(rows, cols, lo, hi, seed)))
+            }
+            "fill" => {
+                let v = args[0].as_num()? as f32;
+                let rows = args[1].as_num()? as usize;
+                let cols = args[2].as_num()? as usize;
+                Ok(Value::Mat(DenseMatrix::fill(v, rows, cols)))
+            }
+            "as.si64" | "as.f64" | "as.scalar" => {
+                Ok(Value::Num(args[0].as_num()?.trunc()))
+            }
+            "cbind" => {
+                let a = args[0].as_mat()?;
+                let b = args[1].as_mat()?;
+                Ok(Value::Mat(a.cbind(b)))
+            }
+            "diagMatrix" => {
+                let v = args[0].as_mat()?;
+                Ok(Value::Mat(DenseMatrix::diag(v)))
+            }
+            "syrk" => self.builtin_syrk(args),
+            "gemv" => self.builtin_gemv(args),
+            "solve" => {
+                let a = args[0].as_mat()?;
+                let b = args[1].as_mat()?;
+                let x = ops::cholesky_solve(a, &b.data)?;
+                let n = x.len();
+                Ok(Value::Mat(DenseMatrix::from_vec(n, 1, x)))
+            }
+            "print" => {
+                match &args[0] {
+                    Value::Num(n) => println!("{n}"),
+                    Value::Str(s) => println!("{s}"),
+                    Value::Mat(m) => {
+                        println!("matrix {}x{}", m.rows, m.cols)
+                    }
+                    v => println!("<{}>", v.type_name()),
+                }
+                Ok(Value::Num(0.0))
+            }
+            other => Err(format!("unknown builtin '{other}'")),
+        }
+    }
+
+    /// `readMatrix($f)`: SNAP edge-list path, or a `synthetic:` URI
+    /// (`synthetic:amazon?nodes=..&seed=..&scale=..`) for the generated
+    /// co-purchase graph. Symmetrized like the paper's two-directional
+    /// scaled data set.
+    fn read_matrix(&mut self, args: &[Value]) -> Result<Value, String> {
+        let Value::Str(path) = &args[0] else {
+            return Err("readMatrix expects a filename string".into());
+        };
+        if let Some(query) = path.strip_prefix("synthetic:amazon") {
+            let mut nodes = 10_000usize;
+            let mut seed = 0xA9u64;
+            let mut scale = 1usize;
+            for kv in query.trim_start_matches('?').split('&') {
+                match kv.split_once('=') {
+                    Some(("nodes", v)) => {
+                        nodes = v.parse().map_err(|_| "bad nodes")?
+                    }
+                    Some(("seed", v)) => {
+                        seed = v.parse().map_err(|_| "bad seed")?
+                    }
+                    Some(("scale", v)) => {
+                        scale = v.parse().map_err(|_| "bad scale")?
+                    }
+                    _ => {}
+                }
+            }
+            let g = amazon_like(&GraphSpec::small(nodes, seed)).symmetrize();
+            let g = if scale > 1 { scale_up(&g, scale) } else { g };
+            return Ok(Value::Sparse(Arc::new(g)));
+        }
+        let g = crate::graph::snap::read_edge_list(std::path::Path::new(path))
+            .map_err(|e| format!("readMatrix {path}: {e}"))?;
+        Ok(Value::Sparse(Arc::new(g.symmetrize())))
+    }
+
+    /// `max(a, b)` elementwise; the `max(rowMaxs(G * t(c)), c)` pattern
+    /// arrives here with both sides dense column vectors.
+    fn builtin_max(&mut self, args: Vec<Value>) -> Result<Value, String> {
+        if args.len() != 2 {
+            return Err("max expects 2 arguments".into());
+        }
+        let mut it = args.into_iter();
+        let (l, r) = (it.next().unwrap(), it.next().unwrap());
+        match (l, r) {
+            (Value::Num(a), Value::Num(b)) => Ok(Value::Num(a.max(b))),
+            (Value::Mat(a), Value::Mat(b)) => {
+                let mode = broadcast_mode(&a, &b)?;
+                let mut out = vec![0f32; a.rows * a.cols];
+                apply_rows(
+                    &a,
+                    &b,
+                    &mode,
+                    |x, y| x.max(y),
+                    &mut out,
+                    0,
+                    a.rows,
+                );
+                Ok(Value::Mat(DenseMatrix::from_vec(a.rows, a.cols, out)))
+            }
+            (Value::Mat(a), Value::Num(b)) | (Value::Num(b), Value::Mat(a)) => {
+                let mut m = a;
+                for x in &mut m.data {
+                    *x = x.max(b as f32);
+                }
+                Ok(Value::Mat(m))
+            }
+            (l, r) => Err(format!(
+                "max of {} and {}",
+                l.type_name(),
+                r.type_name()
+            )),
+        }
+    }
+
+    /// `rowMaxs(G * t(c))` — the scheduled CC hot operator. Implicit
+    /// zeros participate in the max (DaphneDSL semantics), hence the 0
+    /// floor for rows with no stored entries.
+    fn builtin_rowmaxs(&mut self, args: Vec<Value>) -> Result<Value, String> {
+        match &args[0] {
+            Value::SparseColScaled(g, scale) => {
+                let n = g.rows;
+                let mut out = vec![0f32; n];
+                let view = DisjointMut::new(&mut out);
+                let (g, scale, view) = (g.clone(), scale.clone(), &view);
+                let report = self.vee.execute(n, move |_w, range| {
+                    let slice = view.slice_mut(range.start, range.end);
+                    for (off, r) in range.iter().enumerate() {
+                        let mut m = 0f32; // implicit zeros
+                        for &c in g.row(r) {
+                            let v = scale[c as usize];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                        slice[off] = m;
+                    }
+                });
+                self.reports.push(("rowMaxs(G*t(c))".into(), report));
+                Ok(Value::Mat(DenseMatrix::from_vec(n, 1, out)))
+            }
+            Value::Mat(m) => {
+                let out: Vec<f32> = (0..m.rows)
+                    .map(|r| {
+                        m.row(r).iter().copied().fold(f32::NEG_INFINITY, f32::max)
+                    })
+                    .collect();
+                Ok(Value::Mat(DenseMatrix::from_vec(m.rows, 1, out)))
+            }
+            v => Err(format!("rowMaxs of {}", v.type_name())),
+        }
+    }
+
+    /// `mean(X, 1)` / `stddev(X, 1)` — column statistics via a scheduled
+    /// colstats pass (axis 1 = per column, the listings' only use).
+    fn builtin_colstats(
+        &mut self,
+        which: &str,
+        args: Vec<Value>,
+    ) -> Result<Value, String> {
+        let m = args[0].as_mat()?.clone();
+        let (n, d) = (m.rows, m.cols);
+        let acc: Mutex<(Vec<f32>, Vec<f32>)> =
+            Mutex::new((vec![0.0; d], vec![0.0; d]));
+        let (mref, accref) = (&m, &acc);
+        let report = self.vee.execute(n, move |_w, range| {
+            let mut s = vec![0.0; d];
+            let mut sq = vec![0.0; d];
+            ops::colstats_rows(mref, &mut s, &mut sq, range.start, range.end);
+            let mut a = accref.lock().unwrap();
+            for c in 0..d {
+                a.0[c] += s[c];
+                a.1[c] += sq[c];
+            }
+        });
+        self.reports.push((format!("{which}(X,1)"), report));
+        let (sum, sumsq) = acc.into_inner().unwrap();
+        let out: Vec<f32> = match which {
+            "mean" => sum.iter().map(|&s| s / n as f32).collect(),
+            _ => sum
+                .iter()
+                .zip(&sumsq)
+                .map(|(&s, &sq)| {
+                    let mean = s / n as f32;
+                    (sq / n as f32 - mean * mean).max(0.0).sqrt()
+                })
+                .collect(),
+        };
+        Ok(Value::Mat(DenseMatrix::from_vec(1, d, out)))
+    }
+
+    /// `syrk(X)` = XᵀX — scheduled over row blocks with per-task
+    /// partials.
+    fn builtin_syrk(&mut self, args: Vec<Value>) -> Result<Value, String> {
+        let x = args[0].as_mat()?.clone();
+        let d = x.cols;
+        let acc: Mutex<Vec<f32>> = Mutex::new(vec![0.0; d * d]);
+        let (xref, accref) = (&x, &acc);
+        let report = self.vee.execute(x.rows, move |_w, range| {
+            let mut a = vec![0.0f32; d * d];
+            ops::syrk_rows(xref, &mut a, range.start, range.end);
+            let mut acc = accref.lock().unwrap();
+            for (dst, src) in acc.iter_mut().zip(&a) {
+                *dst += src;
+            }
+        });
+        self.reports.push(("syrk(X)".into(), report));
+        Ok(Value::Mat(DenseMatrix::from_vec(
+            d,
+            d,
+            acc.into_inner().unwrap(),
+        )))
+    }
+
+    /// `gemv(X, y)` = Xᵀy — scheduled over row blocks.
+    fn builtin_gemv(&mut self, args: Vec<Value>) -> Result<Value, String> {
+        let x = args[0].as_mat()?.clone();
+        let y = args[1].as_mat()?.clone();
+        if y.data.len() != x.rows {
+            return Err(format!(
+                "gemv: X has {} rows but y has {} entries",
+                x.rows,
+                y.data.len()
+            ));
+        }
+        let d = x.cols;
+        let acc: Mutex<Vec<f32>> = Mutex::new(vec![0.0; d]);
+        let (xref, yref, accref) = (&x, &y, &acc);
+        let report = self.vee.execute(x.rows, move |_w, range| {
+            let mut b = vec![0.0f32; d];
+            ops::gemv_rows(xref, &yref.data, &mut b, range.start, range.end);
+            let mut acc = accref.lock().unwrap();
+            for (dst, src) in acc.iter_mut().zip(&b) {
+                *dst += src;
+            }
+        });
+        self.reports.push(("gemv(X,y)".into(), report));
+        Ok(Value::Mat(DenseMatrix::from_vec(
+            d,
+            1,
+            acc.into_inner().unwrap(),
+        )))
+    }
+}
+
+fn scalar_op(op: BinOp) -> fn(f32, f32) -> f32 {
+    match op {
+        BinOp::Add => |a, b| a + b,
+        BinOp::Sub => |a, b| a - b,
+        BinOp::Mul => |a, b| a * b,
+        BinOp::Div => |a, b| a / b,
+        BinOp::Gt => |a, b| f32::from(a > b),
+        BinOp::Lt => |a, b| f32::from(a < b),
+        BinOp::Ge => |a, b| f32::from(a >= b),
+        BinOp::Le => |a, b| f32::from(a <= b),
+        BinOp::Eq => |a, b| f32::from(a == b),
+        BinOp::Ne => |a, b| f32::from(a != b),
+        BinOp::And => |a, b| f32::from(a != 0.0 && b != 0.0),
+        BinOp::Or => |a, b| f32::from(a != 0.0 || b != 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::run_script;
+
+    fn vee() -> Vee {
+        Vee::host_default()
+    }
+
+    fn run(src: &str, params: &[(&str, &str)]) -> RunOutput {
+        let params: BTreeMap<String, String> = params
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        run_script(src, &params, &vee()).unwrap()
+    }
+
+    #[test]
+    fn scalar_arithmetic_and_while() {
+        let out = run("x = 1;\nwhile (x < 10) { x = x * 2; }\n", &[]);
+        assert_eq!(out.num("x"), Some(16.0));
+    }
+
+    #[test]
+    fn param_binding_and_seq() {
+        let out = run("n = $n;\ns = seq(1, n);\ntotal = sum(s);", &[("n", "5")]);
+        assert_eq!(out.num("total"), Some(15.0));
+    }
+
+    #[test]
+    fn elementwise_broadcast_row() {
+        let out = run(
+            "X = fill(2.0, 4, 3);\nm = mean(X, 1);\nY = X - m;\ns = sum(Y);",
+            &[],
+        );
+        assert_eq!(out.num("s"), Some(0.0));
+    }
+
+    #[test]
+    fn listing1_runs_and_converges() {
+        let out = run(
+            crate::dsl::LISTING_1_CC,
+            &[("f", "synthetic:amazon?nodes=500&seed=7")],
+        );
+        // connected synthetic graph: all labels = n
+        let c = out.mat("c").unwrap();
+        assert!(c.data.iter().all(|&l| l == 500.0), "not converged");
+        assert_eq!(out.num("diff"), Some(0.0));
+        // the propagate operator was scheduled at least once per iter
+        assert!(out
+            .reports
+            .iter()
+            .any(|(name, _)| name == "rowMaxs(G*t(c))"));
+    }
+
+    #[test]
+    fn listing1_matches_native_app() {
+        use crate::apps::cc;
+        use crate::config::SchedConfig;
+        use crate::topology::Topology;
+        let g = amazon_like(&GraphSpec::small(400, 3)).symmetrize();
+        let native = cc::run_native(
+            &g,
+            &Topology::host(),
+            &SchedConfig::default(),
+            100,
+        );
+        let out = run(
+            crate::dsl::LISTING_1_CC,
+            &[("f", "synthetic:amazon?nodes=400&seed=3")],
+        );
+        let c = out.mat("c").unwrap();
+        assert_eq!(c.data, native.labels);
+    }
+
+    #[test]
+    fn listing2_trains_a_model() {
+        let out = run(
+            crate::dsl::LISTING_2_LINREG,
+            &[("numRows", "2000"), ("numCols", "9")],
+        );
+        let beta = out.mat("beta").unwrap();
+        assert_eq!(beta.rows, 9); // 8 features + intercept
+        assert!(beta.data.iter().all(|b| b.is_finite()));
+        // scheduled operators cover the three passes
+        let names: Vec<&str> =
+            out.reports.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"mean(X,1)"));
+        assert!(names.contains(&"stddev(X,1)"));
+        assert!(names.contains(&"syrk(X)"));
+        assert!(names.contains(&"gemv(X,y)"));
+    }
+
+    #[test]
+    fn listing2_matches_native_app() {
+        use crate::apps::linreg;
+        use crate::config::SchedConfig;
+        use crate::topology::Topology;
+        // identical data: rand(seed = vee.sched.seed) vs generate()
+        let out = run(
+            crate::dsl::LISTING_2_LINREG,
+            &[("numRows", "1500"), ("numCols", "7")],
+        );
+        let spec = linreg::LinregSpec {
+            rows: 1500,
+            cols: 7,
+            lambda: 1e-3,
+            seed: SchedConfig::default().seed,
+        };
+        let (x, y) = linreg::generate(&spec);
+        let native = linreg::run_native(
+            &x,
+            &y,
+            1e-3,
+            &Topology::host(),
+            &SchedConfig::default(),
+        )
+        .unwrap();
+        let beta = out.mat("beta").unwrap();
+        assert_eq!(beta.data.len(), native.beta.len());
+        for (i, (a, b)) in beta.data.iter().zip(&native.beta).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-2 * b.abs().max(1.0),
+                "beta[{i}]: dsl {a} native {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn column_indexing_selects() {
+        let out = run(
+            "XY = rand(10, 4, 0.0, 1.0, 1, 7);\n\
+             X = XY[, seq(0, 2, 1)];\n\
+             y = XY[, seq(3, 3, 1)];\n\
+             nx = ncol(X);\nny = ncol(y);",
+            &[],
+        );
+        assert_eq!(out.num("nx"), Some(3.0));
+        assert_eq!(out.num("ny"), Some(1.0));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let params = BTreeMap::new();
+        assert!(run_script("x = nosuch(1);", &params, &vee()).is_err());
+        assert!(run_script("x = y + 1;", &params, &vee()).is_err());
+        assert!(run_script("x = $missing;", &params, &vee()).is_err());
+        assert!(run_script("x = max(1);", &params, &vee()).is_err());
+    }
+
+    #[test]
+    fn rowmaxs_implicit_zero_floor() {
+        // isolated vertex: empty row -> rowMaxs gives 0, max(0, c) = c
+        let out = run(
+            "G = readMatrix($f);\nc = seq(1, nrow(G));\n\
+             u = max(rowMaxs(G * t(c)), c);\ns = sum(u != c);",
+            &[("f", "synthetic:amazon?nodes=50&seed=1")],
+        );
+        assert!(out.num("s").unwrap() >= 0.0);
+    }
+}

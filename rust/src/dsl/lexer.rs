@@ -1,0 +1,270 @@
+//! DaphneDSL lexer.
+
+/// Tokens of the DaphneDSL subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Token {
+    Ident(String),
+    /// `$name` CLI parameter reference.
+    Param(String),
+    Num(f64),
+    Str(String),
+    /// `while`
+    While,
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Assign,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Gt,
+    Lt,
+    Ge,
+    Le,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+/// Lex a script; `#` starts a line comment.
+pub fn lex(src: &str) -> Result<Vec<Token>, String> {
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += 1,
+            '#' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '(' => {
+                out.push(Token::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Token::RParen);
+                i += 1;
+            }
+            '{' => {
+                out.push(Token::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Token::RBrace);
+                i += 1;
+            }
+            '[' => {
+                out.push(Token::LBracket);
+                i += 1;
+            }
+            ']' => {
+                out.push(Token::RBracket);
+                i += 1;
+            }
+            ',' => {
+                out.push(Token::Comma);
+                i += 1;
+            }
+            ';' => {
+                out.push(Token::Semi);
+                i += 1;
+            }
+            '+' => {
+                out.push(Token::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Token::Minus);
+                i += 1;
+            }
+            '*' => {
+                out.push(Token::Star);
+                i += 1;
+            }
+            '/' => {
+                out.push(Token::Slash);
+                i += 1;
+            }
+            '&' => {
+                // accept & and &&
+                i += if b.get(i + 1) == Some(&'&') { 2 } else { 1 };
+                out.push(Token::And);
+            }
+            '|' => {
+                i += if b.get(i + 1) == Some(&'|') { 2 } else { 1 };
+                out.push(Token::Or);
+            }
+            '=' => {
+                if b.get(i + 1) == Some(&'=') {
+                    out.push(Token::Eq);
+                    i += 2;
+                } else {
+                    out.push(Token::Assign);
+                    i += 1;
+                }
+            }
+            '!' => {
+                if b.get(i + 1) == Some(&'=') {
+                    out.push(Token::Ne);
+                    i += 2;
+                } else {
+                    return Err(format!("lex: stray '!' at char {i}"));
+                }
+            }
+            '>' => {
+                if b.get(i + 1) == Some(&'=') {
+                    out.push(Token::Ge);
+                    i += 2;
+                } else {
+                    out.push(Token::Gt);
+                    i += 1;
+                }
+            }
+            '<' => {
+                if b.get(i + 1) == Some(&'=') {
+                    out.push(Token::Le);
+                    i += 2;
+                } else {
+                    out.push(Token::Lt);
+                    i += 1;
+                }
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != '"' {
+                    j += 1;
+                }
+                if j == b.len() {
+                    return Err("lex: unterminated string".into());
+                }
+                out.push(Token::Str(b[start..j].iter().collect()));
+                i = j + 1;
+            }
+            '$' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                if j == start {
+                    return Err(format!("lex: bare '$' at char {i}"));
+                }
+                out.push(Token::Param(b[start..j].iter().collect()));
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                let mut j = i;
+                while j < b.len()
+                    && (b[j].is_ascii_digit() || b[j] == '.' || b[j] == 'e'
+                        || b[j] == 'E'
+                        || ((b[j] == '+' || b[j] == '-')
+                            && matches!(b[j - 1], 'e' | 'E')))
+                {
+                    j += 1;
+                }
+                let text: String = b[start..j].iter().collect();
+                let n = text
+                    .parse::<f64>()
+                    .map_err(|_| format!("lex: bad number '{text}'"))?;
+                out.push(Token::Num(n));
+                i = j;
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                let mut j = i;
+                // idents may contain '.' (as.si64)
+                while j < b.len()
+                    && (b[j].is_alphanumeric() || b[j] == '_' || b[j] == '.')
+                {
+                    j += 1;
+                }
+                let word: String = b[start..j].iter().collect();
+                out.push(match word.as_str() {
+                    "while" => Token::While,
+                    _ => Token::Ident(word),
+                });
+                i = j;
+            }
+            other => return Err(format!("lex: unexpected '{other}' at {i}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_listing1_shapes() {
+        let toks = lex(crate::dsl::LISTING_1_CC).unwrap();
+        assert!(toks.contains(&Token::While));
+        assert!(toks.contains(&Token::Param("f".into())));
+        assert!(toks.contains(&Token::Ident("rowMaxs".into())));
+        assert!(toks.contains(&Token::Ne));
+        assert!(toks.contains(&Token::And));
+        assert!(toks.contains(&Token::Le));
+    }
+
+    #[test]
+    fn lexes_listing2_shapes() {
+        let toks = lex(crate::dsl::LISTING_2_LINREG).unwrap();
+        assert!(toks.contains(&Token::Ident("as.si64".into())));
+        assert!(toks.contains(&Token::LBracket));
+        assert!(toks.contains(&Token::Param("numCols".into())));
+        assert!(toks.iter().any(|t| matches!(t, Token::Num(n) if *n == 0.001)));
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let toks = lex("# hello\nx = 1; # trailing\n").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::Ident("x".into()),
+                Token::Assign,
+                Token::Num(1.0),
+                Token::Semi
+            ]
+        );
+    }
+
+    #[test]
+    fn operators_disambiguate() {
+        assert_eq!(
+            lex("a != b == c <= d >= e").unwrap(),
+            vec![
+                Token::Ident("a".into()),
+                Token::Ne,
+                Token::Ident("b".into()),
+                Token::Eq,
+                Token::Ident("c".into()),
+                Token::Le,
+                Token::Ident("d".into()),
+                Token::Ge,
+                Token::Ident("e".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(lex("x = @").is_err());
+        assert!(lex("\"unterminated").is_err());
+        assert!(lex("x ! y").is_err());
+        assert!(lex("$ alone").is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Recursive-descent parser for the DaphneDSL subset.
+//!
+//! Grammar (precedence low→high): `|` < `&` < comparisons < `+ -` <
+//! `* /` < unary `-` < postfix (call args, `[ , cols ]` indexing).
+
+use super::ast::{BinOp, Expr, Program, Stmt};
+use super::lexer::Token;
+
+pub fn parse(tokens: &[Token]) -> Result<Program, String> {
+    let mut p = Parser { t: tokens, i: 0 };
+    let mut stmts = Vec::new();
+    while !p.done() {
+        stmts.push(p.stmt()?);
+    }
+    Ok(Program { stmts })
+}
+
+struct Parser<'a> {
+    t: &'a [Token],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn done(&self) -> bool {
+        self.i >= self.t.len()
+    }
+
+    fn peek(&self) -> Option<&Token> {
+        self.t.get(self.i)
+    }
+
+    fn next(&mut self) -> Option<&Token> {
+        let t = self.t.get(self.i);
+        self.i += 1;
+        t
+    }
+
+    fn expect(&mut self, tok: &Token) -> Result<(), String> {
+        match self.next() {
+            Some(t) if t == tok => Ok(()),
+            other => Err(format!("expected {tok:?}, found {other:?}")),
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, String> {
+        match self.peek() {
+            Some(Token::While) => {
+                self.next();
+                self.expect(&Token::LParen)?;
+                let cond = self.expr()?;
+                self.expect(&Token::RParen)?;
+                self.expect(&Token::LBrace)?;
+                let mut body = Vec::new();
+                while self.peek() != Some(&Token::RBrace) {
+                    if self.done() {
+                        return Err("unterminated while body".into());
+                    }
+                    body.push(self.stmt()?);
+                }
+                self.expect(&Token::RBrace)?;
+                Ok(Stmt::While(cond, body))
+            }
+            Some(Token::Ident(name))
+                if self.t.get(self.i + 1) == Some(&Token::Assign) =>
+            {
+                let name = name.clone();
+                self.i += 2;
+                let value = self.expr()?;
+                self.expect(&Token::Semi)?;
+                Ok(Stmt::Assign(name, value))
+            }
+            _ => {
+                let e = self.expr()?;
+                self.expect(&Token::Semi)?;
+                Ok(Stmt::Expr(e))
+            }
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr, String> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.and_expr()?;
+        while self.peek() == Some(&Token::Or) {
+            self.next();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.cmp_expr()?;
+        while self.peek() == Some(&Token::And) {
+            self.next();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, String> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Some(Token::Gt) => BinOp::Gt,
+            Some(Token::Lt) => BinOp::Lt,
+            Some(Token::Ge) => BinOp::Ge,
+            Some(Token::Le) => BinOp::Le,
+            Some(Token::Eq) => BinOp::Eq,
+            Some(Token::Ne) => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.next();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Binary(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Token::Plus) => BinOp::Add,
+                Some(Token::Minus) => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.next();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Token::Star) => BinOp::Mul,
+                Some(Token::Slash) => BinOp::Div,
+                _ => return Ok(lhs),
+            };
+            self.next();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, String> {
+        if self.peek() == Some(&Token::Minus) {
+            self.next();
+            let e = self.unary_expr()?;
+            return Ok(Expr::Neg(Box::new(e)));
+        }
+        self.postfix_expr()
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr, String> {
+        let mut e = self.primary()?;
+        loop {
+            match self.peek() {
+                // call only directly after an identifier
+                Some(Token::LParen) if matches!(e, Expr::Var(_)) => {
+                    let Expr::Var(name) = e else { unreachable!() };
+                    self.next();
+                    let mut args = Vec::new();
+                    if self.peek() != Some(&Token::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            match self.next() {
+                                Some(Token::Comma) => continue,
+                                Some(Token::RParen) => break,
+                                other => {
+                                    return Err(format!(
+                                        "expected ',' or ')' in call to \
+                                         {name}, found {other:?}"
+                                    ))
+                                }
+                            }
+                        }
+                    } else {
+                        self.next();
+                    }
+                    e = Expr::Call(name, args);
+                }
+                // `X[, cols]` column indexing
+                Some(Token::LBracket) => {
+                    self.next();
+                    self.expect(&Token::Comma)?;
+                    let cols = self.expr()?;
+                    self.expect(&Token::RBracket)?;
+                    e = Expr::ColIndex(Box::new(e), Box::new(cols));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr, String> {
+        match self.next() {
+            Some(Token::Num(n)) => Ok(Expr::Num(*n)),
+            Some(Token::Str(s)) => Ok(Expr::Str(s.clone())),
+            Some(Token::Param(p)) => Ok(Expr::Param(p.clone())),
+            Some(Token::Ident(name)) => Ok(Expr::Var(name.clone())),
+            Some(Token::LParen) => {
+                let e = self.expr()?;
+                self.expect(&Token::RParen)?;
+                Ok(e)
+            }
+            other => Err(format!("unexpected token {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::lexer::lex;
+
+    fn parse_src(src: &str) -> Program {
+        parse(&lex(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_assignment_with_precedence() {
+        let p = parse_src("x = 1 + 2 * 3;");
+        let Stmt::Assign(name, Expr::Binary(BinOp::Add, _, rhs)) = &p.stmts[0]
+        else {
+            panic!("{p:?}");
+        };
+        assert_eq!(name, "x");
+        assert!(matches!(**rhs, Expr::Binary(BinOp::Mul, _, _)));
+    }
+
+    #[test]
+    fn parses_while_with_logical_and() {
+        let p = parse_src("while (diff > 0 & iter <= maxi) { iter = iter + 1; }");
+        let Stmt::While(cond, body) = &p.stmts[0] else { panic!() };
+        assert!(matches!(cond, Expr::Binary(BinOp::And, _, _)));
+        assert_eq!(body.len(), 1);
+    }
+
+    #[test]
+    fn parses_column_indexing() {
+        let p = parse_src("X = XY[, seq(0, 3, 1)];");
+        let Stmt::Assign(_, Expr::ColIndex(target, cols)) = &p.stmts[0] else {
+            panic!("{p:?}")
+        };
+        assert!(matches!(**target, Expr::Var(_)));
+        assert!(matches!(**cols, Expr::Call(ref n, _) if n == "seq"));
+    }
+
+    #[test]
+    fn parses_nested_calls_and_params() {
+        let p = parse_src("u = max(rowMaxs(G * t(c)), c);");
+        let Stmt::Assign(_, Expr::Call(name, args)) = &p.stmts[0] else {
+            panic!()
+        };
+        assert_eq!(name, "max");
+        assert_eq!(args.len(), 2);
+        let p = parse_src("G = readMatrix($f);");
+        let Stmt::Assign(_, Expr::Call(_, args)) = &p.stmts[0] else {
+            panic!()
+        };
+        assert!(matches!(args[0], Expr::Param(ref s) if s == "f"));
+    }
+
+    #[test]
+    fn parses_both_listings() {
+        let p1 = parse_src(crate::dsl::LISTING_1_CC);
+        assert!(p1.stmts.len() >= 6);
+        assert!(p1.stmts.iter().any(|s| matches!(s, Stmt::While(_, _))));
+        let p2 = parse_src(crate::dsl::LISTING_2_LINREG);
+        assert_eq!(p2.stmts.len(), 12, "listing 2 has 12 statements");
+    }
+
+    #[test]
+    fn unary_minus_binds_tight() {
+        let p = parse_src("x = rand(3, 3, 0.0, 1.0, 1, -1);");
+        let Stmt::Assign(_, Expr::Call(_, args)) = &p.stmts[0] else {
+            panic!()
+        };
+        assert!(matches!(args[5], Expr::Neg(_)));
+    }
+
+    #[test]
+    fn reports_errors() {
+        assert!(parse(&lex("x = ;").unwrap()).is_err());
+        assert!(parse(&lex("while (1) { x = 1;").unwrap()).is_err());
+        assert!(parse(&lex("f(1, 2").unwrap()).is_err());
+    }
+}

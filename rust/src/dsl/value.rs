@@ -1,0 +1,176 @@
+//! Runtime values of the DaphneDSL subset, with the elementwise /
+//! broadcast semantics the listings rely on.
+
+use std::sync::Arc;
+
+use crate::matrix::{CsrMatrix, DenseMatrix};
+
+/// A DSL value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    /// Dense matrix; `(n,1)` is a column vector, `(1,n)` a row vector.
+    Mat(DenseMatrix),
+    /// Sparse adjacency (from `readMatrix`).
+    Sparse(Arc<CsrMatrix>),
+    /// Lazy `G * t(c)`: the sparse pattern with stored entry `(r, j)`
+    /// valued `scale[j]` — never materialised; consumed by `rowMaxs`.
+    SparseColScaled(Arc<CsrMatrix>, Arc<Vec<f32>>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Mat(_) => "matrix",
+            Value::Sparse(_) => "sparse-matrix",
+            Value::SparseColScaled(..) => "sparse-product",
+        }
+    }
+
+    pub fn as_num(&self) -> Result<f64, String> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            // 1x1 matrices coerce to scalars (DaphneDSL does the same)
+            Value::Mat(m) if m.rows == 1 && m.cols == 1 => {
+                Ok(m.data[0] as f64)
+            }
+            other => Err(format!("expected number, got {}", other.type_name())),
+        }
+    }
+
+    pub fn as_mat(&self) -> Result<&DenseMatrix, String> {
+        match self {
+            Value::Mat(m) => Ok(m),
+            other => Err(format!("expected matrix, got {}", other.type_name())),
+        }
+    }
+
+    pub fn truthy(&self) -> Result<bool, String> {
+        Ok(self.as_num()? != 0.0)
+    }
+}
+
+/// How two dense shapes combine elementwise.
+pub enum Broadcast {
+    /// identical shapes
+    Same,
+    /// rhs is a `(1, d)` row vector broadcast down the rows
+    Row,
+    /// rhs is a `(n, 1)` column vector broadcast across the columns
+    Col,
+    /// rhs is a scalar-like `(1,1)`
+    Scalar,
+}
+
+/// Determine the broadcast mode of `a (op) b`, if compatible.
+pub fn broadcast_mode(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+) -> Result<Broadcast, String> {
+    if b.rows == 1 && b.cols == 1 {
+        Ok(Broadcast::Scalar)
+    } else if a.rows == b.rows && a.cols == b.cols {
+        Ok(Broadcast::Same)
+    } else if b.rows == 1 && b.cols == a.cols {
+        Ok(Broadcast::Row)
+    } else if b.cols == 1 && b.rows == a.rows {
+        Ok(Broadcast::Col)
+    } else {
+        Err(format!(
+            "incompatible shapes {}x{} vs {}x{}",
+            a.rows, a.cols, b.rows, b.cols
+        ))
+    }
+}
+
+/// Apply `f` elementwise over a row range with broadcasting; writes into
+/// `out[range]` (dense op kernel shared by the interpreter's scheduled
+/// and sequential paths).
+pub fn apply_rows(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    mode: &Broadcast,
+    f: impl Fn(f32, f32) -> f32,
+    out: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+) {
+    let d = a.cols;
+    for r in row_start..row_end {
+        let arow = a.row(r);
+        let orow = &mut out[(r - row_start) * d..(r - row_start + 1) * d];
+        match mode {
+            Broadcast::Same => {
+                let brow = b.row(r);
+                for c in 0..d {
+                    orow[c] = f(arow[c], brow[c]);
+                }
+            }
+            Broadcast::Row => {
+                let brow = b.row(0);
+                for c in 0..d {
+                    orow[c] = f(arow[c], brow[c]);
+                }
+            }
+            Broadcast::Col => {
+                let bv = b[(r, 0)];
+                for c in 0..d {
+                    orow[c] = f(arow[c], bv);
+                }
+            }
+            Broadcast::Scalar => {
+                let bv = b.data[0];
+                for c in 0..d {
+                    orow[c] = f(arow[c], bv);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_coercion() {
+        assert_eq!(Value::Num(2.5).as_num().unwrap(), 2.5);
+        let m = DenseMatrix::from_vec(1, 1, vec![7.0]);
+        assert_eq!(Value::Mat(m).as_num().unwrap(), 7.0);
+        assert!(Value::Str("x".into()).as_num().is_err());
+    }
+
+    #[test]
+    fn broadcast_modes() {
+        let a = DenseMatrix::zeros(3, 4);
+        assert!(matches!(
+            broadcast_mode(&a, &DenseMatrix::zeros(3, 4)).unwrap(),
+            Broadcast::Same
+        ));
+        assert!(matches!(
+            broadcast_mode(&a, &DenseMatrix::zeros(1, 4)).unwrap(),
+            Broadcast::Row
+        ));
+        assert!(matches!(
+            broadcast_mode(&a, &DenseMatrix::zeros(3, 1)).unwrap(),
+            Broadcast::Col
+        ));
+        assert!(matches!(
+            broadcast_mode(&a, &DenseMatrix::zeros(1, 1)).unwrap(),
+            Broadcast::Scalar
+        ));
+        assert!(broadcast_mode(&a, &DenseMatrix::zeros(2, 2)).is_err());
+    }
+
+    #[test]
+    fn apply_rows_row_broadcast() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = DenseMatrix::from_vec(1, 2, vec![10., 20.]);
+        let mut out = vec![0f32; 4];
+        apply_rows(&a, &b, &Broadcast::Row, |x, y| x + y, &mut out, 0, 2);
+        assert_eq!(out, vec![11., 22., 13., 24.]);
+    }
+}

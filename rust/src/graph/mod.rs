@@ -1,0 +1,16 @@
+//! Graph substrate for the connected-components workload.
+//!
+//! The paper uses the Stanford SNAP Amazon co-purchase graph (403,394
+//! nodes / 3,387,388 directed edges) scaled up 50×. That dataset is not
+//! redistributable here, so [`generator`] synthesises a co-purchase-like
+//! graph with the same density and heavy-tailed degree distribution
+//! (copying model, per Leskovec et al.'s analysis of the viral-marketing
+//! data), and [`scale`] applies the paper's block scale-up. [`snap`]
+//! reads the real SNAP edge-list format for users who have the file.
+
+pub mod generator;
+pub mod scale;
+pub mod snap;
+
+pub use generator::{amazon_like, GraphSpec};
+pub use scale::scale_up;

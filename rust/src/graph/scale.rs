@@ -1,0 +1,79 @@
+//! The paper's scale-up scheme: replicating the source graph K times
+//! ("A scale-up factor of 50 was applied to the source data set,
+//! resulting in an input matrix with 20,169,700 nodes and 244,340,800
+//! two-directional edges").
+//!
+//! 403,394 × 50 = 20,169,700 nodes and 2 × 50 × ~2.44M... the paper's
+//! two-directional count implies block replication of the symmetrized
+//! pattern along the diagonal: K disjoint copies. Disjoint copies keep
+//! the per-row nnz distribution identical — exactly what matters for
+//! task-cost skew — while multiplying the row count (task count) by K.
+
+use crate::matrix::CsrMatrix;
+
+/// Replicate `g` as `k` diagonal blocks (disjoint copies).
+pub fn scale_up(g: &CsrMatrix, k: usize) -> CsrMatrix {
+    assert!(k >= 1);
+    let n = g.rows;
+    let mut indptr = Vec::with_capacity(n * k + 1);
+    let mut indices = Vec::with_capacity(g.nnz() * k);
+    indptr.push(0usize);
+    for copy in 0..k {
+        let off = (copy * n) as u32;
+        for r in 0..n {
+            for &c in g.row(r) {
+                indices.push(c + off);
+            }
+            indptr.push(indices.len());
+        }
+    }
+    CsrMatrix { rows: n * k, cols: g.cols * k, indptr, indices, vals: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{amazon_like, GraphSpec};
+
+    #[test]
+    fn scale_one_is_identity() {
+        let g = amazon_like(&GraphSpec::small(200, 1));
+        let s = scale_up(&g, 1);
+        assert_eq!(g.rows, s.rows);
+        assert_eq!(g.indices, s.indices);
+    }
+
+    #[test]
+    fn scale_multiplies_counts() {
+        let g = amazon_like(&GraphSpec::small(300, 2));
+        let s = scale_up(&g, 5);
+        assert_eq!(s.rows, 1500);
+        assert_eq!(s.nnz(), 5 * g.nnz());
+    }
+
+    #[test]
+    fn copies_are_disjoint_blocks() {
+        let g = amazon_like(&GraphSpec::small(100, 3));
+        let s = scale_up(&g, 3);
+        for copy in 0..3u32 {
+            for r in 0..100usize {
+                let sr = s.row(copy as usize * 100 + r);
+                let gr = g.row(r);
+                assert_eq!(sr.len(), gr.len());
+                for (a, b) in sr.iter().zip(gr) {
+                    assert_eq!(*a, b + copy * 100);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_cost_distribution_preserved() {
+        let g = amazon_like(&GraphSpec::small(400, 4));
+        let s = scale_up(&g, 4);
+        let gc = g.row_costs();
+        let sc = s.row_costs();
+        assert_eq!(&sc[..400], &gc[..]);
+        assert_eq!(&sc[1200..], &gc[..]);
+    }
+}

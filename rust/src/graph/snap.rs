@@ -1,0 +1,117 @@
+//! SNAP edge-list IO: read the real Amazon co-purchase files
+//! (`amazon0601.txt`-style: `#` comments, one `src\tdst` pair per line)
+//! when available, and write the same format for interchange.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::matrix::CsrMatrix;
+
+/// Read a SNAP-format edge list into CSR. Node ids are compacted to a
+/// dense `0..n` range (SNAP files may skip ids).
+pub fn read_edge_list(path: &Path) -> std::io::Result<CsrMatrix> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut raw_edges: Vec<(u32, u32)> = Vec::new();
+    let mut max_id = 0u32;
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            continue;
+        };
+        let (Ok(a), Ok(b)) = (a.parse::<u32>(), b.parse::<u32>()) else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad edge line: {line}"),
+            ));
+        };
+        max_id = max_id.max(a).max(b);
+        raw_edges.push((a, b));
+    }
+    // compact ids
+    let mut present = vec![false; max_id as usize + 1];
+    for &(a, b) in &raw_edges {
+        present[a as usize] = true;
+        present[b as usize] = true;
+    }
+    let mut remap = vec![u32::MAX; max_id as usize + 1];
+    let mut next = 0u32;
+    for (id, &p) in present.iter().enumerate() {
+        if p {
+            remap[id] = next;
+            next += 1;
+        }
+    }
+    let edges: Vec<(u32, u32)> = raw_edges
+        .into_iter()
+        .map(|(a, b)| (remap[a as usize], remap[b as usize]))
+        .collect();
+    Ok(CsrMatrix::from_edges(next as usize, next as usize, &edges))
+}
+
+/// Write a CSR pattern as a SNAP-format edge list.
+pub fn write_edge_list(g: &CsrMatrix, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# Directed graph: {} nodes {} edges", g.rows, g.nnz())?;
+    writeln!(w, "# FromNodeId\tToNodeId")?;
+    for r in 0..g.rows {
+        for &c in g.row(r) {
+            writeln!(w, "{r}\t{c}")?;
+        }
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{amazon_like, GraphSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("daphne_sched_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_graph() {
+        let g = amazon_like(&GraphSpec::small(300, 9));
+        let path = tmp("roundtrip.txt");
+        write_edge_list(&g, &path).unwrap();
+        let h = read_edge_list(&path).unwrap();
+        assert_eq!(g.rows, h.rows);
+        assert_eq!(g.indices, h.indices);
+        assert_eq!(g.indptr, h.indptr);
+    }
+
+    #[test]
+    fn reads_snap_header_and_sparse_ids() {
+        let path = tmp("snap_style.txt");
+        std::fs::write(
+            &path,
+            "# Amazon style\n# FromNodeId\tToNodeId\n10\t20\n20\t40\n40\t10\n",
+        )
+        .unwrap();
+        let g = read_edge_list(&path).unwrap();
+        assert_eq!(g.rows, 3, "ids must be compacted");
+        assert_eq!(g.nnz(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage_lines() {
+        let path = tmp("bad.txt");
+        std::fs::write(&path, "1\tnotanumber\n").unwrap();
+        assert!(read_edge_list(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(read_edge_list(Path::new("/nonexistent/xyz.txt")).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! # daphne-sched
+//!
+//! Reproduction of **DaphneSched: A Scheduler for Integrated Data Analysis
+//! Pipelines** (Eleliemy & Ciorba, 2023) as a three-layer rust + JAX +
+//! Pallas stack.
+//!
+//! The crate provides:
+//!
+//! - [`sched`] — the paper's contribution: a task-based scheduler with
+//!   eleven task-partitioning schemes, three queue layouts, and four
+//!   victim-selection strategies for work-stealing.
+//! - [`sim`] — a discrete-event simulator that drives the *same* scheduler
+//!   components in virtual time over a machine-topology model; this is how
+//!   the paper's 20-core Broadwell and 56-core Cascade Lake experiments
+//!   are reproduced on arbitrary hosts.
+//! - [`matrix`], [`graph`] — the data substrates (dense / CSR matrices,
+//!   synthetic Amazon-like co-purchase graphs).
+//! - [`vee`] — the vectorized execution engine that turns (data, operator)
+//!   into tasks, mirroring the DAPHNE runtime.
+//! - [`dsl`] — a DaphneDSL-subset interpreter able to run the paper's
+//!   Listings 1 and 2 verbatim.
+//! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas HLO
+//!   artifacts (`artifacts/*.hlo.txt`); Python never runs at runtime.
+//! - [`coordinator`] — the Fig. 5 distributed-memory extension
+//!   (leader/worker over TCP).
+//! - [`apps`] — the two evaluated IDA pipelines: connected components
+//!   (Listing 1) and linear-regression training (Listing 2).
+
+pub mod apps;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod dsl;
+pub mod graph;
+pub mod matrix;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod vee;

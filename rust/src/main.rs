@@ -1,0 +1,368 @@
+//! `daphne-sched` — CLI launcher for the DaphneSched reproduction.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! run        run an app natively on this host      (cc | linreg)
+//! dsl        run a DaphneDSL script file
+//! figure     regenerate a paper figure on a modelled machine (DES)
+//! ablation   §4/§5 ablations (ss | atomic)
+//! calibrate  measure the DES cost-model constants on this host
+//! worker     start a distributed worker daemon (Fig. 5)
+//! leader     drive distributed CC against worker daemons (Fig. 5)
+//! ```
+//!
+//! Options are `key=value` pairs (see `config::RunConfig::set`):
+//! `scheme=`, `layout=`, `victim=`, `machine=`, `seed=`, plus app
+//! parameters like `nodes=`, `scale=`, `rows=`, `cols=`.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::process::ExitCode;
+
+use daphne_sched::apps::{cc, linreg};
+use daphne_sched::bench::{figures, AppCosts, FigureId, FigureParams};
+use daphne_sched::config::RunConfig;
+use daphne_sched::coordinator::{worker as coord_worker, Leader};
+use daphne_sched::dsl;
+use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
+use daphne_sched::runtime::DeviceService;
+use daphne_sched::sim::calibrate;
+use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "usage: daphne-sched <run|dsl|figure|ablation|calibrate|tune|worker|leader> \
+     [args] [key=value ...]\n\
+     examples:\n\
+     \x20 daphne-sched run cc nodes=50000 scheme=mfsc layout=percore victim=seqpri\n\
+     \x20 daphne-sched run linreg rows=100000 cols=65 scheme=static\n\
+     \x20 daphne-sched dsl script.daph f=synthetic:amazon?nodes=10000\n\
+     \x20 daphne-sched figure 7a [nodes=403394 scale=1 measure=1]\n\
+     \x20 daphne-sched ablation ss\n\
+     \x20 daphne-sched worker 127.0.0.1:7701\n\
+     \x20 daphne-sched leader cc 127.0.0.1:7701,127.0.0.1:7702 nodes=10000"
+        .to_string()
+}
+
+fn parse_pairs(rest: &[String]) -> Result<RunConfig, String> {
+    RunConfig::from_pairs(rest.iter().map(|s| s.as_str()))
+        .map_err(|e| e.to_string())
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        return Err(usage());
+    };
+    match cmd.as_str() {
+        "run" => cmd_run(&args[1..]),
+        "dsl" => cmd_dsl(&args[1..]),
+        "figure" => cmd_figure(&args[1..]),
+        "ablation" => cmd_ablation(&args[1..]),
+        "calibrate" => cmd_calibrate(),
+        "tune" => cmd_tune(&args[1..]),
+        "worker" => cmd_worker(&args[1..]),
+        "leader" => cmd_leader(&args[1..]),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n{}", usage())),
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let Some(app) = args.first() else {
+        return Err("run: expected app (cc | linreg)".into());
+    };
+    let cfg = parse_pairs(&args[1..])?;
+    // `run` executes natively on this host; `machine=` presets are for
+    // `figure` (DES). Still allowed here for thread-count experiments.
+    let topo = cfg.topology.clone();
+    match app.as_str() {
+        "cc" => {
+            let nodes = cfg.param_usize("nodes", 50_000);
+            let scale = cfg.param_usize("scale", 1);
+            let g = amazon_like(&GraphSpec::small(nodes, cfg.sched.seed))
+                .symmetrize();
+            let g = if scale > 1 { scale_up(&g, scale) } else { g };
+            println!(
+                "cc: {} nodes, {} edges ({:.4}% dense), machine={} [{} cores]",
+                g.rows,
+                g.nnz(),
+                g.density() * 100.0,
+                topo.name,
+                topo.n_cores()
+            );
+            let use_pjrt = cfg.param_usize("pjrt", 0) == 1;
+            let result = if use_pjrt {
+                let (service, client) = DeviceService::start_default()
+                    .map_err(|e| format!("{e:#}"))?;
+                println!("pjrt platform: {}", service.platform);
+                cc::run_pjrt(&g, &client, &service.manifest, &topo, &cfg.sched, 100)
+                    .map_err(|e| format!("{e:#}"))?
+            } else {
+                cc::run_native(&g, &topo, &cfg.sched, 100)
+            };
+            println!(
+                "converged in {} iterations, {} components, scheduled time {:.4}s",
+                result.iterations,
+                result.components,
+                result.total_time()
+            );
+            for (i, r) in result.reports.iter().enumerate().take(3) {
+                println!("  iter {i}: {}", r.row());
+            }
+            Ok(())
+        }
+        "linreg" => {
+            let spec = linreg::LinregSpec {
+                rows: cfg.param_usize("rows", 100_000),
+                cols: cfg.param_usize("cols", 65),
+                lambda: cfg.param_f64("lambda", 1e-3) as f32,
+                seed: cfg.sched.seed,
+            };
+            let (x, y) = linreg::generate(&spec);
+            println!(
+                "linreg: {}x{} design matrix, machine={} [{} cores]",
+                x.rows,
+                x.cols,
+                topo.name,
+                topo.n_cores()
+            );
+            let result = linreg::run_native(&x, &y, spec.lambda, &topo, &cfg.sched)?;
+            println!(
+                "beta[0..4] = {:?}, rmse = {:.4}",
+                &result.beta[..result.beta.len().min(4)],
+                linreg::rmse(&x, &y, &result.beta)
+            );
+            for (name, r) in &result.report.stages {
+                println!("  {name}: {}", r.row());
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown app '{other}'")),
+    }
+}
+
+fn cmd_dsl(args: &[String]) -> Result<(), String> {
+    let Some(path) = args.first() else {
+        return Err("dsl: expected script path".into());
+    };
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {path}: {e}"))?;
+    let cfg = parse_pairs(&args[1..])?;
+    let params: BTreeMap<String, String> = cfg.params.clone();
+    let vee = Vee::new(cfg.topology.clone(), cfg.sched.clone());
+    let out = dsl::run_script(&src, &params, &vee)?;
+    println!(
+        "script ok; {} scheduled operators, total scheduled time {:.4}s",
+        out.reports.len(),
+        out.scheduled_time()
+    );
+    for (name, value) in &out.vars {
+        match value {
+            dsl::Value::Num(n) => println!("  {name} = {n}"),
+            dsl::Value::Mat(m) => {
+                println!("  {name} = matrix {}x{}", m.rows, m.cols)
+            }
+            dsl::Value::Sparse(g) => {
+                println!("  {name} = sparse {}x{} ({} nnz)", g.rows, g.cols, g.nnz())
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn figure_params(cfg: &RunConfig) -> FigureParams {
+    let mut p = FigureParams {
+        nodes: cfg.param_usize("nodes", 403_394),
+        scale: cfg.param_usize("scale", 1),
+        seed: cfg.sched.seed,
+        iterations: cfg.params.get("iterations").and_then(|v| v.parse().ok()),
+        lr_rows: cfg.param_usize("lr_rows", 2_000_000),
+        ..FigureParams::default()
+    };
+    if cfg.param_usize("measure", 0) == 1 {
+        println!("calibrating cost model on this host...");
+        p.costs = calibrate::measure();
+        p.app_costs = AppCosts::measure();
+        println!("  {:?}", p.costs);
+        println!("  {:?}", p.app_costs);
+    }
+    p
+}
+
+fn cmd_figure(args: &[String]) -> Result<(), String> {
+    let Some(which) = args.first() else {
+        return Err("figure: expected id (7a 7b 8a 8b 9a 9b 10a 10b | all)".into());
+    };
+    let cfg = parse_pairs(&args[1..])?;
+    let params = figure_params(&cfg);
+    if which == "all" {
+        for id in FigureId::ALL {
+            figures::print_figure(id, &params);
+        }
+        return Ok(());
+    }
+    let id = FigureId::parse(which)
+        .ok_or_else(|| format!("unknown figure '{which}'"))?;
+    figures::print_figure(id, &params);
+    Ok(())
+}
+
+fn cmd_ablation(args: &[String]) -> Result<(), String> {
+    let Some(which) = args.first() else {
+        return Err("ablation: expected (ss | atomic)".into());
+    };
+    let cfg = parse_pairs(&args[1..])?;
+    let params = figure_params(&cfg);
+    match which.as_str() {
+        "ss" => {
+            println!("== SS central-queue explosion (why Figs 7-10 omit SS) ==");
+            for (machine, t_ss, t_mfsc) in figures::ablation_ss(&params) {
+                println!(
+                    "  {machine}: SS={t_ss:.3}s MFSC={t_mfsc:.3}s ({:.1}x worse)",
+                    t_ss / t_mfsc
+                );
+            }
+            Ok(())
+        }
+        "atomic" => {
+            println!("== locked vs atomic central queue (§5 future work) ==");
+            for machine in [Topology::broadwell20(), Topology::cascadelake56()] {
+                println!("  {}:", machine.name);
+                for (scheme, locked, atomic) in
+                    figures::ablation_lock_vs_atomic(&machine, &params)
+                {
+                    println!(
+                        "    {scheme:<6} locked={locked:>9.3}s atomic={atomic:>9.3}s \
+                         speedup={:.2}x",
+                        locked / atomic
+                    );
+                }
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown ablation '{other}'")),
+    }
+}
+
+fn cmd_calibrate() -> Result<(), String> {
+    println!("measuring scheduler primitives on this host...");
+    let m = calibrate::measure();
+    println!("  queue_access  = {:.1} ns (locked pull incl. getNextChunk)", m.queue_access * 1e9);
+    println!("  atomic_access = {:.1} ns (fetch_add pull)", m.atomic_access * 1e9);
+    let (per_row, per_nnz) = daphne_sched::bench::calibration::measure_cc();
+    println!("  cc_per_row    = {:.2} ns", per_row * 1e9);
+    println!("  cc_per_nnz    = {:.2} ns", per_nnz * 1e9);
+    let lr = daphne_sched::bench::calibration::measure_lr(64);
+    println!("  lr_per_row    = {:.1} ns (d=64)", lr * 1e9);
+    Ok(())
+}
+
+/// §5 future work: automatic selection of the scheduling configuration
+/// for a workload/machine pair, using the DES as an offline oracle.
+fn cmd_tune(args: &[String]) -> Result<(), String> {
+    use daphne_sched::apps::cc;
+    use daphne_sched::bench::AppCosts;
+    use daphne_sched::sched::autotune;
+    use daphne_sched::sim::CostModel;
+
+    let cfg = parse_pairs(args)?;
+    let nodes = cfg.param_usize("nodes", 100_000);
+    let g = amazon_like(&GraphSpec::small(nodes, cfg.sched.seed)).symmetrize();
+    let app = AppCosts::recorded();
+    let workload = cc::workload(&g, app.cc_per_row, app.cc_per_nnz);
+    let machine = cfg.topology.clone();
+    println!(
+        "tuning cc ({} nodes) on {} ({} cores)...",
+        g.rows,
+        machine.name,
+        machine.n_cores()
+    );
+    let ranked = autotune::tune(
+        &workload,
+        &machine,
+        &CostModel::daphne_like(),
+        &autotune::SearchSpace::default(),
+        cfg.sched.seed,
+        3,
+    );
+    println!("top 5 of {} candidates:", ranked.len());
+    for c in ranked.iter().take(5) {
+        println!(
+            "  {:<7} {:<14} {:<7} predicted {:.4}s",
+            c.config.scheme.name(),
+            c.config.layout.name(),
+            c.config.victim.name(),
+            c.predicted
+        );
+    }
+    let worst = ranked.last().unwrap();
+    println!(
+        "worst: {} {} {} predicted {:.4}s",
+        worst.config.scheme.name(),
+        worst.config.layout.name(),
+        worst.config.victim.name(),
+        worst.predicted
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> Result<(), String> {
+    let Some(addr) = args.first() else {
+        return Err("worker: expected listen address".into());
+    };
+    let cfg = parse_pairs(&args[1..])?;
+    let listener =
+        TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    println!(
+        "worker listening on {addr} ({} cores, scheme {})",
+        cfg.topology.n_cores(),
+        cfg.sched.scheme.name()
+    );
+    let vee = Vee::new(cfg.topology, cfg.sched);
+    coord_worker::serve(listener, vee, None).map_err(|e| e.to_string())
+}
+
+fn cmd_leader(args: &[String]) -> Result<(), String> {
+    let (Some(app), Some(addrs)) = (args.first(), args.get(1)) else {
+        return Err("leader: expected app and comma-separated worker addrs".into());
+    };
+    if app != "cc" {
+        return Err("leader currently drives the cc app".into());
+    }
+    let cfg = parse_pairs(&args[2..])?;
+    let addr_list: Vec<&str> = addrs.split(',').collect();
+    let nodes = cfg.param_usize("nodes", 10_000);
+    let g = amazon_like(&GraphSpec::small(nodes, cfg.sched.seed)).symmetrize();
+    println!("leader: {} workers, graph {} nodes / {} edges", addr_list.len(), g.rows, g.nnz());
+    let mut leader = Leader::connect(&addr_list).map_err(|e| e.to_string())?;
+    let result = leader.cc_distributed(&g, 100).map_err(|e| e.to_string())?;
+    leader.shutdown().map_err(|e| e.to_string())?;
+    let components = result
+        .labels
+        .iter()
+        .enumerate()
+        .filter(|(i, &l)| l == (*i as f32) + 1.0)
+        .count();
+    println!(
+        "distributed cc: {} iterations, {components} components, critical-path \
+         scheduled time {:.4}s",
+        result.iterations, result.scheduled_time
+    );
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Compressed-sparse-row matrix — the substrate for the connected-
+//! components workload (the Amazon co-purchase graph is ~0.002% dense,
+//! so the adjacency matrix only ever materialises as CSR).
+
+use super::dense::DenseMatrix;
+
+/// CSR matrix with unit values elided (an adjacency structure): only the
+/// pattern matters for `G * t(c)` when G is 0/1, which is all the CC
+/// pipeline needs. `vals` is optional for weighted uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer array, `rows + 1` entries.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Optional explicit values (None = all ones).
+    pub vals: Option<Vec<f32>>,
+}
+
+impl CsrMatrix {
+    /// Build from an edge list (unsorted, may contain duplicates).
+    pub fn from_edges(rows: usize, cols: usize, edges: &[(u32, u32)]) -> Self {
+        let mut counts = vec![0usize; rows + 1];
+        for &(r, _) in edges {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; edges.len()];
+        let mut fill = counts.clone();
+        for &(r, c) in edges {
+            indices[fill[r as usize]] = c;
+            fill[r as usize] += 1;
+        }
+        // sort + dedup within rows
+        let mut indptr = vec![0usize; rows + 1];
+        let mut out = Vec::with_capacity(indices.len());
+        for r in 0..rows {
+            let seg = &mut indices[counts[r]..counts[r + 1]];
+            seg.sort_unstable();
+            let before = out.len();
+            let mut last = u32::MAX;
+            for &c in seg.iter() {
+                if c != last {
+                    out.push(c);
+                    last = c;
+                }
+            }
+            indptr[r + 1] = indptr[r] + (out.len() - before);
+        }
+        CsrMatrix { rows, cols, indptr, indices: out, vals: None }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Density in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Number of non-zeros in row `r` — the task-cost driver for CC.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Per-row nnz as f64 (cost-model input).
+    pub fn row_costs(&self) -> Vec<f64> {
+        (0..self.rows).map(|r| self.row_nnz(r) as f64).collect()
+    }
+
+    /// Densify a row/column window into `[rows, cols]` f32 (the PJRT CC
+    /// path feeds dense tiles to the `cc_propagate` artifact).
+    pub fn densify_window(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        col_start: usize,
+        col_end: usize,
+    ) -> DenseMatrix {
+        let (r0, r1) = (row_start, row_end.min(self.rows));
+        let (c0, c1) = (col_start, col_end.min(self.cols));
+        let mut out = DenseMatrix::zeros(row_end - row_start, col_end - col_start);
+        for r in r0..r1 {
+            let row = out.row_mut(r - r0);
+            for (k, &c) in self.row(r).iter().enumerate() {
+                let c = c as usize;
+                if c >= c0 && c < c1 {
+                    let v = self
+                        .vals
+                        .as_ref()
+                        .map(|v| v[self.indptr[r] + k])
+                        .unwrap_or(1.0);
+                    row[c - c0] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Make the pattern symmetric (the CC algorithm expects an
+    /// undirected graph; the SNAP data is directed co-purchase edges).
+    pub fn symmetrize(&self) -> CsrMatrix {
+        let mut edges = Vec::with_capacity(self.nnz() * 2);
+        for r in 0..self.rows {
+            for &c in self.row(r) {
+                edges.push((r as u32, c));
+                edges.push((c, r as u32));
+            }
+        }
+        CsrMatrix::from_edges(
+            self.rows.max(self.cols),
+            self.rows.max(self.cols),
+            &edges,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn small() -> CsrMatrix {
+        // 0 -> {1, 2}, 1 -> {2}, 2 -> {}, 3 -> {0}
+        CsrMatrix::from_edges(4, 4, &[(0, 2), (0, 1), (1, 2), (3, 0)])
+    }
+
+    #[test]
+    fn from_edges_sorts_and_counts() {
+        let m = small();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0), &[1, 2]);
+        assert_eq!(m.row(1), &[2]);
+        assert_eq!(m.row(2), &[] as &[u32]);
+        assert_eq!(m.row(3), &[0]);
+        assert_eq!(m.row_nnz(0), 2);
+    }
+
+    #[test]
+    fn duplicate_edges_are_deduped() {
+        let m = CsrMatrix::from_edges(2, 2, &[(0, 1), (0, 1), (0, 1)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(0), &[1]);
+    }
+
+    #[test]
+    fn density_of_small() {
+        assert!((small().density() - 4.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn densify_window_places_entries() {
+        let m = small();
+        let d = m.densify_window(0, 2, 1, 3);
+        // rows 0..2, cols 1..3: row0 has cols {1,2} -> [1,1]; row1 {2} -> [0,1]
+        assert_eq!(d.row(0), &[1.0, 1.0]);
+        assert_eq!(d.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn densify_window_pads_beyond_bounds() {
+        let m = small();
+        let d = m.densify_window(3, 6, 0, 8);
+        assert_eq!(d.rows, 3);
+        assert_eq!(d.cols, 8);
+        assert_eq!(d.row(0)[0], 1.0); // edge 3->0
+        assert!(d.row(1).iter().all(|&x| x == 0.0)); // padded row
+        assert!(d.row(2).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn symmetrize_adds_reverse_edges() {
+        let m = small().symmetrize();
+        assert!(m.row(2).contains(&0)); // reverse of 0->2
+        assert!(m.row(0).contains(&3)); // reverse of 3->0
+        // symmetric: nnz counts both directions exactly once each
+        for r in 0..m.rows {
+            for &c in m.row(r) {
+                assert!(m.row(c as usize).contains(&(r as u32)), "{r}->{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_from_edges_preserves_edge_set() {
+        prop::check("csr edge set preserved", 50, |rng: &mut Rng| {
+            let rows = rng.range(1, 50) as usize;
+            let cols = rng.range(1, 50) as usize;
+            let n_edges = rng.range(0, 200) as usize;
+            let edges: Vec<(u32, u32)> = (0..n_edges)
+                .map(|_| {
+                    (rng.below(rows as u64) as u32, rng.below(cols as u64) as u32)
+                })
+                .collect();
+            let m = CsrMatrix::from_edges(rows, cols, &edges);
+            // every input edge present
+            for &(r, c) in &edges {
+                prop::ensure(
+                    m.row(r as usize).contains(&c),
+                    format!("missing edge {r}->{c}"),
+                )?;
+            }
+            // rows sorted and unique
+            for r in 0..rows {
+                let row = m.row(r);
+                prop::ensure(
+                    row.windows(2).all(|w| w[0] < w[1]),
+                    format!("row {r} not sorted-unique: {row:?}"),
+                )?;
+            }
+            // indptr consistent
+            prop::ensure(
+                m.indptr[rows] == m.nnz(),
+                "indptr tail != nnz".to_string(),
+            )
+        });
+    }
+}

@@ -1,0 +1,194 @@
+//! Row-major dense f32 matrix (the DAPHNE `DenseMatrix<double>` analog;
+//! f32 to match the PJRT artifacts).
+
+use crate::util::Rng;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// DaphneDSL `rand(rows, cols, lo, hi, sparsity?, seed)`.
+    pub fn rand(rows: usize, cols: usize, lo: f32, hi: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| lo + (hi - lo) * rng.next_f64() as f32)
+            .collect();
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// DaphneDSL `fill(value, rows, cols)`.
+    pub fn fill(value: f32, rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// DaphneDSL `seq(a, b)` as a column vector (inclusive bounds).
+    pub fn seq(a: i64, b: i64) -> Self {
+        let data: Vec<f32> = (a..=b).map(|v| v as f32).collect();
+        DenseMatrix { rows: data.len(), cols: 1, data }
+    }
+
+    /// Identity-diagonal matrix from a column vector (DaphneDSL
+    /// `diagMatrix`).
+    pub fn diag(v: &DenseMatrix) -> Self {
+        assert_eq!(v.cols, 1, "diagMatrix expects a column vector");
+        let n = v.rows;
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = v[(i, 0)];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column slice (copies).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Select a half-open column range into a new matrix (DaphneDSL
+    /// `X[, a:b]` right-indexing).
+    pub fn cols_range(&self, start: usize, end: usize) -> DenseMatrix {
+        assert!(start <= end && end <= self.cols);
+        let mut out = DenseMatrix::zeros(self.rows, end - start);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[start..end]);
+        }
+        out
+    }
+
+    /// Select a half-open row range (zero-copy would need lifetimes the
+    /// VEE does not require; tasks slice rows themselves).
+    pub fn rows_range(&self, start: usize, end: usize) -> DenseMatrix {
+        assert!(start <= end && end <= self.rows);
+        DenseMatrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Horizontal concatenation (DaphneDSL `cbind`).
+    pub fn cbind(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.rows, other.rows, "cbind row mismatch");
+        let mut out = DenseMatrix::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Frobenius-norm distance (test helper).
+    pub fn dist(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMatrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMatrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_round_trips() {
+        let mut m = DenseMatrix::zeros(3, 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+    }
+
+    #[test]
+    fn rand_respects_bounds_and_seed() {
+        let a = DenseMatrix::rand(10, 10, -1.0, 1.0, 7);
+        let b = DenseMatrix::rand(10, 10, -1.0, 1.0, 7);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn seq_matches_daphnedsl() {
+        let s = DenseMatrix::seq(1, 5);
+        assert_eq!(s.rows, 5);
+        assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn cbind_and_ranges() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::fill(9.0, 2, 1);
+        let c = a.cbind(&b);
+        assert_eq!(c.cols, 3);
+        assert_eq!(c.row(0), &[1.0, 2.0, 9.0]);
+        assert_eq!(c.cols_range(2, 3).data, vec![9.0, 9.0]);
+        assert_eq!(c.rows_range(1, 2).row(0), &[3.0, 4.0, 9.0]);
+    }
+
+    #[test]
+    fn diag_and_transpose() {
+        let v = DenseMatrix::from_vec(2, 1, vec![2.0, 3.0]);
+        let d = DenseMatrix::diag(&v);
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(1, 1)], 3.0);
+        assert_eq!(d[(0, 1)], 0.0);
+
+        let m = DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(2, 1)], 6.0);
+    }
+}

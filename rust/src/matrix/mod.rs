@@ -1,0 +1,9 @@
+//! Matrix substrate: DAPHNE's dense and sparse (CSR) matrix data
+//! structures, the pillars every task carries data in.
+
+pub mod csr;
+pub mod dense;
+pub mod ops;
+
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;

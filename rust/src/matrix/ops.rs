@@ -1,0 +1,296 @@
+//! Native CPU kernels over the matrix substrate — the DAPHNE runtime's
+//! built-in operators. These are the reference implementations the VEE
+//! uses on the host path (and against which the PJRT-artifact path is
+//! validated in `rust/tests/`).
+
+use super::csr::CsrMatrix;
+use super::dense::DenseMatrix;
+
+/// `u[r] = max(max_{c in row r} ids[c], ids_row[r])` over a row range of
+/// a sparse adjacency — the CC inner step (Listing 1 line 13) on CSR.
+/// This is the native hot kernel; per-row cost is `row_nnz(r)`.
+pub fn cc_propagate_rows(
+    g: &CsrMatrix,
+    ids: &[f32],
+    out: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+) {
+    for r in row_start..row_end {
+        let mut m = ids[r];
+        for &c in g.row(r) {
+            let v = ids[c as usize];
+            if v > m {
+                m = v;
+            }
+        }
+        out[r] = m;
+    }
+}
+
+/// Column sums and sums of squares over a row range (LR lines 8-9).
+pub fn colstats_rows(
+    x: &DenseMatrix,
+    sum: &mut [f32],
+    sumsq: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+) {
+    for r in row_start..row_end {
+        for (c, &v) in x.row(r).iter().enumerate() {
+            sum[c] += v;
+            sumsq[c] += v * v;
+        }
+    }
+}
+
+/// Standardize a row range in place (LR line 10).
+pub fn standardize_rows(
+    x: &mut DenseMatrix,
+    mean: &[f32],
+    std: &[f32],
+    row_start: usize,
+    row_end: usize,
+) {
+    for r in row_start..row_end {
+        for (c, v) in x.row_mut(r).iter_mut().enumerate() {
+            *v = (*v - mean[c]) / std[c];
+        }
+    }
+}
+
+/// `A += X[rows]^T X[rows]` over a row range (LR line 12). `a` is a
+/// `cols x cols` row-major accumulator owned by the caller (per-task
+/// partials are reduced by the VEE).
+pub fn syrk_rows(
+    x: &DenseMatrix,
+    a: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+) {
+    let d = x.cols;
+    debug_assert_eq!(a.len(), d * d);
+    for r in row_start..row_end {
+        let row = x.row(r);
+        for i in 0..d {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let arow = &mut a[i * d..(i + 1) * d];
+            for (j, &xj) in row.iter().enumerate() {
+                arow[j] += xi * xj;
+            }
+        }
+    }
+}
+
+/// `b += X[rows]^T y[rows]` over a row range (LR line 15).
+pub fn gemv_rows(
+    x: &DenseMatrix,
+    y: &[f32],
+    b: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+) {
+    debug_assert_eq!(b.len(), x.cols);
+    for r in row_start..row_end {
+        let yr = y[r];
+        for (c, &v) in x.row(r).iter().enumerate() {
+            b[c] += v * yr;
+        }
+    }
+}
+
+/// Dense Cholesky solve of `A x = b` for SPD `A` (LR line 16,
+/// `solve(A, b)`). DAPHNE maps `solve` to LAPACK; here it is native —
+/// A = XᵀX + λI is SPD by construction. f64 internally for stability.
+pub fn cholesky_solve(a: &DenseMatrix, b: &[f32]) -> Result<Vec<f32>, String> {
+    let n = a.rows;
+    if a.cols != n || b.len() != n {
+        return Err(format!(
+            "solve: shape mismatch A={}x{}, b={}",
+            a.rows,
+            a.cols,
+            b.len()
+        ));
+    }
+    // factor A = L L^T
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("solve: not SPD at pivot {i} ({s})"));
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    // forward substitution L z = b
+    let mut z = vec![0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    // back substitution L^T x = z
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Ok(x.into_iter().map(|v| v as f32).collect())
+}
+
+/// Dense mat-vec `A v` (used by the DSL interpreter).
+pub fn matvec(a: &DenseMatrix, v: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, v.len());
+    (0..a.rows)
+        .map(|r| a.row(r).iter().zip(v).map(|(x, y)| x * y).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn cc_propagate_matches_bruteforce() {
+        let g = CsrMatrix::from_edges(4, 4, &[(0, 1), (1, 3), (2, 0), (3, 3)]);
+        let ids = [1.0, 5.0, 2.0, 9.0];
+        let mut out = [0.0; 4];
+        cc_propagate_rows(&g, &ids, &mut out, 0, 4);
+        // row0: max(ids[1], own 1) = 5; row1: max(ids[3], 5) = 9;
+        // row2: max(ids[0], 2) = 2; row3: max(ids[3], 9) = 9
+        assert_eq!(out, [5.0, 9.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn cc_propagate_partial_rows_only() {
+        let g = CsrMatrix::from_edges(3, 3, &[(0, 2), (1, 2)]);
+        let ids = [1.0, 1.0, 7.0];
+        let mut out = [0.0; 3];
+        cc_propagate_rows(&g, &ids, &mut out, 1, 2);
+        assert_eq!(out, [0.0, 7.0, 0.0]); // only row 1 written
+    }
+
+    #[test]
+    fn colstats_accumulates() {
+        let x = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut s = [0.0; 2];
+        let mut sq = [0.0; 2];
+        colstats_rows(&x, &mut s, &mut sq, 0, 2);
+        assert_eq!(s, [4.0, 6.0]);
+        assert_eq!(sq, [10.0, 20.0]);
+    }
+
+    #[test]
+    fn syrk_matches_explicit_transpose_product() {
+        let mut rng = Rng::new(3);
+        let x = DenseMatrix::rand(20, 5, -1.0, 1.0, rng.next_u64());
+        let mut a = vec![0f32; 25];
+        syrk_rows(&x, &mut a, 0, 20);
+        let xt = x.transpose();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want: f32 =
+                    (0..20).map(|k| xt[(i, k)] * xt[(j, k)]).sum();
+                assert!(
+                    (a[i * 5 + j] - want).abs() < 1e-4,
+                    "A[{i},{j}]={} want {want}",
+                    a[i * 5 + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_matches_explicit() {
+        let x = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = [10.0, 100.0];
+        let mut b = [0.0; 2];
+        gemv_rows(&x, &y, &mut b, 0, 2);
+        assert_eq!(b, [310.0, 420.0]); // X^T y
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] -> x = [1.5, 2]
+        let a = DenseMatrix::from_vec(2, 2, vec![4.0, 2.0, 2.0, 3.0]);
+        let x = cholesky_solve(&a, &[10.0, 9.0]).unwrap();
+        assert!((x[0] - 1.5).abs() < 1e-5 && (x[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let a = DenseMatrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_err());
+        let bad_shape = DenseMatrix::zeros(2, 3);
+        assert!(cholesky_solve(&bad_shape, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn prop_cholesky_recovers_solution() {
+        prop::check("cholesky solves planted SPD systems", 40, |rng| {
+            let n = rng.range(1, 20) as usize;
+            // A = M^T M + I is SPD
+            let m = DenseMatrix::rand(n, n, -1.0, 1.0, rng.next_u64());
+            let mut a = DenseMatrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += m[(k, i)] * m[(k, j)];
+                    }
+                    a[(i, j)] = s + if i == j { 1.0 } else { 0.0 };
+                }
+            }
+            let x_true: Vec<f32> =
+                (0..n).map(|_| rng.normal() as f32).collect();
+            let b = matvec(&a, &x_true);
+            let x = cholesky_solve(&a, &b).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                prop::ensure(
+                    (x[i] - x_true[i]).abs() < 1e-2,
+                    format!("x[{i}]={} want {}", x[i], x_true[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_syrk_row_split_accumulates() {
+        prop::check("syrk partials sum to whole", 30, |rng| {
+            let rows = rng.range(2, 50) as usize;
+            let cols = rng.range(1, 10) as usize;
+            let x = DenseMatrix::rand(rows, cols, -1.0, 1.0, rng.next_u64());
+            let split = rng.range(1, rows as u64) as usize;
+            let mut whole = vec![0f32; cols * cols];
+            syrk_rows(&x, &mut whole, 0, rows);
+            let mut parts = vec![0f32; cols * cols];
+            syrk_rows(&x, &mut parts, 0, split);
+            syrk_rows(&x, &mut parts, split, rows);
+            for (i, (a, b)) in whole.iter().zip(&parts).enumerate() {
+                prop::ensure(
+                    (a - b).abs() < 1e-3,
+                    format!("idx {i}: {a} vs {b}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

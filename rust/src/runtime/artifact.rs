@@ -1,0 +1,143 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Parsed with the in-repo JSON parser.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One lowered stage as described by `manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes (row-major dims), f32.
+    pub args: Vec<Vec<usize>>,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub stages: Vec<StageSpec>,
+    /// `(rows, cols)` of the CC adjacency tile artifact.
+    pub cc_block: (usize, usize),
+    /// `(rows, cols)` of the LR row-block artifact.
+    pub lr_block: (usize, usize),
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let shapes = doc
+            .get("block_shapes")
+            .ok_or_else(|| anyhow!("manifest missing block_shapes"))?;
+        let pair = |key: &str| -> Result<(usize, usize)> {
+            let arr = shapes
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing block_shapes.{key}"))?;
+            Ok((
+                arr.first().and_then(Json::as_usize).unwrap_or(0),
+                arr.get(1).and_then(Json::as_usize).unwrap_or(0),
+            ))
+        };
+        let stages_obj = doc
+            .get("stages")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing stages"))?;
+        let mut stages = Vec::new();
+        for (name, entry) in stages_obj {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("stage {name}: missing file"))?
+                .to_string();
+            let args = entry
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("stage {name}: missing args"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| {
+                            dims.iter().filter_map(Json::as_usize).collect()
+                        })
+                        .ok_or_else(|| anyhow!("stage {name}: bad arg shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("stage {name}: missing outputs"))?;
+            stages.push(StageSpec { name: name.clone(), file, args, outputs });
+        }
+        Ok(Manifest { stages, cc_block: pair("cc")?, lr_block: pair("lr")? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "block_shapes": {"cc": [128, 1024], "lr": [256, 128]},
+      "stages": {
+        "cc_propagate": {"file": "cc_propagate.hlo.txt",
+                          "args": [[128, 1024], [1024], [128]],
+                          "outputs": 1, "dtype": "f32"},
+        "lr_fused": {"file": "lr_fused.hlo.txt",
+                      "args": [[256, 128], [128], [128], [256]],
+                      "outputs": 2, "dtype": "f32"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.cc_block, (128, 1024));
+        assert_eq!(m.lr_block, (256, 128));
+        assert_eq!(m.stages.len(), 2);
+        let cc = m.stages.iter().find(|s| s.name == "cc_propagate").unwrap();
+        assert_eq!(cc.args.len(), 3);
+        assert_eq!(cc.args[0], vec![128, 1024]);
+        assert_eq!(cc.outputs, 1);
+        let lr = m.stages.iter().find(|s| s.name == "lr_fused").unwrap();
+        assert_eq!(lr.outputs, 2);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"block_shapes": {"cc": [1,1], "lr": [1,1]}}"#).is_err());
+        let no_file = r#"{
+          "block_shapes": {"cc": [1,1], "lr": [1,1]},
+          "stages": {"x": {"args": [[1]], "outputs": 1}}
+        }"#;
+        assert!(Manifest::parse(no_file).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration check against the actual `make artifacts` output.
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(path).unwrap();
+        assert!(m.stages.iter().any(|s| s.name == "cc_propagate"));
+        assert!(m.stages.iter().any(|s| s.name == "lr_fused"));
+        assert_eq!(m.cc_block, (128, 1024));
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them from the rust hot path. Python never runs at runtime.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py`).
+
+pub mod artifact;
+pub mod service;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use artifact::{Manifest, StageSpec};
+pub use service::{DeviceClient, DeviceService};
+
+/// A compiled pipeline stage.
+pub struct Stage {
+    pub spec: StageSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Stage {
+    /// Execute with f32 buffers; each input must match the manifest
+    /// shape. Returns one flattened f32 vec per output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.args.len() {
+            bail!(
+                "stage {}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in
+            inputs.iter().zip(&self.spec.args).enumerate()
+        {
+            let expect: usize = shape.iter().product();
+            if buf.len() != expect {
+                bail!(
+                    "stage {}: input {i} has {} elements, shape {shape:?} \
+                     needs {expect}",
+                    self.spec.name,
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.spec.name))?;
+        // aot.py lowers with return_tuple=True: unpack n outputs
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.spec.name))?;
+        if parts.len() != self.spec.outputs {
+            bail!(
+                "stage {}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs
+            );
+        }
+        parts
+            .iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("read output: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// The artifact registry: a PJRT CPU client plus every compiled stage.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub platform: String,
+    stages: BTreeMap<String, Stage>,
+}
+
+impl Runtime {
+    /// Load and compile every stage in `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("create PJRT CPU client: {e:?}"))?;
+        let platform = client.platform_name();
+        let mut stages = BTreeMap::new();
+        for spec in manifest.stages {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            stages.insert(spec.name.clone(), Stage { spec, exe });
+        }
+        Ok(Runtime { dir: dir.to_path_buf(), platform, stages })
+    }
+
+    /// Default artifact location (`artifacts/` at the repo root, or
+    /// `$DAPHNE_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DAPHNE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&Stage> {
+        self.stages
+            .get(name)
+            .ok_or_else(|| anyhow!("no stage '{name}' in {}", self.dir.display()))
+    }
+
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.keys().map(|s| s.as_str()).collect()
+    }
+}

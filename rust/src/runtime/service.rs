@@ -1,0 +1,118 @@
+//! Device service: a dedicated thread owning the PJRT runtime.
+//!
+//! The `xla` crate's client/executable handles are thread-confined
+//! (`Rc` + raw pointers), and DAPHNE's worker manager likewise fronts
+//! accelerators with dedicated threads that "perform data transfers and
+//! launch kernels on target devices" (§3). [`DeviceService`] is that
+//! thread; scheduler workers talk to it through the cloneable
+//! [`DeviceClient`].
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::{Manifest, Runtime};
+
+struct Request {
+    stage: String,
+    inputs: Vec<Vec<f32>>,
+    reply: mpsc::Sender<Result<Vec<Vec<f32>>, String>>,
+}
+
+/// Handle to the device thread; dropping it shuts the service down.
+pub struct DeviceService {
+    tx: Option<mpsc::Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    pub platform: String,
+    /// Artifact metadata (shapes) for callers that tile data.
+    pub manifest: Manifest,
+}
+
+/// Cloneable, `Send` client used from scheduler workers.
+#[derive(Clone)]
+pub struct DeviceClient {
+    tx: mpsc::Sender<Request>,
+}
+
+impl DeviceService {
+    /// Start the service; loads and compiles artifacts inside the
+    /// service thread (the runtime is created and dies there).
+    pub fn start(dir: PathBuf) -> Result<(DeviceService, DeviceClient)> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (meta_tx, meta_rx) = mpsc::channel::<Result<String, String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = meta_tx.send(Ok(rt.platform.clone()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = meta_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let result = runtime.stage(&req.stage).and_then(|stage| {
+                        let refs: Vec<&[f32]> =
+                            req.inputs.iter().map(|v| v.as_slice()).collect();
+                        stage.run_f32(&refs)
+                    });
+                    let _ = req.reply.send(result.map_err(|e| format!("{e:#}")));
+                }
+            })?;
+        let platform = meta_rx
+            .recv()
+            .map_err(|_| anyhow!("device thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok((
+            DeviceService {
+                tx: Some(tx.clone()),
+                handle: Some(handle),
+                platform,
+                manifest,
+            },
+            DeviceClient { tx },
+        ))
+    }
+
+    /// Start against the default artifact dir.
+    pub fn start_default() -> Result<(DeviceService, DeviceClient)> {
+        Self::start(Runtime::default_dir())
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl DeviceClient {
+    /// Execute a stage on the device thread; blocks for the reply.
+    pub fn run_f32(
+        &self,
+        stage: &str,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                stage: stage.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("device service is down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("device service dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}

@@ -1,0 +1,194 @@
+//! Automatic selection of scheduling options — the paper's §5 future
+//! work: "the multitude of scheduling options ... renders the offline or
+//! online selection of the right scheduling option for an
+//! application-system pair very challenging. We plan to extend
+//! DaphneSched to support automatic selection."
+//!
+//! The tuner reuses the DES as an *offline oracle*: given the workload's
+//! per-item cost profile (known after one profiled pass, or estimated
+//! from data statistics like row nnz) and the machine model, it sweeps
+//! candidate (scheme × layout × victim) configurations in virtual time
+//! and returns the best — milliseconds of simulation instead of hours of
+//! grid-running the real application.
+
+use crate::config::SchedConfig;
+use crate::sched::{QueueLayout, Scheme, VictimStrategy};
+use crate::sim::{self, CostModel, Workload};
+use crate::topology::Topology;
+
+/// One evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub config: SchedConfig,
+    /// Predicted makespan, seconds (virtual).
+    pub predicted: f64,
+}
+
+/// Search space for the tuner.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub schemes: Vec<Scheme>,
+    pub layouts: Vec<QueueLayout>,
+    pub victims: Vec<VictimStrategy>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            // SS excluded by default: the §4 explosion makes it never
+            // competitive on a locked central queue.
+            schemes: Scheme::FIGURES.to_vec(),
+            layouts: vec![
+                QueueLayout::Centralized { atomic: false },
+                QueueLayout::Centralized { atomic: true },
+                QueueLayout::PerGroup,
+                QueueLayout::PerCore,
+            ],
+            victims: VictimStrategy::ALL.to_vec(),
+        }
+    }
+}
+
+/// Sweep the space and return candidates sorted best-first.
+///
+/// `repeats` averages over seeds (the DES models OS interference, so a
+/// single draw can be lucky). Centralized layouts ignore the victim
+/// dimension (evaluated once).
+pub fn tune(
+    workload: &Workload,
+    topo: &Topology,
+    costs: &CostModel,
+    space: &SearchSpace,
+    seed: u64,
+    repeats: usize,
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for &scheme in &space.schemes {
+        for &layout in &space.layouts {
+            let victims: &[VictimStrategy] = if layout.steals() {
+                &space.victims
+            } else {
+                &[VictimStrategy::Seq]
+            };
+            for &victim in victims {
+                let config = SchedConfig {
+                    scheme,
+                    layout,
+                    victim,
+                    seed,
+                    stages: None,
+                    pls_swr: 0.5,
+                };
+                let mut total = 0.0;
+                for r in 0..repeats.max(1) {
+                    let cfg = SchedConfig {
+                        seed: seed.wrapping_add(r as u64 * 0x9E37_79B9),
+                        ..config.clone()
+                    };
+                    total += sim::simulate(topo, &cfg, workload, costs)
+                        .makespan();
+                }
+                out.push(Candidate {
+                    config,
+                    predicted: total / repeats.max(1) as f64,
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.predicted.total_cmp(&b.predicted));
+    out
+}
+
+/// Convenience: best configuration for a workload/machine pair.
+pub fn best(
+    workload: &Workload,
+    topo: &Topology,
+    costs: &CostModel,
+    seed: u64,
+) -> Candidate {
+    tune(workload, topo, costs, &SearchSpace::default(), seed, 3)
+        .into_iter()
+        .next()
+        .expect("non-empty search space")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_workload() -> Workload {
+        // heavy tail at the end: dynamic schemes needed
+        let per: Vec<f64> = (0..100_000)
+            .map(|i| if i >= 50_000 { 9e-7 } else { 1e-8 })
+            .collect();
+        Workload::from_costs("skew", &per)
+    }
+
+    #[test]
+    fn tuner_ranks_whole_space() {
+        let w = Workload::uniform("u", 20_000, 1e-7);
+        let topo = Topology::broadwell20();
+        let ranked = tune(
+            &w,
+            &topo,
+            &CostModel::recorded(),
+            &SearchSpace::default(),
+            1,
+            1,
+        );
+        // 10 schemes x (2 central + 2 stealing x 4 victims) = 100
+        assert_eq!(ranked.len(), 100);
+        assert!(ranked.windows(2).all(|w| w[0].predicted <= w[1].predicted));
+    }
+
+    #[test]
+    fn picks_non_static_for_skewed_work() {
+        let topo = Topology::broadwell20();
+        let choice = best(
+            &skewed_workload(),
+            &topo,
+            &CostModel::daphne_like(),
+            1,
+        );
+        // STATIC parks the heavy half on half the workers; any sane
+        // choice beats it clearly
+        let static_cfg = SchedConfig::default();
+        let static_time = sim::simulate(
+            &topo,
+            &static_cfg,
+            &skewed_workload(),
+            &CostModel::daphne_like(),
+        )
+        .makespan();
+        assert!(
+            choice.predicted < static_time,
+            "tuned {:?} ({}) must beat default STATIC ({static_time})",
+            choice.config.scheme,
+            choice.predicted
+        );
+    }
+
+    #[test]
+    fn picks_cheap_config_for_uniform_work() {
+        // uniform dense work: the winner must not be a fine-grained
+        // locked-central config (those pay pure overhead, Fig. 10)
+        let w = Workload::uniform("u", 200_000, 3e-8);
+        let topo = Topology::broadwell20();
+        let choice = best(&w, &topo, &CostModel::daphne_like(), 1);
+        let fine_locked = SchedConfig::default().with_scheme(Scheme::Ss);
+        let fine_time =
+            sim::simulate(&topo, &fine_locked, &w, &CostModel::daphne_like())
+                .makespan();
+        assert!(choice.predicted < fine_time / 2.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = Workload::uniform("u", 10_000, 1e-7);
+        let topo = Topology::cascadelake56();
+        let a = best(&w, &topo, &CostModel::recorded(), 7);
+        let b = best(&w, &topo, &CostModel::recorded(), 7);
+        assert_eq!(a.config.scheme, b.config.scheme);
+        assert_eq!(a.predicted, b.predicted);
+    }
+}

@@ -1,0 +1,122 @@
+//! Scheduling metrics: per-worker counters and the aggregate report the
+//! evaluation (and the DES) emits for every run.
+
+use crate::util::stats;
+
+/// Counters for one worker.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerStats {
+    /// Tasks (chunks) executed.
+    pub tasks: usize,
+    /// Work items executed (sum of chunk sizes).
+    pub items: usize,
+    /// Seconds spent executing task bodies.
+    pub busy: f64,
+    /// Seconds spent acquiring tasks (queue access incl. lock waits).
+    pub queue_wait: f64,
+    /// Successful steals.
+    pub steals: usize,
+    /// Steal probes that found the victim empty.
+    pub failed_steals: usize,
+    /// Items obtained via stealing.
+    pub stolen_items: usize,
+}
+
+/// Aggregate result of one scheduled execution.
+#[derive(Debug, Clone)]
+pub struct SchedReport {
+    /// Scheme / layout / victim names (for printing).
+    pub scheme: String,
+    pub layout: String,
+    pub victim: String,
+    /// Wall-clock (real executor) or virtual (DES) makespan in seconds.
+    pub makespan: f64,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl SchedReport {
+    /// Coefficient of variation of per-worker busy times — the paper's
+    /// load-imbalance indicator.
+    pub fn cov(&self) -> f64 {
+        let busy: Vec<f64> = self.per_worker.iter().map(|w| w.busy).collect();
+        stats::cov(&busy)
+    }
+
+    /// max/mean of per-worker busy times.
+    pub fn imbalance(&self) -> f64 {
+        let busy: Vec<f64> = self.per_worker.iter().map(|w| w.busy).collect();
+        stats::imbalance(&busy)
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.per_worker.iter().map(|w| w.tasks).sum()
+    }
+
+    pub fn total_items(&self) -> usize {
+        self.per_worker.iter().map(|w| w.items).sum()
+    }
+
+    pub fn total_steals(&self) -> usize {
+        self.per_worker.iter().map(|w| w.steals).sum()
+    }
+
+    pub fn total_failed_steals(&self) -> usize {
+        self.per_worker.iter().map(|w| w.failed_steals).sum()
+    }
+
+    /// Total seconds spent waiting on queues — the contention signal the
+    /// paper discusses for SS and PERCPU/MFSC.
+    pub fn total_queue_wait(&self) -> f64 {
+        self.per_worker.iter().map(|w| w.queue_wait).sum()
+    }
+
+    /// One formatted row (used by the figure harness and CLI).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<8} {:<14} {:<7} time={:>10} tasks={:<7} steals={:<6} \
+             cov={:.3} qwait={:.4}s",
+            self.scheme,
+            self.layout,
+            self.victim,
+            crate::util::fmt_duration(self.makespan),
+            self.total_tasks(),
+            self.total_steals(),
+            self.cov(),
+            self.total_queue_wait(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(busys: &[f64]) -> SchedReport {
+        SchedReport {
+            scheme: "STATIC".into(),
+            layout: "CENTRAL".into(),
+            victim: "SEQ".into(),
+            makespan: 1.0,
+            per_worker: busys
+                .iter()
+                .map(|&b| WorkerStats { busy: b, tasks: 1, items: 10, ..Default::default() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = report(&[1.0, 1.0, 2.0]);
+        assert_eq!(r.total_tasks(), 3);
+        assert_eq!(r.total_items(), 30);
+        assert!((r.imbalance() - 1.5).abs() < 1e-12);
+        assert!(r.cov() > 0.0);
+    }
+
+    #[test]
+    fn row_contains_names() {
+        let r = report(&[1.0]);
+        let row = r.row();
+        assert!(row.contains("STATIC") && row.contains("CENTRAL"));
+    }
+}

@@ -1,0 +1,33 @@
+//! DaphneSched — the paper's contribution (§3): a task-based scheduler
+//! with two independent steps:
+//!
+//! 1. **Work partitioning** ([`partitioner`]): eleven self-scheduling
+//!    techniques decide task granularity (variable-size tasks, Fig. 3b).
+//! 2. **Work assignment** ([`queue`], [`victim`], [`worker`]):
+//!    self-scheduling from a centralized queue, or work-stealing across
+//!    per-core / per-NUMA-group queues with four victim-selection
+//!    strategies.
+//!
+//! The novelty (contribution C.2) is that *stolen* work also follows the
+//! chosen self-scheduling technique — a thief obtains the next chunk of
+//! the victim's partition exactly as the owner would, so steal
+//! granularity adapts instead of being a fixed constant.
+//!
+//! All components here are executor-agnostic: [`worker`] drives them with
+//! real OS threads, [`crate::sim`] drives the same code in virtual time.
+
+pub mod autotune;
+pub mod metrics;
+pub mod partitioner;
+pub mod queue;
+pub mod stealing;
+pub mod task;
+pub mod victim;
+pub mod worker;
+
+pub use metrics::{SchedReport, WorkerStats};
+pub use partitioner::{ChunkCalc, Partitioner, Scheme};
+pub use queue::{QueueLayout, TaskSource};
+pub use task::TaskRange;
+pub use victim::VictimStrategy;
+pub use worker::ThreadPool;

@@ -1,0 +1,763 @@
+//! Work partitioning: the eleven task-partitioning schemes of §3,
+//! mirroring DAPHNE's `getNextChunk` interface.
+//!
+//! Each scheme computes the size of the next task from `(total items N,
+//! workers P, items remaining R, chunks handed out so far)`. The
+//! formulas follow the original publications (citations per variant) in
+//! the profiling-free forms used by DAPHNE/LB4OMP — FAC2 and MFSC are
+//! the practical implementations of FAC and FSC that need no prior
+//! profiling data.
+//!
+//! The partitioner is shared state: the centralized layout has all
+//! workers pulling from one instance; multi-queue layouts give every
+//! queue its own instance over its block (so *stolen* chunks also follow
+//! the scheme — contribution C.2).
+
+use std::sync::Mutex;
+
+use super::task::TaskRange;
+use crate::util::Rng;
+
+/// The eleven supported partitioning schemes (paper §3, Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// One contiguous chunk of `ceil(N/P)` per worker (DAPHNE default)
+    /// \[Li et al., ICPP'93\].
+    Static,
+    /// Self-scheduling: one item at a time \[Tang & Yew, ICPP'86\].
+    Ss,
+    /// Modified fixed-size chunking: FSC \[Kruskal & Weiss, TSE'85\]
+    /// without profiling inputs (LB4OMP's practical variant).
+    Mfsc,
+    /// Guided self-scheduling: `ceil(R/P)` \[Polychronopoulos & Kuck,
+    /// TC'87\].
+    Gss,
+    /// Trapezoid self-scheduling: linearly decreasing chunks
+    /// \[Tzen & Ni, TPDS'93\].
+    Tss,
+    /// Factoring, practical x=2 variant: batches of P chunks sized
+    /// `ceil(R/(2P))` \[Flynn Hummel et al., CACM'92\].
+    Fac2,
+    /// Trapezoid factoring self-scheduling: TSS chunk averaged over a
+    /// batch of P \[Chronopoulos et al., Cluster'01\].
+    Tfss,
+    /// Fixed-increase self-scheduling \[Philip & Das, PDCS'97\].
+    Fiss,
+    /// Variable-increase self-scheduling \[Philip & Das, PDCS'97\].
+    Viss,
+    /// Performance loop-based scheduling: a static fraction (SWR) first,
+    /// GSS on the rest \[Shih et al., J. Supercomputing'07\].
+    Pls,
+    /// Probabilistic self-scheduling: `ceil(R/(1.5·E[active workers]))`
+    /// \[Girkar et al., Euro-Par'06\].
+    Pss,
+}
+
+impl Scheme {
+    /// All schemes, in the order the paper's figures list them.
+    pub const ALL: [Scheme; 11] = [
+        Scheme::Static,
+        Scheme::Ss,
+        Scheme::Mfsc,
+        Scheme::Gss,
+        Scheme::Tss,
+        Scheme::Fac2,
+        Scheme::Tfss,
+        Scheme::Fiss,
+        Scheme::Viss,
+        Scheme::Pls,
+        Scheme::Pss,
+    ];
+
+    /// The ten schemes shown in Figures 7-10 (SS is omitted there: its
+    /// execution time "explodes" under central-queue contention).
+    pub const FIGURES: [Scheme; 10] = [
+        Scheme::Static,
+        Scheme::Mfsc,
+        Scheme::Gss,
+        Scheme::Tss,
+        Scheme::Fac2,
+        Scheme::Tfss,
+        Scheme::Fiss,
+        Scheme::Viss,
+        Scheme::Pls,
+        Scheme::Pss,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Static => "STATIC",
+            Scheme::Ss => "SS",
+            Scheme::Mfsc => "MFSC",
+            Scheme::Gss => "GSS",
+            Scheme::Tss => "TSS",
+            Scheme::Fac2 => "FAC2",
+            Scheme::Tfss => "TFSS",
+            Scheme::Fiss => "FISS",
+            Scheme::Viss => "VISS",
+            Scheme::Pls => "PLS",
+            Scheme::Pss => "PSS",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_uppercase().as_str() {
+            "STATIC" => Some(Scheme::Static),
+            "SS" => Some(Scheme::Ss),
+            "MFSC" | "FSC" => Some(Scheme::Mfsc),
+            "GSS" => Some(Scheme::Gss),
+            "TSS" => Some(Scheme::Tss),
+            "FAC2" | "FAC" => Some(Scheme::Fac2),
+            "TFSS" => Some(Scheme::Tfss),
+            "FISS" => Some(Scheme::Fiss),
+            "VISS" => Some(Scheme::Viss),
+            "PLS" => Some(Scheme::Pls),
+            "PSS" => Some(Scheme::Pss),
+            _ => None,
+        }
+    }
+
+    /// Whether every chunk has the same size (enables the lock-free
+    /// `fetch_add` fast path in the atomic central queue).
+    pub fn fixed_chunk(&self) -> bool {
+        matches!(self, Scheme::Static | Scheme::Ss | Scheme::Mfsc)
+    }
+}
+
+/// Extension point (paper §3 "Extendability"): user-defined schemes
+/// implement this and plug in via [`Partitioner::custom`]. `next_size`
+/// is DAPHNE's `getNextChunk`.
+pub trait ChunkCalc: Send {
+    /// Size of the next chunk given items remaining and chunks issued.
+    /// Must be >= 1 whenever `remaining > 0`; the partitioner clamps to
+    /// `remaining`.
+    fn next_size(&mut self, ctx: &ChunkCtx) -> usize;
+}
+
+/// Inputs available to a chunk calculation.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkCtx {
+    /// Total items N this partitioner started with.
+    pub total: usize,
+    /// Workers P sharing this partitioner.
+    pub workers: usize,
+    /// Items not yet handed out.
+    pub remaining: usize,
+    /// Chunks handed out so far.
+    pub issued: usize,
+}
+
+/// Tuning knobs (defaults match the common literature choices).
+#[derive(Debug, Clone)]
+pub struct PartitionerOptions {
+    /// FISS/VISS stage count B; `None` = `ceil(log2 P) + 1`.
+    pub stages: Option<usize>,
+    /// PLS static workload ratio.
+    pub pls_swr: f64,
+    /// Seed for PSS's probabilistic estimate.
+    pub seed: u64,
+}
+
+impl Default for PartitionerOptions {
+    fn default() -> Self {
+        PartitionerOptions { stages: None, pls_swr: 0.5, seed: 0xDA9E }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheme state machines
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum SchemeState {
+    /// Fixed chunk size computed at construction (STATIC, SS, MFSC).
+    Fixed { chunk: usize },
+    Gss,
+    Tss {
+        /// Current chunk size (starts at ceil(N/2P)).
+        chunk: f64,
+        /// Linear decrement between consecutive chunks.
+        delta: f64,
+    },
+    Fac2 {
+        /// Chunk size for the current batch.
+        chunk: usize,
+        /// Chunks left in the current batch.
+        left_in_batch: usize,
+    },
+    Tfss {
+        chunk: f64,
+        delta: f64,
+        batch_chunk: usize,
+        left_in_batch: usize,
+    },
+    FissViss {
+        /// Current per-stage chunk size.
+        chunk: f64,
+        /// Additive increment applied at each stage boundary.
+        increment: f64,
+        /// FISS keeps the increment fixed; VISS halves it per stage.
+        halve: bool,
+        /// Chunks left before the next stage boundary.
+        left_in_stage: usize,
+    },
+    Pls {
+        /// Items in the static region still to hand out.
+        static_left: usize,
+        /// Chunk size within the static region.
+        static_chunk: usize,
+    },
+    Pss { rng: Rng },
+    Custom(Box<dyn ChunkCalc>),
+}
+
+impl std::fmt::Debug for Box<dyn ChunkCalc> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "<custom chunk calc>")
+    }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b.max(1))
+}
+
+/// MFSC: LB4OMP's profiling-free fixed chunk,
+/// `ceil(2N / (P * log2(2N/P)))` — the FSC optimum with the overhead/
+/// variability ratio folded into the log term.
+fn mfsc_chunk(total: usize, workers: usize) -> usize {
+    if total == 0 {
+        return 1;
+    }
+    let n = total as f64;
+    let p = workers.max(1) as f64;
+    let l = (2.0 * n / p).log2().max(1.0);
+    (2.0 * n / (p * l)).ceil().max(1.0) as usize
+}
+
+impl SchemeState {
+    fn new(scheme: Scheme, total: usize, workers: usize, opts: &PartitionerOptions) -> Self {
+        let p = workers.max(1);
+        match scheme {
+            Scheme::Static => SchemeState::Fixed { chunk: ceil_div(total, p) },
+            Scheme::Ss => SchemeState::Fixed { chunk: 1 },
+            Scheme::Mfsc => SchemeState::Fixed { chunk: mfsc_chunk(total, p) },
+            Scheme::Gss => SchemeState::Gss,
+            Scheme::Tss | Scheme::Tfss => {
+                // Tzen & Ni: first = ceil(N/2P), last = 1,
+                // C = ceil(2N/(first+last)), delta = (first-last)/(C-1).
+                let first = ceil_div(total, 2 * p) as f64;
+                let last = 1.0;
+                let c = ((2.0 * total as f64) / (first + last)).ceil().max(2.0);
+                let delta = (first - last) / (c - 1.0);
+                if scheme == Scheme::Tss {
+                    SchemeState::Tss { chunk: first, delta }
+                } else {
+                    SchemeState::Tfss {
+                        chunk: first,
+                        delta,
+                        batch_chunk: 0,
+                        left_in_batch: 0,
+                    }
+                }
+            }
+            Scheme::Fac2 => SchemeState::Fac2 { chunk: 0, left_in_batch: 0 },
+            Scheme::Fiss | Scheme::Viss => {
+                // Philip & Das: B stages; chunk_0 = N/((2+B)P); FISS bumps
+                // by a fixed increment so that sum(stages) covers N.
+                let b = opts
+                    .stages
+                    .unwrap_or_else(|| (p as f64).log2().ceil() as usize + 1)
+                    .max(2);
+                let chunk0 = (total as f64 / ((2 + b) as f64 * p as f64)).max(1.0);
+                let bump = if b > 1 {
+                    (2.0 * total as f64 * (1.0 - b as f64 / (2.0 + b as f64)))
+                        / (p as f64 * b as f64 * (b as f64 - 1.0))
+                } else {
+                    0.0
+                };
+                SchemeState::FissViss {
+                    chunk: chunk0,
+                    increment: bump.max(0.0),
+                    halve: scheme == Scheme::Viss,
+                    left_in_stage: p,
+                }
+            }
+            Scheme::Pls => {
+                let static_items = (total as f64 * opts.pls_swr) as usize;
+                SchemeState::Pls {
+                    static_left: static_items,
+                    static_chunk: ceil_div(static_items, p).max(1),
+                }
+            }
+            Scheme::Pss => SchemeState::Pss { rng: Rng::new(opts.seed) },
+        }
+    }
+
+    fn next_size(&mut self, ctx: &ChunkCtx) -> usize {
+        let p = ctx.workers.max(1);
+        match self {
+            SchemeState::Fixed { chunk } => *chunk,
+            SchemeState::Gss => ceil_div(ctx.remaining, p),
+            SchemeState::Tss { chunk, delta } => {
+                let size = chunk.round().max(1.0) as usize;
+                *chunk = (*chunk - *delta).max(1.0);
+                size
+            }
+            SchemeState::Fac2 { chunk, left_in_batch } => {
+                if *left_in_batch == 0 {
+                    // new batch: half the remaining, split across P chunks
+                    *chunk = ceil_div(ceil_div(ctx.remaining, 2), p).max(1);
+                    *left_in_batch = p;
+                }
+                *left_in_batch -= 1;
+                *chunk
+            }
+            SchemeState::Tfss { chunk, delta, batch_chunk, left_in_batch } => {
+                if *left_in_batch == 0 {
+                    // batch chunk = mean of the next P trapezoid chunks
+                    // = chunk - delta*(P-1)/2, held constant for P takes
+                    let mean = *chunk - *delta * (p as f64 - 1.0) / 2.0;
+                    *batch_chunk = mean.round().max(1.0) as usize;
+                    *chunk = (*chunk - *delta * p as f64).max(1.0);
+                    *left_in_batch = p;
+                }
+                *left_in_batch -= 1;
+                *batch_chunk
+            }
+            SchemeState::FissViss { chunk, increment, halve, left_in_stage } => {
+                if *left_in_stage == 0 {
+                    *chunk += *increment;
+                    if *halve {
+                        *increment /= 2.0;
+                    }
+                    *left_in_stage = p;
+                }
+                *left_in_stage -= 1;
+                chunk.round().max(1.0) as usize
+            }
+            SchemeState::Pls { static_left, static_chunk } => {
+                if *static_left > 0 {
+                    let take = (*static_chunk).min(*static_left);
+                    *static_left -= take;
+                    take
+                } else {
+                    // dynamic region: GSS over what remains
+                    ceil_div(ctx.remaining, p)
+                }
+            }
+            SchemeState::Pss { rng } => {
+                // Girkar et al.: chunk = ceil(R / (1.5 * E[active])) with
+                // the active-worker estimate fluctuating near P (most of
+                // the time most workers are busy): uniform over
+                // [ceil(P/2), P]. Behaves like a jittered, slightly
+                // finer GSS.
+                let lo = p.div_ceil(2) as u64;
+                let p_est = rng.range(lo, p as u64 + 1) as usize;
+                ceil_div(ctx.remaining, (3 * p_est).div_ceil(2))
+            }
+            SchemeState::Custom(calc) => calc.next_size(ctx),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// partitioner
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Inner {
+    state: SchemeState,
+    /// Next item to hand out (within `[base, base + total)`).
+    cursor: usize,
+    issued: usize,
+}
+
+/// Thread-safe chunk generator over a contiguous block of work items
+/// (`base .. base + total`). This is Fig. 4's task partitioner: both its
+/// interface points — *Initialize/Update* ([`Partitioner::new`]) and *Get
+/// Task* ([`Partitioner::next_chunk`]) — operate on shared state so any
+/// worker (owner or thief) can pull the next task.
+pub struct Partitioner {
+    scheme_name: &'static str,
+    base: usize,
+    total: usize,
+    workers: usize,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for Partitioner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Partitioner")
+            .field("scheme", &self.scheme_name)
+            .field("base", &self.base)
+            .field("total", &self.total)
+            .field("workers", &self.workers)
+            .finish()
+    }
+}
+
+impl Partitioner {
+    /// Partition `total` items starting at global index `base` among
+    /// `workers` pullers using `scheme`.
+    pub fn new(
+        scheme: Scheme,
+        base: usize,
+        total: usize,
+        workers: usize,
+        opts: &PartitionerOptions,
+    ) -> Self {
+        Partitioner {
+            scheme_name: scheme.name(),
+            base,
+            total,
+            workers,
+            inner: Mutex::new(Inner {
+                state: SchemeState::new(scheme, total, workers, opts),
+                cursor: 0,
+                issued: 0,
+            }),
+        }
+    }
+
+    /// Plug in a user-defined scheme (paper §3 "Extendability").
+    pub fn custom(
+        name: &'static str,
+        base: usize,
+        total: usize,
+        workers: usize,
+        calc: Box<dyn ChunkCalc>,
+    ) -> Self {
+        Partitioner {
+            scheme_name: name,
+            base,
+            total,
+            workers,
+            inner: Mutex::new(Inner {
+                state: SchemeState::Custom(calc),
+                cursor: 0,
+                issued: 0,
+            }),
+        }
+    }
+
+    pub fn scheme_name(&self) -> &'static str {
+        self.scheme_name
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// First global item index of this partitioner's block.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Items not yet handed out.
+    pub fn remaining(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        self.total - inner.cursor
+    }
+
+    /// *Get Task*: the next variable-size task, or `None` when the block
+    /// is exhausted.
+    pub fn next_chunk(&self) -> Option<TaskRange> {
+        let mut inner = self.inner.lock().unwrap();
+        let remaining = self.total - inner.cursor;
+        if remaining == 0 {
+            return None;
+        }
+        let ctx = ChunkCtx {
+            total: self.total,
+            workers: self.workers,
+            remaining,
+            issued: inner.issued,
+        };
+        let size = inner.state.next_size(&ctx).clamp(1, remaining);
+        let start = self.base + inner.cursor;
+        inner.cursor += size;
+        inner.issued += 1;
+        Some(TaskRange::new(start, start + size))
+    }
+
+    /// Drain the full chunk sequence (tests, figures, and the atomic
+    /// central queue's precomputation).
+    pub fn chunk_sequence(&self) -> Vec<TaskRange> {
+        let mut v = Vec::new();
+        while let Some(c) = self.next_chunk() {
+            v.push(c);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sizes(scheme: Scheme, n: usize, p: usize) -> Vec<usize> {
+        Partitioner::new(scheme, 0, n, p, &PartitionerOptions::default())
+            .chunk_sequence()
+            .iter()
+            .map(|c| c.len())
+            .collect()
+    }
+
+    #[test]
+    fn static_one_chunk_per_worker() {
+        let s = sizes(Scheme::Static, 1000, 8);
+        assert_eq!(s.len(), 8);
+        assert!(s.iter().all(|&c| c == 125));
+    }
+
+    #[test]
+    fn static_uneven_total() {
+        let s = sizes(Scheme::Static, 1001, 8);
+        assert_eq!(s.iter().sum::<usize>(), 1001);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0], 126); // ceil(1001/8)
+        assert_eq!(*s.last().unwrap(), 1001 - 7 * 126);
+    }
+
+    #[test]
+    fn ss_unit_chunks() {
+        let s = sizes(Scheme::Ss, 100, 8);
+        assert_eq!(s.len(), 100);
+        assert!(s.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn mfsc_fixed_moderate_chunks() {
+        let s = sizes(Scheme::Mfsc, 100_000, 20);
+        let c0 = s[0];
+        // fixed size except the tail chunk
+        assert!(s[..s.len() - 1].iter().all(|&c| c == c0));
+        // far fewer chunks than SS, far more than STATIC
+        assert!(s.len() > 20 && s.len() < 100_000 / 20, "len={}", s.len());
+    }
+
+    #[test]
+    fn gss_decreasing_then_unit() {
+        let s = sizes(Scheme::Gss, 1000, 4);
+        assert_eq!(s[0], 250); // ceil(1000/4)
+        assert!(s.windows(2).all(|w| w[1] <= w[0]));
+        assert_eq!(*s.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn tss_linear_decrease() {
+        let s = sizes(Scheme::Tss, 10_000, 10);
+        assert_eq!(s[0], 500); // ceil(N/2P)
+        assert!(s.windows(2).all(|w| w[1] <= w[0]));
+        // delta should be roughly constant (rounding jitter ±1); the
+        // final chunk absorbs the clamp-to-remaining tail, so skip it.
+        let deltas: Vec<i64> =
+            s.windows(2).map(|w| w[0] as i64 - w[1] as i64).collect();
+        let body = &deltas[..deltas.len() - 1];
+        let max_d = *body.iter().max().unwrap();
+        let min_d = *body.iter().min().unwrap();
+        assert!(max_d - min_d <= 2, "not linear: {deltas:?}");
+    }
+
+    #[test]
+    fn fac2_batches_of_p_halving() {
+        let s = sizes(Scheme::Fac2, 1600, 4);
+        // first batch: ceil(800/4) = 200 four times, then 100 four times...
+        assert_eq!(&s[..4], &[200, 200, 200, 200]);
+        assert_eq!(&s[4..8], &[100, 100, 100, 100]);
+        assert_eq!(&s[8..12], &[50, 50, 50, 50]);
+    }
+
+    #[test]
+    fn tfss_batches_follow_trapezoid_means() {
+        let s = sizes(Scheme::Tfss, 10_000, 10);
+        // constant within each batch of P
+        for batch in s.chunks(10).take(3) {
+            if batch.len() == 10 {
+                assert!(batch.iter().all(|&c| c == batch[0]), "{batch:?}");
+            }
+        }
+        // decreasing across batches
+        assert!(s[0] > s[10] && s[10] > s[20]);
+    }
+
+    #[test]
+    fn fiss_increasing_stages() {
+        let s = sizes(Scheme::Fiss, 10_000, 8);
+        // constant within a stage of P chunks, increasing across stages
+        assert!(s[..8].iter().all(|&c| c == s[0]));
+        if s.len() > 16 {
+            assert!(s[8] >= s[0], "{s:?}");
+            assert!(s[16] >= s[8], "{s:?}");
+        }
+    }
+
+    #[test]
+    fn viss_increments_shrink() {
+        let s = sizes(Scheme::Viss, 10_000, 8);
+        if s.len() > 24 {
+            let inc1 = s[8] as i64 - s[0] as i64;
+            let inc2 = s[16] as i64 - s[8] as i64;
+            assert!(inc2 <= inc1, "VISS increments must shrink: {s:?}");
+        }
+    }
+
+    #[test]
+    fn pls_static_then_dynamic() {
+        let s = sizes(Scheme::Pls, 1000, 4);
+        // first half static: 4 chunks of 125
+        assert_eq!(&s[..4], &[125, 125, 125, 125]);
+        // then GSS over the remaining 500
+        assert_eq!(s[4], 125); // ceil(500/4)
+        assert!(s[5] <= s[4]);
+        assert_eq!(*s.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn pss_is_seeded_and_bounded() {
+        let opts = PartitionerOptions { seed: 42, ..Default::default() };
+        let a: Vec<usize> = Partitioner::new(Scheme::Pss, 0, 5000, 8, &opts)
+            .chunk_sequence()
+            .iter()
+            .map(|c| c.len())
+            .collect();
+        let b: Vec<usize> = Partitioner::new(Scheme::Pss, 0, 5000, 8, &opts)
+            .chunk_sequence()
+            .iter()
+            .map(|c| c.len())
+            .collect();
+        assert_eq!(a, b, "PSS must replay from its seed");
+        // chunks never exceed GSS-with-1-active-worker bound: ceil(R/1.5)
+        assert!(a[0] <= 5000);
+    }
+
+    #[test]
+    fn base_offsets_propagate() {
+        let p = Partitioner::new(
+            Scheme::Gss,
+            1000,
+            100,
+            4,
+            &PartitionerOptions::default(),
+        );
+        let chunks = p.chunk_sequence();
+        assert_eq!(chunks.first().unwrap().start, 1000);
+        assert_eq!(chunks.last().unwrap().end, 1100);
+    }
+
+    #[test]
+    fn custom_scheme_plugs_in() {
+        struct Fives;
+        impl ChunkCalc for Fives {
+            fn next_size(&mut self, _: &ChunkCtx) -> usize {
+                5
+            }
+        }
+        let p = Partitioner::custom("FIVES", 0, 23, 4, Box::new(Fives));
+        let s: Vec<usize> =
+            p.chunk_sequence().iter().map(|c| c.len()).collect();
+        assert_eq!(s, vec![5, 5, 5, 5, 3]);
+        assert_eq!(p.scheme_name(), "FIVES");
+    }
+
+    #[test]
+    fn mfsc_chunk_formula_sane() {
+        // N=100k, P=20: chunk = 2N/(P*log2(2N/P)) = 10000/log2(10000) ~ 753
+        let c = mfsc_chunk(100_000, 20);
+        assert!((600..=900).contains(&c), "mfsc chunk {c}");
+    }
+
+    // ---------------- property tests (all schemes) ----------------
+
+    #[test]
+    fn prop_chunks_partition_exactly() {
+        prop::check("chunks partition [0,N) exactly", 150, |rng| {
+            let scheme = *rng.choose(&Scheme::ALL);
+            let n = rng.range(1, 50_000) as usize;
+            let p = rng.range(1, 64) as usize;
+            let opts = PartitionerOptions {
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let chunks =
+                Partitioner::new(scheme, 0, n, p, &opts).chunk_sequence();
+            let mut cursor = 0;
+            for c in &chunks {
+                prop::ensure(
+                    c.start == cursor,
+                    format!("{scheme:?}: gap at {cursor} vs {c:?}"),
+                )?;
+                prop::ensure(
+                    !c.is_empty(),
+                    format!("{scheme:?}: empty chunk at {cursor}"),
+                )?;
+                cursor = c.end;
+            }
+            prop::ensure(
+                cursor == n,
+                format!("{scheme:?}: covered {cursor} of {n}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_chunk_count_reasonable() {
+        // No scheme may issue more chunks than items, and every scheme
+        // must terminate (guaranteed by clamp >= 1).
+        prop::check("chunk count bounded by N", 100, |rng| {
+            let scheme = *rng.choose(&Scheme::ALL);
+            let n = rng.range(1, 10_000) as usize;
+            let p = rng.range(1, 32) as usize;
+            let opts = PartitionerOptions {
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let k =
+                Partitioner::new(scheme, 0, n, p, &opts).chunk_sequence().len();
+            prop::ensure(k <= n, format!("{scheme:?}: {k} chunks for {n}"))
+        });
+    }
+
+    #[test]
+    fn prop_concurrent_pulls_partition() {
+        // Shared-state safety: chunks pulled from many threads still
+        // partition the range exactly (centralized layout invariant).
+        prop::check("concurrent pulls partition", 20, |rng| {
+            let scheme = *rng.choose(&Scheme::ALL);
+            let n = rng.range(1_000, 20_000) as usize;
+            let p = 4;
+            let opts = PartitionerOptions {
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let part =
+                std::sync::Arc::new(Partitioner::new(scheme, 0, n, p, &opts));
+            let mut handles = Vec::new();
+            for _ in 0..p {
+                let part = part.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(c) = part.next_chunk() {
+                        got.push(c);
+                    }
+                    got
+                }));
+            }
+            let mut all: Vec<TaskRange> = handles
+                .into_iter()
+                .flat_map(|h| h.join().unwrap())
+                .collect();
+            all.sort_by_key(|c| c.start);
+            let mut cursor = 0;
+            for c in &all {
+                prop::ensure(
+                    c.start == cursor,
+                    format!("{scheme:?}: overlap/gap at {cursor}"),
+                )?;
+                cursor = c.end;
+            }
+            prop::ensure(cursor == n, format!("{scheme:?}: covered {cursor}/{n}"))
+        });
+    }
+}

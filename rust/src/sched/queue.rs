@@ -1,0 +1,574 @@
+//! Queue management (paper §3): the three work-queue layouts.
+//!
+//! 1. **Centralized** — one queue per device class; workers self-schedule
+//!    chunks straight from the shared partitioner. Two implementations:
+//!    the lock-based one the paper measured, and the atomic one its §5
+//!    future work proposes (precomputed chunk boundaries served by a
+//!    single `fetch_add`) — compared in `benches/ablations.rs`.
+//! 2. **Per-group (PERCPU)** — one queue per NUMA domain; the input is
+//!    pre-partitioned into one contiguous block per domain (this is what
+//!    gives STATIC its locality win in Figs. 8b/9b).
+//! 3. **Per-core (PERCORE)** — one queue per worker; maximal stealing
+//!    freedom, no pre-partitioning benefit beyond the owner block.
+//!
+//! In the multi-queue layouts every queue owns a [`Partitioner`] over its
+//! block, so a thief's steal granularity follows the chosen
+//! self-scheduling scheme (contribution C.2).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::partitioner::{Partitioner, PartitionerOptions, Scheme};
+use super::task::TaskRange;
+use crate::topology::Topology;
+
+/// Work-queue layout (paper Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueLayout {
+    /// One shared queue; `atomic` selects the lock-free variant.
+    Centralized { atomic: bool },
+    /// One queue per NUMA domain (the paper's PERCPU).
+    PerGroup,
+    /// One queue per worker (the paper's PERCORE).
+    PerCore,
+}
+
+impl QueueLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueLayout::Centralized { atomic: false } => "CENTRAL",
+            QueueLayout::Centralized { atomic: true } => "CENTRAL-ATOMIC",
+            QueueLayout::PerGroup => "PERCPU",
+            QueueLayout::PerCore => "PERCORE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "CENTRAL" | "CENTRALIZED" => {
+                Some(QueueLayout::Centralized { atomic: false })
+            }
+            "CENTRAL-ATOMIC" | "ATOMIC" => {
+                Some(QueueLayout::Centralized { atomic: true })
+            }
+            "PERCPU" | "PERGROUP" | "PERSOCKET" => Some(QueueLayout::PerGroup),
+            "PERCORE" | "PERWORKER" => Some(QueueLayout::PerCore),
+            _ => None,
+        }
+    }
+
+    /// Whether this layout uses work-stealing.
+    pub fn steals(&self) -> bool {
+        !matches!(self, QueueLayout::Centralized { .. })
+    }
+}
+
+/// A successful task acquisition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pull {
+    pub task: TaskRange,
+    /// Which queue served it.
+    pub queue: usize,
+    /// True iff the task came from a queue the worker does not own.
+    pub stolen: bool,
+}
+
+/// Common interface over the three layouts. `pull_local` serves a
+/// worker's own queue (or the central queue); `pull_from` targets a
+/// specific victim queue during stealing.
+pub trait TaskSource: Send + Sync {
+    fn pull_local(&self, worker: usize) -> Option<Pull>;
+    fn pull_from(&self, queue: usize, worker: usize) -> Option<Pull>;
+    /// Number of queues (1 for centralized).
+    fn n_queues(&self) -> usize;
+    /// The queue `worker` owns.
+    fn queue_of(&self, worker: usize) -> usize;
+    /// Items still unclaimed in `queue` (steal heuristics, tests).
+    fn remaining_in(&self, queue: usize) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// centralized, lock-based (the paper's measured implementation)
+// ---------------------------------------------------------------------------
+
+/// One shared partitioner behind a mutex — every access serializes,
+/// which is exactly the contention the paper observes (and which makes
+/// SS "explode" on 56 cores).
+pub struct CentralLocked {
+    part: Partitioner,
+}
+
+impl CentralLocked {
+    pub fn new(
+        scheme: Scheme,
+        total: usize,
+        workers: usize,
+        opts: &PartitionerOptions,
+    ) -> Self {
+        CentralLocked { part: Partitioner::new(scheme, 0, total, workers, opts) }
+    }
+}
+
+impl TaskSource for CentralLocked {
+    fn pull_local(&self, _worker: usize) -> Option<Pull> {
+        self.part
+            .next_chunk()
+            .map(|task| Pull { task, queue: 0, stolen: false })
+    }
+
+    fn pull_from(&self, _queue: usize, worker: usize) -> Option<Pull> {
+        self.pull_local(worker)
+    }
+
+    fn n_queues(&self) -> usize {
+        1
+    }
+
+    fn queue_of(&self, _worker: usize) -> usize {
+        0
+    }
+
+    fn remaining_in(&self, _queue: usize) -> usize {
+        self.part.remaining()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// centralized, atomic (§5 future work; ablation)
+// ---------------------------------------------------------------------------
+
+/// Chunk boundaries are precomputed once (every scheme's sequence is
+/// deterministic given its seed), then served by a single `fetch_add` —
+/// no lock, no serialization beyond cache-line ping-pong on the counter.
+pub struct CentralAtomic {
+    chunks: Vec<TaskRange>,
+    head: AtomicUsize,
+    total: usize,
+}
+
+impl CentralAtomic {
+    pub fn new(
+        scheme: Scheme,
+        total: usize,
+        workers: usize,
+        opts: &PartitionerOptions,
+    ) -> Self {
+        let chunks =
+            Partitioner::new(scheme, 0, total, workers, opts).chunk_sequence();
+        CentralAtomic { chunks, head: AtomicUsize::new(0), total }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+impl TaskSource for CentralAtomic {
+    fn pull_local(&self, _worker: usize) -> Option<Pull> {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        self.chunks
+            .get(i)
+            .map(|&task| Pull { task, queue: 0, stolen: false })
+    }
+
+    fn pull_from(&self, _queue: usize, worker: usize) -> Option<Pull> {
+        self.pull_local(worker)
+    }
+
+    fn n_queues(&self) -> usize {
+        1
+    }
+
+    fn queue_of(&self, _worker: usize) -> usize {
+        0
+    }
+
+    fn remaining_in(&self, _queue: usize) -> usize {
+        let served: usize = self
+            .chunks
+            .iter()
+            .take(self.head.load(Ordering::Relaxed).min(self.chunks.len()))
+            .map(|c| c.len())
+            .sum();
+        self.total - served
+    }
+}
+
+// ---------------------------------------------------------------------------
+// multi-queue (PERCORE / PERCPU) with per-queue partitioners
+// ---------------------------------------------------------------------------
+
+/// The two multi-queue layouts differ in how tasks reach the queues —
+/// a distinction the paper leans on to explain Figs. 8-9:
+///
+/// - **PERCORE** (`Dealt`): *no pre-partitioning*. The chunk sequence is
+///   generated globally by the scheme (exactly as the centralized
+///   layout would) and dealt round-robin into one queue per worker;
+///   workers obtain tasks "in arbitrary order" with no block locality —
+///   which is why STATIC under PERCORE performs like STATIC under the
+///   centralized queue (§4, Fig. 8a discussion).
+/// - **PERCPU** (`Blocked`): the input is pre-partitioned into one
+///   contiguous block per NUMA domain, each with its own partitioner —
+///   the improved spatial locality the paper credits for STATIC's win
+///   in Figs. 8b/9b. Chunk formulas still use the *global* worker count
+///   P, so MFSC's granularity shrinks by 1/#CPU (the contention effect
+///   of Fig. 8b).
+///
+/// In both layouts a thief's steal granularity follows the chosen
+/// scheme (C.2): dealt chunks were generated by it, and block
+/// partitioners compute it on demand.
+enum MultiQueueKind {
+    Dealt { queues: Vec<Mutex<std::collections::VecDeque<TaskRange>>> },
+    Blocked { queues: Vec<Partitioner> },
+}
+
+use std::sync::Mutex;
+
+/// Per-core or per-NUMA-group queues (see [`MultiQueueKind`]).
+pub struct MultiQueue {
+    kind: MultiQueueKind,
+    /// worker -> owned queue index.
+    owner: Vec<usize>,
+    /// queue -> NUMA domain it is homed on.
+    socket: Vec<usize>,
+    /// Whether queue blocks correspond to contiguous input blocks
+    /// (execution locality accounting in the DES).
+    pub pre_partitioned: bool,
+}
+
+impl MultiQueue {
+    pub fn new(
+        layout: QueueLayout,
+        scheme: Scheme,
+        total: usize,
+        topo: &Topology,
+        opts: &PartitionerOptions,
+    ) -> Self {
+        let workers = topo.n_cores();
+        match layout {
+            QueueLayout::PerCore => {
+                // global chunk sequence, dealt round-robin
+                let chunks =
+                    Partitioner::new(scheme, 0, total, workers, opts)
+                        .chunk_sequence();
+                let mut queues: Vec<std::collections::VecDeque<TaskRange>> =
+                    (0..workers).map(|_| Default::default()).collect();
+                for (i, chunk) in chunks.into_iter().enumerate() {
+                    queues[i % workers].push_back(chunk);
+                }
+                MultiQueue {
+                    kind: MultiQueueKind::Dealt {
+                        queues: queues.into_iter().map(Mutex::new).collect(),
+                    },
+                    owner: (0..workers).collect(),
+                    socket: (0..workers).map(|w| topo.socket_of(w)).collect(),
+                    pre_partitioned: false,
+                }
+            }
+            QueueLayout::PerGroup => {
+                let n_queues = topo.sockets;
+                let base_size = total / n_queues;
+                let extra = total % n_queues;
+                let mut queues = Vec::with_capacity(n_queues);
+                let mut start = 0;
+                for q in 0..n_queues {
+                    let len = base_size + usize::from(q < extra);
+                    queues.push(Partitioner::new(
+                        scheme,
+                        start,
+                        len,
+                        workers,
+                        &PartitionerOptions {
+                            seed: opts.seed.wrapping_add(q as u64),
+                            ..opts.clone()
+                        },
+                    ));
+                    start += len;
+                }
+                debug_assert_eq!(start, total);
+                MultiQueue {
+                    kind: MultiQueueKind::Blocked { queues },
+                    owner: (0..workers).map(|w| topo.socket_of(w)).collect(),
+                    socket: (0..n_queues).collect(),
+                    pre_partitioned: true,
+                }
+            }
+            QueueLayout::Centralized { .. } => {
+                panic!("MultiQueue requires a multi-queue layout")
+            }
+        }
+    }
+
+    /// NUMA domain a queue is homed on (victim selection).
+    pub fn socket_of_queue(&self, queue: usize) -> usize {
+        self.socket[queue]
+    }
+
+    fn pop(&self, queue: usize) -> Option<TaskRange> {
+        match &self.kind {
+            MultiQueueKind::Dealt { queues } => {
+                queues[queue].lock().unwrap().pop_front()
+            }
+            MultiQueueKind::Blocked { queues } => queues[queue].next_chunk(),
+        }
+    }
+}
+
+impl TaskSource for MultiQueue {
+    fn pull_local(&self, worker: usize) -> Option<Pull> {
+        let q = self.owner[worker];
+        self.pop(q).map(|task| Pull { task, queue: q, stolen: false })
+    }
+
+    fn pull_from(&self, queue: usize, worker: usize) -> Option<Pull> {
+        let stolen = self.owner[worker] != queue;
+        self.pop(queue).map(|task| Pull { task, queue, stolen })
+    }
+
+    fn n_queues(&self) -> usize {
+        self.socket.len()
+    }
+
+    fn queue_of(&self, worker: usize) -> usize {
+        self.owner[worker]
+    }
+
+    fn remaining_in(&self, queue: usize) -> usize {
+        match &self.kind {
+            MultiQueueKind::Dealt { queues } => queues[queue]
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|t| t.len())
+                .sum(),
+            MultiQueueKind::Blocked { queues } => queues[queue].remaining(),
+        }
+    }
+}
+
+/// Build the task source for a layout (the Fig. 4 queue system).
+pub fn build_source(
+    layout: QueueLayout,
+    scheme: Scheme,
+    total: usize,
+    topo: &Topology,
+    opts: &PartitionerOptions,
+) -> Box<dyn TaskSource> {
+    match layout {
+        QueueLayout::Centralized { atomic: false } => {
+            Box::new(CentralLocked::new(scheme, total, topo.n_cores(), opts))
+        }
+        QueueLayout::Centralized { atomic: true } => {
+            Box::new(CentralAtomic::new(scheme, total, topo.n_cores(), opts))
+        }
+        QueueLayout::PerGroup | QueueLayout::PerCore => {
+            Box::new(MultiQueue::new(layout, scheme, total, topo, opts))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn opts() -> PartitionerOptions {
+        PartitionerOptions::default()
+    }
+
+    fn drain_all(src: &dyn TaskSource) -> Vec<TaskRange> {
+        let mut out = Vec::new();
+        for q in 0..src.n_queues() {
+            while let Some(p) = src.pull_from(q, 0) {
+                out.push(p.task);
+            }
+        }
+        out.sort_by_key(|t| t.start);
+        out
+    }
+
+    fn assert_partition(chunks: &[TaskRange], n: usize) {
+        let mut cursor = 0;
+        for c in chunks {
+            assert_eq!(c.start, cursor, "gap/overlap at {cursor}");
+            cursor = c.end;
+        }
+        assert_eq!(cursor, n);
+    }
+
+    #[test]
+    fn central_locked_partitions() {
+        let topo = Topology::broadwell20();
+        let src = CentralLocked::new(Scheme::Gss, 1000, topo.n_cores(), &opts());
+        assert_eq!(src.n_queues(), 1);
+        assert_partition(&drain_all(&src), 1000);
+    }
+
+    #[test]
+    fn central_atomic_matches_locked_sequence() {
+        let locked = CentralLocked::new(Scheme::Tss, 5000, 8, &opts());
+        let atomic = CentralAtomic::new(Scheme::Tss, 5000, 8, &opts());
+        let a = drain_all(&locked);
+        let b = drain_all(&atomic);
+        assert_eq!(a, b, "atomic variant must serve the same chunks");
+    }
+
+    #[test]
+    fn central_atomic_remaining_tracks() {
+        let src = CentralAtomic::new(Scheme::Static, 100, 4, &opts());
+        assert_eq!(src.remaining_in(0), 100);
+        src.pull_local(0).unwrap();
+        assert_eq!(src.remaining_in(0), 75);
+    }
+
+    #[test]
+    fn percore_deals_global_sequence_round_robin() {
+        let topo = Topology::broadwell20();
+        let mq =
+            MultiQueue::new(QueueLayout::PerCore, Scheme::Static, 1000, &topo, &opts());
+        assert_eq!(mq.n_queues(), 20);
+        assert!(!mq.pre_partitioned);
+        // STATIC generates exactly P=20 chunks globally; dealt round-
+        // robin, each queue holds one chunk of 50.
+        for q in 0..20 {
+            assert_eq!(mq.remaining_in(q), 50, "queue {q}");
+        }
+        assert_partition(&drain_all(&mq), 1000);
+    }
+
+    #[test]
+    fn percore_chunks_match_central_sequence() {
+        // No pre-partitioning: the dealt chunks are exactly the chunk
+        // sequence the centralized queue would serve (§4, Fig. 8a).
+        let topo = Topology::broadwell20();
+        let central =
+            CentralLocked::new(Scheme::Gss, 5000, topo.n_cores(), &opts());
+        let percore = MultiQueue::new(
+            QueueLayout::PerCore,
+            Scheme::Gss,
+            5000,
+            &topo,
+            &opts(),
+        );
+        let mut a = drain_all(&central);
+        let mut b = drain_all(&percore);
+        a.sort_by_key(|t| t.start);
+        b.sort_by_key(|t| t.start);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pergroup_one_queue_per_socket() {
+        let topo = Topology::broadwell20();
+        let mq =
+            MultiQueue::new(QueueLayout::PerGroup, Scheme::Gss, 997, &topo, &opts());
+        assert_eq!(mq.n_queues(), 2);
+        assert!(mq.pre_partitioned);
+        assert_eq!(mq.queue_of(0), 0);
+        assert_eq!(mq.queue_of(19), 1);
+        assert_eq!(mq.socket_of_queue(1), 1);
+        assert_partition(&drain_all(&mq), 997);
+    }
+
+    #[test]
+    fn pergroup_blocks_are_contiguous_per_socket() {
+        let topo = Topology::broadwell20();
+        let mq = MultiQueue::new(
+            QueueLayout::PerGroup,
+            Scheme::Static,
+            1000,
+            &topo,
+            &opts(),
+        );
+        // queue 0 serves only rows < 500, queue 1 only rows >= 500
+        let mut q0 = Vec::new();
+        while let Some(p) = mq.pull_from(0, 0) {
+            q0.push(p.task);
+        }
+        assert!(q0.iter().all(|t| t.end <= 500), "{q0:?}");
+        let mut q1 = Vec::new();
+        while let Some(p) = mq.pull_from(1, 19) {
+            q1.push(p.task);
+        }
+        assert!(q1.iter().all(|t| t.start >= 500), "{q1:?}");
+    }
+
+    #[test]
+    fn pergroup_blocks_halve_mfsc_granularity() {
+        // The Fig. 8b effect: pre-partitioning a block per CPU shrinks
+        // MFSC's chunk size (computed over N/#CPU items), raising queue
+        // traffic.
+        let topo = Topology::broadwell20();
+        let central =
+            CentralLocked::new(Scheme::Mfsc, 100_000, topo.n_cores(), &opts());
+        let grouped =
+            MultiQueue::new(QueueLayout::PerGroup, Scheme::Mfsc, 100_000, &topo, &opts());
+        let c0 = central.pull_local(0).unwrap().task.len();
+        let g0 = grouped.pull_local(0).unwrap().task.len();
+        assert!(
+            g0 < c0,
+            "per-group MFSC chunk {g0} should be smaller than central {c0}"
+        );
+    }
+
+    #[test]
+    fn steal_marks_stolen() {
+        let topo = Topology::broadwell20();
+        let mq =
+            MultiQueue::new(QueueLayout::PerCore, Scheme::Static, 1000, &topo, &opts());
+        let own = mq.pull_local(3).unwrap();
+        assert!(!own.stolen);
+        let theft = mq.pull_from(7, 3).unwrap();
+        assert!(theft.stolen);
+        assert_eq!(theft.queue, 7);
+    }
+
+    #[test]
+    fn layout_parse_roundtrip() {
+        for (s, l) in [
+            ("central", QueueLayout::Centralized { atomic: false }),
+            ("atomic", QueueLayout::Centralized { atomic: true }),
+            ("percpu", QueueLayout::PerGroup),
+            ("percore", QueueLayout::PerCore),
+        ] {
+            assert_eq!(QueueLayout::parse(s), Some(l));
+        }
+        assert_eq!(QueueLayout::parse("bogus"), None);
+    }
+
+    #[test]
+    fn prop_every_layout_partitions_exactly() {
+        prop::check("all layouts partition", 60, |rng| {
+            let topo = if rng.below(2) == 0 {
+                Topology::broadwell20()
+            } else {
+                Topology::cascadelake56()
+            };
+            let layout = *rng.choose(&[
+                QueueLayout::Centralized { atomic: false },
+                QueueLayout::Centralized { atomic: true },
+                QueueLayout::PerGroup,
+                QueueLayout::PerCore,
+            ]);
+            let scheme = *rng.choose(&Scheme::ALL);
+            let n = rng.range(1, 30_000) as usize;
+            let o = PartitionerOptions { seed: rng.next_u64(), ..opts() };
+            let src = build_source(layout, scheme, n, &topo, &o);
+            let mut chunks = Vec::new();
+            for q in 0..src.n_queues() {
+                while let Some(p) = src.pull_from(q, 0) {
+                    chunks.push(p.task);
+                }
+            }
+            chunks.sort_by_key(|t| t.start);
+            let mut cursor = 0;
+            for c in &chunks {
+                prop::ensure(
+                    c.start == cursor && !c.is_empty(),
+                    format!("{layout:?}/{scheme:?}: bad chunk {c:?} at {cursor}"),
+                )?;
+                cursor = c.end;
+            }
+            prop::ensure(cursor == n, format!("covered {cursor}/{n}"))
+        });
+    }
+}

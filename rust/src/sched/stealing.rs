@@ -1,0 +1,120 @@
+//! The stealing protocol shared by the real-thread executor and the DES.
+//!
+//! Contribution C.2: a thief does not take a fixed number of tasks — it
+//! asks the victim queue's partitioner for *its next chunk*, so the
+//! stolen amount follows the configured self-scheduling technique
+//! (decreasing under GSS/TSS/FAC2, fixed under MFSC, growing under
+//! FISS/VISS...). This resolves "how much should a thief steal" by reusing
+//! the work-partitioning answer.
+
+use super::queue::{Pull, TaskSource};
+use super::victim::VictimSelector;
+
+/// Outcome of one steal round.
+#[derive(Debug, Clone, Copy)]
+pub struct StealOutcome {
+    pub pull: Option<Pull>,
+    /// Queues probed before success / giving up (contention accounting).
+    pub attempts: usize,
+}
+
+/// Try one full round of victims; stop at the first queue that yields a
+/// task. An empty round (no victims or all empty) returns `pull: None`,
+/// which — because partitioners never refill — means global work is
+/// exhausted for this thief.
+pub fn steal_round(
+    source: &dyn TaskSource,
+    selector: &mut VictimSelector,
+    worker: usize,
+) -> StealOutcome {
+    let mut attempts = 0;
+    for victim in selector.round() {
+        attempts += 1;
+        if let Some(pull) = source.pull_from(victim, worker) {
+            debug_assert!(pull.stolen || victim == source.queue_of(worker));
+            return StealOutcome { pull: Some(pull), attempts };
+        }
+    }
+    StealOutcome { pull: None, attempts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::partitioner::{PartitionerOptions, Scheme};
+    use crate::sched::queue::{MultiQueue, QueueLayout};
+    use crate::sched::victim::VictimStrategy;
+    use crate::topology::Topology;
+
+    fn selector(strategy: VictimStrategy, own: usize, topo: &Topology) -> VictimSelector {
+        let qs: Vec<usize> = (0..topo.n_cores()).map(|c| topo.socket_of(c)).collect();
+        VictimSelector::new(strategy, own, topo.socket_of(own), qs, 42)
+    }
+
+    #[test]
+    fn thief_gets_chunk_from_victim_block() {
+        let topo = Topology::broadwell20();
+        let mq = MultiQueue::new(
+            QueueLayout::PerCore,
+            Scheme::Gss,
+            2000,
+            &topo,
+            &PartitionerOptions::default(),
+        );
+        // Drain worker 0's own queue.
+        while mq.pull_local(0).is_some() {}
+        let mut sel = selector(VictimStrategy::Seq, 0, &topo);
+        let out = steal_round(&mq, &mut sel, 0);
+        let pull = out.pull.expect("other queues have work");
+        assert!(pull.stolen);
+        assert_ne!(pull.queue, 0);
+        // PERCORE deals the *global* GSS sequence round-robin; queue 1
+        // holds the 2nd global chunk: ceil((2000 - 100)/20) = 95.
+        assert_eq!(pull.task.len(), 95);
+    }
+
+    #[test]
+    fn stolen_chunks_follow_scheme_sequence() {
+        // C.2: successive steals from one victim follow the victim
+        // partitioner's GSS sequence (decaying), not a fixed constant.
+        let topo = Topology::symmetric("t2", 1, 2, 1.0, 1.0);
+        let mq = MultiQueue::new(
+            QueueLayout::PerCore,
+            Scheme::Gss,
+            2048,
+            &topo,
+            &PartitionerOptions::default(),
+        );
+        while mq.pull_local(0).is_some() {}
+        let mut sel = selector(VictimStrategy::Seq, 0, &topo);
+        let mut sizes = Vec::new();
+        for _ in 0..4 {
+            let out = steal_round(&mq, &mut sel, 0);
+            sizes.push(out.pull.unwrap().task.len());
+        }
+        // global GSS sequence on 2048/P=2: 1024, 512, 256, 128, 64, 32,
+        // 16, 8...; odd-indexed chunks land in queue 1, so the thief
+        // sees 512, 128, 32, 8 — still the scheme's (dealt) sequence,
+        // not a fixed steal amount (C.2).
+        assert_eq!(sizes, vec![512, 128, 32, 8]);
+    }
+
+    #[test]
+    fn steal_round_reports_attempts_when_all_empty() {
+        let topo = Topology::broadwell20();
+        let mq = MultiQueue::new(
+            QueueLayout::PerCore,
+            Scheme::Static,
+            20,
+            &topo,
+            &PartitionerOptions::default(),
+        );
+        for q in 0..20 {
+            while mq.pull_from(q, q).is_some() {}
+        }
+        let mut sel = selector(VictimStrategy::Rnd, 3, &topo);
+        let out = steal_round(&mq, &mut sel, 3);
+        assert!(out.pull.is_none());
+        assert_eq!(out.attempts, 19, "must have probed every other queue");
+    }
+}

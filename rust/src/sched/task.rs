@@ -1,0 +1,77 @@
+//! Tasks: the smallest unit of work DaphneSched schedules.
+//!
+//! DAPHNE exploits data parallelism, so a task is a contiguous range of
+//! fine-grained work items (rows of the input matrix); the partitioning
+//! scheme decides each task's extent (variable-size tasks, Fig. 3b).
+
+/// A half-open range `[start, end)` of work items forming one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl TaskRange {
+    pub fn new(start: usize, end: usize) -> Self {
+        debug_assert!(start <= end, "inverted task range {start}..{end}");
+        TaskRange { start, end }
+    }
+
+    /// Number of work items in the task (its granularity).
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// Iterate over the item indices.
+    pub fn iter(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+
+    /// Split off the first `n` items (used by the per-queue partitioners).
+    pub fn split_first(&self, n: usize) -> (TaskRange, TaskRange) {
+        let mid = (self.start + n).min(self.end);
+        (
+            TaskRange::new(self.start, mid),
+            TaskRange::new(mid, self.end),
+        )
+    }
+}
+
+impl From<std::ops::Range<usize>> for TaskRange {
+    fn from(r: std::ops::Range<usize>) -> Self {
+        TaskRange::new(r.start, r.end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn len_and_empty() {
+        assert_eq!(TaskRange::new(3, 10).len(), 7);
+        assert!(TaskRange::new(4, 4).is_empty());
+        assert!(!TaskRange::new(4, 5).is_empty());
+    }
+
+    #[test]
+    fn split_first_respects_bounds() {
+        let t = TaskRange::new(10, 20);
+        let (a, b) = t.split_first(4);
+        assert_eq!((a.start, a.end), (10, 14));
+        assert_eq!((b.start, b.end), (14, 20));
+        let (a, b) = t.split_first(100);
+        assert_eq!(a, t);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn iter_covers_items() {
+        let t = TaskRange::new(2, 5);
+        assert_eq!(t.iter().collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Victim selection for work-stealing (paper §2): SEQ, SEQPRI, RND,
+//! RNDPRI.
+//!
+//! - **SEQ**: round-robin search starting from the thief's position in
+//!   the system topology \[Perarnau & Sato, IPDPS'14\].
+//! - **SEQPRI**: like SEQ but victims in the thief's own NUMA domain are
+//!   searched first (preserves locality, minimises inter-socket traffic).
+//! - **RND**: uniformly random victim order.
+//! - **RNDPRI**: random order within the thief's NUMA domain first, then
+//!   random order over the rest.
+
+use crate::util::Rng;
+
+/// The four victim-selection strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VictimStrategy {
+    Seq,
+    SeqPri,
+    Rnd,
+    RndPri,
+}
+
+impl VictimStrategy {
+    pub const ALL: [VictimStrategy; 4] = [
+        VictimStrategy::Seq,
+        VictimStrategy::SeqPri,
+        VictimStrategy::Rnd,
+        VictimStrategy::RndPri,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimStrategy::Seq => "SEQ",
+            VictimStrategy::SeqPri => "SEQPRI",
+            VictimStrategy::Rnd => "RND",
+            VictimStrategy::RndPri => "RNDPRI",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "SEQ" => Some(VictimStrategy::Seq),
+            "SEQPRI" => Some(VictimStrategy::SeqPri),
+            "RND" | "RAND" | "RANDOM" => Some(VictimStrategy::Rnd),
+            "RNDPRI" | "RANDPRI" => Some(VictimStrategy::RndPri),
+            _ => None,
+        }
+    }
+}
+
+/// Per-thief victim picker. Owns the thief's round-robin cursor (SEQ*)
+/// and RNG stream (RND*), so selection is deterministic per seed.
+#[derive(Debug)]
+pub struct VictimSelector {
+    strategy: VictimStrategy,
+    /// The thief's own queue (never a candidate).
+    own_queue: usize,
+    /// NUMA domain of every queue.
+    queue_socket: Vec<usize>,
+    /// The thief's NUMA domain.
+    my_socket: usize,
+    /// Persistent round-robin cursor (SEQ/SEQPRI).
+    cursor: usize,
+    rng: Rng,
+}
+
+impl VictimSelector {
+    pub fn new(
+        strategy: VictimStrategy,
+        own_queue: usize,
+        my_socket: usize,
+        queue_socket: Vec<usize>,
+        seed: u64,
+    ) -> Self {
+        let cursor = (own_queue + 1) % queue_socket.len().max(1);
+        VictimSelector {
+            strategy,
+            own_queue,
+            queue_socket,
+            my_socket,
+            cursor,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn n_queues(&self) -> usize {
+        self.queue_socket.len()
+    }
+
+    /// Candidate victim queues for one steal round, in preference order.
+    /// Every other queue appears exactly once, so a full round visits the
+    /// whole system (termination guarantee for the steal loop).
+    pub fn round(&mut self) -> Vec<usize> {
+        let n = self.n_queues();
+        if n <= 1 {
+            return Vec::new();
+        }
+        match self.strategy {
+            VictimStrategy::Seq => {
+                let start = self.cursor;
+                let order: Vec<usize> = (0..n)
+                    .map(|i| (start + i) % n)
+                    .filter(|&q| q != self.own_queue)
+                    .collect();
+                self.cursor = (self.cursor + 1) % n;
+                order
+            }
+            VictimStrategy::SeqPri => {
+                let start = self.cursor;
+                let rotated: Vec<usize> = (0..n)
+                    .map(|i| (start + i) % n)
+                    .filter(|&q| q != self.own_queue)
+                    .collect();
+                let (mut local, remote): (Vec<usize>, Vec<usize>) = rotated
+                    .into_iter()
+                    .partition(|&q| self.queue_socket[q] == self.my_socket);
+                self.cursor = (self.cursor + 1) % n;
+                local.extend(remote);
+                local
+            }
+            VictimStrategy::Rnd => {
+                let mut order: Vec<usize> =
+                    (0..n).filter(|&q| q != self.own_queue).collect();
+                self.rng.shuffle(&mut order);
+                order
+            }
+            VictimStrategy::RndPri => {
+                let (mut local, mut remote): (Vec<usize>, Vec<usize>) = (0..n)
+                    .filter(|&q| q != self.own_queue)
+                    .partition(|&q| self.queue_socket[q] == self.my_socket);
+                self.rng.shuffle(&mut local);
+                self.rng.shuffle(&mut remote);
+                local.extend(remote);
+                local
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn two_socket_queues(per_socket: usize) -> Vec<usize> {
+        (0..2 * per_socket).map(|q| q / per_socket).collect()
+    }
+
+    #[test]
+    fn seq_rotates_round_robin() {
+        let mut v = VictimSelector::new(
+            VictimStrategy::Seq,
+            0,
+            0,
+            two_socket_queues(2), // queues 0,1 on s0; 2,3 on s1
+            1,
+        );
+        let r1 = v.round();
+        assert_eq!(r1, vec![1, 2, 3]);
+        let r2 = v.round();
+        assert_eq!(r2, vec![2, 3, 1]); // cursor advanced
+    }
+
+    #[test]
+    fn seqpri_prefers_same_socket() {
+        let mut v = VictimSelector::new(
+            VictimStrategy::SeqPri,
+            0,
+            0,
+            two_socket_queues(4), // 0-3 on s0, 4-7 on s1
+            1,
+        );
+        let r = v.round();
+        // first candidates all on socket 0
+        assert!(r[..3].iter().all(|&q| q < 4), "{r:?}");
+        assert!(r[3..].iter().all(|&q| q >= 4), "{r:?}");
+    }
+
+    #[test]
+    fn rndpri_partitions_by_socket() {
+        let mut v = VictimSelector::new(
+            VictimStrategy::RndPri,
+            5, // on socket 1
+            1,
+            two_socket_queues(4),
+            7,
+        );
+        let r = v.round();
+        assert_eq!(r.len(), 7);
+        assert!(r[..3].iter().all(|&q| q >= 4), "{r:?}");
+        assert!(r[3..].iter().all(|&q| q < 4), "{r:?}");
+    }
+
+    #[test]
+    fn rnd_is_seeded() {
+        let mk = || {
+            VictimSelector::new(
+                VictimStrategy::Rnd,
+                0,
+                0,
+                two_socket_queues(8),
+                99,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        assert_eq!(a.round(), b.round());
+        assert_eq!(a.round(), b.round());
+    }
+
+    #[test]
+    fn single_queue_has_no_victims() {
+        for s in VictimStrategy::ALL {
+            let mut v = VictimSelector::new(s, 0, 0, vec![0], 1);
+            assert!(v.round().is_empty(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn prop_round_visits_every_other_queue_once() {
+        prop::check("victim round is a permutation", 100, |rng| {
+            let strategy = *rng.choose(&VictimStrategy::ALL);
+            let per_socket = rng.range(1, 8) as usize;
+            let sockets = rng.range(1, 4) as usize;
+            let n = per_socket * sockets;
+            let queue_socket: Vec<usize> =
+                (0..n).map(|q| q / per_socket).collect();
+            let own = rng.index(n);
+            let mut v = VictimSelector::new(
+                strategy,
+                own,
+                queue_socket[own],
+                queue_socket,
+                rng.next_u64(),
+            );
+            let mut r = v.round();
+            prop::ensure(!r.contains(&own), format!("{strategy:?}: steals self"))?;
+            r.sort_unstable();
+            let expect: Vec<usize> = (0..n).filter(|&q| q != own).collect();
+            prop::ensure(r == expect, format!("{strategy:?}: not a permutation"))
+        });
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in VictimStrategy::ALL {
+            assert_eq!(VictimStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(VictimStrategy::parse("bogus"), None);
+    }
+}

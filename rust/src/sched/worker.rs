@@ -1,0 +1,297 @@
+//! Worker management (paper §3): the real-thread executor.
+//!
+//! Spawns one OS thread per topology place and drives the layout's
+//! [`TaskSource`] with the configured victim selection. The DES
+//! ([`crate::sim`]) drives the *same* `TaskSource`/`VictimSelector` in
+//! virtual time; this executor is the ground-truth path used by tests,
+//! examples and host-scale benchmarks.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::{SchedReport, WorkerStats};
+use super::partitioner::PartitionerOptions;
+use super::queue::{self, TaskSource};
+use super::stealing;
+use super::task::TaskRange;
+use super::victim::VictimSelector;
+use crate::config::SchedConfig;
+use crate::topology::Topology;
+
+/// The real-thread worker pool.
+pub struct ThreadPool {
+    topo: Topology,
+    config: SchedConfig,
+}
+
+impl ThreadPool {
+    pub fn new(topo: Topology, config: SchedConfig) -> Self {
+        ThreadPool { topo, config }
+    }
+
+    /// Schedule `total` work items over the pool; `body(worker, range)`
+    /// executes one task. Returns the scheduling report.
+    ///
+    /// `body` must be safe to call concurrently for disjoint ranges —
+    /// the partitioning invariant (tested in [`queue`]) guarantees
+    /// every item index is handed out exactly once.
+    pub fn run<F>(&self, total: usize, body: F) -> SchedReport
+    where
+        F: Fn(usize, TaskRange) + Send + Sync,
+    {
+        let opts = PartitionerOptions {
+            stages: self.config.stages,
+            pls_swr: self.config.pls_swr,
+            seed: self.config.seed,
+        };
+        let source: Arc<Box<dyn TaskSource>> = Arc::new(queue::build_source(
+            self.config.layout,
+            self.config.scheme,
+            total,
+            &self.topo,
+            &opts,
+        ));
+        let n = self.topo.n_cores();
+        let body = &body;
+        let start = Instant::now();
+
+        let per_worker: Vec<WorkerStats> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n);
+            for w in 0..n {
+                let source = Arc::clone(&source);
+                let topo = &self.topo;
+                let config = &self.config;
+                handles.push(scope.spawn(move || {
+                    worker_loop(w, &**source, topo, config, body)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        SchedReport {
+            scheme: self.config.scheme.name().to_string(),
+            layout: self.config.layout.name().to_string(),
+            victim: self.config.victim.name().to_string(),
+            makespan: start.elapsed().as_secs_f64(),
+            per_worker,
+        }
+    }
+}
+
+fn worker_loop<F>(
+    w: usize,
+    source: &dyn TaskSource,
+    topo: &Topology,
+    config: &SchedConfig,
+    body: &F,
+) -> WorkerStats
+where
+    F: Fn(usize, TaskRange) + Send + Sync,
+{
+    let mut stats = WorkerStats::default();
+    let steals = config.layout.steals();
+    let mut selector = steals.then(|| {
+        let queue_socket: Vec<usize> = (0..source.n_queues())
+            .map(|q| queue_socket_of(source, q, topo))
+            .collect();
+        VictimSelector::new(
+            config.victim,
+            source.queue_of(w),
+            topo.socket_of(w.min(topo.n_cores() - 1)),
+            queue_socket,
+            config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
+        )
+    });
+
+    loop {
+        let t0 = Instant::now();
+        let pull = source.pull_local(w).or_else(|| {
+            let selector = selector.as_mut()?;
+            let out = stealing::steal_round(source, selector, w);
+            stats.failed_steals +=
+                out.attempts - usize::from(out.pull.is_some());
+            out.pull
+        });
+        stats.queue_wait += t0.elapsed().as_secs_f64();
+
+        let Some(pull) = pull else { break };
+        if pull.stolen {
+            stats.steals += 1;
+            stats.stolen_items += pull.task.len();
+        }
+
+        let t1 = Instant::now();
+        body(w, pull.task);
+        stats.busy += t1.elapsed().as_secs_f64();
+        stats.tasks += 1;
+        stats.items += pull.task.len();
+    }
+    stats
+}
+
+/// NUMA domain a queue is homed on: for per-core layouts it is the
+/// owner's socket, for per-group layouts the group index, for the
+/// centralized layout socket 0.
+fn queue_socket_of(source: &dyn TaskSource, q: usize, topo: &Topology) -> usize {
+    if source.n_queues() == topo.n_cores() {
+        topo.socket_of(q)
+    } else if source.n_queues() == topo.sockets {
+        q
+    } else {
+        0
+    }
+}
+
+/// Convenience: run one configuration end-to-end (used by examples).
+pub fn run_once<F>(
+    topo: &Topology,
+    config: &SchedConfig,
+    total: usize,
+    body: F,
+) -> SchedReport
+where
+    F: Fn(usize, TaskRange) + Send + Sync,
+{
+    ThreadPool::new(topo.clone(), config.clone()).run(total, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::partitioner::Scheme;
+    use crate::sched::queue::QueueLayout;
+    use crate::sched::victim::VictimStrategy;
+    use crate::util::prop;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn host4() -> Topology {
+        Topology::symmetric("test4", 2, 2, 1.5, 1.0)
+    }
+
+    fn count_items(topo: &Topology, config: &SchedConfig, total: usize) -> SchedReport {
+        let hits: Vec<AtomicUsize> =
+            (0..total).map(|_| AtomicUsize::new(0)).collect();
+        let report = run_once(topo, config, total, |_w, range| {
+            for i in range.iter() {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} executed != once");
+        }
+        report
+    }
+
+    #[test]
+    fn centralized_executes_every_item_once() {
+        let cfg = SchedConfig::default().with_scheme(Scheme::Gss);
+        let r = count_items(&host4(), &cfg, 10_000);
+        assert_eq!(r.total_items(), 10_000);
+        assert_eq!(r.total_steals(), 0);
+    }
+
+    #[test]
+    fn percore_with_stealing_executes_every_item_once() {
+        for victim in VictimStrategy::ALL {
+            let cfg = SchedConfig::default()
+                .with_scheme(Scheme::Fac2)
+                .with_layout(QueueLayout::PerCore)
+                .with_victim(victim);
+            let r = count_items(&host4(), &cfg, 5_000);
+            assert_eq!(r.total_items(), 5_000, "{victim:?}");
+        }
+    }
+
+    #[test]
+    fn pergroup_executes_every_item_once() {
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Tss)
+            .with_layout(QueueLayout::PerGroup)
+            .with_victim(VictimStrategy::SeqPri);
+        let r = count_items(&host4(), &cfg, 7_777);
+        assert_eq!(r.total_items(), 7_777);
+    }
+
+    #[test]
+    fn atomic_central_executes_every_item_once() {
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Mfsc)
+            .with_layout(QueueLayout::Centralized { atomic: true });
+        let r = count_items(&host4(), &cfg, 12_345);
+        assert_eq!(r.total_items(), 12_345);
+    }
+
+    #[test]
+    fn skewed_work_induces_steals_under_percore() {
+        // All the cost in the first block: workers owning later blocks
+        // finish instantly and must steal.
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Fac2)
+            .with_layout(QueueLayout::PerCore)
+            .with_victim(VictimStrategy::Seq);
+        let r = run_once(&host4(), &cfg, 4_000, |_w, range| {
+            for i in range.iter() {
+                if i < 1000 {
+                    std::hint::black_box((0..2_000).sum::<u64>());
+                }
+            }
+        });
+        assert!(
+            r.total_steals() > 0,
+            "skew must trigger stealing: {:?}",
+            r.row()
+        );
+    }
+
+    #[test]
+    fn report_names_match_config() {
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Pss)
+            .with_layout(QueueLayout::PerCore)
+            .with_victim(VictimStrategy::RndPri);
+        let r = count_items(&host4(), &cfg, 100);
+        assert_eq!(r.scheme, "PSS");
+        assert_eq!(r.layout, "PERCORE");
+        assert_eq!(r.victim, "RNDPRI");
+    }
+
+    #[test]
+    fn prop_all_configs_execute_exactly_once() {
+        prop::check("thread pool executes every item once", 25, |rng| {
+            let scheme = *rng.choose(&Scheme::ALL);
+            let layout = *rng.choose(&[
+                QueueLayout::Centralized { atomic: false },
+                QueueLayout::Centralized { atomic: true },
+                QueueLayout::PerGroup,
+                QueueLayout::PerCore,
+            ]);
+            let victim = *rng.choose(&VictimStrategy::ALL);
+            let total = rng.range(1, 5_000) as usize;
+            let cfg = SchedConfig {
+                scheme,
+                layout,
+                victim,
+                seed: rng.next_u64(),
+                stages: None,
+                pls_swr: 0.5,
+            };
+            let hits: Vec<AtomicUsize> =
+                (0..total).map(|_| AtomicUsize::new(0)).collect();
+            run_once(&host4(), &cfg, total, |_w, range| {
+                for i in range.iter() {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                prop::ensure(
+                    h.load(Ordering::Relaxed) == 1,
+                    format!(
+                        "{scheme:?}/{layout:?}/{victim:?}: item {i} ran {}x",
+                        h.load(Ordering::Relaxed)
+                    ),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,97 @@
+//! Host calibration of the DES cost-model constants.
+//!
+//! `measure()` times the actual scheduler primitives on this machine —
+//! the same code the real-thread executor runs — and returns a
+//! [`CostModel`] in host-seconds. `CostModel::recorded()` holds the
+//! values measured on the reference host so figure benches are
+//! reproducible without re-measuring; EXPERIMENTS.md §Calibration logs
+//! both.
+
+use std::time::Instant;
+
+use super::model::CostModel;
+use crate::sched::partitioner::{PartitionerOptions, Scheme};
+use crate::sched::queue::{CentralAtomic, CentralLocked, TaskSource};
+
+/// Median-of-means timing of `f` per call, in seconds.
+fn time_per_call<F: FnMut()>(calls: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..calls / 10 + 1 {
+        f();
+    }
+    let reps = 5;
+    let mut means = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..calls {
+            f();
+        }
+        means.push(t0.elapsed().as_secs_f64() / calls as f64);
+    }
+    means.sort_by(|a, b| a.total_cmp(b));
+    means[reps / 2]
+}
+
+/// Measure the lock-protected queue/partitioner access cost: one
+/// `pull_local` on the locked central queue (lock + getNextChunk +
+/// unlock), single-threaded — the DES adds contention by serialization.
+pub fn measure_queue_access() -> f64 {
+    let n = 2_000_000;
+    let src = CentralLocked::new(
+        Scheme::Ss,
+        n,
+        16,
+        &PartitionerOptions::default(),
+    );
+    time_per_call(n / 2, || {
+        std::hint::black_box(src.pull_local(0));
+    })
+}
+
+/// Measure the atomic central-queue access (`fetch_add` + chunk read).
+pub fn measure_atomic_access() -> f64 {
+    let n = 2_000_000;
+    let src = CentralAtomic::new(
+        Scheme::Ss,
+        n,
+        16,
+        &PartitionerOptions::default(),
+    );
+    time_per_call(n / 2, || {
+        std::hint::black_box(src.pull_local(0));
+    })
+}
+
+/// Full calibration; falls back to recorded values for constants that
+/// cannot be measured in isolation (steal probe, dispatch).
+pub fn measure() -> CostModel {
+    let recorded = CostModel::recorded();
+    CostModel {
+        queue_access: measure_queue_access(),
+        atomic_access: measure_atomic_access(),
+        ..recorded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_costs_are_plausible() {
+        let m = measure();
+        // between 2ns and 50us per access on any sane machine
+        assert!(
+            (2e-9..5e-5).contains(&m.queue_access),
+            "queue_access={}",
+            m.queue_access
+        );
+        assert!(
+            (5e-10..5e-5).contains(&m.atomic_access),
+            "atomic_access={}",
+            m.atomic_access
+        );
+        // the atomic path must be no slower than the locked path
+        assert!(m.atomic_access <= m.queue_access * 1.5);
+    }
+}

@@ -1,0 +1,513 @@
+//! The discrete-event engine: drives the real scheduler components in
+//! virtual time.
+//!
+//! Each worker is a state machine: *idle → acquiring → executing →
+//! idle*. Idle events live in a min-heap keyed by virtual time. Queue
+//! accesses serialize through a per-queue `free_at` horizon — lock
+//! contention (and the cheaper atomic contention) *emerges* from workers
+//! queuing at the critical section rather than from a fitted curve.
+//!
+//! Approximation note: a worker's whole acquisition sequence (own-queue
+//! probe plus steal round) is processed at one event, so probe
+//! interleaving across workers is resolved at acquisition granularity,
+//! not per probe. Serialization windows are still respected via
+//! `free_at`; the coarsening only affects which of two nearly-simultaneous
+//! thieves wins a chunk, which is noise the seeds average out.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+use super::model::{CostModel, Workload};
+use crate::config::SchedConfig;
+use crate::sched::metrics::{SchedReport, WorkerStats};
+use crate::sched::partitioner::PartitionerOptions;
+use crate::sched::queue::{self, QueueLayout};
+use crate::sched::victim::VictimSelector;
+use crate::topology::Topology;
+use crate::util::Rng;
+
+/// Result of one simulated execution.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub report: SchedReport,
+    /// Virtual seconds each queue spent occupied (contention signal).
+    pub queue_busy: Vec<f64>,
+    /// Total acquisition events processed.
+    pub acquisitions: usize,
+}
+
+impl SimOutcome {
+    pub fn makespan(&self) -> f64 {
+        self.report.makespan
+    }
+}
+
+#[derive(Debug, PartialEq)]
+struct Ev {
+    t: f64,
+    w: usize,
+}
+
+impl Eq for Ev {}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap: earlier time first; ties by worker id for determinism
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.w.cmp(&self.w))
+    }
+}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate scheduling `workload` with `config` on `topo`.
+pub fn simulate(
+    topo: &Topology,
+    config: &SchedConfig,
+    workload: &Workload,
+    costs: &CostModel,
+) -> SimOutcome {
+    let costs = costs.clone().for_topology(topo);
+    let opts = PartitionerOptions {
+        stages: config.stages,
+        pls_swr: config.pls_swr,
+        seed: config.seed,
+    };
+    let source = queue::build_source(
+        config.layout,
+        config.scheme,
+        workload.items(),
+        topo,
+        &opts,
+    );
+    let n_queues = source.n_queues();
+    let n = topo.n_cores();
+
+    // Home socket of every queue (mirrors worker::queue_socket_of).
+    let queue_socket: Vec<usize> = (0..n_queues)
+        .map(|q| {
+            if n_queues == n {
+                topo.socket_of(q)
+            } else if n_queues == topo.sockets {
+                q
+            } else {
+                0
+            }
+        })
+        .collect();
+
+    // Execution locality: only PERCPU's contiguous pre-partitioning
+    // gives block affinity; the centralized queue and PERCORE's
+    // globally-dealt chunks see interleaved memory (§4's explanation of
+    // STATIC's Fig. 7a vs 8a vs 8b behaviour).
+    let no_affinity = matches!(
+        config.layout,
+        QueueLayout::Centralized { .. } | QueueLayout::PerCore
+    );
+    // Lock handoff scales with the number of workers sharing the queue
+    // (see CostModel::queue_access); the atomic fetch_add path is flat.
+    // Handoff cost saturates once the lock convoy forms (~15 waiters):
+    // beyond that, extra waiters queue up (modelled by serialization)
+    // without lengthening the critical section itself.
+    let contenders: Vec<f64> = {
+        let mut counts = vec![0usize; n_queues];
+        for w in 0..n {
+            counts[source.queue_of(w)] += 1;
+        }
+        counts.iter().map(|&c| c.clamp(1, 15) as f64).collect()
+    };
+    let access_cost: Vec<f64> = (0..n_queues)
+        .map(|q| match config.layout {
+            QueueLayout::Centralized { atomic: true } => costs.atomic_access,
+            _ => costs.queue_access * contenders[q],
+        })
+        .collect();
+
+    let mut selectors: Vec<Option<VictimSelector>> = (0..n)
+        .map(|w| {
+            config.layout.steals().then(|| {
+                VictimSelector::new(
+                    config.victim,
+                    source.queue_of(w),
+                    topo.socket_of(w),
+                    queue_socket.clone(),
+                    config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
+                )
+            })
+        })
+        .collect();
+
+    let mut stats = vec![WorkerStats::default(); n];
+    let mut free_at = vec![0f64; n_queues];
+    let mut queue_busy = vec![0f64; n_queues];
+    let mut heap: BinaryHeap<Ev> = (0..n).map(|w| Ev { t: 0.0, w }).collect();
+    let mut makespan = 0f64;
+    let mut acquisitions = 0usize;
+    let mut noise_rng = Rng::new(config.seed ^ 0x5EED_0153);
+
+    while let Some(Ev { t, w }) = heap.pop() {
+        acquisitions += 1;
+        let my_socket = topo.socket_of(w);
+        let mut now = t;
+
+        // serialized access to a queue; returns access completion time
+        let access = |q: usize, now: f64, extra: f64, free_at: &mut [f64], queue_busy: &mut [f64]| -> f64 {
+            let numa = if queue_socket[q] == my_socket {
+                1.0
+            } else {
+                topo.remote_numa_factor
+            };
+            let start = now.max(free_at[q]);
+            let dur = access_cost[q] * numa + costs.serialized_extra + extra;
+            free_at[q] = start + dur;
+            queue_busy[q] += dur;
+            start + dur
+        };
+
+        // 1) own queue
+        let own_q = source.queue_of(w);
+        let end = access(own_q, now, 0.0, &mut free_at, &mut queue_busy);
+        let mut pull = source.pull_local(w);
+        stats[w].queue_wait += end - now;
+        now = end;
+
+        // 2) steal round
+        if pull.is_none() {
+            if let Some(selector) = selectors[w].as_mut() {
+                for victim in selector.round() {
+                    let end = access(
+                        victim,
+                        now,
+                        costs.steal_overhead,
+                        &mut free_at,
+                        &mut queue_busy,
+                    );
+                    stats[w].queue_wait += end - now;
+                    now = end;
+                    pull = source.pull_from(victim, w);
+                    if pull.is_some() {
+                        break;
+                    }
+                    stats[w].failed_steals += 1;
+                }
+            }
+        }
+
+        let Some(pull) = pull else {
+            makespan = makespan.max(now);
+            continue; // worker retires
+        };
+
+        if pull.stolen {
+            stats[w].steals += 1;
+            stats[w].stolen_items += pull.task.len();
+        }
+
+        // 3) execute: locality factor depends on layout + homes
+        let locality = if no_affinity {
+            costs.interleave_factor
+        } else if queue_socket[pull.queue] == my_socket {
+            1.0
+        } else {
+            costs.remote_exec_factor
+        };
+        let mut exec = workload.chunk_cost(pull.task.start, pull.task.end)
+            * locality
+            / topo.core_speed
+            + costs.dispatch;
+        // OS interference: Poisson preemption events over the chunk's
+        // busy time, each stretching it by an exponential delay. A
+        // dynamic scheme reroutes subsequent chunks around a hit
+        // worker; STATIC's single block eats the delay on the critical
+        // path.
+        if costs.noise_rate > 0.0 {
+            let lambda = costs.noise_rate * exec;
+            // Poisson via sequential exponential arrivals (lambda is
+            // small for realistic chunks).
+            let mut budget = lambda;
+            loop {
+                let step = noise_rng.exponential(1.0);
+                if step > budget {
+                    break;
+                }
+                budget -= step;
+                exec += noise_rng.exponential(1.0 / costs.noise_duration);
+            }
+        }
+        stats[w].busy += exec;
+        stats[w].tasks += 1;
+        stats[w].items += pull.task.len();
+        heap.push(Ev { t: now + exec, w });
+    }
+
+    SimOutcome {
+        report: SchedReport {
+            scheme: config.scheme.name().to_string(),
+            layout: config.layout.name().to_string(),
+            victim: config.victim.name().to_string(),
+            makespan,
+            per_worker: stats,
+        },
+        queue_busy,
+        acquisitions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::partitioner::Scheme;
+    use crate::sched::victim::VictimStrategy;
+    use crate::util::prop;
+
+    fn costs() -> CostModel {
+        CostModel::recorded()
+    }
+
+    fn cfg(scheme: Scheme) -> SchedConfig {
+        SchedConfig::default().with_scheme(scheme)
+    }
+
+    #[test]
+    fn all_items_execute_exactly_once() {
+        let topo = Topology::broadwell20();
+        let w = Workload::uniform("u", 10_000, 1e-6);
+        let out = simulate(&topo, &cfg(Scheme::Gss), &w, &costs());
+        assert_eq!(out.report.total_items(), 10_000);
+    }
+
+    #[test]
+    fn uniform_work_static_is_near_perfect() {
+        // N divisible by P, uniform costs: STATIC should finish in
+        // ~total/P with tiny overhead.
+        let topo = Topology::symmetric("t", 1, 10, 1.0, 1.0);
+        let w = Workload::uniform("u", 10_000, 1e-6);
+        let out = simulate(&topo, &cfg(Scheme::Static), &w, &costs());
+        let ideal = w.total_cost() / 10.0;
+        assert!(
+            (out.makespan() - ideal) / ideal < 0.01,
+            "makespan {} vs ideal {}",
+            out.makespan(),
+            ideal
+        );
+        assert!(out.report.cov() < 1e-6);
+    }
+
+    #[test]
+    fn skewed_work_makes_static_imbalanced_and_gss_better() {
+        // Heavy items all land in one STATIC block -> imbalance; GSS's
+        // decreasing chunks smooth it out.
+        // Light first half, heavy second half: STATIC parks whole heavy
+        // blocks on half the workers; GSS reaches the heavy region with
+        // small late chunks that spread across all workers. (Heavy-first
+        // would instead land in GSS's big opening chunk — that case is
+        // genuinely bad for GSS and not a scheduler defect.)
+        let topo = Topology::symmetric("t", 1, 10, 1.0, 1.0);
+        let items = 100_000;
+        let per: Vec<f64> = (0..items)
+            .map(|i| if i >= items / 2 { 90e-7 } else { 1e-7 })
+            .collect();
+        let w = Workload::from_costs("skew", &per);
+        let stat = simulate(&topo, &cfg(Scheme::Static), &w, &costs());
+        let gss = simulate(&topo, &cfg(Scheme::Gss), &w, &costs());
+        assert!(
+            gss.makespan() < stat.makespan() * 0.8,
+            "gss {} vs static {}",
+            gss.makespan(),
+            stat.makespan()
+        );
+        assert!(stat.report.cov() > gss.report.cov());
+    }
+
+    #[test]
+    fn ss_pays_heavy_contention() {
+        // SS: one queue access per item, serialized -> makespan is at
+        // least items * access_cost regardless of core count.
+        let topo = Topology::broadwell20();
+        let items = 50_000;
+        let w = Workload::uniform("u", items, 1e-7);
+        let out = simulate(&topo, &cfg(Scheme::Ss), &w, &costs());
+        let floor = items as f64 * costs().queue_access;
+        assert!(
+            out.makespan() > floor,
+            "SS makespan {} must exceed serialization floor {floor}",
+            out.makespan()
+        );
+        // and must be far worse than MFSC on the same workload
+        let mfsc = simulate(&topo, &cfg(Scheme::Mfsc), &w, &costs());
+        assert!(out.makespan() > 3.0 * mfsc.makespan());
+    }
+
+    #[test]
+    fn atomic_central_beats_locked_for_fine_chunks() {
+        let topo = Topology::cascadelake56();
+        let w = Workload::uniform("u", 200_000, 5e-8);
+        let locked = simulate(&topo, &cfg(Scheme::Ss), &w, &costs());
+        let atomic = simulate(
+            &topo,
+            &cfg(Scheme::Ss)
+                .with_layout(QueueLayout::Centralized { atomic: true }),
+            &w,
+            &costs(),
+        );
+        assert!(
+            atomic.makespan() < locked.makespan() / 2.0,
+            "atomic {} vs locked {}",
+            atomic.makespan(),
+            locked.makespan()
+        );
+    }
+
+    #[test]
+    fn stealing_layouts_complete_and_steal_under_skew() {
+        let topo = Topology::broadwell20();
+        let items = 20_000;
+        // all cost in the first block
+        let per: Vec<f64> = (0..items)
+            .map(|i| if i < 1000 { 1e-5 } else { 1e-8 })
+            .collect();
+        let w = Workload::from_costs("skew", &per);
+        for victim in VictimStrategy::ALL {
+            let config = cfg(Scheme::Fac2)
+                .with_layout(QueueLayout::PerCore)
+                .with_victim(victim);
+            let out = simulate(&topo, &config, &w, &costs());
+            assert_eq!(out.report.total_items(), items, "{victim:?}");
+            assert!(out.report.total_steals() > 0, "{victim:?} never stole");
+        }
+    }
+
+    #[test]
+    fn remote_steals_cost_more_with_seqpri_less() {
+        // SEQPRI keeps steals local first; with work only on socket 0,
+        // socket-1 workers must go remote either way, but SEQPRI thieves
+        // on socket 0 drain local victims first => fewer remote
+        // executions than plain SEQ.
+        let topo = Topology::broadwell20();
+        let items = 40_000;
+        let per: Vec<f64> = (0..items)
+            .map(|i| if i < items / 2 { 2e-6 } else { 2e-8 })
+            .collect();
+        let w = Workload::from_costs("half", &per);
+        let seq = simulate(
+            &topo,
+            &cfg(Scheme::Tss)
+                .with_layout(QueueLayout::PerCore)
+                .with_victim(VictimStrategy::Seq),
+            &w,
+            &costs(),
+        );
+        let seqpri = simulate(
+            &topo,
+            &cfg(Scheme::Tss)
+                .with_layout(QueueLayout::PerCore)
+                .with_victim(VictimStrategy::SeqPri),
+            &w,
+            &costs(),
+        );
+        // both complete; SEQPRI should not be slower by much (it can be
+        // slightly slower in odd cases, so allow 10%)
+        assert_eq!(seq.report.total_items(), items);
+        assert!(seqpri.makespan() <= seq.makespan() * 1.1);
+    }
+
+    #[test]
+    fn more_cores_shrink_makespan_for_balanced_work() {
+        let w = Workload::uniform("u", 100_000, 1e-6);
+        let m20 = simulate(
+            &Topology::broadwell20(),
+            &cfg(Scheme::Mfsc),
+            &w,
+            &costs(),
+        );
+        let m56 = simulate(
+            &Topology::cascadelake56(),
+            &cfg(Scheme::Mfsc),
+            &w,
+            &costs(),
+        );
+        assert!(
+            m56.makespan() < m20.makespan() * 0.6,
+            "56c {} vs 20c {}",
+            m56.makespan(),
+            m20.makespan()
+        );
+    }
+
+    #[test]
+    fn queue_busy_accounts_contention() {
+        // single socket so every access costs exactly queue_access
+        let topo = Topology::symmetric("t", 1, 20, 1.0, 1.0);
+        let w = Workload::uniform("u", 10_000, 1e-7);
+        let out = simulate(&topo, &cfg(Scheme::Ss), &w, &costs());
+        // single central queue shared by 20 workers: busy time ~=
+        // accesses * (queue_access * contenders), convoy-capped at 15
+        let expect =
+            out.acquisitions as f64 * costs().queue_access * 15.0;
+        assert!((out.queue_busy[0] - expect).abs() / expect < 0.2);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let topo = Topology::cascadelake56();
+        let w = Workload::uniform("u", 30_000, 1e-7);
+        let config = cfg(Scheme::Pss)
+            .with_layout(QueueLayout::PerCore)
+            .with_victim(VictimStrategy::RndPri)
+            .with_seed(1234);
+        let a = simulate(&topo, &config, &w, &costs());
+        let b = simulate(&topo, &config, &w, &costs());
+        assert_eq!(a.makespan(), b.makespan());
+        assert_eq!(a.report.total_steals(), b.report.total_steals());
+    }
+
+    #[test]
+    fn prop_sim_conserves_items_across_configs() {
+        prop::check("sim executes every item once", 40, |rng| {
+            let topo = if rng.below(2) == 0 {
+                Topology::broadwell20()
+            } else {
+                Topology::cascadelake56()
+            };
+            let scheme = *rng.choose(&Scheme::ALL);
+            let layout = *rng.choose(&[
+                QueueLayout::Centralized { atomic: false },
+                QueueLayout::Centralized { atomic: true },
+                QueueLayout::PerGroup,
+                QueueLayout::PerCore,
+            ]);
+            let victim = *rng.choose(&VictimStrategy::ALL);
+            let items = rng.range(1, 20_000) as usize;
+            let per: Vec<f64> =
+                (0..items).map(|_| rng.next_f64() * 1e-6).collect();
+            let w = Workload::from_costs("rand", &per);
+            let config = SchedConfig {
+                scheme,
+                layout,
+                victim,
+                seed: rng.next_u64(),
+                stages: None,
+                pls_swr: 0.5,
+            };
+            let out = simulate(&topo, &config, &w, &costs());
+            prop::ensure(
+                out.report.total_items() == items,
+                format!(
+                    "{scheme:?}/{layout:?}/{victim:?}: {} of {items}",
+                    out.report.total_items()
+                ),
+            )?;
+            prop::ensure(
+                out.makespan() >= w.total_cost() / topo.n_cores() as f64 * 0.99
+                    / topo.core_speed,
+                "makespan below critical-path bound".to_string(),
+            )
+        });
+    }
+}

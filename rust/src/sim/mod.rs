@@ -1,0 +1,25 @@
+//! Discrete-event simulation of DaphneSched on modelled machines.
+//!
+//! This is the testbed substitution (DESIGN.md §3): the paper's
+//! experiments ran on 20- and 56-core Xeons; here the *same* scheduler
+//! components — [`crate::sched::queue::TaskSource`] layouts, the
+//! partitioners, [`crate::sched::victim::VictimSelector`] — are driven in
+//! virtual time over a [`crate::topology::Topology`] model. Scheduling
+//! behaviour (which worker gets which chunk, in what order) is produced
+//! by the real code; only *durations* are modelled:
+//!
+//! - per-item execution cost (workload-derived, e.g. row nnz for CC),
+//! - queue access cost with serialization (lock contention emerges from
+//!   queuing at the critical section, not from a fitted curve),
+//! - NUMA locality factors for remote queue access, remote steals and
+//!   remote block execution.
+//!
+//! Cost-model constants are calibrated against the host by
+//! [`calibrate`], so simulated makespans are in host-seconds.
+
+pub mod calibrate;
+pub mod engine;
+pub mod model;
+
+pub use engine::{simulate, SimOutcome};
+pub use model::{CostModel, Workload};

@@ -1,0 +1,179 @@
+//! Cost models for the DES: what each scheduler action costs in seconds.
+
+use crate::topology::Topology;
+
+/// Per-item execution costs of a workload, as a prefix-sum so any chunk
+/// `[a, b)` costs `O(1)` to evaluate.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// `prefix[i]` = total cost of items `[0, i)`, seconds.
+    prefix: Vec<f64>,
+    /// Descriptive name for reports.
+    pub name: String,
+}
+
+impl Workload {
+    /// Build from per-item costs (seconds per item).
+    pub fn from_costs(name: &str, costs: &[f64]) -> Self {
+        let mut prefix = Vec::with_capacity(costs.len() + 1);
+        let mut acc = 0.0;
+        prefix.push(0.0);
+        for &c in costs {
+            acc += c;
+            prefix.push(acc);
+        }
+        Workload { prefix, name: name.to_string() }
+    }
+
+    /// Uniform per-item cost (the dense linear-regression shape).
+    pub fn uniform(name: &str, items: usize, cost: f64) -> Self {
+        Workload::from_costs(name, &vec![cost; items])
+    }
+
+    pub fn items(&self) -> usize {
+        self.prefix.len() - 1
+    }
+
+    /// Total cost of items `[a, b)`.
+    #[inline]
+    pub fn chunk_cost(&self, a: usize, b: usize) -> f64 {
+        self.prefix[b] - self.prefix[a]
+    }
+
+    /// Total sequential cost.
+    pub fn total_cost(&self) -> f64 {
+        *self.prefix.last().unwrap()
+    }
+}
+
+/// Scheduler-action costs (seconds) plus locality factors. Defaults are
+/// the recorded host calibration (see [`super::calibrate`]); benches can
+/// re-measure at runtime.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Critical-section time of one lock-protected queue/partitioner
+    /// access (lock + `getNextChunk` + unlock) **per worker sharing the
+    /// queue**: lock handoff cost grows with the number of contenders
+    /// (cache-line bouncing), so a centralized queue on P workers costs
+    /// `P * queue_access` per pull while an owner-only per-core deque
+    /// costs `1 *`. Serialized across workers — this scaling is what
+    /// makes SS "explode" on the central queue and MFSC degrade under
+    /// PERCPU, while leaving PERCORE's local pops cheap (§4).
+    pub queue_access: f64,
+    /// One `fetch_add` access on the atomic central queue. Still
+    /// serialized (cache-line ownership migrates) but ~an order of
+    /// magnitude cheaper.
+    pub atomic_access: f64,
+    /// Per-attempt overhead of probing a steal victim (on top of the
+    /// victim queue's access cost).
+    pub steal_overhead: f64,
+    /// Fixed per-task dispatch overhead on the worker (task object
+    /// setup, metrics), not serialized.
+    pub dispatch: f64,
+    /// Multiplier on execution cost for items homed on a remote NUMA
+    /// domain (cold remote-socket reads).
+    pub remote_exec_factor: f64,
+    /// Multiplier on execution cost under the centralized layouts,
+    /// where no pre-partitioning aligns blocks with sockets (pages
+    /// interleave; on a 2-socket machine ~half the accesses are
+    /// remote). 1.0 for single-socket topologies.
+    pub interleave_factor: f64,
+    /// OS/system interference: preemption-like events arrive per busy
+    /// second at this rate (events/s). Dynamic schemes absorb a hit
+    /// worker by routing later chunks elsewhere; STATIC's one-shot
+    /// blocks take the delay on the critical path — this asymmetry is
+    /// what the paper's STATIC-vs-dynamic margins measure on real
+    /// machines. 0 disables.
+    pub noise_rate: f64,
+    /// Mean duration of one interference event (exponential), seconds.
+    pub noise_duration: f64,
+    /// Extra serialized time per queue access that does NOT scale with
+    /// contenders (e.g. an app-level reduction merge performed under a
+    /// shared lock at task completion). 0 for plain scheduling.
+    pub serialized_extra: f64,
+}
+
+impl CostModel {
+    /// Recorded host calibration of *this crate's* lean scheduler (see
+    /// `calibrate::measure` and EXPERIMENTS.md §Calibration). Values in
+    /// seconds. No interference noise — used by unit tests and perf
+    /// work where determinism matters.
+    pub fn recorded() -> Self {
+        CostModel {
+            queue_access: 20e-9,
+            atomic_access: 9e-9,
+            steal_overhead: 15e-9,
+            dispatch: 10e-9,
+            remote_exec_factor: 1.0, // set per topology by `for_topology`
+            interleave_factor: 1.0,
+            noise_rate: 0.0,
+            noise_duration: 0.0,
+            serialized_extra: 0.0,
+        }
+    }
+
+    /// DAPHNE-runtime-like task-dispatch costs — the configuration the
+    /// figures use. The paper's observed effects (SS "explodes" under
+    /// central-queue locking; MFSC degrades under PERCPU contention)
+    /// imply per-task costs of the DAPHNE runtime's queue path (lock,
+    /// task-object allocation, future signaling), a few hundred ns —
+    /// not this crate's bare 20 ns partitioner pull. Includes the
+    /// OS-interference model active on any real multicore run.
+    pub fn daphne_like() -> Self {
+        CostModel {
+            queue_access: 100e-9, // x contenders: 2us on a 20-core central queue
+            atomic_access: 60e-9,
+            steal_overhead: 500e-9,
+            dispatch: 500e-9,
+            remote_exec_factor: 1.0,
+            interleave_factor: 1.0,
+            noise_rate: 2000.0,
+            noise_duration: 4e-6,
+            serialized_extra: 0.0,
+        }
+    }
+
+    /// Specialize locality factors for a machine model: remote execution
+    /// costs `remote_numa_factor`; centralized layouts see the average
+    /// of local and remote (page interleaving across `s` sockets).
+    pub fn for_topology(mut self, topo: &Topology) -> Self {
+        let s = topo.sockets.max(1) as f64;
+        self.remote_exec_factor = topo.remote_numa_factor;
+        self.interleave_factor =
+            (1.0 + (s - 1.0) * topo.remote_numa_factor) / s;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_sums_answer_chunk_costs() {
+        let w = Workload::from_costs("w", &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.items(), 4);
+        assert_eq!(w.chunk_cost(0, 4), 10.0);
+        assert_eq!(w.chunk_cost(1, 3), 5.0);
+        assert_eq!(w.chunk_cost(2, 2), 0.0);
+        assert_eq!(w.total_cost(), 10.0);
+    }
+
+    #[test]
+    fn uniform_workload() {
+        let w = Workload::uniform("u", 100, 0.5);
+        assert_eq!(w.total_cost(), 50.0);
+        assert_eq!(w.chunk_cost(10, 20), 5.0);
+    }
+
+    #[test]
+    fn topology_factors() {
+        let m = CostModel::recorded().for_topology(&Topology::broadwell20());
+        assert_eq!(m.remote_exec_factor, 1.9);
+        assert!((m.interleave_factor - 1.45).abs() < 1e-12);
+
+        let single = Topology::symmetric("s", 1, 8, 1.0, 1.0);
+        let m1 = CostModel::recorded().for_topology(&single);
+        assert_eq!(m1.interleave_factor, 1.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Machine-topology model: sockets, NUMA domains, cores, device classes.
+//!
+//! The paper evaluates on a 2×10-core Intel Broadwell and a 2×28-core
+//! Intel Cascade Lake. Neither is available here, so the topology is an
+//! explicit model consumed by two executors that share all scheduler
+//! code:
+//!
+//! - the real-thread worker pool ([`crate::sched::worker`]), which uses
+//!   the topology for NUMA-aware victim selection and queue grouping;
+//! - the discrete-event simulator ([`crate::sim`]), which additionally
+//!   uses the per-domain latency factors to model remote-steal and
+//!   remote-queue access costs.
+
+/// Kind of compute device a worker fronts. The DAPHNE worker manager
+/// also creates threads that launch kernels on accelerators; the
+/// evaluation is CPU-only but the dimension is kept first-class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    Cpu,
+    Gpu,
+    Fpga,
+}
+
+/// One hardware thread (one DaphneSched worker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorePlace {
+    /// Global worker/core id, dense in `0..n_cores`.
+    pub core: usize,
+    /// Socket == NUMA domain on both evaluated machines.
+    pub socket: usize,
+    pub device: DeviceClass,
+}
+
+/// A machine: cores grouped into sockets/NUMA domains plus the latency
+/// factors the simulator uses.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub places: Vec<CorePlace>,
+    pub sockets: usize,
+    /// Relative cost multiplier for touching memory/queues on a remote
+    /// NUMA domain (≈2x on the evaluated Xeons).
+    pub remote_numa_factor: f64,
+    /// Single-core relative speed vs the Broadwell baseline.
+    pub core_speed: f64,
+}
+
+impl Topology {
+    /// Build a symmetric multi-socket CPU topology.
+    pub fn symmetric(
+        name: &str,
+        sockets: usize,
+        cores_per_socket: usize,
+        remote_numa_factor: f64,
+        core_speed: f64,
+    ) -> Self {
+        let places = (0..sockets * cores_per_socket)
+            .map(|core| CorePlace {
+                core,
+                socket: core / cores_per_socket,
+                device: DeviceClass::Cpu,
+            })
+            .collect();
+        Topology {
+            name: name.to_string(),
+            places,
+            sockets,
+            remote_numa_factor,
+            core_speed,
+        }
+    }
+
+    /// The paper's 2×10-core Intel E5-2640 v4 (Broadwell), 64 GB.
+    pub fn broadwell20() -> Self {
+        Topology::symmetric("broadwell20", 2, 10, 1.9, 1.0)
+    }
+
+    /// The paper's 2×28-core Intel Xeon Gold 6258R (Cascade Lake), 1.5 TB.
+    pub fn cascadelake56() -> Self {
+        Topology::symmetric("cascadelake56", 2, 28, 2.1, 1.15)
+    }
+
+    /// A topology matching the current host (single NUMA domain assumed;
+    /// used by the real-thread executor for tests/examples).
+    pub fn host() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Topology::symmetric("host", 1, n, 1.0, 1.0)
+    }
+
+    /// Resolve a preset by name (CLI / config).
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "broadwell20" | "broadwell" => Some(Self::broadwell20()),
+            "cascadelake56" | "cascadelake" => Some(Self::cascadelake56()),
+            "host" => Some(Self::host()),
+            _ => None,
+        }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.places.len()
+    }
+
+    pub fn cores_per_socket(&self) -> usize {
+        self.places.len() / self.sockets.max(1)
+    }
+
+    /// NUMA domain of a core.
+    pub fn socket_of(&self, core: usize) -> usize {
+        self.places[core].socket
+    }
+
+    /// Whether two cores share a NUMA domain.
+    pub fn same_domain(&self, a: usize, b: usize) -> bool {
+        self.socket_of(a) == self.socket_of(b)
+    }
+
+    /// Cores in the given NUMA domain.
+    pub fn domain_cores(&self, socket: usize) -> Vec<usize> {
+        self.places
+            .iter()
+            .filter(|p| p.socket == socket)
+            .map(|p| p.core)
+            .collect()
+    }
+
+    /// Relative cost factor for core `from` accessing memory homed on
+    /// `to`'s domain.
+    pub fn access_factor(&self, from: usize, to: usize) -> f64 {
+        if self.same_domain(from, to) {
+            1.0
+        } else {
+            self.remote_numa_factor
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadwell_shape() {
+        let t = Topology::broadwell20();
+        assert_eq!(t.n_cores(), 20);
+        assert_eq!(t.sockets, 2);
+        assert_eq!(t.cores_per_socket(), 10);
+        assert_eq!(t.socket_of(0), 0);
+        assert_eq!(t.socket_of(9), 0);
+        assert_eq!(t.socket_of(10), 1);
+        assert_eq!(t.socket_of(19), 1);
+    }
+
+    #[test]
+    fn cascadelake_shape() {
+        let t = Topology::cascadelake56();
+        assert_eq!(t.n_cores(), 56);
+        assert_eq!(t.cores_per_socket(), 28);
+        assert_eq!(t.domain_cores(1).len(), 28);
+        assert!(t.domain_cores(1).iter().all(|&c| c >= 28));
+    }
+
+    #[test]
+    fn access_factors() {
+        let t = Topology::broadwell20();
+        assert_eq!(t.access_factor(0, 5), 1.0);
+        assert_eq!(t.access_factor(0, 15), 1.9);
+        assert!(t.same_domain(3, 7));
+        assert!(!t.same_domain(3, 17));
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert!(Topology::preset("broadwell20").is_some());
+        assert!(Topology::preset("cascadelake").is_some());
+        assert!(Topology::preset("host").is_some());
+        assert!(Topology::preset("riscv").is_none());
+    }
+
+    #[test]
+    fn host_has_at_least_one_core() {
+        assert!(Topology::host().n_cores() >= 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Shared-slice writer for data-parallel tasks.
+//!
+//! The scheduler guarantees every work-item index is handed out exactly
+//! once (see `sched::queue` property tests), so tasks write disjoint
+//! ranges of the output. `DisjointMut` exposes that contract with
+//! `unsafe` confined to one audited place.
+
+use std::marker::PhantomData;
+
+/// A slice whose disjoint ranges may be written concurrently.
+pub struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// Safety: concurrent access is restricted to disjoint ranges by the
+// scheduler's partitioning invariant; `slice_mut` documents the
+// requirement.
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        DisjointMut {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `[start, end)`.
+    ///
+    /// # Safety contract
+    /// Callers must ensure no two concurrently-live views overlap. The
+    /// scheduler's exactly-once partitioning provides this for task
+    /// ranges.
+    #[allow(clippy::mut_from_ref)]
+    pub fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        assert!(start <= end && end <= self.len, "range out of bounds");
+        // SAFETY: bounds checked above; the backing allocation outlives
+        // 'a; disjointness per the documented contract.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_threaded_writes_land() {
+        let mut v = vec![0usize; 1000];
+        {
+            let d = DisjointMut::new(&mut v);
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let d = &d;
+                    s.spawn(move || {
+                        let lo = t * 250;
+                        for (i, x) in
+                            d.slice_mut(lo, lo + 250).iter_mut().enumerate()
+                        {
+                            *x = lo + i;
+                        }
+                    });
+                }
+            });
+        }
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i));
+    }
+
+    #[test]
+    fn len_reports() {
+        let mut v = vec![0u8; 7];
+        let d = DisjointMut::new(&mut v);
+        assert_eq!(d.len(), 7);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn bounds_checked() {
+        let mut v = vec![0u8; 4];
+        let d = DisjointMut::new(&mut v);
+        d.slice_mut(2, 8);
+    }
+}

@@ -1,0 +1,38 @@
+//! Std-only utility substrate: PRNGs, a minimal JSON parser (for the
+//! artifact manifest), descriptive statistics, and a tiny property-testing
+//! harness (the vendored crate set has no `rand`/`proptest`/`serde`).
+
+pub mod disjoint;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use disjoint::DisjointMut;
+pub use rng::Rng;
+
+/// Format a duration in engineer-friendly units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500us");
+        assert_eq!(fmt_duration(2.5e-8), "25.0ns");
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal property-testing harness (proptest is not in the vendored
+//! crate set). Runs a property over many seeded random cases and reports
+//! the failing seed so a case replays deterministically:
+//!
+//! ```no_run
+//! use daphne_sched::util::{prop, Rng};
+//! prop::check("sum is commutative", 200, |rng: &mut Rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     prop::ensure(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Succeed/fail helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `property`; panic with the failing seed on
+/// the first violation. Base seed is derived from the property name so
+/// adding properties doesn't reshuffle existing ones.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed \
+                 {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always true", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always false", 10, |_| ensure(false, "nope"));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_name() {
+        let mut a = Vec::new();
+        check("det", 5, |rng| {
+            a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("det", 5, |rng| {
+            b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,98 @@
+//! Pipelines: named sequences of vectorized operators with barriers.
+
+use super::Vee;
+use crate::sched::{SchedReport, TaskRange};
+
+/// One vectorized operator: a name, an item count, and a body executed
+/// over task ranges.
+pub struct Stage<'a> {
+    pub name: String,
+    pub items: usize,
+    #[allow(clippy::type_complexity)]
+    pub body: Box<dyn Fn(usize, TaskRange) + Send + Sync + 'a>,
+}
+
+impl<'a> Stage<'a> {
+    pub fn new<F>(name: &str, items: usize, body: F) -> Self
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'a,
+    {
+        Stage { name: name.to_string(), items, body: Box::new(body) }
+    }
+}
+
+/// A sequence of stages (barrier between each).
+#[derive(Default)]
+pub struct Pipeline<'a> {
+    pub name: String,
+    pub stages: Vec<Stage<'a>>,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(name: &str) -> Self {
+        Pipeline { name: name.to_string(), stages: Vec::new() }
+    }
+
+    pub fn stage<F>(mut self, name: &str, items: usize, body: F) -> Self
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'a,
+    {
+        self.stages.push(Stage::new(name, items, body));
+        self
+    }
+
+    pub fn run(&self, vee: &Vee) -> PipelineReport {
+        let mut reports = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            let report = vee.execute(stage.items, &stage.body);
+            reports.push((stage.name.clone(), report));
+        }
+        PipelineReport { pipeline: self.name.clone(), stages: reports }
+    }
+}
+
+/// Per-stage scheduling reports for one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub pipeline: String,
+    pub stages: Vec<(String, SchedReport)>,
+}
+
+impl PipelineReport {
+    pub fn total_time(&self) -> f64 {
+        self.stages.iter().map(|(_, r)| r.makespan).sum()
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&SchedReport> {
+        self.stages.iter().find(|(n, _)| n == name).map(|(_, r)| r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn stages_run_in_order_with_barriers() {
+        let vee = Vee::host_default();
+        let a_done = AtomicUsize::new(0);
+        let saw_a_complete = AtomicUsize::new(1);
+        let pipeline = Pipeline::new("test")
+            .stage("a", 1000, |_w, r| {
+                a_done.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .stage("b", 500, |_w, _r| {
+                // barrier semantics: stage a fully done before b starts
+                if a_done.load(Ordering::SeqCst) != 1000 {
+                    saw_a_complete.store(0, Ordering::SeqCst);
+                }
+            });
+        let report = pipeline.run(&vee);
+        assert_eq!(saw_a_complete.load(Ordering::SeqCst), 1);
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.stage("a").unwrap().total_items(), 1000);
+        assert_eq!(report.stage("b").unwrap().total_items(), 500);
+        assert!(report.total_time() > 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: the Fig. 5 distributed coordinator over localhost TCP.
+
+use std::net::TcpListener;
+
+use daphne_sched::apps::cc;
+use daphne_sched::config::SchedConfig;
+use daphne_sched::coordinator::{worker, Leader};
+use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::matrix::CsrMatrix;
+use daphne_sched::sched::Scheme;
+use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
+
+/// Start `n` worker daemons on ephemeral ports; returns their addrs.
+fn spawn_workers(n: usize, scheme: Scheme) -> Vec<std::net::SocketAddr> {
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap());
+        let vee = Vee::new(
+            Topology::symmetric("w", 1, 2, 1.0, 1.0),
+            SchedConfig::default().with_scheme(scheme),
+        );
+        std::thread::spawn(move || {
+            worker::serve(listener, vee, Some(1)).unwrap();
+        });
+    }
+    addrs
+}
+
+#[test]
+fn distributed_cc_matches_local() {
+    let g = amazon_like(&GraphSpec::small(600, 13)).symmetrize();
+    let local = cc::run_native(
+        &g,
+        &Topology::symmetric("t", 1, 2, 1.0, 1.0),
+        &SchedConfig::default(),
+        100,
+    );
+
+    let addrs = spawn_workers(3, Scheme::Gss);
+    let mut leader = Leader::connect(&addrs).unwrap();
+    assert_eq!(leader.n_workers(), 3);
+    let dist = leader.cc_distributed(&g, 100).unwrap();
+    leader.shutdown().unwrap();
+
+    assert_eq!(dist.labels, local.labels);
+    assert_eq!(dist.iterations, local.iterations);
+    assert!(dist.scheduled_time > 0.0);
+}
+
+#[test]
+fn distributed_cc_two_components() {
+    // components {0,1,2} and {3,4} split across 2 workers
+    let g = CsrMatrix::from_edges(
+        5,
+        5,
+        &[(0, 1), (1, 0), (1, 2), (2, 1), (3, 4), (4, 3)],
+    );
+    let addrs = spawn_workers(2, Scheme::Static);
+    let mut leader = Leader::connect(&addrs).unwrap();
+    let dist = leader.cc_distributed(&g, 100).unwrap();
+    leader.shutdown().unwrap();
+    assert_eq!(dist.labels, vec![3.0, 3.0, 3.0, 5.0, 5.0]);
+}
+
+#[test]
+fn script_shipping_runs_on_all_workers() {
+    let addrs = spawn_workers(2, Scheme::Static);
+    let mut leader = Leader::connect(&addrs).unwrap();
+    let results = leader
+        .run_script_all(
+            "n = $n;\nresult = seq(1, n) + fill(1.0, n, 1);",
+            &[("n".into(), "4".into())],
+        )
+        .unwrap();
+    leader.shutdown().unwrap();
+    assert_eq!(results.len(), 2);
+    for r in results {
+        assert_eq!(r.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+}
+
+#[test]
+fn script_errors_propagate() {
+    let addrs = spawn_workers(1, Scheme::Static);
+    let mut leader = Leader::connect(&addrs).unwrap();
+    let err = leader
+        .run_script_all("result = nosuchfn(1);", &[])
+        .unwrap_err();
+    assert!(err.to_string().contains("worker error"), "{err}");
+    leader.shutdown().unwrap();
+}
+
+#[test]
+fn distribute_assigns_contiguous_blocks() {
+    let g = amazon_like(&GraphSpec::small(103, 5)).symmetrize();
+    let addrs = spawn_workers(4, Scheme::Static);
+    let mut leader = Leader::connect(&addrs).unwrap();
+    leader.distribute_sparse("G", &g).unwrap();
+    let blocks = leader.blocks().to_vec();
+    leader.shutdown().unwrap();
+    assert_eq!(blocks.len(), 4);
+    assert_eq!(blocks[0].0, 0);
+    assert_eq!(blocks[3].1, 103);
+    for w in blocks.windows(2) {
+        assert_eq!(w[0].1, w[1].0, "blocks must be contiguous");
+    }
+    // 103 = 26 + 26 + 26 + 25
+    assert_eq!(blocks[0], (0, 26));
+    assert_eq!(blocks[3], (78, 103));
+}

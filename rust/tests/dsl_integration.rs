@@ -1,0 +1,95 @@
+//! Integration: the paper's DaphneDSL listings end-to-end through the
+//! lexer → parser → interpreter → VEE stack under non-default
+//! scheduling configurations.
+
+use std::collections::BTreeMap;
+
+use daphne_sched::config::SchedConfig;
+use daphne_sched::dsl::{self, run_script};
+use daphne_sched::sched::{QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
+
+fn params(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+#[test]
+fn listing1_converges_under_every_scheme() {
+    let p = params(&[("f", "synthetic:amazon?nodes=300&seed=11")]);
+    let mut baseline: Option<Vec<f32>> = None;
+    for scheme in Scheme::ALL {
+        let vee = Vee::new(
+            Topology::symmetric("t", 1, 2, 1.0, 1.0),
+            SchedConfig::default()
+                .with_scheme(scheme)
+                .with_layout(QueueLayout::PerCore)
+                .with_victim(VictimStrategy::SeqPri),
+        );
+        let out = run_script(dsl::LISTING_1_CC, &p, &vee).unwrap();
+        let labels = out.vars.get("c").unwrap();
+        let daphne_sched::dsl::Value::Mat(m) = labels else { panic!() };
+        match &baseline {
+            None => baseline = Some(m.data.clone()),
+            Some(b) => assert_eq!(&m.data, b, "{scheme:?} diverged"),
+        }
+        assert_eq!(out.num("diff"), Some(0.0), "{scheme:?} not converged");
+    }
+}
+
+#[test]
+fn listing1_scale_up_parameter() {
+    // scaled graph = 2 disjoint copies: labels converge per copy
+    let p = params(&[("f", "synthetic:amazon?nodes=200&seed=2&scale=2")]);
+    let vee = Vee::host_default();
+    let out = run_script(dsl::LISTING_1_CC, &p, &vee).unwrap();
+    let m = out.mat("c").unwrap();
+    assert_eq!(m.rows, 400);
+    assert!(m.data[..200].iter().all(|&l| l == 200.0));
+    assert!(m.data[200..].iter().all(|&l| l == 400.0));
+}
+
+#[test]
+fn listing2_runs_under_stealing_config() {
+    let vee = Vee::new(
+        Topology::symmetric("t", 2, 2, 1.5, 1.0),
+        SchedConfig::default()
+            .with_scheme(Scheme::Tss)
+            .with_layout(QueueLayout::PerGroup)
+            .with_victim(VictimStrategy::RndPri),
+    );
+    let out = run_script(
+        dsl::LISTING_2_LINREG,
+        &params(&[("numRows", "3000"), ("numCols", "17")]),
+        &vee,
+    )
+    .unwrap();
+    let beta = out.mat("beta").unwrap();
+    assert_eq!(beta.rows, 17); // 16 features + bias
+    assert!(beta.data.iter().all(|b| b.is_finite()));
+    assert!(out.scheduled_time() > 0.0);
+    // A is (d+1)x(d+1) after cbind
+    let a = out.mat("A").unwrap();
+    assert_eq!((a.rows, a.cols), (17, 17));
+}
+
+#[test]
+fn scheduled_reports_expose_scheme_names() {
+    let vee = Vee::new(
+        Topology::host(),
+        SchedConfig::default().with_scheme(Scheme::Gss),
+    );
+    let out = run_script(
+        dsl::LISTING_1_CC,
+        &params(&[("f", "synthetic:amazon?nodes=300&seed=4")]),
+        &vee,
+    )
+    .unwrap();
+    assert!(!out.reports.is_empty());
+    for (_, report) in &out.reports {
+        assert_eq!(report.scheme, "GSS");
+    }
+}

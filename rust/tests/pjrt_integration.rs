@@ -1,0 +1,160 @@
+//! Integration: AOT JAX/Pallas artifacts executed from rust via PJRT,
+//! validated against the native rust kernels. Requires `make artifacts`
+//! (tests skip with a notice if artifacts are absent).
+
+use daphne_sched::apps::{cc, linreg};
+use daphne_sched::config::SchedConfig;
+use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::matrix::DenseMatrix;
+use daphne_sched::runtime::{DeviceService, Runtime};
+use daphne_sched::sched::{QueueLayout, Scheme};
+use daphne_sched::topology::Topology;
+use daphne_sched::util::Rng;
+
+fn artifacts_ready() -> bool {
+    let ok = Runtime::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+    }
+    ok
+}
+
+fn topo() -> Topology {
+    Topology::symmetric("t", 1, 2, 1.0, 1.0)
+}
+
+#[test]
+fn device_service_runs_cc_propagate_tile() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (service, client) = DeviceService::start_default().unwrap();
+    let (rows, cols) = service.manifest.cc_block;
+    // G = single edge row0 -> col3; ids = index+1
+    let mut g = vec![0f32; rows * cols];
+    g[3] = 1.0;
+    let c: Vec<f32> = (0..cols).map(|i| (i + 1) as f32).collect();
+    let c_row: Vec<f32> = (0..rows).map(|i| (i + 1) as f32).collect();
+    let out = client
+        .run_f32("cc_propagate", vec![g, c.clone(), c_row.clone()])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), rows);
+    // row 0: max(own id 1, neighbour id 4) = 4; all others keep own id
+    assert_eq!(out[0][0], 4.0);
+    for (i, &v) in out[0].iter().enumerate().skip(1) {
+        assert_eq!(v, (i + 1) as f32, "row {i}");
+    }
+}
+
+#[test]
+fn device_service_concurrent_clients() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (service, client) = DeviceService::start_default().unwrap();
+    let (rows, cols) = service.manifest.lr_block;
+    let mut rng = Rng::new(11);
+    let x = DenseMatrix::rand(rows, cols, 0.0, 1.0, rng.next_u64());
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let client = client.clone();
+            let x = x.data.clone();
+            s.spawn(move || {
+                let out = client.run_f32("lr_colstats", vec![x]).unwrap();
+                assert_eq!(out.len(), 2);
+                assert_eq!(out[0].len(), cols);
+            });
+        }
+    });
+}
+
+#[test]
+fn pjrt_cc_matches_native_labels() {
+    if !artifacts_ready() {
+        return;
+    }
+    let g = amazon_like(&GraphSpec::small(300, 21)).symmetrize();
+    let (service, client) = DeviceService::start_default().unwrap();
+    let sched = SchedConfig::default().with_scheme(Scheme::Gss);
+    let native = cc::run_native(&g, &topo(), &sched, 100);
+    let pjrt = cc::run_pjrt(
+        &g,
+        &client,
+        &service.manifest,
+        &topo(),
+        &sched,
+        100,
+    )
+    .unwrap();
+    assert_eq!(native.labels, pjrt.labels);
+    assert_eq!(native.iterations, pjrt.iterations);
+    assert_eq!(native.components, pjrt.components);
+}
+
+#[test]
+fn pjrt_linreg_matches_native_beta() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (service, client) = DeviceService::start_default().unwrap();
+    let (_, d) = service.manifest.lr_block;
+    let n = 1024;
+    let mut rng = Rng::new(5);
+    let x = DenseMatrix::rand(n, d, 0.0, 1.0, rng.next_u64());
+    let y: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
+    let sched = SchedConfig::default()
+        .with_scheme(Scheme::Fac2)
+        .with_layout(QueueLayout::PerCore);
+    let native = linreg::run_native(&x, &y, 1e-3, &topo(), &sched).unwrap();
+    let pjrt = linreg::run_pjrt(
+        &x,
+        &y,
+        1e-3,
+        &client,
+        &service.manifest,
+        &topo(),
+        &sched,
+    )
+    .unwrap();
+    assert_eq!(native.beta.len(), pjrt.beta.len());
+    for (i, (a, b)) in native.beta.iter().zip(&pjrt.beta).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-2 * a.abs().max(1.0),
+            "beta[{i}]: native {a} vs pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_linreg_handles_padding_tail() {
+    // n not a multiple of the block: the closed-form padding correction
+    // must keep A/b exact.
+    if !artifacts_ready() {
+        return;
+    }
+    let (service, client) = DeviceService::start_default().unwrap();
+    let (block_rows, d) = service.manifest.lr_block;
+    let n = block_rows + 37;
+    let mut rng = Rng::new(9);
+    let x = DenseMatrix::rand(n, d, 0.0, 1.0, rng.next_u64());
+    let y: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
+    let sched = SchedConfig::default();
+    let native = linreg::run_native(&x, &y, 1e-3, &topo(), &sched).unwrap();
+    let pjrt = linreg::run_pjrt(
+        &x,
+        &y,
+        1e-3,
+        &client,
+        &service.manifest,
+        &topo(),
+        &sched,
+    )
+    .unwrap();
+    for (i, (a, b)) in native.beta.iter().zip(&pjrt.beta).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-2 * a.abs().max(1.0),
+            "beta[{i}]: native {a} vs pjrt {b}"
+        );
+    }
+}

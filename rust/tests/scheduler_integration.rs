@@ -1,0 +1,170 @@
+//! Cross-module integration: the full scheduler matrix (11 schemes × 4
+//! layouts × 4 victims) drives both evaluated apps correctly, and the
+//! DES reproduces the paper's qualitative orderings at small scale.
+
+use daphne_sched::apps::{cc, linreg};
+use daphne_sched::config::SchedConfig;
+use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
+use daphne_sched::sched::{QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::sim::{self, CostModel, Workload};
+use daphne_sched::topology::Topology;
+
+fn host2() -> Topology {
+    Topology::symmetric("t", 2, 1, 1.5, 1.0)
+}
+
+#[test]
+fn full_config_matrix_runs_cc_correctly() {
+    let g = amazon_like(&GraphSpec::small(400, 2)).symmetrize();
+    let expected =
+        cc::run_native(&g, &host2(), &SchedConfig::default(), 100).labels;
+    let layouts = [
+        QueueLayout::Centralized { atomic: false },
+        QueueLayout::Centralized { atomic: true },
+        QueueLayout::PerGroup,
+        QueueLayout::PerCore,
+    ];
+    for scheme in Scheme::ALL {
+        for layout in layouts {
+            for victim in VictimStrategy::ALL {
+                let cfg = SchedConfig {
+                    scheme,
+                    layout,
+                    victim,
+                    seed: 99,
+                    stages: None,
+                    pls_swr: 0.5,
+                };
+                let got = cc::run_native(&g, &host2(), &cfg, 100);
+                assert_eq!(
+                    got.labels, expected,
+                    "{scheme:?}/{layout:?}/{victim:?}"
+                );
+                // stealing layouts only steal when legal
+                if !layout.steals() {
+                    assert_eq!(got.reports[0].total_steals(), 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scaled_graph_has_k_times_components() {
+    let g = amazon_like(&GraphSpec::small(150, 8)).symmetrize();
+    let scaled = scale_up(&g, 4);
+    let r = cc::run_native(&scaled, &host2(), &SchedConfig::default(), 100);
+    assert_eq!(r.components, 4, "4 disjoint copies = 4 components");
+}
+
+#[test]
+fn des_reproduces_fig7_ordering_smallscale() {
+    // Sparse CC workload on modelled Broadwell under the figure
+    // environment (DAPHNE-like dispatch costs + OS interference): MFSC
+    // must beat STATIC (the paper's headline Fig. 7a result). Averaged
+    // over iterations like the figure harness.
+    let g = amazon_like(&GraphSpec::small(200_000, 1)).symmetrize();
+    let topo = Topology::broadwell20();
+    let costs = CostModel::daphne_like();
+    let base = SchedConfig::default().with_seed(1);
+    let (t_static, _) = cc::simulate_run(
+        &g,
+        &topo,
+        &base.clone().with_scheme(Scheme::Static),
+        &costs,
+        10,
+        10.3e-9,
+        1.1e-9,
+    );
+    let (t_mfsc, _) = cc::simulate_run(
+        &g,
+        &topo,
+        &base.clone().with_scheme(Scheme::Mfsc),
+        &costs,
+        10,
+        10.3e-9,
+        1.1e-9,
+    );
+    assert!(
+        t_mfsc < t_static,
+        "MFSC {t_mfsc} must beat STATIC {t_static} on sparse CC"
+    );
+}
+
+#[test]
+fn des_reproduces_fig10_ordering_smallscale() {
+    // Dense LR workload: STATIC must beat the fine-grained dynamic
+    // schemes (Fig. 10) because scheduling overhead is pure loss.
+    let topo = Topology::broadwell20();
+    let costs = CostModel::recorded();
+    let w = linreg::workload(200_000, 3e-8);
+    let time = |scheme: Scheme| {
+        sim::simulate(
+            &topo,
+            &SchedConfig::default().with_scheme(scheme),
+            &w,
+            &costs,
+        )
+        .makespan()
+    };
+    let t_static = time(Scheme::Static);
+    for scheme in [Scheme::Mfsc, Scheme::Tfss, Scheme::Pls, Scheme::Pss] {
+        let t = time(scheme);
+        assert!(
+            t >= t_static * 0.98,
+            "{scheme:?} ({t}) must not beat STATIC ({t_static}) on dense LR"
+        );
+    }
+}
+
+#[test]
+fn des_ss_explodes_on_central_queue() {
+    // §4: SS execution time "explodes" under central-queue contention —
+    // the reason it is omitted from Figs. 7-10.
+    let topo = Topology::cascadelake56();
+    let costs = CostModel::recorded();
+    let w = Workload::uniform("u", 500_000, 1e-8);
+    let t_ss = sim::simulate(
+        &topo,
+        &SchedConfig::default().with_scheme(Scheme::Ss),
+        &w,
+        &costs,
+    )
+    .makespan();
+    let t_gss = sim::simulate(
+        &topo,
+        &SchedConfig::default().with_scheme(Scheme::Gss),
+        &w,
+        &costs,
+    )
+    .makespan();
+    assert!(
+        t_ss > 10.0 * t_gss,
+        "SS ({t_ss}) must explode vs GSS ({t_gss})"
+    );
+}
+
+#[test]
+fn linreg_beta_invariant_across_machines() {
+    let (x, y) = linreg::generate(&linreg::LinregSpec {
+        rows: 1200,
+        cols: 9,
+        lambda: 1e-3,
+        seed: 5,
+    });
+    let a = linreg::run_native(&x, &y, 1e-3, &host2(), &SchedConfig::default())
+        .unwrap()
+        .beta;
+    let b = linreg::run_native(
+        &x,
+        &y,
+        1e-3,
+        &Topology::symmetric("t4", 1, 4, 1.0, 1.0),
+        &SchedConfig::default().with_scheme(Scheme::Fac2),
+    )
+    .unwrap()
+    .beta;
+    for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+        assert!((p - q).abs() < 1e-3, "beta[{i}]: {p} vs {q}");
+    }
+}
