@@ -14,6 +14,7 @@ use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
 use daphne_sched::sched::Scheme;
 use daphne_sched::sim::CostModel;
 use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
 
 fn main() {
     let mut args = std::env::args().skip(1);
@@ -31,11 +32,13 @@ fn main() {
     );
 
     // -- native execution on this host, all schemes --------------------
+    // one engine = one resident worker pool; each scheme's run submits
+    // its jobs with a per-job config override instead of respawning
     println!("native execution (host):");
-    let topo = Topology::host();
+    let vee = Vee::new(Topology::host(), SchedConfig::default());
     for scheme in Scheme::ALL {
         let cfg = SchedConfig::default().with_scheme(scheme);
-        let r = cc::run_native(&g, &topo, &cfg, 100);
+        let r = cc::run_with(&vee.with_config(cfg), &g, 100);
         println!(
             "  {:<7} {:.4}s  ({} iterations, {} components)",
             scheme.name(),

@@ -11,6 +11,7 @@ use daphne_sched::config::SchedConfig;
 use daphne_sched::runtime::{DeviceService, Runtime};
 use daphne_sched::sched::Scheme;
 use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
 
 fn main() {
     let spec = LinregSpec { rows: 50_000, cols: 33, lambda: 1e-3, seed: 3 };
@@ -23,10 +24,12 @@ fn main() {
         topo.n_cores()
     );
 
-    println!("\nnative execution, all schemes:");
+    println!("\nnative execution, all schemes (one resident pool):");
+    let vee = Vee::new(topo.clone(), SchedConfig::default());
     for scheme in Scheme::ALL {
         let cfg = SchedConfig::default().with_scheme(scheme);
-        let r = linreg::run_native(&x, &y, spec.lambda, &topo, &cfg).unwrap();
+        let r = linreg::run_with(&vee.with_config(cfg), &x, &y, spec.lambda)
+            .unwrap();
         println!(
             "  {:<7} scheduled {:.4}s  rmse={:.4}",
             scheme.name(),

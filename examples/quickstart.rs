@@ -1,4 +1,10 @@
-//! Quickstart: schedule a data-parallel operator with DaphneSched.
+//! Quickstart: submit jobs to DaphneSched's persistent executor.
+//!
+//! Worker threads are spawned **once** (one per topology place) and
+//! parked between jobs; work is submitted as jobs, each carrying its own
+//! scheduling configuration — so one resident pool runs the DAPHNE
+//! default (STATIC, centralized queue) and a work-stealing configuration
+//! back-to-back, or even concurrently.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -7,11 +13,59 @@
 use daphne_sched::apps::cc;
 use daphne_sched::config::SchedConfig;
 use daphne_sched::graph::{amazon_like, GraphSpec};
-use daphne_sched::sched::{QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::sched::{Executor, JobSpec, QueueLayout, Scheme, VictimStrategy};
 use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
 
 fn main() {
-    // 1. a workload: connected components over a co-purchase-like graph
+    // 1. the raw job-submission API ------------------------------------
+    // One persistent pool on this host; STATIC is the executor default.
+    let exec = Executor::host(SchedConfig::default());
+    println!(
+        "executor: {} resident workers on '{}'",
+        exec.n_workers(),
+        exec.topology().name
+    );
+
+    // a borrowed-body job: partition 1M items, run, wait for the report
+    let report = exec.run(JobSpec::new(1_000_000).named("warmup"), |_w, range| {
+        std::hint::black_box(range.len());
+    });
+    println!("  warmup           {}", report.row());
+
+    // a job with a per-job scheduling override: GSS chunks dealt into
+    // per-core queues with randomized NUMA-aware stealing — same pool.
+    let stealing = SchedConfig::default()
+        .with_scheme(Scheme::Gss)
+        .with_layout(QueueLayout::PerCore)
+        .with_victim(VictimStrategy::RndPri);
+    let report = exec.run(
+        JobSpec::new(1_000_000).named("gss").with_config(stealing),
+        |_w, range| {
+            std::hint::black_box(range.len());
+        },
+    );
+    println!("  per-job override {}", report.row());
+
+    // two jobs in flight at once, multiplexed over the same workers
+    exec.scope(|s| {
+        let a = s.submit(JobSpec::new(500_000).named("tenant-a"), |_w, r| {
+            std::hint::black_box(r.len());
+        });
+        let b = s.submit(JobSpec::new(500_000).named("tenant-b"), |_w, r| {
+            std::hint::black_box(r.len());
+        });
+        println!("  concurrent a     {}", a.wait().row());
+        println!("  concurrent b     {}", b.wait().row());
+    });
+    println!(
+        "  {} jobs completed, 0 thread respawns\n",
+        exec.jobs_completed()
+    );
+
+    // 2. a real workload through the VEE -------------------------------
+    // connected components over a co-purchase-like graph; the engine
+    // fronts one persistent executor, every propagate iteration is a job
     let graph = amazon_like(&GraphSpec::small(20_000, 7)).symmetrize();
     println!(
         "graph: {} nodes, {} edges ({:.4}% dense)",
@@ -19,11 +73,8 @@ fn main() {
         graph.nnz(),
         graph.density() * 100.0
     );
+    let vee = Vee::new(Topology::host(), SchedConfig::default());
 
-    // 2. a machine: this host
-    let topo = Topology::host();
-
-    // 3. scheduling configurations to compare
     let configs = [
         ("DAPHNE default", SchedConfig::default()), // STATIC, central
         (
@@ -40,7 +91,8 @@ fn main() {
     ];
 
     for (label, config) in configs {
-        let result = cc::run_native(&graph, &topo, &config, 100);
+        // with_config shares the resident pool; only the job config changes
+        let result = cc::run_with(&vee.with_config(config), &graph, 100);
         println!(
             "{label:<32} {} components in {} iterations, {:.4}s scheduled, \
              {} steals",
@@ -50,4 +102,9 @@ fn main() {
             result.reports.iter().map(|r| r.total_steals()).sum::<usize>(),
         );
     }
+    println!(
+        "all runs shared one pool: {} jobs on {} workers",
+        vee.executor().unwrap().jobs_completed(),
+        vee.executor().unwrap().n_workers()
+    );
 }

@@ -3,6 +3,7 @@
 //! - partitioner `next_chunk` per scheme (the `getNextChunk` cost),
 //! - locked vs atomic central-queue pull,
 //! - multi-queue pull + steal round,
+//! - spawn-per-stage vs persistent-executor job dispatch (thread churn),
 //! - DES event throughput,
 //! - native CC propagate kernel throughput.
 //!
@@ -10,11 +11,13 @@
 //! cargo bench --bench micro
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use daphne_sched::config::SchedConfig;
 use daphne_sched::graph::{amazon_like, GraphSpec};
 use daphne_sched::matrix::ops;
+use daphne_sched::sched::executor::{Executor, JobSpec};
 use daphne_sched::sched::partitioner::{Partitioner, PartitionerOptions};
 use daphne_sched::sched::queue::{
     build_source, CentralAtomic, CentralLocked, QueueLayout, TaskSource,
@@ -23,6 +26,14 @@ use daphne_sched::sched::{Scheme, VictimStrategy};
 use daphne_sched::sim::{simulate, CostModel, Workload};
 use daphne_sched::topology::Topology;
 use daphne_sched::util::fmt_duration;
+
+/// The seed's behaviour: spawn + join a fresh pool for every stage.
+#[allow(deprecated)]
+fn spawn_per_stage(topo: &Topology, cfg: &SchedConfig, items: usize) {
+    daphne_sched::sched::worker::run_once(topo, cfg, items, |_w, r| {
+        std::hint::black_box(r.len());
+    });
+}
 
 fn bench<F: FnMut() -> usize>(label: &str, mut f: F) {
     // warmup
@@ -87,6 +98,32 @@ fn main() {
         }
         n
     });
+
+    println!("\n== executor dispatch: spawn-per-stage vs persistent ==");
+    // 100 small 1-stage jobs: the repeated-pipeline pattern (CC
+    // iterations, linreg epochs). The persistent pool pays thread spawn
+    // once; the legacy path pays it per job.
+    let exec_topo = Topology::host();
+    let exec_cfg = SchedConfig::default().with_scheme(Scheme::Gss);
+    bench("spawn-per-stage (run_once x 100 jobs)", || {
+        for _ in 0..100 {
+            spawn_per_stage(&exec_topo, &exec_cfg, 10_000);
+        }
+        100
+    });
+    let exec = Executor::new(
+        Arc::new(exec_topo.clone()),
+        Arc::new(exec_cfg.clone()),
+    );
+    bench("persistent executor (submit x 100 jobs)", || {
+        for _ in 0..100 {
+            exec.run(JobSpec::new(10_000), |_w, r| {
+                std::hint::black_box(r.len());
+            });
+        }
+        100
+    });
+    drop(exec);
 
     println!("\n== DES event throughput ==");
     let w = Workload::uniform("u", 200_000, 1e-7);

@@ -58,14 +58,26 @@ fn count_components(labels: &[f32]) -> usize {
 }
 
 /// Native CSR execution under the given scheduling configuration.
+///
+/// Convenience wrapper: spawns a fresh engine (and worker pool) for the
+/// run. Callers executing several configurations should build one
+/// [`Vee`] and use [`run_with`] / [`Vee::with_config`] so every run
+/// shares the same resident pool.
 pub fn run_native(
     g: &CsrMatrix,
     topo: &Topology,
     sched: &SchedConfig,
     maxi: usize,
 ) -> CcResult {
+    run_with(&Vee::new(topo.clone(), sched.clone()), g, maxi)
+}
+
+/// Native CSR execution on an existing engine: every propagate
+/// iteration is one job submitted to the engine's resident pool —
+/// worker threads are spawned exactly once per engine, not per
+/// iteration.
+pub fn run_with(vee: &Vee, g: &CsrMatrix, maxi: usize) -> CcResult {
     let n = g.rows;
-    let vee = Vee::new(topo.clone(), sched.clone());
     // c = seq(1, n)
     let mut c: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
     let mut u = vec![0f32; n];
@@ -278,6 +290,30 @@ mod tests {
         let topo = Topology::symmetric("t", 1, 1, 1.0, 1.0);
         let r = run_native(&g, &topo, &SchedConfig::default(), 100);
         assert_eq!(r.components, 3); // {0,1}, {2}, {3}
+    }
+
+    #[test]
+    fn multi_iteration_run_spawns_workers_once() {
+        // A 31-node chain needs ~30 propagate iterations; every one must
+        // be a job on the engine's single resident pool.
+        let edges: Vec<(u32, u32)> = (0..30u32)
+            .flat_map(|i| [(i, i + 1), (i + 1, i)])
+            .collect();
+        let g = CsrMatrix::from_edges(31, 31, &edges);
+        let vee = crate::vee::Vee::new(
+            Topology::symmetric("t", 1, 2, 1.0, 1.0),
+            SchedConfig::default(),
+        );
+        let r = run_with(&vee, &g, 100);
+        assert!(r.iterations >= 10, "chain converged in {}", r.iterations);
+        assert_eq!(r.components, 1);
+        let exec = vee.executor().unwrap();
+        assert_eq!(exec.n_workers(), 2, "pool sized once from the topology");
+        assert_eq!(
+            exec.jobs_completed(),
+            r.iterations,
+            "one job per iteration, zero respawns"
+        );
     }
 
     #[test]

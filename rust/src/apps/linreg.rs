@@ -57,6 +57,10 @@ pub fn generate(spec: &LinregSpec) -> (DenseMatrix, Vec<f32>) {
 }
 
 /// Native execution of the full pipeline under a scheduling config.
+///
+/// Convenience wrapper: spawns a fresh engine (and worker pool) for the
+/// run; sweeps over several configurations should build one [`Vee`] and
+/// use [`run_with`] / [`Vee::with_config`] to share the resident pool.
 pub fn run_native(
     x: &DenseMatrix,
     y: &[f32],
@@ -64,9 +68,19 @@ pub fn run_native(
     topo: &Topology,
     sched: &SchedConfig,
 ) -> Result<LinregResult, String> {
+    run_with(&Vee::new(topo.clone(), sched.clone()), x, y, lambda)
+}
+
+/// Native execution on an existing engine: all three scheduled passes
+/// are jobs on the engine's resident pool (no per-stage thread churn).
+pub fn run_with(
+    vee: &Vee,
+    x: &DenseMatrix,
+    y: &[f32],
+    lambda: f32,
+) -> Result<LinregResult, String> {
     let n = x.rows;
     let d = x.cols;
-    let vee = Vee::new(topo.clone(), sched.clone());
 
     // --- stage 1: colstats (mean/stddev partials) --------------------
     let stats_acc: Mutex<(Vec<f32>, Vec<f32>)> =

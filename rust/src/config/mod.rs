@@ -61,11 +61,45 @@ impl SchedConfig {
     }
 }
 
+/// How the real-thread executor is provisioned for a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorMode {
+    /// Spawn the worker pool once and park it between jobs (the DAPHNE
+    /// runtime model; default).
+    #[default]
+    Persistent,
+    /// Spawn and join a fresh pool per scheduled operator (the legacy
+    /// spawn-per-stage behaviour, kept for A/B comparison).
+    Oneshot,
+}
+
+impl ExecutorMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorMode::Persistent => "persistent",
+            ExecutorMode::Oneshot => "oneshot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "persistent" | "pool" => Some(ExecutorMode::Persistent),
+            "oneshot" | "spawn" | "legacy" => Some(ExecutorMode::Oneshot),
+            _ => None,
+        }
+    }
+}
+
 /// A full experiment configuration (scheduling + machine + workload).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub sched: SchedConfig,
     pub topology: Topology,
+    /// Worker-pool provisioning (`executor=persistent|oneshot`).
+    pub executor: ExecutorMode,
+    /// Number of identical jobs submitted concurrently to the one
+    /// resident pool (`jobs=<n>`; 1 = a single job stream).
+    pub jobs: usize,
     /// Free-form workload parameters (apps interpret their own keys).
     pub params: BTreeMap<String, String>,
 }
@@ -75,6 +109,8 @@ impl Default for RunConfig {
         RunConfig {
             sched: SchedConfig::default(),
             topology: Topology::host(),
+            executor: ExecutorMode::default(),
+            jobs: 1,
             params: BTreeMap::new(),
         }
     }
@@ -129,6 +165,18 @@ impl RunConfig {
                     .parse()
                     .map_err(|_| ConfigError(format!("bad pls_swr '{value}'")))?;
             }
+            "executor" => {
+                self.executor = ExecutorMode::parse(value).ok_or_else(|| {
+                    ConfigError(format!("unknown executor mode '{value}'"))
+                })?;
+            }
+            "jobs" => {
+                self.jobs = value
+                    .parse()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| ConfigError(format!("bad jobs '{value}'")))?;
+            }
             _ => {
                 self.params.insert(key.to_string(), value.to_string());
             }
@@ -154,6 +202,13 @@ impl RunConfig {
     pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
+        Self::from_text(&text)
+            .map_err(|e| ConfigError(format!("{}: {}", path.display(), e.0)))
+    }
+
+    /// Parse the `key = value` line format (the same one `Display`
+    /// emits); '#' starts a comment.
+    pub fn from_text(text: &str) -> Result<Self, ConfigError> {
         let mut cfg = RunConfig::default();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.split('#').next().unwrap_or("").trim();
@@ -161,7 +216,7 @@ impl RunConfig {
                 continue;
             }
             let (k, v) = line.split_once('=').ok_or_else(|| {
-                ConfigError(format!("{}:{}: expected key = value", path.display(), lineno + 1))
+                ConfigError(format!("line {}: expected key = value", lineno + 1))
             })?;
             cfg.set(k.trim(), v.trim())?;
         }
@@ -182,6 +237,30 @@ impl RunConfig {
             .get(key)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
+    }
+}
+
+/// Emits the `key = value` line format accepted by
+/// [`RunConfig::from_file`], so a config round-trips through `Display`.
+/// (The `machine` line only re-parses for preset topology names —
+/// `host`, `broadwell20`, `cascadelake56`.)
+impl fmt::Display for RunConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "scheme = {}", self.sched.scheme.name())?;
+        writeln!(f, "layout = {}", self.sched.layout.name())?;
+        writeln!(f, "victim = {}", self.sched.victim.name())?;
+        writeln!(f, "machine = {}", self.topology.name)?;
+        writeln!(f, "seed = {}", self.sched.seed)?;
+        if let Some(stages) = self.sched.stages {
+            writeln!(f, "stages = {stages}")?;
+        }
+        writeln!(f, "pls_swr = {}", self.sched.pls_swr)?;
+        writeln!(f, "executor = {}", self.executor.name())?;
+        writeln!(f, "jobs = {}", self.jobs)?;
+        for (k, v) in &self.params {
+            writeln!(f, "{k} = {v}")?;
+        }
+        Ok(())
     }
 }
 
@@ -228,6 +307,64 @@ mod tests {
         assert_eq!(cfg.sched.scheme, Scheme::Gss);
         assert_eq!(cfg.topology.n_cores(), 56);
         assert_eq!(cfg.param_usize("rows", 0), 42);
+    }
+
+    #[test]
+    fn executor_and_jobs_keys_parse() {
+        let cfg =
+            RunConfig::from_pairs(["executor=oneshot", "jobs=4"]).unwrap();
+        assert_eq!(cfg.executor, ExecutorMode::Oneshot);
+        assert_eq!(cfg.jobs, 4);
+        let cfg = RunConfig::from_pairs(["executor=persistent"]).unwrap();
+        assert_eq!(cfg.executor, ExecutorMode::Persistent);
+        assert_eq!(cfg.jobs, 1, "jobs defaults to a single stream");
+        assert!(RunConfig::from_pairs(["executor=bogus"]).is_err());
+        assert!(RunConfig::from_pairs(["jobs=0"]).is_err());
+        assert!(RunConfig::from_pairs(["jobs=-1"]).is_err());
+    }
+
+    #[test]
+    fn display_round_trips_through_from_text() {
+        let cfg = RunConfig::from_pairs([
+            "scheme=tfss",
+            "layout=percore",
+            "victim=seqpri",
+            "machine=broadwell20",
+            "seed=41",
+            "stages=6",
+            "pls_swr=0.25",
+            "executor=oneshot",
+            "jobs=3",
+            "rows=4096",
+        ])
+        .unwrap();
+        let text = cfg.to_string();
+        let back = RunConfig::from_text(&text).unwrap();
+        assert_eq!(back.sched.scheme, cfg.sched.scheme);
+        assert_eq!(back.sched.layout, cfg.sched.layout);
+        assert_eq!(back.sched.victim, cfg.sched.victim);
+        assert_eq!(back.sched.seed, cfg.sched.seed);
+        assert_eq!(back.sched.stages, cfg.sched.stages);
+        assert_eq!(back.sched.pls_swr, cfg.sched.pls_swr);
+        assert_eq!(back.topology.name, cfg.topology.name);
+        assert_eq!(back.topology.n_cores(), cfg.topology.n_cores());
+        assert_eq!(back.executor, cfg.executor);
+        assert_eq!(back.jobs, cfg.jobs);
+        assert_eq!(back.params, cfg.params);
+    }
+
+    #[test]
+    fn display_round_trips_defaults_and_all_modes() {
+        // default config (no stages line) must round-trip too
+        let text = RunConfig::default().to_string();
+        let back = RunConfig::from_text(&text).unwrap();
+        assert_eq!(back.sched.stages, None);
+        assert_eq!(back.executor, ExecutorMode::Persistent);
+        assert_eq!(back.jobs, 1);
+        // every executor mode's name re-parses
+        for mode in [ExecutorMode::Persistent, ExecutorMode::Oneshot] {
+            assert_eq!(ExecutorMode::parse(mode.name()), Some(mode));
+        }
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! DaphneSched worker daemon (Fig. 5 right-hand side): listens for the
 //! coordinator, stores inputs as they arrive, and executes shipped code
 //! with its local shared-memory DaphneSched.
+//!
+//! The daemon's [`Vee`] fronts one persistent executor, so its worker
+//! pool is spawned once at daemon start and reused across every
+//! coordinator connection and every `CcIterate`/`RunScript` request.
 
 use std::collections::BTreeMap;
 use std::io::{self, BufReader, BufWriter};

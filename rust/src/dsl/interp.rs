@@ -58,6 +58,10 @@ pub struct Interp {
 }
 
 impl Interp {
+    /// `vee` is cheap to pass by value: cloning an engine shares its
+    /// resident worker pool, so every operator this interpreter
+    /// schedules is a job on the caller's executor — no threads are
+    /// spawned per operator.
     pub fn new(params: BTreeMap<String, String>, vee: Vee) -> Self {
         Interp {
             params,

@@ -4,11 +4,33 @@
 //! Pipelines** (Eleliemy & Ciorba, 2023) as a three-layer rust + JAX +
 //! Pallas stack.
 //!
-//! The crate provides:
+//! ## Execution model: one resident pool, many jobs
+//!
+//! Like the DAPHNE runtime it reproduces (paper Fig. 2), the crate keeps
+//! its worker pool **persistent**: [`sched::Executor`] spawns one OS
+//! thread per topology place when it is created and parks them between
+//! jobs. Work is *submitted*, not spawned —
+//! [`sched::Executor::submit`] takes a [`sched::JobSpec`] (item count +
+//! optional per-job [`config::SchedConfig`]) and returns a
+//! [`sched::JobHandle`] whose `wait()` yields the
+//! [`sched::SchedReport`]. Several in-flight jobs — even with different
+//! partitioning schemes or queue layouts — are multiplexed over the same
+//! workers; borrowed-body jobs go through [`sched::Executor::scope`] /
+//! [`sched::Executor::run`].
+//!
+//! The [`vee::Vee`] engine fronts one such executor: every vectorized
+//! operator of a pipeline is one job, so a 40-iteration connected-
+//! components run spawns threads exactly once. The legacy
+//! spawn-per-stage path survives as deprecated shims
+//! (`sched::worker::run_once`) and as `executor=oneshot` in the CLI, for
+//! A/B comparison (see `benches/micro.rs`).
+//!
+//! ## Modules
 //!
 //! - [`sched`] — the paper's contribution: a task-based scheduler with
 //!   eleven task-partitioning schemes, three queue layouts, and four
-//!   victim-selection strategies for work-stealing.
+//!   victim-selection strategies for work-stealing, executed by the
+//!   persistent job-submission [`sched::Executor`].
 //! - [`sim`] — a discrete-event simulator that drives the *same* scheduler
 //!   components in virtual time over a machine-topology model; this is how
 //!   the paper's 20-core Broadwell and 56-core Cascade Lake experiments
@@ -16,15 +38,19 @@
 //! - [`matrix`], [`graph`] — the data substrates (dense / CSR matrices,
 //!   synthetic Amazon-like co-purchase graphs).
 //! - [`vee`] — the vectorized execution engine that turns (data, operator)
-//!   into tasks, mirroring the DAPHNE runtime.
+//!   into jobs on the resident pool, mirroring the DAPHNE runtime.
 //! - [`dsl`] — a DaphneDSL-subset interpreter able to run the paper's
 //!   Listings 1 and 2 verbatim.
 //! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas HLO
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at runtime.
+//!   Gated behind the `pjrt` cargo feature (needs the external `xla`
+//!   crate).
 //! - [`coordinator`] — the Fig. 5 distributed-memory extension
-//!   (leader/worker over TCP).
+//!   (leader/worker over TCP); each worker daemon keeps one resident pool
+//!   across coordinator connections.
 //! - [`apps`] — the two evaluated IDA pipelines: connected components
-//!   (Listing 1) and linear-regression training (Listing 2).
+//!   (Listing 1) and linear-regression training (Listing 2), each with a
+//!   `run_with(&Vee, ..)` entry point for pool reuse across runs.
 
 pub mod apps;
 pub mod bench;

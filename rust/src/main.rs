@@ -13,12 +13,15 @@
 //! ```
 //!
 //! Options are `key=value` pairs (see `config::RunConfig::set`):
-//! `scheme=`, `layout=`, `victim=`, `machine=`, `seed=`, plus app
-//! parameters like `nodes=`, `scale=`, `rows=`, `cols=`.
+//! `scheme=`, `layout=`, `victim=`, `machine=`, `seed=`,
+//! `executor=persistent|oneshot`, `jobs=<n>` (concurrent jobs on the
+//! one resident pool), plus app parameters like `nodes=`, `scale=`,
+//! `rows=`, `cols=`.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use daphne_sched::apps::{cc, linreg};
 use daphne_sched::bench::{figures, AppCosts, FigureId, FigureParams};
@@ -47,6 +50,8 @@ fn usage() -> String {
      [args] [key=value ...]\n\
      examples:\n\
      \x20 daphne-sched run cc nodes=50000 scheme=mfsc layout=percore victim=seqpri\n\
+     \x20 daphne-sched run cc nodes=50000 jobs=4            # 4 concurrent jobs, one pool\n\
+     \x20 daphne-sched run linreg rows=100000 executor=oneshot  # legacy spawn-per-stage\n\
      \x20 daphne-sched run linreg rows=100000 cols=65 scheme=static\n\
      \x20 daphne-sched dsl script.daph f=synthetic:amazon?nodes=10000\n\
      \x20 daphne-sched figure 7a [nodes=403394 scale=1 measure=1]\n\
@@ -98,12 +103,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 .symmetrize();
             let g = if scale > 1 { scale_up(&g, scale) } else { g };
             println!(
-                "cc: {} nodes, {} edges ({:.4}% dense), machine={} [{} cores]",
+                "cc: {} nodes, {} edges ({:.4}% dense), machine={} [{} cores, \
+                 {} executor, {} job(s)]",
                 g.rows,
                 g.nnz(),
                 g.density() * 100.0,
                 topo.name,
-                topo.n_cores()
+                topo.n_cores(),
+                cfg.executor.name(),
+                cfg.jobs
             );
             let use_pjrt = cfg.param_usize("pjrt", 0) == 1;
             let result = if use_pjrt {
@@ -113,7 +121,37 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 cc::run_pjrt(&g, &client, &service.manifest, &topo, &cfg.sched, 100)
                     .map_err(|e| format!("{e:#}"))?
             } else {
-                cc::run_native(&g, &topo, &cfg.sched, 100)
+                let vee = Vee::with_mode(
+                    Arc::new(topo.clone()),
+                    Arc::new(cfg.sched.clone()),
+                    cfg.executor,
+                );
+                if cfg.jobs > 1 {
+                    // multi-tenant demo: submit identical pipelines
+                    // concurrently, multiplexed over the one resident pool
+                    let mut results: Vec<cc::CcResult> =
+                        std::thread::scope(|s| {
+                            let handles: Vec<_> = (0..cfg.jobs)
+                                .map(|_| s.spawn(|| cc::run_with(&vee, &g, 100)))
+                                .collect();
+                            handles
+                                .into_iter()
+                                .map(|h| h.join().expect("cc job panicked"))
+                                .collect()
+                        });
+                    for (i, r) in results.iter().enumerate() {
+                        println!(
+                            "  job {i}: {} iterations, {} components, \
+                             {:.4}s scheduled",
+                            r.iterations,
+                            r.components,
+                            r.total_time()
+                        );
+                    }
+                    results.swap_remove(0)
+                } else {
+                    cc::run_with(&vee, &g, 100)
+                }
             };
             println!(
                 "converged in {} iterations, {} components, scheduled time {:.4}s",
@@ -135,13 +173,58 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             };
             let (x, y) = linreg::generate(&spec);
             println!(
-                "linreg: {}x{} design matrix, machine={} [{} cores]",
+                "linreg: {}x{} design matrix, machine={} [{} cores, \
+                 {} executor, {} job(s)]",
                 x.rows,
                 x.cols,
                 topo.name,
-                topo.n_cores()
+                topo.n_cores(),
+                cfg.executor.name(),
+                cfg.jobs
             );
-            let result = linreg::run_native(&x, &y, spec.lambda, &topo, &cfg.sched)?;
+            let vee = Vee::with_mode(
+                Arc::new(topo.clone()),
+                Arc::new(cfg.sched.clone()),
+                cfg.executor,
+            );
+            let result = if cfg.jobs > 1 {
+                let results: Vec<Result<_, String>> =
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = (0..cfg.jobs)
+                            .map(|_| {
+                                s.spawn(|| {
+                                    linreg::run_with(&vee, &x, &y, spec.lambda)
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("linreg job panicked"))
+                            .collect()
+                    });
+                let mut first = None;
+                for (i, r) in results.into_iter().enumerate() {
+                    match r {
+                        Ok(r) => {
+                            println!(
+                                "  job {i}: scheduled {:.4}s",
+                                r.report.total_time()
+                            );
+                            if first.is_none() {
+                                first = Some(r);
+                            }
+                        }
+                        Err(e) => {
+                            return Err(format!(
+                                "concurrent linreg job {i} failed: {e}"
+                            ))
+                        }
+                    }
+                }
+                first.expect("jobs >= 1 guaranteed by config parsing")
+            } else {
+                linreg::run_with(&vee, &x, &y, spec.lambda)?
+            };
             println!(
                 "beta[0..4] = {:?}, rmse = {:.4}",
                 &result.beta[..result.beta.len().min(4)],

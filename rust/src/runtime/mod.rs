@@ -5,17 +5,44 @@
 //! Interchange is HLO **text**: jax ≥ 0.5 emits `HloModuleProto`s with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! The PJRT execution path needs the external `xla` crate, which the
+//! build environment may not provide; it is gated behind the `pjrt`
+//! cargo feature (add the `xla` dependency when enabling it). Without
+//! the feature, [`Runtime::load`] returns a descriptive error at
+//! runtime and everything else in the crate works normally — the PJRT
+//! integration tests skip when no artifacts are present.
 
 pub mod artifact;
 pub mod service;
+
+use std::path::PathBuf;
+
+pub use artifact::{Manifest, StageSpec};
+pub use service::{DeviceClient, DeviceService};
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_enabled::{Runtime, Stage};
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::{Runtime, Stage};
+
+/// Default artifact location (`artifacts/` at the repo root, or
+/// `$DAPHNE_ARTIFACTS`).
+fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("DAPHNE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_enabled {
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-pub use artifact::{Manifest, StageSpec};
-pub use service::{DeviceClient, DeviceService};
+use super::{Manifest, StageSpec};
 
 /// A compiled pipeline stage.
 pub struct Stage {
@@ -118,9 +145,7 @@ impl Runtime {
     /// Default artifact location (`artifacts/` at the repo root, or
     /// `$DAPHNE_ARTIFACTS`).
     pub fn default_dir() -> PathBuf {
-        std::env::var_os("DAPHNE_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+        super::default_artifact_dir()
     }
 
     pub fn stage(&self, name: &str) -> Result<&Stage> {
@@ -132,4 +157,66 @@ impl Runtime {
     pub fn stage_names(&self) -> Vec<&str> {
         self.stages.keys().map(|s| s.as_str()).collect()
     }
+}
+
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::StageSpec;
+
+/// Stub of the compiled-stage handle, present when the crate is built
+/// without the `pjrt` feature (no `xla` dependency available).
+pub struct Stage {
+    pub spec: StageSpec,
+}
+
+impl Stage {
+    pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!(
+            "stage {}: built without the `pjrt` feature — rebuild with \
+             `--features pjrt` and the `xla` crate to execute artifacts",
+            self.spec.name
+        )
+    }
+}
+
+/// Stub runtime: [`Runtime::load`] always errors, so callers (the
+/// device service, the `pjrt=1` CLI path) fail with a clear message at
+/// runtime instead of at compile time.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub platform: String,
+}
+
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable for {}: this build has no `pjrt` \
+             feature (the `xla` crate is not vendored); native execution \
+             paths are unaffected",
+            dir.display()
+        )
+    }
+
+    /// Default artifact location (`artifacts/` at the repo root, or
+    /// `$DAPHNE_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        super::default_artifact_dir()
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&Stage> {
+        bail!("no stage '{name}': PJRT runtime built without `pjrt` feature")
+    }
+
+    pub fn stage_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+}
+
 }

@@ -1,0 +1,809 @@
+//! Persistent executor (paper §3, Fig. 2): the DAPHNE runtime keeps its
+//! worker pool resident across vectorized operators — workers are
+//! created once per topology and only *task descriptions* flow to them,
+//! the same architectural move Canary makes for its cloud workers.
+//!
+//! This module is the job-submission API around that pool:
+//!
+//! - [`Executor`] — spawns one OS thread per topology place at
+//!   construction; threads park on a condvar between jobs instead of
+//!   being torn down (the seed executor paid a full `thread::scope`
+//!   spawn/join per pipeline stage).
+//! - [`JobSpec`] + [`Executor::submit`] → [`JobHandle`] — one *job* is
+//!   one scheduled parallel region (`total` items partitioned by a
+//!   [`SchedConfig`]); each job carries its own config, so one resident
+//!   pool runs STATIC and GSS jobs back-to-back — or concurrently.
+//! - [`Executor::scope`] — structured submission of jobs whose bodies
+//!   borrow stack data (the common case for matrix kernels); the scope
+//!   blocks until every job submitted through it has completed.
+//! - [`Executor::run`] — submit one borrowed-body job and wait; this is
+//!   what [`crate::vee::Vee::execute`] calls per vectorized operator.
+//!
+//! Multiple in-flight jobs are multiplexed over the same workers: each
+//! job owns a job-scoped [`TaskSource`] tagged with a monotonically
+//! increasing sequence id, workers drain jobs in FIFO submission order,
+//! and a worker that exhausts one job's source (its steal round found
+//! every queue empty — sources never refill) moves on to the next job
+//! rather than blocking. A job completes when its executed-item counter
+//! reaches `total`; because every item is handed out exactly once and
+//! counted only after its task body returns, completion implies no body
+//! is still running — and `finalize` drops the body before publishing
+//! completion, which together make borrowed-body jobs sound.
+//!
+//! One metrics caveat vs the retired join-everything executor: a worker
+//! whose *final* steal round over an already-empty source is still in
+//! progress when the last item completes flushes that round's
+//! `queue_wait`/`failed_steals` tail after the report snapshot; item,
+//! task, busy and successful-steal counts are always exact.
+//!
+//! Do not submit-and-wait from *inside* a task body: a body that blocks
+//! on another job of the same executor can deadlock the pool.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::metrics::{SchedReport, WorkerStats};
+use super::partitioner::PartitionerOptions;
+use super::queue::{self, TaskSource};
+use super::stealing;
+use super::task::TaskRange;
+use super::victim::VictimSelector;
+use crate::config::SchedConfig;
+use crate::topology::Topology;
+
+type Body = Box<dyn Fn(usize, TaskRange) + Send + Sync + 'static>;
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Description of one job: an item count plus optional per-job
+/// scheduling overrides (`None` = the executor's default config).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub items: usize,
+    pub config: Option<Arc<SchedConfig>>,
+}
+
+impl JobSpec {
+    pub fn new(items: usize) -> Self {
+        JobSpec { name: "job".to_string(), items, config: None }
+    }
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Override the executor's default scheduling for this job.
+    pub fn with_config(mut self, config: SchedConfig) -> Self {
+        self.config = Some(Arc::new(config));
+        self
+    }
+
+    /// Like [`JobSpec::with_config`] but sharing an existing `Arc` (no
+    /// per-job config clone — the hot path used by the VEE).
+    pub fn with_shared_config(mut self, config: Arc<SchedConfig>) -> Self {
+        self.config = Some(config);
+        self
+    }
+}
+
+/// One in-flight job: the job-scoped task source, the body, and the
+/// completion state. Lives behind an `Arc` shared by the submitter and
+/// every worker touching the job.
+struct Job {
+    /// Sequence id (the epoch tag): total order of submission, used by
+    /// workers to remember which jobs they have already exhausted.
+    seq: u64,
+    name: String,
+    total: usize,
+    config: Arc<SchedConfig>,
+    source: Box<dyn TaskSource>,
+    /// The task body. Taken and dropped by `finalize` *before* the
+    /// completion event is published: workers can only call it while
+    /// `executed < total`, and a scoped submitter may free the `'env`
+    /// data it borrows (or that its drop glue touches) as soon as
+    /// completion is observed — so it must never outlive that point,
+    /// even though worker threads keep `Arc<Job>` clones around.
+    body: Mutex<Option<Body>>,
+    start: Instant,
+    /// Items whose body has *returned* (or that were drained after an
+    /// abort). Reaching `total` is the completion event.
+    executed: AtomicUsize,
+    /// Set when a body panicked: stop handing out this job's tasks.
+    aborted: AtomicBool,
+    panic: Mutex<Option<PanicPayload>>,
+    /// Per-worker counters, flushed before each item-count publish so
+    /// the finalizer's snapshot covers every executed task. (Only the
+    /// tail of a concurrent worker's final empty steal round — its
+    /// `queue_wait`/`failed_steals` — can land after the snapshot; see
+    /// the module docs.)
+    stats: Vec<Mutex<WorkerStats>>,
+    done: Mutex<Option<SchedReport>>,
+    done_cv: Condvar,
+}
+
+struct RunState {
+    /// FIFO of jobs that still have (or may have) unclaimed tasks.
+    jobs: Vec<Arc<Job>>,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    topo: Arc<Topology>,
+    queue: Mutex<RunState>,
+    work_cv: Condvar,
+}
+
+/// The persistent worker pool. Threads are spawned once, here, and
+/// parked between jobs; `Drop` drains remaining jobs and joins them.
+pub struct Executor {
+    shared: Arc<Shared>,
+    default_config: Arc<SchedConfig>,
+    threads: Vec<JoinHandle<()>>,
+    jobs_completed: Arc<AtomicUsize>,
+}
+
+impl Executor {
+    /// Spawn one worker per place in `topo`. This is the only point in
+    /// the crate that creates scheduler worker threads.
+    pub fn new(topo: Arc<Topology>, default_config: Arc<SchedConfig>) -> Self {
+        let shared = Arc::new(Shared {
+            topo: Arc::clone(&topo),
+            queue: Mutex::new(RunState {
+                jobs: Vec::new(),
+                next_seq: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let jobs_completed = Arc::new(AtomicUsize::new(0));
+        let threads = (0..topo.n_cores())
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                let completed = Arc::clone(&jobs_completed);
+                std::thread::Builder::new()
+                    .name(format!("daphne-worker-{w}"))
+                    .spawn(move || worker_main(w, &shared, &completed))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Executor { shared, default_config, threads, jobs_completed }
+    }
+
+    /// Executor for the host topology with the given default config.
+    pub fn host(default_config: SchedConfig) -> Self {
+        Executor::new(Topology::host_shared(), Arc::new(default_config))
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.threads.len()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.shared.topo
+    }
+
+    pub fn default_config(&self) -> &Arc<SchedConfig> {
+        &self.default_config
+    }
+
+    /// Jobs finalized by this pool since construction (observability;
+    /// also lets tests assert pool reuse across many jobs).
+    pub fn jobs_completed(&self) -> usize {
+        self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// Submit an owned-body job; the returned handle may outlive any
+    /// stack frame (the job keeps running if the handle is dropped).
+    pub fn submit<F>(&self, spec: JobSpec, body: F) -> JobHandle<'static>
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'static,
+    {
+        let job = self.enqueue(spec, Box::new(body));
+        JobHandle { job, _env: PhantomData }
+    }
+
+    /// Structured submission for jobs whose bodies borrow the caller's
+    /// data: every job submitted through the [`Scope`] is awaited before
+    /// `scope` returns (mirrors `std::thread::scope`). The first body
+    /// panic is resumed on the calling thread.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
+    {
+        let scope = Scope {
+            exec: self,
+            pending: Mutex::new(Vec::new()),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Completion barrier: no body can run past this point, which is
+        // what makes the 'env lifetime transmute in `Scope::submit`
+        // sound.
+        let pending = std::mem::take(&mut *scope.pending.lock().unwrap());
+        let mut job_panic = None;
+        for job in pending {
+            let mut g = job.done.lock().unwrap();
+            while g.is_none() {
+                g = job.done_cv.wait(g).unwrap();
+            }
+            drop(g);
+            if job_panic.is_none() {
+                job_panic = job.panic.lock().unwrap().take();
+            }
+        }
+        match result {
+            Err(p) => resume_unwind(p),
+            Ok(r) => {
+                if let Some(p) = job_panic {
+                    resume_unwind(p);
+                }
+                r
+            }
+        }
+    }
+
+    /// Submit one borrowed-body job and block until it completes — the
+    /// per-operator entry point used by the VEE.
+    pub fn run<F>(&self, spec: JobSpec, body: F) -> SchedReport
+    where
+        F: Fn(usize, TaskRange) + Send + Sync,
+    {
+        self.scope(|s| s.submit(spec, &body).wait())
+    }
+
+    fn enqueue(&self, spec: JobSpec, body: Body) -> Arc<Job> {
+        let config = spec
+            .config
+            .unwrap_or_else(|| Arc::clone(&self.default_config));
+        let opts = PartitionerOptions {
+            stages: config.stages,
+            pls_swr: config.pls_swr,
+            seed: config.seed,
+        };
+        let source = queue::build_source(
+            config.layout,
+            config.scheme,
+            spec.items,
+            &self.shared.topo,
+            &opts,
+        );
+        let n = self.shared.topo.n_cores();
+        let mut q = self.shared.queue.lock().unwrap();
+        let seq = q.next_seq;
+        q.next_seq += 1;
+        let job = Arc::new(Job {
+            seq,
+            name: spec.name,
+            total: spec.items,
+            config,
+            source,
+            body: Mutex::new(Some(body)),
+            start: Instant::now(),
+            executed: AtomicUsize::new(0),
+            aborted: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            stats: (0..n).map(|_| Mutex::new(WorkerStats::default())).collect(),
+            done: Mutex::new(None),
+            done_cv: Condvar::new(),
+        });
+        if job.total == 0 {
+            // Nothing to schedule: complete inline without waking the pool
+            // (body dropped before completion publishes, as in finalize).
+            drop(q);
+            drop(job.body.lock().unwrap().take());
+            *job.done.lock().unwrap() = Some(make_report(&job));
+            self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            q.jobs.push(Arc::clone(&job));
+            drop(q);
+            self.shared.work_cv.notify_all();
+        }
+        job
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl fmt::Debug for Executor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Executor")
+            .field("topology", &self.shared.topo.name)
+            .field("workers", &self.threads.len())
+            .field("jobs_completed", &self.jobs_completed())
+            .finish()
+    }
+}
+
+/// Submission scope for borrowed-body jobs (see [`Executor::scope`]).
+pub struct Scope<'scope, 'env: 'scope> {
+    exec: &'scope Executor,
+    pending: Mutex<Vec<Arc<Job>>>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Submit a job whose body may borrow data living at least `'env`.
+    pub fn submit<F>(&'scope self, spec: JobSpec, body: F) -> JobHandle<'scope>
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'env,
+    {
+        let boxed: Box<dyn Fn(usize, TaskRange) + Send + Sync + 'env> =
+            Box::new(body);
+        // SAFETY: `Executor::scope` blocks until this job's completion
+        // event. Before that event is published, `finalize` both (a)
+        // proves no call is in flight (items are counted only after
+        // their call returns, and completion requires all of them) and
+        // (b) takes and DROPS this box — so neither a call through the
+        // closure nor its drop glue can happen after 'env ends, even
+        // though workers hold `Arc<Job>` clones longer. Lifetime-only
+        // transmute; vtable and layout are unchanged.
+        let boxed: Body = unsafe { std::mem::transmute(boxed) };
+        let job = self.exec.enqueue(spec, boxed);
+        self.pending.lock().unwrap().push(Arc::clone(&job));
+        JobHandle { job, _env: PhantomData }
+    }
+}
+
+/// Handle to one submitted job.
+#[must_use = "a JobHandle should be waited on (the job itself keeps running)"]
+pub struct JobHandle<'a> {
+    job: Arc<Job>,
+    _env: PhantomData<&'a ()>,
+}
+
+impl JobHandle<'_> {
+    pub fn name(&self) -> &str {
+        &self.job.name
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.job.done.lock().unwrap().is_some()
+    }
+
+    /// Block until the job completes; resumes the body's panic if one
+    /// occurred.
+    pub fn wait(self) -> SchedReport {
+        let mut g = self.job.done.lock().unwrap();
+        while g.is_none() {
+            g = self.job.done_cv.wait(g).unwrap();
+        }
+        let report = g.clone().unwrap();
+        drop(g);
+        if let Some(p) = self.job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+        report
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// The park/dispatch loop run by every pool thread: pick the oldest
+/// submitted job not yet exhausted *for this worker*, work it until its
+/// source is drained, remember it, repeat; park when nothing is left.
+fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
+    // Jobs whose source this worker has already found empty. Sources
+    // never refill, so membership is permanent; entries are garbage-
+    // collected once the job leaves the run queue.
+    let mut exhausted: Vec<u64> = Vec::new();
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                exhausted.retain(|s| q.jobs.iter().any(|j| j.seq == *s));
+                if let Some(job) = q
+                    .jobs
+                    .iter()
+                    .find(|j| !exhausted.contains(&j.seq))
+                    .cloned()
+                {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        run_job_stint(w, &job, shared, completed);
+        exhausted.push(job.seq);
+    }
+}
+
+/// One worker's stint on one job: the seed's worker loop (local pull,
+/// then a steal round under the configured victim selection), ending
+/// when the job-scoped source is exhausted or the job aborts.
+fn run_job_stint(
+    w: usize,
+    job: &Arc<Job>,
+    shared: &Shared,
+    completed: &AtomicUsize,
+) {
+    let source = &*job.source;
+    let topo = &shared.topo;
+    let config = &job.config;
+
+    // One handle to the body for this stint. SAFETY of later derefs: the
+    // body is freed only by `finalize`, which runs only once
+    // `executed == total`; every task this stint executes was pulled —
+    // and is counted only after its call returns — before that point can
+    // be reached, so the pointee is alive for every call made here.
+    let body_ptr: *const (dyn Fn(usize, TaskRange) + Send + Sync) = {
+        let guard = job.body.lock().unwrap();
+        match guard.as_ref() {
+            Some(body) => &**body as *const _,
+            // Job already finalized (its Arc lingered in our run-queue
+            // snapshot): nothing left to do.
+            None => return,
+        }
+    };
+
+    let mut selector = config.layout.steals().then(|| {
+        let queue_socket: Vec<usize> = (0..source.n_queues())
+            .map(|q| queue_socket_of(source, q, topo))
+            .collect();
+        VictimSelector::new(
+            config.victim,
+            source.queue_of(w),
+            topo.socket_of(w.min(topo.n_cores() - 1)),
+            queue_socket,
+            config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
+        )
+    });
+
+    // Deltas since the last flush into `job.stats[w]`.
+    let mut local = WorkerStats::default();
+    loop {
+        if job.aborted.load(Ordering::Acquire) {
+            break;
+        }
+        let t0 = Instant::now();
+        let pull = source.pull_local(w).or_else(|| {
+            let selector = selector.as_mut()?;
+            let out = stealing::steal_round(source, selector, w);
+            local.failed_steals +=
+                out.attempts - usize::from(out.pull.is_some());
+            out.pull
+        });
+        local.queue_wait += t0.elapsed().as_secs_f64();
+
+        let Some(pull) = pull else { break };
+        if pull.stolen {
+            local.steals += 1;
+            local.stolen_items += pull.task.len();
+        }
+
+        let t1 = Instant::now();
+        // SAFETY: see `body_ptr` above — a pulled, not-yet-counted task
+        // keeps `executed < total`, so the body cannot have been freed.
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| unsafe { (*body_ptr)(w, pull.task) }));
+        local.busy += t1.elapsed().as_secs_f64();
+        local.tasks += 1;
+        local.items += pull.task.len();
+
+        // Publish stats before counting items: whoever observes
+        // `executed == total` snapshots every worker's slot.
+        flush_stats(&mut local, &job.stats[w]);
+        if let Err(payload) = outcome {
+            abort_job(job, payload, w, shared, completed);
+        }
+        complete_items(job, pull.task.len(), shared, completed);
+    }
+    flush_stats(&mut local, &job.stats[w]);
+}
+
+fn flush_stats(delta: &mut WorkerStats, slot: &Mutex<WorkerStats>) {
+    let mut s = slot.lock().unwrap();
+    s.tasks += delta.tasks;
+    s.items += delta.items;
+    s.busy += delta.busy;
+    s.queue_wait += delta.queue_wait;
+    s.steals += delta.steals;
+    s.failed_steals += delta.failed_steals;
+    s.stolen_items += delta.stolen_items;
+    *delta = WorkerStats::default();
+}
+
+/// Count `n` items as finished; the worker that brings the counter to
+/// `total` finalizes the job.
+fn complete_items(
+    job: &Arc<Job>,
+    n: usize,
+    shared: &Shared,
+    completed: &AtomicUsize,
+) {
+    if n == 0 {
+        return;
+    }
+    let prev = job.executed.fetch_add(n, Ordering::AcqRel);
+    if prev + n == job.total {
+        finalize(job, shared, completed);
+    }
+}
+
+fn make_report(job: &Job) -> SchedReport {
+    SchedReport {
+        scheme: job.config.scheme.name().to_string(),
+        layout: job.config.layout.name().to_string(),
+        victim: job.config.victim.name().to_string(),
+        makespan: job.start.elapsed().as_secs_f64(),
+        per_worker: job.stats.iter().map(|s| s.lock().unwrap().clone()).collect(),
+    }
+}
+
+fn finalize(job: &Arc<Job>, shared: &Shared, completed: &AtomicUsize) {
+    let report = make_report(job);
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.jobs.retain(|j| j.seq != job.seq);
+    }
+    // Drop the body BEFORE publishing completion: a scoped submitter may
+    // invalidate everything the closure borrows the moment `done` is
+    // observed, and worker threads keep `Arc<Job>` clones alive past
+    // that point. No call can be in flight here (every pulled task is
+    // counted only after its call returns).
+    drop(job.body.lock().unwrap().take());
+    completed.fetch_add(1, Ordering::Relaxed);
+    let mut done = job.done.lock().unwrap();
+    *done = Some(report);
+    job.done_cv.notify_all();
+}
+
+/// A task body panicked: record the payload, stop handing out tasks,
+/// and drain the source so `executed` can still reach `total` (drained
+/// items are counted but never run) — waiters unblock instead of
+/// hanging, and the panic is resumed on the waiting thread.
+fn abort_job(
+    job: &Arc<Job>,
+    payload: PanicPayload,
+    w: usize,
+    shared: &Shared,
+    completed: &AtomicUsize,
+) {
+    {
+        let mut p = job.panic.lock().unwrap();
+        if p.is_none() {
+            *p = Some(payload);
+        }
+    }
+    job.aborted.store(true, Ordering::Release);
+    let source = &*job.source;
+    let mut drained = 0usize;
+    for q in 0..source.n_queues() {
+        while let Some(pull) = source.pull_from(q, w) {
+            drained += pull.task.len();
+        }
+    }
+    debug_assert!(source.is_exhausted(), "abort drain must empty the source");
+    complete_items(job, drained, shared, completed);
+}
+
+/// NUMA domain a queue is homed on: for per-core layouts it is the
+/// owner's socket, for per-group layouts the group index, for the
+/// centralized layout socket 0.
+fn queue_socket_of(source: &dyn TaskSource, q: usize, topo: &Topology) -> usize {
+    if source.n_queues() == topo.n_cores() {
+        topo.socket_of(q)
+    } else if source.n_queues() == topo.sockets {
+        q
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::partitioner::Scheme;
+    use crate::sched::queue::QueueLayout;
+    use crate::sched::victim::VictimStrategy;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+
+    fn host4() -> Arc<Topology> {
+        Arc::new(Topology::symmetric("test4", 2, 2, 1.5, 1.0))
+    }
+
+    fn exec(config: SchedConfig) -> Executor {
+        Executor::new(host4(), Arc::new(config))
+    }
+
+    const LAYOUTS: [QueueLayout; 4] = [
+        QueueLayout::Centralized { atomic: false },
+        QueueLayout::Centralized { atomic: true },
+        QueueLayout::PerGroup,
+        QueueLayout::PerCore,
+    ];
+
+    fn coverage(exec: &Executor, spec: JobSpec) {
+        let total = spec.items;
+        let hits: Vec<AtomicUsize> =
+            (0..total).map(|_| AtomicUsize::new(0)).collect();
+        let report = exec.run(spec, |_w, range| {
+            for i in range.iter() {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(report.total_items(), total);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} ran != once");
+        }
+    }
+
+    #[test]
+    fn consecutive_jobs_reuse_the_pool() {
+        for layout in LAYOUTS {
+            let cfg = SchedConfig::default()
+                .with_scheme(Scheme::Gss)
+                .with_layout(layout)
+                .with_victim(VictimStrategy::SeqPri);
+            let e = exec(cfg);
+            for total in [5_000, 1, 7_777] {
+                coverage(&e, JobSpec::new(total));
+            }
+            assert_eq!(e.jobs_completed(), 3, "{layout:?}");
+            assert_eq!(e.n_workers(), 4);
+        }
+    }
+
+    #[test]
+    fn one_pool_runs_static_and_gss_back_to_back() {
+        let e = exec(SchedConfig::default());
+        let r1 = e.run(JobSpec::new(1000), |_w, _r| {});
+        let r2 = e.run(
+            JobSpec::new(1000).with_config(
+                SchedConfig::default()
+                    .with_scheme(Scheme::Gss)
+                    .with_layout(QueueLayout::PerCore),
+            ),
+            |_w, _r| {},
+        );
+        assert_eq!(r1.scheme, "STATIC");
+        assert_eq!(r1.layout, "CENTRAL");
+        assert_eq!(r2.scheme, "GSS");
+        assert_eq!(r2.layout, "PERCORE");
+    }
+
+    #[test]
+    fn many_jobs_never_respawn_workers() {
+        let e = exec(SchedConfig::default().with_scheme(Scheme::Fac2));
+        let seen: Mutex<HashSet<std::thread::ThreadId>> =
+            Mutex::new(HashSet::new());
+        for _ in 0..12 {
+            e.run(JobSpec::new(2_000), |_w, _r| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        let distinct = seen.lock().unwrap().len();
+        assert!(
+            distinct <= e.n_workers(),
+            "12 jobs used {distinct} distinct threads on a {}-worker pool",
+            e.n_workers()
+        );
+        assert_eq!(e.jobs_completed(), 12);
+    }
+
+    #[test]
+    fn concurrent_jobs_multiplex_with_full_coverage() {
+        for layout in LAYOUTS {
+            let cfg = SchedConfig::default()
+                .with_scheme(Scheme::Tss)
+                .with_layout(layout);
+            let e = exec(cfg);
+            let a: Vec<AtomicUsize> =
+                (0..6_000).map(|_| AtomicUsize::new(0)).collect();
+            let b: Vec<AtomicUsize> =
+                (0..4_321).map(|_| AtomicUsize::new(0)).collect();
+            e.scope(|s| {
+                let ha = s.submit(JobSpec::new(a.len()).named("a"), |_w, r| {
+                    for i in r.iter() {
+                        a[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                let hb = s.submit(JobSpec::new(b.len()).named("b"), |_w, r| {
+                    for i in r.iter() {
+                        b[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert_eq!(ha.wait().total_items(), a.len());
+                assert_eq!(hb.wait().total_items(), b.len());
+            });
+            for (i, h) in a.iter().chain(b.iter()).enumerate() {
+                assert_eq!(
+                    h.load(Ordering::Relaxed),
+                    1,
+                    "{layout:?}: slot {i} ran != once"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn submitters_on_separate_threads_share_one_pool() {
+        let e = exec(SchedConfig::default().with_scheme(Scheme::Mfsc));
+        let e = &e;
+        std::thread::scope(|s| {
+            for n in [3_000usize, 5_000] {
+                s.spawn(move || coverage(e, JobSpec::new(n)));
+            }
+        });
+        assert_eq!(e.jobs_completed(), 2);
+    }
+
+    #[test]
+    fn zero_item_job_completes_immediately() {
+        let e = exec(SchedConfig::default());
+        let r = e.run(JobSpec::new(0), |_w, _r| panic!("must not run"));
+        assert_eq!(r.total_items(), 0);
+        assert_eq!(e.jobs_completed(), 1);
+    }
+
+    #[test]
+    fn owned_body_submit_and_wait() {
+        let e = exec(SchedConfig::default().with_scheme(Scheme::Gss));
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let handle = e.submit(JobSpec::new(9_999).named("owned"), move |_w, r| {
+            c.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(handle.name(), "owned");
+        let report = handle.wait();
+        assert_eq!(report.total_items(), 9_999);
+        assert_eq!(count.load(Ordering::Relaxed), 9_999);
+    }
+
+    #[test]
+    fn body_panic_propagates_and_pool_survives() {
+        let e = exec(SchedConfig::default().with_scheme(Scheme::Fac2));
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            e.run(JobSpec::new(1_000), |_w, r| {
+                if r.start == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "body panic must propagate to the waiter");
+        // the pool must still execute subsequent jobs correctly
+        coverage(&e, JobSpec::new(2_500));
+    }
+
+    #[test]
+    fn report_names_follow_job_config() {
+        let e = exec(SchedConfig::default());
+        let r = e.run(
+            JobSpec::new(100).with_config(
+                SchedConfig::default()
+                    .with_scheme(Scheme::Pss)
+                    .with_layout(QueueLayout::PerCore)
+                    .with_victim(VictimStrategy::RndPri),
+            ),
+            |_w, _r| {},
+        );
+        assert_eq!(r.scheme, "PSS");
+        assert_eq!(r.layout, "PERCORE");
+        assert_eq!(r.victim, "RNDPRI");
+    }
+}

@@ -3,7 +3,7 @@
 //!
 //! 1. **Work partitioning** ([`partitioner`]): eleven self-scheduling
 //!    techniques decide task granularity (variable-size tasks, Fig. 3b).
-//! 2. **Work assignment** ([`queue`], [`victim`], [`worker`]):
+//! 2. **Work assignment** ([`queue`], [`victim`], [`executor`]):
 //!    self-scheduling from a centralized queue, or work-stealing across
 //!    per-core / per-NUMA-group queues with four victim-selection
 //!    strategies.
@@ -13,10 +13,24 @@
 //! the victim's partition exactly as the owner would, so steal
 //! granularity adapts instead of being a fixed constant.
 //!
-//! All components here are executor-agnostic: [`worker`] drives them with
-//! real OS threads, [`crate::sim`] drives the same code in virtual time.
+//! # Execution model
+//!
+//! Real-thread execution goes through the persistent [`Executor`]
+//! (mirroring DAPHNE's resident worker pool, Fig. 2): threads are
+//! spawned **once per topology** and parked between jobs, and callers
+//! submit work as jobs — [`Executor::submit`] returns a [`JobHandle`];
+//! `handle.wait()` yields the [`SchedReport`]. Every job carries its own
+//! [`SchedConfig`](crate::config::SchedConfig), so one resident pool
+//! runs (or multiplexes, concurrently) STATIC and GSS jobs over the
+//! same workers; each job gets a job-scoped [`TaskSource`].
+//!
+//! The legacy spawn-per-run path survives as deprecated shims in
+//! [`worker`] (`run_once`, `ThreadPool`) layered over a one-shot
+//! `Executor` — the DES ([`crate::sim`]) still drives the *same*
+//! `TaskSource`/`VictimSelector` components in virtual time.
 
 pub mod autotune;
+pub mod executor;
 pub mod metrics;
 pub mod partitioner;
 pub mod queue;
@@ -25,9 +39,11 @@ pub mod task;
 pub mod victim;
 pub mod worker;
 
+pub use executor::{Executor, JobHandle, JobSpec, Scope};
 pub use metrics::{SchedReport, WorkerStats};
 pub use partitioner::{ChunkCalc, Partitioner, Scheme};
 pub use queue::{QueueLayout, TaskSource};
 pub use task::TaskRange;
 pub use victim::VictimStrategy;
+#[allow(deprecated)]
 pub use worker::ThreadPool;

@@ -14,6 +14,16 @@
 //! In the multi-queue layouts every queue owns a [`Partitioner`] over its
 //! block, so a thief's steal granularity follows the chosen
 //! self-scheduling scheme (contribution C.2).
+//!
+//! Sources are **job-scoped**: the persistent executor
+//! ([`crate::sched::executor`]) builds one source per submitted job and
+//! multiplexes many of them over the same resident workers. Sources
+//! never refill, so exhaustion is permanent — workers detect it through
+//! an empty pull + steal round and move on to another job's source;
+//! [`TaskSource::is_exhausted`] / [`TaskSource::remaining_total`]
+//! expose the same invariant for steal heuristics, assertions and
+//! tests (in-flight tasks of an exhausted source may still be
+//! executing on other workers).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -84,6 +94,18 @@ pub trait TaskSource: Send + Sync {
     fn queue_of(&self, worker: usize) -> usize;
     /// Items still unclaimed in `queue` (steal heuristics, tests).
     fn remaining_in(&self, queue: usize) -> usize;
+
+    /// Total unclaimed items across every queue.
+    fn remaining_total(&self) -> usize {
+        (0..self.n_queues()).map(|q| self.remaining_in(q)).sum()
+    }
+
+    /// True once every queue is empty. Partitioners never refill, so an
+    /// exhausted job-scoped source stays exhausted; items already pulled
+    /// may still be executing.
+    fn is_exhausted(&self) -> bool {
+        self.remaining_total() == 0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -520,6 +542,23 @@ mod tests {
         let theft = mq.pull_from(7, 3).unwrap();
         assert!(theft.stolen);
         assert_eq!(theft.queue, 7);
+    }
+
+    #[test]
+    fn remaining_total_and_exhaustion() {
+        let topo = Topology::broadwell20();
+        let src = build_source(
+            QueueLayout::PerGroup,
+            Scheme::Static,
+            1_000,
+            &topo,
+            &opts(),
+        );
+        assert_eq!(src.remaining_total(), 1_000);
+        assert!(!src.is_exhausted());
+        let _ = drain_all(&*src);
+        assert_eq!(src.remaining_total(), 0);
+        assert!(src.is_exhausted(), "drained source must stay exhausted");
     }
 
     #[test]

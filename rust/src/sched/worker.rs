@@ -1,148 +1,67 @@
-//! Worker management (paper §3): the real-thread executor.
+//! Legacy spawn-per-run entry points, kept as thin deprecated shims
+//! over a one-shot [`Executor`](super::executor::Executor).
 //!
-//! Spawns one OS thread per topology place and drives the layout's
-//! [`TaskSource`] with the configured victim selection. The DES
-//! ([`crate::sim`]) drives the *same* `TaskSource`/`VictimSelector` in
-//! virtual time; this executor is the ground-truth path used by tests,
-//! examples and host-scale benchmarks.
+//! The real-thread execution path lives in [`super::executor`]: workers
+//! are spawned once per topology and parked between jobs. `ThreadPool`
+//! and [`run_once`] reproduce the seed's spawn-per-stage behaviour
+//! (construct pool → run one job → join) for callers that want a
+//! one-shot execution — they exist so the `sim` crate's shared
+//! components and older examples keep working, and as the baseline leg
+//! of the spawn-vs-persistent microbenchmark (`benches/micro.rs`).
 
 use std::sync::Arc;
-use std::time::Instant;
 
-use super::metrics::{SchedReport, WorkerStats};
-use super::partitioner::PartitionerOptions;
-use super::queue::{self, TaskSource};
-use super::stealing;
+use super::executor::{Executor, JobSpec};
+use super::metrics::SchedReport;
 use super::task::TaskRange;
-use super::victim::VictimSelector;
 use crate::config::SchedConfig;
 use crate::topology::Topology;
 
-/// The real-thread worker pool.
+/// One-shot worker pool: spawns `topo.n_cores()` threads per [`run`]
+/// call and joins them before returning.
+///
+/// [`run`]: ThreadPool::run
+#[deprecated(
+    note = "use sched::executor::Executor — it keeps workers resident \
+            across jobs instead of respawning per run"
+)]
 pub struct ThreadPool {
     topo: Topology,
     config: SchedConfig,
 }
 
+#[allow(deprecated)]
 impl ThreadPool {
     pub fn new(topo: Topology, config: SchedConfig) -> Self {
         ThreadPool { topo, config }
     }
 
-    /// Schedule `total` work items over the pool; `body(worker, range)`
-    /// executes one task. Returns the scheduling report.
+    /// Schedule `total` work items over a freshly spawned pool;
+    /// `body(worker, range)` executes one task. Returns the scheduling
+    /// report.
     ///
     /// `body` must be safe to call concurrently for disjoint ranges —
-    /// the partitioning invariant (tested in [`queue`]) guarantees
+    /// the partitioning invariant (tested in [`super::queue`]) guarantees
     /// every item index is handed out exactly once.
     pub fn run<F>(&self, total: usize, body: F) -> SchedReport
     where
         F: Fn(usize, TaskRange) + Send + Sync,
     {
-        let opts = PartitionerOptions {
-            stages: self.config.stages,
-            pls_swr: self.config.pls_swr,
-            seed: self.config.seed,
-        };
-        let source: Arc<Box<dyn TaskSource>> = Arc::new(queue::build_source(
-            self.config.layout,
-            self.config.scheme,
-            total,
-            &self.topo,
-            &opts,
-        ));
-        let n = self.topo.n_cores();
-        let body = &body;
-        let start = Instant::now();
-
-        let per_worker: Vec<WorkerStats> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n);
-            for w in 0..n {
-                let source = Arc::clone(&source);
-                let topo = &self.topo;
-                let config = &self.config;
-                handles.push(scope.spawn(move || {
-                    worker_loop(w, &**source, topo, config, body)
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-
-        SchedReport {
-            scheme: self.config.scheme.name().to_string(),
-            layout: self.config.layout.name().to_string(),
-            victim: self.config.victim.name().to_string(),
-            makespan: start.elapsed().as_secs_f64(),
-            per_worker,
-        }
+        let exec = Executor::new(
+            Arc::new(self.topo.clone()),
+            Arc::new(self.config.clone()),
+        );
+        exec.run(JobSpec::new(total), body)
+        // `exec` drops here: shutdown + join, i.e. the seed's
+        // thread::scope semantics.
     }
 }
 
-fn worker_loop<F>(
-    w: usize,
-    source: &dyn TaskSource,
-    topo: &Topology,
-    config: &SchedConfig,
-    body: &F,
-) -> WorkerStats
-where
-    F: Fn(usize, TaskRange) + Send + Sync,
-{
-    let mut stats = WorkerStats::default();
-    let steals = config.layout.steals();
-    let mut selector = steals.then(|| {
-        let queue_socket: Vec<usize> = (0..source.n_queues())
-            .map(|q| queue_socket_of(source, q, topo))
-            .collect();
-        VictimSelector::new(
-            config.victim,
-            source.queue_of(w),
-            topo.socket_of(w.min(topo.n_cores() - 1)),
-            queue_socket,
-            config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
-        )
-    });
-
-    loop {
-        let t0 = Instant::now();
-        let pull = source.pull_local(w).or_else(|| {
-            let selector = selector.as_mut()?;
-            let out = stealing::steal_round(source, selector, w);
-            stats.failed_steals +=
-                out.attempts - usize::from(out.pull.is_some());
-            out.pull
-        });
-        stats.queue_wait += t0.elapsed().as_secs_f64();
-
-        let Some(pull) = pull else { break };
-        if pull.stolen {
-            stats.steals += 1;
-            stats.stolen_items += pull.task.len();
-        }
-
-        let t1 = Instant::now();
-        body(w, pull.task);
-        stats.busy += t1.elapsed().as_secs_f64();
-        stats.tasks += 1;
-        stats.items += pull.task.len();
-    }
-    stats
-}
-
-/// NUMA domain a queue is homed on: for per-core layouts it is the
-/// owner's socket, for per-group layouts the group index, for the
-/// centralized layout socket 0.
-fn queue_socket_of(source: &dyn TaskSource, q: usize, topo: &Topology) -> usize {
-    if source.n_queues() == topo.n_cores() {
-        topo.socket_of(q)
-    } else if source.n_queues() == topo.sockets {
-        q
-    } else {
-        0
-    }
-}
-
-/// Convenience: run one configuration end-to-end (used by examples).
+/// Convenience: run one configuration end-to-end on a one-shot pool.
+#[deprecated(
+    note = "construct a persistent sched::executor::Executor and call \
+            `run`/`submit` instead of respawning threads per call"
+)]
 pub fn run_once<F>(
     topo: &Topology,
     config: &SchedConfig,
@@ -152,11 +71,15 @@ pub fn run_once<F>(
 where
     F: Fn(usize, TaskRange) + Send + Sync,
 {
-    ThreadPool::new(topo.clone(), config.clone()).run(total, body)
+    #[allow(deprecated)]
+    let pool = ThreadPool::new(topo.clone(), config.clone());
+    pool.run(total, body)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+
     use super::*;
     use crate::sched::partitioner::Scheme;
     use crate::sched::queue::QueueLayout;

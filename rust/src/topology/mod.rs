@@ -81,12 +81,25 @@ impl Topology {
     }
 
     /// A topology matching the current host (single NUMA domain assumed;
-    /// used by the real-thread executor for tests/examples).
+    /// used by the real-thread executor for tests/examples). Detection
+    /// runs once per process; see [`Topology::host_shared`] for the
+    /// allocation-free handle.
     pub fn host() -> Self {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        Topology::symmetric("host", 1, n, 1.0, 1.0)
+        (*Self::host_shared()).clone()
+    }
+
+    /// Shared handle to the host topology: detected once, then shared
+    /// via `Arc` (the persistent executor and `Vee::host_default` clone
+    /// the `Arc`, not the topology).
+    pub fn host_shared() -> std::sync::Arc<Self> {
+        static HOST: std::sync::OnceLock<std::sync::Arc<Topology>> =
+            std::sync::OnceLock::new();
+        std::sync::Arc::clone(HOST.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            std::sync::Arc::new(Topology::symmetric("host", 1, n, 1.0, 1.0))
+        }))
     }
 
     /// Resolve a preset by name (CLI / config).
@@ -182,5 +195,13 @@ mod tests {
     #[test]
     fn host_has_at_least_one_core() {
         assert!(Topology::host().n_cores() >= 1);
+    }
+
+    #[test]
+    fn host_shared_detects_once() {
+        let a = Topology::host_shared();
+        let b = Topology::host_shared();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "host topology must be cached");
+        assert_eq!(Topology::host().n_cores(), a.n_cores());
     }
 }

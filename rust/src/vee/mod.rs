@@ -2,46 +2,123 @@
 //! turns (data, operator) into tasks and executes pipelines under a
 //! scheduling configuration (Fig. 2).
 //!
-//! A pipeline is a sequence of [`Stage`]s with a barrier between stages
+//! A `Vee` fronts a **persistent** [`Executor`]: worker threads are
+//! spawned once when the engine is created and parked between operators
+//! — every [`Vee::execute`] call submits a job to the resident pool
+//! instead of respawning OS threads per stage (the seed behaviour). A
+//! pipeline is a sequence of [`Stage`]s with a barrier between stages
 //! (each vectorized operator in DAPHNE is one scheduled parallel
-//! region). Each stage's body is executed over row ranges chosen by the
-//! configured partitioning/assignment; per-stage [`SchedReport`]s feed
-//! the evaluation harness.
+//! region); per-stage [`SchedReport`]s feed the evaluation harness.
+//!
+//! Cloning a `Vee` is cheap and **shares** the pool (`Arc`), and
+//! [`Vee::with_config`] derives an engine with different scheduling on
+//! the *same* workers — which is how one resident pool serves STATIC and
+//! GSS pipelines back-to-back or concurrently.
 
 pub mod pipeline;
 
 pub use pipeline::{Pipeline, PipelineReport, Stage};
 
-use crate::config::SchedConfig;
-use crate::sched::{worker, SchedReport, TaskRange};
+use std::sync::{Arc, OnceLock};
+
+use crate::config::{ExecutorMode, SchedConfig};
+use crate::sched::executor::{Executor, JobSpec};
+use crate::sched::{SchedReport, TaskRange};
 use crate::topology::Topology;
 
-/// The engine: topology + scheduling configuration.
+/// The engine: topology + default scheduling configuration + resident
+/// executor.
 #[derive(Debug, Clone)]
 pub struct Vee {
-    pub topo: Topology,
-    pub sched: SchedConfig,
+    pub topo: Arc<Topology>,
+    pub sched: Arc<SchedConfig>,
+    /// `None` in [`ExecutorMode::Oneshot`] — threads spawn per operator
+    /// (the legacy behaviour, kept for A/B comparison).
+    executor: Option<Arc<Executor>>,
 }
 
 impl Vee {
+    /// Engine with a persistent worker pool (spawned here, once).
     pub fn new(topo: Topology, sched: SchedConfig) -> Self {
-        Vee { topo, sched }
+        Vee::with_mode(Arc::new(topo), Arc::new(sched), ExecutorMode::Persistent)
+    }
+
+    /// Engine with an explicit executor mode; `Arc` inputs are shared,
+    /// not cloned.
+    pub fn with_mode(
+        topo: Arc<Topology>,
+        sched: Arc<SchedConfig>,
+        mode: ExecutorMode,
+    ) -> Self {
+        let executor = match mode {
+            ExecutorMode::Persistent => Some(Arc::new(Executor::new(
+                Arc::clone(&topo),
+                Arc::clone(&sched),
+            ))),
+            ExecutorMode::Oneshot => None,
+        };
+        Vee { topo, sched, executor }
     }
 
     /// Engine on the host topology with default (STATIC) scheduling.
+    ///
+    /// The host topology is detected once and the engine (including its
+    /// worker pool) is created once per process and shared — repeated
+    /// calls clone `Arc`s instead of re-detecting the topology,
+    /// re-cloning the config, or spawning further threads.
     pub fn host_default() -> Self {
-        Vee::new(Topology::host(), SchedConfig::default())
+        static HOST: OnceLock<Vee> = OnceLock::new();
+        HOST.get_or_init(|| {
+            Vee::with_mode(
+                Topology::host_shared(),
+                Arc::new(SchedConfig::default()),
+                ExecutorMode::Persistent,
+            )
+        })
+        .clone()
     }
 
-    /// Execute one vectorized operator over `items` work items.
+    /// Derive an engine with a different scheduling configuration that
+    /// **shares this engine's worker pool** (per-job config override).
+    pub fn with_config(&self, sched: SchedConfig) -> Self {
+        Vee {
+            topo: Arc::clone(&self.topo),
+            sched: Arc::new(sched),
+            executor: self.executor.clone(),
+        }
+    }
+
+    /// The resident executor (`None` in oneshot mode). Useful for
+    /// submitting jobs directly via the [`JobSpec`] API.
+    pub fn executor(&self) -> Option<&Arc<Executor>> {
+        self.executor.as_ref()
+    }
+
+    /// Execute one vectorized operator over `items` work items: submits
+    /// a job tagged with this engine's config to the resident pool and
+    /// waits for it.
     pub fn execute<F>(&self, items: usize, body: F) -> SchedReport
     where
         F: Fn(usize, TaskRange) + Send + Sync,
     {
-        worker::run_once(&self.topo, &self.sched, items, body)
+        match &self.executor {
+            Some(exec) => exec.run(
+                JobSpec::new(items)
+                    .with_shared_config(Arc::clone(&self.sched)),
+                body,
+            ),
+            #[allow(deprecated)]
+            None => crate::sched::worker::run_once(
+                &self.topo,
+                &self.sched,
+                items,
+                body,
+            ),
+        }
     }
 
-    /// Execute a pipeline stage-by-stage with barriers.
+    /// Execute a pipeline stage-by-stage with barriers. Stages reuse the
+    /// resident pool — no threads are spawned per stage.
     pub fn run_pipeline(&self, pipeline: &Pipeline<'_>) -> PipelineReport {
         pipeline.run(self)
     }
@@ -50,6 +127,7 @@ impl Vee {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::Scheme;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -61,5 +139,49 @@ mod tests {
         });
         assert_eq!(count.load(Ordering::Relaxed), 1234);
         assert_eq!(report.total_items(), 1234);
+    }
+
+    #[test]
+    fn host_default_shares_one_engine() {
+        let a = Vee::host_default();
+        let b = Vee::host_default();
+        assert!(Arc::ptr_eq(&a.topo, &b.topo), "topology detected once");
+        assert!(Arc::ptr_eq(&a.sched, &b.sched), "config shared, not recloned");
+        let (ea, eb) = (a.executor().unwrap(), b.executor().unwrap());
+        assert!(Arc::ptr_eq(ea, eb), "one resident pool shared");
+    }
+
+    #[test]
+    fn with_config_shares_the_pool() {
+        let base = Vee::new(
+            Topology::symmetric("t", 1, 2, 1.0, 1.0),
+            SchedConfig::default(),
+        );
+        let gss = base.with_config(SchedConfig::default().with_scheme(Scheme::Gss));
+        assert!(Arc::ptr_eq(
+            base.executor().unwrap(),
+            gss.executor().unwrap()
+        ));
+        let r1 = base.execute(500, |_w, _r| {});
+        let r2 = gss.execute(500, |_w, _r| {});
+        assert_eq!(r1.scheme, "STATIC");
+        assert_eq!(r2.scheme, "GSS");
+        assert_eq!(base.executor().unwrap().jobs_completed(), 2);
+    }
+
+    #[test]
+    fn oneshot_mode_still_covers_items() {
+        let vee = Vee::with_mode(
+            Arc::new(Topology::symmetric("t", 1, 2, 1.0, 1.0)),
+            Arc::new(SchedConfig::default()),
+            ExecutorMode::Oneshot,
+        );
+        assert!(vee.executor().is_none());
+        let count = AtomicUsize::new(0);
+        let report = vee.execute(999, |_w, r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 999);
+        assert_eq!(report.total_items(), 999);
     }
 }

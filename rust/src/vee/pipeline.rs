@@ -1,4 +1,8 @@
 //! Pipelines: named sequences of vectorized operators with barriers.
+//!
+//! [`Pipeline::run`] submits one job per stage to the engine's resident
+//! executor and waits between stages (the barrier); worker threads are
+//! *not* respawned per stage.
 
 use super::Vee;
 use crate::sched::{SchedReport, TaskRange};

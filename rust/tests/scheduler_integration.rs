@@ -2,15 +2,123 @@
 //! layouts × 4 victims) drives both evaluated apps correctly, and the
 //! DES reproduces the paper's qualitative orderings at small scale.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use daphne_sched::apps::{cc, linreg};
 use daphne_sched::config::SchedConfig;
 use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
-use daphne_sched::sched::{QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::sched::{Executor, JobSpec, QueueLayout, Scheme, VictimStrategy};
 use daphne_sched::sim::{self, CostModel, Workload};
 use daphne_sched::topology::Topology;
+use daphne_sched::vee::Vee;
 
 fn host2() -> Topology {
     Topology::symmetric("t", 2, 1, 1.5, 1.0)
+}
+
+/// The three queue layouts of Fig. 4 (the centralized one in both its
+/// locked and atomic variants).
+const ALL_LAYOUTS: [QueueLayout; 4] = [
+    QueueLayout::Centralized { atomic: false },
+    QueueLayout::Centralized { atomic: true },
+    QueueLayout::PerGroup,
+    QueueLayout::PerCore,
+];
+
+fn hit_counters(n: usize) -> Vec<AtomicUsize> {
+    (0..n).map(|_| AtomicUsize::new(0)).collect()
+}
+
+fn assert_exactly_once(hits: &[AtomicUsize], ctx: &str) {
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 1, "{ctx}: item {i} ran != once");
+    }
+}
+
+/// Partitioning invariant under pool reuse: ≥3 consecutive jobs on one
+/// persistent executor, every item of every job handed out exactly
+/// once, for all queue layouts.
+#[test]
+fn pool_reuse_preserves_partitioning_across_consecutive_jobs() {
+    for layout in ALL_LAYOUTS {
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Fac2)
+            .with_layout(layout)
+            .with_victim(VictimStrategy::SeqPri);
+        let exec = Executor::new(
+            Arc::new(Topology::symmetric("t4", 2, 2, 1.5, 1.0)),
+            Arc::new(cfg),
+        );
+        for (job, total) in [4_001usize, 9_999, 1, 6_500].iter().enumerate() {
+            let hits = hit_counters(*total);
+            let report = exec.run(JobSpec::new(*total), |_w, r| {
+                for i in r.iter() {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(report.total_items(), *total, "{layout:?} job {job}");
+            assert_exactly_once(&hits, &format!("{layout:?} job {job}"));
+        }
+        assert_eq!(exec.jobs_completed(), 4);
+    }
+}
+
+/// Partitioning invariant under multiplexing: two jobs submitted
+/// concurrently to the same executor both complete with full item
+/// coverage, for all queue layouts.
+#[test]
+fn two_concurrent_jobs_cover_all_items_on_one_pool() {
+    for layout in ALL_LAYOUTS {
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Gss)
+            .with_layout(layout)
+            .with_victim(VictimStrategy::Rnd);
+        let exec = Executor::new(
+            Arc::new(Topology::symmetric("t4", 2, 2, 1.5, 1.0)),
+            Arc::new(cfg),
+        );
+        let a = hit_counters(8_000);
+        let b = hit_counters(5_432);
+        exec.scope(|s| {
+            let ha = s.submit(JobSpec::new(a.len()).named("job-a"), |_w, r| {
+                for i in r.iter() {
+                    a[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            let hb = s.submit(JobSpec::new(b.len()).named("job-b"), |_w, r| {
+                for i in r.iter() {
+                    b[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(ha.wait().total_items(), a.len(), "{layout:?}");
+            assert_eq!(hb.wait().total_items(), b.len(), "{layout:?}");
+        });
+        assert_exactly_once(&a, &format!("{layout:?} concurrent job a"));
+        assert_exactly_once(&b, &format!("{layout:?} concurrent job b"));
+    }
+}
+
+/// Two full app pipelines submitted concurrently from separate threads
+/// onto one shared engine produce the same results as isolated runs.
+#[test]
+fn concurrent_app_pipelines_on_shared_engine_match_isolated_runs() {
+    let g = amazon_like(&GraphSpec::small(400, 2)).symmetrize();
+    let expected =
+        cc::run_native(&g, &host2(), &SchedConfig::default(), 100).labels;
+    let vee = Vee::new(
+        Topology::symmetric("t4", 1, 4, 1.0, 1.0),
+        SchedConfig::default().with_scheme(Scheme::Mfsc),
+    );
+    let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| s.spawn(|| cc::run_with(&vee, &g, 100).labels))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for labels in results {
+        assert_eq!(labels, expected);
+    }
 }
 
 #[test]

@@ -1,0 +1,222 @@
+//! Vendored std-only subset of the `anyhow` API.
+//!
+//! Provides exactly what this repository uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Semantics mirror the real crate where it matters:
+//!
+//! - `Display` shows the outermost message; the alternate form (`{:#}`)
+//!   appends the source chain as `outer: cause: root`.
+//! - `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`] (and `Error` itself deliberately does **not** implement
+//!   `std::error::Error`, exactly like upstream, so the blanket `From`
+//!   does not conflict).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+    Context { msg: String, inner: Box<Error> },
+}
+
+/// A dynamic error with an optional chain of causes.
+pub struct Error(Repr);
+
+impl Error {
+    /// Error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Repr::Msg(message.to_string()))
+    }
+
+    /// Wrap a concrete error (kept as the chain's root cause).
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error(Repr::Boxed(Box::new(error)))
+    }
+
+    /// Attach a higher-level message in front of this error.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error(Repr::Context { msg: context.to_string(), inner: Box::new(self) })
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            match &e.0 {
+                Repr::Msg(m) => {
+                    out.push(m.clone());
+                    cur = None;
+                }
+                Repr::Boxed(b) => {
+                    out.push(b.to_string());
+                    let mut src = b.source();
+                    while let Some(s) = src {
+                        out.push(s.to_string());
+                        src = s.source();
+                    }
+                    cur = None;
+                }
+                Repr::Context { msg, inner } => {
+                    out.push(msg.clone());
+                    cur = Some(inner);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain();
+        if f.alternate() {
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain();
+        write!(f, "{}", chain.first().map(String::as_str).unwrap_or(""))?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e:#}"), "gone");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                bail!("x too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x too small: 0");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let from_string = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+
+    #[test]
+    fn debug_shows_causes() {
+        let e = Error::new(io_err()).context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"));
+    }
+}
