@@ -31,7 +31,7 @@ fn main() {
         let r = linreg::run_with(&vee.with_config(cfg), &x, &y, spec.lambda)
             .unwrap();
         println!(
-            "  {:<7} scheduled {:.4}s  rmse={:.4}",
+            "  {:<7} wall {:.4}s  rmse={:.4}",
             scheme.name(),
             r.report.total_time(),
             linreg::rmse(&x, &y, &r.beta)

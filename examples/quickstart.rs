@@ -99,7 +99,12 @@ fn main() {
             result.components,
             result.iterations,
             result.total_time(),
-            result.reports.iter().map(|r| r.total_steals()).sum::<usize>(),
+            result
+                .reports
+                .iter()
+                .chain(&result.diff_reports)
+                .map(|r| r.total_steals())
+                .sum::<usize>(),
         );
     }
     println!(

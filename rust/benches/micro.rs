@@ -4,6 +4,7 @@
 //! - locked vs atomic central-queue pull,
 //! - multi-queue pull + steal round,
 //! - spawn-per-stage vs persistent-executor job dispatch (thread churn),
+//! - barrier vs dag dispatch of a diamond task graph (branch overlap),
 //! - DES event throughput,
 //! - native CC propagate kernel throughput.
 //!
@@ -18,6 +19,8 @@ use daphne_sched::config::SchedConfig;
 use daphne_sched::graph::{amazon_like, GraphSpec};
 use daphne_sched::matrix::ops;
 use daphne_sched::sched::executor::{Executor, JobSpec};
+use daphne_sched::sched::graph::{GraphSpec as TaskGraph, NodeSpec};
+use daphne_sched::sched::TaskRange;
 use daphne_sched::sched::partitioner::{Partitioner, PartitionerOptions};
 use daphne_sched::sched::queue::{
     build_source, CentralAtomic, CentralLocked, QueueLayout, TaskSource,
@@ -122,6 +125,46 @@ fn main() {
             });
         }
         100
+    });
+
+    println!("\n== dag vs barrier: diamond A -> {{B, C}} -> D ==");
+    // Unbalanced branches that each use only half the pool: under a
+    // full barrier B and C run back-to-back with half the workers idle
+    // each time; dag dispatch launches both the moment A completes, so
+    // the light branch hides inside the heavy one.
+    let half = (exec.n_workers() / 2).max(1);
+    let spin = |iters: usize| {
+        move |_w: usize, r: TaskRange| {
+            for _ in r.iter() {
+                let mut acc = 0u64;
+                for k in 0..iters {
+                    acc = acc.wrapping_add(
+                        std::hint::black_box(k as u64).wrapping_mul(0x9E37_79B9),
+                    );
+                }
+                std::hint::black_box(acc);
+            }
+        }
+    };
+    let (heavy, light, tiny) = (4_000_000usize, 1_000_000, 10_000);
+    bench("barrier (4 sequential jobs)", || {
+        exec.run(JobSpec::new(half).named("a"), spin(tiny));
+        exec.run(JobSpec::new(half).named("b"), spin(heavy));
+        exec.run(JobSpec::new(half).named("c"), spin(light));
+        exec.run(JobSpec::new(half).named("d"), spin(tiny));
+        1
+    });
+    bench("dag (submit_graph, B and C overlap)", || {
+        let diamond = TaskGraph::new("diamond")
+            .node(NodeSpec::new("a", half), spin(tiny))
+            .node(NodeSpec::new("b", half).after("a"), spin(heavy))
+            .node(NodeSpec::new("c", half).after("a"), spin(light))
+            .node(
+                NodeSpec::new("d", half).after("b").after("c"),
+                spin(tiny),
+            );
+        exec.run_graph(diamond).expect("diamond is acyclic");
+        1
     });
     drop(exec);
 

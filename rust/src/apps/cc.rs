@@ -19,6 +19,8 @@
 //! - **pjrt**: the AOT Pallas artifact `cc_propagate` over dense tiles,
 //!   proving the three-layer composition (used on small graphs).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::config::SchedConfig;
 use crate::matrix::CsrMatrix;
 use crate::runtime::{DeviceClient, Manifest};
@@ -26,7 +28,7 @@ use crate::sched::SchedReport;
 use crate::sim::{self, CostModel, Workload};
 use crate::topology::Topology;
 use crate::util::DisjointMut;
-use crate::vee::Vee;
+use crate::vee::{Pipeline, Vee};
 
 /// Result of a connected-components run.
 #[derive(Debug, Clone)]
@@ -39,12 +41,32 @@ pub struct CcResult {
     pub components: usize,
     /// Per-iteration scheduling reports of the propagate operator.
     pub reports: Vec<SchedReport>,
+    /// Per-iteration reports of the scheduled `diff` reduction (both
+    /// the native and the PJRT path schedule it).
+    pub diff_reports: Vec<SchedReport>,
 }
 
 impl CcResult {
+    /// Total scheduled time across every job this run submitted
+    /// (propagate + diff per iteration).
     pub fn total_time(&self) -> f64 {
-        self.reports.iter().map(|r| r.makespan).sum()
+        self.reports
+            .iter()
+            .chain(&self.diff_reports)
+            .map(|r| r.makespan)
+            .sum()
     }
+}
+
+/// The body of the scheduled `diff` reduction on both execution paths:
+/// label mismatches between one task's window of the old and new label
+/// vectors.
+fn count_mismatches(new_labels: &[f32], old_labels: &[f32]) -> usize {
+    new_labels
+        .iter()
+        .zip(old_labels)
+        .filter(|(a, b)| a != b)
+        .count()
 }
 
 fn count_components(labels: &[f32]) -> usize {
@@ -72,39 +94,69 @@ pub fn run_native(
     run_with(&Vee::new(topo.clone(), sched.clone()), g, maxi)
 }
 
-/// Native CSR execution on an existing engine: every propagate
-/// iteration is one job submitted to the engine's resident pool —
-/// worker threads are spawned exactly once per engine, not per
-/// iteration.
+/// Native CSR execution on an existing engine: every iteration is one
+/// task graph on the engine's resident pool expressing the loop body's
+/// real dependency shape — the scheduled `propagate` operator followed
+/// by the `diff` reduction (`diff = sum(u != c)`), which reads the
+/// propagated labels and therefore carries a true dependency edge.
+/// Worker threads are spawned exactly once per engine, not per
+/// iteration or stage.
 pub fn run_with(vee: &Vee, g: &CsrMatrix, maxi: usize) -> CcResult {
     let n = g.rows;
     // c = seq(1, n)
     let mut c: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
     let mut u = vec![0f32; n];
     let mut reports = Vec::new();
+    let mut diff_reports = Vec::new();
     let mut iterations = 0;
 
     for _ in 0..maxi {
         iterations += 1;
-        let out = DisjointMut::new(&mut u);
-        let c_ref = &c;
-        let report = vee.execute(n, |_w, range| {
-            let slice = out.slice_mut(range.start, range.end);
-            // write into the task's disjoint window
-            for (off, r) in range.iter().enumerate() {
-                let mut m = c_ref[r];
-                for &col in g.row(r) {
-                    let v = c_ref[col as usize];
-                    if v > m {
-                        m = v;
+        let diff_count = AtomicUsize::new(0);
+        let report = {
+            let out = DisjointMut::new(&mut u);
+            let out = &out;
+            let c_ref = &c;
+            let diff_count = &diff_count;
+            let pipeline = Pipeline::new("cc:iter")
+                .stage("propagate", n, move |_w, range| {
+                    let slice = out.slice_mut(range.start, range.end);
+                    // write into the task's disjoint window
+                    for (off, r) in range.iter().enumerate() {
+                        let mut m = c_ref[r];
+                        for &col in g.row(r) {
+                            let v = c_ref[col as usize];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                        slice[off] = m;
                     }
-                }
-                slice[off] = m;
-            }
-        });
-        reports.push(report);
-        // diff = sum(u != c)
-        let diff = c.iter().zip(&u).filter(|(a, b)| a != b).count();
+                })
+                // diff = sum(u != c), parallel partial counts over the
+                // labels `propagate` just wrote (shared reads are sound:
+                // the writer node completed before this one dispatches)
+                .stage("diff", n, move |_w, range| {
+                    let mismatches = count_mismatches(
+                        out.slice(range.start, range.end),
+                        &c_ref[range.start..range.end],
+                    );
+                    if mismatches > 0 {
+                        diff_count.fetch_add(mismatches, Ordering::Relaxed);
+                    }
+                });
+            vee.run_pipeline(&pipeline)
+        };
+        reports.push(
+            report
+                .stage("propagate")
+                .cloned()
+                .expect("propagate stage always present"),
+        );
+        diff_reports.push(
+            report.stage("diff").cloned().expect("diff stage always present"),
+        );
+        let diff = diff_count.load(Ordering::Relaxed);
         std::mem::swap(&mut c, &mut u);
         if diff == 0 {
             break;
@@ -112,7 +164,7 @@ pub fn run_with(vee: &Vee, g: &CsrMatrix, maxi: usize) -> CcResult {
     }
 
     let components = count_components(&c);
-    CcResult { labels: c, iterations, components, reports }
+    CcResult { labels: c, iterations, components, reports, diff_reports }
 }
 
 /// PJRT execution: the propagate step runs the AOT `cc_propagate`
@@ -137,6 +189,7 @@ pub fn run_pjrt(
     let mut c: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
     let mut u = vec![0f32; n];
     let mut reports = Vec::new();
+    let mut diff_reports = Vec::new();
     let mut iterations = 0;
 
     // padded column vector of ids, rebuilt each iteration
@@ -146,39 +199,58 @@ pub fn run_pjrt(
         c_pad[..n].copy_from_slice(&c);
         let c_pad = &c_pad;
         let c_ref = &c;
-        let out = DisjointMut::new(&mut u);
-
-        // work items are row *blocks* on this path
-        let report = vee.execute(n_row_blocks, |_w, range| {
-            for rb in range.iter() {
-                let r0 = rb * block_rows;
-                let r1 = ((rb + 1) * block_rows).min(n);
-                // c_row block, zero-padded
-                let mut c_row = vec![0f32; block_rows];
-                c_row[..r1 - r0].copy_from_slice(&c_ref[r0..r1]);
-                let mut acc = c_row.clone();
-                for cb in 0..n_col_blocks {
-                    let g_tile = g.densify_window(
-                        r0,
-                        r0 + block_rows,
-                        cb * block_cols,
-                        (cb + 1) * block_cols,
-                    );
-                    let c_tile =
-                        c_pad[cb * block_cols..(cb + 1) * block_cols].to_vec();
-                    let outs = device
-                        .run_f32(
-                            "cc_propagate",
-                            vec![g_tile.data, c_tile, acc.clone()],
-                        )
-                        .expect("cc_propagate artifact failed");
-                    acc.copy_from_slice(&outs[0]);
+        let report = {
+            // the mutable view of `u` lives only for the propagate pass
+            let out = DisjointMut::new(&mut u);
+            // work items are row *blocks* on this path
+            vee.execute(n_row_blocks, |_w, range| {
+                for rb in range.iter() {
+                    let r0 = rb * block_rows;
+                    let r1 = ((rb + 1) * block_rows).min(n);
+                    // c_row block, zero-padded
+                    let mut c_row = vec![0f32; block_rows];
+                    c_row[..r1 - r0].copy_from_slice(&c_ref[r0..r1]);
+                    let mut acc = c_row.clone();
+                    for cb in 0..n_col_blocks {
+                        let g_tile = g.densify_window(
+                            r0,
+                            r0 + block_rows,
+                            cb * block_cols,
+                            (cb + 1) * block_cols,
+                        );
+                        let c_tile = c_pad
+                            [cb * block_cols..(cb + 1) * block_cols]
+                            .to_vec();
+                        let outs = device
+                            .run_f32(
+                                "cc_propagate",
+                                vec![g_tile.data, c_tile, acc.clone()],
+                            )
+                            .expect("cc_propagate artifact failed");
+                        acc.copy_from_slice(&outs[0]);
+                    }
+                    out.slice_mut(r0, r1).copy_from_slice(&acc[..r1 - r0]);
                 }
-                out.slice_mut(r0, r1).copy_from_slice(&acc[..r1 - r0]);
-            }
-        });
+            })
+        };
         reports.push(report);
-        let diff = c.iter().zip(&u).filter(|(a, b)| a != b).count();
+        // scheduled diff reduction, mirroring the native path so
+        // total_time() stays comparable across backends
+        let diff_count = AtomicUsize::new(0);
+        {
+            let (c_ref, u_ref) = (&c, &u);
+            let diff_count = &diff_count;
+            diff_reports.push(vee.execute(n, |_w, range| {
+                let mismatches = count_mismatches(
+                    &u_ref[range.start..range.end],
+                    &c_ref[range.start..range.end],
+                );
+                if mismatches > 0 {
+                    diff_count.fetch_add(mismatches, Ordering::Relaxed);
+                }
+            }));
+        }
+        let diff = diff_count.load(Ordering::Relaxed);
         std::mem::swap(&mut c, &mut u);
         if diff == 0 {
             break;
@@ -186,7 +258,7 @@ pub fn run_pjrt(
     }
 
     let components = count_components(&c);
-    Ok(CcResult { labels: c, iterations, components, reports })
+    Ok(CcResult { labels: c, iterations, components, reports, diff_reports })
 }
 
 /// Count iterations to convergence without timing anything (cheap
@@ -311,8 +383,8 @@ mod tests {
         assert_eq!(exec.n_workers(), 2, "pool sized once from the topology");
         assert_eq!(
             exec.jobs_completed(),
-            r.iterations,
-            "one job per iteration, zero respawns"
+            2 * r.iterations,
+            "one propagate + one diff job per iteration, zero respawns"
         );
     }
 

@@ -9,11 +9,21 @@
 //!
 //! Work items are rows of X; per-row cost is uniform (dense data) — the
 //! workload where STATIC wins and every dynamic scheme only adds
-//! overhead (Fig. 10). The scheduled vectorized operators are colstats,
-//! standardize and the fused syrk+gemv accumulation; `solve` is a small
-//! sequential epilogue (d×d system).
+//! overhead (Fig. 10). The whole training run is **one task graph**
+//! expressing its real dependency shape:
+//!
+//! ```text
+//! colstats → stats → standardize → { syrk, gemv }
+//! ```
+//!
+//! `A = X^T X` (syrk) and `b = X^T y` (gemv) only need the standardized
+//! rows — they are independent of each other, so in `graph=dag` mode
+//! the runtime overlaps them on the resident pool instead of inserting
+//! a barrier between them. `solve` is a small sequential epilogue (d×d
+//! system).
 
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::config::SchedConfig;
 use crate::matrix::{ops, DenseMatrix};
@@ -71,8 +81,10 @@ pub fn run_native(
     run_with(&Vee::new(topo.clone(), sched.clone()), x, y, lambda)
 }
 
-/// Native execution on an existing engine: all three scheduled passes
-/// are jobs on the engine's resident pool (no per-stage thread churn).
+/// Native execution on an existing engine: the five scheduled passes
+/// are one task graph on the engine's resident pool (no per-stage
+/// thread churn); the independent `syrk` and `gemv` reductions overlap
+/// in `graph=dag` mode.
 pub fn run_with(
     vee: &Vee,
     x: &DenseMatrix,
@@ -81,16 +93,27 @@ pub fn run_with(
 ) -> Result<LinregResult, String> {
     let n = x.rows;
     let d = x.cols;
+    let dd = d + 1;
 
-    // --- stage 1: colstats (mean/stddev partials) --------------------
     let stats_acc: Mutex<(Vec<f32>, Vec<f32>)> =
         Mutex::new((vec![0.0; d], vec![0.0; d]));
-    let rep1 = {
+    // mean/std, published by the tiny `stats` node once `colstats` is
+    // fully reduced (the dependency edge makes the `set` happen-before
+    // every `standardize` task).
+    let norm: OnceLock<(Vec<f32>, Vec<f32>)> = OnceLock::new();
+    let mut x_std = x.clone();
+    let a_acc: Mutex<Vec<f32>> = Mutex::new(vec![0.0; dd * dd]);
+    let b_acc: Mutex<Vec<f32>> = Mutex::new(vec![0.0; dd]);
+
+    let report = {
         let stats_acc = &stats_acc;
-        let pipeline = Pipeline::new("linreg:stats").stage(
-            "colstats",
-            n,
-            move |_w, range| {
+        let norm = &norm;
+        let x_view = DisjointMut::new(&mut x_std.data);
+        let x_view = &x_view;
+        let a_acc = &a_acc;
+        let b_acc = &b_acc;
+        let pipeline = Pipeline::new("linreg")
+            .stage("colstats", n, move |_w, range| {
                 let mut s = vec![0.0; d];
                 let mut sq = vec![0.0; d];
                 ops::colstats_rows(x, &mut s, &mut sq, range.start, range.end);
@@ -99,33 +122,21 @@ pub fn run_with(
                     acc.0[c] += s[c];
                     acc.1[c] += sq[c];
                 }
-            },
-        );
-        vee.run_pipeline(&pipeline)
-    };
-    let (sum, sumsq) = stats_acc.into_inner().unwrap();
-    let mean: Vec<f32> = sum.iter().map(|&s| s / n as f32).collect();
-    let std: Vec<f32> = sumsq
-        .iter()
-        .zip(&mean)
-        .map(|(&sq, &m)| (sq / n as f32 - m * m).max(1e-12).sqrt())
-        .collect();
-
-    // --- stages 2+3: standardize (in place, disjoint rows), then
-    //     fused syrk+gemv over the standardized rows -------------------
-    let mut x_std = x.clone();
-    let ab_acc: Mutex<(Vec<f32>, Vec<f32>)> = Mutex::new((
-        vec![0.0; (d + 1) * (d + 1)],
-        vec![0.0; d + 1],
-    ));
-    let rep23 = {
-        let x_view = DisjointMut::new(&mut x_std.data);
-        let x_view = &x_view;
-        let mean = &mean;
-        let std = &std;
-        let ab_acc = &ab_acc;
-        let pipeline = Pipeline::new("linreg:main")
+            })
+            .stage("stats", 1, move |_w, _range| {
+                let acc = stats_acc.lock().unwrap();
+                let mean: Vec<f32> =
+                    acc.0.iter().map(|&s| s / n as f32).collect();
+                let std: Vec<f32> = acc
+                    .1
+                    .iter()
+                    .zip(&mean)
+                    .map(|(&sq, &m)| (sq / n as f32 - m * m).max(1e-12).sqrt())
+                    .collect();
+                let _ = norm.set((mean, std));
+            })
             .stage("standardize", n, move |_w, range| {
+                let (mean, std) = norm.get().expect("stats node completed");
                 let rows = x_view.slice_mut(range.start * d, range.end * d);
                 for row in rows.chunks_mut(d) {
                     for (c, v) in row.iter_mut().enumerate() {
@@ -133,14 +144,14 @@ pub fn run_with(
                     }
                 }
             })
-            .stage("syrk+gemv", n, move |_w, range| {
-                // read-only view of the standardized rows + bias column
-                let rows = x_view.slice_mut(range.start * d, range.end * d);
-                let dd = d + 1;
+            // A = X^T X and b = X^T y only need the standardized rows —
+            // independent of each other, so they overlap under dag
+            // dispatch (shared reads of the rows are sound: the
+            // standardize writer completed before either dispatches).
+            .stage_after("syrk", n, &["standardize"], move |_w, range| {
+                let rows = x_view.slice(range.start * d, range.end * d);
                 let mut a = vec![0.0f32; dd * dd];
-                let mut b = vec![0.0f32; dd];
-                for (off, row) in rows.chunks(d).enumerate() {
-                    let yr = y[range.start + off];
+                for row in rows.chunks(d) {
                     for i in 0..d {
                         let xi = row[i];
                         let arow = &mut a[i * dd..i * dd + d];
@@ -148,20 +159,30 @@ pub fn run_with(
                             arow[j] += xi * xj;
                         }
                         a[i * dd + d] += xi; // bias column
-                        b[i] += xi * yr;
                     }
                     // bias row: sum of features and count
                     for (j, &xj) in row.iter().enumerate() {
                         a[d * dd + j] += xj;
                     }
                     a[d * dd + d] += 1.0;
-                    b[d] += yr;
                 }
-                let mut acc = ab_acc.lock().unwrap();
-                for (dst, src) in acc.0.iter_mut().zip(&a) {
+                let mut acc = a_acc.lock().unwrap();
+                for (dst, src) in acc.iter_mut().zip(&a) {
                     *dst += src;
                 }
-                for (dst, src) in acc.1.iter_mut().zip(&b) {
+            })
+            .stage_after("gemv", n, &["standardize"], move |_w, range| {
+                let rows = x_view.slice(range.start * d, range.end * d);
+                let mut b = vec![0.0f32; dd];
+                for (off, row) in rows.chunks(d).enumerate() {
+                    let yr = y[range.start + off];
+                    for (i, &xi) in row.iter().enumerate() {
+                        b[i] += xi * yr;
+                    }
+                    b[d] += yr;
+                }
+                let mut acc = b_acc.lock().unwrap();
+                for (dst, src) in acc.iter_mut().zip(&b) {
                     *dst += src;
                 }
             });
@@ -169,20 +190,15 @@ pub fn run_with(
     };
 
     // --- epilogue: ridge + solve (Listing 2 lines 13-16) -------------
-    let (mut a_flat, b) = ab_acc.into_inner().unwrap();
-    let dd = d + 1;
+    let mut a_flat = a_acc.into_inner().unwrap();
+    let b = b_acc.into_inner().unwrap();
     for i in 0..dd {
         a_flat[i * dd + i] += lambda;
     }
     let a = DenseMatrix::from_vec(dd, dd, a_flat);
     let beta = ops::cholesky_solve(&a, &b)?;
 
-    let mut stages = rep1.stages;
-    stages.extend(rep23.stages);
-    Ok(LinregResult {
-        beta,
-        report: PipelineReport { pipeline: "linreg".into(), stages },
-    })
+    Ok(LinregResult { beta, report })
 }
 
 /// PJRT execution of the fused stage: standardize+syrk+gemv per
@@ -208,6 +224,7 @@ pub fn run_pjrt(
     let d = x.cols;
     let n_blocks = n.div_ceil(block_rows);
     let vee = Vee::new(topo.clone(), sched.clone());
+    let t0 = Instant::now();
 
     let pad_block = |range_start: usize| -> (Vec<f32>, Vec<f32>, usize) {
         let r0 = range_start * block_rows;
@@ -283,6 +300,11 @@ pub fn run_pjrt(
         }
     });
 
+    // wall-clock of the scheduled pipeline only (excludes the serial
+    // solve epilogue, matching what the native path's graph makespan
+    // covers — so total_time() is comparable across backends)
+    let wall_time = t0.elapsed().as_secs_f64();
+
     let (mut a_flat, b) = acc2.into_inner().unwrap();
     for i in 0..dd {
         a_flat[i * dd + i] += lambda;
@@ -298,6 +320,7 @@ pub fn run_pjrt(
                 ("colstats".into(), rep1),
                 ("fused".into(), rep2),
             ],
+            wall_time,
         },
     })
 }
@@ -402,15 +425,36 @@ mod tests {
     }
 
     #[test]
-    fn report_covers_three_stages() {
+    fn report_covers_all_graph_stages() {
         let (x, y, _) = planted(500, 4, 9);
         let r = run_native(&x, &y, 1e-3, &topo(), &SchedConfig::default())
             .unwrap();
         let names: Vec<&str> =
             r.report.stages.iter().map(|(n, _)| n.as_str()).collect();
-        assert_eq!(names, vec!["colstats", "standardize", "syrk+gemv"]);
-        for (_, rep) in &r.report.stages {
-            assert_eq!(rep.total_items(), 500);
+        assert_eq!(
+            names,
+            vec!["colstats", "stats", "standardize", "syrk", "gemv"]
+        );
+        for (name, rep) in &r.report.stages {
+            let want = if name == "stats" { 1 } else { 500 };
+            assert_eq!(rep.total_items(), want, "{name}");
+        }
+        assert!(r.report.total_time() > 0.0);
+        assert!(r.report.serial_time() >= 0.0);
+    }
+
+    #[test]
+    fn barrier_and_dag_modes_agree_on_beta() {
+        use crate::config::GraphMode;
+        use crate::vee::Vee;
+        let (x, y, _) = planted(1200, 5, 11);
+        let dag = Vee::new(topo(), SchedConfig::default());
+        let barrier = Vee::new(topo(), SchedConfig::default())
+            .with_graph_mode(GraphMode::Barrier);
+        let beta_dag = run_with(&dag, &x, &y, 1e-3).unwrap().beta;
+        let beta_bar = run_with(&barrier, &x, &y, 1e-3).unwrap().beta;
+        for (i, (p, q)) in beta_dag.iter().zip(&beta_bar).enumerate() {
+            assert!((p - q).abs() < 1e-3, "beta[{i}]: {p} vs {q}");
         }
     }
 

@@ -90,6 +90,38 @@ impl ExecutorMode {
     }
 }
 
+/// How a pipeline's stages are ordered on the executor
+/// (`graph=barrier|dag`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GraphMode {
+    /// Full barrier between consecutive stages: stages execute serially
+    /// in dependency order (the pre-task-graph behaviour, kept for A/B
+    /// comparison in the figures).
+    Barrier,
+    /// Dependency-aware task-graph dispatch: only explicit `after(...)`
+    /// edges order stages, so independent stages overlap on the
+    /// resident pool (default).
+    #[default]
+    Dag,
+}
+
+impl GraphMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphMode::Barrier => "barrier",
+            GraphMode::Dag => "dag",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" | "serial" => Some(GraphMode::Barrier),
+            "dag" | "graph" => Some(GraphMode::Dag),
+            _ => None,
+        }
+    }
+}
+
 /// A full experiment configuration (scheduling + machine + workload).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -97,6 +129,8 @@ pub struct RunConfig {
     pub topology: Topology,
     /// Worker-pool provisioning (`executor=persistent|oneshot`).
     pub executor: ExecutorMode,
+    /// Pipeline dispatch mode (`graph=barrier|dag`).
+    pub graph: GraphMode,
     /// Number of identical jobs submitted concurrently to the one
     /// resident pool (`jobs=<n>`; 1 = a single job stream).
     pub jobs: usize,
@@ -110,6 +144,7 @@ impl Default for RunConfig {
             sched: SchedConfig::default(),
             topology: Topology::host(),
             executor: ExecutorMode::default(),
+            graph: GraphMode::default(),
             jobs: 1,
             params: BTreeMap::new(),
         }
@@ -129,6 +164,16 @@ impl fmt::Display for ConfigError {
 impl std::error::Error for ConfigError {}
 
 impl RunConfig {
+    /// The pipeline dispatch mode actually in effect: `graph=dag` needs
+    /// the resident executor, so `executor=oneshot` downgrades to
+    /// barrier (banners should print this, not the raw `graph` field).
+    pub fn effective_graph(&self) -> GraphMode {
+        match self.executor {
+            ExecutorMode::Oneshot => GraphMode::Barrier,
+            ExecutorMode::Persistent => self.graph,
+        }
+    }
+
     /// Apply one `key=value` option.
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
         match key {
@@ -168,6 +213,11 @@ impl RunConfig {
             "executor" => {
                 self.executor = ExecutorMode::parse(value).ok_or_else(|| {
                     ConfigError(format!("unknown executor mode '{value}'"))
+                })?;
+            }
+            "graph" => {
+                self.graph = GraphMode::parse(value).ok_or_else(|| {
+                    ConfigError(format!("unknown graph mode '{value}'"))
                 })?;
             }
             "jobs" => {
@@ -256,6 +306,7 @@ impl fmt::Display for RunConfig {
         }
         writeln!(f, "pls_swr = {}", self.sched.pls_swr)?;
         writeln!(f, "executor = {}", self.executor.name())?;
+        writeln!(f, "graph = {}", self.graph.name())?;
         writeln!(f, "jobs = {}", self.jobs)?;
         for (k, v) in &self.params {
             writeln!(f, "{k} = {v}")?;
@@ -324,6 +375,37 @@ mod tests {
     }
 
     #[test]
+    fn effective_graph_downgrades_for_oneshot() {
+        let cfg =
+            RunConfig::from_pairs(["executor=oneshot", "graph=dag"]).unwrap();
+        assert_eq!(cfg.graph, GraphMode::Dag, "raw knob preserved");
+        assert_eq!(
+            cfg.effective_graph(),
+            GraphMode::Barrier,
+            "dag needs the resident executor"
+        );
+        let cfg = RunConfig::from_pairs(["graph=dag"]).unwrap();
+        assert_eq!(cfg.effective_graph(), GraphMode::Dag);
+    }
+
+    #[test]
+    fn graph_mode_key_parses() {
+        let cfg = RunConfig::from_pairs(["graph=barrier"]).unwrap();
+        assert_eq!(cfg.graph, GraphMode::Barrier);
+        let cfg = RunConfig::from_pairs(["graph=dag"]).unwrap();
+        assert_eq!(cfg.graph, GraphMode::Dag);
+        assert_eq!(
+            RunConfig::default().graph,
+            GraphMode::Dag,
+            "dependency-aware dispatch is the default"
+        );
+        assert!(RunConfig::from_pairs(["graph=bogus"]).is_err());
+        for mode in [GraphMode::Barrier, GraphMode::Dag] {
+            assert_eq!(GraphMode::parse(mode.name()), Some(mode));
+        }
+    }
+
+    #[test]
     fn display_round_trips_through_from_text() {
         let cfg = RunConfig::from_pairs([
             "scheme=tfss",
@@ -334,6 +416,7 @@ mod tests {
             "stages=6",
             "pls_swr=0.25",
             "executor=oneshot",
+            "graph=barrier",
             "jobs=3",
             "rows=4096",
         ])
@@ -349,6 +432,7 @@ mod tests {
         assert_eq!(back.topology.name, cfg.topology.name);
         assert_eq!(back.topology.n_cores(), cfg.topology.n_cores());
         assert_eq!(back.executor, cfg.executor);
+        assert_eq!(back.graph, cfg.graph);
         assert_eq!(back.jobs, cfg.jobs);
         assert_eq!(back.params, cfg.params);
     }
@@ -360,6 +444,7 @@ mod tests {
         let back = RunConfig::from_text(&text).unwrap();
         assert_eq!(back.sched.stages, None);
         assert_eq!(back.executor, ExecutorMode::Persistent);
+        assert_eq!(back.graph, GraphMode::Dag);
         assert_eq!(back.jobs, 1);
         // every executor mode's name re-parses
         for mode in [ExecutorMode::Persistent, ExecutorMode::Oneshot] {

@@ -16,10 +16,18 @@
 //! [`sched::SchedReport`]. Several in-flight jobs — even with different
 //! partitioning schemes or queue layouts — are multiplexed over the same
 //! workers; borrowed-body jobs go through [`sched::Executor::scope`] /
-//! [`sched::Executor::run`].
+//! [`sched::Executor::run`]. Above single jobs sits the **task-graph
+//! API** ([`sched::graph`]): a [`sched::GraphSpec`] of named nodes with
+//! explicit `after(...)` dependency edges, submitted via
+//! [`sched::Executor::submit_graph`] — the executor dispatches a node
+//! the moment its in-edges complete, so independent branches overlap on
+//! the same resident workers (cyclic specs are rejected up front; a
+//! node panic cancels its dependents only).
 //!
-//! The [`vee::Vee`] engine fronts one such executor: every vectorized
-//! operator of a pipeline is one job, so a 40-iteration connected-
+//! The [`vee::Vee`] engine fronts one such executor: a pipeline is a
+//! set of stages connected by dependency edges, submitted as one task
+//! graph in the default `graph=dag` mode (or serialized with full
+//! barriers under `graph=barrier`), so a 40-iteration connected-
 //! components run spawns threads exactly once. The legacy
 //! spawn-per-stage path survives as deprecated shims
 //! (`sched::worker::run_once`) and as `executor=oneshot` in the CLI, for

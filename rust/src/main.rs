@@ -14,9 +14,10 @@
 //!
 //! Options are `key=value` pairs (see `config::RunConfig::set`):
 //! `scheme=`, `layout=`, `victim=`, `machine=`, `seed=`,
-//! `executor=persistent|oneshot`, `jobs=<n>` (concurrent jobs on the
-//! one resident pool), plus app parameters like `nodes=`, `scale=`,
-//! `rows=`, `cols=`.
+//! `executor=persistent|oneshot`, `graph=barrier|dag` (pipeline
+//! dispatch: full barriers vs dependency-aware task-graph overlap),
+//! `jobs=<n>` (concurrent jobs on the one resident pool), plus app
+//! parameters like `nodes=`, `scale=`, `rows=`, `cols=`.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -51,6 +52,7 @@ fn usage() -> String {
      examples:\n\
      \x20 daphne-sched run cc nodes=50000 scheme=mfsc layout=percore victim=seqpri\n\
      \x20 daphne-sched run cc nodes=50000 jobs=4            # 4 concurrent jobs, one pool\n\
+     \x20 daphne-sched run linreg rows=100000 graph=barrier # serial stages (A/B baseline)\n\
      \x20 daphne-sched run linreg rows=100000 executor=oneshot  # legacy spawn-per-stage\n\
      \x20 daphne-sched run linreg rows=100000 cols=65 scheme=static\n\
      \x20 daphne-sched dsl script.daph f=synthetic:amazon?nodes=10000\n\
@@ -104,13 +106,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             let g = if scale > 1 { scale_up(&g, scale) } else { g };
             println!(
                 "cc: {} nodes, {} edges ({:.4}% dense), machine={} [{} cores, \
-                 {} executor, {} job(s)]",
+                 {} executor, {} graph, {} job(s)]",
                 g.rows,
                 g.nnz(),
                 g.density() * 100.0,
                 topo.name,
                 topo.n_cores(),
                 cfg.executor.name(),
+                cfg.effective_graph().name(),
                 cfg.jobs
             );
             let use_pjrt = cfg.param_usize("pjrt", 0) == 1;
@@ -125,7 +128,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     Arc::new(topo.clone()),
                     Arc::new(cfg.sched.clone()),
                     cfg.executor,
-                );
+                )
+                .with_graph_mode(cfg.graph);
                 if cfg.jobs > 1 {
                     // multi-tenant demo: submit identical pipelines
                     // concurrently, multiplexed over the one resident pool
@@ -174,19 +178,21 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             let (x, y) = linreg::generate(&spec);
             println!(
                 "linreg: {}x{} design matrix, machine={} [{} cores, \
-                 {} executor, {} job(s)]",
+                 {} executor, {} graph, {} job(s)]",
                 x.rows,
                 x.cols,
                 topo.name,
                 topo.n_cores(),
                 cfg.executor.name(),
+                cfg.effective_graph().name(),
                 cfg.jobs
             );
             let vee = Vee::with_mode(
                 Arc::new(topo.clone()),
                 Arc::new(cfg.sched.clone()),
                 cfg.executor,
-            );
+            )
+            .with_graph_mode(cfg.graph);
             let result = if cfg.jobs > 1 {
                 let results: Vec<Result<_, String>> =
                     std::thread::scope(|s| {
@@ -207,7 +213,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     match r {
                         Ok(r) => {
                             println!(
-                                "  job {i}: scheduled {:.4}s",
+                                "  job {i}: wall {:.4}s",
                                 r.report.total_time()
                             );
                             if first.is_none() {
@@ -230,6 +236,11 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 &result.beta[..result.beta.len().min(4)],
                 linreg::rmse(&x, &y, &result.beta)
             );
+            println!(
+                "pipeline wall {:.4}s, serial (sum of stage makespans) {:.4}s",
+                result.report.total_time(),
+                result.report.serial_time()
+            );
             for (name, r) in &result.report.stages {
                 println!("  {name}: {}", r.row());
             }
@@ -247,7 +258,8 @@ fn cmd_dsl(args: &[String]) -> Result<(), String> {
         .map_err(|e| format!("reading {path}: {e}"))?;
     let cfg = parse_pairs(&args[1..])?;
     let params: BTreeMap<String, String> = cfg.params.clone();
-    let vee = Vee::new(cfg.topology.clone(), cfg.sched.clone());
+    let vee = Vee::new(cfg.topology.clone(), cfg.sched.clone())
+        .with_graph_mode(cfg.graph);
     let out = dsl::run_script(&src, &params, &vee)?;
     println!(
         "script ok; {} scheduled operators, total scheduled time {:.4}s",

@@ -36,6 +36,12 @@
 //! `queue_wait`/`failed_steals` tail after the report snapshot; item,
 //! task, busy and successful-steal counts are always exact.
 //!
+//! Jobs may carry an internal completion hook (`on_done`), invoked
+//! exactly once after the job's completion is published — this is how
+//! the task-graph layer ([`super::graph`], [`Executor::submit_graph`])
+//! dispatches dependent nodes the moment their in-edges complete,
+//! without a coordinator thread.
+//!
 //! Do not submit-and-wait from *inside* a task body: a body that blocks
 //! on another job of the same executor can deadlock the pool.
 
@@ -56,8 +62,12 @@ use super::victim::VictimSelector;
 use crate::config::SchedConfig;
 use crate::topology::Topology;
 
-type Body = Box<dyn Fn(usize, TaskRange) + Send + Sync + 'static>;
-type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+pub(super) type Body = Box<dyn Fn(usize, TaskRange) + Send + Sync + 'static>;
+pub(super) type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+/// Internal completion hook: invoked exactly once, after the job's
+/// completion has been published (body already dropped), on whichever
+/// thread finalized the job. Used by the task-graph dispatcher.
+pub(super) type DoneCallback = Box<dyn FnOnce(&Arc<Job>) + Send>;
 
 /// Description of one job: an item count plus optional per-job
 /// scheduling overrides (`None` = the executor's default config).
@@ -95,7 +105,7 @@ impl JobSpec {
 /// One in-flight job: the job-scoped task source, the body, and the
 /// completion state. Lives behind an `Arc` shared by the submitter and
 /// every worker touching the job.
-struct Job {
+pub(super) struct Job {
     /// Sequence id (the epoch tag): total order of submission, used by
     /// workers to remember which jobs they have already exhausted.
     seq: u64,
@@ -125,6 +135,25 @@ struct Job {
     stats: Vec<Mutex<WorkerStats>>,
     done: Mutex<Option<SchedReport>>,
     done_cv: Condvar,
+    /// Completion hook (see [`DoneCallback`]); `None` for plain jobs.
+    on_done: Mutex<Option<DoneCallback>>,
+}
+
+impl Job {
+    /// Snapshot of the published report; `Some` once the job completed.
+    pub(super) fn cloned_report(&self) -> Option<SchedReport> {
+        self.done.lock().unwrap().clone()
+    }
+
+    /// Whether a task body of this job panicked.
+    pub(super) fn was_aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    /// Take the recorded panic payload, if any (first caller wins).
+    pub(super) fn take_panic(&self) -> Option<PanicPayload> {
+        self.panic.lock().unwrap().take()
+    }
 }
 
 struct RunState {
@@ -134,7 +163,7 @@ struct RunState {
     shutdown: bool,
 }
 
-struct Shared {
+pub(super) struct Shared {
     topo: Arc<Topology>,
     queue: Mutex<RunState>,
     work_cv: Condvar,
@@ -263,50 +292,107 @@ impl Executor {
         let config = spec
             .config
             .unwrap_or_else(|| Arc::clone(&self.default_config));
-        let opts = PartitionerOptions {
-            stages: config.stages,
-            pls_swr: config.pls_swr,
-            seed: config.seed,
-        };
-        let source = queue::build_source(
-            config.layout,
-            config.scheme,
+        enqueue_raw(
+            &self.shared,
+            &self.jobs_completed,
+            spec.name,
             spec.items,
-            &self.shared.topo,
-            &opts,
-        );
-        let n = self.shared.topo.n_cores();
-        let mut q = self.shared.queue.lock().unwrap();
-        let seq = q.next_seq;
-        q.next_seq += 1;
-        let job = Arc::new(Job {
-            seq,
-            name: spec.name,
-            total: spec.items,
             config,
-            source,
-            body: Mutex::new(Some(body)),
-            start: Instant::now(),
-            executed: AtomicUsize::new(0),
-            aborted: AtomicBool::new(false),
-            panic: Mutex::new(None),
-            stats: (0..n).map(|_| Mutex::new(WorkerStats::default())).collect(),
-            done: Mutex::new(None),
-            done_cv: Condvar::new(),
-        });
-        if job.total == 0 {
-            // Nothing to schedule: complete inline without waking the pool
-            // (body dropped before completion publishes, as in finalize).
-            drop(q);
-            drop(job.body.lock().unwrap().take());
-            *job.done.lock().unwrap() = Some(make_report(&job));
-            self.jobs_completed.fetch_add(1, Ordering::Relaxed);
-        } else {
-            q.jobs.push(Arc::clone(&job));
-            drop(q);
-            self.shared.work_cv.notify_all();
-        }
-        job
+            body,
+            None,
+        )
+    }
+
+    /// Shared pool state (handed to the task-graph dispatcher so node
+    /// completion hooks can enqueue dependents without an `&Executor`).
+    pub(super) fn shared(&self) -> &Arc<Shared> {
+        &self.shared
+    }
+
+    pub(super) fn completed_counter(&self) -> &Arc<AtomicUsize> {
+        &self.jobs_completed
+    }
+}
+
+/// Create and enqueue one job on the pool behind `shared`. This is the
+/// single submission point: [`Executor::submit`]/[`Scope::submit`] call
+/// it with `on_done: None`; the task-graph dispatcher
+/// ([`super::graph`]) calls it from node completion hooks, which is why
+/// it is a free function over `&Shared` rather than a method.
+pub(super) fn enqueue_raw(
+    shared: &Shared,
+    completed: &AtomicUsize,
+    name: String,
+    items: usize,
+    config: Arc<SchedConfig>,
+    body: Body,
+    on_done: Option<DoneCallback>,
+) -> Arc<Job> {
+    let opts = PartitionerOptions {
+        stages: config.stages,
+        pls_swr: config.pls_swr,
+        seed: config.seed,
+    };
+    let source =
+        queue::build_source(config.layout, config.scheme, items, &shared.topo, &opts);
+    let n = shared.topo.n_cores();
+    let mut q = shared.queue.lock().unwrap();
+    let seq = q.next_seq;
+    q.next_seq += 1;
+    let job = Arc::new(Job {
+        seq,
+        name,
+        total: items,
+        config,
+        source,
+        body: Mutex::new(Some(body)),
+        start: Instant::now(),
+        executed: AtomicUsize::new(0),
+        aborted: AtomicBool::new(false),
+        panic: Mutex::new(None),
+        stats: (0..n).map(|_| Mutex::new(WorkerStats::default())).collect(),
+        done: Mutex::new(None),
+        done_cv: Condvar::new(),
+        on_done: Mutex::new(on_done),
+    });
+    if job.total == 0 {
+        // Nothing to schedule: complete inline without waking the pool.
+        drop(q);
+        let report = make_report(&job);
+        publish_completion(&job, report, completed);
+    } else {
+        q.jobs.push(Arc::clone(&job));
+        drop(q);
+        shared.work_cv.notify_all();
+    }
+    job
+}
+
+/// The one completion-publish sequence, shared by `finalize` and the
+/// zero-item fast path in `enqueue_raw`. Order is load-bearing:
+///
+/// 1. drop the body — a scoped submitter may free the `'env` data it
+///    borrows the moment completion is observed;
+/// 2. bump the pool's completed counter;
+/// 3. publish the report and wake waiters;
+/// 4. invoke the `on_done` hook with **no lock held** (it may enqueue
+///    dependent jobs; an if-let scrutinee would keep the mutex guard
+///    alive across the call, so the hook is taken out first).
+fn publish_completion(
+    job: &Arc<Job>,
+    report: SchedReport,
+    completed: &AtomicUsize,
+) {
+    drop(job.body.lock().unwrap().take());
+    completed.fetch_add(1, Ordering::Relaxed);
+    {
+        let mut done = job.done.lock().unwrap();
+        *done = Some(report);
+        job.done_cv.notify_all();
+    }
+    let cb = job.on_done.lock().unwrap().take();
+    if let Some(cb) = cb {
+        cb(job);
     }
 }
 
@@ -560,16 +646,11 @@ fn finalize(job: &Arc<Job>, shared: &Shared, completed: &AtomicUsize) {
         let mut q = shared.queue.lock().unwrap();
         q.jobs.retain(|j| j.seq != job.seq);
     }
-    // Drop the body BEFORE publishing completion: a scoped submitter may
-    // invalidate everything the closure borrows the moment `done` is
-    // observed, and worker threads keep `Arc<Job>` clones alive past
-    // that point. No call can be in flight here (every pulled task is
-    // counted only after its call returns).
-    drop(job.body.lock().unwrap().take());
-    completed.fetch_add(1, Ordering::Relaxed);
-    let mut done = job.done.lock().unwrap();
-    *done = Some(report);
-    job.done_cv.notify_all();
+    // No body call can be in flight here (every pulled task is counted
+    // only after its call returns), which is what makes step 1 of
+    // `publish_completion` — dropping the body before the completion
+    // event becomes observable — sound.
+    publish_completion(job, report, completed);
 }
 
 /// A task body panicked: record the payload, stop handing out tasks,

@@ -1,0 +1,819 @@
+//! Task-graph job submission: dependency-aware pipeline dispatch over
+//! the persistent [`Executor`].
+//!
+//! The barrier-per-stage pipeline model wastes the pool whenever two
+//! stages are independent: each stage's straggler tail idles every
+//! other worker. Canary (Qu et al., 2016) and Trident make the same
+//! architectural argument for cloud and heterogeneous pipelines — let
+//! the application state only the *true* dependencies and let the
+//! runtime dispatch everything else concurrently. This module is that
+//! surface for the VEE:
+//!
+//! - [`GraphSpec`] / [`NodeSpec`] — named nodes with per-node item
+//!   counts, optional per-node [`SchedConfig`] overrides, and explicit
+//!   [`NodeSpec::after`] dependency edges.
+//! - [`Executor::submit_graph`] → [`GraphHandle`] — validates the spec
+//!   up front (duplicate names, unknown dependencies, and cycles are
+//!   hard [`GraphError`]s: a cyclic spec is *rejected*, never
+//!   deadlocked on) and dispatches every in-degree-zero node
+//!   immediately.
+//! - Dependency-driven dispatch with no coordinator thread: each
+//!   node's job carries a completion hook that runs on whichever
+//!   worker finalizes the job; the hook decrements the in-edge counts
+//!   of the node's dependents and enqueues any that reach zero. A node
+//!   therefore starts *the moment* its last in-edge completes, and
+//!   independent branches overlap on the same resident workers via the
+//!   executor's job-scoped `TaskSource` multiplexing.
+//! - Failure propagation: a node whose body panics finishes as
+//!   [`NodeStatus::Failed`] and transitively cancels its dependents
+//!   ([`NodeStatus::Cancelled`] nodes never dispatch and their bodies
+//!   are dropped); independent branches keep running to completion.
+//!   [`GraphHandle::wait`] resumes the first node panic on the waiting
+//!   thread (mirroring [`JobHandle::wait`](super::JobHandle::wait));
+//!   [`GraphHandle::join`] returns the per-node statuses instead.
+//!
+//! [`Executor::run_graph`] is the borrowed-body entry point (bodies may
+//! borrow the caller's stack data; the call blocks until the whole
+//! graph is terminal) — it is what [`crate::vee::Pipeline`] builds on.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::marker::PhantomData;
+use std::panic::resume_unwind;
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::executor::{
+    enqueue_raw, Body, DoneCallback, Executor, Job, PanicPayload, Shared,
+};
+use super::metrics::SchedReport;
+use super::task::TaskRange;
+use crate::config::SchedConfig;
+
+/// Description of one graph node: a name (unique within its graph), an
+/// item count, optional per-node scheduling overrides, and the names of
+/// the nodes it must run after.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub items: usize,
+    /// `None` = the executor's default config.
+    pub config: Option<Arc<SchedConfig>>,
+    /// Dependency edges by node name (duplicates are deduplicated at
+    /// submission).
+    pub after: Vec<String>,
+}
+
+impl NodeSpec {
+    pub fn new(name: &str, items: usize) -> Self {
+        NodeSpec {
+            name: name.to_string(),
+            items,
+            config: None,
+            after: Vec::new(),
+        }
+    }
+
+    /// Add one dependency edge: this node dispatches only after `dep`
+    /// has completed. Forward references are fine — names resolve at
+    /// submission.
+    pub fn after(mut self, dep: &str) -> Self {
+        self.after.push(dep.to_string());
+        self
+    }
+
+    /// Add several dependency edges at once.
+    pub fn after_all<'d>(mut self, deps: impl IntoIterator<Item = &'d str>) -> Self {
+        self.after.extend(deps.into_iter().map(str::to_string));
+        self
+    }
+
+    /// Override the executor's default scheduling for this node.
+    pub fn with_config(mut self, config: SchedConfig) -> Self {
+        self.config = Some(Arc::new(config));
+        self
+    }
+
+    /// Like [`NodeSpec::with_config`] but sharing an existing `Arc`.
+    pub fn with_shared_config(mut self, config: Arc<SchedConfig>) -> Self {
+        self.config = Some(config);
+        self
+    }
+}
+
+type NodeBody<'env> = Box<dyn Fn(usize, TaskRange) + Send + Sync + 'env>;
+
+/// A task graph: named nodes plus their bodies. Submit with
+/// [`Executor::submit_graph`] (owned bodies, non-blocking) or
+/// [`Executor::run_graph`] (borrowed bodies, blocks until terminal).
+pub struct GraphSpec<'env> {
+    pub name: String,
+    nodes: Vec<(NodeSpec, NodeBody<'env>)>,
+}
+
+impl<'env> GraphSpec<'env> {
+    pub fn new(name: &str) -> Self {
+        GraphSpec { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Builder-style [`GraphSpec::add`].
+    pub fn node<F>(mut self, spec: NodeSpec, body: F) -> Self
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'env,
+    {
+        self.add(spec, body);
+        self
+    }
+
+    pub fn add<F>(&mut self, spec: NodeSpec, body: F)
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'env,
+    {
+        self.nodes.push((spec, Box::new(body)));
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node_names(&self) -> impl Iterator<Item = &str> {
+        self.nodes.iter().map(|(s, _)| s.name.as_str())
+    }
+}
+
+impl fmt::Debug for GraphSpec<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("GraphSpec")
+            .field("name", &self.name)
+            .field("nodes", &self.node_names().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+/// A graph spec that cannot be scheduled. Returned by
+/// [`Executor::submit_graph`] before anything is dispatched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// Two nodes share a name.
+    DuplicateNode(String),
+    /// `node` names a dependency that is not in the graph.
+    UnknownDependency { node: String, dep: String },
+    /// The dependency edges contain a cycle; the named nodes are the
+    /// ones that could not be topologically ordered.
+    Cycle(Vec<String>),
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::DuplicateNode(name) => {
+                write!(f, "duplicate node name '{name}'")
+            }
+            GraphError::UnknownDependency { node, dep } => {
+                write!(f, "node '{node}' depends on unknown node '{dep}'")
+            }
+            GraphError::Cycle(names) => {
+                write!(
+                    f,
+                    "dependency cycle: nodes {names:?} could not be \
+                     topologically ordered (on or downstream of a cycle)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// Validated dispatch structure: a topological order plus resolved,
+/// deduplicated dependency / dependent index lists (index = position in
+/// the input slice).
+pub struct TopoOrder {
+    pub order: Vec<usize>,
+    pub deps: Vec<Vec<usize>>,
+    pub dependents: Vec<Vec<usize>>,
+}
+
+/// Kahn's algorithm over `(name, after-names)` pairs. Rejects duplicate
+/// names, unknown dependencies, and cycles (including self-loops) as
+/// [`GraphError`]s. Exposed for callers that serialize a graph
+/// themselves — the VEE's `graph=barrier` mode.
+pub fn toposort(nodes: &[(String, Vec<String>)]) -> Result<TopoOrder, GraphError> {
+    let mut index: HashMap<&str, usize> = HashMap::with_capacity(nodes.len());
+    for (i, (name, _)) in nodes.iter().enumerate() {
+        if index.insert(name.as_str(), i).is_some() {
+            return Err(GraphError::DuplicateNode(name.clone()));
+        }
+    }
+    let n = nodes.len();
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, (name, after)) in nodes.iter().enumerate() {
+        for dep in after {
+            let Some(&d) = index.get(dep.as_str()) else {
+                return Err(GraphError::UnknownDependency {
+                    node: name.clone(),
+                    dep: dep.clone(),
+                });
+            };
+            // Dedup repeated edges: each completion decrements the
+            // pending count once, so a double edge would never drain.
+            if !deps[i].contains(&d) {
+                deps[i].push(d);
+                dependents[d].push(i);
+            }
+        }
+    }
+    let mut indeg: Vec<usize> = deps.iter().map(Vec::len).collect();
+    let mut order: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut head = 0;
+    while head < order.len() {
+        let u = order[head];
+        head += 1;
+        for &v in &dependents[u] {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                order.push(v);
+            }
+        }
+    }
+    if order.len() < n {
+        let cyclic = (0..n)
+            .filter(|&i| indeg[i] > 0)
+            .map(|i| nodes[i].0.clone())
+            .collect();
+        return Err(GraphError::Cycle(cyclic));
+    }
+    Ok(TopoOrder { order, deps, dependents })
+}
+
+/// Terminal state of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    /// Every item executed.
+    Completed,
+    /// A task body panicked; the job was aborted and drained.
+    Failed,
+    /// A (transitive) dependency failed; the node never dispatched.
+    Cancelled,
+}
+
+/// Outcome of one node.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub name: String,
+    pub status: NodeStatus,
+    /// Scheduling report; `None` for cancelled nodes (never dispatched).
+    pub report: Option<SchedReport>,
+}
+
+/// Outcome of one graph run, nodes in spec order.
+#[derive(Debug, Clone)]
+pub struct GraphReport {
+    pub graph: String,
+    pub nodes: Vec<NodeReport>,
+    /// Wall-clock seconds from submission to the last node's terminal
+    /// event — *the* pipeline latency once branches overlap.
+    pub makespan: f64,
+}
+
+impl GraphReport {
+    pub fn node(&self, name: &str) -> Option<&NodeReport> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    pub fn report(&self, name: &str) -> Option<&SchedReport> {
+        self.node(name).and_then(|n| n.report.as_ref())
+    }
+
+    pub fn status(&self, name: &str) -> Option<NodeStatus> {
+        self.node(name).map(|n| n.status)
+    }
+
+    pub fn all_completed(&self) -> bool {
+        self.nodes.iter().all(|n| n.status == NodeStatus::Completed)
+    }
+
+    /// Sum of per-node makespans — what a full barrier after every node
+    /// would cost end-to-end. `serial_time() / makespan` estimates the
+    /// overlap win.
+    pub fn serial_time(&self) -> f64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.report.as_ref())
+            .map(|r| r.makespan)
+            .sum()
+    }
+}
+
+/// Per-node runtime state (immutable after launch except the body).
+struct NodeState {
+    name: String,
+    items: usize,
+    config: Arc<SchedConfig>,
+    /// Taken when the node dispatches; dropped at cancellation for
+    /// nodes that never dispatch. Either way it is gone before the
+    /// graph's completion is observable (see `run_graph` safety).
+    body: Mutex<Option<Body>>,
+    dependents: Vec<usize>,
+}
+
+/// Mutable progress, guarded by one mutex.
+struct Progress {
+    /// Remaining in-edges per node; a node dispatches at zero.
+    pending: Vec<usize>,
+    status: Vec<Option<NodeStatus>>,
+    reports: Vec<Option<SchedReport>>,
+    /// Nodes not yet terminal; zero = the graph is done.
+    remaining: usize,
+    /// First node panic, resumed by `wait`.
+    panic: Option<PanicPayload>,
+    makespan: f64,
+}
+
+struct GraphRun {
+    graph: String,
+    shared: Arc<Shared>,
+    completed_jobs: Arc<AtomicUsize>,
+    nodes: Vec<NodeState>,
+    progress: Mutex<Progress>,
+    done_cv: Condvar,
+    start: Instant,
+}
+
+impl Executor {
+    /// Validate and launch a task graph with owned (`'static`) bodies.
+    /// Every node whose dependencies are already satisfied is dispatched
+    /// before this returns; the rest dispatch as their in-edges
+    /// complete. The graph keeps running if the handle is dropped.
+    pub fn submit_graph(
+        &self,
+        spec: GraphSpec<'static>,
+    ) -> Result<GraphHandle<'static>, GraphError> {
+        let run = self.launch_graph(spec)?;
+        Ok(GraphHandle { run, _env: PhantomData })
+    }
+
+    /// Borrowed-body graph execution: validates, dispatches, and blocks
+    /// until every node is terminal. Resumes the first node panic on
+    /// this thread (dependents of the panicking node are cancelled;
+    /// independent branches still run to completion first). This is the
+    /// per-pipeline entry point used by [`crate::vee::Pipeline`].
+    pub fn run_graph<'env>(
+        &self,
+        spec: GraphSpec<'env>,
+    ) -> Result<GraphReport, GraphError> {
+        // SAFETY: lifetime-only transmute of the node bodies. `wait`
+        // below blocks until the whole graph is terminal, and by then
+        // every body is gone: dispatched bodies are dropped by job
+        // finalization *before* the node's completion publishes (and a
+        // counted-complete job has no call in flight), cancelled bodies
+        // are dropped at cancellation, and both happen before the
+        // graph-level `remaining` counter can reach zero. Worker
+        // threads keep `Arc`s to the run past that point, but only to
+        // already-`None` body slots. On the `Err` path nothing was
+        // dispatched and the spec (with its bodies) is dropped here,
+        // inside 'env.
+        let spec: GraphSpec<'static> = unsafe { std::mem::transmute(spec) };
+        let run = self.launch_graph(spec)?;
+        Ok(GraphHandle { run, _env: PhantomData::<&'static ()> }.wait())
+    }
+
+    fn launch_graph(
+        &self,
+        spec: GraphSpec<'static>,
+    ) -> Result<Arc<GraphRun>, GraphError> {
+        let meta: Vec<(String, Vec<String>)> = spec
+            .nodes
+            .iter()
+            .map(|(s, _)| (s.name.clone(), s.after.clone()))
+            .collect();
+        let topo = toposort(&meta)?;
+        let n = spec.nodes.len();
+        let mut nodes = Vec::with_capacity(n);
+        let mut pending = Vec::with_capacity(n);
+        for (i, (ns, body)) in spec.nodes.into_iter().enumerate() {
+            pending.push(topo.deps[i].len());
+            nodes.push(NodeState {
+                name: ns.name,
+                items: ns.items,
+                config: ns
+                    .config
+                    .unwrap_or_else(|| Arc::clone(self.default_config())),
+                body: Mutex::new(Some(body)),
+                dependents: topo.dependents[i].clone(),
+            });
+        }
+        let roots: Vec<usize> = (0..n).filter(|&i| pending[i] == 0).collect();
+        let run = Arc::new(GraphRun {
+            graph: spec.name,
+            shared: Arc::clone(self.shared()),
+            completed_jobs: Arc::clone(self.completed_counter()),
+            nodes,
+            progress: Mutex::new(Progress {
+                pending,
+                status: vec![None; n],
+                reports: vec![None; n],
+                remaining: n,
+                panic: None,
+                makespan: 0.0,
+            }),
+            done_cv: Condvar::new(),
+            start: Instant::now(),
+        });
+        dispatch(&run, &roots);
+        Ok(run)
+    }
+}
+
+/// Enqueue the given (ready) nodes as jobs. Call with no locks held.
+///
+/// Nodes with items complete asynchronously and carry a completion hook
+/// ([`node_done`]) that re-enters `dispatch` — at most one hook frame
+/// deep, since their completion happens on whichever worker counts the
+/// last item, not on this stack. Zero-item nodes complete inline inside
+/// [`enqueue_raw`], so their bookkeeping is done *here*, on an explicit
+/// worklist: an arbitrarily long chain of zero-item nodes is iterative,
+/// not one recursion frame per node.
+fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
+    let mut worklist: Vec<usize> = ready.to_vec();
+    while let Some(i) = worklist.pop() {
+        let node = &run.nodes[i];
+        let body = node
+            .body
+            .lock()
+            .unwrap()
+            .take()
+            .expect("a node dispatches at most once");
+        if node.items == 0 {
+            // completes inline (no hook): record the outcome ourselves
+            // and push any newly ready dependents onto the worklist
+            let job = enqueue_raw(
+                &run.shared,
+                &run.completed_jobs,
+                node.name.clone(),
+                0,
+                Arc::clone(&node.config),
+                body,
+                None,
+            );
+            worklist.extend(record_done(run, i, &job));
+        } else {
+            let run2 = Arc::clone(run);
+            let hook: DoneCallback =
+                Box::new(move |job| node_done(&run2, i, job));
+            enqueue_raw(
+                &run.shared,
+                &run.completed_jobs,
+                node.name.clone(),
+                node.items,
+                Arc::clone(&node.config),
+                body,
+                Some(hook),
+            );
+        }
+    }
+}
+
+/// Completion hook for node `i`: runs on the thread that finalized its
+/// job, after the job's own completion published.
+fn node_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) {
+    let ready = record_done(run, i, job);
+    dispatch(run, &ready);
+}
+
+/// Record the outcome of node `i`'s finished job — releasing dependents
+/// on success, cancelling them transitively on failure — and return the
+/// nodes that became ready. Call with no locks held; wakes waiters.
+fn record_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) -> Vec<usize> {
+    let failed = job.was_aborted();
+    let report = job
+        .cloned_report()
+        .expect("record_done runs after the report publishes");
+    let payload = if failed { job.take_panic() } else { None };
+    let mut ready = Vec::new();
+    {
+        let mut p = run.progress.lock().unwrap();
+        p.reports[i] = Some(report);
+        p.status[i] = Some(if failed {
+            NodeStatus::Failed
+        } else {
+            NodeStatus::Completed
+        });
+        if failed {
+            if p.panic.is_none() {
+                p.panic = payload;
+            }
+            cancel_dependents(run, &mut p, i);
+        } else {
+            for &d in &run.nodes[i].dependents {
+                p.pending[d] -= 1;
+                if p.pending[d] == 0 && p.status[d].is_none() {
+                    ready.push(d);
+                }
+            }
+        }
+        p.remaining -= 1;
+        if p.remaining == 0 {
+            p.makespan = run.start.elapsed().as_secs_f64();
+        }
+    }
+    run.done_cv.notify_all();
+    ready
+}
+
+/// Transitively cancel every not-yet-terminal dependent of `failed`.
+/// None of them can have dispatched (each still has a pending in-edge
+/// through the failed node), so their bodies are dropped here. Caller
+/// holds the progress lock.
+fn cancel_dependents(run: &GraphRun, p: &mut Progress, failed: usize) {
+    let mut stack: Vec<usize> = run.nodes[failed].dependents.clone();
+    while let Some(d) = stack.pop() {
+        if p.status[d].is_some() {
+            continue; // already terminal (diamond: visited via a sibling)
+        }
+        p.status[d] = Some(NodeStatus::Cancelled);
+        drop(run.nodes[d].body.lock().unwrap().take());
+        p.remaining -= 1;
+        stack.extend(run.nodes[d].dependents.iter().copied());
+    }
+}
+
+/// Handle to one submitted task graph.
+#[must_use = "a GraphHandle should be waited on (the graph keeps running)"]
+pub struct GraphHandle<'env> {
+    run: Arc<GraphRun>,
+    _env: PhantomData<&'env ()>,
+}
+
+impl fmt::Debug for GraphHandle<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("GraphHandle")
+            .field("graph", &self.run.graph)
+            .field("finished", &self.is_finished())
+            .finish()
+    }
+}
+
+impl GraphHandle<'_> {
+    pub fn name(&self) -> &str {
+        &self.run.graph
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.run.progress.lock().unwrap().remaining == 0
+    }
+
+    /// Block until every node is terminal; resumes the first node panic
+    /// (if any) on this thread.
+    pub fn wait(self) -> GraphReport {
+        let (report, panic) = wait_terminal(&self.run);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+        report
+    }
+
+    /// Like [`GraphHandle::wait`], but a node panic is reported as
+    /// `Failed`/`Cancelled` statuses instead of being resumed.
+    pub fn join(self) -> GraphReport {
+        wait_terminal(&self.run).0
+    }
+}
+
+/// Collect the terminal state into a report. Drains the per-node
+/// reports rather than cloning them — `wait`/`join` consume the only
+/// handle, so this runs at most once per graph.
+fn wait_terminal(run: &GraphRun) -> (GraphReport, Option<PanicPayload>) {
+    let mut p = run.progress.lock().unwrap();
+    while p.remaining > 0 {
+        p = run.done_cv.wait(p).unwrap();
+    }
+    let mut nodes = Vec::with_capacity(run.nodes.len());
+    for (i, n) in run.nodes.iter().enumerate() {
+        nodes.push(NodeReport {
+            name: n.name.clone(),
+            status: p.status[i].expect("remaining == 0 means all terminal"),
+            report: p.reports[i].take(),
+        });
+    }
+    let report = GraphReport {
+        graph: run.graph.clone(),
+        nodes,
+        makespan: p.makespan,
+    };
+    let panic = p.panic.take();
+    (report, panic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::partitioner::Scheme;
+    use crate::sched::queue::QueueLayout;
+    use crate::topology::Topology;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn exec() -> Executor {
+        Executor::new(
+            Arc::new(Topology::symmetric("test4", 2, 2, 1.5, 1.0)),
+            Arc::new(SchedConfig::default()),
+        )
+    }
+
+    #[test]
+    fn diamond_completes_with_dependency_order() {
+        let e = exec();
+        let a_items = AtomicUsize::new(0);
+        let bc_after_a = AtomicUsize::new(1);
+        let d_after_bc = AtomicUsize::new(1);
+        let b_items = AtomicUsize::new(0);
+        let c_items = AtomicUsize::new(0);
+        let spec = GraphSpec::new("diamond")
+            .node(NodeSpec::new("a", 500), |_w, r| {
+                a_items.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .node(NodeSpec::new("b", 300).after("a"), |_w, r| {
+                if a_items.load(Ordering::SeqCst) != 500 {
+                    bc_after_a.store(0, Ordering::SeqCst);
+                }
+                b_items.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .node(NodeSpec::new("c", 200).after("a"), |_w, r| {
+                if a_items.load(Ordering::SeqCst) != 500 {
+                    bc_after_a.store(0, Ordering::SeqCst);
+                }
+                c_items.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .node(
+                NodeSpec::new("d", 100).after("b").after("c"),
+                |_w, _r| {
+                    if b_items.load(Ordering::SeqCst) != 300
+                        || c_items.load(Ordering::SeqCst) != 200
+                    {
+                        d_after_bc.store(0, Ordering::SeqCst);
+                    }
+                },
+            );
+        let report = e.run_graph(spec).unwrap();
+        assert!(report.all_completed());
+        assert_eq!(bc_after_a.load(Ordering::SeqCst), 1, "b/c saw a complete");
+        assert_eq!(d_after_bc.load(Ordering::SeqCst), 1, "d saw b and c done");
+        assert_eq!(report.report("a").unwrap().total_items(), 500);
+        assert_eq!(report.report("d").unwrap().total_items(), 100);
+        assert!(report.makespan > 0.0);
+        assert_eq!(e.jobs_completed(), 4, "one job per node");
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let e = exec();
+        let two_cycle = GraphSpec::new("cycle")
+            .node(NodeSpec::new("a", 10).after("b"), |_w, _r| {})
+            .node(NodeSpec::new("b", 10).after("a"), |_w, _r| {});
+        match e.submit_graph(two_cycle) {
+            Err(GraphError::Cycle(names)) => {
+                assert!(names.contains(&"a".to_string()));
+                assert!(names.contains(&"b".to_string()));
+            }
+            other => panic!("expected cycle error, got {other:?}"),
+        }
+
+        let self_loop = GraphSpec::new("self")
+            .node(NodeSpec::new("a", 10).after("a"), |_w, _r| {});
+        assert!(matches!(
+            e.submit_graph(self_loop),
+            Err(GraphError::Cycle(_))
+        ));
+
+        let unknown = GraphSpec::new("unknown")
+            .node(NodeSpec::new("a", 10).after("ghost"), |_w, _r| {});
+        assert_eq!(
+            e.submit_graph(unknown).err(),
+            Some(GraphError::UnknownDependency {
+                node: "a".into(),
+                dep: "ghost".into()
+            })
+        );
+
+        let dup = GraphSpec::new("dup")
+            .node(NodeSpec::new("a", 10), |_w, _r| {})
+            .node(NodeSpec::new("a", 10), |_w, _r| {});
+        assert_eq!(
+            e.submit_graph(dup).err(),
+            Some(GraphError::DuplicateNode("a".into()))
+        );
+        // the pool is untouched by rejected specs
+        assert_eq!(e.jobs_completed(), 0);
+    }
+
+    #[test]
+    fn duplicate_edges_are_deduplicated() {
+        // a double edge must not leave the dependent's pending count
+        // above zero forever (that would hang the graph).
+        let e = exec();
+        let spec = GraphSpec::new("dupedge")
+            .node(NodeSpec::new("a", 50), |_w, _r| {})
+            .node(
+                NodeSpec::new("b", 50).after("a").after("a"),
+                |_w, _r| {},
+            );
+        let report = e.run_graph(spec).unwrap();
+        assert!(report.all_completed());
+    }
+
+    #[test]
+    fn zero_item_nodes_chain_through() {
+        let e = exec();
+        let ran = AtomicUsize::new(0);
+        let spec = GraphSpec::new("empty-chain")
+            .node(NodeSpec::new("a", 0), |_w, _r| {})
+            .node(NodeSpec::new("b", 0).after("a"), |_w, _r| {})
+            .node(NodeSpec::new("c", 64).after("b"), |_w, r| {
+                ran.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        let report = e.run_graph(spec).unwrap();
+        assert!(report.all_completed());
+        assert_eq!(ran.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn empty_graph_completes_immediately() {
+        let e = exec();
+        let report = e.run_graph(GraphSpec::new("empty")).unwrap();
+        assert!(report.nodes.is_empty());
+        assert!(report.all_completed());
+    }
+
+    #[test]
+    fn per_node_config_overrides_apply() {
+        let e = exec();
+        let spec = GraphSpec::new("cfg")
+            .node(NodeSpec::new("default", 100), |_w, _r| {})
+            .node(
+                NodeSpec::new("gss", 100)
+                    .after("default")
+                    .with_config(
+                        SchedConfig::default()
+                            .with_scheme(Scheme::Gss)
+                            .with_layout(QueueLayout::PerCore),
+                    ),
+                |_w, _r| {},
+            );
+        let report = e.run_graph(spec).unwrap();
+        assert_eq!(report.report("default").unwrap().scheme, "STATIC");
+        assert_eq!(report.report("gss").unwrap().scheme, "GSS");
+        assert_eq!(report.report("gss").unwrap().layout, "PERCORE");
+    }
+
+    #[test]
+    fn wait_resumes_node_panic_and_join_reports_statuses() {
+        let e = exec();
+        let make_spec = || {
+            GraphSpec::new("boom")
+                .node(NodeSpec::new("ok", 100), |_w, _r| {})
+                .node(NodeSpec::new("bad", 100).after("ok"), |_w, _r| {
+                    panic!("node body failure")
+                })
+                .node(NodeSpec::new("child", 100).after("bad"), |_w, _r| {})
+        };
+        // join: statuses instead of a resumed panic
+        let h = e.submit_graph(make_spec()).unwrap();
+        let report = h.join();
+        assert_eq!(report.status("ok"), Some(NodeStatus::Completed));
+        assert_eq!(report.status("bad"), Some(NodeStatus::Failed));
+        assert_eq!(report.status("child"), Some(NodeStatus::Cancelled));
+        assert!(report.node("child").unwrap().report.is_none());
+        // wait: resumes the panic
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            e.run_graph(make_spec()).unwrap();
+        }));
+        assert!(result.is_err(), "wait must resume the node panic");
+        // pool survives for subsequent work
+        let r = e.run(super::super::JobSpec::new(1_000), |_w, _r| {});
+        assert_eq!(r.total_items(), 1_000);
+    }
+
+    #[test]
+    fn submit_graph_handle_runs_detached() {
+        let e = exec();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let spec = GraphSpec::new("owned")
+            .node(NodeSpec::new("a", 2_000), move |_w, r| {
+                c.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        let h = e.submit_graph(spec).unwrap();
+        assert_eq!(h.name(), "owned");
+        let report = h.wait();
+        assert!(report.all_completed());
+        assert_eq!(count.load(Ordering::Relaxed), 2_000);
+        assert!(report.serial_time() > 0.0);
+    }
+}

@@ -17,12 +17,32 @@
 //!
 //! Real-thread execution goes through the persistent [`Executor`]
 //! (mirroring DAPHNE's resident worker pool, Fig. 2): threads are
-//! spawned **once per topology** and parked between jobs, and callers
-//! submit work as jobs — [`Executor::submit`] returns a [`JobHandle`];
-//! `handle.wait()` yields the [`SchedReport`]. Every job carries its own
-//! [`SchedConfig`](crate::config::SchedConfig), so one resident pool
-//! runs (or multiplexes, concurrently) STATIC and GSS jobs over the
-//! same workers; each job gets a job-scoped [`TaskSource`].
+//! spawned **once per topology** and parked between jobs. The
+//! submission surface has two levels:
+//!
+//! 1. **Jobs** — one scheduled parallel region. [`Executor::submit`]
+//!    returns a [`JobHandle`]; `handle.wait()` yields the
+//!    [`SchedReport`]. Every job carries its own
+//!    [`SchedConfig`](crate::config::SchedConfig), so one resident pool
+//!    runs (or multiplexes, concurrently) STATIC and GSS jobs over the
+//!    same workers; each job gets a job-scoped [`TaskSource`].
+//! 2. **Task graphs** ([`graph`]) — a [`GraphSpec`] of named
+//!    [`NodeSpec`]s with explicit `after(...)` dependency edges,
+//!    submitted via [`Executor::submit_graph`] (owned bodies, returns a
+//!    [`GraphHandle`]) or [`Executor::run_graph`] (borrowed bodies,
+//!    blocks). The executor dispatches a node the moment its in-edges
+//!    complete — a completion hook on each node's job enqueues the
+//!    dependents that became ready, so independent branches overlap on
+//!    the same workers with no coordinator thread. Cyclic specs are
+//!    rejected as [`GraphError`]s up front; a node panic fails that
+//!    node, cancels its transitive dependents, and leaves independent
+//!    branches running.
+//!
+//! Pipelines ([`crate::vee::Pipeline`]) are sugar over level 2: a
+//! linear `stage(...)` chain reproduces barrier-per-stage semantics
+//! through dependency edges, `stage_after(...)` exposes branching, and
+//! the `graph=barrier|dag` config knob switches a run between serial
+//! stage order and dependency-aware dispatch for A/B comparison.
 //!
 //! The legacy spawn-per-run path survives as deprecated shims in
 //! [`worker`] (`run_once`, `ThreadPool`) layered over a one-shot
@@ -31,6 +51,7 @@
 
 pub mod autotune;
 pub mod executor;
+pub mod graph;
 pub mod metrics;
 pub mod partitioner;
 pub mod queue;
@@ -40,6 +61,10 @@ pub mod victim;
 pub mod worker;
 
 pub use executor::{Executor, JobHandle, JobSpec, Scope};
+pub use graph::{
+    GraphError, GraphHandle, GraphReport, GraphSpec, NodeReport, NodeSpec,
+    NodeStatus,
+};
 pub use metrics::{SchedReport, WorkerStats};
 pub use partitioner::{ChunkCalc, Partitioner, Scheme};
 pub use queue::{QueueLayout, TaskSource};

@@ -52,6 +52,30 @@ impl<'a, T> DisjointMut<'a, T> {
             std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
         }
     }
+
+    /// Shared (read-only) view of `[start, end)`.
+    ///
+    /// Requires `T: Sync` because overlapping shared views may be read
+    /// from several threads at once (a `T` with interior mutability
+    /// that is `Send` but not `Sync`, like `Cell`, would make that a
+    /// data race).
+    ///
+    /// # Safety contract
+    /// Callers must ensure no concurrently-live *mutable* view overlaps
+    /// this range; shared views may overlap each other freely. Task
+    /// graphs get this from dependency ordering — a node that wrote
+    /// through [`DisjointMut::slice_mut`] completes before its
+    /// dependent readers dispatch, so e.g. two independent reduction
+    /// nodes can both read the rows a predecessor standardized.
+    pub fn slice(&self, start: usize, end: usize) -> &[T]
+    where
+        T: Sync,
+    {
+        assert!(start <= end && end <= self.len, "range out of bounds");
+        // SAFETY: bounds checked above; the backing allocation outlives
+        // 'a; no overlapping mutable view per the documented contract.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(start), end - start) }
+    }
 }
 
 #[cfg(test)]
@@ -78,6 +102,22 @@ mod tests {
             });
         }
         assert!(v.iter().enumerate().all(|(i, &x)| x == i));
+    }
+
+    #[test]
+    fn concurrent_shared_reads_after_writes() {
+        let mut v: Vec<usize> = (0..1000).collect();
+        let d = DisjointMut::new(&mut v);
+        let sums: Vec<usize> = std::thread::scope(|s| {
+            // overlapping shared views from several threads are fine
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| d.slice(0, 1000).iter().sum::<usize>()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for sum in sums {
+            assert_eq!(sum, 499_500);
+        }
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //! spawned once when the engine is created and parked between operators
 //! — every [`Vee::execute`] call submits a job to the resident pool
 //! instead of respawning OS threads per stage (the seed behaviour). A
-//! pipeline is a sequence of [`Stage`]s with a barrier between stages
-//! (each vectorized operator in DAPHNE is one scheduled parallel
-//! region); per-stage [`SchedReport`]s feed the evaluation harness.
+//! pipeline is a set of [`Stage`]s connected by dependency edges; in
+//! the default `graph=dag` mode it is submitted as one task graph
+//! ([`Executor::run_graph`]) so independent stages overlap, while
+//! `graph=barrier` ([`GraphMode::Barrier`]) serializes the stages with
+//! a full barrier between them for A/B comparison. Per-stage
+//! [`SchedReport`]s feed the evaluation harness either way.
 //!
 //! Cloning a `Vee` is cheap and **shares** the pool (`Arc`), and
 //! [`Vee::with_config`] derives an engine with different scheduling on
@@ -21,7 +24,7 @@ pub use pipeline::{Pipeline, PipelineReport, Stage};
 
 use std::sync::{Arc, OnceLock};
 
-use crate::config::{ExecutorMode, SchedConfig};
+use crate::config::{ExecutorMode, GraphMode, SchedConfig};
 use crate::sched::executor::{Executor, JobSpec};
 use crate::sched::{SchedReport, TaskRange};
 use crate::topology::Topology;
@@ -35,6 +38,8 @@ pub struct Vee {
     /// `None` in [`ExecutorMode::Oneshot`] — threads spawn per operator
     /// (the legacy behaviour, kept for A/B comparison).
     executor: Option<Arc<Executor>>,
+    /// How pipelines are dispatched (`graph=barrier|dag`).
+    graph_mode: GraphMode,
 }
 
 impl Vee {
@@ -57,7 +62,25 @@ impl Vee {
             ))),
             ExecutorMode::Oneshot => None,
         };
-        Vee { topo, sched, executor }
+        Vee { topo, sched, executor, graph_mode: GraphMode::default() }
+    }
+
+    /// Derive an engine with a different pipeline dispatch mode (shares
+    /// the pool; `graph=barrier` is the A/B baseline for figures).
+    pub fn with_graph_mode(mut self, mode: GraphMode) -> Self {
+        self.graph_mode = mode;
+        self
+    }
+
+    /// How this engine *actually* dispatches pipelines: dag dispatch
+    /// needs the resident executor, so a one-shot engine always reports
+    /// (and uses) barrier mode regardless of what was configured.
+    pub fn graph_mode(&self) -> GraphMode {
+        if self.executor.is_some() {
+            self.graph_mode
+        } else {
+            GraphMode::Barrier
+        }
     }
 
     /// Engine on the host topology with default (STATIC) scheduling.
@@ -85,6 +108,7 @@ impl Vee {
             topo: Arc::clone(&self.topo),
             sched: Arc::new(sched),
             executor: self.executor.clone(),
+            graph_mode: self.graph_mode,
         }
     }
 
@@ -117,8 +141,10 @@ impl Vee {
         }
     }
 
-    /// Execute a pipeline stage-by-stage with barriers. Stages reuse the
-    /// resident pool — no threads are spawned per stage.
+    /// Execute a pipeline under this engine's [`GraphMode`]: one task
+    /// graph in `dag` mode (independent stages overlap), serial stages
+    /// with full barriers in `barrier` mode. Stages reuse the resident
+    /// pool — no threads are spawned per stage.
     pub fn run_pipeline(&self, pipeline: &Pipeline<'_>) -> PipelineReport {
         pipeline.run(self)
     }
@@ -170,6 +196,23 @@ mod tests {
     }
 
     #[test]
+    fn with_config_preserves_graph_mode() {
+        let base = Vee::new(
+            Topology::symmetric("t", 1, 2, 1.0, 1.0),
+            SchedConfig::default(),
+        )
+        .with_graph_mode(GraphMode::Barrier);
+        assert_eq!(base.graph_mode(), GraphMode::Barrier);
+        let derived = base.with_config(SchedConfig::default());
+        assert_eq!(derived.graph_mode(), GraphMode::Barrier);
+        assert_eq!(
+            Vee::host_default().graph_mode(),
+            GraphMode::Dag,
+            "dag dispatch is the default"
+        );
+    }
+
+    #[test]
     fn oneshot_mode_still_covers_items() {
         let vee = Vee::with_mode(
             Arc::new(Topology::symmetric("t", 1, 2, 1.0, 1.0)),
@@ -177,6 +220,11 @@ mod tests {
             ExecutorMode::Oneshot,
         );
         assert!(vee.executor().is_none());
+        assert_eq!(
+            vee.graph_mode(),
+            GraphMode::Barrier,
+            "a one-shot engine reports the mode it actually uses"
+        );
         let count = AtomicUsize::new(0);
         let report = vee.execute(999, |_w, r| {
             count.fetch_add(r.len(), Ordering::Relaxed);

@@ -1,17 +1,34 @@
-//! Pipelines: named sequences of vectorized operators with barriers.
+//! Pipelines: named stages of vectorized operators, sugar over the
+//! scheduler's task-graph API ([`crate::sched::graph`]).
 //!
-//! [`Pipeline::run`] submits one job per stage to the engine's resident
-//! executor and waits between stages (the barrier); worker threads are
-//! *not* respawned per stage.
+//! [`Pipeline::stage`] chains each stage after the previous one — a
+//! linear pipeline reproduces the classic barrier-per-stage semantics
+//! as dependency edges. [`Pipeline::stage_after`] states dependencies
+//! explicitly, so independent stages (e.g. two reductions over the same
+//! standardized matrix) overlap on the engine's resident pool.
+//!
+//! [`Pipeline::run`] submits the whole pipeline as one
+//! [`GraphSpec`](crate::sched::GraphSpec) via `Executor::run_graph`
+//! when the engine is in `graph=dag` mode; in `graph=barrier` mode (or
+//! on a one-shot engine) it serializes the stages in dependency order
+//! with a full barrier between them, which is the A/B baseline for the
+//! figures. Worker threads are never respawned per stage either way.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use super::Vee;
+use crate::config::GraphMode;
+use crate::sched::graph::{toposort, GraphError, GraphSpec, NodeSpec};
 use crate::sched::{SchedReport, TaskRange};
 
-/// One vectorized operator: a name, an item count, and a body executed
-/// over task ranges.
+/// One vectorized operator: a name, an item count, the names of the
+/// stages it depends on, and a body executed over task ranges.
 pub struct Stage<'a> {
     pub name: String,
     pub items: usize,
+    /// Stages that must complete first (empty = pipeline root).
+    pub after: Vec<String>,
     #[allow(clippy::type_complexity)]
     pub body: Box<dyn Fn(usize, TaskRange) + Send + Sync + 'a>,
 }
@@ -21,11 +38,16 @@ impl<'a> Stage<'a> {
     where
         F: Fn(usize, TaskRange) + Send + Sync + 'a,
     {
-        Stage { name: name.to_string(), items, body: Box::new(body) }
+        Stage {
+            name: name.to_string(),
+            items,
+            after: Vec::new(),
+            body: Box::new(body),
+        }
     }
 }
 
-/// A sequence of stages (barrier between each).
+/// A named set of stages connected by dependency edges.
 #[derive(Default)]
 pub struct Pipeline<'a> {
     pub name: String,
@@ -37,33 +59,156 @@ impl<'a> Pipeline<'a> {
         Pipeline { name: name.to_string(), stages: Vec::new() }
     }
 
+    /// Append a stage that runs after every *open branch* — each stage
+    /// added so far that no other stage depends on yet. In a linear
+    /// chain that is exactly the previously added stage (the classic
+    /// barrier chain); after [`Pipeline::stage_after`] branches, a
+    /// plain `stage` is a join of all of them, never a silent
+    /// attachment to one arbitrary branch.
+    ///
+    /// Stage names are identity in the graph API: adding two stages
+    /// with the same name makes the pipeline invalid (an error from
+    /// [`Pipeline::try_run`], a panic from [`Pipeline::run`]).
     pub fn stage<F>(mut self, name: &str, items: usize, body: F) -> Self
     where
         F: Fn(usize, TaskRange) + Send + Sync + 'a,
     {
-        self.stages.push(Stage::new(name, items, body));
+        let mut stage = Stage::new(name, items, body);
+        stage.after = {
+            let depended: std::collections::HashSet<&str> = self
+                .stages
+                .iter()
+                .flat_map(|s| s.after.iter().map(String::as_str))
+                .collect();
+            self.stages
+                .iter()
+                .map(|s| s.name.as_str())
+                .filter(|n| !depended.contains(n))
+                .map(str::to_string)
+                .collect()
+        };
+        self.stages.push(stage);
         self
     }
 
+    /// Append a stage with explicit dependencies (`after` empty = a
+    /// root that can start immediately). Stages whose dependency sets
+    /// don't order them relative to each other run concurrently on the
+    /// engine's pool in `graph=dag` mode.
+    pub fn stage_after<F>(
+        mut self,
+        name: &str,
+        items: usize,
+        after: &[&str],
+        body: F,
+    ) -> Self
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'a,
+    {
+        let mut stage = Stage::new(name, items, body);
+        stage.after = after.iter().map(|s| s.to_string()).collect();
+        self.stages.push(stage);
+        self
+    }
+
+    /// Execute the pipeline on the engine; panics on an invalid stage
+    /// graph (cycle, unknown or duplicate stage name) — see
+    /// [`Pipeline::try_run`] for the fallible form. A stage-body panic
+    /// is resumed on this thread.
     pub fn run(&self, vee: &Vee) -> PipelineReport {
-        let mut reports = Vec::with_capacity(self.stages.len());
-        for stage in &self.stages {
-            let report = vee.execute(stage.items, &stage.body);
-            reports.push((stage.name.clone(), report));
+        self.try_run(vee)
+            .unwrap_or_else(|e| panic!("pipeline '{}': {e}", self.name))
+    }
+
+    /// Execute the pipeline, reporting invalid stage graphs as
+    /// [`GraphError`]s instead of panicking.
+    pub fn try_run(&self, vee: &Vee) -> Result<PipelineReport, GraphError> {
+        match vee.executor() {
+            Some(exec) if vee.graph_mode() == GraphMode::Dag => {
+                let mut spec = GraphSpec::new(&self.name);
+                for stage in &self.stages {
+                    let body = &stage.body;
+                    let node = NodeSpec::new(&stage.name, stage.items)
+                        .with_shared_config(Arc::clone(&vee.sched))
+                        .after_all(stage.after.iter().map(String::as_str));
+                    spec.add(node, move |w, r| body(w, r));
+                }
+                let graph = exec.run_graph(spec)?;
+                let stages = graph
+                    .nodes
+                    .into_iter()
+                    .map(|n| {
+                        let report = n
+                            .report
+                            .expect("run_graph resumes panics, so every node completed");
+                        (n.name, report)
+                    })
+                    .collect();
+                Ok(PipelineReport {
+                    pipeline: self.name.clone(),
+                    stages,
+                    wall_time: graph.makespan,
+                })
+            }
+            _ => {
+                // Barrier mode (or a one-shot engine): serialize the
+                // stages in dependency order — a full barrier between
+                // consecutive stages, validated by the same toposort
+                // that guards the dag path.
+                let meta: Vec<(String, Vec<String>)> = self
+                    .stages
+                    .iter()
+                    .map(|s| (s.name.clone(), s.after.clone()))
+                    .collect();
+                let order = toposort(&meta)?.order;
+                let t0 = Instant::now();
+                let mut reports: Vec<Option<SchedReport>> =
+                    (0..self.stages.len()).map(|_| None).collect();
+                for idx in order {
+                    let stage = &self.stages[idx];
+                    reports[idx] = Some(vee.execute(stage.items, &stage.body));
+                }
+                let wall_time = t0.elapsed().as_secs_f64();
+                let stages = self
+                    .stages
+                    .iter()
+                    .zip(reports)
+                    .map(|(s, r)| {
+                        (s.name.clone(), r.expect("every stage executed"))
+                    })
+                    .collect();
+                Ok(PipelineReport {
+                    pipeline: self.name.clone(),
+                    stages,
+                    wall_time,
+                })
+            }
         }
-        PipelineReport { pipeline: self.name.clone(), stages: reports }
     }
 }
 
-/// Per-stage scheduling reports for one pipeline run.
+/// Per-stage scheduling reports for one pipeline run (stage insertion
+/// order), plus the measured wall-clock of the whole run.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub pipeline: String,
     pub stages: Vec<(String, SchedReport)>,
+    /// Measured wall-clock seconds for the whole pipeline.
+    pub wall_time: f64,
 }
 
 impl PipelineReport {
+    /// Wall-clock time of the run. (Formerly the sum of per-stage
+    /// makespans, which over-reports once stages overlap; that sum is
+    /// now [`PipelineReport::serial_time`].)
     pub fn total_time(&self) -> f64 {
+        self.wall_time
+    }
+
+    /// Sum of per-stage makespans — what a full barrier after every
+    /// stage would cost; `serial_time() / total_time()` estimates the
+    /// overlap win of dag dispatch.
+    pub fn serial_time(&self) -> f64 {
         self.stages.iter().map(|(_, r)| r.makespan).sum()
     }
 
@@ -75,10 +220,21 @@ impl PipelineReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SchedConfig;
+    use crate::topology::Topology;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn barrier_vee() -> Vee {
+        Vee::new(
+            Topology::symmetric("t", 1, 4, 1.0, 1.0),
+            SchedConfig::default(),
+        )
+        .with_graph_mode(GraphMode::Barrier)
+    }
 
     #[test]
     fn stages_run_in_order_with_barriers() {
+        // linear chain through the graph API preserves barrier semantics
         let vee = Vee::host_default();
         let a_done = AtomicUsize::new(0);
         let saw_a_complete = AtomicUsize::new(1);
@@ -98,5 +254,131 @@ mod tests {
         assert_eq!(report.stage("a").unwrap().total_items(), 1000);
         assert_eq!(report.stage("b").unwrap().total_items(), 500);
         assert!(report.total_time() > 0.0);
+        assert!(report.serial_time() > 0.0);
+    }
+
+    #[test]
+    fn branching_pipeline_respects_dependencies() {
+        let vee = Vee::host_default();
+        let a_done = AtomicUsize::new(0);
+        let deps_ok = AtomicUsize::new(1);
+        let b_done = AtomicUsize::new(0);
+        let c_done = AtomicUsize::new(0);
+        let pipeline = Pipeline::new("diamond")
+            .stage("a", 400, |_w, r| {
+                a_done.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .stage_after("b", 200, &["a"], |_w, r| {
+                if a_done.load(Ordering::SeqCst) != 400 {
+                    deps_ok.store(0, Ordering::SeqCst);
+                }
+                b_done.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .stage_after("c", 300, &["a"], |_w, r| {
+                if a_done.load(Ordering::SeqCst) != 400 {
+                    deps_ok.store(0, Ordering::SeqCst);
+                }
+                c_done.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .stage_after("d", 100, &["b", "c"], |_w, _r| {
+                if b_done.load(Ordering::SeqCst) != 200
+                    || c_done.load(Ordering::SeqCst) != 300
+                {
+                    deps_ok.store(0, Ordering::SeqCst);
+                }
+            });
+        let report = pipeline.run(&vee);
+        assert_eq!(deps_ok.load(Ordering::SeqCst), 1);
+        assert_eq!(report.stages.len(), 4);
+        // report keeps insertion order even though b/c may run either way
+        let names: Vec<&str> =
+            report.stages.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn plain_stage_after_branches_joins_all_of_them() {
+        // a → {b, c} (stage_after), then a plain stage() — it must wait
+        // for BOTH open branches, not silently chain onto the last one.
+        let vee = Vee::host_default();
+        let b_done = AtomicUsize::new(0);
+        let c_done = AtomicUsize::new(0);
+        let join_ok = AtomicUsize::new(1);
+        let pipeline = Pipeline::new("join")
+            .stage("a", 100, |_w, _r| {})
+            .stage_after("b", 250, &["a"], |_w, r| {
+                b_done.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .stage_after("c", 350, &["a"], |_w, r| {
+                c_done.fetch_add(r.len(), Ordering::SeqCst);
+            })
+            .stage("join", 50, |_w, _r| {
+                if b_done.load(Ordering::SeqCst) != 250
+                    || c_done.load(Ordering::SeqCst) != 350
+                {
+                    join_ok.store(0, Ordering::SeqCst);
+                }
+            });
+        let join_deps = &pipeline.stages.last().unwrap().after;
+        assert!(join_deps.contains(&"b".to_string()));
+        assert!(join_deps.contains(&"c".to_string()));
+        assert!(!join_deps.contains(&"a".to_string()), "a is not a leaf");
+        pipeline.run(&vee);
+        assert_eq!(join_ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn duplicate_stage_names_are_rejected() {
+        let pipeline = Pipeline::new("dup")
+            .stage("step", 10, |_w, _r| {})
+            .stage_after("step", 10, &[], |_w, _r| {});
+        assert!(matches!(
+            pipeline.try_run(&Vee::host_default()),
+            Err(GraphError::DuplicateNode(_))
+        ));
+        assert!(matches!(
+            pipeline.try_run(&barrier_vee()),
+            Err(GraphError::DuplicateNode(_))
+        ));
+    }
+
+    #[test]
+    fn barrier_mode_matches_dag_results() {
+        let run = |vee: &Vee| {
+            let count = AtomicUsize::new(0);
+            let pipeline = Pipeline::new("p")
+                .stage("x", 700, |_w, r| {
+                    count.fetch_add(r.len(), Ordering::Relaxed);
+                })
+                .stage_after("y", 300, &["x"], |_w, r| {
+                    count.fetch_add(r.len(), Ordering::Relaxed);
+                });
+            let report = pipeline.run(vee);
+            (count.load(Ordering::Relaxed), report.stages.len())
+        };
+        assert_eq!(run(&Vee::host_default()), (1000, 2));
+        assert_eq!(run(&barrier_vee()), (1000, 2));
+    }
+
+    #[test]
+    fn cyclic_pipeline_is_an_error_in_both_modes() {
+        let pipeline = Pipeline::new("bad")
+            .stage_after("a", 10, &["b"], |_w, _r| {})
+            .stage_after("b", 10, &["a"], |_w, _r| {});
+        assert!(matches!(
+            pipeline.try_run(&Vee::host_default()),
+            Err(GraphError::Cycle(_))
+        ));
+        assert!(matches!(
+            pipeline.try_run(&barrier_vee()),
+            Err(GraphError::Cycle(_))
+        ));
+    }
+
+    #[test]
+    fn empty_pipeline_runs() {
+        let report = Pipeline::new("empty").run(&Vee::host_default());
+        assert!(report.stages.is_empty());
+        assert_eq!(report.serial_time(), 0.0);
     }
 }
