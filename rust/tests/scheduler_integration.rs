@@ -1,14 +1,22 @@
 //! Cross-module integration: the full scheduler matrix (11 schemes × 4
-//! layouts × 4 victims) drives both evaluated apps correctly, and the
-//! DES reproduces the paper's qualitative orderings at small scale.
+//! layouts × 4 victims) drives both evaluated apps correctly, the
+//! task-graph API enforces exactly its declared dependencies (overlap,
+//! cycle rejection, failure propagation, partitioning invariants under
+//! concurrent nodes), and the DES reproduces the paper's qualitative
+//! orderings at small scale.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use daphne_sched::apps::{cc, linreg};
-use daphne_sched::config::SchedConfig;
+use daphne_sched::config::{GraphMode, SchedConfig};
 use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
-use daphne_sched::sched::{Executor, JobSpec, QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::sched::graph::GraphSpec as TaskGraph;
+use daphne_sched::sched::{
+    Executor, GraphError, JobSpec, NodeSpec, NodeStatus, QueueLayout, Scheme,
+    VictimStrategy,
+};
 use daphne_sched::sim::{self, CostModel, Workload};
 use daphne_sched::topology::Topology;
 use daphne_sched::vee::Vee;
@@ -97,6 +105,234 @@ fn two_concurrent_jobs_cover_all_items_on_one_pool() {
         assert_exactly_once(&a, &format!("{layout:?} concurrent job a"));
         assert_exactly_once(&b, &format!("{layout:?} concurrent job b"));
     }
+}
+
+/// Bounded spin-wait on a flag; true if it was set within the deadline.
+fn wait_for(flag: &AtomicBool) -> bool {
+    let t0 = Instant::now();
+    while !flag.load(Ordering::Acquire) {
+        if t0.elapsed() > Duration::from_secs(20) {
+            return false;
+        }
+        std::hint::spin_loop();
+    }
+    true
+}
+
+/// Acceptance: a diamond A → {B, C} → D runs B and C *concurrently* on
+/// one resident pool — each branch's body observes the other branch
+/// in-flight — while A-before-{B,C} and {B,C}-before-D ordering holds.
+#[test]
+fn diamond_graph_overlaps_independent_branches_on_one_pool() {
+    let exec = Executor::new(
+        Arc::new(Topology::symmetric("t4", 2, 2, 1.5, 1.0)),
+        Arc::new(SchedConfig::default()),
+    );
+    let a_items = AtomicUsize::new(0);
+    let order_ok = AtomicBool::new(true);
+    let b_in = AtomicBool::new(false);
+    let c_in = AtomicBool::new(false);
+    let overlap = AtomicBool::new(true);
+    let b_done = AtomicBool::new(false);
+    let c_done = AtomicBool::new(false);
+    let spec = TaskGraph::new("diamond")
+        .node(NodeSpec::new("a", 1_000), |_w, r| {
+            a_items.fetch_add(r.len(), Ordering::SeqCst);
+        })
+        .node(NodeSpec::new("b", 1).after("a"), |_w, _r| {
+            if a_items.load(Ordering::SeqCst) != 1_000 {
+                order_ok.store(false, Ordering::SeqCst);
+            }
+            b_in.store(true, Ordering::Release);
+            // hold this worker inside b until c is also in flight
+            if !wait_for(&c_in) {
+                overlap.store(false, Ordering::SeqCst);
+            }
+            b_done.store(true, Ordering::Release);
+        })
+        .node(NodeSpec::new("c", 1).after("a"), |_w, _r| {
+            if a_items.load(Ordering::SeqCst) != 1_000 {
+                order_ok.store(false, Ordering::SeqCst);
+            }
+            c_in.store(true, Ordering::Release);
+            if !wait_for(&b_in) {
+                overlap.store(false, Ordering::SeqCst);
+            }
+            c_done.store(true, Ordering::Release);
+        })
+        .node(NodeSpec::new("d", 200).after("b").after("c"), |_w, _r| {
+            if !b_done.load(Ordering::Acquire) || !c_done.load(Ordering::Acquire)
+            {
+                order_ok.store(false, Ordering::SeqCst);
+            }
+        });
+    let report = exec.run_graph(spec).expect("diamond is acyclic");
+    assert!(order_ok.load(Ordering::SeqCst), "dependency order violated");
+    assert!(
+        overlap.load(Ordering::SeqCst),
+        "b and c never overlapped on the pool"
+    );
+    assert!(report.all_completed());
+    assert_eq!(report.report("a").unwrap().total_items(), 1_000);
+    assert_eq!(report.report("d").unwrap().total_items(), 200);
+    assert_eq!(exec.jobs_completed(), 4);
+}
+
+/// Acceptance: cyclic specs are rejected with an error up front — no
+/// node dispatches and nothing deadlocks.
+#[test]
+fn cyclic_graph_specs_are_rejected_not_deadlocked() {
+    let exec = Executor::new(
+        Arc::new(Topology::symmetric("t2", 1, 2, 1.0, 1.0)),
+        Arc::new(SchedConfig::default()),
+    );
+    let three_cycle = TaskGraph::new("cycle3")
+        .node(NodeSpec::new("a", 10).after("c"), |_w, _r| {})
+        .node(NodeSpec::new("b", 10).after("a"), |_w, _r| {})
+        .node(NodeSpec::new("c", 10).after("b"), |_w, _r| {});
+    match exec.submit_graph(three_cycle) {
+        Err(GraphError::Cycle(names)) => assert_eq!(names.len(), 3),
+        other => panic!("expected cycle rejection, got {other:?}"),
+    }
+    // a cycle hanging off an acyclic prefix is still rejected whole
+    let tail_cycle = TaskGraph::new("tail")
+        .node(NodeSpec::new("root", 10), |_w, _r| {})
+        .node(NodeSpec::new("x", 10).after("root").after("y"), |_w, _r| {})
+        .node(NodeSpec::new("y", 10).after("x"), |_w, _r| {});
+    assert!(matches!(
+        exec.submit_graph(tail_cycle),
+        Err(GraphError::Cycle(_))
+    ));
+    assert_eq!(exec.jobs_completed(), 0, "rejected specs dispatch nothing");
+    // and the pool still works
+    assert_eq!(
+        exec.run(JobSpec::new(500), |_w, _r| {}).total_items(),
+        500
+    );
+}
+
+/// A panicking node fails, its transitive dependents cancel, and the
+/// independent branch (plus the pool itself) keeps working.
+#[test]
+fn panic_in_node_cancels_dependents_but_not_independent_branches() {
+    let exec = Executor::new(
+        Arc::new(Topology::symmetric("t4", 2, 2, 1.5, 1.0)),
+        Arc::new(SchedConfig::default()),
+    );
+    let e_ran = Arc::new(AtomicUsize::new(0));
+    let e_ran2 = Arc::clone(&e_ran);
+    let spec = TaskGraph::new("partial-failure")
+        .node(NodeSpec::new("a", 100), |_w, _r| {})
+        .node(NodeSpec::new("bad", 100).after("a"), |_w, r| {
+            if r.start == 0 {
+                panic!("injected node failure");
+            }
+        })
+        .node(NodeSpec::new("child", 100).after("bad"), |_w, _r| {})
+        .node(
+            NodeSpec::new("grandchild", 100).after("child"),
+            |_w, _r| {},
+        )
+        .node(NodeSpec::new("c", 100).after("a"), |_w, _r| {})
+        .node(NodeSpec::new("e", 100).after("c"), move |_w, r| {
+            e_ran2.fetch_add(r.len(), Ordering::Relaxed);
+        });
+    let report = exec.submit_graph(spec).unwrap().join();
+    assert_eq!(report.status("a"), Some(NodeStatus::Completed));
+    assert_eq!(report.status("bad"), Some(NodeStatus::Failed));
+    assert_eq!(report.status("child"), Some(NodeStatus::Cancelled));
+    assert_eq!(report.status("grandchild"), Some(NodeStatus::Cancelled));
+    assert_eq!(report.status("c"), Some(NodeStatus::Completed));
+    assert_eq!(report.status("e"), Some(NodeStatus::Completed));
+    assert_eq!(e_ran.load(Ordering::Relaxed), 100);
+    assert!(!report.all_completed());
+    // cancelled nodes never dispatched
+    assert!(report.node("child").unwrap().report.is_none());
+    // the pool survives the abort
+    assert_eq!(
+        exec.run(JobSpec::new(2_000), |_w, _r| {}).total_items(),
+        2_000
+    );
+}
+
+/// Partitioning invariant while two independent graph nodes run
+/// concurrently, for every queue layout: each node's items are handed
+/// out exactly once, and per-node config overrides take effect.
+#[test]
+fn graph_nodes_preserve_partitioning_invariants_on_all_layouts() {
+    for layout in ALL_LAYOUTS {
+        let cfg = SchedConfig::default()
+            .with_scheme(Scheme::Fac2)
+            .with_layout(layout)
+            .with_victim(VictimStrategy::SeqPri);
+        let exec = Executor::new(
+            Arc::new(Topology::symmetric("t4", 2, 2, 1.5, 1.0)),
+            Arc::new(cfg.clone()),
+        );
+        let a = hit_counters(1_000);
+        let b = hit_counters(8_000);
+        let c = hit_counters(5_431);
+        let d = hit_counters(900);
+        let spec = TaskGraph::new("invariants")
+            .node(NodeSpec::new("a", a.len()), |_w, r| {
+                for i in r.iter() {
+                    a[i].fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .node(
+                NodeSpec::new("b", b.len()).after("a").with_config(
+                    cfg.clone().with_scheme(Scheme::Gss),
+                ),
+                |_w, r| {
+                    for i in r.iter() {
+                        b[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            )
+            .node(NodeSpec::new("c", c.len()).after("a"), |_w, r| {
+                for i in r.iter() {
+                    c[i].fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .node(
+                NodeSpec::new("d", d.len()).after("b").after("c"),
+                |_w, r| {
+                    for i in r.iter() {
+                        d[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+        let report = exec.run_graph(spec).expect("acyclic");
+        assert!(report.all_completed(), "{layout:?}");
+        for (hits, name) in [(&a, "a"), (&b, "b"), (&c, "c"), (&d, "d")] {
+            assert_exactly_once(hits, &format!("{layout:?} node {name}"));
+            assert_eq!(
+                report.report(name).unwrap().total_items(),
+                hits.len(),
+                "{layout:?} node {name}"
+            );
+        }
+        assert_eq!(report.report("b").unwrap().scheme, "GSS", "{layout:?}");
+        assert_eq!(report.report("c").unwrap().scheme, "FAC2", "{layout:?}");
+    }
+}
+
+/// Acceptance: a linear `Pipeline::stage` chain preserves the classic
+/// barrier semantics through the graph API, and both dispatch modes
+/// agree with each other on a full app run.
+#[test]
+fn linear_pipelines_and_apps_agree_across_graph_modes() {
+    let g = amazon_like(&GraphSpec::small(400, 2)).symmetrize();
+    let topo = Topology::symmetric("t4", 1, 4, 1.0, 1.0);
+    let dag = Vee::new(topo.clone(), SchedConfig::default());
+    let barrier = Vee::new(topo, SchedConfig::default())
+        .with_graph_mode(GraphMode::Barrier);
+    assert_eq!(dag.graph_mode(), GraphMode::Dag);
+    let r_dag = cc::run_with(&dag, &g, 100);
+    let r_bar = cc::run_with(&barrier, &g, 100);
+    assert_eq!(r_dag.labels, r_bar.labels);
+    assert_eq!(r_dag.iterations, r_bar.iterations);
+    assert_eq!(r_dag.components, r_bar.components);
 }
 
 /// Two full app pipelines submitted concurrently from separate threads
