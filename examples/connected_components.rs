@@ -10,7 +10,7 @@
 use daphne_sched::apps::cc;
 use daphne_sched::bench::AppCosts;
 use daphne_sched::config::SchedConfig;
-use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
+use daphne_sched::graph::{amazon_like, scale_up, SnapGraph};
 use daphne_sched::sched::Scheme;
 use daphne_sched::sim::CostModel;
 use daphne_sched::topology::Topology;
@@ -22,7 +22,7 @@ fn main() {
         args.next().and_then(|s| s.parse().ok()).unwrap_or(50_000);
     let scale: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(1);
 
-    let g = amazon_like(&GraphSpec::small(nodes, 1)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(nodes, 1)).symmetrize();
     let g = if scale > 1 { scale_up(&g, scale) } else { g };
     println!(
         "graph: {} nodes / {} edges; host has {} cores\n",

@@ -11,14 +11,14 @@ use std::net::TcpListener;
 use daphne_sched::apps::cc;
 use daphne_sched::config::SchedConfig;
 use daphne_sched::coordinator::{worker, Leader};
-use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::graph::{amazon_like, SnapGraph};
 use daphne_sched::sched::Scheme;
 use daphne_sched::topology::Topology;
 use daphne_sched::vee::Vee;
 
 fn main() {
     let n_workers = 4;
-    let g = amazon_like(&GraphSpec::small(30_000, 9)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(30_000, 9)).symmetrize();
     println!(
         "graph: {} nodes / {} edges; {} distributed workers",
         g.rows,

@@ -24,7 +24,7 @@ use daphne_sched::bench::{figures, FigureId, FigureParams};
 use daphne_sched::config::SchedConfig;
 use daphne_sched::coordinator::{worker, Leader};
 use daphne_sched::dsl;
-use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::graph::{amazon_like, SnapGraph};
 use daphne_sched::runtime::{DeviceService, Runtime};
 use daphne_sched::sched::Scheme;
 use daphne_sched::topology::Topology;
@@ -38,7 +38,7 @@ fn main() {
     // 1. data substrate
     // ---------------------------------------------------------------
     let nodes = 50_000;
-    let g = amazon_like(&GraphSpec::small(nodes, 1)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(nodes, 1)).symmetrize();
     let costs = g.row_costs();
     println!(
         "[1] graph: {} nodes, {} edges, density {:.5}%, row-nnz mean {:.1} \
@@ -88,7 +88,7 @@ fn main() {
             service.manifest.stages.len()
         );
         // CC through the Pallas artifact on a small graph
-        let gs = amazon_like(&GraphSpec::small(600, 3)).symmetrize();
+        let gs = amazon_like(&SnapGraph::small(600, 3)).symmetrize();
         let sched = SchedConfig::default().with_scheme(Scheme::Gss);
         let native = cc::run_native(&gs, &host, &sched, 100);
         let pjrt = cc::run_pjrt(&gs, &client, &service.manifest, &host, &sched, 100)

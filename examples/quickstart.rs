@@ -12,7 +12,7 @@
 
 use daphne_sched::apps::cc;
 use daphne_sched::config::SchedConfig;
-use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::graph::{amazon_like, SnapGraph};
 use daphne_sched::sched::{Executor, JobSpec, QueueLayout, Scheme, VictimStrategy};
 use daphne_sched::topology::Topology;
 use daphne_sched::vee::Vee;
@@ -66,7 +66,7 @@ fn main() {
     // 2. a real workload through the VEE -------------------------------
     // connected components over a co-purchase-like graph; the engine
     // fronts one persistent executor, every propagate iteration is a job
-    let graph = amazon_like(&GraphSpec::small(20_000, 7)).symmetrize();
+    let graph = amazon_like(&SnapGraph::small(20_000, 7)).symmetrize();
     println!(
         "graph: {} nodes, {} edges ({:.4}% dense)",
         graph.rows,

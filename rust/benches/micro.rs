@@ -16,26 +16,29 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use daphne_sched::config::SchedConfig;
-use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::graph::{amazon_like, SnapGraph};
 use daphne_sched::matrix::ops;
 use daphne_sched::sched::executor::{Executor, JobSpec};
-use daphne_sched::sched::graph::{GraphSpec as TaskGraph, NodeSpec};
+use daphne_sched::sched::graph::{GraphSpec, NodeSpec};
 use daphne_sched::sched::TaskRange;
 use daphne_sched::sched::partitioner::{Partitioner, PartitionerOptions};
 use daphne_sched::sched::queue::{
     build_source, CentralAtomic, CentralLocked, QueueLayout, TaskSource,
 };
+use daphne_sched::config::GraphMode;
 use daphne_sched::sched::{Scheme, VictimStrategy};
-use daphne_sched::sim::{simulate, CostModel, Workload};
+use daphne_sched::sim::{replay, simulate, CostModel, GraphShape, Workload};
 use daphne_sched::topology::Topology;
 use daphne_sched::util::fmt_duration;
 
-/// The seed's behaviour: spawn + join a fresh pool for every stage.
-#[allow(deprecated)]
+/// The seed's behaviour: spawn + join a fresh pool for every stage
+/// (construct executor → run one job → drop, exactly what the
+/// deprecated `worker::run_once` shim does).
 fn spawn_per_stage(topo: &Topology, cfg: &SchedConfig, items: usize) {
-    daphne_sched::sched::worker::run_once(topo, cfg, items, |_w, r| {
-        std::hint::black_box(r.len());
-    });
+    Executor::new(Arc::new(topo.clone()), Arc::new(cfg.clone()))
+        .run(JobSpec::new(items), |_w, r| {
+            std::hint::black_box(r.len());
+        });
 }
 
 fn bench<F: FnMut() -> usize>(label: &str, mut f: F) {
@@ -155,7 +158,7 @@ fn main() {
         1
     });
     bench("dag (submit_graph, B and C overlap)", || {
-        let diamond = TaskGraph::new("diamond")
+        let diamond = GraphSpec::new("diamond")
             .node(NodeSpec::new("a", half), spin(tiny))
             .node(NodeSpec::new("b", half).after("a"), spin(heavy))
             .node(NodeSpec::new("c", half).after("a"), spin(light))
@@ -171,15 +174,34 @@ fn main() {
     println!("\n== DES event throughput ==");
     let w = Workload::uniform("u", 200_000, 1e-7);
     let costs = CostModel::recorded();
-    bench("simulate(mfsc, central, cascadelake56)", || {
+    bench("simulate(ss, central, broadwell20)", || {
         let cfg = SchedConfig::default().with_scheme(Scheme::Ss);
         let out = simulate(&topo, &cfg, &w, &costs);
         out.acquisitions
     });
     let _ = VictimStrategy::ALL;
 
+    println!("\n== DES graph replay (autotune oracle cost) ==");
+    // One oracle evaluation of graph-level autotuning: the virtual-time
+    // diamond replayed dag vs barrier on the modelled 56-core machine
+    // (branches half the pool wide, as in the figure and tests).
+    let cl56 = Topology::cascadelake56();
+    let shape = GraphShape::unbalanced_diamond(cl56.n_cores() / 2);
+    let sim_cfg = SchedConfig::default();
+    bench("replay(diamond, cascadelake56, dag)", || {
+        let out = replay(&shape, &cl56, &sim_cfg, &costs, GraphMode::Dag)
+            .expect("diamond is acyclic");
+        out.nodes.len()
+    });
+    bench("replay(diamond, cascadelake56, barrier)", || {
+        let out =
+            replay(&shape, &cl56, &sim_cfg, &costs, GraphMode::Barrier)
+                .expect("diamond is acyclic");
+        out.nodes.len()
+    });
+
     println!("\n== native CC propagate kernel ==");
-    let g = amazon_like(&GraphSpec::small(200_000, 1)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(200_000, 1)).symmetrize();
     let ids: Vec<f32> = (0..g.rows).map(|i| (i + 1) as f32).collect();
     let mut out = vec![0f32; g.rows];
     let nnz = g.nnz();

@@ -25,7 +25,7 @@ use crate::config::SchedConfig;
 use crate::matrix::CsrMatrix;
 use crate::runtime::{DeviceClient, Manifest};
 use crate::sched::SchedReport;
-use crate::sim::{self, CostModel, Workload};
+use crate::sim::{self, CostModel, GraphShape, NodeModel, Workload};
 use crate::topology::Topology;
 use crate::util::DisjointMut;
 use crate::vee::{Pipeline, Vee};
@@ -277,6 +277,23 @@ pub fn workload(g: &CsrMatrix, per_row: f64, per_nnz: f64) -> Workload {
     Workload::from_costs("cc_propagate", &costs)
 }
 
+/// One CC loop iteration's real task graph as a cost-described
+/// [`GraphShape`] for virtual-time replay — the same
+/// `propagate → diff` structure [`run_with`] submits per iteration.
+/// `propagate` cost is affine in row nnz ([`workload`]); `diff` is one
+/// label compare per row, costed at the calibrated per-row base.
+pub fn iteration_shape(g: &CsrMatrix, per_row: f64, per_nnz: f64) -> GraphShape {
+    GraphShape::new("cc:iter")
+        .node(NodeModel::new("propagate", workload(g, per_row, per_nnz)))
+        .node(
+            NodeModel::new(
+                "diff",
+                Workload::uniform("cc_diff", g.rows, per_row),
+            )
+            .after("propagate"),
+        )
+}
+
 /// Simulate the full CC run (iterations × one propagate pass) on a
 /// modelled machine. Chunk sequences re-randomize per iteration via the
 /// seed so PSS/RND* average sensibly.
@@ -307,7 +324,7 @@ pub fn simulate_run(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{amazon_like, GraphSpec};
+    use crate::graph::{amazon_like, SnapGraph};
     use crate::matrix::CsrMatrix;
     use crate::sched::{QueueLayout, Scheme, VictimStrategy};
 
@@ -333,7 +350,7 @@ mod tests {
 
     #[test]
     fn connected_graph_single_component() {
-        let g = amazon_like(&GraphSpec::small(300, 3)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(300, 3)).symmetrize();
         let topo = Topology::symmetric("t", 1, 4, 1.0, 1.0);
         let r = run_native(&g, &topo, &SchedConfig::default(), 100);
         assert_eq!(r.components, 1);
@@ -342,7 +359,7 @@ mod tests {
 
     #[test]
     fn all_schemes_agree_on_labels() {
-        let g = amazon_like(&GraphSpec::small(500, 9)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(500, 9)).symmetrize();
         let topo = Topology::symmetric("t", 2, 2, 1.5, 1.0);
         let baseline =
             run_native(&g, &topo, &SchedConfig::default(), 100).labels;
@@ -390,7 +407,7 @@ mod tests {
 
     #[test]
     fn converge_iterations_matches_run() {
-        let g = amazon_like(&GraphSpec::small(200, 4)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(200, 4)).symmetrize();
         let topo = Topology::symmetric("t", 1, 2, 1.0, 1.0);
         let r = run_native(&g, &topo, &SchedConfig::default(), 100);
         assert_eq!(converge_iterations(&g, 100), r.iterations);
@@ -406,8 +423,29 @@ mod tests {
     }
 
     #[test]
+    fn iteration_shape_replays_propagate_then_diff() {
+        use crate::config::GraphMode;
+        let g = amazon_like(&SnapGraph::small(2_000, 5)).symmetrize();
+        let shape = iteration_shape(&g, 1e-8, 5e-9);
+        let topo = Topology::broadwell20();
+        let out = sim::replay(
+            &shape,
+            &topo,
+            &SchedConfig::default(),
+            &CostModel::recorded(),
+            GraphMode::Dag,
+        )
+        .unwrap();
+        let prop = out.node("propagate").unwrap();
+        let diff = out.node("diff").unwrap();
+        assert_eq!(prop.outcome.report.total_items(), g.rows);
+        assert_eq!(diff.outcome.report.total_items(), g.rows);
+        assert_eq!(diff.start, prop.finish, "diff waits for the labels");
+    }
+
+    #[test]
     fn simulate_run_scales_with_iterations() {
-        let g = amazon_like(&GraphSpec::small(2_000, 5)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(2_000, 5)).symmetrize();
         let topo = Topology::broadwell20();
         let cm = CostModel::recorded();
         let sched = SchedConfig::default().with_scheme(Scheme::Mfsc);

@@ -28,7 +28,7 @@ use std::time::Instant;
 use crate::config::SchedConfig;
 use crate::matrix::{ops, DenseMatrix};
 use crate::runtime::{DeviceClient, Manifest};
-use crate::sim::Workload;
+use crate::sim::{GraphShape, NodeModel, Workload};
 use crate::topology::Topology;
 use crate::util::DisjointMut;
 use crate::vee::{Pipeline, PipelineReport, Vee};
@@ -331,6 +331,23 @@ pub fn workload(rows: usize, per_row: f64) -> Workload {
     Workload::uniform("linreg_row", rows, per_row)
 }
 
+/// The training pipeline's real task graph as a cost-described
+/// [`GraphShape`] for virtual-time replay — the same
+/// `colstats → stats → standardize → {syrk, gemv}` structure
+/// [`run_with`] submits to the executor. Per-item costs are uniform
+/// (dense rows) at the calibrated `per_row`; the fused third pass is
+/// split 3:1 between `syrk` (O(d²) per row) and `gemv` (O(d) per row)
+/// so the shape's total cost matches the three full sweeps the figures
+/// model ([`workload`] × 3).
+pub fn graph_shape(rows: usize, per_row: f64) -> GraphShape {
+    GraphShape::new("linreg")
+        .node(NodeModel::uniform("colstats", rows, per_row))
+        .node(NodeModel::uniform("stats", 1, per_row).after("colstats"))
+        .node(NodeModel::uniform("standardize", rows, per_row).after("stats"))
+        .node(NodeModel::uniform("syrk", rows, per_row * 0.75).after("standardize"))
+        .node(NodeModel::uniform("gemv", rows, per_row * 0.25).after("standardize"))
+}
+
 /// Fit quality: RMSE of predictions vs targets on standardized features.
 pub fn rmse(x: &DenseMatrix, y: &[f32], beta: &[f32]) -> f64 {
     let d = x.cols;
@@ -456,6 +473,33 @@ mod tests {
         for (i, (p, q)) in beta_dag.iter().zip(&beta_bar).enumerate() {
             assert!((p - q).abs() < 1e-3, "beta[{i}]: {p} vs {q}");
         }
+    }
+
+    #[test]
+    fn graph_shape_matches_pipeline_structure() {
+        use crate::config::GraphMode;
+        use crate::sim::{self, CostModel};
+        let shape = graph_shape(10_000, 1e-7);
+        assert_eq!(
+            shape.node_names().collect::<Vec<_>>(),
+            vec!["colstats", "stats", "standardize", "syrk", "gemv"]
+        );
+        // total cost = three full row sweeps (+ the tiny stats node)
+        let sweeps = 3.0 * 10_000.0 * 1e-7;
+        assert!((shape.total_cost() - sweeps - 1e-7).abs() < 1e-12);
+        // syrk and gemv overlap in dag replay: gemv (the cheap
+        // reduction) finishes inside syrk's span instead of after it
+        let out = sim::replay(
+            &shape,
+            &Topology::broadwell20(),
+            &SchedConfig::default(),
+            &CostModel::recorded(),
+            GraphMode::Dag,
+        )
+        .unwrap();
+        let (syrk, gemv) = (out.node("syrk").unwrap(), out.node("gemv").unwrap());
+        assert_eq!(syrk.start, gemv.start);
+        assert!(out.makespan() < out.serial_time());
     }
 
     #[test]

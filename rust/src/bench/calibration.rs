@@ -3,7 +3,7 @@
 
 use std::time::Instant;
 
-use crate::graph::{amazon_like, GraphSpec};
+use crate::graph::{amazon_like, SnapGraph};
 use crate::matrix::{ops, DenseMatrix};
 
 /// Per-item cost constants for the two workloads (seconds).
@@ -55,7 +55,7 @@ impl AppCosts {
 /// with different densities (two equations, two unknowns).
 pub fn measure_cc() -> (f64, f64) {
     let run = |out_degree: usize| -> (f64, f64, f64) {
-        let spec = GraphSpec {
+        let spec = SnapGraph {
             nodes: 200_000,
             out_degree,
             copy_prob: 0.7,

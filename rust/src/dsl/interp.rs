@@ -12,7 +12,7 @@ use std::sync::Mutex;
 
 use super::ast::{BinOp, Expr, Program, Stmt};
 use super::value::{apply_rows, broadcast_mode, Value};
-use crate::graph::{amazon_like, scale_up, GraphSpec};
+use crate::graph::{amazon_like, scale_up, SnapGraph};
 use crate::matrix::{ops, DenseMatrix};
 use crate::sched::SchedReport;
 use crate::util::DisjointMut;
@@ -382,7 +382,7 @@ impl Interp {
                     _ => {}
                 }
             }
-            let g = amazon_like(&GraphSpec::small(nodes, seed)).symmetrize();
+            let g = amazon_like(&SnapGraph::small(nodes, seed)).symmetrize();
             let g = if scale > 1 { scale_up(&g, scale) } else { g };
             return Ok(Value::Sparse(Arc::new(g)));
         }
@@ -637,7 +637,7 @@ mod tests {
         use crate::apps::cc;
         use crate::config::SchedConfig;
         use crate::topology::Topology;
-        let g = amazon_like(&GraphSpec::small(400, 3)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(400, 3)).symmetrize();
         let native = cc::run_native(
             &g,
             &Topology::host(),

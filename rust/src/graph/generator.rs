@@ -14,7 +14,7 @@ use crate::util::Rng;
 
 /// Parameters of the synthetic co-purchase graph.
 #[derive(Debug, Clone)]
-pub struct GraphSpec {
+pub struct SnapGraph {
     pub nodes: usize,
     /// Outgoing edges per new node (SNAP Amazon0601 averages ~8.4 per
     /// node; the paper's source set 403,394 nodes / 3,387,388 edges).
@@ -25,11 +25,11 @@ pub struct GraphSpec {
     pub seed: u64,
 }
 
-impl GraphSpec {
+impl SnapGraph {
     /// The SNAP Amazon co-purchase graph at 1/k of its original size
     /// (`amazon_snap_spec(1)` = full 403k-node source set).
     pub fn amazon(scale_down: usize) -> Self {
-        GraphSpec {
+        SnapGraph {
             nodes: 403_394 / scale_down.max(1),
             out_degree: 8,
             copy_prob: 0.7,
@@ -39,12 +39,12 @@ impl GraphSpec {
 
     /// A small spec for tests and quickstarts.
     pub fn small(nodes: usize, seed: u64) -> Self {
-        GraphSpec { nodes, out_degree: 8, copy_prob: 0.7, seed }
+        SnapGraph { nodes, out_degree: 8, copy_prob: 0.7, seed }
     }
 }
 
 /// Generate a directed co-purchase-like graph as CSR.
-pub fn amazon_like(spec: &GraphSpec) -> CsrMatrix {
+pub fn amazon_like(spec: &SnapGraph) -> CsrMatrix {
     let n = spec.nodes.max(2);
     let mut rng = Rng::new(spec.seed);
     let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * spec.out_degree);
@@ -107,16 +107,16 @@ mod tests {
 
     #[test]
     fn deterministic_per_seed() {
-        let a = amazon_like(&GraphSpec::small(500, 7));
-        let b = amazon_like(&GraphSpec::small(500, 7));
+        let a = amazon_like(&SnapGraph::small(500, 7));
+        let b = amazon_like(&SnapGraph::small(500, 7));
         assert_eq!(a, b);
-        let c = amazon_like(&GraphSpec::small(500, 8));
+        let c = amazon_like(&SnapGraph::small(500, 8));
         assert_ne!(a, c);
     }
 
     #[test]
     fn edge_count_close_to_degree_times_nodes() {
-        let g = amazon_like(&GraphSpec::small(2000, 1));
+        let g = amazon_like(&SnapGraph::small(2000, 1));
         let expect = 2000 * 8;
         assert!(
             g.nnz() > expect * 8 / 10 && g.nnz() <= expect,
@@ -130,7 +130,7 @@ mod tests {
         // The scheduling-relevant property: reverse-edge (in-degree)
         // distribution must be skewed — max ≫ mean, like real
         // co-purchase data.
-        let g = amazon_like(&GraphSpec::small(5000, 3)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(5000, 3)).symmetrize();
         let costs = g.row_costs();
         let mean = stats::mean(&costs);
         let max = stats::max(&costs);
@@ -144,7 +144,7 @@ mod tests {
 
     #[test]
     fn no_self_loops() {
-        let g = amazon_like(&GraphSpec::small(1000, 5));
+        let g = amazon_like(&SnapGraph::small(1000, 5));
         for r in 0..g.rows {
             assert!(!g.row(r).contains(&(r as u32)), "self loop at {r}");
         }
@@ -155,7 +155,7 @@ mod tests {
         // The copying process always attaches to existing nodes, so the
         // undirected version is connected — matching the dominant giant
         // component of the real data.
-        let g = amazon_like(&GraphSpec::small(800, 11)).symmetrize();
+        let g = amazon_like(&SnapGraph::small(800, 11)).symmetrize();
         let mut seen = vec![false; g.rows];
         let mut stack = vec![0usize];
         seen[0] = true;

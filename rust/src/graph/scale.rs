@@ -33,11 +33,11 @@ pub fn scale_up(g: &CsrMatrix, k: usize) -> CsrMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator::{amazon_like, GraphSpec};
+    use crate::graph::generator::{amazon_like, SnapGraph};
 
     #[test]
     fn scale_one_is_identity() {
-        let g = amazon_like(&GraphSpec::small(200, 1));
+        let g = amazon_like(&SnapGraph::small(200, 1));
         let s = scale_up(&g, 1);
         assert_eq!(g.rows, s.rows);
         assert_eq!(g.indices, s.indices);
@@ -45,7 +45,7 @@ mod tests {
 
     #[test]
     fn scale_multiplies_counts() {
-        let g = amazon_like(&GraphSpec::small(300, 2));
+        let g = amazon_like(&SnapGraph::small(300, 2));
         let s = scale_up(&g, 5);
         assert_eq!(s.rows, 1500);
         assert_eq!(s.nnz(), 5 * g.nnz());
@@ -53,7 +53,7 @@ mod tests {
 
     #[test]
     fn copies_are_disjoint_blocks() {
-        let g = amazon_like(&GraphSpec::small(100, 3));
+        let g = amazon_like(&SnapGraph::small(100, 3));
         let s = scale_up(&g, 3);
         for copy in 0..3u32 {
             for r in 0..100usize {
@@ -69,7 +69,7 @@ mod tests {
 
     #[test]
     fn row_cost_distribution_preserved() {
-        let g = amazon_like(&GraphSpec::small(400, 4));
+        let g = amazon_like(&SnapGraph::small(400, 4));
         let s = scale_up(&g, 4);
         let gc = g.row_costs();
         let sc = s.row_costs();

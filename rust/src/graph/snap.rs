@@ -71,7 +71,7 @@ pub fn write_edge_list(g: &CsrMatrix, path: &Path) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator::{amazon_like, GraphSpec};
+    use crate::graph::generator::{amazon_like, SnapGraph};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("daphne_sched_snap_test");
@@ -81,7 +81,7 @@ mod tests {
 
     #[test]
     fn roundtrip_preserves_graph() {
-        let g = amazon_like(&GraphSpec::small(300, 9));
+        let g = amazon_like(&SnapGraph::small(300, 9));
         let path = tmp("roundtrip.txt");
         write_edge_list(&g, &path).unwrap();
         let h = read_edge_list(&path).unwrap();

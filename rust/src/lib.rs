@@ -42,9 +42,14 @@
 //! - [`sim`] — a discrete-event simulator that drives the *same* scheduler
 //!   components in virtual time over a machine-topology model; this is how
 //!   the paper's 20-core Broadwell and 56-core Cascade Lake experiments
-//!   are reproduced on arbitrary hosts.
+//!   are reproduced on arbitrary hosts. [`sim::graph`] replays whole
+//!   cost-described task graphs ([`sim::GraphShape`]) with
+//!   dependency-aware dispatch, so DAG-overlap wins and per-node
+//!   scheduling choices ([`sched::autotune::tune_graph`], CLI
+//!   `tune graph=...`) are predictable on the modelled machines.
 //! - [`matrix`], [`graph`] — the data substrates (dense / CSR matrices,
-//!   synthetic Amazon-like co-purchase graphs).
+//!   synthetic Amazon-like co-purchase graphs; the data-graph spec is
+//!   [`graph::SnapGraph`] — "GraphSpec" means the task graph).
 //! - [`vee`] — the vectorized execution engine that turns (data, operator)
 //!   into jobs on the resident pool, mirroring the DAPHNE runtime.
 //! - [`dsl`] — a DaphneDSL-subset interpreter able to run the paper's

@@ -5,9 +5,13 @@
 //! ```text
 //! run        run an app natively on this host      (cc | linreg)
 //! dsl        run a DaphneDSL script file
-//! figure     regenerate a paper figure on a modelled machine (DES)
+//! figure     regenerate a paper figure on a modelled machine (DES);
+//!            `figure dag` is the dag-vs-barrier graph-replay figure
 //! ablation   §4/§5 ablations (ss | atomic)
 //! calibrate  measure the DES cost-model constants on this host
+//! tune       automatic config selection via the DES oracle;
+//!            `tune graph=<linreg|cc|diamond>` selects per-node configs
+//!            over the app's task graph by virtual-time replay
 //! worker     start a distributed worker daemon (Fig. 5)
 //! leader     drive distributed CC against worker daemons (Fig. 5)
 //! ```
@@ -29,7 +33,7 @@ use daphne_sched::bench::{figures, AppCosts, FigureId, FigureParams};
 use daphne_sched::config::RunConfig;
 use daphne_sched::coordinator::{worker as coord_worker, Leader};
 use daphne_sched::dsl;
-use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
+use daphne_sched::graph::{amazon_like, scale_up, SnapGraph};
 use daphne_sched::runtime::DeviceService;
 use daphne_sched::sim::calibrate;
 use daphne_sched::topology::Topology;
@@ -57,6 +61,9 @@ fn usage() -> String {
      \x20 daphne-sched run linreg rows=100000 cols=65 scheme=static\n\
      \x20 daphne-sched dsl script.daph f=synthetic:amazon?nodes=10000\n\
      \x20 daphne-sched figure 7a [nodes=403394 scale=1 measure=1]\n\
+     \x20 daphne-sched figure dag nodes=20000 lr_rows=100000  # dag-vs-barrier replay\n\
+     \x20 daphne-sched tune nodes=100000 machine=broadwell20  # single-workload sweep\n\
+     \x20 daphne-sched tune graph=linreg rows=100000 machine=cascadelake56\n\
      \x20 daphne-sched ablation ss\n\
      \x20 daphne-sched worker 127.0.0.1:7701\n\
      \x20 daphne-sched leader cc 127.0.0.1:7701,127.0.0.1:7702 nodes=10000"
@@ -101,7 +108,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         "cc" => {
             let nodes = cfg.param_usize("nodes", 50_000);
             let scale = cfg.param_usize("scale", 1);
-            let g = amazon_like(&GraphSpec::small(nodes, cfg.sched.seed))
+            let g = amazon_like(&SnapGraph::small(nodes, cfg.sched.seed))
                 .symmetrize();
             let g = if scale > 1 { scale_up(&g, scale) } else { g };
             println!(
@@ -302,7 +309,9 @@ fn figure_params(cfg: &RunConfig) -> FigureParams {
 
 fn cmd_figure(args: &[String]) -> Result<(), String> {
     let Some(which) = args.first() else {
-        return Err("figure: expected id (7a 7b 8a 8b 9a 9b 10a 10b | all)".into());
+        return Err(
+            "figure: expected id (7a 7b 8a 8b 9a 9b 10a 10b dag | all)".into()
+        );
     };
     let cfg = parse_pairs(&args[1..])?;
     let params = figure_params(&cfg);
@@ -368,51 +377,142 @@ fn cmd_calibrate() -> Result<(), String> {
     Ok(())
 }
 
-/// §5 future work: automatic selection of the scheduling configuration
-/// for a workload/machine pair, using the DES as an offline oracle.
+/// §5 future work: automatic selection of the scheduling configuration,
+/// using the DES as an offline oracle. Two surfaces:
+///
+/// - `tune [nodes=..]` — single-workload sweep (CC propagate pass).
+/// - `tune graph=<linreg|cc|diamond> [..]` — graph-level search: a
+///   per-node (scheme × layout × victim) assignment over the app's real
+///   task-graph shape, evaluated by dag-mode virtual-time replay with
+///   greedy critical-path-first refinement.
 fn cmd_tune(args: &[String]) -> Result<(), String> {
-    use daphne_sched::apps::cc;
+    use daphne_sched::apps::{cc, linreg};
     use daphne_sched::bench::AppCosts;
+    use daphne_sched::config::GraphMode;
     use daphne_sched::sched::autotune;
-    use daphne_sched::sim::CostModel;
+    use daphne_sched::sim::{CostModel, GraphShape};
 
-    let cfg = parse_pairs(args)?;
-    let nodes = cfg.param_usize("nodes", 100_000);
-    let g = amazon_like(&GraphSpec::small(nodes, cfg.sched.seed)).symmetrize();
+    // `graph=<target>` selects graph-level tuning. A dispatch-mode
+    // value (`graph=dag|barrier`) is rejected rather than silently
+    // ignored — that knob has no effect on tuning.
+    let mut rest: Vec<String> = Vec::new();
+    let mut target: Option<String> = None;
+    for a in args {
+        match a.strip_prefix("graph=") {
+            Some(v) if GraphMode::parse(v).is_some() => {
+                return Err(format!(
+                    "tune: 'graph={v}' is the pipeline-dispatch knob and has \
+                     no effect on tuning; to tune per-node configs over a \
+                     task graph use graph=linreg | graph=cc | graph=diamond"
+                ));
+            }
+            Some(v) => target = Some(v.to_string()),
+            None => rest.push(a.clone()),
+        }
+    }
+    let cfg = parse_pairs(&rest)?;
     let app = AppCosts::recorded();
-    let workload = cc::workload(&g, app.cc_per_row, app.cc_per_nnz);
     let machine = cfg.topology.clone();
+
+    let Some(target) = target else {
+        // single-workload sweep (the original `tune` surface)
+        let nodes = cfg.param_usize("nodes", 100_000);
+        let g = amazon_like(&SnapGraph::small(nodes, cfg.sched.seed))
+            .symmetrize();
+        let workload = cc::workload(&g, app.cc_per_row, app.cc_per_nnz);
+        println!(
+            "tuning cc ({} nodes) on {} ({} cores)...",
+            g.rows,
+            machine.name,
+            machine.n_cores()
+        );
+        let ranked = autotune::tune(
+            &workload,
+            &machine,
+            &CostModel::daphne_like(),
+            &autotune::SearchSpace::default(),
+            cfg.sched.seed,
+            3,
+        );
+        println!("top 5 of {} candidates:", ranked.len());
+        for c in ranked.iter().take(5) {
+            println!(
+                "  {:<7} {:<14} {:<7} predicted {:.4}s",
+                c.config.scheme.name(),
+                c.config.layout.name(),
+                c.config.victim.name(),
+                c.predicted
+            );
+        }
+        let worst = ranked.last().unwrap();
+        println!(
+            "worst: {} {} {} predicted {:.4}s",
+            worst.config.scheme.name(),
+            worst.config.layout.name(),
+            worst.config.victim.name(),
+            worst.predicted
+        );
+        return Ok(());
+    };
+
+    // graph-level tuning over the app's real task-graph shape
+    let shape = match target.as_str() {
+        "linreg" => linreg::graph_shape(
+            cfg.param_usize("rows", 100_000),
+            app.lr_per_row,
+        ),
+        "cc" => {
+            let nodes = cfg.param_usize("nodes", 100_000);
+            let g = amazon_like(&SnapGraph::small(nodes, cfg.sched.seed))
+                .symmetrize();
+            cc::iteration_shape(&g, app.cc_per_row, app.cc_per_nnz)
+        }
+        "diamond" => {
+            GraphShape::unbalanced_diamond(machine.n_cores() / 2)
+        }
+        other => {
+            return Err(format!(
+                "tune: unknown graph target '{other}' (linreg | cc | diamond)"
+            ))
+        }
+    };
     println!(
-        "tuning cc ({} nodes) on {} ({} cores)...",
-        g.rows,
+        "graph-tuning '{}' ({} nodes) on {} ({} cores)...",
+        shape.name,
+        shape.len(),
         machine.name,
         machine.n_cores()
     );
-    let ranked = autotune::tune(
-        &workload,
+    let tuning = autotune::tune_graph(
+        &shape,
         &machine,
         &CostModel::daphne_like(),
         &autotune::SearchSpace::default(),
         cfg.sched.seed,
-        3,
+        1,
+    )
+    .map_err(|e| e.to_string())?;
+    println!(
+        "best uniform: {:<7} {:<14} {:<7} predicted {:.4}s",
+        tuning.uniform.config.scheme.name(),
+        tuning.uniform.config.layout.name(),
+        tuning.uniform.config.victim.name(),
+        tuning.uniform.predicted
     );
-    println!("top 5 of {} candidates:", ranked.len());
-    for c in ranked.iter().take(5) {
+    println!("per-node selection:");
+    for c in &tuning.per_node {
         println!(
-            "  {:<7} {:<14} {:<7} predicted {:.4}s",
+            "  {:<12} {:<7} {:<14} {:<7}",
+            c.name,
             c.config.scheme.name(),
             c.config.layout.name(),
-            c.config.victim.name(),
-            c.predicted
+            c.config.victim.name()
         );
     }
-    let worst = ranked.last().unwrap();
     println!(
-        "worst: {} {} {} predicted {:.4}s",
-        worst.config.scheme.name(),
-        worst.config.layout.name(),
-        worst.config.victim.name(),
-        worst.predicted
+        "per-node predicted {:.4}s ({:.1}% better than best uniform)",
+        tuning.predicted,
+        tuning.refinement_gain() * 100.0
     );
     Ok(())
 }
@@ -443,7 +543,7 @@ fn cmd_leader(args: &[String]) -> Result<(), String> {
     let cfg = parse_pairs(&args[2..])?;
     let addr_list: Vec<&str> = addrs.split(',').collect();
     let nodes = cfg.param_usize("nodes", 10_000);
-    let g = amazon_like(&GraphSpec::small(nodes, cfg.sched.seed)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(nodes, cfg.sched.seed)).symmetrize();
     println!("leader: {} workers, graph {} nodes / {} edges", addr_list.len(), g.rows, g.nnz());
     let mut leader = Leader::connect(&addr_list).map_err(|e| e.to_string())?;
     let result = leader.cc_distributed(&g, 100).map_err(|e| e.to_string())?;

@@ -48,6 +48,20 @@
 //! [`worker`] (`run_once`, `ThreadPool`) layered over a one-shot
 //! `Executor` — the DES ([`crate::sim`]) still drives the *same*
 //! `TaskSource`/`VictimSelector` components in virtual time.
+//!
+//! # Prediction and tuning
+//!
+//! Both submission levels have virtual-time twins. Single jobs are
+//! simulated by [`crate::sim::simulate`]; whole task graphs by
+//! [`crate::sim::graph::replay`], which takes a cost-described
+//! [`crate::sim::GraphShape`] (the DES sibling of [`GraphSpec`]) and
+//! models dependency-aware dispatch on the paper's 20- and 56-core
+//! machines. On top of them sits automatic selection ([`autotune`]):
+//! [`autotune::tune`] sweeps (scheme × layout × victim) for one
+//! workload, and [`autotune::tune_graph`] picks a *per-node*
+//! configuration for a whole graph using replay as the oracle with a
+//! greedy critical-path-first refinement — the §5 "automatic selection"
+//! future work, lifted to pipelines.
 
 pub mod autotune;
 pub mod executor;

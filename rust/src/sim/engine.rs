@@ -21,7 +21,7 @@ use super::model::{CostModel, Workload};
 use crate::config::SchedConfig;
 use crate::sched::metrics::{SchedReport, WorkerStats};
 use crate::sched::partitioner::PartitionerOptions;
-use crate::sched::queue::{self, QueueLayout};
+use crate::sched::queue::{self, Pull, QueueLayout, TaskSource};
 use crate::sched::victim::VictimSelector;
 use crate::topology::Topology;
 use crate::util::Rng;
@@ -43,9 +43,9 @@ impl SimOutcome {
 }
 
 #[derive(Debug, PartialEq)]
-struct Ev {
-    t: f64,
-    w: usize,
+pub(crate) struct Ev {
+    pub(crate) t: f64,
+    pub(crate) w: usize,
 }
 
 impl Eq for Ev {}
@@ -66,6 +66,267 @@ impl PartialOrd for Ev {
     }
 }
 
+/// Per-job virtual-time scheduling state: the real `TaskSource` plus
+/// the cost bookkeeping (`free_at` horizons, per-queue access costs,
+/// victim selectors, worker stats) for ONE scheduled job.
+///
+/// [`simulate`] drives a single `JobSim` to completion; the graph
+/// replay ([`super::graph`]) keeps several alive at once — one per
+/// active graph node — and lets workers scan them in activation order,
+/// mirroring how the real executor multiplexes job-scoped sources over
+/// one resident pool.
+pub(crate) struct JobSim<'w> {
+    costs: CostModel,
+    source: Box<dyn TaskSource>,
+    workload: &'w Workload,
+    queue_socket: Vec<usize>,
+    access_cost: Vec<f64>,
+    no_affinity: bool,
+    selectors: Vec<Option<VictimSelector>>,
+    free_at: Vec<f64>,
+    queue_busy: Vec<f64>,
+    stats: Vec<WorkerStats>,
+    noise_rng: Rng,
+    scheme: &'static str,
+    layout: &'static str,
+    victim: &'static str,
+    acquisitions: usize,
+}
+
+impl<'w> JobSim<'w> {
+    pub(crate) fn new(
+        topo: &Topology,
+        config: &SchedConfig,
+        workload: &'w Workload,
+        costs: &CostModel,
+    ) -> Self {
+        let costs = costs.clone().for_topology(topo);
+        let opts = PartitionerOptions {
+            stages: config.stages,
+            pls_swr: config.pls_swr,
+            seed: config.seed,
+        };
+        let source = queue::build_source(
+            config.layout,
+            config.scheme,
+            workload.items(),
+            topo,
+            &opts,
+        );
+        let n_queues = source.n_queues();
+        let n = topo.n_cores();
+
+        // Home socket of every queue (mirrors worker::queue_socket_of).
+        let queue_socket: Vec<usize> = (0..n_queues)
+            .map(|q| {
+                if n_queues == n {
+                    topo.socket_of(q)
+                } else if n_queues == topo.sockets {
+                    q
+                } else {
+                    0
+                }
+            })
+            .collect();
+
+        // Execution locality: only PERCPU's contiguous pre-partitioning
+        // gives block affinity; the centralized queue and PERCORE's
+        // globally-dealt chunks see interleaved memory (§4's explanation
+        // of STATIC's Fig. 7a vs 8a vs 8b behaviour).
+        let no_affinity = matches!(
+            config.layout,
+            QueueLayout::Centralized { .. } | QueueLayout::PerCore
+        );
+        // Lock handoff scales with the number of workers sharing the
+        // queue (see CostModel::queue_access); the atomic fetch_add path
+        // is flat. Handoff cost saturates once the lock convoy forms
+        // (~15 waiters): beyond that, extra waiters queue up (modelled
+        // by serialization) without lengthening the critical section.
+        let contenders: Vec<f64> = {
+            let mut counts = vec![0usize; n_queues];
+            for w in 0..n {
+                counts[source.queue_of(w)] += 1;
+            }
+            counts.iter().map(|&c| c.clamp(1, 15) as f64).collect()
+        };
+        let access_cost: Vec<f64> = (0..n_queues)
+            .map(|q| match config.layout {
+                QueueLayout::Centralized { atomic: true } => {
+                    costs.atomic_access
+                }
+                _ => costs.queue_access * contenders[q],
+            })
+            .collect();
+
+        let selectors: Vec<Option<VictimSelector>> = (0..n)
+            .map(|w| {
+                config.layout.steals().then(|| {
+                    VictimSelector::new(
+                        config.victim,
+                        source.queue_of(w),
+                        topo.socket_of(w),
+                        queue_socket.clone(),
+                        config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
+                    )
+                })
+            })
+            .collect();
+
+        JobSim {
+            noise_rng: Rng::new(config.seed ^ 0x5EED_0153),
+            free_at: vec![0f64; n_queues],
+            queue_busy: vec![0f64; n_queues],
+            stats: vec![WorkerStats::default(); n],
+            scheme: config.scheme.name(),
+            layout: config.layout.name(),
+            victim: config.victim.name(),
+            acquisitions: 0,
+            costs,
+            source,
+            workload,
+            queue_socket,
+            access_cost,
+            no_affinity,
+            selectors,
+        }
+    }
+
+    /// Serialized access to queue `q`; returns the access completion
+    /// time.
+    fn access(
+        &mut self,
+        q: usize,
+        now: f64,
+        extra: f64,
+        my_socket: usize,
+        remote_numa_factor: f64,
+    ) -> f64 {
+        let numa = if self.queue_socket[q] == my_socket {
+            1.0
+        } else {
+            remote_numa_factor
+        };
+        let start = now.max(self.free_at[q]);
+        let dur = self.access_cost[q] * numa + self.costs.serialized_extra + extra;
+        self.free_at[q] = start + dur;
+        self.queue_busy[q] += dur;
+        start + dur
+    }
+
+    /// One acquisition attempt by worker `w` at `*now`: own-queue probe
+    /// plus a steal round. Advances `*now` past the serialized queue
+    /// accesses whether or not a chunk was obtained.
+    pub(crate) fn try_acquire(
+        &mut self,
+        topo: &Topology,
+        w: usize,
+        now: &mut f64,
+    ) -> Option<Pull> {
+        self.acquisitions += 1;
+        let my_socket = topo.socket_of(w);
+
+        // 1) own queue
+        let own_q = self.source.queue_of(w);
+        let end = self.access(own_q, *now, 0.0, my_socket, topo.remote_numa_factor);
+        let mut pull = self.source.pull_local(w);
+        self.stats[w].queue_wait += end - *now;
+        *now = end;
+
+        // 2) steal round
+        if pull.is_none() {
+            // take the selector out so `self.access` stays callable
+            let mut selector = self.selectors[w].take();
+            if let Some(selector) = selector.as_mut() {
+                for victim in selector.round() {
+                    let end = self.access(
+                        victim,
+                        *now,
+                        self.costs.steal_overhead,
+                        my_socket,
+                        topo.remote_numa_factor,
+                    );
+                    self.stats[w].queue_wait += end - *now;
+                    *now = end;
+                    pull = self.source.pull_from(victim, w);
+                    if pull.is_some() {
+                        break;
+                    }
+                    self.stats[w].failed_steals += 1;
+                }
+            }
+            self.selectors[w] = selector;
+        }
+        pull
+    }
+
+    /// Execution time of an acquired chunk on worker `w` (locality
+    /// factor by layout + queue home, plus modelled OS interference);
+    /// updates the worker's busy/task/steal counters.
+    pub(crate) fn exec_time(
+        &mut self,
+        topo: &Topology,
+        w: usize,
+        pull: &Pull,
+    ) -> f64 {
+        let my_socket = topo.socket_of(w);
+        if pull.stolen {
+            self.stats[w].steals += 1;
+            self.stats[w].stolen_items += pull.task.len();
+        }
+
+        // locality factor depends on layout + homes
+        let locality = if self.no_affinity {
+            self.costs.interleave_factor
+        } else if self.queue_socket[pull.queue] == my_socket {
+            1.0
+        } else {
+            self.costs.remote_exec_factor
+        };
+        let mut exec = self.workload.chunk_cost(pull.task.start, pull.task.end)
+            * locality
+            / topo.core_speed
+            + self.costs.dispatch;
+        // OS interference: Poisson preemption events over the chunk's
+        // busy time, each stretching it by an exponential delay. A
+        // dynamic scheme reroutes subsequent chunks around a hit
+        // worker; STATIC's single block eats the delay on the critical
+        // path.
+        if self.costs.noise_rate > 0.0 {
+            let lambda = self.costs.noise_rate * exec;
+            // Poisson via sequential exponential arrivals (lambda is
+            // small for realistic chunks).
+            let mut budget = lambda;
+            loop {
+                let step = self.noise_rng.exponential(1.0);
+                if step > budget {
+                    break;
+                }
+                budget -= step;
+                exec += self.noise_rng.exponential(1.0 / self.costs.noise_duration);
+            }
+        }
+        self.stats[w].busy += exec;
+        self.stats[w].tasks += 1;
+        self.stats[w].items += pull.task.len();
+        exec
+    }
+
+    /// Finalize the job into a [`SimOutcome`] with the given makespan.
+    pub(crate) fn into_outcome(self, makespan: f64) -> SimOutcome {
+        SimOutcome {
+            report: SchedReport {
+                scheme: self.scheme.to_string(),
+                layout: self.layout.to_string(),
+                victim: self.victim.to_string(),
+                makespan,
+                per_worker: self.stats,
+            },
+            queue_busy: self.queue_busy,
+            acquisitions: self.acquisitions,
+        }
+    }
+}
+
 /// Simulate scheduling `workload` with `config` on `topo`.
 pub fn simulate(
     topo: &Topology,
@@ -73,190 +334,23 @@ pub fn simulate(
     workload: &Workload,
     costs: &CostModel,
 ) -> SimOutcome {
-    let costs = costs.clone().for_topology(topo);
-    let opts = PartitionerOptions {
-        stages: config.stages,
-        pls_swr: config.pls_swr,
-        seed: config.seed,
-    };
-    let source = queue::build_source(
-        config.layout,
-        config.scheme,
-        workload.items(),
-        topo,
-        &opts,
-    );
-    let n_queues = source.n_queues();
+    let mut job = JobSim::new(topo, config, workload, costs);
     let n = topo.n_cores();
-
-    // Home socket of every queue (mirrors worker::queue_socket_of).
-    let queue_socket: Vec<usize> = (0..n_queues)
-        .map(|q| {
-            if n_queues == n {
-                topo.socket_of(q)
-            } else if n_queues == topo.sockets {
-                q
-            } else {
-                0
-            }
-        })
-        .collect();
-
-    // Execution locality: only PERCPU's contiguous pre-partitioning
-    // gives block affinity; the centralized queue and PERCORE's
-    // globally-dealt chunks see interleaved memory (§4's explanation of
-    // STATIC's Fig. 7a vs 8a vs 8b behaviour).
-    let no_affinity = matches!(
-        config.layout,
-        QueueLayout::Centralized { .. } | QueueLayout::PerCore
-    );
-    // Lock handoff scales with the number of workers sharing the queue
-    // (see CostModel::queue_access); the atomic fetch_add path is flat.
-    // Handoff cost saturates once the lock convoy forms (~15 waiters):
-    // beyond that, extra waiters queue up (modelled by serialization)
-    // without lengthening the critical section itself.
-    let contenders: Vec<f64> = {
-        let mut counts = vec![0usize; n_queues];
-        for w in 0..n {
-            counts[source.queue_of(w)] += 1;
-        }
-        counts.iter().map(|&c| c.clamp(1, 15) as f64).collect()
-    };
-    let access_cost: Vec<f64> = (0..n_queues)
-        .map(|q| match config.layout {
-            QueueLayout::Centralized { atomic: true } => costs.atomic_access,
-            _ => costs.queue_access * contenders[q],
-        })
-        .collect();
-
-    let mut selectors: Vec<Option<VictimSelector>> = (0..n)
-        .map(|w| {
-            config.layout.steals().then(|| {
-                VictimSelector::new(
-                    config.victim,
-                    source.queue_of(w),
-                    topo.socket_of(w),
-                    queue_socket.clone(),
-                    config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
-                )
-            })
-        })
-        .collect();
-
-    let mut stats = vec![WorkerStats::default(); n];
-    let mut free_at = vec![0f64; n_queues];
-    let mut queue_busy = vec![0f64; n_queues];
     let mut heap: BinaryHeap<Ev> = (0..n).map(|w| Ev { t: 0.0, w }).collect();
     let mut makespan = 0f64;
-    let mut acquisitions = 0usize;
-    let mut noise_rng = Rng::new(config.seed ^ 0x5EED_0153);
 
     while let Some(Ev { t, w }) = heap.pop() {
-        acquisitions += 1;
-        let my_socket = topo.socket_of(w);
         let mut now = t;
-
-        // serialized access to a queue; returns access completion time
-        let access = |q: usize, now: f64, extra: f64, free_at: &mut [f64], queue_busy: &mut [f64]| -> f64 {
-            let numa = if queue_socket[q] == my_socket {
-                1.0
-            } else {
-                topo.remote_numa_factor
-            };
-            let start = now.max(free_at[q]);
-            let dur = access_cost[q] * numa + costs.serialized_extra + extra;
-            free_at[q] = start + dur;
-            queue_busy[q] += dur;
-            start + dur
-        };
-
-        // 1) own queue
-        let own_q = source.queue_of(w);
-        let end = access(own_q, now, 0.0, &mut free_at, &mut queue_busy);
-        let mut pull = source.pull_local(w);
-        stats[w].queue_wait += end - now;
-        now = end;
-
-        // 2) steal round
-        if pull.is_none() {
-            if let Some(selector) = selectors[w].as_mut() {
-                for victim in selector.round() {
-                    let end = access(
-                        victim,
-                        now,
-                        costs.steal_overhead,
-                        &mut free_at,
-                        &mut queue_busy,
-                    );
-                    stats[w].queue_wait += end - now;
-                    now = end;
-                    pull = source.pull_from(victim, w);
-                    if pull.is_some() {
-                        break;
-                    }
-                    stats[w].failed_steals += 1;
-                }
+        match job.try_acquire(topo, w, &mut now) {
+            None => makespan = makespan.max(now), // worker retires
+            Some(pull) => {
+                let exec = job.exec_time(topo, w, &pull);
+                heap.push(Ev { t: now + exec, w });
             }
         }
-
-        let Some(pull) = pull else {
-            makespan = makespan.max(now);
-            continue; // worker retires
-        };
-
-        if pull.stolen {
-            stats[w].steals += 1;
-            stats[w].stolen_items += pull.task.len();
-        }
-
-        // 3) execute: locality factor depends on layout + homes
-        let locality = if no_affinity {
-            costs.interleave_factor
-        } else if queue_socket[pull.queue] == my_socket {
-            1.0
-        } else {
-            costs.remote_exec_factor
-        };
-        let mut exec = workload.chunk_cost(pull.task.start, pull.task.end)
-            * locality
-            / topo.core_speed
-            + costs.dispatch;
-        // OS interference: Poisson preemption events over the chunk's
-        // busy time, each stretching it by an exponential delay. A
-        // dynamic scheme reroutes subsequent chunks around a hit
-        // worker; STATIC's single block eats the delay on the critical
-        // path.
-        if costs.noise_rate > 0.0 {
-            let lambda = costs.noise_rate * exec;
-            // Poisson via sequential exponential arrivals (lambda is
-            // small for realistic chunks).
-            let mut budget = lambda;
-            loop {
-                let step = noise_rng.exponential(1.0);
-                if step > budget {
-                    break;
-                }
-                budget -= step;
-                exec += noise_rng.exponential(1.0 / costs.noise_duration);
-            }
-        }
-        stats[w].busy += exec;
-        stats[w].tasks += 1;
-        stats[w].items += pull.task.len();
-        heap.push(Ev { t: now + exec, w });
     }
 
-    SimOutcome {
-        report: SchedReport {
-            scheme: config.scheme.name().to_string(),
-            layout: config.layout.name().to_string(),
-            victim: config.victim.name().to_string(),
-            makespan,
-            per_worker: stats,
-        },
-        queue_busy,
-        acquisitions,
-    }
+    job.into_outcome(makespan)
 }
 
 #[cfg(test)]

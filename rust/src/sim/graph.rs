@@ -1,0 +1,796 @@
+//! Virtual-time task-graph replay: the DES equivalent of
+//! [`crate::sched::graph`].
+//!
+//! PR 2 made the real executor dependency-aware — independent graph
+//! nodes overlap on the resident pool. But the DES could still only
+//! model one flat job, so DAG-overlap wins were observable on the host
+//! machine and nowhere else. This module closes that gap:
+//!
+//! - [`GraphShape`] / [`NodeModel`] mirror
+//!   [`GraphSpec`](crate::sched::graph::GraphSpec) /
+//!   [`NodeSpec`](crate::sched::graph::NodeSpec) but are
+//!   *cost-described* instead of closure-bodied: each node carries a
+//!   [`Workload`] (per-item virtual costs), an optional per-node
+//!   [`SchedConfig`] override, and explicit `after(...)` edges.
+//! - [`replay`] extends the [`super::engine`] event loop to many
+//!   concurrently active jobs: each active node is a
+//!   `JobSim` (the same real `TaskSource` + victim selectors +
+//!   serialized queue horizons as a single-job simulation), and the
+//!   worker event that retires a node's **last chunk** enqueues the
+//!   node's ready dependents at the current virtual time — independent
+//!   branches overlap on the modelled pool exactly as the real executor
+//!   overlaps them. [`GraphMode::Barrier`] instead serializes the nodes
+//!   in topological order (one full single-job simulation each), the
+//!   A/B baseline.
+//! - Shapes are validated by the *same*
+//!   [`toposort`](crate::sched::graph::toposort) as the executor path,
+//!   so cyclic / unknown-dependency / duplicate-name shapes are
+//!   rejected with the same [`GraphError`]s the real submission would
+//!   produce.
+//!
+//! The replay is the oracle behind graph-level autotuning
+//! ([`crate::sched::autotune::tune_graph`]): per-node configurations
+//! are evaluated in virtual time on the modelled 20- and 56-core
+//! machines, milliseconds per candidate instead of hours of grid runs.
+
+use std::collections::BinaryHeap;
+
+use super::engine::{Ev, JobSim, SimOutcome};
+use super::model::{CostModel, Workload};
+use crate::config::{GraphMode, SchedConfig};
+use crate::sched::graph::{toposort, GraphError, TopoOrder};
+use crate::sched::metrics::{SchedReport, WorkerStats};
+use crate::topology::Topology;
+
+/// Cost model of one graph node: a name (unique within its shape), a
+/// [`Workload`] of per-item virtual costs, an optional per-node
+/// scheduling override, and the names of the nodes it must run after.
+/// The cost-described sibling of [`crate::sched::graph::NodeSpec`].
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    pub name: String,
+    pub workload: Workload,
+    /// `None` = the replay's default config.
+    pub config: Option<SchedConfig>,
+    /// Dependency edges by node name.
+    pub after: Vec<String>,
+}
+
+impl NodeModel {
+    pub fn new(name: &str, workload: Workload) -> Self {
+        NodeModel {
+            name: name.to_string(),
+            workload,
+            config: None,
+            after: Vec::new(),
+        }
+    }
+
+    /// Uniform per-item cost — the common case for dense operators.
+    pub fn uniform(name: &str, items: usize, per_item: f64) -> Self {
+        NodeModel::new(name, Workload::uniform(name, items, per_item))
+    }
+
+    /// Add one dependency edge: this node starts only after `dep`
+    /// completes. Forward references resolve at replay.
+    pub fn after(mut self, dep: &str) -> Self {
+        self.after.push(dep.to_string());
+        self
+    }
+
+    /// Add several dependency edges at once.
+    pub fn after_all<'d>(
+        mut self,
+        deps: impl IntoIterator<Item = &'d str>,
+    ) -> Self {
+        self.after.extend(deps.into_iter().map(str::to_string));
+        self
+    }
+
+    /// Override the replay's default scheduling for this node.
+    pub fn with_config(mut self, config: SchedConfig) -> Self {
+        self.config = Some(config);
+        self
+    }
+}
+
+/// A cost-described task graph: what [`crate::sched::graph::GraphSpec`]
+/// is to the real executor, `GraphShape` is to the DES. Apps export
+/// their real shapes (e.g. [`crate::apps::linreg::graph_shape`]) so the
+/// replay models the same dependency structure the executor dispatches.
+#[derive(Debug, Clone, Default)]
+pub struct GraphShape {
+    pub name: String,
+    nodes: Vec<NodeModel>,
+}
+
+impl GraphShape {
+    pub fn new(name: &str) -> Self {
+        GraphShape { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Builder-style [`GraphShape::add`].
+    pub fn node(mut self, node: NodeModel) -> Self {
+        self.add(node);
+        self
+    }
+
+    pub fn add(&mut self, node: NodeModel) {
+        self.nodes.push(node);
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> &[NodeModel] {
+        &self.nodes
+    }
+
+    pub fn node_names(&self) -> impl Iterator<Item = &str> {
+        self.nodes.iter().map(|n| n.name.as_str())
+    }
+
+    /// Total sequential cost of every node (virtual seconds on one
+    /// baseline core).
+    pub fn total_cost(&self) -> f64 {
+        self.nodes.iter().map(|n| n.workload.total_cost()).sum()
+    }
+
+    /// Kahn-validated dispatch structure of this shape — the same
+    /// [`toposort`] the executor path runs. The tuner computes it once
+    /// and replays against it many times ([`replay_ordered`]).
+    pub(crate) fn toposorted(&self) -> Result<TopoOrder, GraphError> {
+        let meta: Vec<(String, Vec<String>)> = self
+            .nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.after.clone()))
+            .collect();
+        toposort(&meta)
+    }
+
+    /// Validate the dependency structure without running anything — the
+    /// same [`toposort`] check every replay performs, so a shape that
+    /// passes here never fails a later [`replay`].
+    pub fn validate(&self) -> Result<(), GraphError> {
+        self.toposorted().map(|_| ())
+    }
+
+    /// The A/B shape of the figures and acceptance tests: a root fans
+    /// out into a heavy and a light branch (each `width` items wide, so
+    /// each alone strands the rest of a `2*width`-core machine) that
+    /// join into a small tail. Barrier mode pays
+    /// `heavy + light` for the middle section; dag mode overlaps them
+    /// and pays `max(heavy, light)`.
+    pub fn unbalanced_diamond(width: usize) -> GraphShape {
+        GraphShape::new("unbalanced-diamond")
+            .node(NodeModel::uniform("prep", width * 64, 2e-6))
+            .node(NodeModel::uniform("heavy", width, 4e-3).after("prep"))
+            .node(NodeModel::uniform("light", width, 1e-3).after("prep"))
+            .node(
+                NodeModel::uniform("join", width * 16, 2e-6)
+                    .after("heavy")
+                    .after("light"),
+            )
+    }
+}
+
+/// Outcome of one node inside a graph replay.
+#[derive(Debug, Clone)]
+pub struct NodeSimOutcome {
+    pub name: String,
+    /// The node's own scheduling outcome; its `report.makespan` is the
+    /// node's span (`finish - start`).
+    pub outcome: SimOutcome,
+    /// Virtual time the node became ready and started dispatching.
+    pub start: f64,
+    /// Virtual time the node's last item finished executing.
+    pub finish: f64,
+}
+
+/// Result of one graph replay.
+#[derive(Debug, Clone)]
+pub struct GraphSimOutcome {
+    pub graph: String,
+    pub mode: GraphMode,
+    /// Per-node outcomes, in shape order.
+    pub nodes: Vec<NodeSimOutcome>,
+    /// Virtual completion time of the whole graph.
+    pub makespan: f64,
+    /// Node names along the dependency chain that determines the
+    /// makespan (root first). In barrier mode every node is on it.
+    pub critical_path: Vec<String>,
+}
+
+impl GraphSimOutcome {
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Sum of per-node spans — what a full barrier after every node
+    /// would cost; `serial_time() / makespan()` estimates the overlap
+    /// win of dag dispatch.
+    pub fn serial_time(&self) -> f64 {
+        self.nodes.iter().map(|n| n.outcome.report.makespan).sum()
+    }
+
+    pub fn node(&self, name: &str) -> Option<&NodeSimOutcome> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    pub fn total_steals(&self) -> usize {
+        self.nodes.iter().map(|n| n.outcome.report.total_steals()).sum()
+    }
+}
+
+/// Replay `shape` on the modelled machine under `mode`, resolving each
+/// node's config as its own override or else `default`. Validation
+/// (duplicate names, unknown dependencies, cycles) uses the same
+/// [`toposort`] as [`crate::sched::Executor::submit_graph`], so a shape
+/// is rejected with exactly the [`GraphError`] the real submission
+/// would produce.
+pub fn replay(
+    shape: &GraphShape,
+    topo: &Topology,
+    default: &SchedConfig,
+    costs: &CostModel,
+    mode: GraphMode,
+) -> Result<GraphSimOutcome, GraphError> {
+    let configs: Vec<SchedConfig> = shape
+        .nodes
+        .iter()
+        .map(|n| n.config.clone().unwrap_or_else(|| default.clone()))
+        .collect();
+    replay_resolved(shape, topo, &configs, costs, mode)
+}
+
+/// Like [`replay`] but with an explicit per-node config assignment
+/// (ignoring the shape's own overrides) — the evaluation entry point of
+/// graph-level autotuning, which owns the assignment it is refining.
+pub fn replay_with_configs(
+    shape: &GraphShape,
+    topo: &Topology,
+    configs: &[SchedConfig],
+    costs: &CostModel,
+    mode: GraphMode,
+) -> Result<GraphSimOutcome, GraphError> {
+    assert_eq!(
+        configs.len(),
+        shape.nodes.len(),
+        "one config per shape node"
+    );
+    replay_resolved(shape, topo, configs, costs, mode)
+}
+
+fn replay_resolved(
+    shape: &GraphShape,
+    topo: &Topology,
+    configs: &[SchedConfig],
+    costs: &CostModel,
+    mode: GraphMode,
+) -> Result<GraphSimOutcome, GraphError> {
+    let order = shape.toposorted()?;
+    Ok(replay_ordered(shape, topo, configs, costs, mode, &order))
+}
+
+/// Replay against a precomputed [`TopoOrder`] — the tuner's hot loop,
+/// which validates a shape once and then evaluates thousands of
+/// per-node assignments against the same order.
+pub(crate) fn replay_ordered(
+    shape: &GraphShape,
+    topo: &Topology,
+    configs: &[SchedConfig],
+    costs: &CostModel,
+    mode: GraphMode,
+    order: &TopoOrder,
+) -> GraphSimOutcome {
+    match mode {
+        GraphMode::Barrier => {
+            replay_barrier(shape, topo, configs, costs, order)
+        }
+        GraphMode::Dag => replay_dag(shape, topo, configs, costs, order),
+    }
+}
+
+/// Outcome of a node with no items: it completes the instant it becomes
+/// ready, with no queue or worker activity — what the real executor's
+/// inline zero-item completion costs. Used by *both* modes so that
+/// empty synchronization-only nodes never skew a dag-vs-barrier
+/// comparison.
+fn empty_outcome(topo: &Topology, config: &SchedConfig) -> SimOutcome {
+    SimOutcome {
+        report: SchedReport {
+            scheme: config.scheme.name().to_string(),
+            layout: config.layout.name().to_string(),
+            victim: config.victim.name().to_string(),
+            makespan: 0.0,
+            per_worker: vec![WorkerStats::default(); topo.n_cores()],
+        },
+        queue_busy: Vec::new(),
+        acquisitions: 0,
+    }
+}
+
+/// Barrier baseline: one single-job simulation per node, serialized in
+/// topological order — the virtual-time equivalent of `graph=barrier`.
+fn replay_barrier(
+    shape: &GraphShape,
+    topo: &Topology,
+    configs: &[SchedConfig],
+    costs: &CostModel,
+    order: &TopoOrder,
+) -> GraphSimOutcome {
+    let mut nodes: Vec<Option<NodeSimOutcome>> =
+        (0..shape.nodes.len()).map(|_| None).collect();
+    let mut t = 0.0;
+    for &i in &order.order {
+        let node = &shape.nodes[i];
+        let out = if node.workload.items() == 0 {
+            empty_outcome(topo, &configs[i])
+        } else {
+            super::engine::simulate(topo, &configs[i], &node.workload, costs)
+        };
+        let span = out.makespan();
+        nodes[i] = Some(NodeSimOutcome {
+            name: node.name.clone(),
+            outcome: out,
+            start: t,
+            finish: t + span,
+        });
+        t += span;
+    }
+    GraphSimOutcome {
+        graph: shape.name.clone(),
+        mode: GraphMode::Barrier,
+        critical_path: order
+            .order
+            .iter()
+            .map(|&i| shape.nodes[i].name.clone())
+            .collect(),
+        nodes: nodes.into_iter().map(|n| n.expect("all simulated")).collect(),
+        makespan: t,
+    }
+}
+
+/// Dependency-aware replay: the engine's worker event loop over many
+/// live `JobSim`s. A worker event first retires the chunk it was
+/// executing; if that was its node's last outstanding chunk the node
+/// completes *at this virtual time*, its ready dependents activate, and
+/// parked workers wake — then the worker scans the active jobs in
+/// activation order (own-queue probe + steal round each, mirroring the
+/// executor's job multiplexing) for its next chunk.
+fn replay_dag(
+    shape: &GraphShape,
+    topo: &Topology,
+    configs: &[SchedConfig],
+    costs: &CostModel,
+    order: &TopoOrder,
+) -> GraphSimOutcome {
+    let n_nodes = shape.nodes.len();
+    let nw = topo.n_cores();
+    let items: Vec<usize> =
+        shape.nodes.iter().map(|n| n.workload.items()).collect();
+    let mut pending: Vec<usize> = order.deps.iter().map(Vec::len).collect();
+    let mut executed = vec![0usize; n_nodes];
+    let mut start = vec![0f64; n_nodes];
+    let mut finish = vec![0f64; n_nodes];
+    let mut outcomes: Vec<Option<SimOutcome>> =
+        (0..n_nodes).map(|_| None).collect();
+    // Active jobs in activation order; workers scan this list FIFO.
+    let mut active: Vec<(usize, JobSim<'_>)> = Vec::new();
+    let mut remaining = n_nodes;
+    // What each worker is currently executing: (node, chunk len); the
+    // chunk ends exactly at the worker's next heap event.
+    let mut chunk: Vec<Option<(usize, usize)>> = vec![None; nw];
+    // Park time of each idle worker, woken at the next activation.
+    let mut parked: Vec<Option<f64>> = vec![None; nw];
+    let mut makespan = 0f64;
+
+    // Activate every node in `ready` at virtual time `t`. Zero-item
+    // nodes complete inline (worklist, so chains of them stay
+    // iterative); the rest get a live JobSim. Returns whether any job
+    // actually went live (only then do parked workers need waking).
+    macro_rules! activate {
+        ($ready:expr, $t:expr) => {{
+            let mut worklist: Vec<usize> = $ready;
+            let mut went_live = false;
+            while let Some(i) = worklist.pop() {
+                start[i] = $t;
+                if items[i] == 0 {
+                    finish[i] = $t;
+                    remaining -= 1;
+                    outcomes[i] = Some(empty_outcome(topo, &configs[i]));
+                    for &d in &order.dependents[i] {
+                        pending[d] -= 1;
+                        if pending[d] == 0 {
+                            worklist.push(d);
+                        }
+                    }
+                } else {
+                    active.push((
+                        i,
+                        JobSim::new(
+                            topo,
+                            &configs[i],
+                            &shape.nodes[i].workload,
+                            costs,
+                        ),
+                    ));
+                    went_live = true;
+                }
+            }
+            went_live
+        }};
+    }
+
+    let roots: Vec<usize> =
+        (0..n_nodes).filter(|&i| pending[i] == 0).collect();
+    // no workers are parked yet, so the went-live flag is moot here
+    let _ = activate!(roots, 0.0);
+
+    let mut heap: BinaryHeap<Ev> = (0..nw).map(|w| Ev { t: 0.0, w }).collect();
+
+    while let Some(Ev { t, w }) = heap.pop() {
+        let mut now = t;
+
+        // retire the chunk this event marks the end of
+        if let Some((node, len)) = chunk[w].take() {
+            executed[node] += len;
+            if executed[node] == items[node] {
+                // the node's last item finished right now: complete it,
+                // release dependents, wake parked workers
+                finish[node] = t;
+                remaining -= 1;
+                let pos = active
+                    .iter()
+                    .position(|(i, _)| *i == node)
+                    .expect("completed node was active");
+                let (_, job) = active.remove(pos);
+                outcomes[node] = Some(job.into_outcome(t - start[node]));
+                let mut ready = Vec::new();
+                for &d in &order.dependents[node] {
+                    pending[d] -= 1;
+                    if pending[d] == 0 {
+                        ready.push(d);
+                    }
+                }
+                if activate!(ready, t) {
+                    for (w2, slot) in parked.iter_mut().enumerate() {
+                        if let Some(p) = slot.take() {
+                            heap.push(Ev { t: p.max(t), w: w2 });
+                        }
+                    }
+                }
+            }
+        }
+
+        if remaining == 0 {
+            makespan = makespan.max(now);
+            continue; // graph done; drain remaining worker events
+        }
+
+        // scan active jobs in activation order for the next chunk
+        let mut got: Option<(usize, crate::sched::queue::Pull)> = None;
+        for (idx, (_, job)) in active.iter_mut().enumerate() {
+            if let Some(pull) = job.try_acquire(topo, w, &mut now) {
+                got = Some((idx, pull));
+                break;
+            }
+        }
+        match got {
+            Some((idx, pull)) => {
+                let (node, job) = &mut active[idx];
+                let exec = job.exec_time(topo, w, &pull);
+                chunk[w] = Some((*node, pull.task.len()));
+                heap.push(Ev { t: now + exec, w });
+            }
+            None => {
+                // every dealt chunk is in flight elsewhere: park until
+                // the next node activates (drained sources never refill)
+                makespan = makespan.max(now);
+                parked[w] = Some(now);
+            }
+        }
+    }
+
+    let nodes: Vec<NodeSimOutcome> = outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| NodeSimOutcome {
+            name: shape.nodes[i].name.clone(),
+            outcome: o.expect("remaining == 0 means every node completed"),
+            start: start[i],
+            finish: finish[i],
+        })
+        .collect();
+    let makespan = nodes
+        .iter()
+        .map(|n| n.finish)
+        .fold(makespan, f64::max);
+    let critical_path = critical_path(shape, order, &nodes);
+    GraphSimOutcome {
+        graph: shape.name.clone(),
+        mode: GraphMode::Dag,
+        nodes,
+        makespan,
+        critical_path,
+    }
+}
+
+/// Walk back from the last-finishing node through its latest-finishing
+/// dependency to a root; returns names root-first.
+fn critical_path(
+    shape: &GraphShape,
+    order: &TopoOrder,
+    nodes: &[NodeSimOutcome],
+) -> Vec<String> {
+    if nodes.is_empty() {
+        return Vec::new();
+    }
+    let mut i = (0..nodes.len())
+        .max_by(|&a, &b| nodes[a].finish.total_cmp(&nodes[b].finish))
+        .expect("non-empty");
+    let mut rev = vec![i];
+    while let Some(&d) = order.deps[i]
+        .iter()
+        .max_by(|&&a, &&b| nodes[a].finish.total_cmp(&nodes[b].finish))
+    {
+        rev.push(d);
+        i = d;
+    }
+    rev.reverse();
+    rev.into_iter().map(|i| shape.nodes[i].name.clone()).collect()
+}
+
+/// Sort node indices by descending finish time — the refinement order
+/// graph autotuning sweeps (latest finishers first). Stable, so ties
+/// keep shape order.
+pub(crate) fn by_finish_desc(outcome: &GraphSimOutcome) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..outcome.nodes.len()).collect();
+    idx.sort_by(|&a, &b| {
+        outcome.nodes[b].finish.total_cmp(&outcome.nodes[a].finish)
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::partitioner::Scheme;
+    use crate::sim::simulate;
+
+    fn costs() -> CostModel {
+        CostModel::recorded()
+    }
+
+    fn cfg() -> SchedConfig {
+        SchedConfig::default()
+    }
+
+    #[test]
+    fn builder_mirrors_nodespec_api() {
+        let shape = GraphShape::new("g")
+            .node(NodeModel::uniform("a", 100, 1e-6))
+            .node(
+                NodeModel::uniform("b", 50, 1e-6)
+                    .after("a")
+                    .with_config(cfg().with_scheme(Scheme::Gss)),
+            )
+            .node(NodeModel::uniform("c", 10, 1e-6).after_all(["a", "b"]));
+        assert_eq!(shape.len(), 3);
+        assert_eq!(
+            shape.node_names().collect::<Vec<_>>(),
+            vec!["a", "b", "c"]
+        );
+        assert!((shape.total_cost() - 160e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_with_executor_errors() {
+        let topo = Topology::broadwell20();
+        let cycle = GraphShape::new("cycle")
+            .node(NodeModel::uniform("a", 10, 1e-6).after("b"))
+            .node(NodeModel::uniform("b", 10, 1e-6).after("a"));
+        assert!(matches!(
+            replay(&cycle, &topo, &cfg(), &costs(), GraphMode::Dag),
+            Err(GraphError::Cycle(_))
+        ));
+        // validate() agrees with replay without running anything
+        assert!(matches!(cycle.validate(), Err(GraphError::Cycle(_))));
+        assert!(GraphShape::unbalanced_diamond(4).validate().is_ok());
+
+        let unknown = GraphShape::new("unknown")
+            .node(NodeModel::uniform("a", 10, 1e-6).after("ghost"));
+        assert_eq!(
+            replay(&unknown, &topo, &cfg(), &costs(), GraphMode::Barrier)
+                .err(),
+            Some(GraphError::UnknownDependency {
+                node: "a".into(),
+                dep: "ghost".into()
+            })
+        );
+
+        let dup = GraphShape::new("dup")
+            .node(NodeModel::uniform("a", 10, 1e-6))
+            .node(NodeModel::uniform("a", 10, 1e-6));
+        assert_eq!(
+            replay(&dup, &topo, &cfg(), &costs(), GraphMode::Dag).err(),
+            Some(GraphError::DuplicateNode("a".into()))
+        );
+    }
+
+    #[test]
+    fn barrier_replay_is_sum_of_single_job_sims() {
+        let topo = Topology::broadwell20();
+        let shape = GraphShape::new("chain")
+            .node(NodeModel::uniform("a", 20_000, 1e-7))
+            .node(NodeModel::uniform("b", 5_000, 3e-7).after("a"))
+            .node(NodeModel::uniform("c", 1_000, 1e-6).after("b"));
+        let out =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Barrier)
+                .unwrap();
+        let expect: f64 = shape
+            .nodes()
+            .iter()
+            .map(|n| simulate(&topo, &cfg(), &n.workload, &costs()).makespan())
+            .sum();
+        assert!((out.makespan() - expect).abs() < 1e-12);
+        assert_eq!(out.critical_path, vec!["a", "b", "c"]);
+        // node starts stack end-to-end
+        assert_eq!(out.node("b").unwrap().start, out.node("a").unwrap().finish);
+    }
+
+    #[test]
+    fn dag_chain_agrees_with_summed_sims_within_tolerance() {
+        // A linear chain has no overlap to exploit: dag replay must
+        // agree with the summed single-job makespans up to the tiny
+        // worker-availability skew at node boundaries.
+        let topo = Topology::cascadelake56();
+        let shape = GraphShape::new("chain")
+            .node(NodeModel::uniform("a", 30_000, 1e-7))
+            .node(NodeModel::uniform("b", 30_000, 2e-7).after("a"))
+            .node(NodeModel::uniform("c", 10_000, 1e-7).after("b"));
+        let dag =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        let expect: f64 = shape
+            .nodes()
+            .iter()
+            .map(|n| simulate(&topo, &cfg(), &n.workload, &costs()).makespan())
+            .sum();
+        let rel = (dag.makespan() - expect).abs() / expect;
+        assert!(
+            rel < 0.05,
+            "dag chain {} vs summed sims {expect} (rel {rel})",
+            dag.makespan()
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let topo = Topology::cascadelake56();
+        let shape = GraphShape::unbalanced_diamond(28);
+        let config = cfg()
+            .with_scheme(Scheme::Gss)
+            .with_seed(42);
+        let a = replay(&shape, &topo, &config, &costs(), GraphMode::Dag)
+            .unwrap();
+        let b = replay(&shape, &topo, &config, &costs(), GraphMode::Dag)
+            .unwrap();
+        assert_eq!(a.makespan(), b.makespan());
+        assert_eq!(a.total_steals(), b.total_steals());
+        assert_eq!(a.critical_path, b.critical_path);
+    }
+
+    #[test]
+    fn dag_overlaps_unbalanced_diamond_barrier_does_not() {
+        // The acceptance shape: on the modelled 56-core machine the
+        // branches are each 28 wide, so barrier mode strands half the
+        // pool per branch while dag mode fills it.
+        let topo = Topology::cascadelake56();
+        let shape = GraphShape::unbalanced_diamond(28);
+        let dag =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        let barrier =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Barrier)
+                .unwrap();
+        assert!(
+            dag.makespan() < barrier.makespan(),
+            "dag {} must beat barrier {}",
+            dag.makespan(),
+            barrier.makespan()
+        );
+        // the light branch rides entirely inside the heavy branch's span
+        let light = dag.node("light").unwrap();
+        let heavy = dag.node("heavy").unwrap();
+        assert!(light.finish <= heavy.finish);
+        assert!(light.start < heavy.finish, "branches overlapped");
+        // and the critical path goes through the heavy branch
+        assert!(dag
+            .critical_path
+            .contains(&"heavy".to_string()));
+        assert!(!dag.critical_path.contains(&"light".to_string()));
+    }
+
+    #[test]
+    fn every_item_executes_exactly_once_in_dag_mode() {
+        let topo = Topology::broadwell20();
+        let shape = GraphShape::new("counts")
+            .node(NodeModel::uniform("a", 7_001, 1e-7))
+            .node(NodeModel::uniform("b", 3_003, 1e-7).after("a"))
+            .node(NodeModel::uniform("c", 2_002, 1e-7).after("a"))
+            .node(
+                NodeModel::uniform("d", 555, 1e-7).after("b").after("c"),
+            );
+        let out =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        for node in &out.nodes {
+            let want = shape
+                .nodes()
+                .iter()
+                .find(|n| n.name == node.name)
+                .unwrap()
+                .workload
+                .items();
+            assert_eq!(node.outcome.report.total_items(), want, "{}", node.name);
+        }
+        assert!(out.serial_time() >= out.makespan());
+    }
+
+    #[test]
+    fn zero_item_nodes_chain_through() {
+        let topo = Topology::broadwell20();
+        let shape = GraphShape::new("zeros")
+            .node(NodeModel::uniform("a", 0, 0.0))
+            .node(NodeModel::uniform("b", 0, 0.0).after("a"))
+            .node(NodeModel::uniform("c", 1_000, 1e-7).after("b"));
+        let out =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        assert_eq!(out.node("a").unwrap().finish, 0.0);
+        assert_eq!(out.node("c").unwrap().outcome.report.total_items(), 1_000);
+        assert!(out.makespan() > 0.0);
+        // both modes cost an empty node identically (zero span), so
+        // empty synchronization-only nodes can't fake a dag-overlap win
+        let barrier =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Barrier)
+                .unwrap();
+        assert_eq!(barrier.node("a").unwrap().outcome.report.makespan, 0.0);
+        assert_eq!(barrier.node("b").unwrap().outcome.report.makespan, 0.0);
+        assert_eq!(out.node("b").unwrap().outcome.report.makespan, 0.0);
+    }
+
+    #[test]
+    fn empty_shape_replays_to_zero() {
+        let topo = Topology::broadwell20();
+        let out = replay(
+            &GraphShape::new("empty"),
+            &topo,
+            &cfg(),
+            &costs(),
+            GraphMode::Dag,
+        )
+        .unwrap();
+        assert!(out.nodes.is_empty());
+        assert_eq!(out.makespan(), 0.0);
+        assert!(out.critical_path.is_empty());
+    }
+
+    #[test]
+    fn per_node_config_overrides_apply_in_replay() {
+        let topo = Topology::broadwell20();
+        let shape = GraphShape::new("cfg")
+            .node(NodeModel::uniform("default", 1_000, 1e-7))
+            .node(
+                NodeModel::uniform("gss", 1_000, 1e-7)
+                    .after("default")
+                    .with_config(cfg().with_scheme(Scheme::Gss)),
+            );
+        let out =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        assert_eq!(out.node("default").unwrap().outcome.report.scheme, "STATIC");
+        assert_eq!(out.node("gss").unwrap().outcome.report.scheme, "GSS");
+    }
+}

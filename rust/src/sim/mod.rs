@@ -16,10 +16,21 @@
 //!
 //! Cost-model constants are calibrated against the host by
 //! [`calibrate`], so simulated makespans are in host-seconds.
+//!
+//! On top of single-job simulation sits **virtual-time graph replay**
+//! ([`graph`]): a [`GraphShape`] of cost-described nodes (the DES
+//! sibling of [`crate::sched::graph::GraphSpec`]) is replayed with
+//! dependency-aware dispatch — a worker retiring a node's last chunk
+//! enqueues ready dependents at the current virtual time, so
+//! DAG-overlap wins are predictable on the modelled 20- and 56-core
+//! machines, not just measurable on the host. The replay is the oracle
+//! for graph-level autotuning ([`crate::sched::autotune::tune_graph`]).
 
 pub mod calibrate;
 pub mod engine;
+pub mod graph;
 pub mod model;
 
 pub use engine::{simulate, SimOutcome};
+pub use graph::{replay, GraphShape, GraphSimOutcome, NodeModel, NodeSimOutcome};
 pub use model::{CostModel, Workload};

@@ -131,13 +131,15 @@ impl Vee {
                     .with_shared_config(Arc::clone(&self.sched)),
                 body,
             ),
-            #[allow(deprecated)]
-            None => crate::sched::worker::run_once(
-                &self.topo,
-                &self.sched,
-                items,
-                body,
-            ),
+            // Oneshot mode: spawn a throwaway executor for this one job
+            // (construct pool → run → join, the seed's spawn-per-stage
+            // semantics) without going through the deprecated
+            // worker::run_once shim.
+            None => Executor::new(
+                Arc::clone(&self.topo),
+                Arc::clone(&self.sched),
+            )
+            .run(JobSpec::new(items), body),
         }
     }
 

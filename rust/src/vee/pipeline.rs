@@ -21,6 +21,7 @@ use super::Vee;
 use crate::config::GraphMode;
 use crate::sched::graph::{toposort, GraphError, GraphSpec, NodeSpec};
 use crate::sched::{SchedReport, TaskRange};
+use crate::sim::{GraphShape, NodeModel, Workload};
 
 /// One vectorized operator: a name, an item count, the names of the
 /// stages it depends on, and a body executed over task ranges.
@@ -109,6 +110,29 @@ impl<'a> Pipeline<'a> {
         stage.after = after.iter().map(|s| s.to_string()).collect();
         self.stages.push(stage);
         self
+    }
+
+    /// The cost-described [`GraphShape`] of this pipeline for post-hoc
+    /// virtual-time replay ([`crate::sim::graph::replay`]): same stage
+    /// names, item counts, and dependency edges as the
+    /// [`GraphSpec`] that [`Pipeline::run`] submits, with each item
+    /// costed at `per_item` virtual seconds (uniform — the coarse model;
+    /// apps with skewed per-item costs export precise shapes themselves,
+    /// e.g. [`crate::apps::cc::iteration_shape`]). Replaying the shape
+    /// on a modelled machine predicts what dag dispatch buys this
+    /// pipeline beyond the host it actually ran on.
+    pub fn to_shape(&self, per_item: f64) -> GraphShape {
+        let mut shape = GraphShape::new(&self.name);
+        for stage in &self.stages {
+            shape.add(
+                NodeModel::new(
+                    &stage.name,
+                    Workload::uniform(&stage.name, stage.items, per_item),
+                )
+                .after_all(stage.after.iter().map(String::as_str)),
+            );
+        }
+        shape
     }
 
     /// Execute the pipeline on the engine; panics on an invalid stage
@@ -380,5 +404,36 @@ mod tests {
         let report = Pipeline::new("empty").run(&Vee::host_default());
         assert!(report.stages.is_empty());
         assert_eq!(report.serial_time(), 0.0);
+    }
+
+    #[test]
+    fn to_shape_mirrors_submitted_graph() {
+        use crate::sim::{self, CostModel};
+        use crate::topology::Topology;
+        let pipeline = Pipeline::new("p")
+            .stage("a", 400, |_w, _r| {})
+            .stage_after("b", 200, &["a"], |_w, _r| {})
+            .stage_after("c", 300, &["a"], |_w, _r| {})
+            .stage_after("d", 100, &["b", "c"], |_w, _r| {});
+        let shape = pipeline.to_shape(1e-6);
+        assert_eq!(shape.name, "p");
+        assert_eq!(
+            shape.node_names().collect::<Vec<_>>(),
+            vec!["a", "b", "c", "d"]
+        );
+        assert!((shape.total_cost() - 1000.0 * 1e-6).abs() < 1e-12);
+        // the emitted shape replays with the same dependency semantics
+        // the executor dispatched: b and c overlap after a
+        let out = sim::replay(
+            &shape,
+            &Topology::broadwell20(),
+            &SchedConfig::default(),
+            &CostModel::recorded(),
+            GraphMode::Dag,
+        )
+        .unwrap();
+        let (b, c) = (out.node("b").unwrap(), out.node("c").unwrap());
+        assert_eq!(b.start, c.start, "both branches released by a");
+        assert!(out.node("d").unwrap().start >= b.finish.min(c.finish));
     }
 }

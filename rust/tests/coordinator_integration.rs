@@ -5,7 +5,7 @@ use std::net::TcpListener;
 use daphne_sched::apps::cc;
 use daphne_sched::config::SchedConfig;
 use daphne_sched::coordinator::{worker, Leader};
-use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::graph::{amazon_like, SnapGraph};
 use daphne_sched::matrix::CsrMatrix;
 use daphne_sched::sched::Scheme;
 use daphne_sched::topology::Topology;
@@ -30,7 +30,7 @@ fn spawn_workers(n: usize, scheme: Scheme) -> Vec<std::net::SocketAddr> {
 
 #[test]
 fn distributed_cc_matches_local() {
-    let g = amazon_like(&GraphSpec::small(600, 13)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(600, 13)).symmetrize();
     let local = cc::run_native(
         &g,
         &Topology::symmetric("t", 1, 2, 1.0, 1.0),
@@ -94,7 +94,7 @@ fn script_errors_propagate() {
 
 #[test]
 fn distribute_assigns_contiguous_blocks() {
-    let g = amazon_like(&GraphSpec::small(103, 5)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(103, 5)).symmetrize();
     let addrs = spawn_workers(4, Scheme::Static);
     let mut leader = Leader::connect(&addrs).unwrap();
     leader.distribute_sparse("G", &g).unwrap();

@@ -4,7 +4,7 @@
 
 use daphne_sched::apps::{cc, linreg};
 use daphne_sched::config::SchedConfig;
-use daphne_sched::graph::{amazon_like, GraphSpec};
+use daphne_sched::graph::{amazon_like, SnapGraph};
 use daphne_sched::matrix::DenseMatrix;
 use daphne_sched::runtime::{DeviceService, Runtime};
 use daphne_sched::sched::{QueueLayout, Scheme};
@@ -74,7 +74,7 @@ fn pjrt_cc_matches_native_labels() {
     if !artifacts_ready() {
         return;
     }
-    let g = amazon_like(&GraphSpec::small(300, 21)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(300, 21)).symmetrize();
     let (service, client) = DeviceService::start_default().unwrap();
     let sched = SchedConfig::default().with_scheme(Scheme::Gss);
     let native = cc::run_native(&g, &topo(), &sched, 100);

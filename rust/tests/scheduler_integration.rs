@@ -11,8 +11,8 @@ use std::time::{Duration, Instant};
 
 use daphne_sched::apps::{cc, linreg};
 use daphne_sched::config::{GraphMode, SchedConfig};
-use daphne_sched::graph::{amazon_like, scale_up, GraphSpec};
-use daphne_sched::sched::graph::GraphSpec as TaskGraph;
+use daphne_sched::graph::{amazon_like, scale_up, SnapGraph};
+use daphne_sched::sched::graph::GraphSpec;
 use daphne_sched::sched::{
     Executor, GraphError, JobSpec, NodeSpec, NodeStatus, QueueLayout, Scheme,
     VictimStrategy,
@@ -135,7 +135,7 @@ fn diamond_graph_overlaps_independent_branches_on_one_pool() {
     let overlap = AtomicBool::new(true);
     let b_done = AtomicBool::new(false);
     let c_done = AtomicBool::new(false);
-    let spec = TaskGraph::new("diamond")
+    let spec = GraphSpec::new("diamond")
         .node(NodeSpec::new("a", 1_000), |_w, r| {
             a_items.fetch_add(r.len(), Ordering::SeqCst);
         })
@@ -186,7 +186,7 @@ fn cyclic_graph_specs_are_rejected_not_deadlocked() {
         Arc::new(Topology::symmetric("t2", 1, 2, 1.0, 1.0)),
         Arc::new(SchedConfig::default()),
     );
-    let three_cycle = TaskGraph::new("cycle3")
+    let three_cycle = GraphSpec::new("cycle3")
         .node(NodeSpec::new("a", 10).after("c"), |_w, _r| {})
         .node(NodeSpec::new("b", 10).after("a"), |_w, _r| {})
         .node(NodeSpec::new("c", 10).after("b"), |_w, _r| {});
@@ -195,7 +195,7 @@ fn cyclic_graph_specs_are_rejected_not_deadlocked() {
         other => panic!("expected cycle rejection, got {other:?}"),
     }
     // a cycle hanging off an acyclic prefix is still rejected whole
-    let tail_cycle = TaskGraph::new("tail")
+    let tail_cycle = GraphSpec::new("tail")
         .node(NodeSpec::new("root", 10), |_w, _r| {})
         .node(NodeSpec::new("x", 10).after("root").after("y"), |_w, _r| {})
         .node(NodeSpec::new("y", 10).after("x"), |_w, _r| {});
@@ -221,7 +221,7 @@ fn panic_in_node_cancels_dependents_but_not_independent_branches() {
     );
     let e_ran = Arc::new(AtomicUsize::new(0));
     let e_ran2 = Arc::clone(&e_ran);
-    let spec = TaskGraph::new("partial-failure")
+    let spec = GraphSpec::new("partial-failure")
         .node(NodeSpec::new("a", 100), |_w, _r| {})
         .node(NodeSpec::new("bad", 100).after("a"), |_w, r| {
             if r.start == 0 {
@@ -273,7 +273,7 @@ fn graph_nodes_preserve_partitioning_invariants_on_all_layouts() {
         let b = hit_counters(8_000);
         let c = hit_counters(5_431);
         let d = hit_counters(900);
-        let spec = TaskGraph::new("invariants")
+        let spec = GraphSpec::new("invariants")
             .node(NodeSpec::new("a", a.len()), |_w, r| {
                 for i in r.iter() {
                     a[i].fetch_add(1, Ordering::Relaxed);
@@ -322,7 +322,7 @@ fn graph_nodes_preserve_partitioning_invariants_on_all_layouts() {
 /// agree with each other on a full app run.
 #[test]
 fn linear_pipelines_and_apps_agree_across_graph_modes() {
-    let g = amazon_like(&GraphSpec::small(400, 2)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(400, 2)).symmetrize();
     let topo = Topology::symmetric("t4", 1, 4, 1.0, 1.0);
     let dag = Vee::new(topo.clone(), SchedConfig::default());
     let barrier = Vee::new(topo, SchedConfig::default())
@@ -339,7 +339,7 @@ fn linear_pipelines_and_apps_agree_across_graph_modes() {
 /// onto one shared engine produce the same results as isolated runs.
 #[test]
 fn concurrent_app_pipelines_on_shared_engine_match_isolated_runs() {
-    let g = amazon_like(&GraphSpec::small(400, 2)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(400, 2)).symmetrize();
     let expected =
         cc::run_native(&g, &host2(), &SchedConfig::default(), 100).labels;
     let vee = Vee::new(
@@ -359,7 +359,7 @@ fn concurrent_app_pipelines_on_shared_engine_match_isolated_runs() {
 
 #[test]
 fn full_config_matrix_runs_cc_correctly() {
-    let g = amazon_like(&GraphSpec::small(400, 2)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(400, 2)).symmetrize();
     let expected =
         cc::run_native(&g, &host2(), &SchedConfig::default(), 100).labels;
     let layouts = [
@@ -395,7 +395,7 @@ fn full_config_matrix_runs_cc_correctly() {
 
 #[test]
 fn scaled_graph_has_k_times_components() {
-    let g = amazon_like(&GraphSpec::small(150, 8)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(150, 8)).symmetrize();
     let scaled = scale_up(&g, 4);
     let r = cc::run_native(&scaled, &host2(), &SchedConfig::default(), 100);
     assert_eq!(r.components, 4, "4 disjoint copies = 4 components");
@@ -407,7 +407,7 @@ fn des_reproduces_fig7_ordering_smallscale() {
     // environment (DAPHNE-like dispatch costs + OS interference): MFSC
     // must beat STATIC (the paper's headline Fig. 7a result). Averaged
     // over iterations like the figure harness.
-    let g = amazon_like(&GraphSpec::small(200_000, 1)).symmetrize();
+    let g = amazon_like(&SnapGraph::small(200_000, 1)).symmetrize();
     let topo = Topology::broadwell20();
     let costs = CostModel::daphne_like();
     let base = SchedConfig::default().with_seed(1);

@@ -1,0 +1,267 @@
+//! Cross-layer tests of the virtual-time graph-replay subsystem
+//! (`sim::graph`) and graph-level autotuning (`sched::autotune`):
+//! replay semantics vs the single-job DES, error parity with the real
+//! executor's graph validation, the dag-vs-barrier acceptance shape on
+//! the modelled 56-core machine, and the apps' exported shapes agreeing
+//! with the pipelines they actually run.
+
+use std::sync::Arc;
+
+use daphne_sched::apps::{cc, linreg};
+use daphne_sched::bench::AppCosts;
+use daphne_sched::config::{GraphMode, SchedConfig};
+use daphne_sched::graph::{amazon_like, SnapGraph};
+use daphne_sched::sched::autotune::{self, SearchSpace};
+use daphne_sched::sched::graph::{GraphError, GraphSpec};
+use daphne_sched::sched::{Executor, QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::sim::{self, CostModel, GraphShape, NodeModel};
+use daphne_sched::topology::Topology;
+
+fn costs() -> CostModel {
+    CostModel::recorded()
+}
+
+fn default_cfg() -> SchedConfig {
+    SchedConfig::default()
+}
+
+#[test]
+fn replay_is_deterministic_per_seed() {
+    let topo = Topology::cascadelake56();
+    let shape = GraphShape::unbalanced_diamond(28);
+    for mode in [GraphMode::Dag, GraphMode::Barrier] {
+        let config = default_cfg().with_scheme(Scheme::Fac2).with_seed(77);
+        let a = sim::replay(&shape, &topo, &config, &costs(), mode).unwrap();
+        let b = sim::replay(&shape, &topo, &config, &costs(), mode).unwrap();
+        assert_eq!(a.makespan(), b.makespan(), "{mode:?}");
+        assert_eq!(a.total_steals(), b.total_steals(), "{mode:?}");
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.finish, y.finish);
+        }
+    }
+}
+
+#[test]
+fn linear_chain_replay_matches_summed_single_job_sims() {
+    // A chain offers no overlap: dag replay must agree with the sum of
+    // independent single-job simulations up to the worker-availability
+    // skew at node boundaries (tiny vs the chunk work).
+    let topo = Topology::broadwell20();
+    let shape = GraphShape::new("chain")
+        .node(NodeModel::uniform("s1", 40_000, 1e-7))
+        .node(NodeModel::uniform("s2", 20_000, 3e-7).after("s1"))
+        .node(NodeModel::uniform("s3", 10_000, 5e-7).after("s2"));
+    let summed: f64 = shape
+        .nodes()
+        .iter()
+        .map(|n| {
+            sim::simulate(&topo, &default_cfg(), &n.workload, &costs())
+                .makespan()
+        })
+        .sum();
+    let barrier =
+        sim::replay(&shape, &topo, &default_cfg(), &costs(), GraphMode::Barrier)
+            .unwrap();
+    assert!(
+        (barrier.makespan() - summed).abs() < 1e-12,
+        "barrier replay is exactly the summed sims"
+    );
+    let dag =
+        sim::replay(&shape, &topo, &default_cfg(), &costs(), GraphMode::Dag)
+            .unwrap();
+    let rel = (dag.makespan() - summed).abs() / summed;
+    assert!(
+        rel < 0.05,
+        "dag chain {} vs summed {} (rel {rel})",
+        dag.makespan(),
+        summed
+    );
+}
+
+#[test]
+fn dag_beats_barrier_on_unbalanced_diamond_on_56_cores() {
+    // Acceptance criterion: on the modelled 56-core machine the
+    // unbalanced diamond's dag-mode makespan is below barrier mode.
+    let topo = Topology::cascadelake56();
+    let shape = GraphShape::unbalanced_diamond(28);
+    let dag =
+        sim::replay(&shape, &topo, &default_cfg(), &costs(), GraphMode::Dag)
+            .unwrap();
+    let barrier = sim::replay(
+        &shape,
+        &topo,
+        &default_cfg(),
+        &costs(),
+        GraphMode::Barrier,
+    )
+    .unwrap();
+    assert!(
+        dag.makespan() < barrier.makespan(),
+        "dag {} must beat barrier {}",
+        dag.makespan(),
+        barrier.makespan()
+    );
+    // the win is the light branch hiding inside the heavy one: roughly
+    // the light branch's span, not a rounding artifact
+    let light_span = barrier.node("light").unwrap().outcome.report.makespan;
+    assert!(
+        barrier.makespan() - dag.makespan() > 0.5 * light_span,
+        "overlap win {} vs light span {light_span}",
+        barrier.makespan() - dag.makespan()
+    );
+}
+
+#[test]
+fn replay_rejects_what_the_executor_rejects() {
+    // The same invalid graph structures produce the same GraphError
+    // from the virtual-time replay and the real executor submission.
+    let topo = Topology::symmetric("t", 1, 2, 1.0, 1.0);
+    let exec = Executor::new(
+        Arc::new(topo.clone()),
+        Arc::new(SchedConfig::default()),
+    );
+
+    // cycle
+    let shape = GraphShape::new("cycle")
+        .node(NodeModel::uniform("a", 10, 1e-7).after("b"))
+        .node(NodeModel::uniform("b", 10, 1e-7).after("a"));
+    let sim_err =
+        sim::replay(&shape, &topo, &default_cfg(), &costs(), GraphMode::Dag)
+            .unwrap_err();
+    let spec = GraphSpec::new("cycle")
+        .node(
+            daphne_sched::sched::NodeSpec::new("a", 10).after("b"),
+            |_w, _r| {},
+        )
+        .node(
+            daphne_sched::sched::NodeSpec::new("b", 10).after("a"),
+            |_w, _r| {},
+        );
+    let exec_err = exec.submit_graph(spec).err().unwrap();
+    match (&sim_err, &exec_err) {
+        (GraphError::Cycle(a), GraphError::Cycle(b)) => assert_eq!(a, b),
+        other => panic!("expected matching cycle errors, got {other:?}"),
+    }
+
+    // unknown dependency
+    let shape = GraphShape::new("unknown")
+        .node(NodeModel::uniform("a", 10, 1e-7).after("ghost"));
+    let sim_err =
+        sim::replay(&shape, &topo, &default_cfg(), &costs(), GraphMode::Dag)
+            .unwrap_err();
+    let spec = GraphSpec::new("unknown").node(
+        daphne_sched::sched::NodeSpec::new("a", 10).after("ghost"),
+        |_w, _r| {},
+    );
+    assert_eq!(sim_err, exec.submit_graph(spec).err().unwrap());
+
+    // duplicate node name
+    let shape = GraphShape::new("dup")
+        .node(NodeModel::uniform("a", 10, 1e-7))
+        .node(NodeModel::uniform("a", 10, 1e-7));
+    let sim_err = sim::replay(
+        &shape,
+        &topo,
+        &default_cfg(),
+        &costs(),
+        GraphMode::Barrier,
+    )
+    .unwrap_err();
+    let spec = GraphSpec::new("dup")
+        .node(daphne_sched::sched::NodeSpec::new("a", 10), |_w, _r| {})
+        .node(daphne_sched::sched::NodeSpec::new("a", 10), |_w, _r| {});
+    assert_eq!(sim_err, exec.submit_graph(spec).err().unwrap());
+}
+
+#[test]
+fn graph_autotune_beats_or_matches_best_uniform_on_56_cores() {
+    // Acceptance criterion: graph-level autotune's per-node configs
+    // replay at a makespan <= the best single uniform config from the
+    // sweep on the modelled 56-core machine.
+    let topo = Topology::cascadelake56();
+    let shape = GraphShape::unbalanced_diamond(28);
+    let space = SearchSpace {
+        schemes: vec![Scheme::Static, Scheme::Gss, Scheme::Mfsc, Scheme::Fac2],
+        layouts: vec![
+            QueueLayout::Centralized { atomic: false },
+            QueueLayout::Centralized { atomic: true },
+            QueueLayout::PerCore,
+        ],
+        victims: vec![VictimStrategy::Seq, VictimStrategy::SeqPri],
+    };
+    let tuning =
+        autotune::tune_graph(&shape, &topo, &costs(), &space, 3, 1).unwrap();
+    assert!(
+        tuning.predicted <= tuning.uniform.predicted + 1e-12,
+        "per-node {} vs best uniform {}",
+        tuning.predicted,
+        tuning.uniform.predicted
+    );
+    // and the assignment's replayed makespan truly is the prediction
+    let configs: Vec<SchedConfig> = tuning
+        .per_node
+        .iter()
+        .map(|c| c.config.clone())
+        .collect();
+    let replayed = daphne_sched::sim::graph::replay_with_configs(
+        &shape,
+        &topo,
+        &configs,
+        &costs(),
+        GraphMode::Dag,
+    )
+    .unwrap()
+    .makespan();
+    assert!((replayed - tuning.predicted).abs() / tuning.predicted < 1e-9);
+}
+
+#[test]
+fn app_shapes_mirror_their_executed_pipelines() {
+    // linreg: the exported shape has exactly the stage names the real
+    // pipeline reports, and its replay overlaps the two reductions.
+    let app = AppCosts::recorded();
+    let shape = linreg::graph_shape(50_000, app.lr_per_row);
+    let spec = linreg::LinregSpec {
+        rows: 500,
+        cols: 5,
+        lambda: 1e-3,
+        seed: 3,
+    };
+    let (x, y) = linreg::generate(&spec);
+    let topo = Topology::symmetric("t", 1, 2, 1.0, 1.0);
+    let result =
+        linreg::run_native(&x, &y, 1e-3, &topo, &SchedConfig::default())
+            .unwrap();
+    let ran: Vec<&str> =
+        result.report.stages.iter().map(|(n, _)| n.as_str()).collect();
+    let modelled: Vec<&str> = shape.node_names().collect();
+    assert_eq!(ran, modelled, "shape models the executed pipeline");
+
+    // cc: the iteration shape replays on the big modelled machine with
+    // the dag mode no slower than barrier (chain: equal up to skew)
+    let g = amazon_like(&SnapGraph::small(5_000, 7)).symmetrize();
+    let cc_shape = cc::iteration_shape(&g, app.cc_per_row, app.cc_per_nnz);
+    let machine = Topology::cascadelake56();
+    let dag = sim::replay(
+        &cc_shape,
+        &machine,
+        &default_cfg(),
+        &costs(),
+        GraphMode::Dag,
+    )
+    .unwrap();
+    let barrier = sim::replay(
+        &cc_shape,
+        &machine,
+        &default_cfg(),
+        &costs(),
+        GraphMode::Barrier,
+    )
+    .unwrap();
+    assert!(dag.makespan() <= barrier.makespan() * 1.05);
+    assert_eq!(
+        dag.node("propagate").unwrap().outcome.report.total_items(),
+        g.rows
+    );
+}
