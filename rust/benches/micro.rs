@@ -32,8 +32,7 @@ use daphne_sched::topology::Topology;
 use daphne_sched::util::fmt_duration;
 
 /// The seed's behaviour: spawn + join a fresh pool for every stage
-/// (construct executor → run one job → drop, exactly what the
-/// deprecated `worker::run_once` shim does).
+/// (construct executor → run one job → drop — `executor=oneshot`).
 fn spawn_per_stage(topo: &Topology, cfg: &SchedConfig, items: usize) {
     Executor::new(Arc::new(topo.clone()), Arc::new(cfg.clone()))
         .run(JobSpec::new(items), |_w, r| {
@@ -111,7 +110,7 @@ fn main() {
     // once; the legacy path pays it per job.
     let exec_topo = Topology::host();
     let exec_cfg = SchedConfig::default().with_scheme(Scheme::Gss);
-    bench("spawn-per-stage (run_once x 100 jobs)", || {
+    bench("spawn-per-stage (oneshot x 100 jobs)", || {
         for _ in 0..100 {
             spawn_per_stage(&exec_topo, &exec_cfg, 10_000);
         }

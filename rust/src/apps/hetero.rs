@@ -1,0 +1,172 @@
+//! The heterogeneous diamond pipeline (à la Trident): a mixed-modality
+//! IDA job whose two middle stages want *different* device classes.
+//!
+//! ```text
+//!            ┌─ dense  (regular tensor work: accelerator-friendly) ─┐
+//!   prep ────┤                                                      ├── join
+//!            └─ sparse (irregular, branchy: CPU-friendly) ──────────┘
+//! ```
+//!
+//! Trident's argument — echoed by the data-aware irregular-workload
+//! line of work in PAPERS.md — is that a heterogeneous pipeline's
+//! placement is a first-class scheduling decision: the dense branch is
+//! regular enough to saturate an accelerator while the sparse branch's
+//! skewed per-item costs want the CPU pool's width and work-stealing.
+//! This module provides that pipeline in cost-described
+//! ([`GraphShape`]) form for virtual-time replay on the modelled
+//! heterogeneous machines
+//! ([`Topology::hetero20`](crate::topology::Topology::hetero20) /
+//! [`Topology::hetero56`](crate::topology::Topology::hetero56)), under
+//! three placement policies:
+//!
+//! - [`diamond_shape`] — every node `Placement::Any`, i.e. the all-CPU
+//!   baseline (the accelerator pool idles);
+//! - [`pinned_diamond`] — the hand-placed assignment: `dense` on the
+//!   accelerator class, `sparse` pinned to the CPU pool;
+//! - autotuned — feed [`diamond_shape`] to
+//!   [`tune_graph`](crate::sched::autotune::tune_graph) with
+//!   [`SearchSpace::for_machine`](crate::sched::autotune::SearchSpace)
+//!   so placement is the fourth tuned dimension.
+//!
+//! `figure hetero` compares the three on both modelled machines; the
+//! `tune graph=hetero` CLI surface runs the autotuned variant.
+
+use crate::sim::{GraphShape, NodeModel, Workload};
+use crate::topology::DeviceClass;
+
+/// Per-item virtual costs of the shape, scaled by the CPU pool width
+/// `w` so the branches keep every worker busy on any modelled machine.
+///
+/// Branch totals are deliberately comparable (`dense ≈ 0.9 × sparse`):
+/// on the modelled machines the accelerator pool's throughput is below
+/// the CPU pool's (e.g. 8 devices × 4× < 56 cores on `hetero56`), so
+/// offloading the dense branch pays off precisely because it *frees the
+/// CPU pool for the sparse branch*, not because the accelerator is
+/// faster outright — the regime Trident's adaptive split targets.
+fn nodes(w: usize) -> [NodeModel; 4] {
+    // sparse: heavy-tailed per-item costs (hub rows first), the CC-like
+    // irregular profile where work-stealing earns its keep
+    let sparse_costs: Vec<f64> = (0..w * 32)
+        .map(|i| if i < w * 4 { 4e-4 } else { 1e-4 })
+        .collect();
+    [
+        NodeModel::uniform("prep", w * 64, 2e-6),
+        NodeModel::uniform("dense", w * 8, 5e-4).after("prep"),
+        NodeModel::new("sparse", Workload::from_costs("sparse", &sparse_costs))
+            .after("prep"),
+        NodeModel::uniform("join", w * 16, 2e-6)
+            .after("dense")
+            .after("sparse"),
+    ]
+}
+
+/// The heterogeneous diamond with no placement constraints: every node
+/// `Placement::Any`, so on a heterogeneous machine the whole pipeline
+/// runs on the CPU pool — the baseline placement-aware dispatch is
+/// measured against. `cpu_cores` is the machine's CPU pool width.
+pub fn diamond_shape(cpu_cores: usize) -> GraphShape {
+    let [prep, dense, sparse, join] = nodes(cpu_cores);
+    GraphShape::new("hetero-diamond")
+        .node(prep)
+        .node(dense)
+        .node(sparse)
+        .node(join)
+}
+
+/// The hand-pinned assignment: the dense branch on `accel`'s pool, the
+/// sparse branch pinned to the CPU pool (prep/join stay `Any`). Replay
+/// rejects it with `GraphError::NoSuchPool` on machines without an
+/// `accel` pool — pass a class the topology provides.
+pub fn pinned_diamond(cpu_cores: usize, accel: DeviceClass) -> GraphShape {
+    let [prep, dense, sparse, join] = nodes(cpu_cores);
+    GraphShape::new("hetero-diamond-pinned")
+        .node(prep)
+        .node(dense.on(accel))
+        .node(sparse.on(DeviceClass::Cpu))
+        .node(join)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphMode, SchedConfig};
+    use crate::sim::{replay, CostModel};
+    use crate::topology::{DeviceClass, Topology};
+
+    #[test]
+    fn shapes_validate_and_mirror_each_other() {
+        let any = diamond_shape(56);
+        let pinned = pinned_diamond(56, DeviceClass::Gpu);
+        assert!(any.validate().is_ok());
+        assert!(pinned.validate().is_ok());
+        assert_eq!(
+            any.node_names().collect::<Vec<_>>(),
+            vec!["prep", "dense", "sparse", "join"]
+        );
+        // same nodes, same costs — only the placements differ
+        assert!((any.total_cost() - pinned.total_cost()).abs() < 1e-12);
+        // branch totals comparable (dense slightly lighter)
+        let cost = |s: &GraphShape, n: &str| {
+            s.nodes()
+                .iter()
+                .find(|m| m.name == n)
+                .unwrap()
+                .workload
+                .total_cost()
+        };
+        let ratio = cost(&any, "dense") / cost(&any, "sparse");
+        assert!((0.7..1.1).contains(&ratio), "dense/sparse = {ratio}");
+    }
+
+    #[test]
+    fn pinned_beats_all_cpu_on_the_modelled_hetero_machines() {
+        let sched = SchedConfig::default();
+        let costs = CostModel::recorded();
+        for topo in [Topology::hetero20(), Topology::hetero56()] {
+            let w = topo.class_cores(DeviceClass::Cpu);
+            let any =
+                replay(&diamond_shape(w), &topo, &sched, &costs, GraphMode::Dag)
+                    .unwrap();
+            let pinned = replay(
+                &pinned_diamond(w, DeviceClass::Gpu),
+                &topo,
+                &sched,
+                &costs,
+                GraphMode::Dag,
+            )
+            .unwrap();
+            assert_eq!(
+                pinned.node("dense").unwrap().device,
+                DeviceClass::Gpu
+            );
+            assert_eq!(any.node("dense").unwrap().device, DeviceClass::Cpu);
+            assert!(
+                pinned.makespan() < any.makespan(),
+                "{}: pinned {} vs all-cpu {}",
+                topo.name,
+                pinned.makespan(),
+                any.makespan()
+            );
+            // the branches genuinely overlap across pools
+            let d = pinned.node("dense").unwrap();
+            let s = pinned.node("sparse").unwrap();
+            assert!(d.start < s.finish && s.start < d.finish);
+        }
+    }
+
+    #[test]
+    fn pinning_on_a_cpu_only_machine_is_rejected() {
+        let err = replay(
+            &pinned_diamond(20, DeviceClass::Gpu),
+            &Topology::broadwell20(),
+            &SchedConfig::default(),
+            &CostModel::recorded(),
+            GraphMode::Dag,
+        )
+        .unwrap_err();
+        assert!(matches!(
+            err,
+            crate::sched::GraphError::NoSuchPool { .. }
+        ));
+    }
+}

@@ -1,9 +1,15 @@
-//! The paper's two evaluated IDA pipelines (§4):
+//! The paper's two evaluated IDA pipelines (§4), plus the heterogeneous
+//! pipeline the placement subsystem targets:
 //!
 //! - [`cc`] — connected components over a co-purchase graph (Listing 1):
 //!   sparse, heavy-tailed row costs → dynamic partitioning wins.
 //! - [`linreg`] — linear-regression model training (Listing 2): dense,
 //!   uniform row costs → STATIC wins, scheduling overhead only hurts.
+//! - [`hetero`] — the heterogeneous diamond (à la Trident): a dense
+//!   accelerator-friendly branch and a sparse CPU-friendly branch,
+//!   replayed on the modelled hetero machines under
+//!   any/pinned/autotuned placement (`figure hetero`).
 
 pub mod cc;
+pub mod hetero;
 pub mod linreg;

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
-use crate::sched::{QueueLayout, Scheme, VictimStrategy};
+use crate::sched::{PlacementPolicy, QueueLayout, Scheme, VictimStrategy};
 use crate::topology::Topology;
 
 /// Everything needed to schedule one pipeline run.
@@ -134,6 +134,10 @@ pub struct RunConfig {
     /// Number of identical jobs submitted concurrently to the one
     /// resident pool (`jobs=<n>`; 1 = a single job stream).
     pub jobs: usize,
+    /// How heterogeneous-pipeline nodes are placed on device pools
+    /// (`placement=any|pinned|auto`; used by `figure hetero` /
+    /// `tune graph=hetero`).
+    pub placement: PlacementPolicy,
     /// Free-form workload parameters (apps interpret their own keys).
     pub params: BTreeMap<String, String>,
 }
@@ -146,6 +150,7 @@ impl Default for RunConfig {
             executor: ExecutorMode::default(),
             graph: GraphMode::default(),
             jobs: 1,
+            placement: PlacementPolicy::default(),
             params: BTreeMap::new(),
         }
     }
@@ -226,6 +231,15 @@ impl RunConfig {
                     .ok()
                     .filter(|&n| n >= 1)
                     .ok_or_else(|| ConfigError(format!("bad jobs '{value}'")))?;
+            }
+            "placement" => {
+                self.placement =
+                    PlacementPolicy::parse(value).ok_or_else(|| {
+                        ConfigError(format!(
+                            "unknown placement policy '{value}' \
+                             (any | pinned | auto)"
+                        ))
+                    })?;
             }
             _ => {
                 self.params.insert(key.to_string(), value.to_string());
@@ -308,6 +322,7 @@ impl fmt::Display for RunConfig {
         writeln!(f, "executor = {}", self.executor.name())?;
         writeln!(f, "graph = {}", self.graph.name())?;
         writeln!(f, "jobs = {}", self.jobs)?;
+        writeln!(f, "placement = {}", self.placement.name())?;
         for (k, v) in &self.params {
             writeln!(f, "{k} = {v}")?;
         }
@@ -372,6 +387,24 @@ mod tests {
         assert!(RunConfig::from_pairs(["executor=bogus"]).is_err());
         assert!(RunConfig::from_pairs(["jobs=0"]).is_err());
         assert!(RunConfig::from_pairs(["jobs=-1"]).is_err());
+    }
+
+    #[test]
+    fn placement_key_parses_and_roundtrips() {
+        let cfg = RunConfig::from_pairs(["placement=pinned"]).unwrap();
+        assert_eq!(cfg.placement, PlacementPolicy::Pinned);
+        assert_eq!(
+            RunConfig::default().placement,
+            PlacementPolicy::Auto,
+            "autotuned placement is the default policy"
+        );
+        assert!(RunConfig::from_pairs(["placement=bogus"]).is_err());
+        let text = cfg.to_string();
+        let back = RunConfig::from_text(&text).unwrap();
+        assert_eq!(back.placement, PlacementPolicy::Pinned);
+        // hetero machine presets resolve through the machine key
+        let cfg = RunConfig::from_pairs(["machine=hetero56"]).unwrap();
+        assert_eq!(cfg.topology.n_cores(), 64);
     }
 
     #[test]

@@ -14,13 +14,3 @@ pub mod snap;
 
 pub use generator::{amazon_like, SnapGraph};
 pub use scale::scale_up;
-
-/// Deprecated name of [`SnapGraph`]. Renamed so that "GraphSpec"
-/// unambiguously means the *task* graph
-/// ([`crate::sched::graph::GraphSpec`]); this type describes the
-/// SNAP-style *data* graph consumed by [`amazon_like`]/[`scale_up`].
-#[deprecated(
-    note = "renamed to SnapGraph — GraphSpec now refers to the task \
-            graph in sched::graph"
-)]
-pub type GraphSpec = SnapGraph;

@@ -29,9 +29,17 @@
 //! graph in the default `graph=dag` mode (or serialized with full
 //! barriers under `graph=barrier`), so a 40-iteration connected-
 //! components run spawns threads exactly once. The legacy
-//! spawn-per-stage path survives as deprecated shims
-//! (`sched::worker::run_once`) and as `executor=oneshot` in the CLI, for
+//! spawn-per-stage path survives as `executor=oneshot` in the CLI, for
 //! A/B comparison (see `benches/micro.rs`).
+//!
+//! On a heterogeneous [`topology::Topology`] (CPU sockets plus
+//! accelerator pools, e.g. [`topology::Topology::hetero56`]) the
+//! executor partitions its workers into one pool per device class
+//! ([`sched::placement`]); jobs and graph nodes carry a
+//! [`sched::Placement`] routing them to a pool, the DES replays the
+//! same pools in virtual time, and [`sched::autotune::tune_graph`]
+//! tunes placement as a fourth per-node dimension (CLI
+//! `figure hetero`, `tune graph=hetero`).
 //!
 //! ## Modules
 //!

@@ -6,22 +6,27 @@
 //! run        run an app natively on this host      (cc | linreg)
 //! dsl        run a DaphneDSL script file
 //! figure     regenerate a paper figure on a modelled machine (DES);
-//!            `figure dag` is the dag-vs-barrier graph-replay figure
+//!            `figure dag` is the dag-vs-barrier graph-replay figure,
+//!            `figure hetero` the placement any|pinned|auto comparison
 //! ablation   §4/§5 ablations (ss | atomic)
 //! calibrate  measure the DES cost-model constants on this host
 //! tune       automatic config selection via the DES oracle;
-//!            `tune graph=<linreg|cc|diamond>` selects per-node configs
-//!            over the app's task graph by virtual-time replay
+//!            `tune graph=<linreg|cc|diamond|hetero>` selects per-node
+//!            configs (and, for hetero, placements) over the app's task
+//!            graph by virtual-time replay
 //! worker     start a distributed worker daemon (Fig. 5)
 //! leader     drive distributed CC against worker daemons (Fig. 5)
 //! ```
 //!
 //! Options are `key=value` pairs (see `config::RunConfig::set`):
-//! `scheme=`, `layout=`, `victim=`, `machine=`, `seed=`,
+//! `scheme=`, `layout=`, `victim=`, `machine=` (incl. the modelled
+//! heterogeneous `hetero20`/`hetero56`), `seed=`,
 //! `executor=persistent|oneshot`, `graph=barrier|dag` (pipeline
 //! dispatch: full barriers vs dependency-aware task-graph overlap),
-//! `jobs=<n>` (concurrent jobs on the one resident pool), plus app
-//! parameters like `nodes=`, `scale=`, `rows=`, `cols=`.
+//! `jobs=<n>` (concurrent jobs on the one resident pool),
+//! `placement=any|pinned|auto` (device-pool policy for the
+//! heterogeneous pipeline), plus app parameters like `nodes=`,
+//! `scale=`, `rows=`, `cols=`.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -62,8 +67,10 @@ fn usage() -> String {
      \x20 daphne-sched dsl script.daph f=synthetic:amazon?nodes=10000\n\
      \x20 daphne-sched figure 7a [nodes=403394 scale=1 measure=1]\n\
      \x20 daphne-sched figure dag nodes=20000 lr_rows=100000  # dag-vs-barrier replay\n\
+     \x20 daphne-sched figure hetero            # placement any|pinned|auto, hetero machines\n\
      \x20 daphne-sched tune nodes=100000 machine=broadwell20  # single-workload sweep\n\
      \x20 daphne-sched tune graph=linreg rows=100000 machine=cascadelake56\n\
+     \x20 daphne-sched tune graph=hetero machine=hetero56 placement=auto\n\
      \x20 daphne-sched ablation ss\n\
      \x20 daphne-sched worker 127.0.0.1:7701\n\
      \x20 daphne-sched leader cc 127.0.0.1:7701,127.0.0.1:7702 nodes=10000"
@@ -310,7 +317,8 @@ fn figure_params(cfg: &RunConfig) -> FigureParams {
 fn cmd_figure(args: &[String]) -> Result<(), String> {
     let Some(which) = args.first() else {
         return Err(
-            "figure: expected id (7a 7b 8a 8b 9a 9b 10a 10b dag | all)".into()
+            "figure: expected id (7a 7b 8a 8b 9a 9b 10a 10b dag hetero | all)"
+                .into(),
         );
     };
     let cfg = parse_pairs(&args[1..])?;
@@ -381,16 +389,20 @@ fn cmd_calibrate() -> Result<(), String> {
 /// using the DES as an offline oracle. Two surfaces:
 ///
 /// - `tune [nodes=..]` — single-workload sweep (CC propagate pass).
-/// - `tune graph=<linreg|cc|diamond> [..]` — graph-level search: a
-///   per-node (scheme × layout × victim) assignment over the app's real
-///   task-graph shape, evaluated by dag-mode virtual-time replay with
-///   greedy critical-path-first refinement.
+/// - `tune graph=<linreg|cc|diamond|hetero> [..]` — graph-level search:
+///   a per-node (scheme × layout × victim × placement) assignment over
+///   the app's real task-graph shape, evaluated by dag-mode
+///   virtual-time replay with greedy critical-path-first refinement.
+///   `graph=hetero` tunes the heterogeneous diamond on a hetero machine
+///   model; `placement=any|pinned|auto` picks the placement policy.
 fn cmd_tune(args: &[String]) -> Result<(), String> {
-    use daphne_sched::apps::{cc, linreg};
+    use daphne_sched::apps::{cc, hetero, linreg};
     use daphne_sched::bench::AppCosts;
     use daphne_sched::config::GraphMode;
     use daphne_sched::sched::autotune;
+    use daphne_sched::sched::{Placement, PlacementPolicy};
     use daphne_sched::sim::{CostModel, GraphShape};
+    use daphne_sched::topology::DeviceClass;
 
     // `graph=<target>` selects graph-level tuning. A dispatch-mode
     // value (`graph=dag|barrier`) is rejected rather than silently
@@ -403,7 +415,8 @@ fn cmd_tune(args: &[String]) -> Result<(), String> {
                 return Err(format!(
                     "tune: 'graph={v}' is the pipeline-dispatch knob and has \
                      no effect on tuning; to tune per-node configs over a \
-                     task graph use graph=linreg | graph=cc | graph=diamond"
+                     task graph use graph=linreg | graph=cc | graph=diamond \
+                     | graph=hetero"
                 ));
             }
             Some(v) => target = Some(v.to_string()),
@@ -456,6 +469,8 @@ fn cmd_tune(args: &[String]) -> Result<(), String> {
     };
 
     // graph-level tuning over the app's real task-graph shape
+    let mut machine = machine;
+    let mut space = autotune::SearchSpace::default();
     let shape = match target.as_str() {
         "linreg" => linreg::graph_shape(
             cfg.param_usize("rows", 100_000),
@@ -470,43 +485,90 @@ fn cmd_tune(args: &[String]) -> Result<(), String> {
         "diamond" => {
             GraphShape::unbalanced_diamond(machine.n_cores() / 2)
         }
+        "hetero" => {
+            // placement needs an accelerator pool to route to; default
+            // to the modelled hetero56 when the selected machine is
+            // CPU-only (e.g. the default host topology).
+            if machine.device_classes().len() < 2 {
+                println!(
+                    "note: machine '{}' has no accelerator pool; using \
+                     machine=hetero56 (pass machine=hetero20|hetero56 to \
+                     choose)",
+                    machine.name
+                );
+                machine = Topology::hetero56();
+            }
+            let w = machine.class_cores(DeviceClass::Cpu);
+            match cfg.placement {
+                PlacementPolicy::Any => {
+                    // placement forced to Any everywhere: tune only the
+                    // scheduling dimensions of the all-CPU baseline
+                    space.placements = vec![Placement::Any];
+                    hetero::diamond_shape(w)
+                }
+                PlacementPolicy::Pinned => {
+                    // keep the hand-pinned classes fixed (empty
+                    // placement space = shape placements are kept)
+                    hetero::pinned_diamond(w, DeviceClass::Gpu)
+                }
+                PlacementPolicy::Auto => {
+                    space.placements =
+                        autotune::SearchSpace::for_machine(&machine)
+                            .placements;
+                    hetero::diamond_shape(w)
+                }
+            }
+        }
         other => {
             return Err(format!(
-                "tune: unknown graph target '{other}' (linreg | cc | diamond)"
+                "tune: unknown graph target '{other}' \
+                 (linreg | cc | diamond | hetero)"
             ))
         }
     };
     println!(
-        "graph-tuning '{}' ({} nodes) on {} ({} cores)...",
+        "graph-tuning '{}' ({} nodes) on {} ({} cores{})...",
         shape.name,
         shape.len(),
         machine.name,
-        machine.n_cores()
+        machine.n_cores(),
+        if space.placements.is_empty() {
+            String::new()
+        } else {
+            format!(", {} placement candidates", space.placements.len())
+        }
     );
     let tuning = autotune::tune_graph(
         &shape,
         &machine,
         &CostModel::daphne_like(),
-        &autotune::SearchSpace::default(),
+        &space,
         cfg.sched.seed,
         1,
     )
     .map_err(|e| e.to_string())?;
     println!(
-        "best uniform: {:<7} {:<14} {:<7} predicted {:.4}s",
+        "best uniform: {:<7} {:<14} {:<7} {:<10} predicted {:.4}s",
         tuning.uniform.config.scheme.name(),
         tuning.uniform.config.layout.name(),
         tuning.uniform.config.victim.name(),
+        tuning
+            .uniform_placement
+            .map(|p| p.describe())
+            // placement fixed by the shape (e.g. placement=pinned):
+            // the uniform row has no single placement
+            .unwrap_or_else(|| "(shape)".to_string()),
         tuning.uniform.predicted
     );
     println!("per-node selection:");
     for c in &tuning.per_node {
         println!(
-            "  {:<12} {:<7} {:<14} {:<7}",
+            "  {:<12} {:<7} {:<14} {:<7} {:<10}",
             c.name,
             c.config.scheme.name(),
             c.config.layout.name(),
-            c.config.victim.name()
+            c.config.victim.name(),
+            c.placement.describe()
         );
     }
     println!(

@@ -13,20 +13,24 @@
 //!
 //! [`tune_graph`] lifts the search to whole task graphs: the oracle is
 //! the virtual-time graph replay ([`crate::sim::graph::replay`]), the
-//! search space is a *per-node* (scheme × layout × victim) assignment,
-//! and the search is kept polynomial by a greedy critical-path-first
-//! refinement — start every node at the best single uniform
-//! configuration, then re-optimize one node at a time in order of how
-//! late it finishes (critical-path nodes first), accepting only
-//! assignments whose replayed makespan improves. The result is
-//! therefore never worse than the best uniform configuration.
+//! search space is a *per-node* (scheme × layout × victim × placement)
+//! assignment — placement joins as a fourth dimension on heterogeneous
+//! machine models ([`SearchSpace::for_machine`]), routing nodes between
+//! the CPU pool and accelerator pools — and the search is kept
+//! polynomial by a greedy critical-path-first refinement: start every
+//! node at the best single uniform configuration, then re-optimize one
+//! node at a time in order of how late it finishes (critical-path nodes
+//! first), accepting only assignments whose replayed makespan improves.
+//! The result is therefore never worse than the best uniform
+//! configuration.
 
 use crate::config::{GraphMode, SchedConfig};
 use crate::sched::graph::GraphError;
+use crate::sched::placement::{DevicePools, Placement, ResolveMode};
 use crate::sched::{QueueLayout, Scheme, VictimStrategy};
 use crate::sim::graph::{self as simgraph, GraphShape};
 use crate::sim::{self, CostModel, Workload};
-use crate::topology::Topology;
+use crate::topology::{DeviceClass, Topology};
 
 /// One evaluated candidate.
 #[derive(Debug, Clone)]
@@ -42,6 +46,14 @@ pub struct SearchSpace {
     pub schemes: Vec<Scheme>,
     pub layouts: Vec<QueueLayout>,
     pub victims: Vec<VictimStrategy>,
+    /// Placement candidates for [`tune_graph`]'s fourth dimension.
+    /// Empty (the default) = placement is *not* tuned: every node keeps
+    /// the placement its shape declares. Non-empty = the tuner assigns
+    /// each node a placement from this list (shape placements ignored),
+    /// e.g. `[Any, Class(Gpu)]` from [`SearchSpace::for_machine`] on a
+    /// GPU-bearing machine model. A candidate the machine cannot
+    /// satisfy is a [`GraphError::NoSuchPool`] up front.
+    pub placements: Vec<Placement>,
 }
 
 impl Default for SearchSpace {
@@ -57,11 +69,35 @@ impl Default for SearchSpace {
                 QueueLayout::PerCore,
             ],
             victims: VictimStrategy::ALL.to_vec(),
+            placements: Vec::new(),
         }
     }
 }
 
 impl SearchSpace {
+    /// The default space extended with the placement dimension for a
+    /// machine model: `Any` (the CPU pool) plus `Class(c)` for every
+    /// accelerator class `topo` provides. On a CPU-only machine the
+    /// placement list stays empty (nothing to tune).
+    pub fn for_machine(topo: &Topology) -> Self {
+        let accel: Vec<Placement> = topo
+            .device_classes()
+            .into_iter()
+            .filter(|&c| c != DeviceClass::Cpu)
+            .map(Placement::Class)
+            .collect();
+        SearchSpace {
+            placements: if accel.is_empty() {
+                Vec::new()
+            } else {
+                let mut p = vec![Placement::Any];
+                p.extend(accel);
+                p
+            },
+            ..SearchSpace::default()
+        }
+    }
+
     /// Enumerate the concrete configurations of this space. Centralized
     /// layouts ignore the victim dimension (enumerated once).
     pub fn configs(&self, seed: u64) -> Vec<SchedConfig> {
@@ -139,12 +175,14 @@ pub fn best(
 pub struct NodeChoice {
     pub name: String,
     pub config: SchedConfig,
+    /// Device-pool placement chosen for (or kept by) this node.
+    pub placement: Placement,
 }
 
 /// Result of [`tune_graph`].
 #[derive(Debug, Clone)]
 pub struct GraphTuning {
-    /// Per-node configurations, in shape order.
+    /// Per-node configurations (and placements), in shape order.
     pub per_node: Vec<NodeChoice>,
     /// Replayed makespan of the per-node assignment (dag mode), seconds.
     pub predicted: f64,
@@ -152,6 +190,11 @@ pub struct GraphTuning {
     /// replayed makespan — the refinement's starting point, so
     /// `predicted <= uniform.predicted` always holds.
     pub uniform: Candidate,
+    /// Placement the best uniform candidate used. `None` when placement
+    /// was not a tuned dimension (the uniform sweep then ran over the
+    /// shape's own, possibly per-node, placements — there is no single
+    /// placement to report).
+    pub uniform_placement: Option<Placement>,
 }
 
 impl GraphTuning {
@@ -166,14 +209,19 @@ impl GraphTuning {
     }
 }
 
-/// Graph-level automatic selection: choose a (scheme × layout × victim)
-/// configuration *per node* of `shape`, using dag-mode virtual-time
-/// replay ([`crate::sim::graph::replay_with_configs`]) as the oracle.
+/// Graph-level automatic selection: choose a (scheme × layout × victim
+/// × placement) configuration *per node* of `shape`, using dag-mode
+/// virtual-time replay ([`crate::sim::graph::replay_placed`]) as the
+/// oracle. Placement participates only when `space.placements` is
+/// non-empty (see [`SearchSpace::placements`] /
+/// [`SearchSpace::for_machine`]); otherwise every node keeps the
+/// placement its shape declares and the search is the classic
+/// three-dimensional one.
 ///
 /// Search strategy (polynomial in node count, not exponential):
 ///
 /// 1. **Uniform sweep** — replay the whole graph once per candidate
-///    configuration applied to every node; keep the best.
+///    (configuration × placement) applied to every node; keep the best.
 /// 2. **Greedy critical-path-first refinement** — starting from the
 ///    best uniform assignment, re-optimize one node at a time (nodes on
 ///    the current critical path first, then the rest by descending
@@ -195,9 +243,48 @@ pub fn tune_graph(
     // Validate (and toposort) once — the same Kahn pass as the executor
     // path; every oracle evaluation then replays against this order.
     let order = shape.toposorted()?;
+    let pools = DevicePools::from_topology(topo);
     let n = shape.len();
     let reps = repeats.max(1);
-    let eval = |assign: &[SchedConfig]| -> f64 {
+
+    // Placement candidates, resolved to pools once. Empty `placements`
+    // = keep the shape's own (still validated — same error surface as
+    // submitting the shape).
+    let resolve = |p: &Placement, node: &str| -> Result<usize, GraphError> {
+        pools
+            .resolve(p, ResolveMode::Model)
+            .map(|r| r.pool)
+            .map_err(|e| GraphError::NoSuchPool {
+                node: node.to_string(),
+                wanted: e.wanted,
+            })
+    };
+    let tune_placement = !space.placements.is_empty();
+    let placement_cands: Vec<(Placement, usize)> = if tune_placement {
+        space
+            .placements
+            .iter()
+            .map(|p| Ok((*p, resolve(p, "search space")?)))
+            .collect::<Result<_, GraphError>>()?
+    } else {
+        Vec::new()
+    };
+    // The shape's own placements are resolved only when they are what
+    // the tuner will actually use — with a non-empty placement space
+    // every node's placement comes from the candidate list, so a shape
+    // pinned to classes this machine lacks is still tunable. Resolution
+    // goes through the same `resolve_pools` as replay, keeping the
+    // tuner's error surface identical to the sim/executor paths.
+    let shape_assign: Vec<(Placement, usize)> = if tune_placement {
+        Vec::new()
+    } else {
+        let placements: Vec<Placement> =
+            shape.nodes().iter().map(|n| n.placement).collect();
+        let node_pool = simgraph::resolve_pools(shape, &pools, &placements)?;
+        placements.into_iter().zip(node_pool).collect()
+    };
+
+    let eval = |assign: &[SchedConfig], node_pool: &[usize]| -> f64 {
         let mut total = 0.0;
         for r in 0..reps {
             let seeded: Vec<SchedConfig> = assign
@@ -209,8 +296,9 @@ pub fn tune_graph(
                 .collect();
             total += simgraph::replay_ordered(
                 shape,
-                topo,
+                &pools,
                 &seeded,
+                node_pool,
                 costs,
                 GraphMode::Dag,
                 &order,
@@ -220,28 +308,62 @@ pub fn tune_graph(
         total / reps as f64
     };
 
-    // 1) uniform sweep
+    // 1) uniform sweep over (configuration × placement); with a fixed
+    // placement dimension the sweep runs over the shape's own (possibly
+    // per-node) assignment and there is no uniform placement to report.
     let candidates = space.configs(seed);
-    let mut uniform: Option<Candidate> = None;
-    for config in &candidates {
-        let predicted = eval(&vec![config.clone(); n]);
-        if uniform.as_ref().is_none_or(|u| predicted < u.predicted) {
-            uniform = Some(Candidate { config: config.clone(), predicted });
+    let mut uniform: Option<(Candidate, Option<(Placement, usize)>)> = None;
+    if tune_placement {
+        for config in &candidates {
+            for &(placement, pool) in &placement_cands {
+                let predicted =
+                    eval(&vec![config.clone(); n], &vec![pool; n]);
+                if uniform
+                    .as_ref()
+                    .is_none_or(|(u, _)| predicted < u.predicted)
+                {
+                    uniform = Some((
+                        Candidate { config: config.clone(), predicted },
+                        Some((placement, pool)),
+                    ));
+                }
+            }
+        }
+    } else {
+        let node_pool: Vec<usize> =
+            shape_assign.iter().map(|&(_, p)| p).collect();
+        for config in &candidates {
+            let predicted = eval(&vec![config.clone(); n], &node_pool);
+            if uniform
+                .as_ref()
+                .is_none_or(|(u, _)| predicted < u.predicted)
+            {
+                uniform = Some((
+                    Candidate { config: config.clone(), predicted },
+                    None,
+                ));
+            }
         }
     }
-    let uniform = uniform.expect("non-empty search space");
+    let (uniform, uniform_place) = uniform.expect("non-empty search space");
 
-    // 2) greedy critical-path-first refinement
+    // 2) greedy critical-path-first refinement over both dimensions
     let mut assign = vec![uniform.config.clone(); n];
+    let mut place: Vec<(Placement, usize)> = match uniform_place {
+        Some(up) => vec![up; n],
+        None => shape_assign.clone(),
+    };
     let mut best = uniform.predicted;
     for _pass in 0..n {
         let mut improved = false;
         // Sweep order: current critical path first (latest finisher
         // first), then the off-path nodes by descending finish time.
+        let node_pool: Vec<usize> = place.iter().map(|&(_, p)| p).collect();
         let outcome = simgraph::replay_ordered(
             shape,
-            topo,
+            &pools,
             &assign,
+            &node_pool,
             costs,
             GraphMode::Dag,
             &order,
@@ -250,37 +372,55 @@ pub fn tune_graph(
             outcome.critical_path.contains(&shape.nodes()[i].name)
         };
         let by_finish = simgraph::by_finish_desc(&outcome);
-        let order: Vec<usize> = by_finish
+        let sweep: Vec<usize> = by_finish
             .iter()
             .filter(|&&i| on_path(i))
             .chain(by_finish.iter().filter(|&&i| !on_path(i)))
             .copied()
             .collect();
-        for i in order {
-            let saved = assign[i].clone();
-            let mut winner: Option<(f64, SchedConfig)> = None;
+        for i in sweep {
+            let saved_cfg = assign[i].clone();
+            let saved_place = place[i];
+            let node_places: &[(Placement, usize)] = if tune_placement {
+                &placement_cands
+            } else {
+                std::slice::from_ref(&saved_place)
+            };
+            let mut winner: Option<(f64, SchedConfig, (Placement, usize))> =
+                None;
             for config in &candidates {
-                if config.scheme == saved.scheme
-                    && config.layout == saved.layout
-                    && config.victim == saved.victim
-                {
-                    continue;
-                }
-                assign[i] = config.clone();
-                let t = eval(&assign);
-                if t < best
-                    && winner.as_ref().is_none_or(|(w, _)| t < *w)
-                {
-                    winner = Some((t, config.clone()));
+                for &(placement, pool) in node_places {
+                    if config.scheme == saved_cfg.scheme
+                        && config.layout == saved_cfg.layout
+                        && config.victim == saved_cfg.victim
+                        && placement == saved_place.0
+                    {
+                        continue;
+                    }
+                    assign[i] = config.clone();
+                    place[i] = (placement, pool);
+                    let node_pool: Vec<usize> =
+                        place.iter().map(|&(_, p)| p).collect();
+                    let t = eval(&assign, &node_pool);
+                    if t < best
+                        && winner.as_ref().is_none_or(|(w, _, _)| t < *w)
+                    {
+                        winner =
+                            Some((t, config.clone(), (placement, pool)));
+                    }
                 }
             }
             match winner {
-                Some((t, config)) => {
+                Some((t, config, placement)) => {
                     best = t;
                     assign[i] = config;
+                    place[i] = placement;
                     improved = true;
                 }
-                None => assign[i] = saved,
+                None => {
+                    assign[i] = saved_cfg;
+                    place[i] = saved_place;
+                }
             }
         }
         if !improved {
@@ -292,14 +432,16 @@ pub fn tune_graph(
         per_node: shape
             .nodes()
             .iter()
-            .zip(&assign)
-            .map(|(node, config)| NodeChoice {
+            .zip(assign.iter().zip(&place))
+            .map(|(node, (config, &(placement, _)))| NodeChoice {
                 name: node.name.clone(),
                 config: config.clone(),
+                placement,
             })
             .collect(),
         predicted: best,
         uniform,
+        uniform_placement: uniform_place.map(|(p, _)| p),
     })
 }
 
@@ -391,6 +533,7 @@ mod tests {
                 QueueLayout::PerCore,
             ],
             victims: vec![VictimStrategy::Seq],
+            placements: Vec::new(),
         }
     }
 
@@ -454,6 +597,118 @@ mod tests {
             assert_eq!(x.config.scheme, y.config.scheme);
             assert_eq!(x.config.layout, y.config.layout);
         }
+    }
+
+    #[test]
+    fn for_machine_adds_placements_only_on_hetero_models() {
+        let cpu_only = SearchSpace::for_machine(&Topology::broadwell20());
+        assert!(cpu_only.placements.is_empty());
+        let hetero = SearchSpace::for_machine(&Topology::hetero56());
+        assert_eq!(
+            hetero.placements,
+            vec![
+                Placement::Any,
+                Placement::Class(crate::topology::DeviceClass::Gpu)
+            ]
+        );
+    }
+
+    #[test]
+    fn placement_tuning_moves_work_onto_the_accelerator_when_it_wins() {
+        use crate::sim::NodeModel;
+        // Two equal heavy independent branches on a machine whose GPU
+        // pool matches the CPU pool's throughput: keeping both on the
+        // CPU pool serializes their demand; splitting across pools
+        // halves the makespan. The tuner must discover the split.
+        let topo = Topology::heterogeneous(
+            "h",
+            1,
+            8,
+            1.0,
+            1.0,
+            &[(crate::topology::DeviceClass::Gpu, 2, 4.0)],
+        );
+        let shape = crate::sim::GraphShape::new("split")
+            .node(NodeModel::uniform("left", 4_000, 1e-6))
+            .node(NodeModel::uniform("right", 4_000, 1e-6));
+        let space = SearchSpace {
+            schemes: vec![Scheme::Static, Scheme::Gss],
+            layouts: vec![QueueLayout::Centralized { atomic: false }],
+            victims: vec![VictimStrategy::Seq],
+            placements: SearchSpace::for_machine(&topo).placements,
+        };
+        let costs = CostModel::recorded();
+        let tuning =
+            tune_graph(&shape, &topo, &costs, &space, 3, 1).unwrap();
+        let placements: Vec<Placement> =
+            tuning.per_node.iter().map(|c| c.placement).collect();
+        assert!(
+            placements.contains(&Placement::Class(
+                crate::topology::DeviceClass::Gpu
+            )),
+            "tuner kept everything off the accelerator: {placements:?}"
+        );
+        assert!(
+            tuning.predicted <= tuning.uniform.predicted + 1e-12,
+            "placement refinement must never lose to uniform"
+        );
+        // the split beats the best all-on-one-pool uniform clearly
+        assert!(
+            tuning.predicted < tuning.uniform.predicted * 0.95,
+            "split {} vs uniform {}",
+            tuning.predicted,
+            tuning.uniform.predicted
+        );
+    }
+
+    #[test]
+    fn tuned_placement_overrides_shape_pins_it_could_not_satisfy() {
+        use crate::sim::NodeModel;
+        // The shape pins a class this machine lacks; with a placement
+        // space the tuner owns the placement dimension, so the pin is
+        // ignored and tuning succeeds. Without one, the pin is kept —
+        // and correctly rejected.
+        let topo = Topology::broadwell20();
+        let shape = crate::sim::GraphShape::new("s").node(
+            NodeModel::uniform("n", 1_000, 1e-7)
+                .on(crate::topology::DeviceClass::Fpga),
+        );
+        let costs = CostModel::recorded();
+        let tunable = SearchSpace {
+            placements: vec![Placement::Any],
+            ..small_space()
+        };
+        let tuning =
+            tune_graph(&shape, &topo, &costs, &tunable, 1, 1).unwrap();
+        assert_eq!(tuning.per_node[0].placement, Placement::Any);
+        assert!(matches!(
+            tune_graph(&shape, &topo, &costs, &small_space(), 1, 1),
+            Err(GraphError::NoSuchPool { .. })
+        ));
+    }
+
+    #[test]
+    fn unsatisfiable_space_placement_errors_up_front() {
+        use crate::sim::NodeModel;
+        let shape = crate::sim::GraphShape::new("s")
+            .node(NodeModel::uniform("n", 100, 1e-6));
+        let space = SearchSpace {
+            placements: vec![Placement::Class(
+                crate::topology::DeviceClass::Fpga,
+            )],
+            ..small_space()
+        };
+        assert!(matches!(
+            tune_graph(
+                &shape,
+                &Topology::broadwell20(),
+                &CostModel::recorded(),
+                &space,
+                1,
+                1
+            ),
+            Err(GraphError::NoSuchPool { .. })
+        ));
     }
 
     #[test]

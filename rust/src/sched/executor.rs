@@ -36,6 +36,15 @@
 //! `queue_wait`/`failed_steals` tail after the report snapshot; item,
 //! task, busy and successful-steal counts are always exact.
 //!
+//! On a heterogeneous topology the executor partitions its workers into
+//! one pool per device class at spawn ([`super::placement`]): each job
+//! resolves its [`Placement`] to a pool before enqueueing, its task
+//! source is built over that pool's sub-topology, and only that pool's
+//! workers scan the job — so victim selection can never steal across a
+//! pool boundary, and CPU and accelerator jobs overlap on disjoint
+//! workers. A CPU-only topology is the one-pool special case with
+//! today's exact behaviour.
+//!
 //! Jobs may carry an internal completion hook (`on_done`), invoked
 //! exactly once after the job's completion is published — this is how
 //! the task-graph layer ([`super::graph`], [`Executor::submit_graph`])
@@ -55,6 +64,7 @@ use std::time::Instant;
 
 use super::metrics::{SchedReport, WorkerStats};
 use super::partitioner::PartitionerOptions;
+use super::placement::{DevicePools, Placement, ResolveMode};
 use super::queue::{self, TaskSource};
 use super::stealing;
 use super::task::TaskRange;
@@ -70,17 +80,24 @@ pub(super) type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 pub(super) type DoneCallback = Box<dyn FnOnce(&Arc<Job>) + Send>;
 
 /// Description of one job: an item count plus optional per-job
-/// scheduling overrides (`None` = the executor's default config).
+/// scheduling overrides (`None` = the executor's default config) and a
+/// device-pool [`Placement`] (`Any` = the default pool).
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     pub name: String,
     pub items: usize,
     pub config: Option<Arc<SchedConfig>>,
+    pub placement: Placement,
 }
 
 impl JobSpec {
     pub fn new(items: usize) -> Self {
-        JobSpec { name: "job".to_string(), items, config: None }
+        JobSpec {
+            name: "job".to_string(),
+            items,
+            config: None,
+            placement: Placement::Any,
+        }
     }
 
     pub fn named(mut self, name: &str) -> Self {
@@ -100,6 +117,21 @@ impl JobSpec {
         self.config = Some(config);
         self
     }
+
+    /// Constrain the job to a device pool. [`Executor::submit`] panics
+    /// on a placement the executor's topology cannot satisfy (the graph
+    /// API reports it as a [`GraphError`](super::GraphError) instead).
+    ///
+    /// Note: `Placement::Class(Gpu)` on a build without the `pjrt`
+    /// feature degrades to the CPU pool, and a plain job's
+    /// [`SchedReport`] has no field to carry that annotation — submit
+    /// through the graph API ([`Executor::submit_graph`]) when the
+    /// degradation must be observable
+    /// ([`NodeReport::fallback`](super::NodeReport)).
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
 }
 
 /// One in-flight job: the job-scoped task source, the body, and the
@@ -112,6 +144,9 @@ pub(super) struct Job {
     name: String,
     total: usize,
     config: Arc<SchedConfig>,
+    /// Device pool the job is scoped to: only that pool's workers scan
+    /// this job, and the source's queues cover only that pool.
+    pool: usize,
     source: Box<dyn TaskSource>,
     /// The task body. Taken and dropped by `finalize` *before* the
     /// completion event is published: workers can only call it while
@@ -165,6 +200,9 @@ struct RunState {
 
 pub(super) struct Shared {
     topo: Arc<Topology>,
+    /// Per-device-class worker pools (built once at spawn). On a
+    /// CPU-only topology this is a single pool covering every worker.
+    pub(super) pools: DevicePools,
     queue: Mutex<RunState>,
     work_cv: Condvar,
 }
@@ -184,6 +222,7 @@ impl Executor {
     pub fn new(topo: Arc<Topology>, default_config: Arc<SchedConfig>) -> Self {
         let shared = Arc::new(Shared {
             topo: Arc::clone(&topo),
+            pools: DevicePools::new(&topo),
             queue: Mutex::new(RunState {
                 jobs: Vec::new(),
                 next_seq: 0,
@@ -292,15 +331,29 @@ impl Executor {
         let config = spec
             .config
             .unwrap_or_else(|| Arc::clone(&self.default_config));
+        // Plain jobs have no error channel for an unsatisfiable
+        // placement (the graph path validates and returns GraphError
+        // before dispatching anything); panic with the resolution error.
+        let res = self
+            .shared
+            .pools
+            .resolve(&spec.placement, ResolveMode::Execute)
+            .unwrap_or_else(|e| panic!("job '{}': {e}", spec.name));
         enqueue_raw(
             &self.shared,
             &self.jobs_completed,
             spec.name,
             spec.items,
             config,
+            res.pool,
             body,
             None,
         )
+    }
+
+    /// The per-device-class worker pools this executor dispatches over.
+    pub fn pools(&self) -> &DevicePools {
+        &self.shared.pools
     }
 
     /// Shared pool state (handed to the task-graph dispatcher so node
@@ -318,13 +371,18 @@ impl Executor {
 /// single submission point: [`Executor::submit`]/[`Scope::submit`] call
 /// it with `on_done: None`; the task-graph dispatcher
 /// ([`super::graph`]) calls it from node completion hooks, which is why
-/// it is a free function over `&Shared` rather than a method.
+/// it is a free function over `&Shared` rather than a method. `pool` is
+/// the already-resolved device pool: the task source is built over that
+/// pool's sub-topology, so its queues — and therefore every local pull
+/// and steal — cover only that pool's workers.
+#[allow(clippy::too_many_arguments)]
 pub(super) fn enqueue_raw(
     shared: &Shared,
     completed: &AtomicUsize,
     name: String,
     items: usize,
     config: Arc<SchedConfig>,
+    pool: usize,
     body: Body,
     on_done: Option<DoneCallback>,
 ) -> Arc<Job> {
@@ -333,9 +391,18 @@ pub(super) fn enqueue_raw(
         pls_swr: config.pls_swr,
         seed: config.seed,
     };
-    let source =
-        queue::build_source(config.layout, config.scheme, items, &shared.topo, &opts);
-    let n = shared.topo.n_cores();
+    let source = queue::build_source(
+        config.layout,
+        config.scheme,
+        items,
+        &shared.pools.pool(pool).topo,
+        &opts,
+    );
+    // Stats are pool-local (one slot per pool worker, indexed by the
+    // worker's local id): the report's per_worker then matches the DES
+    // replay of the same placed node, instead of padding cov()/
+    // imbalance() with permanently-idle foreign-pool slots.
+    let n = shared.pools.pool(pool).topo.n_cores();
     let mut q = shared.queue.lock().unwrap();
     let seq = q.next_seq;
     q.next_seq += 1;
@@ -344,6 +411,7 @@ pub(super) fn enqueue_raw(
         name,
         total: items,
         config,
+        pool,
         source,
         body: Mutex::new(Some(body)),
         start: Instant::now(),
@@ -487,9 +555,13 @@ impl JobHandle<'_> {
 // ---------------------------------------------------------------------------
 
 /// The park/dispatch loop run by every pool thread: pick the oldest
-/// submitted job not yet exhausted *for this worker*, work it until its
-/// source is drained, remember it, repeat; park when nothing is left.
+/// submitted job *of this worker's device pool* not yet exhausted for
+/// this worker, work it until its source is drained, remember it,
+/// repeat; park when nothing is left. A worker never touches a job
+/// placed on a foreign pool — the pool boundary is enforced here and by
+/// the pool-scoped task source, not by victim-selection policy.
 fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
+    let my_pool = shared.pools.pool_of(w);
     // Jobs whose source this worker has already found empty. Sources
     // never refill, so membership is permanent; entries are garbage-
     // collected once the job leaves the run queue.
@@ -502,7 +574,7 @@ fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
                 if let Some(job) = q
                     .jobs
                     .iter()
-                    .find(|j| !exhausted.contains(&j.seq))
+                    .find(|j| j.pool == my_pool && !exhausted.contains(&j.seq))
                     .cloned()
                 {
                     break job;
@@ -528,7 +600,13 @@ fn run_job_stint(
     completed: &AtomicUsize,
 ) {
     let source = &*job.source;
-    let topo = &shared.topo;
+    // Everything about this job is pool-local: the source was built
+    // over the pool's sub-topology and the stats vector has one slot
+    // per pool worker, so both are indexed by the worker's *local* id
+    // (bodies still receive the global id).
+    let topo = &shared.pools.pool(job.pool).topo;
+    let lw = shared.pools.local_of(w);
+    debug_assert_eq!(shared.pools.pool_of(w), job.pool);
     let config = &job.config;
 
     // One handle to the body for this stint. SAFETY of later derefs: the
@@ -552,8 +630,8 @@ fn run_job_stint(
             .collect();
         VictimSelector::new(
             config.victim,
-            source.queue_of(w),
-            topo.socket_of(w.min(topo.n_cores() - 1)),
+            source.queue_of(lw),
+            topo.socket_of(lw.min(topo.n_cores() - 1)),
             queue_socket,
             config.seed ^ (w as u64).wrapping_mul(0x9E37_79B9),
         )
@@ -566,9 +644,9 @@ fn run_job_stint(
             break;
         }
         let t0 = Instant::now();
-        let pull = source.pull_local(w).or_else(|| {
+        let pull = source.pull_local(lw).or_else(|| {
             let selector = selector.as_mut()?;
-            let out = stealing::steal_round(source, selector, w);
+            let out = stealing::steal_round(source, selector, lw);
             local.failed_steals +=
                 out.attempts - usize::from(out.pull.is_some());
             out.pull
@@ -592,13 +670,13 @@ fn run_job_stint(
 
         // Publish stats before counting items: whoever observes
         // `executed == total` snapshots every worker's slot.
-        flush_stats(&mut local, &job.stats[w]);
+        flush_stats(&mut local, &job.stats[lw]);
         if let Err(payload) = outcome {
-            abort_job(job, payload, w, shared, completed);
+            abort_job(job, payload, lw, shared, completed);
         }
         complete_items(job, pull.task.len(), shared, completed);
     }
-    flush_stats(&mut local, &job.stats[w]);
+    flush_stats(&mut local, &job.stats[lw]);
 }
 
 fn flush_stats(delta: &mut WorkerStats, slot: &Mutex<WorkerStats>) {
@@ -656,7 +734,8 @@ fn finalize(job: &Arc<Job>, shared: &Shared, completed: &AtomicUsize) {
 /// A task body panicked: record the payload, stop handing out tasks,
 /// and drain the source so `executed` can still reach `total` (drained
 /// items are counted but never run) — waiters unblock instead of
-/// hanging, and the panic is resumed on the waiting thread.
+/// hanging, and the panic is resumed on the waiting thread. `w` is the
+/// draining worker's pool-local id (sources are pool-scoped).
 fn abort_job(
     job: &Arc<Job>,
     payload: PanicPayload,
@@ -699,13 +778,26 @@ fn queue_socket_of(source: &dyn TaskSource, q: usize, topo: &Topology) -> usize 
 mod tests {
     use super::*;
     use crate::sched::partitioner::Scheme;
+    use crate::sched::placement::PoolId;
     use crate::sched::queue::QueueLayout;
     use crate::sched::victim::VictimStrategy;
+    use crate::topology::DeviceClass;
     use std::collections::HashSet;
     use std::sync::atomic::AtomicUsize;
 
     fn host4() -> Arc<Topology> {
         Arc::new(Topology::symmetric("test4", 2, 2, 1.5, 1.0))
+    }
+
+    fn hetero4() -> Arc<Topology> {
+        Arc::new(Topology::heterogeneous(
+            "h",
+            1,
+            2,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 2.0)],
+        ))
     }
 
     fn exec(config: SchedConfig) -> Executor {
@@ -869,6 +961,140 @@ mod tests {
         assert!(result.is_err(), "body panic must propagate to the waiter");
         // the pool must still execute subsequent jobs correctly
         coverage(&e, JobSpec::new(2_500));
+    }
+
+    #[test]
+    fn executor_partitions_workers_into_class_pools_at_spawn() {
+        let e = Executor::new(hetero4(), Arc::new(SchedConfig::default()));
+        assert_eq!(e.n_workers(), 4, "one thread per place, all classes");
+        let pools = e.pools();
+        assert_eq!(pools.n_pools(), 2);
+        assert_eq!(pools.pool(0).class, DeviceClass::Cpu);
+        assert_eq!(pools.pool(0).members, vec![0, 1]);
+        assert_eq!(pools.pool(1).class, DeviceClass::Gpu);
+        assert_eq!(pools.pool(1).members, vec![2, 3]);
+    }
+
+    /// Worker ids a job's body observed.
+    fn workers_used(
+        e: &Executor,
+        spec: JobSpec,
+        items: usize,
+    ) -> HashSet<usize> {
+        let seen = Mutex::new(HashSet::new());
+        let r = e.run(spec, |w, _r| {
+            seen.lock().unwrap().insert(w);
+        });
+        assert_eq!(r.total_items(), items);
+        seen.into_inner().unwrap()
+    }
+
+    #[test]
+    fn pinned_jobs_never_run_on_a_foreign_pool() {
+        let e = Executor::new(
+            hetero4(),
+            Arc::new(
+                SchedConfig::default()
+                    .with_scheme(Scheme::Fac2)
+                    .with_layout(QueueLayout::PerCore),
+            ),
+        );
+        for _ in 0..5 {
+            let cpu = workers_used(
+                &e,
+                JobSpec::new(4_000)
+                    .with_placement(Placement::Class(DeviceClass::Cpu)),
+                4_000,
+            );
+            assert!(
+                cpu.is_subset(&HashSet::from([0, 1])),
+                "cpu-pinned job ran on {cpu:?}"
+            );
+            // Pool(id) pins strictly on every build (Class(Gpu) would
+            // degrade to the CPU pool without the pjrt feature).
+            let gpu = workers_used(
+                &e,
+                JobSpec::new(4_000)
+                    .with_placement(Placement::Pool(PoolId(1))),
+                4_000,
+            );
+            assert!(
+                gpu.is_subset(&HashSet::from([2, 3])),
+                "gpu-pool job ran on {gpu:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unplaced_jobs_use_the_cpu_pool_on_hetero_topologies() {
+        let e = Executor::new(hetero4(), Arc::new(SchedConfig::default()));
+        let used = workers_used(&e, JobSpec::new(5_000), 5_000);
+        assert!(
+            used.is_subset(&HashSet::from([0, 1])),
+            "Placement::Any must mean the default (CPU) pool, got {used:?}"
+        );
+    }
+
+    #[test]
+    fn pools_overlap_concurrent_jobs_with_full_coverage() {
+        let e = Executor::new(
+            hetero4(),
+            Arc::new(SchedConfig::default().with_scheme(Scheme::Gss)),
+        );
+        let a: Vec<AtomicUsize> =
+            (0..6_000).map(|_| AtomicUsize::new(0)).collect();
+        let b: Vec<AtomicUsize> =
+            (0..4_000).map(|_| AtomicUsize::new(0)).collect();
+        e.scope(|s| {
+            let ha = s.submit(
+                JobSpec::new(a.len())
+                    .named("cpu")
+                    .with_placement(Placement::Class(DeviceClass::Cpu)),
+                |w, r| {
+                    assert!(w < 2, "cpu node on worker {w}");
+                    for i in r.iter() {
+                        a[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            let hb = s.submit(
+                JobSpec::new(b.len())
+                    .named("accel")
+                    .with_placement(Placement::Pool(PoolId(1))),
+                |w, r| {
+                    assert!(w >= 2, "accel node on worker {w}");
+                    for i in r.iter() {
+                        b[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            assert_eq!(ha.wait().total_items(), a.len());
+            assert_eq!(hb.wait().total_items(), b.len());
+        });
+        for (i, h) in a.iter().chain(b.iter()).enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "slot {i} ran != once");
+        }
+    }
+
+    #[test]
+    fn unsatisfiable_placement_on_plain_submit_panics_with_context() {
+        let e = exec(SchedConfig::default());
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            e.run(
+                JobSpec::new(10)
+                    .named("fpga-job")
+                    .with_placement(Placement::Class(DeviceClass::Fpga)),
+                |_w, _r| {},
+            );
+        }));
+        let msg = result.unwrap_err();
+        let msg = msg
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("class:fpga"), "panic message was '{msg}'");
+        // the pool survives
+        coverage(&e, JobSpec::new(500));
     }
 
     #[test]

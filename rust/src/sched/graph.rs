@@ -32,6 +32,17 @@
 //!   thread (mirroring [`JobHandle::wait`](super::JobHandle::wait));
 //!   [`GraphHandle::join`] returns the per-node statuses instead.
 //!
+//! On heterogeneous topologies every node additionally carries a
+//! [`Placement`] ([`NodeSpec::on`] / [`NodeSpec::with_placement`]):
+//! placements are resolved against the executor's per-class device
+//! pools *before* anything dispatches, so an unsatisfiable placement is
+//! a [`GraphError::NoSuchPool`] — rejected, never a node that waits on
+//! a pool that does not exist. A placed node's job is scoped to its
+//! pool (its task source covers only that pool's workers, so it can
+//! neither execute on nor steal from a foreign pool), and nodes placed
+//! on different pools overlap on disjoint workers the moment their
+//! in-edges complete.
+//!
 //! [`Executor::run_graph`] is the borrowed-body entry point (bodies may
 //! borrow the caller's stack data; the call blocks until the whole
 //! graph is terminal) — it is what [`crate::vee::Pipeline`] builds on.
@@ -48,18 +59,24 @@ use super::executor::{
     enqueue_raw, Body, DoneCallback, Executor, Job, PanicPayload, Shared,
 };
 use super::metrics::SchedReport;
+use super::placement::{Placement, ResolveMode};
 use super::task::TaskRange;
 use crate::config::SchedConfig;
+use crate::topology::DeviceClass;
 
 /// Description of one graph node: a name (unique within its graph), an
-/// item count, optional per-node scheduling overrides, and the names of
-/// the nodes it must run after.
+/// item count, optional per-node scheduling overrides, a device-pool
+/// [`Placement`], and the names of the nodes it must run after.
 #[derive(Debug, Clone)]
 pub struct NodeSpec {
     pub name: String,
     pub items: usize,
     /// `None` = the executor's default config.
     pub config: Option<Arc<SchedConfig>>,
+    /// Which device pool the node's job is scoped to (`Any` = the
+    /// default pool). Resolved — and rejected if unsatisfiable — at
+    /// submission, before anything dispatches.
+    pub placement: Placement,
     /// Dependency edges by node name (duplicates are deduplicated at
     /// submission).
     pub after: Vec<String>,
@@ -71,6 +88,7 @@ impl NodeSpec {
             name: name.to_string(),
             items,
             config: None,
+            placement: Placement::Any,
             after: Vec::new(),
         }
     }
@@ -98,6 +116,19 @@ impl NodeSpec {
     /// Like [`NodeSpec::with_config`] but sharing an existing `Arc`.
     pub fn with_shared_config(mut self, config: Arc<SchedConfig>) -> Self {
         self.config = Some(config);
+        self
+    }
+
+    /// Pin this node to the pool of a device class (sugar for
+    /// [`NodeSpec::with_placement`]). A class the executor's topology
+    /// does not provide is a [`GraphError::NoSuchPool`] at submission.
+    pub fn on(self, class: DeviceClass) -> Self {
+        self.with_placement(Placement::Class(class))
+    }
+
+    /// Constrain where this node may execute.
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
         self
     }
 }
@@ -166,6 +197,14 @@ pub enum GraphError {
     /// The dependency edges contain a cycle; the named nodes are the
     /// ones that could not be topologically ordered.
     Cycle(Vec<String>),
+    /// `node` carries a [`Placement`] no device pool of the executor's
+    /// (or modelled machine's) topology satisfies — e.g.
+    /// `Placement::Class(Gpu)` on a CPU-only machine. Rejected before
+    /// dispatch, never left to deadlock as a forever-pending node.
+    /// (`node` is usually a graph-node name; the graph autotuner also
+    /// reports unsatisfiable *search-space* placement candidates through
+    /// this variant with `node = "search space"`.)
+    NoSuchPool { node: String, wanted: String },
 }
 
 impl fmt::Display for GraphError {
@@ -182,6 +221,13 @@ impl fmt::Display for GraphError {
                     f,
                     "dependency cycle: nodes {names:?} could not be \
                      topologically ordered (on or downstream of a cycle)"
+                )
+            }
+            GraphError::NoSuchPool { node, wanted } => {
+                write!(
+                    f,
+                    "placement '{wanted}' of '{node}' cannot be satisfied \
+                     by this topology's device pools"
                 )
             }
         }
@@ -268,6 +314,14 @@ pub enum NodeStatus {
 pub struct NodeReport {
     pub name: String,
     pub status: NodeStatus,
+    /// Device class of the pool the node resolved to (for cancelled
+    /// nodes: the pool it *would* have dispatched on).
+    pub device: DeviceClass,
+    /// Placement-degradation annotation, e.g. a `Class(Gpu)` node
+    /// rerouted to the CPU pool because this build has no `pjrt`
+    /// feature to drive the device (see
+    /// [`super::placement::ResolveMode::Execute`]).
+    pub fallback: Option<String>,
     /// Scheduling report; `None` for cancelled nodes (never dispatched).
     pub report: Option<SchedReport>,
 }
@@ -316,6 +370,13 @@ struct NodeState {
     name: String,
     items: usize,
     config: Arc<SchedConfig>,
+    /// Resolved device pool (index into the executor's
+    /// [`DevicePools`](super::placement::DevicePools)).
+    pool: usize,
+    /// Class of that pool, for the report.
+    device: DeviceClass,
+    /// Placement-degradation annotation (see [`NodeReport::fallback`]).
+    fallback: Option<String>,
     /// Taken when the node dispatches; dropped at cancellation for
     /// nodes that never dispatch. Either way it is gone before the
     /// graph's completion is observable (see `run_graph` safety).
@@ -394,6 +455,23 @@ impl Executor {
             .map(|(s, _)| (s.name.clone(), s.after.clone()))
             .collect();
         let topo = toposort(&meta)?;
+        // Resolve every node's placement up front: an unsatisfiable
+        // placement rejects the whole graph before anything dispatches
+        // (a lazily-discovered one would leave dependents pending
+        // forever — a deadlock, not an error).
+        let pools = &self.shared().pools;
+        let resolved: Vec<_> = spec
+            .nodes
+            .iter()
+            .map(|(ns, _)| {
+                pools
+                    .resolve(&ns.placement, ResolveMode::Execute)
+                    .map_err(|e| GraphError::NoSuchPool {
+                        node: ns.name.clone(),
+                        wanted: e.wanted,
+                    })
+            })
+            .collect::<Result<_, _>>()?;
         let n = spec.nodes.len();
         let mut nodes = Vec::with_capacity(n);
         let mut pending = Vec::with_capacity(n);
@@ -405,6 +483,9 @@ impl Executor {
                 config: ns
                     .config
                     .unwrap_or_else(|| Arc::clone(self.default_config())),
+                pool: resolved[i].pool,
+                device: pools.pool(resolved[i].pool).class,
+                fallback: resolved[i].fallback.clone(),
                 body: Mutex::new(Some(body)),
                 dependents: topo.dependents[i].clone(),
             });
@@ -459,6 +540,7 @@ fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
                 node.name.clone(),
                 0,
                 Arc::clone(&node.config),
+                node.pool,
                 body,
                 None,
             );
@@ -473,6 +555,7 @@ fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
                 node.name.clone(),
                 node.items,
                 Arc::clone(&node.config),
+                node.pool,
                 body,
                 Some(hook),
             );
@@ -599,6 +682,8 @@ fn wait_terminal(run: &GraphRun) -> (GraphReport, Option<PanicPayload>) {
         nodes.push(NodeReport {
             name: n.name.clone(),
             status: p.status[i].expect("remaining == 0 means all terminal"),
+            device: n.device,
+            fallback: n.fallback.clone(),
             report: p.reports[i].take(),
         });
     }
@@ -798,6 +883,78 @@ mod tests {
         // pool survives for subsequent work
         let r = e.run(super::super::JobSpec::new(1_000), |_w, _r| {});
         assert_eq!(r.total_items(), 1_000);
+    }
+
+    #[test]
+    fn absent_class_placement_is_rejected_not_deadlocked() {
+        use crate::topology::DeviceClass;
+        let e = exec(); // CPU-only test topology
+        let spec = GraphSpec::new("placed")
+            .node(NodeSpec::new("root", 100), |_w, _r| {})
+            .node(
+                NodeSpec::new("accel", 100)
+                    .after("root")
+                    .on(DeviceClass::Fpga),
+                |_w, _r| {},
+            );
+        match e.submit_graph(spec) {
+            Err(GraphError::NoSuchPool { node, wanted }) => {
+                assert_eq!(node, "accel");
+                assert_eq!(wanted, "class:fpga");
+            }
+            other => panic!("expected NoSuchPool, got {other:?}"),
+        }
+        // nothing dispatched — not even the satisfiable root
+        assert_eq!(e.jobs_completed(), 0);
+    }
+
+    #[test]
+    fn placed_nodes_report_their_device_and_pool() {
+        use crate::sched::placement::{Placement, PoolId};
+        use crate::topology::DeviceClass;
+        let e = Executor::new(
+            Arc::new(Topology::heterogeneous(
+                "h",
+                1,
+                2,
+                1.0,
+                1.0,
+                &[(DeviceClass::Gpu, 2, 2.0)],
+            )),
+            Arc::new(SchedConfig::default()),
+        );
+        let cpu_seen = Mutex::new(Vec::new());
+        let accel_seen = Mutex::new(Vec::new());
+        let spec = GraphSpec::new("hetero")
+            .node(
+                NodeSpec::new("cpu", 500).on(DeviceClass::Cpu),
+                |w, _r| cpu_seen.lock().unwrap().push(w),
+            )
+            .node(
+                NodeSpec::new("accel", 500)
+                    .with_placement(Placement::Pool(PoolId(1))),
+                |w, _r| accel_seen.lock().unwrap().push(w),
+            )
+            .node(
+                NodeSpec::new("join", 10).after("cpu").after("accel"),
+                |_w, _r| {},
+            );
+        let report = e.run_graph(spec).unwrap();
+        assert!(report.all_completed());
+        assert_eq!(report.node("cpu").unwrap().device, DeviceClass::Cpu);
+        assert_eq!(report.node("accel").unwrap().device, DeviceClass::Gpu);
+        assert_eq!(report.node("join").unwrap().device, DeviceClass::Cpu);
+        assert!(report.node("cpu").unwrap().fallback.is_none());
+        // explicit Pool pins stay on the GPU pool; without `pjrt` the
+        // unbacked dispatch is annotated rather than silent
+        let accel_fallback = &report.node("accel").unwrap().fallback;
+        if cfg!(feature = "pjrt") {
+            assert!(accel_fallback.is_none());
+        } else {
+            assert!(accel_fallback.as_ref().unwrap().contains("pjrt"));
+        }
+        assert!(cpu_seen.lock().unwrap().iter().all(|&w| w < 2));
+        assert!(accel_seen.lock().unwrap().iter().all(|&w| w >= 2));
     }
 
     #[test]

@@ -44,10 +44,27 @@
 //! the `graph=barrier|dag` config knob switches a run between serial
 //! stage order and dependency-aware dispatch for A/B comparison.
 //!
-//! The legacy spawn-per-run path survives as deprecated shims in
-//! [`worker`] (`run_once`, `ThreadPool`) layered over a one-shot
-//! `Executor` — the DES ([`crate::sim`]) still drives the *same*
-//! `TaskSource`/`VictimSelector` components in virtual time.
+//! # Heterogeneous device pools
+//!
+//! On a [`Topology::heterogeneous`](crate::topology::Topology) machine
+//! the executor partitions its workers into one pool per
+//! [`DeviceClass`](crate::topology::DeviceClass) at spawn
+//! ([`placement`]): jobs and graph nodes carry a
+//! [`placement::Placement`] (`Any` | `Class` | `Pool`) resolved against
+//! those pools before dispatch. Task sources are pool-scoped, so a
+//! placed node can neither execute on nor steal from a foreign pool,
+//! and CPU and accelerator nodes overlap on disjoint workers; a
+//! placement naming an absent class is a hard
+//! [`GraphError::NoSuchPool`], never a deadlock. The DES replay and
+//! graph autotuner model the same pools in virtual time, which makes
+//! placement the fourth tuned dimension
+//! (scheme × layout × victim × placement) of [`autotune::tune_graph`].
+//!
+//! The legacy spawn-per-run shims (`worker::run_once`, `ThreadPool`)
+//! were removed after every caller migrated to the persistent
+//! `Executor` (spawn-per-stage remains reproducible as
+//! `executor=oneshot`); the DES ([`crate::sim`]) still drives the
+//! *same* `TaskSource`/`VictimSelector` components in virtual time.
 //!
 //! # Prediction and tuning
 //!
@@ -68,11 +85,11 @@ pub mod executor;
 pub mod graph;
 pub mod metrics;
 pub mod partitioner;
+pub mod placement;
 pub mod queue;
 pub mod stealing;
 pub mod task;
 pub mod victim;
-pub mod worker;
 
 pub use executor::{Executor, JobHandle, JobSpec, Scope};
 pub use graph::{
@@ -81,8 +98,9 @@ pub use graph::{
 };
 pub use metrics::{SchedReport, WorkerStats};
 pub use partitioner::{ChunkCalc, Partitioner, Scheme};
+pub use placement::{
+    DevicePool, DevicePools, Placement, PlacementPolicy, PoolId,
+};
 pub use queue::{QueueLayout, TaskSource};
 pub use task::TaskRange;
 pub use victim::VictimStrategy;
-#[allow(deprecated)]
-pub use worker::ThreadPool;

@@ -1,0 +1,573 @@
+//! Heterogeneous device pools and graph-node placement.
+//!
+//! The DAPHNE worker manager "also creates threads that launch kernels
+//! on accelerators" (§3) — device classes are first-class in the worker
+//! manager even though the paper's evaluation is CPU-only. This module
+//! makes the dimension operational, the direction argued by Trident
+//! (adaptive scheduling for heterogeneous multimodal pipelines) and the
+//! data-aware heterogeneous-execution line of work in PAPERS.md:
+//!
+//! - [`DevicePools`] partitions a [`Topology`]'s places into one worker
+//!   pool per [`DeviceClass`], each with a pool-scoped sub-topology
+//!   (dense local worker ids, dense local NUMA domains, the per-class
+//!   speed factor folded into `core_speed`). The persistent
+//!   [`Executor`](super::Executor) builds this partition once at spawn;
+//!   the DES graph replay ([`crate::sim::graph::replay`]) builds the
+//!   same partition over the modelled machine.
+//! - [`Placement`] is the routing constraint a job or graph node
+//!   carries: `Any` (the default pool — CPU when present), `Class`
+//!   (pin to a device class), or `Pool` (pin to an explicit pool).
+//!   Task sources are pool-scoped, so chunks of a placed node are only
+//!   ever pulled — locally or via stealing — by workers of its pool;
+//!   victim selection cannot cross a pool boundary by construction.
+//! - Placement is *validated before dispatch*: a `Class` naming a
+//!   device class the topology does not provide resolves to an error
+//!   (surfaced as [`GraphError::NoSuchPool`](super::GraphError) by the
+//!   graph layer), never to an idle node that deadlocks the graph.
+//!
+//! # GPU execution vs GPU modelling
+//!
+//! Two resolution modes ([`ResolveMode`]) separate what the *build* can
+//! execute from what the *machine model* provides:
+//!
+//! - [`ResolveMode::Execute`] (real executor): `Class(Gpu)` on a
+//!   GPU-bearing topology routes to the GPU launcher pool — the
+//!   dedicated threads where kernel launches belong. The executor
+//!   routes bodies, it does not rewrite them: a GPU node's closure is
+//!   expected to drive the device itself through the PJRT
+//!   [`DeviceClient`](crate::runtime::DeviceClient) (as the apps'
+//!   `run_pjrt` paths do), which requires the `pjrt` feature. Without
+//!   the feature (the stub runtime cannot execute kernels) the node
+//!   falls back to the CPU pool and the resolution carries a fallback
+//!   annotation, which the graph layer surfaces on the
+//!   [`NodeReport`](super::NodeReport); if the topology has no CPU
+//!   pool to fall back to, the GPU pool is kept and the annotation
+//!   records that it runs without PJRT backing.
+//! - [`ResolveMode::Model`] (DES replay, autotuning): the modelled
+//!   machine's GPU pool is always honoured — simulation does not launch
+//!   kernels, so predictions describe the hardware, not this build.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::topology::{CorePlace, DeviceClass, Topology};
+
+/// Identifier of one device pool of an executor/topology: index into
+/// [`DevicePools`], dense in `0..n_pools`, ordered by first appearance
+/// of the class in the topology (CPU first for built-in constructors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PoolId(pub usize);
+
+/// Where a job or graph node may execute. Resolved against the
+/// executor's (or modelled machine's) [`DevicePools`] before dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// No constraint: the default pool — the CPU pool when the topology
+    /// has one (so an unplaced graph on a heterogeneous machine behaves
+    /// exactly like today's CPU-only dispatch), otherwise pool 0.
+    #[default]
+    Any,
+    /// Pin to the pool of a device class; an absent class is a hard
+    /// resolution error, never a hang.
+    Class(DeviceClass),
+    /// Pin to an explicit pool.
+    Pool(PoolId),
+}
+
+impl Placement {
+    /// Short human-readable form (`any`, `class:gpu`, `pool:1`) used in
+    /// reports, errors and CLI output.
+    pub fn describe(&self) -> String {
+        match self {
+            Placement::Any => "any".to_string(),
+            Placement::Class(c) => format!("class:{}", c.name()),
+            Placement::Pool(PoolId(i)) => format!("pool:{i}"),
+        }
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+/// How a run assigns placements to the heterogeneous app's graph nodes
+/// (CLI `placement=any|pinned|auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Every node `Placement::Any` — the all-CPU baseline.
+    Any,
+    /// The app's hand-pinned class assignment.
+    Pinned,
+    /// Placement chosen per node by graph-level autotuning
+    /// ([`super::autotune::tune_graph`]) with replay as the oracle.
+    #[default]
+    Auto,
+}
+
+impl PlacementPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Any => "any",
+            PlacementPolicy::Pinned => "pinned",
+            PlacementPolicy::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "any" => Some(PlacementPolicy::Any),
+            "pinned" | "pin" | "class" => Some(PlacementPolicy::Pinned),
+            "auto" | "tuned" => Some(PlacementPolicy::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Whether placement resolution models the machine or gates on what
+/// this build can actually execute (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolveMode {
+    /// Real execution: GPU placements degrade to the CPU pool (with an
+    /// annotation) when the crate is built without the `pjrt` feature.
+    Execute,
+    /// Virtual-time modelling: every pool of the machine model is
+    /// honoured regardless of build features.
+    Model,
+}
+
+/// A placement that cannot be satisfied by the topology's pools.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementError {
+    /// The unsatisfiable requirement, in [`Placement::describe`] form.
+    pub wanted: String,
+}
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "no device pool satisfies placement '{}'", self.wanted)
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// Outcome of resolving one [`Placement`] against a pool set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Resolution {
+    /// Index of the pool the job/node dispatches on.
+    pub pool: usize,
+    /// Set when the placement was degraded (GPU → CPU on a pjrt-stub
+    /// build); surfaced as the
+    /// [`NodeReport::fallback`](super::NodeReport) annotation.
+    pub fallback: Option<String>,
+}
+
+/// One per-class worker pool.
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    pub id: PoolId,
+    pub class: DeviceClass,
+    /// Global core/worker ids of this pool's members, ascending.
+    pub members: Vec<usize>,
+    /// Pool-scoped topology: dense local worker ids `0..members.len()`,
+    /// the members' NUMA domains remapped dense, and the per-class
+    /// speed factor folded into `core_speed` — what task sources,
+    /// victim selectors and the DES cost model see for this pool.
+    pub topo: Arc<Topology>,
+}
+
+/// The partition of a topology's places into per-class pools, plus the
+/// global-worker → (pool, local index) maps the executor and the DES
+/// replay both dispatch through.
+#[derive(Debug, Clone)]
+pub struct DevicePools {
+    pools: Vec<DevicePool>,
+    /// Global worker id → pool index.
+    pool_of: Vec<usize>,
+    /// Global worker id → dense index within its pool.
+    local_of: Vec<usize>,
+    default_pool: usize,
+}
+
+impl DevicePools {
+    /// Partition `topo` into one pool per device class, in order of
+    /// first appearance. A homogeneous topology yields a single pool
+    /// that *shares* the input `Arc` (no behaviour or allocation drift
+    /// vs pre-pool dispatch).
+    pub fn new(topo: &Arc<Topology>) -> Self {
+        let classes = topo.device_classes();
+        if classes.len() <= 1 {
+            let n = topo.n_cores();
+            return DevicePools {
+                pools: vec![DevicePool {
+                    id: PoolId(0),
+                    class: classes.first().copied().unwrap_or(DeviceClass::Cpu),
+                    members: (0..n).collect(),
+                    topo: Arc::clone(topo),
+                }],
+                pool_of: vec![0; n],
+                local_of: (0..n).collect(),
+                default_pool: 0,
+            };
+        }
+
+        let mut pools = Vec::with_capacity(classes.len());
+        let mut pool_of = vec![0usize; topo.n_cores()];
+        let mut local_of = vec![0usize; topo.n_cores()];
+        for (pid, &class) in classes.iter().enumerate() {
+            let members: Vec<usize> = topo
+                .places
+                .iter()
+                .filter(|p| p.device == class)
+                .map(|p| p.core)
+                .collect();
+            // Remap the members' domains dense, preserving order.
+            let mut domains: Vec<usize> = Vec::new();
+            let mut places = Vec::with_capacity(members.len());
+            for (local, &core) in members.iter().enumerate() {
+                pool_of[core] = pid;
+                local_of[core] = local;
+                let socket = topo.socket_of(core);
+                let dense = match domains.iter().position(|&d| d == socket) {
+                    Some(i) => i,
+                    None => {
+                        domains.push(socket);
+                        domains.len() - 1
+                    }
+                };
+                places.push(CorePlace {
+                    core: local,
+                    socket: dense,
+                    device: class,
+                    // folded into the pool topology's core_speed below
+                    speed: 1.0,
+                });
+            }
+            let class_speed = topo.places[members[0]].speed;
+            // Hard assert (release builds included): same-class entries
+            // merge into ONE pool whose sub-topology carries a single
+            // speed factor — silently pricing mixed-speed devices at the
+            // first member's speed would skew every placement decision.
+            assert!(
+                members
+                    .iter()
+                    .all(|&c| topo.places[c].speed == class_speed),
+                "device class {} has places with differing speed factors; \
+                 per-class pools require a uniform per-class speed",
+                class.name()
+            );
+            pools.push(DevicePool {
+                id: PoolId(pid),
+                class,
+                members,
+                topo: Arc::new(Topology {
+                    name: format!("{}:{}", topo.name, class.name()),
+                    places,
+                    sockets: domains.len(),
+                    remote_numa_factor: topo.remote_numa_factor,
+                    core_speed: topo.core_speed * class_speed,
+                }),
+            });
+        }
+        let default_pool = classes
+            .iter()
+            .position(|&c| c == DeviceClass::Cpu)
+            .unwrap_or(0);
+        DevicePools { pools, pool_of, local_of, default_pool }
+    }
+
+    /// Like [`DevicePools::new`] for callers holding a borrowed
+    /// topology (the DES replay path).
+    pub fn from_topology(topo: &Topology) -> Self {
+        Self::new(&Arc::new(topo.clone()))
+    }
+
+    pub fn n_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Total workers across every pool (= the topology's core count).
+    pub fn n_workers(&self) -> usize {
+        self.pool_of.len()
+    }
+
+    pub fn pools(&self) -> &[DevicePool] {
+        &self.pools
+    }
+
+    pub fn pool(&self, i: usize) -> &DevicePool {
+        &self.pools[i]
+    }
+
+    /// Pool the given global worker belongs to.
+    pub fn pool_of(&self, worker: usize) -> usize {
+        self.pool_of[worker]
+    }
+
+    /// Dense index of the given global worker within its pool.
+    pub fn local_of(&self, worker: usize) -> usize {
+        self.local_of[worker]
+    }
+
+    pub fn default_pool(&self) -> usize {
+        self.default_pool
+    }
+
+    /// Pool index of a device class, if the topology provides one.
+    pub fn class_pool(&self, class: DeviceClass) -> Option<usize> {
+        self.pools.iter().position(|p| p.class == class)
+    }
+
+    /// True when the whole machine is one pool (the CPU-only case).
+    pub fn is_homogeneous(&self) -> bool {
+        self.pools.len() == 1
+    }
+
+    /// Whether Execute-mode resolutions must treat GPU pools as
+    /// unbacked (no `pjrt` feature to drive kernels through).
+    fn gpu_unbacked(mode: ResolveMode) -> bool {
+        mode == ResolveMode::Execute && !cfg!(feature = "pjrt")
+    }
+
+    /// Wrap a resolved pool, annotating any Execute-mode landing on an
+    /// unbacked GPU pool — `Any` defaulting into it and explicit
+    /// `Pool(id)` pins included, so unbacked GPU dispatch is *never*
+    /// silent regardless of how the pool was addressed.
+    fn finish(&self, pool: usize, mode: ResolveMode) -> Resolution {
+        let fallback = (Self::gpu_unbacked(mode)
+            && self.pools[pool].class == DeviceClass::Gpu)
+            .then(|| {
+                "gpu pool dispatched without pjrt backing (built without \
+                 the `pjrt` feature)"
+                    .to_string()
+            });
+        Resolution { pool, fallback }
+    }
+
+    /// Resolve a placement to a pool (see the module docs for the
+    /// `Execute` vs `Model` distinction). Absent classes and
+    /// out-of-range pools are errors in both modes.
+    pub fn resolve(
+        &self,
+        placement: &Placement,
+        mode: ResolveMode,
+    ) -> Result<Resolution, PlacementError> {
+        match placement {
+            Placement::Any => Ok(self.finish(self.default_pool, mode)),
+            Placement::Pool(PoolId(i)) => {
+                if *i < self.pools.len() {
+                    Ok(self.finish(*i, mode))
+                } else {
+                    Err(PlacementError { wanted: placement.describe() })
+                }
+            }
+            Placement::Class(class) => {
+                let Some(pool) = self.class_pool(*class) else {
+                    return Err(PlacementError {
+                        wanted: placement.describe(),
+                    });
+                };
+                if *class == DeviceClass::Gpu && Self::gpu_unbacked(mode) {
+                    // The stub runtime cannot launch kernels; degrade to
+                    // the CPU pool (annotated) rather than dispatching
+                    // GPU work a pjrt-less build cannot execute. A
+                    // GPU-only topology has nowhere to degrade to —
+                    // `finish` keeps the pool but still annotates.
+                    if let Some(cpu) = self.class_pool(DeviceClass::Cpu) {
+                        return Ok(Resolution {
+                            pool: cpu,
+                            fallback: Some(
+                                "gpu placement degraded to the cpu pool: \
+                                 built without the `pjrt` feature"
+                                    .to_string(),
+                            ),
+                        });
+                    }
+                }
+                Ok(self.finish(pool, mode))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hetero() -> Arc<Topology> {
+        Arc::new(Topology::heterogeneous(
+            "h",
+            2,
+            2,
+            1.5,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 4.0)],
+        ))
+    }
+
+    #[test]
+    fn homogeneous_topology_is_one_shared_pool() {
+        let topo = Arc::new(Topology::symmetric("t", 2, 2, 1.5, 1.0));
+        let pools = DevicePools::new(&topo);
+        assert!(pools.is_homogeneous());
+        assert_eq!(pools.n_pools(), 1);
+        let p = pools.pool(0);
+        assert_eq!(p.class, DeviceClass::Cpu);
+        assert_eq!(p.members, vec![0, 1, 2, 3]);
+        assert!(
+            Arc::ptr_eq(&p.topo, &topo),
+            "single pool must share the topology, not clone it"
+        );
+        for w in 0..4 {
+            assert_eq!(pools.pool_of(w), 0);
+            assert_eq!(pools.local_of(w), w);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_topology_partitions_by_class() {
+        let pools = DevicePools::new(&hetero());
+        assert_eq!(pools.n_pools(), 2);
+        let cpu = pools.pool(0);
+        assert_eq!(cpu.class, DeviceClass::Cpu);
+        assert_eq!(cpu.members, vec![0, 1, 2, 3]);
+        assert_eq!(cpu.topo.n_cores(), 4);
+        assert_eq!(cpu.topo.sockets, 2);
+        assert_eq!(cpu.topo.core_speed, 1.0);
+        let gpu = pools.pool(1);
+        assert_eq!(gpu.class, DeviceClass::Gpu);
+        assert_eq!(gpu.members, vec![4, 5]);
+        assert_eq!(gpu.topo.n_cores(), 2);
+        assert_eq!(gpu.topo.sockets, 1, "one accelerator domain");
+        assert_eq!(gpu.topo.core_speed, 4.0, "class speed folded in");
+        // global -> (pool, local) maps
+        assert_eq!(pools.pool_of(3), 0);
+        assert_eq!(pools.local_of(3), 3);
+        assert_eq!(pools.pool_of(4), 1);
+        assert_eq!(pools.local_of(4), 0);
+        assert_eq!(pools.pool_of(5), 1);
+        assert_eq!(pools.local_of(5), 1);
+        assert_eq!(pools.default_pool(), 0, "CPU pool is the default");
+    }
+
+    #[test]
+    fn cpu_pool_topology_matches_the_symmetric_machine() {
+        // The CPU slice of hetero20 must be byte-for-byte the Broadwell
+        // model: placement-aware dispatch on the CPU pool cannot drift
+        // from CPU-only dispatch.
+        let pools = DevicePools::new(&Arc::new(Topology::hetero20()));
+        let cpu = &pools.pool(0).topo;
+        let bw = Topology::broadwell20();
+        assert_eq!(cpu.n_cores(), bw.n_cores());
+        assert_eq!(cpu.sockets, bw.sockets);
+        assert_eq!(cpu.core_speed, bw.core_speed);
+        for (a, b) in cpu.places.iter().zip(&bw.places) {
+            assert_eq!(a.core, b.core);
+            assert_eq!(a.socket, b.socket);
+        }
+    }
+
+    #[test]
+    fn resolution_rules() {
+        let pools = DevicePools::new(&hetero());
+        for mode in [ResolveMode::Execute, ResolveMode::Model] {
+            let any = pools.resolve(&Placement::Any, mode).unwrap();
+            assert_eq!(any.pool, 0);
+            assert!(any.fallback.is_none());
+            let cpu = pools
+                .resolve(&Placement::Class(DeviceClass::Cpu), mode)
+                .unwrap();
+            assert_eq!(cpu.pool, 0);
+            // Pool(id) pins strictly in both modes; an Execute-mode
+            // landing on an unbacked GPU pool is annotated, never
+            // rerouted.
+            let explicit =
+                pools.resolve(&Placement::Pool(PoolId(1)), mode).unwrap();
+            assert_eq!(explicit.pool, 1);
+            if mode == ResolveMode::Model || cfg!(feature = "pjrt") {
+                assert!(explicit.fallback.is_none());
+            } else {
+                let note = explicit.fallback.expect("unbacked gpu annotated");
+                assert!(note.contains("pjrt"), "{note}");
+            }
+            // absent class and out-of-range pool are hard errors
+            assert!(pools
+                .resolve(&Placement::Class(DeviceClass::Fpga), mode)
+                .is_err());
+            assert!(pools
+                .resolve(&Placement::Pool(PoolId(9)), mode)
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn gpu_resolution_models_always_and_degrades_only_in_execute_stub() {
+        let pools = DevicePools::new(&hetero());
+        let modelled = pools
+            .resolve(&Placement::Class(DeviceClass::Gpu), ResolveMode::Model)
+            .unwrap();
+        assert_eq!(modelled.pool, 1, "the model always honours the GPU pool");
+        assert!(modelled.fallback.is_none());
+
+        let executed = pools
+            .resolve(&Placement::Class(DeviceClass::Gpu), ResolveMode::Execute)
+            .unwrap();
+        if cfg!(feature = "pjrt") {
+            assert_eq!(executed.pool, 1);
+            assert!(executed.fallback.is_none());
+        } else {
+            assert_eq!(executed.pool, 0, "stub build degrades GPU to CPU");
+            let note = executed.fallback.expect("degradation is annotated");
+            assert!(note.contains("pjrt"), "{note}");
+        }
+    }
+
+    #[test]
+    fn gpu_only_topology_never_degrades_silently() {
+        // No CPU pool to fall back to: Execute mode keeps the GPU pool
+        // but must still annotate on a stub build.
+        let topo = Arc::new(Topology::heterogeneous(
+            "gpu-only",
+            0,
+            0,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 4.0)],
+        ));
+        let pools = DevicePools::new(&topo);
+        let res = pools
+            .resolve(&Placement::Class(DeviceClass::Gpu), ResolveMode::Execute)
+            .unwrap();
+        assert_eq!(pools.pool(res.pool).class, DeviceClass::Gpu);
+        if cfg!(feature = "pjrt") {
+            assert!(res.fallback.is_none());
+        } else {
+            let note = res.fallback.expect("must be annotated, not silent");
+            assert!(note.contains("pjrt"), "{note}");
+        }
+    }
+
+    #[test]
+    fn placement_describe_forms() {
+        assert_eq!(Placement::Any.describe(), "any");
+        assert_eq!(
+            Placement::Class(DeviceClass::Gpu).describe(),
+            "class:gpu"
+        );
+        assert_eq!(Placement::Pool(PoolId(2)).describe(), "pool:2");
+        assert_eq!(Placement::default(), Placement::Any);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            PlacementPolicy::Any,
+            PlacementPolicy::Pinned,
+            PlacementPolicy::Auto,
+        ] {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+}

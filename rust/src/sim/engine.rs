@@ -116,7 +116,7 @@ impl<'w> JobSim<'w> {
         let n_queues = source.n_queues();
         let n = topo.n_cores();
 
-        // Home socket of every queue (mirrors worker::queue_socket_of).
+        // Home socket of every queue (mirrors executor::queue_socket_of).
         let queue_socket: Vec<usize> = (0..n_queues)
             .map(|q| {
                 if n_queues == n {
@@ -282,9 +282,15 @@ impl<'w> JobSim<'w> {
         } else {
             self.costs.remote_exec_factor
         };
+        // speed_of folds in per-place factors, so a *flat* simulation of
+        // a heterogeneous topology (e.g. the single-workload tuner on
+        // hetero56) still models accelerator places at their own speed;
+        // pool-scoped sub-topologies have the factor pre-folded into
+        // core_speed and per-place speed 1.0, so this is identical
+        // there.
         let mut exec = self.workload.chunk_cost(pull.task.start, pull.task.end)
             * locality
-            / topo.core_speed
+            / topo.speed_of(w)
             + self.costs.dispatch;
         // OS interference: Poisson preemption events over the chunk's
         // busy time, each stretching it by an exponential delay. A
@@ -545,6 +551,33 @@ mod tests {
         let expect =
             out.acquisitions as f64 * costs().queue_access * 15.0;
         assert!((out.queue_busy[0] - expect).abs() / expect < 0.2);
+    }
+
+    #[test]
+    fn flat_simulation_honours_per_place_speed_factors() {
+        // A heterogeneous topology simulated directly (no pools): the
+        // 2x-speed accelerator places must raise total throughput vs
+        // the same worker count at uniform speed.
+        use crate::topology::DeviceClass;
+        let uniform = Topology::symmetric("u4", 1, 4, 1.0, 1.0);
+        let hetero = Topology::heterogeneous(
+            "h4",
+            1,
+            2,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 2.0)],
+        );
+        let w = Workload::uniform("u", 40_000, 1e-6);
+        let cfg = cfg(Scheme::Gss);
+        let t_uniform = simulate(&uniform, &cfg, &w, &costs()).makespan();
+        let t_hetero = simulate(&hetero, &cfg, &w, &costs()).makespan();
+        // 4 cores at 1x vs 2 at 1x + 2 at 2x (= 6 core-equivalents)
+        assert!(
+            t_hetero < t_uniform * 0.85,
+            "hetero {t_hetero} vs uniform {t_uniform}: per-place speed \
+             factors must be modelled"
+        );
     }
 
     #[test]

@@ -28,10 +28,20 @@
 //!   rejected with the same [`GraphError`]s the real submission would
 //!   produce.
 //!
+//! Heterogeneous machines replay with the same pool semantics the real
+//! executor dispatches: [`NodeModel`] carries a
+//! [`Placement`], the modelled machine's places partition into
+//! per-class [`DevicePools`] (accelerator speed factors folded into
+//! each pool's sub-topology), and a worker only scans — and only
+//! steals within — the active jobs of its own pool. `Placement::Class`
+//! on a class the machine model lacks is the same
+//! [`GraphError::NoSuchPool`] the executor returns.
+//!
 //! The replay is the oracle behind graph-level autotuning
 //! ([`crate::sched::autotune::tune_graph`]): per-node configurations
-//! are evaluated in virtual time on the modelled 20- and 56-core
-//! machines, milliseconds per candidate instead of hours of grid runs.
+//! (and, on heterogeneous machines, per-node placements) are evaluated
+//! in virtual time on the modelled 20- and 56-core machines,
+//! milliseconds per candidate instead of hours of grid runs.
 
 use std::collections::BinaryHeap;
 
@@ -40,18 +50,25 @@ use super::model::{CostModel, Workload};
 use crate::config::{GraphMode, SchedConfig};
 use crate::sched::graph::{toposort, GraphError, TopoOrder};
 use crate::sched::metrics::{SchedReport, WorkerStats};
-use crate::topology::Topology;
+use crate::sched::placement::{DevicePools, Placement, ResolveMode};
+use crate::topology::{DeviceClass, Topology};
 
 /// Cost model of one graph node: a name (unique within its shape), a
 /// [`Workload`] of per-item virtual costs, an optional per-node
-/// scheduling override, and the names of the nodes it must run after.
-/// The cost-described sibling of [`crate::sched::graph::NodeSpec`].
+/// scheduling override, a device-pool [`Placement`], and the names of
+/// the nodes it must run after. The cost-described sibling of
+/// [`crate::sched::graph::NodeSpec`].
 #[derive(Debug, Clone)]
 pub struct NodeModel {
     pub name: String,
     pub workload: Workload,
     /// `None` = the replay's default config.
     pub config: Option<SchedConfig>,
+    /// Which of the modelled machine's device pools runs this node
+    /// (`Any` = the default/CPU pool). Replay resolves it in
+    /// [`ResolveMode::Model`]: the machine model's pools are always
+    /// honoured, regardless of what this build can execute.
+    pub placement: Placement,
     /// Dependency edges by node name.
     pub after: Vec<String>,
 }
@@ -62,6 +79,7 @@ impl NodeModel {
             name: name.to_string(),
             workload,
             config: None,
+            placement: Placement::Any,
             after: Vec::new(),
         }
     }
@@ -90,6 +108,20 @@ impl NodeModel {
     /// Override the replay's default scheduling for this node.
     pub fn with_config(mut self, config: SchedConfig) -> Self {
         self.config = Some(config);
+        self
+    }
+
+    /// Pin this node to the pool of a device class on the modelled
+    /// machine (sugar for [`NodeModel::with_placement`]). An absent
+    /// class is a [`GraphError::NoSuchPool`] at replay — the same error
+    /// the real submission would produce.
+    pub fn on(self, class: DeviceClass) -> Self {
+        self.with_placement(Placement::Class(class))
+    }
+
+    /// Constrain which modelled pool runs this node.
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
         self
     }
 }
@@ -183,6 +215,8 @@ impl GraphShape {
 #[derive(Debug, Clone)]
 pub struct NodeSimOutcome {
     pub name: String,
+    /// Device class of the modelled pool that ran the node.
+    pub device: DeviceClass,
     /// The node's own scheduling outcome; its `report.makespan` is the
     /// node's span (`finish - start`).
     pub outcome: SimOutcome,
@@ -245,16 +279,36 @@ pub fn replay(
         .iter()
         .map(|n| n.config.clone().unwrap_or_else(|| default.clone()))
         .collect();
-    replay_resolved(shape, topo, &configs, costs, mode)
+    let placements: Vec<Placement> =
+        shape.nodes.iter().map(|n| n.placement).collect();
+    replay_resolved(shape, topo, &configs, &placements, costs, mode)
 }
 
 /// Like [`replay`] but with an explicit per-node config assignment
-/// (ignoring the shape's own overrides) — the evaluation entry point of
-/// graph-level autotuning, which owns the assignment it is refining.
+/// (ignoring the shape's own overrides; placements stay the shape's) —
+/// the evaluation entry point of graph-level autotuning, which owns the
+/// assignment it is refining.
 pub fn replay_with_configs(
     shape: &GraphShape,
     topo: &Topology,
     configs: &[SchedConfig],
+    costs: &CostModel,
+    mode: GraphMode,
+) -> Result<GraphSimOutcome, GraphError> {
+    let placements: Vec<Placement> =
+        shape.nodes.iter().map(|n| n.placement).collect();
+    replay_placed(shape, topo, configs, &placements, costs, mode)
+}
+
+/// Replay with both dimensions explicit: per-node configs *and*
+/// per-node placements (the shape's own overrides for either are
+/// ignored). What placement-aware autotuning replays its refined
+/// assignments through.
+pub fn replay_placed(
+    shape: &GraphShape,
+    topo: &Topology,
+    configs: &[SchedConfig],
+    placements: &[Placement],
     costs: &CostModel,
     mode: GraphMode,
 ) -> Result<GraphSimOutcome, GraphError> {
@@ -263,36 +317,73 @@ pub fn replay_with_configs(
         shape.nodes.len(),
         "one config per shape node"
     );
-    replay_resolved(shape, topo, configs, costs, mode)
+    assert_eq!(
+        placements.len(),
+        shape.nodes.len(),
+        "one placement per shape node"
+    );
+    replay_resolved(shape, topo, configs, placements, costs, mode)
 }
 
 fn replay_resolved(
     shape: &GraphShape,
     topo: &Topology,
     configs: &[SchedConfig],
+    placements: &[Placement],
     costs: &CostModel,
     mode: GraphMode,
 ) -> Result<GraphSimOutcome, GraphError> {
     let order = shape.toposorted()?;
-    Ok(replay_ordered(shape, topo, configs, costs, mode, &order))
+    let pools = DevicePools::from_topology(topo);
+    let node_pool = resolve_pools(shape, &pools, placements)?;
+    Ok(replay_ordered(shape, &pools, configs, &node_pool, costs, mode, &order))
 }
 
-/// Replay against a precomputed [`TopoOrder`] — the tuner's hot loop,
-/// which validates a shape once and then evaluates thousands of
-/// per-node assignments against the same order.
+/// Resolve per-node placements against the modelled machine's pools —
+/// [`ResolveMode::Model`], so a GPU pool of the model is honoured even
+/// on a pjrt-less build. An unsatisfiable placement is the same
+/// [`GraphError::NoSuchPool`] the real submission would produce.
+pub(crate) fn resolve_pools(
+    shape: &GraphShape,
+    pools: &DevicePools,
+    placements: &[Placement],
+) -> Result<Vec<usize>, GraphError> {
+    shape
+        .nodes
+        .iter()
+        .zip(placements)
+        .map(|(n, p)| {
+            pools
+                .resolve(p, ResolveMode::Model)
+                .map(|r| r.pool)
+                .map_err(|e| GraphError::NoSuchPool {
+                    node: n.name.clone(),
+                    wanted: e.wanted,
+                })
+        })
+        .collect()
+}
+
+/// Replay against a precomputed [`TopoOrder`], pool partition, and
+/// per-node pool assignment — the tuner's hot loop, which validates a
+/// shape once and then evaluates thousands of per-node assignments
+/// against the same order.
 pub(crate) fn replay_ordered(
     shape: &GraphShape,
-    topo: &Topology,
+    pools: &DevicePools,
     configs: &[SchedConfig],
+    node_pool: &[usize],
     costs: &CostModel,
     mode: GraphMode,
     order: &TopoOrder,
 ) -> GraphSimOutcome {
     match mode {
         GraphMode::Barrier => {
-            replay_barrier(shape, topo, configs, costs, order)
+            replay_barrier(shape, pools, configs, node_pool, costs, order)
         }
-        GraphMode::Dag => replay_dag(shape, topo, configs, costs, order),
+        GraphMode::Dag => {
+            replay_dag(shape, pools, configs, node_pool, costs, order)
+        }
     }
 }
 
@@ -317,10 +408,13 @@ fn empty_outcome(topo: &Topology, config: &SchedConfig) -> SimOutcome {
 
 /// Barrier baseline: one single-job simulation per node, serialized in
 /// topological order — the virtual-time equivalent of `graph=barrier`.
+/// Each node simulates on its resolved pool's sub-topology (the rest of
+/// the machine idles through its span, as a full barrier would force).
 fn replay_barrier(
     shape: &GraphShape,
-    topo: &Topology,
+    pools: &DevicePools,
     configs: &[SchedConfig],
+    node_pool: &[usize],
     costs: &CostModel,
     order: &TopoOrder,
 ) -> GraphSimOutcome {
@@ -329,14 +423,21 @@ fn replay_barrier(
     let mut t = 0.0;
     for &i in &order.order {
         let node = &shape.nodes[i];
+        let pool = pools.pool(node_pool[i]);
         let out = if node.workload.items() == 0 {
-            empty_outcome(topo, &configs[i])
+            empty_outcome(&pool.topo, &configs[i])
         } else {
-            super::engine::simulate(topo, &configs[i], &node.workload, costs)
+            super::engine::simulate(
+                &pool.topo,
+                &configs[i],
+                &node.workload,
+                costs,
+            )
         };
         let span = out.makespan();
         nodes[i] = Some(NodeSimOutcome {
             name: node.name.clone(),
+            device: pool.class,
             outcome: out,
             start: t,
             finish: t + span,
@@ -360,18 +461,22 @@ fn replay_barrier(
 /// live `JobSim`s. A worker event first retires the chunk it was
 /// executing; if that was its node's last outstanding chunk the node
 /// completes *at this virtual time*, its ready dependents activate, and
-/// parked workers wake — then the worker scans the active jobs in
-/// activation order (own-queue probe + steal round each, mirroring the
-/// executor's job multiplexing) for its next chunk.
+/// parked workers wake — then the worker scans the active jobs *of its
+/// own device pool* in activation order (own-queue probe + steal round
+/// each, mirroring the executor's pool-scoped job multiplexing) for its
+/// next chunk. Nodes placed on different pools therefore overlap on
+/// disjoint modelled workers, with the accelerator pool's speed factor
+/// applied through its sub-topology.
 fn replay_dag(
     shape: &GraphShape,
-    topo: &Topology,
+    pools: &DevicePools,
     configs: &[SchedConfig],
+    node_pool: &[usize],
     costs: &CostModel,
     order: &TopoOrder,
 ) -> GraphSimOutcome {
     let n_nodes = shape.nodes.len();
-    let nw = topo.n_cores();
+    let nw = pools.n_workers();
     let items: Vec<usize> =
         shape.nodes.iter().map(|n| n.workload.items()).collect();
     let mut pending: Vec<usize> = order.deps.iter().map(Vec::len).collect();
@@ -380,7 +485,8 @@ fn replay_dag(
     let mut finish = vec![0f64; n_nodes];
     let mut outcomes: Vec<Option<SimOutcome>> =
         (0..n_nodes).map(|_| None).collect();
-    // Active jobs in activation order; workers scan this list FIFO.
+    // Active jobs in activation order; workers scan this list FIFO
+    // (skipping jobs placed on a foreign pool).
     let mut active: Vec<(usize, JobSim<'_>)> = Vec::new();
     let mut remaining = n_nodes;
     // What each worker is currently executing: (node, chunk len); the
@@ -392,8 +498,9 @@ fn replay_dag(
 
     // Activate every node in `ready` at virtual time `t`. Zero-item
     // nodes complete inline (worklist, so chains of them stay
-    // iterative); the rest get a live JobSim. Returns whether any job
-    // actually went live (only then do parked workers need waking).
+    // iterative); the rest get a live JobSim over their pool's
+    // sub-topology. Returns whether any job actually went live (only
+    // then do parked workers need waking).
     macro_rules! activate {
         ($ready:expr, $t:expr) => {{
             let mut worklist: Vec<usize> = $ready;
@@ -403,7 +510,10 @@ fn replay_dag(
                 if items[i] == 0 {
                     finish[i] = $t;
                     remaining -= 1;
-                    outcomes[i] = Some(empty_outcome(topo, &configs[i]));
+                    outcomes[i] = Some(empty_outcome(
+                        &pools.pool(node_pool[i]).topo,
+                        &configs[i],
+                    ));
                     for &d in &order.dependents[i] {
                         pending[d] -= 1;
                         if pending[d] == 0 {
@@ -414,7 +524,7 @@ fn replay_dag(
                     active.push((
                         i,
                         JobSim::new(
-                            topo,
+                            &pools.pool(node_pool[i]).topo,
                             &configs[i],
                             &shape.nodes[i].workload,
                             costs,
@@ -436,6 +546,9 @@ fn replay_dag(
 
     while let Some(Ev { t, w }) = heap.pop() {
         let mut now = t;
+        let my_pool = pools.pool_of(w);
+        let lw = pools.local_of(w);
+        let my_topo = &pools.pool(my_pool).topo;
 
         // retire the chunk this event marks the end of
         if let Some((node, len)) = chunk[w].take() {
@@ -473,10 +586,15 @@ fn replay_dag(
             continue; // graph done; drain remaining worker events
         }
 
-        // scan active jobs in activation order for the next chunk
+        // scan this pool's active jobs in activation order for the next
+        // chunk (a foreign pool's sources are invisible to this worker,
+        // exactly as in the real executor)
         let mut got: Option<(usize, crate::sched::queue::Pull)> = None;
-        for (idx, (_, job)) in active.iter_mut().enumerate() {
-            if let Some(pull) = job.try_acquire(topo, w, &mut now) {
+        for (idx, (node, job)) in active.iter_mut().enumerate() {
+            if node_pool[*node] != my_pool {
+                continue;
+            }
+            if let Some(pull) = job.try_acquire(my_topo, lw, &mut now) {
                 got = Some((idx, pull));
                 break;
             }
@@ -484,7 +602,7 @@ fn replay_dag(
         match got {
             Some((idx, pull)) => {
                 let (node, job) = &mut active[idx];
-                let exec = job.exec_time(topo, w, &pull);
+                let exec = job.exec_time(my_topo, lw, &pull);
                 chunk[w] = Some((*node, pull.task.len()));
                 heap.push(Ev { t: now + exec, w });
             }
@@ -502,6 +620,7 @@ fn replay_dag(
         .enumerate()
         .map(|(i, o)| NodeSimOutcome {
             name: shape.nodes[i].name.clone(),
+            device: pools.pool(node_pool[i]).class,
             outcome: o.expect("remaining == 0 means every node completed"),
             start: start[i],
             finish: finish[i],
@@ -776,6 +895,126 @@ mod tests {
         assert!(out.nodes.is_empty());
         assert_eq!(out.makespan(), 0.0);
         assert!(out.critical_path.is_empty());
+    }
+
+    #[test]
+    fn placed_nodes_replay_on_their_pools() {
+        // Two independent equal-cost nodes: pinned to different pools
+        // they overlap on disjoint modelled workers, and the GPU pool's
+        // 4x speed factor shows up in the finish times.
+        let topo = Topology::heterogeneous(
+            "h",
+            1,
+            8,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 8, 4.0)],
+        );
+        let shape = GraphShape::new("pools")
+            .node(
+                NodeModel::uniform("cpu", 8_000, 1e-6)
+                    .on(DeviceClass::Cpu),
+            )
+            .node(
+                NodeModel::uniform("gpu", 8_000, 1e-6)
+                    .on(DeviceClass::Gpu),
+            );
+        let out =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        let cpu = out.node("cpu").unwrap();
+        let gpu = out.node("gpu").unwrap();
+        assert_eq!(cpu.device, DeviceClass::Cpu);
+        assert_eq!(gpu.device, DeviceClass::Gpu, "model honours the gpu pool");
+        assert_eq!(cpu.start, 0.0);
+        assert_eq!(gpu.start, 0.0, "pools overlap: both roots start at 0");
+        // same item count, same per-item cost, same worker count — the
+        // only difference is the pool speed factor
+        let ratio = cpu.finish / gpu.finish;
+        assert!(
+            (3.0..5.0).contains(&ratio),
+            "gpu pool should be ~4x faster, got {ratio}"
+        );
+        // true cross-pool overlap: the dag makespan is the slower pool,
+        // not the sum
+        assert!(out.makespan() < cpu.finish + gpu.finish);
+        assert!((out.makespan() - cpu.finish.max(gpu.finish)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unplaced_nodes_use_the_cpu_pool_on_hetero_machines() {
+        let out = replay(
+            &GraphShape::new("any")
+                .node(NodeModel::uniform("n", 1_000, 1e-6)),
+            &Topology::hetero56(),
+            &cfg(),
+            &costs(),
+            GraphMode::Dag,
+        )
+        .unwrap();
+        assert_eq!(out.node("n").unwrap().device, DeviceClass::Cpu);
+        // per-worker stats cover exactly the CPU pool
+        assert_eq!(
+            out.node("n").unwrap().outcome.report.per_worker.len(),
+            56
+        );
+    }
+
+    #[test]
+    fn absent_class_placement_is_the_executor_error() {
+        let shape = GraphShape::new("bad").node(
+            NodeModel::uniform("n", 10, 1e-6).on(DeviceClass::Gpu),
+        );
+        // CPU-only machine: no gpu pool to honour
+        let err = replay(
+            &shape,
+            &Topology::broadwell20(),
+            &cfg(),
+            &costs(),
+            GraphMode::Dag,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err,
+            GraphError::NoSuchPool {
+                node: "n".into(),
+                wanted: "class:gpu".into()
+            }
+        );
+        // barrier mode rejects identically
+        assert!(replay(
+            &shape,
+            &Topology::broadwell20(),
+            &cfg(),
+            &costs(),
+            GraphMode::Barrier
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn barrier_mode_serializes_pools_too() {
+        let topo = Topology::hetero20();
+        let shape = GraphShape::new("pools")
+            .node(NodeModel::uniform("cpu", 2_000, 1e-6).on(DeviceClass::Cpu))
+            .node(NodeModel::uniform("gpu", 2_000, 1e-6).on(DeviceClass::Gpu));
+        let barrier =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Barrier)
+                .unwrap();
+        let dag =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        // barrier: spans stack end-to-end even across pools
+        let sum: f64 = barrier
+            .nodes
+            .iter()
+            .map(|n| n.outcome.report.makespan)
+            .sum();
+        assert!((barrier.makespan() - sum).abs() < 1e-12);
+        assert!(
+            dag.makespan() < barrier.makespan(),
+            "cross-pool overlap must beat the barrier: {} vs {}",
+            dag.makespan(),
+            barrier.makespan()
+        );
     }
 
     #[test]

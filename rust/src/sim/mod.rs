@@ -23,8 +23,14 @@
 //! dependency-aware dispatch — a worker retiring a node's last chunk
 //! enqueues ready dependents at the current virtual time, so
 //! DAG-overlap wins are predictable on the modelled 20- and 56-core
-//! machines, not just measurable on the host. The replay is the oracle
-//! for graph-level autotuning ([`crate::sched::autotune::tune_graph`]).
+//! machines, not just measurable on the host. Heterogeneous machine
+//! models ([`crate::topology::Topology::heterogeneous`]) replay with
+//! per-device-class pools: node [`Placement`](crate::sched::Placement)s
+//! route work to the modelled CPU or accelerator pool, whose speed
+//! factor and isolation the event loop honours. The replay is the
+//! oracle for graph-level autotuning
+//! ([`crate::sched::autotune::tune_graph`]), including placement as a
+//! tuning dimension.
 
 pub mod calibrate;
 pub mod engine;
@@ -32,5 +38,8 @@ pub mod graph;
 pub mod model;
 
 pub use engine::{simulate, SimOutcome};
-pub use graph::{replay, GraphShape, GraphSimOutcome, NodeModel, NodeSimOutcome};
+pub use graph::{
+    replay, replay_placed, GraphShape, GraphSimOutcome, NodeModel,
+    NodeSimOutcome,
+};
 pub use model::{CostModel, Workload};

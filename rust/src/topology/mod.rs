@@ -5,15 +5,28 @@
 //! explicit model consumed by two executors that share all scheduler
 //! code:
 //!
-//! - the real-thread worker pool ([`crate::sched::worker`]), which uses
-//!   the topology for NUMA-aware victim selection and queue grouping;
+//! - the real-thread worker pool ([`crate::sched::Executor`]), which
+//!   uses the topology for NUMA-aware victim selection, queue grouping,
+//!   and per-device-class worker pools
+//!   ([`crate::sched::placement::DevicePools`]);
 //! - the discrete-event simulator ([`crate::sim`]), which additionally
 //!   uses the per-domain latency factors to model remote-steal and
-//!   remote-queue access costs.
+//!   remote-queue access costs, and the per-place speed factors to model
+//!   accelerator pools.
+//!
+//! [`Topology::heterogeneous`] attaches accelerator pools (mixed
+//! [`DeviceClass`] places with per-class speed factors) to a CPU
+//! machine; [`Topology::symmetric`] is the CPU-only special case.
+//! [`Topology::hetero20`] / [`Topology::hetero56`] are the modelled
+//! variants of the paper's two machines with a GPU pool attached.
 
 /// Kind of compute device a worker fronts. The DAPHNE worker manager
-/// also creates threads that launch kernels on accelerators; the
-/// evaluation is CPU-only but the dimension is kept first-class.
+/// also creates threads that launch kernels on accelerators; the paper
+/// evaluates CPU-only, but the dimension is first-class here: the
+/// scheduler partitions its workers into one pool per device class
+/// ([`crate::sched::placement`]) and graph nodes carry a
+/// [`Placement`](crate::sched::placement::Placement) routing them to a
+/// pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DeviceClass {
     Cpu,
@@ -21,14 +34,41 @@ pub enum DeviceClass {
     Fpga,
 }
 
+impl DeviceClass {
+    pub const ALL: [DeviceClass; 3] =
+        [DeviceClass::Cpu, DeviceClass::Gpu, DeviceClass::Fpga];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceClass::Cpu => "cpu",
+            DeviceClass::Gpu => "gpu",
+            DeviceClass::Fpga => "fpga",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Some(DeviceClass::Cpu),
+            "gpu" => Some(DeviceClass::Gpu),
+            "fpga" => Some(DeviceClass::Fpga),
+            _ => None,
+        }
+    }
+}
+
 /// One hardware thread (one DaphneSched worker).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CorePlace {
     /// Global worker/core id, dense in `0..n_cores`.
     pub core: usize,
-    /// Socket == NUMA domain on both evaluated machines.
+    /// Socket == NUMA domain on both evaluated machines; accelerator
+    /// pools occupy their own domains after the CPU sockets.
     pub socket: usize,
     pub device: DeviceClass,
+    /// Relative single-core speed of this place vs the machine's CPU
+    /// cores (1.0 for CPU places; e.g. 4.0 for an accelerator device
+    /// modelled at 4× CPU speed). Multiplies [`Topology::core_speed`].
+    pub speed: f64,
 }
 
 /// A machine: cores grouped into sockets/NUMA domains plus the latency
@@ -37,16 +77,21 @@ pub struct CorePlace {
 pub struct Topology {
     pub name: String,
     pub places: Vec<CorePlace>,
+    /// Number of NUMA-like domains: the CPU sockets plus one domain per
+    /// attached accelerator pool (heterogeneous topologies).
     pub sockets: usize,
     /// Relative cost multiplier for touching memory/queues on a remote
     /// NUMA domain (≈2x on the evaluated Xeons).
     pub remote_numa_factor: f64,
-    /// Single-core relative speed vs the Broadwell baseline.
+    /// Single-core relative speed vs the Broadwell baseline. Per-place
+    /// [`CorePlace::speed`] factors multiply this (see
+    /// [`Topology::speed_of`]).
     pub core_speed: f64,
 }
 
 impl Topology {
-    /// Build a symmetric multi-socket CPU topology.
+    /// Build a symmetric multi-socket CPU topology — the CPU-only
+    /// special case of [`Topology::heterogeneous`].
     pub fn symmetric(
         name: &str,
         sockets: usize,
@@ -54,17 +99,57 @@ impl Topology {
         remote_numa_factor: f64,
         core_speed: f64,
     ) -> Self {
-        let places = (0..sockets * cores_per_socket)
+        Topology::heterogeneous(
+            name,
+            sockets,
+            cores_per_socket,
+            remote_numa_factor,
+            core_speed,
+            &[],
+        )
+    }
+
+    /// Build a machine with `sockets × cores_per_socket` CPU places plus
+    /// accelerator places per `accel` entry: `(class, devices, speed)`
+    /// adds `devices` places of `class`, each `speed`× as fast as one
+    /// CPU core of this machine. Each entry occupies its own NUMA-like
+    /// domain after the CPU sockets (device memory is remote to every
+    /// CPU socket and vice versa). Note that the scheduler pools workers
+    /// *by class* ([`crate::sched::placement::DevicePools`]): several
+    /// entries of the same class merge into one pool and must share one
+    /// `speed` (enforced at pool construction).
+    pub fn heterogeneous(
+        name: &str,
+        sockets: usize,
+        cores_per_socket: usize,
+        remote_numa_factor: f64,
+        core_speed: f64,
+        accel: &[(DeviceClass, usize, f64)],
+    ) -> Self {
+        let mut places: Vec<CorePlace> = (0..sockets * cores_per_socket)
             .map(|core| CorePlace {
                 core,
                 socket: core / cores_per_socket,
                 device: DeviceClass::Cpu,
+                speed: 1.0,
             })
             .collect();
+        let mut domain = sockets;
+        for &(device, devices, speed) in accel {
+            for _ in 0..devices {
+                places.push(CorePlace {
+                    core: places.len(),
+                    socket: domain,
+                    device,
+                    speed,
+                });
+            }
+            domain += 1;
+        }
         Topology {
             name: name.to_string(),
             places,
-            sockets,
+            sockets: domain,
             remote_numa_factor,
             core_speed,
         }
@@ -78,6 +163,35 @@ impl Topology {
     /// The paper's 2×28-core Intel Xeon Gold 6258R (Cascade Lake), 1.5 TB.
     pub fn cascadelake56() -> Self {
         Topology::symmetric("cascadelake56", 2, 28, 2.1, 1.15)
+    }
+
+    /// Modelled heterogeneous variant of the 20-core machine: the
+    /// Broadwell CPU sockets plus a 4-device GPU pool, each device
+    /// modelled at 4× one CPU core (a modest PCIe accelerator).
+    pub fn hetero20() -> Self {
+        Topology::heterogeneous(
+            "hetero20",
+            2,
+            10,
+            1.9,
+            1.0,
+            &[(DeviceClass::Gpu, 4, 4.0)],
+        )
+    }
+
+    /// Modelled heterogeneous variant of the 56-core machine: the
+    /// Cascade Lake CPU sockets plus an 8-device GPU pool at 4× CPU
+    /// speed — the machine the placement acceptance tests and
+    /// `figure hetero` run on.
+    pub fn hetero56() -> Self {
+        Topology::heterogeneous(
+            "hetero56",
+            2,
+            28,
+            2.1,
+            1.15,
+            &[(DeviceClass::Gpu, 8, 4.0)],
+        )
     }
 
     /// A topology matching the current host (single NUMA domain assumed;
@@ -107,6 +221,8 @@ impl Topology {
         match name {
             "broadwell20" | "broadwell" => Some(Self::broadwell20()),
             "cascadelake56" | "cascadelake" => Some(Self::cascadelake56()),
+            "hetero20" => Some(Self::hetero20()),
+            "hetero56" | "hetero" => Some(Self::hetero56()),
             "host" => Some(Self::host()),
             _ => None,
         }
@@ -148,6 +264,33 @@ impl Topology {
             self.remote_numa_factor
         }
     }
+
+    /// Effective relative speed of one core: the machine baseline times
+    /// the place's per-class factor.
+    pub fn speed_of(&self, core: usize) -> f64 {
+        self.core_speed * self.places[core].speed
+    }
+
+    /// Distinct device classes present, in order of first appearance
+    /// (CPU first for every built-in constructor).
+    pub fn device_classes(&self) -> Vec<DeviceClass> {
+        let mut out = Vec::new();
+        for p in &self.places {
+            if !out.contains(&p.device) {
+                out.push(p.device);
+            }
+        }
+        out
+    }
+
+    pub fn has_class(&self, class: DeviceClass) -> bool {
+        self.places.iter().any(|p| p.device == class)
+    }
+
+    /// Number of places of the given device class.
+    pub fn class_cores(&self, class: DeviceClass) -> usize {
+        self.places.iter().filter(|p| p.device == class).count()
+    }
 }
 
 #[cfg(test)]
@@ -188,8 +331,77 @@ mod tests {
     fn presets_resolve() {
         assert!(Topology::preset("broadwell20").is_some());
         assert!(Topology::preset("cascadelake").is_some());
+        assert!(Topology::preset("hetero20").is_some());
+        assert!(Topology::preset("hetero56").is_some());
         assert!(Topology::preset("host").is_some());
         assert!(Topology::preset("riscv").is_none());
+    }
+
+    #[test]
+    fn heterogeneous_appends_accelerator_domains() {
+        let t = Topology::heterogeneous(
+            "h",
+            2,
+            4,
+            1.5,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 4.0), (DeviceClass::Fpga, 1, 2.0)],
+        );
+        assert_eq!(t.n_cores(), 11);
+        assert_eq!(t.sockets, 4, "2 CPU sockets + 2 accelerator domains");
+        // CPU places unchanged vs the symmetric layout
+        assert_eq!(t.socket_of(0), 0);
+        assert_eq!(t.socket_of(7), 1);
+        assert_eq!(t.places[0].device, DeviceClass::Cpu);
+        assert_eq!(t.places[0].speed, 1.0);
+        // GPU devices on their own domain, 4x speed
+        assert_eq!(t.places[8].device, DeviceClass::Gpu);
+        assert_eq!(t.socket_of(8), 2);
+        assert_eq!(t.socket_of(9), 2);
+        assert_eq!(t.speed_of(8), 4.0);
+        // FPGA after the GPUs
+        assert_eq!(t.places[10].device, DeviceClass::Fpga);
+        assert_eq!(t.socket_of(10), 3);
+        // accelerator memory is remote to the CPU sockets
+        assert!(!t.same_domain(0, 8));
+        assert_eq!(t.access_factor(0, 8), 1.5);
+        assert_eq!(
+            t.device_classes(),
+            vec![DeviceClass::Cpu, DeviceClass::Gpu, DeviceClass::Fpga]
+        );
+        assert_eq!(t.class_cores(DeviceClass::Gpu), 2);
+        assert!(t.has_class(DeviceClass::Fpga));
+    }
+
+    #[test]
+    fn symmetric_is_the_cpu_only_special_case() {
+        let t = Topology::broadwell20();
+        assert_eq!(t.device_classes(), vec![DeviceClass::Cpu]);
+        assert!(!t.has_class(DeviceClass::Gpu));
+        assert!(t.places.iter().all(|p| p.speed == 1.0));
+        assert_eq!(t.speed_of(0), t.core_speed);
+    }
+
+    #[test]
+    fn modelled_hetero_machines() {
+        let h20 = Topology::hetero20();
+        assert_eq!(h20.n_cores(), 24);
+        assert_eq!(h20.class_cores(DeviceClass::Cpu), 20);
+        assert_eq!(h20.class_cores(DeviceClass::Gpu), 4);
+        let h56 = Topology::hetero56();
+        assert_eq!(h56.n_cores(), 64);
+        assert_eq!(h56.class_cores(DeviceClass::Gpu), 8);
+        // the accelerator pool is modelled at 4x CPU speed
+        let gpu0 = h56.places.iter().position(|p| p.device == DeviceClass::Gpu).unwrap();
+        assert_eq!(h56.speed_of(gpu0), 4.0 * h56.core_speed);
+    }
+
+    #[test]
+    fn device_class_names_roundtrip() {
+        for c in DeviceClass::ALL {
+            assert_eq!(DeviceClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(DeviceClass::parse("tpu"), None);
     }
 
     #[test]

@@ -133,8 +133,7 @@ impl Vee {
             ),
             // Oneshot mode: spawn a throwaway executor for this one job
             // (construct pool → run → join, the seed's spawn-per-stage
-            // semantics) without going through the deprecated
-            // worker::run_once shim.
+            // semantics).
             None => Executor::new(
                 Arc::clone(&self.topo),
                 Arc::clone(&self.sched),

@@ -1,6 +1,11 @@
 //! Integration: AOT JAX/Pallas artifacts executed from rust via PJRT,
 //! validated against the native rust kernels. Requires `make artifacts`
 //! (tests skip with a notice if artifacts are absent).
+//!
+//! The non-`pjrt` build is *tested*, not just compiled: the stub
+//! `Runtime`/`DeviceService` must fail with descriptive errors (no
+//! hangs, no panics), and GPU-class graph placement must degrade
+//! gracefully to the CPU pool with an annotated `NodeReport`.
 
 use daphne_sched::apps::{cc, linreg};
 use daphne_sched::config::SchedConfig;
@@ -157,4 +162,137 @@ fn pjrt_linreg_handles_padding_tail() {
             "beta[{i}]: native {a} vs pjrt {b}"
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// stub path (built without the `pjrt` feature): graceful-fallback tests
+// ---------------------------------------------------------------------------
+
+/// The stub `Runtime` must error descriptively — naming the missing
+/// feature — rather than pretending artifacts can execute.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stub_runtime_load_errors_descriptively() {
+    // `.err()` rather than `.expect_err()`: the stub Runtime is not Debug
+    let err = Runtime::load(std::path::Path::new("artifacts"))
+        .err()
+        .expect("stub Runtime::load must always fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "error must name the feature: {msg}");
+    assert!(
+        msg.contains("artifacts"),
+        "error must name the requested dir: {msg}"
+    );
+}
+
+/// `DeviceService::start` against a parseable manifest must return a
+/// descriptive `Err` on the stub build — the service thread exits and
+/// is joined; the call neither hangs nor panics.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stub_device_service_start_fails_gracefully() {
+    let dir = std::env::temp_dir().join("daphne_sched_pjrt_stub_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{
+          "block_shapes": {"cc": [128, 1024], "lr": [256, 128]},
+          "stages": {
+            "cc_propagate": {"file": "cc_propagate.hlo.txt",
+                              "args": [[128, 1024], [1024], [128]],
+                              "outputs": 1, "dtype": "f32"}
+          }
+        }"#,
+    )
+    .unwrap();
+    let err = DeviceService::start(dir)
+        .err()
+        .expect("stub DeviceService::start must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "error must name the feature: {msg}");
+}
+
+/// GPU-class graph placement on a stub build: the node is rerouted to
+/// the CPU pool (it executes there — asserted via worker ids), the
+/// graph completes, and the degradation is annotated on the
+/// `NodeReport` rather than silent.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stub_gpu_placement_falls_back_to_cpu_pool_with_annotation() {
+    use daphne_sched::sched::graph::GraphSpec;
+    use daphne_sched::sched::{Executor, NodeSpec};
+    use daphne_sched::topology::DeviceClass;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let exec = Executor::new(
+        Arc::new(Topology::heterogeneous(
+            "h",
+            1,
+            2,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 2.0)],
+        )),
+        Arc::new(SchedConfig::default()),
+    );
+    let items = AtomicUsize::new(0);
+    let workers = Mutex::new(Vec::new());
+    let spec = GraphSpec::new("gpu-fallback").node(
+        NodeSpec::new("kernelish", 5_000).on(DeviceClass::Gpu),
+        |w, r| {
+            workers.lock().unwrap().push(w);
+            items.fetch_add(r.len(), Ordering::Relaxed);
+        },
+    );
+    let report = exec.run_graph(spec).unwrap();
+    assert!(report.all_completed());
+    assert_eq!(items.load(Ordering::Relaxed), 5_000);
+    let node = report.node("kernelish").unwrap();
+    assert_eq!(
+        node.device,
+        DeviceClass::Cpu,
+        "stub build must reroute GPU placement to the CPU pool"
+    );
+    let note = node
+        .fallback
+        .as_ref()
+        .expect("the degradation must be annotated, not silent");
+    assert!(note.contains("pjrt"), "annotation names the cause: {note}");
+    // CPU pool is workers 0..2 on this topology
+    assert!(
+        workers.lock().unwrap().iter().all(|&w| w < 2),
+        "fallback node executed off the CPU pool"
+    );
+}
+
+/// On a `pjrt` build the same placement is honoured: no fallback, the
+/// node reports the GPU pool.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_gpu_placement_is_honoured_without_fallback() {
+    use daphne_sched::sched::graph::GraphSpec;
+    use daphne_sched::sched::{Executor, NodeSpec};
+    use daphne_sched::topology::DeviceClass;
+    use std::sync::Arc;
+
+    let exec = Executor::new(
+        Arc::new(Topology::heterogeneous(
+            "h",
+            1,
+            2,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 2.0)],
+        )),
+        Arc::new(SchedConfig::default()),
+    );
+    let spec = GraphSpec::new("gpu").node(
+        NodeSpec::new("kernelish", 1_000).on(DeviceClass::Gpu),
+        |_w, _r| {},
+    );
+    let report = exec.run_graph(spec).unwrap();
+    let node = report.node("kernelish").unwrap();
+    assert_eq!(node.device, DeviceClass::Gpu);
+    assert!(node.fallback.is_none());
 }

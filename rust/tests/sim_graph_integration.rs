@@ -189,6 +189,7 @@ fn graph_autotune_beats_or_matches_best_uniform_on_56_cores() {
             QueueLayout::PerCore,
         ],
         victims: vec![VictimStrategy::Seq, VictimStrategy::SeqPri],
+        placements: Vec::new(),
     };
     let tuning =
         autotune::tune_graph(&shape, &topo, &costs(), &space, 3, 1).unwrap();
