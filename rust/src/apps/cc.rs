@@ -24,11 +24,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use crate::config::SchedConfig;
 use crate::matrix::CsrMatrix;
 use crate::runtime::{DeviceClient, Manifest};
-use crate::sched::SchedReport;
+use crate::sched::{SchedReport, SubmitOpts};
 use crate::sim::{self, CostModel, GraphShape, NodeModel, Workload};
 use crate::topology::Topology;
 use crate::util::DisjointMut;
-use crate::vee::{Pipeline, Vee};
+use crate::vee::{report_from_graph, Pipeline, Vee};
 
 /// Result of a connected-components run.
 #[derive(Debug, Clone)]
@@ -115,36 +115,7 @@ pub fn run_with(vee: &Vee, g: &CsrMatrix, maxi: usize) -> CcResult {
         let diff_count = AtomicUsize::new(0);
         let report = {
             let out = DisjointMut::new(&mut u);
-            let out = &out;
-            let c_ref = &c;
-            let diff_count = &diff_count;
-            let pipeline = Pipeline::new("cc:iter")
-                .stage("propagate", n, move |_w, range| {
-                    let slice = out.slice_mut(range.start, range.end);
-                    // write into the task's disjoint window
-                    for (off, r) in range.iter().enumerate() {
-                        let mut m = c_ref[r];
-                        for &col in g.row(r) {
-                            let v = c_ref[col as usize];
-                            if v > m {
-                                m = v;
-                            }
-                        }
-                        slice[off] = m;
-                    }
-                })
-                // diff = sum(u != c), parallel partial counts over the
-                // labels `propagate` just wrote (shared reads are sound:
-                // the writer node completed before this one dispatches)
-                .stage("diff", n, move |_w, range| {
-                    let mismatches = count_mismatches(
-                        out.slice(range.start, range.end),
-                        &c_ref[range.start..range.end],
-                    );
-                    if mismatches > 0 {
-                        diff_count.fetch_add(mismatches, Ordering::Relaxed);
-                    }
-                });
+            let pipeline = iteration_pipeline(g, &c, &out, &diff_count);
             vee.run_pipeline(&pipeline)
         };
         reports.push(
@@ -165,6 +136,177 @@ pub fn run_with(vee: &Vee, g: &CsrMatrix, maxi: usize) -> CcResult {
 
     let components = count_components(&c);
     CcResult { labels: c, iterations, components, reports, diff_reports }
+}
+
+/// One CC loop iteration as a pipeline over borrowed label buffers:
+/// the scheduled `propagate` operator writing into `out`'s disjoint
+/// windows, then the `diff` reduction reading the labels it wrote (a
+/// true dependency edge). Shared by [`run_with`] (one pipeline at a
+/// time) and [`run_concurrent`] (many pipelines fused on one session).
+fn iteration_pipeline<'a, 'b: 'a>(
+    g: &'a CsrMatrix,
+    c_ref: &'a [f32],
+    out: &'a DisjointMut<'b, f32>,
+    diff_count: &'a AtomicUsize,
+) -> Pipeline<'a> {
+    let n = g.rows;
+    Pipeline::new("cc:iter")
+        .stage("propagate", n, move |_w, range| {
+            let slice = out.slice_mut(range.start, range.end);
+            // write into the task's disjoint window
+            for (off, r) in range.iter().enumerate() {
+                let mut m = c_ref[r];
+                for &col in g.row(r) {
+                    let v = c_ref[col as usize];
+                    if v > m {
+                        m = v;
+                    }
+                }
+                slice[off] = m;
+            }
+        })
+        // diff = sum(u != c), parallel partial counts over the
+        // labels `propagate` just wrote (shared reads are sound:
+        // the writer node completed before this one dispatches)
+        .stage("diff", n, move |_w, range| {
+            let mismatches = count_mismatches(
+                out.slice(range.start, range.end),
+                &c_ref[range.start..range.end],
+            );
+            if mismatches > 0 {
+                diff_count.fetch_add(mismatches, Ordering::Relaxed);
+            }
+        })
+}
+
+/// Per-pipeline state of one concurrent CC tenant.
+struct CcJobState {
+    c: Vec<f32>,
+    u: Vec<f32>,
+    converged: bool,
+    iterations: usize,
+    reports: Vec<SchedReport>,
+    diff_reports: Vec<SchedReport>,
+}
+
+/// Run `jobs` identical CC pipelines *concurrently* through one
+/// [`Session`](crate::sched::Session) of the engine's resident pool —
+/// submission happens entirely on the calling thread; the only OS
+/// threads involved are the executor's workers. Each round fuses the
+/// unconverged pipelines' iteration graphs (`propagate → diff` each,
+/// tagged `cc<i>`) into one merged scheduling horizon via
+/// `Session::run_all`, so the executor's tenancy policy — not
+/// submission interleaving — decides how the pool serves them.
+///
+/// Fused submission is dependency-aware (dag) dispatch by
+/// construction — the engine's `graph=barrier` knob does not apply
+/// here; callers wanting the barrier A/B baseline run sequential
+/// [`run_with`] loops instead (as the CLI does).
+///
+/// Panics if `vee` is a one-shot engine (there is no resident pool to
+/// share; callers fall back to sequential [`run_with`] loops).
+pub fn run_concurrent(
+    vee: &Vee,
+    g: &CsrMatrix,
+    jobs: usize,
+    maxi: usize,
+) -> Vec<CcResult> {
+    let session = vee
+        .session()
+        .expect("run_concurrent needs the persistent executor");
+    let n = g.rows;
+    let mut states: Vec<CcJobState> = (0..jobs)
+        .map(|_| CcJobState {
+            c: (0..n).map(|i| (i + 1) as f32).collect(),
+            u: vec![0f32; n],
+            converged: false,
+            iterations: 0,
+            reports: Vec::new(),
+            diff_reports: Vec::new(),
+        })
+        .collect();
+
+    for _ in 0..maxi {
+        let live: Vec<usize> = states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.converged)
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        let diffs: Vec<AtomicUsize> =
+            live.iter().map(|_| AtomicUsize::new(0)).collect();
+        let round_reports = {
+            // Per-live-pipeline borrowed views for this round: the old
+            // labels read-only, the new labels as disjoint task windows.
+            let views: Vec<(&[f32], DisjointMut<'_, f32>)> = states
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| live.contains(i))
+                .map(|(_, s)| (s.c.as_slice(), DisjointMut::new(&mut s.u)))
+                .collect();
+            let pipelines: Vec<Pipeline<'_>> = views
+                .iter()
+                .zip(&diffs)
+                .map(|((c_ref, out), diff)| {
+                    iteration_pipeline(g, c_ref, out, diff)
+                })
+                .collect();
+            let specs = pipelines
+                .iter()
+                .zip(&live)
+                .map(|(p, &i)| {
+                    (
+                        p.to_graph_spec(&vee.sched),
+                        SubmitOpts::new().tag(&format!("cc{i}")),
+                    )
+                })
+                .collect();
+            session
+                .run_all(specs)
+                .expect("cc iteration graphs are acyclic")
+        };
+        for (graph, &i) in round_reports.into_iter().zip(&live) {
+            let report = report_from_graph(graph);
+            let s = &mut states[i];
+            s.iterations += 1;
+            s.reports.push(
+                report
+                    .stage("propagate")
+                    .cloned()
+                    .expect("propagate stage always present"),
+            );
+            s.diff_reports.push(
+                report
+                    .stage("diff")
+                    .cloned()
+                    .expect("diff stage always present"),
+            );
+        }
+        for (k, &i) in live.iter().enumerate() {
+            let s = &mut states[i];
+            std::mem::swap(&mut s.c, &mut s.u);
+            if diffs[k].load(Ordering::Relaxed) == 0 {
+                s.converged = true;
+            }
+        }
+    }
+
+    states
+        .into_iter()
+        .map(|s| {
+            let components = count_components(&s.c);
+            CcResult {
+                labels: s.c,
+                iterations: s.iterations,
+                components,
+                reports: s.reports,
+                diff_reports: s.diff_reports,
+            }
+        })
+        .collect()
 }
 
 /// PJRT execution: the propagate step runs the AOT `cc_propagate`
@@ -379,6 +521,31 @@ mod tests {
         let topo = Topology::symmetric("t", 1, 1, 1.0, 1.0);
         let r = run_native(&g, &topo, &SchedConfig::default(), 100);
         assert_eq!(r.components, 3); // {0,1}, {2}, {3}
+    }
+
+    #[test]
+    fn concurrent_pipelines_agree_with_sequential() {
+        use crate::sched::TenancyPolicy;
+        let g = amazon_like(&SnapGraph::small(400, 5)).symmetrize();
+        for policy in TenancyPolicy::ALL {
+            let vee = crate::vee::Vee::new(
+                Topology::symmetric("t", 1, 4, 1.0, 1.0),
+                SchedConfig::default(),
+            )
+            .with_tenancy_policy(policy);
+            let baseline = run_with(&vee, &g, 100);
+            let results = run_concurrent(&vee, &g, 3, 100);
+            assert_eq!(results.len(), 3);
+            for r in &results {
+                assert_eq!(r.labels, baseline.labels, "{policy:?}");
+                assert_eq!(r.iterations, baseline.iterations);
+                assert_eq!(r.components, baseline.components);
+                assert_eq!(r.reports.len(), r.iterations);
+                assert_eq!(r.diff_reports.len(), r.iterations);
+            }
+            // one resident pool served every concurrent pipeline
+            assert_eq!(vee.executor().unwrap().n_workers(), 4);
+        }
     }
 
     #[test]

@@ -28,10 +28,11 @@ use std::time::Instant;
 use crate::config::SchedConfig;
 use crate::matrix::{ops, DenseMatrix};
 use crate::runtime::{DeviceClient, Manifest};
+use crate::sched::SubmitOpts;
 use crate::sim::{GraphShape, NodeModel, Workload};
 use crate::topology::Topology;
 use crate::util::DisjointMut;
-use crate::vee::{Pipeline, PipelineReport, Vee};
+use crate::vee::{report_from_graph, Pipeline, PipelineReport, Vee};
 
 /// Result of one training run.
 #[derive(Debug, Clone)]
@@ -91,114 +92,199 @@ pub fn run_with(
     y: &[f32],
     lambda: f32,
 ) -> Result<LinregResult, String> {
-    let n = x.rows;
-    let d = x.cols;
-    let dd = d + 1;
-
-    let stats_acc: Mutex<(Vec<f32>, Vec<f32>)> =
-        Mutex::new((vec![0.0; d], vec![0.0; d]));
-    // mean/std, published by the tiny `stats` node once `colstats` is
-    // fully reduced (the dependency edge makes the `set` happen-before
-    // every `standardize` task).
-    let norm: OnceLock<(Vec<f32>, Vec<f32>)> = OnceLock::new();
+    let st = TrainState::new(x.rows, x.cols);
     let mut x_std = x.clone();
-    let a_acc: Mutex<Vec<f32>> = Mutex::new(vec![0.0; dd * dd]);
-    let b_acc: Mutex<Vec<f32>> = Mutex::new(vec![0.0; dd]);
-
     let report = {
-        let stats_acc = &stats_acc;
-        let norm = &norm;
         let x_view = DisjointMut::new(&mut x_std.data);
-        let x_view = &x_view;
-        let a_acc = &a_acc;
-        let b_acc = &b_acc;
-        let pipeline = Pipeline::new("linreg")
-            .stage("colstats", n, move |_w, range| {
-                let mut s = vec![0.0; d];
-                let mut sq = vec![0.0; d];
-                ops::colstats_rows(x, &mut s, &mut sq, range.start, range.end);
-                let mut acc = stats_acc.lock().unwrap();
-                for c in 0..d {
-                    acc.0[c] += s[c];
-                    acc.1[c] += sq[c];
-                }
-            })
-            .stage("stats", 1, move |_w, _range| {
-                let acc = stats_acc.lock().unwrap();
-                let mean: Vec<f32> =
-                    acc.0.iter().map(|&s| s / n as f32).collect();
-                let std: Vec<f32> = acc
-                    .1
-                    .iter()
-                    .zip(&mean)
-                    .map(|(&sq, &m)| (sq / n as f32 - m * m).max(1e-12).sqrt())
-                    .collect();
-                let _ = norm.set((mean, std));
-            })
-            .stage("standardize", n, move |_w, range| {
-                let (mean, std) = norm.get().expect("stats node completed");
-                let rows = x_view.slice_mut(range.start * d, range.end * d);
-                for row in rows.chunks_mut(d) {
-                    for (c, v) in row.iter_mut().enumerate() {
-                        *v = (*v - mean[c]) / std[c];
-                    }
-                }
-            })
-            // A = X^T X and b = X^T y only need the standardized rows —
-            // independent of each other, so they overlap under dag
-            // dispatch (shared reads of the rows are sound: the
-            // standardize writer completed before either dispatches).
-            .stage_after("syrk", n, &["standardize"], move |_w, range| {
-                let rows = x_view.slice(range.start * d, range.end * d);
-                let mut a = vec![0.0f32; dd * dd];
-                for row in rows.chunks(d) {
-                    for i in 0..d {
-                        let xi = row[i];
-                        let arow = &mut a[i * dd..i * dd + d];
-                        for (j, &xj) in row.iter().enumerate() {
-                            arow[j] += xi * xj;
-                        }
-                        a[i * dd + d] += xi; // bias column
-                    }
-                    // bias row: sum of features and count
-                    for (j, &xj) in row.iter().enumerate() {
-                        a[d * dd + j] += xj;
-                    }
-                    a[d * dd + d] += 1.0;
-                }
-                let mut acc = a_acc.lock().unwrap();
-                for (dst, src) in acc.iter_mut().zip(&a) {
-                    *dst += src;
-                }
-            })
-            .stage_after("gemv", n, &["standardize"], move |_w, range| {
-                let rows = x_view.slice(range.start * d, range.end * d);
-                let mut b = vec![0.0f32; dd];
-                for (off, row) in rows.chunks(d).enumerate() {
-                    let yr = y[range.start + off];
-                    for (i, &xi) in row.iter().enumerate() {
-                        b[i] += xi * yr;
-                    }
-                    b[d] += yr;
-                }
-                let mut acc = b_acc.lock().unwrap();
-                for (dst, src) in acc.iter_mut().zip(&b) {
-                    *dst += src;
-                }
-            });
+        let pipeline = training_pipeline(x, y, &st, &x_view);
         vee.run_pipeline(&pipeline)
     };
-
-    // --- epilogue: ridge + solve (Listing 2 lines 13-16) -------------
-    let mut a_flat = a_acc.into_inner().unwrap();
-    let b = b_acc.into_inner().unwrap();
-    for i in 0..dd {
-        a_flat[i * dd + i] += lambda;
-    }
-    let a = DenseMatrix::from_vec(dd, dd, a_flat);
-    let beta = ops::cholesky_solve(&a, &b)?;
-
+    let beta = st.solve(lambda)?;
     Ok(LinregResult { beta, report })
+}
+
+/// Accumulator state of one training pipeline: the column-stats
+/// partials, the published mean/std, and the `syrk`/`gemv` reduction
+/// targets. One per concurrent tenant in [`run_concurrent`].
+struct TrainState {
+    n: usize,
+    d: usize,
+    stats_acc: Mutex<(Vec<f32>, Vec<f32>)>,
+    /// mean/std, published by the tiny `stats` node once `colstats` is
+    /// fully reduced (the dependency edge makes the `set` happen-before
+    /// every `standardize` task).
+    norm: OnceLock<(Vec<f32>, Vec<f32>)>,
+    a_acc: Mutex<Vec<f32>>,
+    b_acc: Mutex<Vec<f32>>,
+}
+
+impl TrainState {
+    fn new(n: usize, d: usize) -> Self {
+        let dd = d + 1;
+        TrainState {
+            n,
+            d,
+            stats_acc: Mutex::new((vec![0.0; d], vec![0.0; d])),
+            norm: OnceLock::new(),
+            a_acc: Mutex::new(vec![0.0; dd * dd]),
+            b_acc: Mutex::new(vec![0.0; dd]),
+        }
+    }
+
+    /// Ridge + solve epilogue (Listing 2 lines 13-16) over the reduced
+    /// accumulators.
+    fn solve(self, lambda: f32) -> Result<Vec<f32>, String> {
+        let dd = self.d + 1;
+        let mut a_flat = self.a_acc.into_inner().unwrap();
+        let b = self.b_acc.into_inner().unwrap();
+        for i in 0..dd {
+            a_flat[i * dd + i] += lambda;
+        }
+        let a = DenseMatrix::from_vec(dd, dd, a_flat);
+        ops::cholesky_solve(&a, &b)
+    }
+}
+
+/// The five-stage training pipeline over borrowed data:
+/// `colstats → stats → standardize → { syrk, gemv }`. Shared by
+/// [`run_with`] (one pipeline, blocking) and [`run_concurrent`] (many
+/// pipelines fused on one session).
+fn training_pipeline<'a, 'b: 'a>(
+    x: &'a DenseMatrix,
+    y: &'a [f32],
+    st: &'a TrainState,
+    x_view: &'a DisjointMut<'b, f32>,
+) -> Pipeline<'a> {
+    let n = st.n;
+    let d = st.d;
+    let dd = d + 1;
+    Pipeline::new("linreg")
+        .stage("colstats", n, move |_w, range| {
+            let mut s = vec![0.0; d];
+            let mut sq = vec![0.0; d];
+            ops::colstats_rows(x, &mut s, &mut sq, range.start, range.end);
+            let mut acc = st.stats_acc.lock().unwrap();
+            for c in 0..d {
+                acc.0[c] += s[c];
+                acc.1[c] += sq[c];
+            }
+        })
+        .stage("stats", 1, move |_w, _range| {
+            let acc = st.stats_acc.lock().unwrap();
+            let mean: Vec<f32> =
+                acc.0.iter().map(|&s| s / n as f32).collect();
+            let std: Vec<f32> = acc
+                .1
+                .iter()
+                .zip(&mean)
+                .map(|(&sq, &m)| (sq / n as f32 - m * m).max(1e-12).sqrt())
+                .collect();
+            let _ = st.norm.set((mean, std));
+        })
+        .stage("standardize", n, move |_w, range| {
+            let (mean, std) = st.norm.get().expect("stats node completed");
+            let rows = x_view.slice_mut(range.start * d, range.end * d);
+            for row in rows.chunks_mut(d) {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = (*v - mean[c]) / std[c];
+                }
+            }
+        })
+        // A = X^T X and b = X^T y only need the standardized rows —
+        // independent of each other, so they overlap under dag
+        // dispatch (shared reads of the rows are sound: the
+        // standardize writer completed before either dispatches).
+        .stage_after("syrk", n, &["standardize"], move |_w, range| {
+            let rows = x_view.slice(range.start * d, range.end * d);
+            let mut a = vec![0.0f32; dd * dd];
+            for row in rows.chunks(d) {
+                for i in 0..d {
+                    let xi = row[i];
+                    let arow = &mut a[i * dd..i * dd + d];
+                    for (j, &xj) in row.iter().enumerate() {
+                        arow[j] += xi * xj;
+                    }
+                    a[i * dd + d] += xi; // bias column
+                }
+                // bias row: sum of features and count
+                for (j, &xj) in row.iter().enumerate() {
+                    a[d * dd + j] += xj;
+                }
+                a[d * dd + d] += 1.0;
+            }
+            let mut acc = st.a_acc.lock().unwrap();
+            for (dst, src) in acc.iter_mut().zip(&a) {
+                *dst += src;
+            }
+        })
+        .stage_after("gemv", n, &["standardize"], move |_w, range| {
+            let rows = x_view.slice(range.start * d, range.end * d);
+            let mut b = vec![0.0f32; dd];
+            for (off, row) in rows.chunks(d).enumerate() {
+                let yr = y[range.start + off];
+                for (i, &xi) in row.iter().enumerate() {
+                    b[i] += xi * yr;
+                }
+                b[d] += yr;
+            }
+            let mut acc = st.b_acc.lock().unwrap();
+            for (dst, src) in acc.iter_mut().zip(&b) {
+                *dst += src;
+            }
+        })
+}
+
+/// Train `jobs` identical models *concurrently* through one
+/// [`Session`](crate::sched::Session) of the engine's resident pool:
+/// every pipeline's five-stage task graph is fused into one merged
+/// scheduling horizon (`Session::run_all`, tags `linreg<i>`), with all
+/// submission on the calling thread — the executor's workers are the
+/// only OS threads involved. Fused submission is dag dispatch by
+/// construction (the `graph=barrier` knob does not apply; the CLI runs
+/// sequential [`run_with`] loops for that baseline). Panics if `vee`
+/// is a one-shot engine.
+pub fn run_concurrent(
+    vee: &Vee,
+    x: &DenseMatrix,
+    y: &[f32],
+    lambda: f32,
+    jobs: usize,
+) -> Result<Vec<LinregResult>, String> {
+    let session = vee
+        .session()
+        .expect("run_concurrent needs the persistent executor");
+    let states: Vec<TrainState> =
+        (0..jobs).map(|_| TrainState::new(x.rows, x.cols)).collect();
+    let mut datas: Vec<Vec<f32>> =
+        (0..jobs).map(|_| x.data.clone()).collect();
+    let graphs = {
+        let views: Vec<DisjointMut<'_, f32>> =
+            datas.iter_mut().map(|d| DisjointMut::new(d)).collect();
+        let pipelines: Vec<Pipeline<'_>> = states
+            .iter()
+            .zip(&views)
+            .map(|(st, view)| training_pipeline(x, y, st, view))
+            .collect();
+        let specs = pipelines
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                (
+                    p.to_graph_spec(&vee.sched),
+                    SubmitOpts::new().tag(&format!("linreg{i}")),
+                )
+            })
+            .collect();
+        session.run_all(specs).map_err(|e| e.to_string())?
+    };
+    states
+        .into_iter()
+        .zip(graphs)
+        .map(|(st, graph)| {
+            let report = report_from_graph(graph);
+            Ok(LinregResult { beta: st.solve(lambda)?, report })
+        })
+        .collect()
 }
 
 /// PJRT execution of the fused stage: standardize+syrk+gemv per
@@ -403,6 +489,26 @@ mod tests {
         assert_eq!(r.beta.len(), 9);
         let e = rmse(&x, &y, &r.beta);
         assert!(e < 1e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn concurrent_trainings_agree_with_sequential() {
+        let (x, y, _) = planted(1200, 6, 11);
+        let vee =
+            crate::vee::Vee::new(topo(), SchedConfig::default());
+        let base = run_with(&vee, &x, &y, 1e-4).unwrap();
+        let results = run_concurrent(&vee, &x, &y, 1e-4, 3).unwrap();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert_eq!(r.beta.len(), base.beta.len());
+            for (a, b) in r.beta.iter().zip(&base.beta) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "concurrent beta {a} vs sequential {b}"
+                );
+            }
+            assert_eq!(r.report.stages.len(), 5);
+        }
     }
 
     #[test]

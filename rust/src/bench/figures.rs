@@ -2,13 +2,16 @@
 //! bench binaries and the CLI share the implementation.
 
 use crate::apps::{cc, hetero, linreg};
-use crate::config::{GraphMode, SchedConfig};
+use crate::config::{ArrivalPattern, GraphMode, SchedConfig};
 use crate::graph::{amazon_like, scale_up, SnapGraph};
 use crate::matrix::CsrMatrix;
 use crate::sched::autotune::{self, SearchSpace};
-use crate::sched::{Placement, QueueLayout, Scheme, VictimStrategy};
-use crate::sim::{self, CostModel, GraphShape};
+use crate::sched::{
+    Placement, QueueLayout, Scheme, TenancyPolicy, VictimStrategy,
+};
+use crate::sim::{self, CostModel, GraphShape, NodeModel, TenantSpec};
 use crate::topology::{DeviceClass, Topology};
+use crate::util::Rng;
 
 use super::calibration::AppCosts;
 
@@ -29,10 +32,14 @@ pub enum FigureId {
     /// Not a paper figure: the heterogeneous diamond under
     /// any/pinned/autotuned placement on the modelled hetero machines.
     FigHetero,
+    /// Not a paper figure: multi-tenant policy comparison
+    /// (fifo|fair|priority) under bursty arrivals on the modelled
+    /// machines — per-tenant p50/p99 slowdown and fairness index.
+    FigTenancy,
 }
 
 impl FigureId {
-    pub const ALL: [FigureId; 10] = [
+    pub const ALL: [FigureId; 11] = [
         FigureId::Fig7a,
         FigureId::Fig7b,
         FigureId::Fig8a,
@@ -43,6 +50,7 @@ impl FigureId {
         FigureId::Fig10b,
         FigureId::FigDag,
         FigureId::FigHetero,
+        FigureId::FigTenancy,
     ];
 
     pub fn parse(s: &str) -> Option<FigureId> {
@@ -57,6 +65,7 @@ impl FigureId {
             "10b" | "fig10b" => Some(FigureId::Fig10b),
             "dag" | "figdag" => Some(FigureId::FigDag),
             "het" | "hetero" | "fighetero" => Some(FigureId::FigHetero),
+            "ten" | "tenancy" | "figtenancy" => Some(FigureId::FigTenancy),
             _ => None,
         }
     }
@@ -91,19 +100,24 @@ impl FigureId {
             FigureId::FigHetero => {
                 "Fig HET: placement any|pinned|auto, hetero machines"
             }
+            FigureId::FigTenancy => {
+                "Fig TEN: tenancy policy fifo|fair|priority, bursty arrivals"
+            }
         }
     }
 
-    /// Machine a figure models. [`FigureId::FigDag`] and
-    /// [`FigureId::FigHetero`] iterate both of their modelled machines
-    /// internally; this returns the smaller one.
+    /// Machine a figure models. [`FigureId::FigDag`],
+    /// [`FigureId::FigHetero`] and [`FigureId::FigTenancy`] iterate
+    /// their modelled machines internally; this returns the smallest
+    /// one.
     pub fn machine(&self) -> Topology {
         match self {
             FigureId::Fig7a
             | FigureId::Fig8a
             | FigureId::Fig8b
             | FigureId::Fig10a
-            | FigureId::FigDag => Topology::broadwell20(),
+            | FigureId::FigDag
+            | FigureId::FigTenancy => Topology::broadwell20(),
             FigureId::FigHetero => Topology::hetero20(),
             _ => Topology::cascadelake56(),
         }
@@ -126,6 +140,9 @@ pub struct FigureParams {
     /// Independent repetitions (fresh graph + noise seeds) averaged per
     /// row, as the paper's measurements average repeated runs.
     pub repetitions: usize,
+    /// Arrival pattern of [`FigureId::FigTenancy`]'s tenant mix
+    /// (`arrival=burst|uniform|poisson`).
+    pub arrival: ArrivalPattern,
     pub costs: CostModel,
     pub app_costs: AppCosts,
 }
@@ -142,6 +159,7 @@ impl Default for FigureParams {
             iterations: None,
             lr_rows: 2_000_000,
             repetitions: 3,
+            arrival: ArrivalPattern::Burst,
             // DAPHNE-runtime-like dispatch costs + OS interference: the
             // environment the paper measured (see CostModel docs).
             costs: CostModel::daphne_like(),
@@ -509,11 +527,154 @@ pub fn hetero_figure(params: &FigureParams) -> Vec<HeteroRow> {
     out
 }
 
+/// One tenancy-policy comparison row: a tenant mix replayed on one
+/// modelled machine under one cross-job pick policy.
+#[derive(Debug, Clone)]
+pub struct TenancyRow {
+    pub machine: &'static str,
+    pub policy: &'static str,
+    /// Median per-tenant slowdown (latency / isolated makespan).
+    pub p50_slowdown: f64,
+    /// Tail per-tenant slowdown — the metric bursty multi-tenancy is
+    /// judged by.
+    pub p99_slowdown: f64,
+    /// Jain fairness index over per-tenant slowdowns.
+    pub fairness: f64,
+    /// Virtual completion time of the whole mix, seconds.
+    pub makespan: f64,
+}
+
+impl TenancyRow {
+    pub fn print(&self) {
+        println!(
+            "  {:<9} {:<9} p50={:>7.2}x p99={:>8.2}x fairness={:>5.3} \
+             makespan={:>8.4}s",
+            self.machine,
+            self.policy,
+            self.p50_slowdown,
+            self.p99_slowdown,
+            self.fairness,
+            self.makespan
+        );
+    }
+}
+
+/// The tenant mix of the tenancy figure, scaled to a machine's CPU
+/// width: two heavy batch pipelines (3-node chains) submitted at t=0
+/// plus ten short interactive tenants whose arrival offsets follow
+/// `pattern` inside the burst window. Interactive tenants carry
+/// priority 2 and fair-share weight 4 under the `interactive` tag, the
+/// batch pipelines priority 0 / weight 1 under `batch` — so each
+/// policy has something to act on.
+pub fn tenancy_tenants(
+    cores: usize,
+    pattern: ArrivalPattern,
+    seed: u64,
+) -> Vec<TenantSpec> {
+    let heavy = |name: &str| {
+        GraphShape::new(name)
+            .node(NodeModel::uniform("s1", cores * 96, 1e-4))
+            .node(NodeModel::uniform("s2", cores * 96, 1e-4).after("s1"))
+            .node(NodeModel::uniform("s3", cores * 96, 1e-4).after("s2"))
+    };
+    let n_short = 10usize;
+    // Burst window: well inside the heavy pipelines' span, so every
+    // interactive tenant contends with the batch work.
+    let window = 0.010;
+    let offsets: Vec<f64> = match pattern {
+        ArrivalPattern::Burst => (0..n_short)
+            .map(|i| {
+                // two tight bursts of five
+                let burst = if i < n_short / 2 { 0.001 } else { 0.005 };
+                burst + i as f64 * 1e-5
+            })
+            .collect(),
+        ArrivalPattern::Uniform => (0..n_short)
+            .map(|i| (i + 1) as f64 * window / n_short as f64)
+            .collect(),
+        ArrivalPattern::Poisson => {
+            let mut rng = Rng::new(seed ^ 0xA881_7E9A);
+            let rate = n_short as f64 / window;
+            let mut t = 0.0;
+            (0..n_short)
+                .map(|_| {
+                    t += rng.exponential(rate);
+                    t
+                })
+                .collect()
+        }
+    };
+    let mut out = vec![
+        TenantSpec::new("batch0", heavy("batch0"), 0.0).tag("batch"),
+        TenantSpec::new("batch1", heavy("batch1"), 0.0).tag("batch"),
+    ];
+    for (i, off) in offsets.iter().enumerate() {
+        out.push(
+            TenantSpec::new(
+                &format!("interactive{i}"),
+                GraphShape::new("interactive")
+                    .node(NodeModel::uniform("q", cores * 4, 1e-4)),
+                *off,
+            )
+            .tag("interactive")
+            .priority(2)
+            .weight(4),
+        );
+    }
+    out
+}
+
+/// The tenancy figure: the bursty tenant mix replayed on the modelled
+/// symmetric 20- and 56-core machines and the heterogeneous 56-core
+/// machine (its CPU pool carries the unplaced mix) under the three
+/// cross-job pick policies. Per-item SS chunks on the atomic central
+/// queue keep the preemption quantum fine, so the rows isolate the
+/// *policy* dimension: under bursty arrivals FIFO parks the
+/// interactive tenants behind the batch pipelines' backlog, which Fair
+/// and Priority avoid — visible as the p99 slowdown gap.
+pub fn tenancy_figure(params: &FigureParams) -> Vec<TenancyRow> {
+    let mut out = Vec::new();
+    for (machine, machine_name) in [
+        (Topology::broadwell20(), "sym20"),
+        (Topology::cascadelake56(), "sym56"),
+        (Topology::hetero56(), "hetero56"),
+    ] {
+        let cores = machine.class_cores(DeviceClass::Cpu);
+        let tenants = tenancy_tenants(cores, params.arrival, params.seed);
+        let sched = SchedConfig::fine_grained().with_seed(params.seed);
+        // policy-independent baselines, computed once per machine
+        let isolated =
+            sim::isolated_makespans(&tenants, &machine, &sched, &params.costs)
+                .expect("tenancy shapes are acyclic");
+        for policy in TenancyPolicy::ALL {
+            let sim = sim::replay_tenants_with(
+                &tenants,
+                &machine,
+                &sched,
+                &params.costs,
+                policy,
+                &isolated,
+            )
+            .expect("tenancy shapes are acyclic");
+            out.push(TenancyRow {
+                machine: machine_name,
+                policy: policy.name(),
+                p50_slowdown: sim.p50_slowdown(),
+                p99_slowdown: sim.p99_slowdown(),
+                fairness: sim.fairness(),
+                makespan: sim.makespan,
+            });
+        }
+    }
+    out
+}
+
 /// Regenerate one figure. [`FigureId::FigDag`] / [`FigureId::FigHetero`]
-/// rows are mapped into the common [`Row`] shape (machine in the scheme
-/// column, shape/policy in the victim column, the comparison ratio in
-/// `vs_static`); use [`dag_figure`] / [`hetero_figure`] directly for
-/// the structured forms.
+/// / [`FigureId::FigTenancy`] rows are mapped into the common [`Row`]
+/// shape (machine in the scheme column, shape/policy in the victim
+/// column, the comparison ratio in `vs_static`); use [`dag_figure`] /
+/// [`hetero_figure`] / [`tenancy_figure`] directly for the structured
+/// forms.
 pub fn run_figure(id: FigureId, params: &FigureParams) -> Vec<Row> {
     let machine = id.machine();
     match id {
@@ -538,6 +699,10 @@ pub fn run_figure(id: FigureId, params: &FigureParams) -> Vec<Row> {
             .into_iter()
             .map(hetero_row_to_row)
             .collect(),
+        FigureId::FigTenancy => {
+            let rows = tenancy_figure(params);
+            tenancy_rows_to_rows(&rows)
+        }
     }
 }
 
@@ -563,6 +728,33 @@ fn hetero_row_to_row(r: HeteroRow) -> Row {
     }
 }
 
+/// Map tenancy rows into the common [`Row`] shape: p99 slowdown in the
+/// time column, its ratio vs the same machine's FIFO row in
+/// `vs_static` (< 1 = the policy tames the tail).
+fn tenancy_rows_to_rows(rows: &[TenancyRow]) -> Vec<Row> {
+    rows.iter()
+        .map(|r| {
+            let fifo_p99 = rows
+                .iter()
+                .find(|f| f.machine == r.machine && f.policy == "fifo")
+                .map(|f| f.p99_slowdown)
+                .unwrap_or(r.p99_slowdown);
+            Row {
+                scheme: r.machine,
+                victim: Some(r.policy),
+                time: r.p99_slowdown,
+                vs_static: if fifo_p99 > 0.0 {
+                    r.p99_slowdown / fifo_p99
+                } else {
+                    1.0
+                },
+                steals: 0,
+                cov: 0.0,
+            }
+        })
+        .collect()
+}
+
 /// Print a figure with the paper's expected shape annotated.
 pub fn print_figure(id: FigureId, params: &FigureParams) -> Vec<Row> {
     println!("== {} ==", id.name());
@@ -579,6 +771,13 @@ pub fn print_figure(id: FigureId, params: &FigureParams) -> Vec<Row> {
             r.print();
         }
         return rows.into_iter().map(hetero_row_to_row).collect();
+    }
+    if id == FigureId::FigTenancy {
+        let rows = tenancy_figure(params);
+        for r in &rows {
+            r.print();
+        }
+        return tenancy_rows_to_rows(&rows);
     }
     let rows = run_figure(id, params);
     for r in &rows {
@@ -815,6 +1014,70 @@ mod tests {
             rows.into_iter().map(hetero_row_to_row).collect();
         assert_eq!(mapped.len(), 6);
         assert!(mapped.iter().all(|r| r.vs_static <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn tenancy_figure_fair_and_priority_beat_fifo_on_p99() {
+        // The acceptance criterion: under bursty arrivals, Fair and
+        // Priority beat FIFO on tail tenant slowdown on every modelled
+        // machine — including the 56-core ones.
+        let params = FigureParams {
+            // recorded costs: deterministic, no OS-interference noise
+            costs: CostModel::recorded(),
+            ..FigureParams::tiny()
+        };
+        let rows = tenancy_figure(&params);
+        assert_eq!(rows.len(), 9, "3 machines x 3 policies");
+        for machine in ["sym20", "sym56", "hetero56"] {
+            let get = |policy: &str| {
+                rows.iter()
+                    .find(|r| r.machine == machine && r.policy == policy)
+                    .unwrap()
+            };
+            let (fifo, fair, prio) =
+                (get("fifo"), get("fair"), get("priority"));
+            assert!(
+                fair.p99_slowdown < fifo.p99_slowdown,
+                "{machine}: fair p99 {} vs fifo p99 {}",
+                fair.p99_slowdown,
+                fifo.p99_slowdown
+            );
+            assert!(
+                prio.p99_slowdown < fifo.p99_slowdown,
+                "{machine}: priority p99 {} vs fifo p99 {}",
+                prio.p99_slowdown,
+                fifo.p99_slowdown
+            );
+            assert!(
+                fair.fairness > fifo.fairness,
+                "{machine}: fair index {} vs fifo index {}",
+                fair.fairness,
+                fifo.fairness
+            );
+        }
+        // mapped Row form preserves the comparison
+        let mapped = tenancy_rows_to_rows(&rows);
+        assert_eq!(mapped.len(), 9);
+        for r in mapped.iter().filter(|r| r.victim != Some("fifo")) {
+            assert!(r.vs_static < 1.0, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn tenancy_arrival_patterns_generate_valid_mixes() {
+        for pattern in [
+            ArrivalPattern::Burst,
+            ArrivalPattern::Uniform,
+            ArrivalPattern::Poisson,
+        ] {
+            let tenants = tenancy_tenants(8, pattern, 7);
+            assert_eq!(tenants.len(), 12, "2 batch + 10 interactive");
+            assert!(tenants.iter().all(|t| t.arrival >= 0.0));
+            assert!(tenants.iter().all(|t| t.shape.validate().is_ok()));
+            // batch tenants anchor the burst at t=0
+            assert_eq!(tenants[0].arrival, 0.0);
+            assert!(tenants[2..].iter().all(|t| t.arrival > 0.0));
+        }
     }
 
     #[test]

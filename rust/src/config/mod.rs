@@ -6,7 +6,9 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
-use crate::sched::{PlacementPolicy, QueueLayout, Scheme, VictimStrategy};
+use crate::sched::{
+    PlacementPolicy, QueueLayout, Scheme, TenancyPolicy, VictimStrategy,
+};
 use crate::topology::Topology;
 
 /// Everything needed to schedule one pipeline run.
@@ -40,6 +42,20 @@ impl Default for SchedConfig {
 }
 
 impl SchedConfig {
+    /// Fine-grained multiplexing config: per-item SS chunks served from
+    /// the atomic centralized queue — the smallest preemption quantum
+    /// the scheduler offers. The canonical config of the multi-tenant
+    /// surface (`figure tenancy`, `tune tenancy`, the tenancy tests),
+    /// so the cross-job pick policy — not chunk granularity — decides
+    /// how tenants interleave.
+    pub fn fine_grained() -> Self {
+        SchedConfig {
+            scheme: Scheme::Ss,
+            layout: QueueLayout::Centralized { atomic: true },
+            ..SchedConfig::default()
+        }
+    }
+
     pub fn with_scheme(mut self, scheme: Scheme) -> Self {
         self.scheme = scheme;
         self
@@ -122,6 +138,41 @@ impl GraphMode {
     }
 }
 
+/// Arrival pattern of the multi-tenant workload (`arrival=`): how the
+/// tenant submission offsets of `figure tenancy` (and any
+/// [`crate::sim::graph::replay_tenants`] scenario built from a config)
+/// are spread over the burst window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArrivalPattern {
+    /// Tenants arrive in tight bursts (default — the tail-latency
+    /// stress case the tenancy figure is about).
+    #[default]
+    Burst,
+    /// Evenly spaced arrivals over the window.
+    Uniform,
+    /// Exponential (Poisson-process) inter-arrival gaps, seeded.
+    Poisson,
+}
+
+impl ArrivalPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Burst => "burst",
+            ArrivalPattern::Uniform => "uniform",
+            ArrivalPattern::Poisson => "poisson",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "burst" | "bursty" => Some(ArrivalPattern::Burst),
+            "uniform" | "even" => Some(ArrivalPattern::Uniform),
+            "poisson" | "exp" => Some(ArrivalPattern::Poisson),
+            _ => None,
+        }
+    }
+}
+
 /// A full experiment configuration (scheduling + machine + workload).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -138,6 +189,13 @@ pub struct RunConfig {
     /// (`placement=any|pinned|auto`; used by `figure hetero` /
     /// `tune graph=hetero`).
     pub placement: PlacementPolicy,
+    /// Cross-job pick policy of the executor's run queue
+    /// (`policy=fifo|fair|priority`; how concurrent tenants share the
+    /// pool).
+    pub policy: TenancyPolicy,
+    /// Arrival pattern of the multi-tenant workload
+    /// (`arrival=burst|uniform|poisson`; used by `figure tenancy`).
+    pub arrival: ArrivalPattern,
     /// Free-form workload parameters (apps interpret their own keys).
     pub params: BTreeMap<String, String>,
 }
@@ -151,6 +209,8 @@ impl Default for RunConfig {
             graph: GraphMode::default(),
             jobs: 1,
             placement: PlacementPolicy::default(),
+            policy: TenancyPolicy::default(),
+            arrival: ArrivalPattern::default(),
             params: BTreeMap::new(),
         }
     }
@@ -241,6 +301,22 @@ impl RunConfig {
                         ))
                     })?;
             }
+            "policy" | "tenancy" => {
+                self.policy = TenancyPolicy::parse(value).ok_or_else(|| {
+                    ConfigError(format!(
+                        "unknown tenancy policy '{value}' \
+                         (fifo | fair | priority)"
+                    ))
+                })?;
+            }
+            "arrival" => {
+                self.arrival = ArrivalPattern::parse(value).ok_or_else(|| {
+                    ConfigError(format!(
+                        "unknown arrival pattern '{value}' \
+                         (burst | uniform | poisson)"
+                    ))
+                })?;
+            }
             _ => {
                 self.params.insert(key.to_string(), value.to_string());
             }
@@ -323,6 +399,8 @@ impl fmt::Display for RunConfig {
         writeln!(f, "graph = {}", self.graph.name())?;
         writeln!(f, "jobs = {}", self.jobs)?;
         writeln!(f, "placement = {}", self.placement.name())?;
+        writeln!(f, "policy = {}", self.policy.name())?;
+        writeln!(f, "arrival = {}", self.arrival.name())?;
         for (k, v) in &self.params {
             writeln!(f, "{k} = {v}")?;
         }
@@ -405,6 +483,36 @@ mod tests {
         // hetero machine presets resolve through the machine key
         let cfg = RunConfig::from_pairs(["machine=hetero56"]).unwrap();
         assert_eq!(cfg.topology.n_cores(), 64);
+    }
+
+    #[test]
+    fn policy_and_arrival_keys_parse_and_round_trip() {
+        let cfg = RunConfig::from_pairs(["policy=fair", "arrival=poisson"])
+            .unwrap();
+        assert_eq!(cfg.policy, TenancyPolicy::Fair);
+        assert_eq!(cfg.arrival, ArrivalPattern::Poisson);
+        assert_eq!(
+            RunConfig::default().policy,
+            TenancyPolicy::Fifo,
+            "FIFO multiplexing is the default"
+        );
+        assert_eq!(RunConfig::default().arrival, ArrivalPattern::Burst);
+        assert!(RunConfig::from_pairs(["policy=bogus"]).is_err());
+        assert!(RunConfig::from_pairs(["arrival=bogus"]).is_err());
+        let text = cfg.to_string();
+        let back = RunConfig::from_text(&text).unwrap();
+        assert_eq!(back.policy, TenancyPolicy::Fair);
+        assert_eq!(back.arrival, ArrivalPattern::Poisson);
+        for p in TenancyPolicy::ALL {
+            assert_eq!(TenancyPolicy::parse(p.name()), Some(p));
+        }
+        for a in [
+            ArrivalPattern::Burst,
+            ArrivalPattern::Uniform,
+            ArrivalPattern::Poisson,
+        ] {
+            assert_eq!(ArrivalPattern::parse(a.name()), Some(a));
+        }
     }
 
     #[test]

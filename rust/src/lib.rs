@@ -24,6 +24,20 @@
 //! the same resident workers (cyclic specs are rejected up front; a
 //! node panic cancels its dependents only).
 //!
+//! Above graphs sits the **multi-tenant session API**
+//! ([`sched::session`]): [`sched::Executor::session`] yields a
+//! [`sched::Session`] whose `submit_graph` attaches
+//! [`sched::SubmitOpts`] (priority, weight, tag) and whose
+//! `submit_all`/`run_all` fuse a batch of pipelines into one merged
+//! scheduling horizon; the executor's cross-job pick policy
+//! ([`sched::TenancyPolicy`]: FIFO, weighted-fair over tags, or strict
+//! priority with aging — CLI `policy=`) decides which tenant each free
+//! worker serves, and [`sched::JobHandle::cancel`] /
+//! [`sched::GraphHandle::cancel`] drop a tenant's undispatched work to
+//! free the pool. The DES mirrors the policies
+//! ([`sim::graph::replay_tenants`], CLI `figure tenancy` /
+//! `tune tenancy`).
+//!
 //! The [`vee::Vee`] engine fronts one such executor: a pipeline is a
 //! set of stages connected by dependency edges, submitted as one task
 //! graph in the default `graph=dag` mode (or serialized with full

@@ -7,13 +7,16 @@
 //! dsl        run a DaphneDSL script file
 //! figure     regenerate a paper figure on a modelled machine (DES);
 //!            `figure dag` is the dag-vs-barrier graph-replay figure,
-//!            `figure hetero` the placement any|pinned|auto comparison
+//!            `figure hetero` the placement any|pinned|auto comparison,
+//!            `figure tenancy` the fifo|fair|priority multi-tenant
+//!            policy comparison under bursty arrivals
 //! ablation   §4/§5 ablations (ss | atomic)
 //! calibrate  measure the DES cost-model constants on this host
 //! tune       automatic config selection via the DES oracle;
 //!            `tune graph=<linreg|cc|diamond|hetero>` selects per-node
 //!            configs (and, for hetero, placements) over the app's task
-//!            graph by virtual-time replay
+//!            graph by virtual-time replay; `tune tenancy` ranks the
+//!            cross-job pick policies for a bursty tenant mix
 //! worker     start a distributed worker daemon (Fig. 5)
 //! leader     drive distributed CC against worker daemons (Fig. 5)
 //! ```
@@ -23,7 +26,10 @@
 //! heterogeneous `hetero20`/`hetero56`), `seed=`,
 //! `executor=persistent|oneshot`, `graph=barrier|dag` (pipeline
 //! dispatch: full barriers vs dependency-aware task-graph overlap),
-//! `jobs=<n>` (concurrent jobs on the one resident pool),
+//! `jobs=<n>` (concurrent pipelines submitted through one `Session`
+//! of the resident pool), `policy=fifo|fair|priority` (cross-job pick
+//! policy multiplexing those pipelines), `arrival=burst|uniform|poisson`
+//! (tenant arrival pattern of `figure tenancy`),
 //! `placement=any|pinned|auto` (device-pool policy for the
 //! heterogeneous pipeline), plus app parameters like `nodes=`,
 //! `scale=`, `rows=`, `cols=`.
@@ -60,7 +66,7 @@ fn usage() -> String {
      [args] [key=value ...]\n\
      examples:\n\
      \x20 daphne-sched run cc nodes=50000 scheme=mfsc layout=percore victim=seqpri\n\
-     \x20 daphne-sched run cc nodes=50000 jobs=4            # 4 concurrent jobs, one pool\n\
+     \x20 daphne-sched run cc nodes=50000 jobs=4 policy=fair  # 4 tenants, one session\n\
      \x20 daphne-sched run linreg rows=100000 graph=barrier # serial stages (A/B baseline)\n\
      \x20 daphne-sched run linreg rows=100000 executor=oneshot  # legacy spawn-per-stage\n\
      \x20 daphne-sched run linreg rows=100000 cols=65 scheme=static\n\
@@ -68,9 +74,11 @@ fn usage() -> String {
      \x20 daphne-sched figure 7a [nodes=403394 scale=1 measure=1]\n\
      \x20 daphne-sched figure dag nodes=20000 lr_rows=100000  # dag-vs-barrier replay\n\
      \x20 daphne-sched figure hetero            # placement any|pinned|auto, hetero machines\n\
+     \x20 daphne-sched figure tenancy arrival=burst  # fifo|fair|priority tenant mix\n\
      \x20 daphne-sched tune nodes=100000 machine=broadwell20  # single-workload sweep\n\
      \x20 daphne-sched tune graph=linreg rows=100000 machine=cascadelake56\n\
      \x20 daphne-sched tune graph=hetero machine=hetero56 placement=auto\n\
+     \x20 daphne-sched tune tenancy machine=cascadelake56 arrival=poisson\n\
      \x20 daphne-sched ablation ss\n\
      \x20 daphne-sched worker 127.0.0.1:7701\n\
      \x20 daphne-sched leader cc 127.0.0.1:7701,127.0.0.1:7702 nodes=10000"
@@ -120,7 +128,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             let g = if scale > 1 { scale_up(&g, scale) } else { g };
             println!(
                 "cc: {} nodes, {} edges ({:.4}% dense), machine={} [{} cores, \
-                 {} executor, {} graph, {} job(s)]",
+                 {} executor, {} graph, {} job(s), {} policy]",
                 g.rows,
                 g.nnz(),
                 g.density() * 100.0,
@@ -128,7 +136,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 topo.n_cores(),
                 cfg.executor.name(),
                 cfg.effective_graph().name(),
-                cfg.jobs
+                cfg.jobs,
+                cfg.policy.name()
             );
             let use_pjrt = cfg.param_usize("pjrt", 0) == 1;
             let result = if use_pjrt {
@@ -143,20 +152,32 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     Arc::new(cfg.sched.clone()),
                     cfg.executor,
                 )
-                .with_graph_mode(cfg.graph);
+                .with_graph_mode(cfg.graph)
+                .with_tenancy_policy(cfg.policy);
                 if cfg.jobs > 1 {
-                    // multi-tenant demo: submit identical pipelines
-                    // concurrently, multiplexed over the one resident pool
-                    let mut results: Vec<cc::CcResult> =
-                        std::thread::scope(|s| {
-                            let handles: Vec<_> = (0..cfg.jobs)
-                                .map(|_| s.spawn(|| cc::run_with(&vee, &g, 100)))
-                                .collect();
-                            handles
-                                .into_iter()
-                                .map(|h| h.join().expect("cc job panicked"))
-                                .collect()
-                        });
+                    // multi-tenant: every pipeline is submitted through
+                    // ONE session of the resident pool, from this
+                    // thread — the executor's workers are the only OS
+                    // threads involved, and `policy=` decides how they
+                    // interleave the tenants. Fused submission is dag
+                    // dispatch by construction, so the `graph=barrier`
+                    // A/B baseline (and the pool-less oneshot engine)
+                    // runs its pipelines back-to-back instead.
+                    let fused = cfg.effective_graph()
+                        == daphne_sched::config::GraphMode::Dag;
+                    let mut results: Vec<cc::CcResult> = if fused {
+                        cc::run_concurrent(&vee, &g, cfg.jobs, 100)
+                    } else {
+                        println!(
+                            "note: {} pipelines run back-to-back (fused \
+                             concurrent submission needs graph=dag on the \
+                             persistent executor)",
+                            cfg.jobs
+                        );
+                        (0..cfg.jobs)
+                            .map(|_| cc::run_with(&vee, &g, 100))
+                            .collect()
+                    };
                     for (i, r) in results.iter().enumerate() {
                         println!(
                             "  job {i}: {} iterations, {} components, \
@@ -192,56 +213,48 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             let (x, y) = linreg::generate(&spec);
             println!(
                 "linreg: {}x{} design matrix, machine={} [{} cores, \
-                 {} executor, {} graph, {} job(s)]",
+                 {} executor, {} graph, {} job(s), {} policy]",
                 x.rows,
                 x.cols,
                 topo.name,
                 topo.n_cores(),
                 cfg.executor.name(),
                 cfg.effective_graph().name(),
-                cfg.jobs
+                cfg.jobs,
+                cfg.policy.name()
             );
             let vee = Vee::with_mode(
                 Arc::new(topo.clone()),
                 Arc::new(cfg.sched.clone()),
                 cfg.executor,
             )
-            .with_graph_mode(cfg.graph);
+            .with_graph_mode(cfg.graph)
+            .with_tenancy_policy(cfg.policy);
             let result = if cfg.jobs > 1 {
-                let results: Vec<Result<_, String>> =
-                    std::thread::scope(|s| {
-                        let handles: Vec<_> = (0..cfg.jobs)
-                            .map(|_| {
-                                s.spawn(|| {
-                                    linreg::run_with(&vee, &x, &y, spec.lambda)
-                                })
-                            })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .map(|h| h.join().expect("linreg job panicked"))
-                            .collect()
-                    });
-                let mut first = None;
-                for (i, r) in results.into_iter().enumerate() {
-                    match r {
-                        Ok(r) => {
-                            println!(
-                                "  job {i}: wall {:.4}s",
-                                r.report.total_time()
-                            );
-                            if first.is_none() {
-                                first = Some(r);
-                            }
-                        }
-                        Err(e) => {
-                            return Err(format!(
-                                "concurrent linreg job {i} failed: {e}"
-                            ))
-                        }
-                    }
+                // one session, many training pipelines, no submission
+                // threads; serialized fallback for graph=barrier (fused
+                // submission is dag dispatch by construction) and for
+                // the pool-less one-shot engine
+                let fused = cfg.effective_graph()
+                    == daphne_sched::config::GraphMode::Dag;
+                let results: Vec<linreg::LinregResult> = if fused {
+                    linreg::run_concurrent(&vee, &x, &y, spec.lambda, cfg.jobs)?
+                } else {
+                    println!(
+                        "note: {} pipelines run back-to-back (fused \
+                         concurrent submission needs graph=dag on the \
+                         persistent executor)",
+                        cfg.jobs
+                    );
+                    (0..cfg.jobs)
+                        .map(|_| linreg::run_with(&vee, &x, &y, spec.lambda))
+                        .collect::<Result<_, _>>()?
+                };
+                let mut results = results;
+                for (i, r) in results.iter().enumerate() {
+                    println!("  job {i}: wall {:.4}s", r.report.total_time());
                 }
-                first.expect("jobs >= 1 guaranteed by config parsing")
+                results.swap_remove(0)
             } else {
                 linreg::run_with(&vee, &x, &y, spec.lambda)?
             };
@@ -302,6 +315,7 @@ fn figure_params(cfg: &RunConfig) -> FigureParams {
         seed: cfg.sched.seed,
         iterations: cfg.params.get("iterations").and_then(|v| v.parse().ok()),
         lr_rows: cfg.param_usize("lr_rows", 2_000_000),
+        arrival: cfg.arrival,
         ..FigureParams::default()
     };
     if cfg.param_usize("measure", 0) == 1 {
@@ -317,7 +331,8 @@ fn figure_params(cfg: &RunConfig) -> FigureParams {
 fn cmd_figure(args: &[String]) -> Result<(), String> {
     let Some(which) = args.first() else {
         return Err(
-            "figure: expected id (7a 7b 8a 8b 9a 9b 10a 10b dag hetero | all)"
+            "figure: expected id \
+             (7a 7b 8a 8b 9a 9b 10a 10b dag hetero tenancy | all)"
                 .into(),
         );
     };
@@ -386,7 +401,7 @@ fn cmd_calibrate() -> Result<(), String> {
 }
 
 /// §5 future work: automatic selection of the scheduling configuration,
-/// using the DES as an offline oracle. Two surfaces:
+/// using the DES as an offline oracle. Three surfaces:
 ///
 /// - `tune [nodes=..]` — single-workload sweep (CC propagate pass).
 /// - `tune graph=<linreg|cc|diamond|hetero> [..]` — graph-level search:
@@ -395,6 +410,9 @@ fn cmd_calibrate() -> Result<(), String> {
 ///   virtual-time replay with greedy critical-path-first refinement.
 ///   `graph=hetero` tunes the heterogeneous diamond on a hetero machine
 ///   model; `placement=any|pinned|auto` picks the placement policy.
+/// - `tune tenancy [machine=.. arrival=..]` — rank the cross-job pick
+///   policies (`policy=` knob) for the bursty tenant mix by replayed
+///   p99 tenant slowdown (`sim::replay_tenants` as the oracle).
 fn cmd_tune(args: &[String]) -> Result<(), String> {
     use daphne_sched::apps::{cc, hetero, linreg};
     use daphne_sched::bench::AppCosts;
@@ -403,6 +421,58 @@ fn cmd_tune(args: &[String]) -> Result<(), String> {
     use daphne_sched::sched::{Placement, PlacementPolicy};
     use daphne_sched::sim::{CostModel, GraphShape};
     use daphne_sched::topology::DeviceClass;
+
+    if args.first().map(String::as_str) == Some("tenancy") {
+        use daphne_sched::config::SchedConfig;
+        let cfg = parse_pairs(&args[1..])?;
+        let machine = cfg.topology.clone();
+        let cores = machine.class_cores(DeviceClass::Cpu).max(1);
+        let tenants =
+            figures::tenancy_tenants(cores, cfg.arrival, cfg.sched.seed);
+        // explicit scheme=/layout=/victim= keys are honoured; otherwise
+        // default to the figure's fine-grained per-item chunks (a
+        // preemption quantum small enough for the policies to differ)
+        let custom = args[1..].iter().any(|a| {
+            a.starts_with("scheme=")
+                || a.starts_with("layout=")
+                || a.starts_with("victim=")
+        });
+        let sched = if custom {
+            cfg.sched.clone()
+        } else {
+            SchedConfig::fine_grained().with_seed(cfg.sched.seed)
+        };
+        println!(
+            "ranking tenancy policies: {} tenants ({} arrivals) on {} \
+             ({} cpu cores, {} {} {})...",
+            tenants.len(),
+            cfg.arrival.name(),
+            machine.name,
+            cores,
+            sched.scheme.name(),
+            sched.layout.name(),
+            sched.victim.name()
+        );
+        let ranked = autotune::tune_tenancy(
+            &tenants,
+            &machine,
+            &CostModel::daphne_like(),
+            &sched,
+        )
+        .map_err(|e| e.to_string())?;
+        for c in &ranked {
+            println!(
+                "  {:<9} p99_slowdown={:>8.2}x fairness={:.3} \
+                 makespan={:.4}s",
+                c.policy.name(),
+                c.p99_slowdown,
+                c.fairness,
+                c.makespan
+            );
+        }
+        println!("-> best policy: {}", ranked[0].policy.name());
+        return Ok(());
+    }
 
     // `graph=<target>` selects graph-level tuning. A dispatch-mode
     // value (`graph=dag|barrier`) is rejected rather than silently

@@ -27,8 +27,9 @@
 use crate::config::{GraphMode, SchedConfig};
 use crate::sched::graph::GraphError;
 use crate::sched::placement::{DevicePools, Placement, ResolveMode};
+use crate::sched::session::TenancyPolicy;
 use crate::sched::{QueueLayout, Scheme, VictimStrategy};
-use crate::sim::graph::{self as simgraph, GraphShape};
+use crate::sim::graph::{self as simgraph, GraphShape, TenantSpec};
 use crate::sim::{self, CostModel, Workload};
 use crate::topology::{DeviceClass, Topology};
 
@@ -445,6 +446,54 @@ pub fn tune_graph(
     })
 }
 
+/// One evaluated cross-job policy for a tenant mix.
+#[derive(Debug, Clone)]
+pub struct TenancyCandidate {
+    pub policy: TenancyPolicy,
+    /// Replayed p99 per-tenant slowdown (the tail-latency objective).
+    pub p99_slowdown: f64,
+    /// Jain fairness index over the replayed per-tenant slowdowns.
+    pub fairness: f64,
+    /// Replayed completion time of the whole mix.
+    pub makespan: f64,
+}
+
+/// The tenancy-policy dimension of automatic selection: replay a
+/// tenant mix ([`crate::sim::graph::replay_tenants`]) under every
+/// [`TenancyPolicy`] and rank them by p99 tenant slowdown (ties by
+/// fairness, descending) — milliseconds of simulation to choose the
+/// `policy=` knob for a service's observed workload mix, the same
+/// oracle move [`tune`] and [`tune_graph`] make for the per-job
+/// dimensions.
+pub fn tune_tenancy(
+    tenants: &[TenantSpec],
+    topo: &Topology,
+    costs: &CostModel,
+    default: &SchedConfig,
+) -> Result<Vec<TenancyCandidate>, GraphError> {
+    // policy-independent slowdown baselines, computed once
+    let isolated =
+        simgraph::isolated_makespans(tenants, topo, default, costs)?;
+    let mut out = Vec::with_capacity(TenancyPolicy::ALL.len());
+    for policy in TenancyPolicy::ALL {
+        let sim = simgraph::replay_tenants_with(
+            tenants, topo, default, costs, policy, &isolated,
+        )?;
+        out.push(TenancyCandidate {
+            policy,
+            p99_slowdown: sim.p99_slowdown(),
+            fairness: sim.fairness(),
+            makespan: sim.makespan,
+        });
+    }
+    out.sort_by(|a, b| {
+        a.p99_slowdown
+            .total_cmp(&b.p99_slowdown)
+            .then_with(|| b.fairness.total_cmp(&a.fairness))
+    });
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -709,6 +758,40 @@ mod tests {
             ),
             Err(GraphError::NoSuchPool { .. })
         ));
+    }
+
+    #[test]
+    fn tenancy_tuner_prefers_a_policy_that_tames_the_tail() {
+        // the tenancy figure's canonical bursty mix (heavy batch
+        // pipelines with interactive tenants bursting in behind them),
+        // so the tuner and the figure rank the same workload: FIFO
+        // should not win on p99 slowdown
+        let topo = Topology::symmetric("t8", 1, 8, 1.0, 1.0);
+        let tenants = crate::bench::figures::tenancy_tenants(
+            8,
+            crate::config::ArrivalPattern::Burst,
+            7,
+        );
+        let fine = SchedConfig::fine_grained();
+        let ranked = tune_tenancy(
+            &tenants,
+            &topo,
+            &CostModel::recorded(),
+            &fine,
+        )
+        .unwrap();
+        assert_eq!(ranked.len(), 3);
+        assert!(
+            ranked
+                .windows(2)
+                .all(|w| w[0].p99_slowdown <= w[1].p99_slowdown),
+            "candidates must rank best-first"
+        );
+        assert_ne!(
+            ranked[0].policy,
+            TenancyPolicy::Fifo,
+            "FIFO cannot win the bursty tail: {ranked:?}"
+        );
     }
 
     #[test]

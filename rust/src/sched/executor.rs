@@ -45,11 +45,29 @@
 //! workers. A CPU-only topology is the one-pool special case with
 //! today's exact behaviour.
 //!
+//! Which job a free worker serves next is the executor's pluggable
+//! cross-job pick policy ([`TenancyPolicy`], see [`super::session`]):
+//! FIFO drains jobs in submission order exactly as before; the `Fair`
+//! and `Priority` policies re-evaluate the pick every few executed
+//! tasks, so concurrent tenants interleave at task granularity. Every
+//! job carries a [`Tenancy`] (priority, weight, tag) attached at
+//! submission — [`Session`](super::Session) submissions set it, plain
+//! [`Executor::submit`] uses the neutral default. Dependent graph nodes
+//! enter the same policy-ordered run queue the moment their in-edges
+//! complete, so the policy governs dependent-enqueue order too.
+//!
 //! Jobs may carry an internal completion hook (`on_done`), invoked
 //! exactly once after the job's completion is published — this is how
 //! the task-graph layer ([`super::graph`], [`Executor::submit_graph`])
 //! dispatches dependent nodes the moment their in-edges complete,
 //! without a coordinator thread.
+//!
+//! Cancellation ([`JobHandle::cancel`], reused by the graph layer)
+//! rides the panic-abort machinery: the job stops handing out tasks,
+//! its source is drained (drained items are counted but never run), and
+//! completion publishes normally with no panic payload — waiters
+//! unblock, the run-queue slot frees, and the pool moves on to the next
+//! tenant. Task bodies already executing always finish.
 //!
 //! Do not submit-and-wait from *inside* a task body: a body that blocks
 //! on another job of the same executor can deadlock the pool.
@@ -57,7 +75,7 @@
 use std::fmt;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -66,6 +84,7 @@ use super::metrics::{SchedReport, WorkerStats};
 use super::partitioner::PartitionerOptions;
 use super::placement::{DevicePools, Placement, ResolveMode};
 use super::queue::{self, TaskSource};
+use super::session::{Tenancy, TenancyPolicy};
 use super::stealing;
 use super::task::TaskRange;
 use super::victim::VictimSelector;
@@ -162,6 +181,18 @@ pub(super) struct Job {
     /// Set when a body panicked: stop handing out this job's tasks.
     aborted: AtomicBool,
     panic: Mutex<Option<PanicPayload>>,
+    /// Set when the job was cancelled: the abort drain ran with no
+    /// panic payload, so waiters complete normally and the task-graph
+    /// layer reports the node `Cancelled` instead of `Failed`.
+    cancelled: AtomicBool,
+    /// Tenancy attached at submission (see [`super::session`]): what
+    /// the cross-job pick policy weighs this job by.
+    tenancy: Tenancy,
+    /// Nanoseconds after `tenancy.arrived` at which a worker last
+    /// pulled a task of this job (0 = never served). Priority aging
+    /// measures waiting as time since last service, so a job the pool
+    /// is actively serving never out-ages a late high-priority arrival.
+    served_ns: AtomicU64,
     /// Per-worker counters, flushed before each item-count publish so
     /// the finalizer's snapshot covers every executed task. (Only the
     /// tail of a concurrent worker's final empty steal round — its
@@ -180,9 +211,19 @@ impl Job {
         self.done.lock().unwrap().clone()
     }
 
-    /// Whether a task body of this job panicked.
-    pub(super) fn was_aborted(&self) -> bool {
-        self.aborted.load(Ordering::Acquire)
+    /// Whether the job was cancelled (see [`cancel_job`]). A flag, not
+    /// an outcome: a job racing into finalization can complete every
+    /// item despite it, so outcome labels also check
+    /// [`Job::fully_executed`].
+    pub(super) fn was_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Whether `report` shows every item of this job actually executed
+    /// (nothing was drained) — the authoritative "nothing was lost"
+    /// signal for cancellation labelling.
+    pub(super) fn fully_executed(&self, report: &SchedReport) -> bool {
+        report.total_items() == self.total
     }
 
     /// Take the recorded panic payload, if any (first caller wins).
@@ -192,8 +233,11 @@ impl Job {
 }
 
 struct RunState {
-    /// FIFO of jobs that still have (or may have) unclaimed tasks.
+    /// Live jobs that still have (or may have) unclaimed tasks, in
+    /// submission (seq) order; the pick policy chooses among them.
     jobs: Vec<Arc<Job>>,
+    /// Cross-job pick policy (see [`super::session`]).
+    policy: TenancyPolicy,
     next_seq: u64,
     shutdown: bool,
 }
@@ -217,14 +261,25 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Spawn one worker per place in `topo`. This is the only point in
-    /// the crate that creates scheduler worker threads.
+    /// Spawn one worker per place in `topo` with the default FIFO
+    /// cross-job policy. This is the only point in the crate that
+    /// creates scheduler worker threads.
     pub fn new(topo: Arc<Topology>, default_config: Arc<SchedConfig>) -> Self {
+        Executor::new_with_policy(topo, default_config, TenancyPolicy::Fifo)
+    }
+
+    /// [`Executor::new`] with an explicit cross-job pick policy.
+    pub fn new_with_policy(
+        topo: Arc<Topology>,
+        default_config: Arc<SchedConfig>,
+        policy: TenancyPolicy,
+    ) -> Self {
         let shared = Arc::new(Shared {
             topo: Arc::clone(&topo),
             pools: DevicePools::new(&topo),
             queue: Mutex::new(RunState {
                 jobs: Vec::new(),
+                policy,
                 next_seq: 0,
                 shutdown: false,
             }),
@@ -267,14 +322,45 @@ impl Executor {
         self.jobs_completed.load(Ordering::Relaxed)
     }
 
+    /// The cross-job pick policy currently in effect.
+    pub fn policy(&self) -> TenancyPolicy {
+        self.shared.queue.lock().unwrap().policy
+    }
+
+    /// Switch the cross-job pick policy. Takes effect at each worker's
+    /// next pick — jobs already being drained under a FIFO stint finish
+    /// their stint first.
+    pub fn set_policy(&self, policy: TenancyPolicy) {
+        self.shared.queue.lock().unwrap().policy = policy;
+    }
+
     /// Submit an owned-body job; the returned handle may outlive any
     /// stack frame (the job keeps running if the handle is dropped).
     pub fn submit<F>(&self, spec: JobSpec, body: F) -> JobHandle<'static>
     where
         F: Fn(usize, TaskRange) + Send + Sync + 'static,
     {
-        let job = self.enqueue(spec, Box::new(body));
-        JobHandle { job, _env: PhantomData }
+        self.submit_tenant(spec, Tenancy::default(), body)
+    }
+
+    /// Owned-body submission with explicit tenancy (the
+    /// [`super::Session`] job path).
+    pub(super) fn submit_tenant<F>(
+        &self,
+        spec: JobSpec,
+        tenancy: Tenancy,
+        body: F,
+    ) -> JobHandle<'static>
+    where
+        F: Fn(usize, TaskRange) + Send + Sync + 'static,
+    {
+        let job = self.enqueue(spec, tenancy, Box::new(body));
+        JobHandle {
+            job,
+            shared: Arc::clone(&self.shared),
+            completed: Arc::clone(&self.jobs_completed),
+            _env: PhantomData,
+        }
     }
 
     /// Structured submission for jobs whose bodies borrow the caller's
@@ -327,7 +413,7 @@ impl Executor {
         self.scope(|s| s.submit(spec, &body).wait())
     }
 
-    fn enqueue(&self, spec: JobSpec, body: Body) -> Arc<Job> {
+    fn enqueue(&self, spec: JobSpec, tenancy: Tenancy, body: Body) -> Arc<Job> {
         let config = spec
             .config
             .unwrap_or_else(|| Arc::clone(&self.default_config));
@@ -346,6 +432,7 @@ impl Executor {
             spec.items,
             config,
             res.pool,
+            tenancy,
             body,
             None,
         )
@@ -383,6 +470,7 @@ pub(super) fn enqueue_raw(
     items: usize,
     config: Arc<SchedConfig>,
     pool: usize,
+    tenancy: Tenancy,
     body: Body,
     on_done: Option<DoneCallback>,
 ) -> Arc<Job> {
@@ -417,6 +505,9 @@ pub(super) fn enqueue_raw(
         start: Instant::now(),
         executed: AtomicUsize::new(0),
         aborted: AtomicBool::new(false),
+        cancelled: AtomicBool::new(false),
+        tenancy,
+        served_ns: AtomicU64::new(0),
         panic: Mutex::new(None),
         stats: (0..n).map(|_| Mutex::new(WorkerStats::default())).collect(),
         done: Mutex::new(None),
@@ -462,6 +553,58 @@ fn publish_completion(
     if let Some(cb) = cb {
         cb(job);
     }
+}
+
+/// Cancel one job: stop handing out its tasks and drain the unclaimed
+/// remainder so the completion counter still reaches `total` (drained
+/// items are counted but never run) — the panic-abort path without a
+/// payload. Idempotent: only the first caller drains; an
+/// already-finished job is left entirely untouched. Task bodies
+/// already executing finish normally, and the worker that counts the
+/// final item finalizes the job exactly as usual, so waiters observe an
+/// ordinary completion with a partial item count.
+pub(super) fn cancel_job(
+    job: &Arc<Job>,
+    shared: &Shared,
+    completed: &AtomicUsize,
+) {
+    {
+        // Checked and flagged under the completion lock, so a job whose
+        // completion already published is never flagged. (A job racing
+        // *into* finalization can still see the flag, which is why
+        // completion-labelling treats "every item executed" as
+        // authoritative over the flag — see `record_done` and
+        // [`JobHandle::was_cancelled`].)
+        let done = job.done.lock().unwrap();
+        if done.is_some() {
+            return; // already complete: nothing to drain or free
+        }
+        if job.cancelled.swap(true, Ordering::AcqRel) {
+            return;
+        }
+    }
+    job.aborted.store(true, Ordering::Release);
+    // worker id 0 is valid in every pool; the `stolen` attribution of
+    // a drained (never-run) pull is irrelevant
+    let drained = drain_source(job, 0);
+    complete_items(job, drained, shared, completed);
+}
+
+/// Pull every unclaimed task out of `job`'s source without running it —
+/// the shared drain of the panic-abort and cancellation paths. Returns
+/// the number of items drained; `w` must be a valid pool-local worker
+/// id for the source. Items already pulled by workers are untouched
+/// (they are counted by their workers when their bodies return).
+fn drain_source(job: &Job, w: usize) -> usize {
+    let source = &*job.source;
+    let mut drained = 0usize;
+    for q in 0..source.n_queues() {
+        while let Some(pull) = source.pull_from(q, w) {
+            drained += pull.task.len();
+        }
+    }
+    debug_assert!(source.is_exhausted(), "drain must empty the source");
+    drained
 }
 
 impl Drop for Executor {
@@ -512,9 +655,14 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         // though workers hold `Arc<Job>` clones longer. Lifetime-only
         // transmute; vtable and layout are unchanged.
         let boxed: Body = unsafe { std::mem::transmute(boxed) };
-        let job = self.exec.enqueue(spec, boxed);
+        let job = self.exec.enqueue(spec, Tenancy::default(), boxed);
         self.pending.lock().unwrap().push(Arc::clone(&job));
-        JobHandle { job, _env: PhantomData }
+        JobHandle {
+            job,
+            shared: Arc::clone(&self.exec.shared),
+            completed: Arc::clone(&self.exec.jobs_completed),
+            _env: PhantomData,
+        }
     }
 }
 
@@ -522,6 +670,8 @@ impl<'scope, 'env> Scope<'scope, 'env> {
 #[must_use = "a JobHandle should be waited on (the job itself keeps running)"]
 pub struct JobHandle<'a> {
     job: Arc<Job>,
+    shared: Arc<Shared>,
+    completed: Arc<AtomicUsize>,
     _env: PhantomData<&'a ()>,
 }
 
@@ -532,6 +682,26 @@ impl JobHandle<'_> {
 
     pub fn is_finished(&self) -> bool {
         self.job.done.lock().unwrap().is_some()
+    }
+
+    /// Cancel the job: undispatched tasks are dropped (freeing the pool
+    /// for other tenants), tasks already executing finish, and
+    /// [`JobHandle::wait`] returns the usual report with a partial item
+    /// count. Idempotent; a no-op on an already-finished job.
+    pub fn cancel(&self) {
+        cancel_job(&self.job, &self.shared, &self.completed);
+    }
+
+    /// Whether cancellation actually cost this job work: the cancel
+    /// flag was raised and the job did not (or has not yet) executed
+    /// every item. A cancel that raced a natural completion — all
+    /// items ran, nothing was drained — reports `false`.
+    pub fn was_cancelled(&self) -> bool {
+        self.job.was_cancelled()
+            && !self
+                .job
+                .cloned_report()
+                .is_some_and(|r| self.job.fully_executed(&r))
     }
 
     /// Block until the job completes; resumes the body's panic if one
@@ -554,12 +724,25 @@ impl JobHandle<'_> {
 // worker side
 // ---------------------------------------------------------------------------
 
-/// The park/dispatch loop run by every pool thread: pick the oldest
-/// submitted job *of this worker's device pool* not yet exhausted for
-/// this worker, work it until its source is drained, remember it,
-/// repeat; park when nothing is left. A worker never touches a job
-/// placed on a foreign pool — the pool boundary is enforced here and by
-/// the pool-scoped task source, not by victim-selection policy.
+/// Tasks a non-FIFO stint executes between cross-job re-picks: small
+/// enough that a late high-priority tenant preempts within a few task
+/// lengths, large enough that the global run-queue mutex and the stint
+/// setup (victim selector, body handle) amortize over several tasks
+/// even when contending tags would otherwise alternate every pick.
+const POLICY_REPICK_STRIDE: usize = 8;
+
+/// The park/dispatch loop run by every pool thread: pick a job *of
+/// this worker's device pool* not yet exhausted for this worker under
+/// the run queue's [`TenancyPolicy`], work it for a stint, repeat; park
+/// when nothing is left. Under FIFO a stint drains the job's source
+/// (the classic behaviour); under `Fair`/`Priority` the pick is
+/// re-evaluated every [`POLICY_REPICK_STRIDE`] executed tasks and the
+/// stint yields the moment another job wins it — that is what lets a
+/// late high-priority (or under-served) tenant interleave within a few
+/// task lengths instead of waiting for a whole drain. A worker never
+/// touches a job placed on a foreign pool — the pool boundary is
+/// enforced here and by the pool-scoped task source, not by
+/// victim-selection policy.
 fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
     let my_pool = shared.pools.pool_of(w);
     // Jobs whose source this worker has already found empty. Sources
@@ -567,17 +750,13 @@ fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
     // collected once the job leaves the run queue.
     let mut exhausted: Vec<u64> = Vec::new();
     loop {
-        let job = {
+        let (job, reeval) = {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 exhausted.retain(|s| q.jobs.iter().any(|j| j.seq == *s));
-                if let Some(job) = q
-                    .jobs
-                    .iter()
-                    .find(|j| j.pool == my_pool && !exhausted.contains(&j.seq))
-                    .cloned()
-                {
-                    break job;
+                if let Some(job) = pick_job(&q, my_pool, &exhausted) {
+                    let reeval = q.policy != TenancyPolicy::Fifo;
+                    break (job, reeval);
                 }
                 if q.shutdown {
                     return;
@@ -585,20 +764,122 @@ fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
-        run_job_stint(w, &job, shared, completed);
-        exhausted.push(job.seq);
+        let r = reeval.then_some(exhausted.as_slice());
+        if run_job_stint(w, &job, shared, completed, r) {
+            exhausted.push(job.seq);
+        }
+    }
+}
+
+/// The cross-job pick: choose the next job for a worker of `my_pool`
+/// among the live jobs it has not yet drained, under the queue's
+/// policy. Ties always break towards the older submission (lower seq),
+/// so every policy is deterministic given the same queue state. Runs
+/// under the run-queue mutex — once per *task* under the non-FIFO
+/// policies — so it allocates nothing on the FIFO and Priority paths
+/// and only one small per-tag aggregate on the Fair path.
+fn pick_job(
+    q: &RunState,
+    my_pool: usize,
+    exhausted: &[u64],
+) -> Option<Arc<Job>> {
+    let mut eligible = q
+        .jobs
+        .iter()
+        .filter(|j| j.pool == my_pool && !exhausted.contains(&j.seq));
+    // Fast path for the common uncontended case (and for the per-task
+    // re-pick inside non-FIFO stints): a lone eligible job needs no
+    // arbitration under any policy.
+    let first = eligible.next()?;
+    if eligible.clone().next().is_none() {
+        return Some(Arc::clone(first));
+    }
+    let mut eligible = std::iter::once(first).chain(eligible);
+    match q.policy {
+        // `jobs` is seq-ordered, so the first eligible is the oldest.
+        TenancyPolicy::Fifo => eligible.next().cloned(),
+        TenancyPolicy::Priority => {
+            let now = Instant::now();
+            // waiting = time since the job was last served (its whole
+            // queueing time if never served): aging that resets on
+            // service, so strict priority stays decisive between
+            // actively-contending jobs while a starved one still rises
+            let eff = |j: &Job| -> i64 {
+                let since_arrival = now
+                    .saturating_duration_since(j.tenancy.arrived)
+                    .as_secs_f64();
+                let served = j.served_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+                j.tenancy.effective_priority(since_arrival - served)
+            };
+            eligible
+                .max_by(|a, b| {
+                    eff(a)
+                        .cmp(&eff(b))
+                        // max_by keeps the later element on ties, so
+                        // reverse the seq order to prefer the older job
+                        .then_with(|| b.seq.cmp(&a.seq))
+                })
+                .cloned()
+        }
+        TenancyPolicy::Fair => {
+            // Weighted fair share over tags, stateless: serve the tag
+            // with the least executed-items-per-weight among the live
+            // jobs of this pool. Finished jobs leave the queue, so the
+            // share resets as tenants come and go — fairness is over
+            // the *current* contenders. Aggregates cover every live
+            // pool job (including ones this worker already drained),
+            // exactly as the DES twin aggregates over all active pool
+            // jobs — only the *candidates* are restricted to jobs this
+            // worker can still serve. One aggregation pass keeps the
+            // selection O(jobs · tags), not O(jobs²).
+            let mut tags: Vec<(&Arc<str>, u64, u64)> = Vec::new();
+            for j in q.jobs.iter().filter(|j| j.pool == my_pool) {
+                let items = j.executed.load(Ordering::Relaxed) as u64;
+                match tags.iter_mut().find(|(t, _, _)| **t == j.tenancy.tag)
+                {
+                    Some(entry) => {
+                        entry.1 += items;
+                        entry.2 = entry.2.max(j.tenancy.weight);
+                    }
+                    None => {
+                        tags.push((&j.tenancy.tag, items, j.tenancy.weight))
+                    }
+                }
+            }
+            let served = |j: &Job| -> f64 {
+                let (_, items, weight) = tags
+                    .iter()
+                    .find(|(t, _, _)| **t == j.tenancy.tag)
+                    .expect("every live pool job's tag was aggregated");
+                *items as f64 / (*weight).max(1) as f64
+            };
+            eligible
+                .min_by(|a, b| {
+                    served(a)
+                        .total_cmp(&served(b))
+                        .then_with(|| a.seq.cmp(&b.seq))
+                })
+                .cloned()
+        }
     }
 }
 
 /// One worker's stint on one job: the seed's worker loop (local pull,
 /// then a steal round under the configured victim selection), ending
-/// when the job-scoped source is exhausted or the job aborts.
+/// when the job-scoped source is exhausted, the job aborts, or —
+/// under a non-FIFO policy (`reeval` = the worker's exhausted-seq
+/// list) — the per-task pick re-evaluation prefers another job. The
+/// re-evaluation happens *in place*, so a stint that keeps winning the
+/// pick keeps its victim selector and body handle instead of paying a
+/// full stint teardown per task. Returns whether the job is exhausted
+/// *for this worker* — only then may the caller stop re-picking it.
 fn run_job_stint(
     w: usize,
     job: &Arc<Job>,
     shared: &Shared,
     completed: &AtomicUsize,
-) {
+    reeval: Option<&[u64]>,
+) -> bool {
     let source = &*job.source;
     // Everything about this job is pool-local: the source was built
     // over the pool's sub-topology and the stats vector has one slot
@@ -620,7 +901,7 @@ fn run_job_stint(
             Some(body) => &**body as *const _,
             // Job already finalized (its Arc lingered in our run-queue
             // snapshot): nothing left to do.
-            None => return,
+            None => return true,
         }
     };
 
@@ -639,9 +920,10 @@ fn run_job_stint(
 
     // Deltas since the last flush into `job.stats[w]`.
     let mut local = WorkerStats::default();
-    loop {
+    let mut since_repick = 0usize;
+    let exhausted = loop {
         if job.aborted.load(Ordering::Acquire) {
-            break;
+            break true;
         }
         let t0 = Instant::now();
         let pull = source.pull_local(lw).or_else(|| {
@@ -653,7 +935,12 @@ fn run_job_stint(
         });
         local.queue_wait += t0.elapsed().as_secs_f64();
 
-        let Some(pull) = pull else { break };
+        let Some(pull) = pull else { break true };
+        // reset the job's priority-aging clock: it is being served now
+        job.served_ns.store(
+            job.tenancy.arrived.elapsed().as_nanos() as u64,
+            Ordering::Relaxed,
+        );
         if pull.stolen {
             local.steals += 1;
             local.stolen_items += pull.task.len();
@@ -675,8 +962,25 @@ fn run_job_stint(
             abort_job(job, payload, lw, shared, completed);
         }
         complete_items(job, pull.task.len(), shared, completed);
-    }
+        if let Some(exhausted_seqs) = reeval {
+            // non-FIFO policy: every [`POLICY_REPICK_STRIDE`] tasks,
+            // yield the stint if the pick now prefers another job (or
+            // this one left the run queue)
+            since_repick += 1;
+            if since_repick >= POLICY_REPICK_STRIDE {
+                since_repick = 0;
+                let next = {
+                    let q = shared.queue.lock().unwrap();
+                    pick_job(&q, job.pool, exhausted_seqs).map(|j| j.seq)
+                };
+                if next != Some(job.seq) {
+                    break false;
+                }
+            }
+        }
+    };
     flush_stats(&mut local, &job.stats[lw]);
+    exhausted
 }
 
 fn flush_stats(delta: &mut WorkerStats, slot: &Mutex<WorkerStats>) {
@@ -750,14 +1054,7 @@ fn abort_job(
         }
     }
     job.aborted.store(true, Ordering::Release);
-    let source = &*job.source;
-    let mut drained = 0usize;
-    for q in 0..source.n_queues() {
-        while let Some(pull) = source.pull_from(q, w) {
-            drained += pull.task.len();
-        }
-    }
-    debug_assert!(source.is_exhausted(), "abort drain must empty the source");
+    let drained = drain_source(job, w);
     complete_items(job, drained, shared, completed);
 }
 
@@ -1095,6 +1392,89 @@ mod tests {
         assert!(msg.contains("class:fpga"), "panic message was '{msg}'");
         // the pool survives
         coverage(&e, JobSpec::new(500));
+    }
+
+    #[test]
+    fn every_policy_preserves_exactly_once_execution() {
+        use crate::sched::session::SubmitOpts;
+        for policy in TenancyPolicy::ALL {
+            let e = Executor::new_with_policy(
+                host4(),
+                Arc::new(SchedConfig::default().with_scheme(Scheme::Gss)),
+                policy,
+            );
+            assert_eq!(e.policy(), policy);
+            let session = e.session();
+            let a: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..5_000).map(|_| AtomicUsize::new(0)).collect());
+            let b: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..3_333).map(|_| AtomicUsize::new(0)).collect());
+            let a2 = Arc::clone(&a);
+            let b2 = Arc::clone(&b);
+            let ha = session.submit(
+                JobSpec::new(a.len()).named("a"),
+                SubmitOpts::new().tag("ta").priority(1).weight(3),
+                move |_w, r| {
+                    for i in r.iter() {
+                        a2[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            let hb = session.submit(
+                JobSpec::new(b.len()).named("b"),
+                SubmitOpts::new().tag("tb"),
+                move |_w, r| {
+                    for i in r.iter() {
+                        b2[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            assert_eq!(ha.wait().total_items(), 5_000, "{policy:?}");
+            assert_eq!(hb.wait().total_items(), 3_333, "{policy:?}");
+            for (i, h) in a.iter().chain(b.iter()).enumerate() {
+                assert_eq!(
+                    h.load(Ordering::Relaxed),
+                    1,
+                    "{policy:?}: slot {i} ran != once"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cancelling_a_queued_job_frees_the_pool() {
+        use std::sync::atomic::AtomicBool;
+        let e = exec(SchedConfig::default());
+        let gate = Arc::new(AtomicBool::new(false));
+        let entered = Arc::new(AtomicUsize::new(0));
+        let (g, n) = (Arc::clone(&gate), Arc::clone(&entered));
+        // one item per worker; every body blocks until released
+        let blocker = e.submit(JobSpec::new(4).named("blocker"), move |_w, _r| {
+            n.fetch_add(1, Ordering::SeqCst);
+            while !g.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+        });
+        while entered.load(Ordering::SeqCst) < 4 {
+            std::thread::yield_now();
+        }
+        // queued behind the blocker: nothing of it can have dispatched
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&ran);
+        let victim = e.submit(JobSpec::new(10_000).named("victim"), move |_w, r| {
+            r2.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        victim.cancel();
+        assert!(victim.was_cancelled());
+        // the cancelled job completes (drained) while the pool is still
+        // fully occupied by the blocker
+        let report = victim.wait();
+        assert_eq!(report.total_items(), 0, "every item was drained, not run");
+        assert_eq!(ran.load(Ordering::Relaxed), 0);
+        gate.store(true, Ordering::Release);
+        assert_eq!(blocker.wait().total_items(), 4);
+        // cancel is idempotent on finished jobs, and the pool survives
+        coverage(&e, JobSpec::new(2_000));
     }
 
     #[test]

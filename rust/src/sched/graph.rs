@@ -46,6 +46,13 @@
 //! [`Executor::run_graph`] is the borrowed-body entry point (bodies may
 //! borrow the caller's stack data; the call blocks until the whole
 //! graph is terminal) — it is what [`crate::vee::Pipeline`] builds on.
+//!
+//! Graphs are also first-class *tenants*: submitted through a
+//! [`Session`](super::Session) they carry tenancy options (priority,
+//! weight, tag) that the executor's cross-job pick policy weighs, and
+//! [`GraphHandle::cancel`] drops a tenant's undispatched nodes and
+//! drains its in-flight jobs so the pool frees for the tenants queued
+//! behind it.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -56,10 +63,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::executor::{
-    enqueue_raw, Body, DoneCallback, Executor, Job, PanicPayload, Shared,
+    cancel_job, enqueue_raw, Body, DoneCallback, Executor, Job, PanicPayload,
+    Shared,
 };
 use super::metrics::SchedReport;
 use super::placement::{Placement, ResolveMode};
+use super::session::Tenancy;
 use super::task::TaskRange;
 use crate::config::SchedConfig;
 use crate::topology::DeviceClass;
@@ -305,7 +314,10 @@ pub enum NodeStatus {
     Completed,
     /// A task body panicked; the job was aborted and drained.
     Failed,
-    /// A (transitive) dependency failed; the node never dispatched.
+    /// The node never ran to completion: a (transitive) dependency
+    /// failed, or the graph was cancelled ([`GraphHandle::cancel`]).
+    /// Undispatched nodes never start; a node whose job was cancelled
+    /// mid-run kept its partial progress but was drained.
     Cancelled,
 }
 
@@ -322,7 +334,9 @@ pub struct NodeReport {
     /// feature to drive the device (see
     /// [`super::placement::ResolveMode::Execute`]).
     pub fallback: Option<String>,
-    /// Scheduling report; `None` for cancelled nodes (never dispatched).
+    /// Scheduling report; `None` for cancelled nodes that never
+    /// dispatched (a node cancelled *mid-run* keeps the report of its
+    /// drained job, with a partial item count).
     pub report: Option<SchedReport>,
 }
 
@@ -390,6 +404,12 @@ struct Progress {
     pending: Vec<usize>,
     status: Vec<Option<NodeStatus>>,
     reports: Vec<Option<SchedReport>>,
+    /// Whether each node's job has been (or is being) enqueued. A
+    /// cancel sweep may only short-circuit nodes that are not
+    /// dispatched; dispatched ones are cancelled through their jobs.
+    dispatched: Vec<bool>,
+    /// Set by [`GraphHandle::cancel`]: no further node may dispatch.
+    cancelled: bool,
     /// Nodes not yet terminal; zero = the graph is done.
     remaining: usize,
     /// First node panic, resumed by `wait`.
@@ -397,11 +417,17 @@ struct Progress {
     makespan: f64,
 }
 
-struct GraphRun {
+pub(super) struct GraphRun {
     graph: String,
     shared: Arc<Shared>,
     completed_jobs: Arc<AtomicUsize>,
+    /// Tenancy every node job of this graph is enqueued under.
+    tenancy: Tenancy,
     nodes: Vec<NodeState>,
+    /// Jobs dispatched so far (cancellation aborts them through here;
+    /// entries for finished jobs are harmless — cancelling one is a
+    /// no-op).
+    jobs: Mutex<Vec<Arc<Job>>>,
     progress: Mutex<Progress>,
     done_cv: Condvar,
     start: Instant,
@@ -416,8 +442,9 @@ impl Executor {
         &self,
         spec: GraphSpec<'static>,
     ) -> Result<GraphHandle<'static>, GraphError> {
-        let run = self.launch_graph(spec)?;
-        Ok(GraphHandle { run, _env: PhantomData })
+        let (run, roots) = self.prepare_graph(spec, Tenancy::default())?;
+        dispatch(&run, &roots);
+        Ok(GraphHandle::from_run(run))
     }
 
     /// Borrowed-body graph execution: validates, dispatches, and blocks
@@ -441,14 +468,21 @@ impl Executor {
         // dispatched and the spec (with its bodies) is dropped here,
         // inside 'env.
         let spec: GraphSpec<'static> = unsafe { std::mem::transmute(spec) };
-        let run = self.launch_graph(spec)?;
-        Ok(GraphHandle { run, _env: PhantomData::<&'static ()> }.wait())
+        let (run, roots) = self.prepare_graph(spec, Tenancy::default())?;
+        dispatch(&run, &roots);
+        Ok(GraphHandle::from_run(run).wait())
     }
 
-    fn launch_graph(
+    /// Validate `spec` and build its run state *without dispatching
+    /// anything*: the caller dispatches the returned root set via
+    /// [`dispatch`]. Splitting submission this way is what lets
+    /// [`super::Session::submit_all`] validate a whole batch before any
+    /// graph's roots enter the run queue (fused submission).
+    pub(super) fn prepare_graph(
         &self,
         spec: GraphSpec<'static>,
-    ) -> Result<Arc<GraphRun>, GraphError> {
+        tenancy: Tenancy,
+    ) -> Result<(Arc<GraphRun>, Vec<usize>), GraphError> {
         let meta: Vec<(String, Vec<String>)> = spec
             .nodes
             .iter()
@@ -495,11 +529,15 @@ impl Executor {
             graph: spec.name,
             shared: Arc::clone(self.shared()),
             completed_jobs: Arc::clone(self.completed_counter()),
+            tenancy,
             nodes,
+            jobs: Mutex::new(Vec::new()),
             progress: Mutex::new(Progress {
                 pending,
                 status: vec![None; n],
                 reports: vec![None; n],
+                dispatched: vec![false; n],
+                cancelled: false,
                 remaining: n,
                 panic: None,
                 makespan: 0.0,
@@ -507,8 +545,7 @@ impl Executor {
             done_cv: Condvar::new(),
             start: Instant::now(),
         });
-        dispatch(&run, &roots);
-        Ok(run)
+        Ok((run, roots))
     }
 }
 
@@ -521,10 +558,36 @@ impl Executor {
 /// [`enqueue_raw`], so their bookkeeping is done *here*, on an explicit
 /// worklist: an arbitrarily long chain of zero-item nodes is iterative,
 /// not one recursion frame per node.
-fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
+///
+/// Every node is *claimed* under the progress lock before its body is
+/// taken: a node of a cancelled graph (or one a concurrent cancel sweep
+/// already marked terminal) is short-circuited to `Cancelled` here
+/// instead of dispatching, and a job enqueued concurrently with the
+/// cancel sweep is caught by the post-enqueue re-check — whichever side
+/// runs second cancels it, so no job of a cancelled graph keeps the
+/// pool busy.
+pub(super) fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
     let mut worklist: Vec<usize> = ready.to_vec();
     while let Some(i) = worklist.pop() {
         let node = &run.nodes[i];
+        {
+            let mut p = run.progress.lock().unwrap();
+            if p.status[i].is_some() {
+                continue; // a cancel sweep got here first
+            }
+            if p.cancelled {
+                p.status[i] = Some(NodeStatus::Cancelled);
+                drop(node.body.lock().unwrap().take());
+                p.remaining -= 1;
+                if p.remaining == 0 {
+                    p.makespan = run.start.elapsed().as_secs_f64();
+                }
+                drop(p);
+                run.done_cv.notify_all();
+                continue;
+            }
+            p.dispatched[i] = true;
+        }
         let body = node
             .body
             .lock()
@@ -541,6 +604,7 @@ fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
                 0,
                 Arc::clone(&node.config),
                 node.pool,
+                run.tenancy.clone(),
                 body,
                 None,
             );
@@ -549,16 +613,24 @@ fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
             let run2 = Arc::clone(run);
             let hook: DoneCallback =
                 Box::new(move |job| node_done(&run2, i, job));
-            enqueue_raw(
+            let job = enqueue_raw(
                 &run.shared,
                 &run.completed_jobs,
                 node.name.clone(),
                 node.items,
                 Arc::clone(&node.config),
                 node.pool,
+                run.tenancy.clone(),
                 body,
                 Some(hook),
             );
+            run.jobs.lock().unwrap().push(Arc::clone(&job));
+            // re-check: a cancel sweep that missed this job in the
+            // registry has already set the flag, so we cancel it here
+            let cancelled = run.progress.lock().unwrap().cancelled;
+            if cancelled {
+                cancel_job(&job, &run.shared, &run.completed_jobs);
+            }
         }
     }
 }
@@ -574,22 +646,33 @@ fn node_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) {
 /// on success, cancelling them transitively on failure — and return the
 /// nodes that became ready. Call with no locks held; wakes waiters.
 fn record_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) -> Vec<usize> {
-    let failed = job.was_aborted();
     let report = job
         .cloned_report()
         .expect("record_done runs after the report publishes");
-    let payload = if failed { job.take_panic() } else { None };
+    // A recorded panic payload is the authoritative failure signal —
+    // it always surfaces through `wait()`, even if the graph was
+    // concurrently cancelled (a crashed tenant must never read as
+    // merely cancelled). Absent a panic, a raised cancel flag counts
+    // only if it actually cost the node work: a cancel that raced a
+    // natural completion (every item executed, nothing drained) leaves
+    // the node Completed.
+    let payload = job.take_panic();
+    let failed = payload.is_some();
+    let cancelled =
+        !failed && job.was_cancelled() && !job.fully_executed(&report);
     let mut ready = Vec::new();
     {
         let mut p = run.progress.lock().unwrap();
         p.reports[i] = Some(report);
         p.status[i] = Some(if failed {
             NodeStatus::Failed
+        } else if cancelled {
+            NodeStatus::Cancelled
         } else {
             NodeStatus::Completed
         });
-        if failed {
-            if p.panic.is_none() {
+        if failed || cancelled {
+            if p.panic.is_none() && payload.is_some() {
                 p.panic = payload;
             }
             cancel_dependents(run, &mut p, i);
@@ -643,6 +726,12 @@ impl fmt::Debug for GraphHandle<'_> {
     }
 }
 
+impl GraphHandle<'static> {
+    pub(super) fn from_run(run: Arc<GraphRun>) -> Self {
+        GraphHandle { run, _env: PhantomData }
+    }
+}
+
 impl GraphHandle<'_> {
     pub fn name(&self) -> &str {
         &self.run.graph
@@ -650,6 +739,43 @@ impl GraphHandle<'_> {
 
     pub fn is_finished(&self) -> bool {
         self.run.progress.lock().unwrap().remaining == 0
+    }
+
+    /// Cancel the whole graph: nodes that have not dispatched are
+    /// marked [`NodeStatus::Cancelled`] and their bodies dropped
+    /// without ever entering the run queue; jobs already dispatched are
+    /// cancelled ([`cancel_job`]) — their undispatched tasks are
+    /// drained and the pool freed for other tenants, while task bodies
+    /// already executing finish. [`GraphHandle::wait`] /
+    /// [`GraphHandle::join`] then return as soon as the in-flight
+    /// bodies settle. Idempotent; a no-op on a finished graph.
+    pub fn cancel(&self) {
+        let jobs: Vec<Arc<Job>> = {
+            let mut p = self.run.progress.lock().unwrap();
+            if p.remaining == 0 {
+                return;
+            }
+            p.cancelled = true;
+            for i in 0..self.run.nodes.len() {
+                if p.status[i].is_none() && !p.dispatched[i] {
+                    p.status[i] = Some(NodeStatus::Cancelled);
+                    drop(self.run.nodes[i].body.lock().unwrap().take());
+                    p.remaining -= 1;
+                }
+            }
+            if p.remaining == 0 {
+                p.makespan = self.run.start.elapsed().as_secs_f64();
+            }
+            self.run.jobs.lock().unwrap().clone()
+        };
+        self.run.done_cv.notify_all();
+        // Cancel the dispatched jobs with no lock held: a job finishing
+        // concurrently is already terminal and unaffected, and any job
+        // enqueued concurrently with this sweep is caught by dispatch's
+        // own post-enqueue re-check of the `cancelled` flag.
+        for job in jobs {
+            cancel_job(&job, &self.run.shared, &self.run.completed_jobs);
+        }
     }
 
     /// Block until every node is terminal; resumes the first node panic
@@ -671,8 +797,11 @@ impl GraphHandle<'_> {
 
 /// Collect the terminal state into a report. Drains the per-node
 /// reports rather than cloning them — `wait`/`join` consume the only
-/// handle, so this runs at most once per graph.
-fn wait_terminal(run: &GraphRun) -> (GraphReport, Option<PanicPayload>) {
+/// handle (and [`super::Session::run_all`] owns its runs), so this runs
+/// at most once per graph.
+pub(super) fn wait_terminal(
+    run: &GraphRun,
+) -> (GraphReport, Option<PanicPayload>) {
     let mut p = run.progress.lock().unwrap();
     while p.remaining > 0 {
         p = run.done_cv.wait(p).unwrap();

@@ -44,6 +44,20 @@
 //! the `graph=barrier|dag` config knob switches a run between serial
 //! stage order and dependency-aware dispatch for A/B comparison.
 //!
+//! # Multi-tenant sessions
+//!
+//! Many *competing* pipelines share one resident pool through the
+//! [`Session`] API ([`session`]): [`Session::submit_graph`] attaches
+//! tenancy options ([`SubmitOpts`]: priority, weight, tag) to a graph,
+//! [`Session::submit_all`] fuses a batch of pipelines into one merged
+//! scheduling horizon, and the executor's pluggable cross-job pick
+//! policy ([`TenancyPolicy`]: FIFO, weighted-fair over tags, or strict
+//! priority with aging) decides which tenant's tasks each free worker
+//! serves. [`JobHandle::cancel`] / [`GraphHandle::cancel`] drop a
+//! tenant's undispatched work to free the pool. The DES mirrors the
+//! policies in virtual time ([`crate::sim::graph::replay_tenants`]) —
+//! the oracle behind `figure tenancy` and [`autotune::tune_tenancy`].
+//!
 //! # Heterogeneous device pools
 //!
 //! On a [`Topology::heterogeneous`](crate::topology::Topology) machine
@@ -87,6 +101,7 @@ pub mod metrics;
 pub mod partitioner;
 pub mod placement;
 pub mod queue;
+pub mod session;
 pub mod stealing;
 pub mod task;
 pub mod victim;
@@ -102,5 +117,6 @@ pub use placement::{
     DevicePool, DevicePools, Placement, PlacementPolicy, PoolId,
 };
 pub use queue::{QueueLayout, TaskSource};
+pub use session::{Session, SubmitOpts, TenancyPolicy};
 pub use task::TaskRange;
 pub use victim::VictimStrategy;

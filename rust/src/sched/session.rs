@@ -1,0 +1,490 @@
+//! Multi-tenant session submission: many pipelines, one resident pool.
+//!
+//! The evaluation harness of the paper runs one IDA pipeline at a time,
+//! but a scheduler serving many users multiplexes *competing* pipelines
+//! over the same workers — the regime where Canary argues for fusing
+//! work into a single scheduler view instead of thread-per-client
+//! submission, and where Trident shows policy-aware interleaving of
+//! heterogeneous pipelines wins. This module is that surface:
+//!
+//! - [`Session`] ([`Executor::session`]) — a submission context on the
+//!   resident pool. [`Session::submit_graph`] attaches
+//!   [`SubmitOpts`] (priority, weight, tag) to a whole task graph;
+//!   [`Session::submit_all`] / [`Session::run_all`] **fuse** a batch of
+//!   pipelines into one merged scheduling horizon: every graph is
+//!   validated before anything dispatches, then all of their root nodes
+//!   enter the run queue together, so the cross-job pick policy — not
+//!   submission interleaving — decides execution order.
+//! - [`TenancyPolicy`] — the pluggable cross-job pick policy the
+//!   executor's workers apply at task-acquisition time (and, because
+//!   dependents enter the same policy-ordered run queue the moment
+//!   their in-edges complete, at dependent-enqueue time too):
+//!   - `Fifo` — oldest submission first; a worker drains one job's
+//!     source before moving on (the pre-session behaviour).
+//!   - `Fair` — weighted fair sharing over *tags*: workers serve the
+//!     tag with the least executed-items-per-weight among the live
+//!     jobs of their pool, re-evaluated every few tasks, so
+//!     concurrent tenants make proportional progress.
+//!   - `Priority` — strict levels (higher first) with aging: a job
+//!     gains one effective level per [`AGING_QUANTUM_SECS`] it has
+//!     waited *since it was last served* (service resets the clock,
+//!     so an actively-served job never out-ages a late high-priority
+//!     arrival), bounding starvation of low-priority tenants.
+//! - First-class cancellation —
+//!   [`JobHandle::cancel`](super::JobHandle::cancel) /
+//!   [`GraphHandle::cancel`](super::GraphHandle::cancel) reuse the
+//!   panic-abort drain path to drop a tenant's undispatched work and
+//!   free the pool for the tenants queued behind it (running task
+//!   bodies finish; they are never interrupted mid-call).
+//!
+//! The DES mirrors the whole policy surface in virtual time
+//! ([`crate::sim::graph::replay_tenants`]), which is what `figure
+//! tenancy` and [`crate::sched::autotune::tune_tenancy`] predict with.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::executor::{Executor, JobHandle, JobSpec};
+use super::graph::{
+    dispatch, wait_terminal, GraphError, GraphHandle, GraphReport, GraphSpec,
+};
+
+/// Aging quantum for [`TenancyPolicy::Priority`]: a job gains one
+/// effective priority level per this many seconds (wall-clock on the
+/// executor, virtual seconds in the DES) spent waiting *since it was
+/// last served*, bounding starvation. Serving a job resets its aging
+/// clock, so aging can never freeze the relative order of two live
+/// jobs — a late high-priority arrival always outranks a tenant the
+/// pool is actively serving.
+pub const AGING_QUANTUM_SECS: f64 = 1.0;
+
+/// Cross-job pick policy: which live job a worker serves next when
+/// several tenants' task sources are queued on its pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TenancyPolicy {
+    /// Oldest submission first (default; the pre-session behaviour).
+    #[default]
+    Fifo,
+    /// Weighted fair sharing over tags: serve the tag with the least
+    /// executed items per unit weight among the pool's live jobs.
+    Fair,
+    /// Strict priority levels (higher first), with one level of aging
+    /// per [`AGING_QUANTUM_SECS`] waited.
+    Priority,
+}
+
+impl TenancyPolicy {
+    pub const ALL: [TenancyPolicy; 3] = [
+        TenancyPolicy::Fifo,
+        TenancyPolicy::Fair,
+        TenancyPolicy::Priority,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenancyPolicy::Fifo => "fifo",
+            TenancyPolicy::Fair => "fair",
+            TenancyPolicy::Priority => "priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(TenancyPolicy::Fifo),
+            "fair" | "wrr" => Some(TenancyPolicy::Fair),
+            "priority" | "prio" => Some(TenancyPolicy::Priority),
+            _ => None,
+        }
+    }
+}
+
+/// Per-submission tenancy options: how the cross-job pick policy
+/// weighs this tenant's work against the other live tenants.
+#[derive(Debug, Clone)]
+pub struct SubmitOpts {
+    /// Priority level for [`TenancyPolicy::Priority`] (higher runs
+    /// first; default 0).
+    pub priority: i64,
+    /// Share weight for [`TenancyPolicy::Fair`] (default 1; a tag with
+    /// weight 2 is served twice the items per scheduling decision).
+    pub weight: u64,
+    /// Tenant tag: [`TenancyPolicy::Fair`] shares the pool *between
+    /// tags*, so every graph submitted under one tag counts against
+    /// one fair share. Empty (default) = the anonymous tenant.
+    pub tag: String,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        SubmitOpts { priority: 0, weight: 1, tag: String::new() }
+    }
+}
+
+impl SubmitOpts {
+    pub fn new() -> Self {
+        SubmitOpts::default()
+    }
+
+    pub fn priority(mut self, priority: i64) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn weight(mut self, weight: u64) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    pub fn tag(mut self, tag: &str) -> Self {
+        self.tag = tag.to_string();
+        self
+    }
+}
+
+/// Resolved tenancy attached to every job in the run queue (each graph
+/// node's job clones its graph's). `arrived` anchors priority aging.
+#[derive(Debug, Clone)]
+pub(super) struct Tenancy {
+    pub(super) priority: i64,
+    pub(super) weight: u64,
+    pub(super) tag: Arc<str>,
+    pub(super) arrived: Instant,
+}
+
+impl Tenancy {
+    pub(super) fn from_opts(opts: &SubmitOpts) -> Self {
+        Tenancy {
+            priority: opts.priority,
+            weight: opts.weight.max(1),
+            tag: Arc::from(opts.tag.as_str()),
+            arrived: Instant::now(),
+        }
+    }
+
+    /// Priority after aging: one level per quantum of `waited_secs`
+    /// (time since the job was last served — see
+    /// [`AGING_QUANTUM_SECS`]).
+    pub(super) fn effective_priority(&self, waited_secs: f64) -> i64 {
+        self.priority
+            .saturating_add((waited_secs.max(0.0) / AGING_QUANTUM_SECS) as i64)
+    }
+}
+
+impl Default for Tenancy {
+    fn default() -> Self {
+        Tenancy::from_opts(&SubmitOpts::default())
+    }
+}
+
+/// A multi-tenant submission context on one executor's resident pool.
+/// Created by [`Executor::session`]; cheap (borrows the executor), so
+/// apps create one per client or one per batch as they like — all
+/// sessions of an executor share its run queue and pick policy.
+pub struct Session<'e> {
+    exec: &'e Executor,
+}
+
+impl<'e> Session<'e> {
+    pub(super) fn new(exec: &'e Executor) -> Self {
+        Session { exec }
+    }
+
+    pub fn executor(&self) -> &'e Executor {
+        self.exec
+    }
+
+    /// Submit one owned-body job under tenancy options.
+    pub fn submit<F>(
+        &self,
+        spec: JobSpec,
+        opts: SubmitOpts,
+        body: F,
+    ) -> JobHandle<'static>
+    where
+        F: Fn(usize, super::TaskRange) + Send + Sync + 'static,
+    {
+        self.exec.submit_tenant(spec, Tenancy::from_opts(&opts), body)
+    }
+
+    /// Validate and launch one task graph under tenancy options; the
+    /// graph keeps running if the handle is dropped.
+    pub fn submit_graph(
+        &self,
+        spec: GraphSpec<'static>,
+        opts: SubmitOpts,
+    ) -> Result<GraphHandle<'static>, GraphError> {
+        let tenancy = Tenancy::from_opts(&opts);
+        let (run, roots) = self.exec.prepare_graph(spec, tenancy)?;
+        dispatch(&run, &roots);
+        Ok(GraphHandle::from_run(run))
+    }
+
+    /// Fused submission: validate *every* graph, then dispatch all of
+    /// their root nodes into one merged scheduling horizon. If any
+    /// graph is invalid, nothing dispatches and the whole batch is
+    /// rejected — so concurrent tenants never observe a half-submitted
+    /// batch. Execution order across the batch is the executor's
+    /// [`TenancyPolicy`], not submission order.
+    pub fn submit_all(
+        &self,
+        specs: Vec<(GraphSpec<'static>, SubmitOpts)>,
+    ) -> Result<Vec<GraphHandle<'static>>, GraphError> {
+        let mut prepared = Vec::with_capacity(specs.len());
+        for (spec, opts) in specs {
+            prepared
+                .push(self.exec.prepare_graph(spec, Tenancy::from_opts(&opts))?);
+        }
+        Ok(prepared
+            .into_iter()
+            .map(|(run, roots)| {
+                dispatch(&run, &roots);
+                GraphHandle::from_run(run)
+            })
+            .collect())
+    }
+
+    /// Borrowed-body fused submission: like [`Session::submit_all`] but
+    /// the node bodies may borrow the caller's stack data; blocks until
+    /// *every* graph in the batch is terminal and returns the reports
+    /// in batch order. The first node panic (across the whole batch) is
+    /// resumed on this thread after every graph has settled.
+    pub fn run_all<'env>(
+        &self,
+        specs: Vec<(GraphSpec<'env>, SubmitOpts)>,
+    ) -> Result<Vec<GraphReport>, GraphError> {
+        // SAFETY: lifetime-only transmute of the node bodies, with the
+        // same argument as `Executor::run_graph`: this function blocks
+        // (below) until every submitted graph is terminal, and by then
+        // every body is gone — dispatched bodies are dropped by job
+        // finalization before the node's completion publishes,
+        // cancelled bodies at cancellation, both before the graph-level
+        // `remaining` counter reaches zero. On the `Err` path nothing
+        // was dispatched and the specs (with their bodies) are dropped
+        // here, inside 'env.
+        let specs: Vec<(GraphSpec<'static>, SubmitOpts)> =
+            unsafe { std::mem::transmute(specs) };
+        let mut prepared = Vec::with_capacity(specs.len());
+        for (spec, opts) in specs {
+            prepared
+                .push(self.exec.prepare_graph(spec, Tenancy::from_opts(&opts))?);
+        }
+        let runs: Vec<_> = prepared
+            .into_iter()
+            .map(|(run, roots)| {
+                dispatch(&run, &roots);
+                run
+            })
+            .collect();
+        let mut reports = Vec::with_capacity(runs.len());
+        let mut first_panic = None;
+        for run in &runs {
+            let (report, panic) = wait_terminal(run);
+            reports.push(report);
+            if first_panic.is_none() {
+                first_panic = panic;
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        Ok(reports)
+    }
+}
+
+impl Executor {
+    /// A multi-tenant submission context on this executor's pool.
+    pub fn session(&self) -> Session<'_> {
+        Session::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedConfig;
+    use crate::sched::graph::{NodeSpec, NodeStatus};
+    use crate::topology::Topology;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn exec() -> Executor {
+        Executor::new(
+            Arc::new(Topology::symmetric("t", 2, 2, 1.5, 1.0)),
+            Arc::new(SchedConfig::default()),
+        )
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in TenancyPolicy::ALL {
+            assert_eq!(TenancyPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(TenancyPolicy::parse("bogus"), None);
+        assert_eq!(TenancyPolicy::default(), TenancyPolicy::Fifo);
+    }
+
+    #[test]
+    fn submit_opts_builder_clamps_weight() {
+        let opts = SubmitOpts::new().priority(3).weight(0).tag("t");
+        assert_eq!(opts.priority, 3);
+        assert_eq!(opts.weight, 1, "weight 0 would starve the tag");
+        assert_eq!(opts.tag, "t");
+        let t = Tenancy::from_opts(&SubmitOpts::default());
+        assert_eq!(t.priority, 0);
+        assert_eq!(t.weight, 1);
+        assert_eq!(&*t.tag, "");
+    }
+
+    #[test]
+    fn aging_raises_effective_priority_with_waiting() {
+        let t = Tenancy::from_opts(&SubmitOpts::new().priority(1));
+        assert_eq!(t.effective_priority(0.0), 1, "no waiting, no boost");
+        assert_eq!(t.effective_priority(2.5 * AGING_QUANTUM_SECS), 3);
+        // an actively-served contender (zero wait) can never out-age a
+        // higher-priority job by merely existing longer
+        let served = Tenancy::from_opts(&SubmitOpts::new());
+        assert!(
+            t.effective_priority(0.0) > served.effective_priority(0.0),
+            "strict priority dominates when neither is starved"
+        );
+    }
+
+    #[test]
+    fn session_submit_graph_runs_like_executor_submit_graph() {
+        let e = exec();
+        let session = e.session();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let spec = GraphSpec::new("g").node(
+            NodeSpec::new("a", 2_000),
+            move |_w, r| {
+                c.fetch_add(r.len(), Ordering::Relaxed);
+            },
+        );
+        let h = session
+            .submit_graph(spec, SubmitOpts::new().tag("tenant-a"))
+            .unwrap();
+        let report = h.wait();
+        assert!(report.all_completed());
+        assert_eq!(count.load(Ordering::Relaxed), 2_000);
+    }
+
+    #[test]
+    fn submit_all_is_all_or_nothing() {
+        let e = exec();
+        let session = e.session();
+        let good = GraphSpec::new("good")
+            .node(NodeSpec::new("a", 100), |_w, _r| {});
+        let bad = GraphSpec::new("bad")
+            .node(NodeSpec::new("a", 10).after("ghost"), |_w, _r| {});
+        let err = session
+            .submit_all(vec![
+                (good, SubmitOpts::default()),
+                (bad, SubmitOpts::default()),
+            ])
+            .unwrap_err();
+        assert!(matches!(err, GraphError::UnknownDependency { .. }));
+        // nothing dispatched — not even the valid graph
+        assert_eq!(e.jobs_completed(), 0);
+    }
+
+    #[test]
+    fn run_all_returns_reports_in_batch_order() {
+        let e = exec();
+        let session = e.session();
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        let specs = vec![
+            (
+                GraphSpec::new("one").node(
+                    NodeSpec::new("n", 1_500),
+                    |_w, r| {
+                        a.fetch_add(r.len(), Ordering::Relaxed);
+                    },
+                ),
+                SubmitOpts::new().tag("one"),
+            ),
+            (
+                GraphSpec::new("two").node(
+                    NodeSpec::new("n", 700),
+                    |_w, r| {
+                        b.fetch_add(r.len(), Ordering::Relaxed);
+                    },
+                ),
+                SubmitOpts::new().tag("two"),
+            ),
+        ];
+        let reports = session.run_all(specs).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].graph, "one");
+        assert_eq!(reports[1].graph, "two");
+        assert!(reports.iter().all(|r| r.all_completed()));
+        assert_eq!(a.load(Ordering::Relaxed), 1_500);
+        assert_eq!(b.load(Ordering::Relaxed), 700);
+    }
+
+    #[test]
+    fn run_all_settles_every_graph_before_resuming_a_panic() {
+        let e = exec();
+        let session = e.session();
+        let survivor = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let specs = vec![
+                    (
+                        GraphSpec::new("boom").node(
+                            NodeSpec::new("n", 100),
+                            |_w, _r| panic!("tenant failure"),
+                        ),
+                        SubmitOpts::default(),
+                    ),
+                    (
+                        GraphSpec::new("fine").node(
+                            NodeSpec::new("n", 2_000),
+                            |_w, r| {
+                                survivor.fetch_add(r.len(), Ordering::Relaxed);
+                            },
+                        ),
+                        SubmitOpts::default(),
+                    ),
+                ];
+                let _ = session.run_all(specs);
+            }),
+        );
+        assert!(result.is_err(), "the node panic must resume");
+        // the independent tenant ran to completion first
+        assert_eq!(survivor.load(Ordering::Relaxed), 2_000);
+        // and the pool survives
+        let r = e.run(JobSpec::new(500), |_w, _r| {});
+        assert_eq!(r.total_items(), 500);
+    }
+
+    #[test]
+    fn cancelled_graph_reports_cancelled_nodes() {
+        let e = exec();
+        let session = e.session();
+        // a graph whose second node can never start before we cancel:
+        // the root blocks until we release it
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&ran);
+        let spec = GraphSpec::new("cancel-me")
+            .node(NodeSpec::new("hold", 1), move |_w, _r| {
+                while !g.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+            })
+            .node(NodeSpec::new("rest", 10_000).after("hold"), move |_w, r| {
+                r2.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        let h = session.submit_graph(spec, SubmitOpts::default()).unwrap();
+        h.cancel();
+        gate.store(true, Ordering::Release);
+        let report = h.join();
+        assert_eq!(report.status("rest"), Some(NodeStatus::Cancelled));
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "rest never dispatched");
+        // the pool is free for the next tenant
+        let r = e.run(JobSpec::new(1_000), |_w, _r| {});
+        assert_eq!(r.total_items(), 1_000);
+    }
+}

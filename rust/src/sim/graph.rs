@@ -51,7 +51,10 @@ use crate::config::{GraphMode, SchedConfig};
 use crate::sched::graph::{toposort, GraphError, TopoOrder};
 use crate::sched::metrics::{SchedReport, WorkerStats};
 use crate::sched::placement::{DevicePools, Placement, ResolveMode};
+use crate::sched::session::AGING_QUANTUM_SECS;
+use crate::sched::TenancyPolicy;
 use crate::topology::{DeviceClass, Topology};
+use crate::util::stats;
 
 /// Cost model of one graph node: a name (unique within its shape), a
 /// [`Workload`] of per-item virtual costs, an optional per-node
@@ -665,6 +668,513 @@ fn critical_path(
     rev.into_iter().map(|i| shape.nodes[i].name.clone()).collect()
 }
 
+// ---------------------------------------------------------------------------
+// multi-tenant replay (the DES mirror of `sched::session`)
+// ---------------------------------------------------------------------------
+
+/// One tenant in a multi-graph replay ([`replay_tenants`]): a pipeline
+/// shape plus its virtual arrival time and the tenancy options its
+/// real-executor submission would carry
+/// ([`SubmitOpts`](crate::sched::SubmitOpts)).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub shape: GraphShape,
+    /// Virtual time at which this tenant submits its graph.
+    pub arrival: f64,
+    /// Priority level for [`TenancyPolicy::Priority`] (higher first).
+    pub priority: i64,
+    /// Share weight for [`TenancyPolicy::Fair`].
+    pub weight: u64,
+    /// Fair-share tag (empty = the anonymous tenant).
+    pub tag: String,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, shape: GraphShape, arrival: f64) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            shape,
+            arrival,
+            priority: 0,
+            weight: 1,
+            tag: String::new(),
+        }
+    }
+
+    pub fn priority(mut self, priority: i64) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn weight(mut self, weight: u64) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    pub fn tag(mut self, tag: &str) -> Self {
+        self.tag = tag.to_string();
+        self
+    }
+}
+
+/// Outcome of one tenant inside a [`replay_tenants`] run.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub name: String,
+    pub tag: String,
+    /// Virtual submission time.
+    pub arrival: f64,
+    /// Virtual time the tenant's last node finished.
+    pub finish: f64,
+    /// Makespan this tenant's graph replays to *alone* on the idle
+    /// machine (dag mode) — the denominator of [`TenantOutcome::slowdown`].
+    pub isolated: f64,
+}
+
+impl TenantOutcome {
+    /// Submission-to-completion latency (queueing included).
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Latency normalized by the tenant's isolated makespan — the
+    /// standard multi-tenancy metric (1.0 = as fast as an idle
+    /// machine). A zero-cost tenant reports slowdown 1.0.
+    pub fn slowdown(&self) -> f64 {
+        if self.isolated > 0.0 {
+            self.latency() / self.isolated
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Result of one multi-tenant replay.
+#[derive(Debug, Clone)]
+pub struct TenancySimOutcome {
+    pub policy: TenancyPolicy,
+    /// Per-tenant outcomes, in spec order.
+    pub tenants: Vec<TenantOutcome>,
+    /// Virtual completion time of the whole workload.
+    pub makespan: f64,
+}
+
+impl TenancySimOutcome {
+    pub fn latencies(&self) -> Vec<f64> {
+        self.tenants.iter().map(TenantOutcome::latency).collect()
+    }
+
+    pub fn slowdowns(&self) -> Vec<f64> {
+        self.tenants.iter().map(TenantOutcome::slowdown).collect()
+    }
+
+    /// Median per-tenant slowdown.
+    pub fn p50_slowdown(&self) -> f64 {
+        stats::percentile(&self.slowdowns(), 50.0)
+    }
+
+    /// Tail (p99) per-tenant slowdown — what a policy is judged by
+    /// under bursty arrivals.
+    pub fn p99_slowdown(&self) -> f64 {
+        stats::percentile(&self.slowdowns(), 99.0)
+    }
+
+    /// Jain's fairness index over per-tenant slowdowns (1.0 = every
+    /// tenant slowed equally).
+    pub fn fairness(&self) -> f64 {
+        stats::jain_fairness(&self.slowdowns())
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantOutcome> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}
+
+/// A live job of the multi-tenant event loop: one graph node's
+/// [`JobSim`] plus the pick-policy bookkeeping.
+struct ActiveJob<'w> {
+    /// Global node index.
+    node: usize,
+    tenant: usize,
+    pool: usize,
+    /// Activation sequence (the FIFO key; ties in every policy break
+    /// towards the older activation).
+    seq: u64,
+    /// Virtual time a worker last acquired a chunk of this job
+    /// (initially the tenant's arrival). Priority aging measures
+    /// waiting as `now - served_at` — the mirror of the executor's
+    /// `Job::served_ns`.
+    served_at: f64,
+    sim: JobSim<'w>,
+}
+
+/// Replay many tenants' graphs over one modelled machine under a
+/// cross-job pick policy — the virtual-time mirror of submitting each
+/// shape through one [`Session`](crate::sched::Session) of an executor
+/// running [`TenancyPolicy`] `policy`. Tenants arrive at their
+/// [`TenantSpec::arrival`] offsets; each worker event retires its
+/// chunk, completes/activates nodes exactly as [`replay`]'s dag mode,
+/// and then scans its pool's active jobs *in policy order* (FIFO by
+/// activation, priority with virtual-time aging, or weighted fair over
+/// tags by executed items) for its next chunk. Per-node configs resolve
+/// as the node's own override or else `default`; validation and
+/// placement resolution match the executor path per graph.
+pub fn replay_tenants(
+    tenants: &[TenantSpec],
+    topo: &Topology,
+    default: &SchedConfig,
+    costs: &CostModel,
+    policy: TenancyPolicy,
+) -> Result<TenancySimOutcome, GraphError> {
+    let isolated = isolated_makespans(tenants, topo, default, costs)?;
+    replay_tenants_with(tenants, topo, default, costs, policy, &isolated)
+}
+
+/// Per-tenant isolated baselines: each shape's dag-mode makespan
+/// replayed *alone* on the idle machine (the slowdown denominator).
+/// Policy-independent — callers comparing several policies over one
+/// tenant mix (the tenancy figure, [`tune_tenancy`]
+/// ([`crate::sched::autotune::tune_tenancy`])) compute this once and
+/// pass it to [`replay_tenants_with`] instead of re-replaying every
+/// baseline per policy.
+pub fn isolated_makespans(
+    tenants: &[TenantSpec],
+    topo: &Topology,
+    default: &SchedConfig,
+    costs: &CostModel,
+) -> Result<Vec<f64>, GraphError> {
+    tenants
+        .iter()
+        .map(|t| {
+            replay(&t.shape, topo, default, costs, GraphMode::Dag)
+                .map(|o| o.makespan())
+        })
+        .collect()
+}
+
+/// [`replay_tenants`] with precomputed [`isolated_makespans`] (one
+/// entry per tenant, same order).
+pub fn replay_tenants_with(
+    tenants: &[TenantSpec],
+    topo: &Topology,
+    default: &SchedConfig,
+    costs: &CostModel,
+    policy: TenancyPolicy,
+    isolated: &[f64],
+) -> Result<TenancySimOutcome, GraphError> {
+    assert_eq!(isolated.len(), tenants.len(), "one baseline per tenant");
+    let pools = DevicePools::from_topology(topo);
+    let nw = pools.n_workers();
+    let nt = tenants.len();
+
+    // Per-tenant validation: the same toposort the executor runs.
+    let mut orders = Vec::with_capacity(nt);
+    for t in tenants {
+        orders.push(t.shape.toposorted()?);
+    }
+
+    // Flatten every tenant's nodes into one global index space.
+    let mut base = Vec::with_capacity(nt); // tenant -> first global idx
+    let mut node_tenant = Vec::new();
+    let mut node_local = Vec::new();
+    for (ti, t) in tenants.iter().enumerate() {
+        base.push(node_tenant.len());
+        for li in 0..t.shape.nodes.len() {
+            node_tenant.push(ti);
+            node_local.push(li);
+        }
+    }
+    let n_nodes = node_tenant.len();
+    let node_ref: Vec<&NodeModel> = node_tenant
+        .iter()
+        .zip(&node_local)
+        .map(|(&ti, &li)| &tenants[ti].shape.nodes[li])
+        .collect();
+    let configs: Vec<SchedConfig> = (0..n_nodes)
+        .map(|g| node_ref[g].config.clone().unwrap_or_else(|| default.clone()))
+        .collect();
+    let mut node_pool = Vec::with_capacity(n_nodes);
+    for (ti, t) in tenants.iter().enumerate() {
+        let placements: Vec<Placement> =
+            t.shape.nodes.iter().map(|n| n.placement).collect();
+        node_pool.extend(resolve_pools(&t.shape, &pools, &placements)?);
+        debug_assert_eq!(node_pool.len(), base[ti] + t.shape.nodes.len());
+    }
+    let items: Vec<usize> =
+        (0..n_nodes).map(|g| node_ref[g].workload.items()).collect();
+    let mut pending: Vec<usize> = (0..n_nodes)
+        .map(|g| orders[node_tenant[g]].deps[node_local[g]].len())
+        .collect();
+    let mut executed = vec![0usize; n_nodes];
+
+    let mut t_remaining: Vec<usize> =
+        tenants.iter().map(|t| t.shape.nodes.len()).collect();
+    let mut t_finish: Vec<f64> = tenants.iter().map(|t| t.arrival).collect();
+    let mut remaining: usize = t_remaining.iter().sum();
+
+    let mut active: Vec<ActiveJob<'_>> = Vec::new();
+    let mut next_seq = 0u64;
+    // What each worker is currently executing: (global node, chunk len).
+    let mut chunk: Vec<Option<(usize, usize)>> = vec![None; nw];
+    let mut parked: Vec<Option<f64>> = vec![None; nw];
+    let mut makespan = tenants.iter().map(|t| t.arrival).fold(0.0, f64::max);
+
+    // Arrival queue, earliest first (ties by spec order for
+    // determinism).
+    let mut arrivals: Vec<usize> = (0..nt).collect();
+    arrivals.sort_by(|&a, &b| {
+        tenants[a]
+            .arrival
+            .total_cmp(&tenants[b].arrival)
+            .then_with(|| a.cmp(&b))
+    });
+    let mut next_arrival = 0usize;
+
+    // Activate the given global nodes at virtual time `t` (a worklist,
+    // so chains of zero-item nodes stay iterative). Returns whether any
+    // job went live.
+    macro_rules! activate {
+        ($ready:expr, $t:expr) => {{
+            let mut worklist: Vec<usize> = $ready;
+            let mut went_live = false;
+            while let Some(g) = worklist.pop() {
+                let (ti, li) = (node_tenant[g], node_local[g]);
+                if items[g] == 0 {
+                    remaining -= 1;
+                    t_remaining[ti] -= 1;
+                    if t_remaining[ti] == 0 {
+                        t_finish[ti] = $t;
+                    }
+                    for &d in &orders[ti].dependents[li] {
+                        let dg = base[ti] + d;
+                        pending[dg] -= 1;
+                        if pending[dg] == 0 {
+                            worklist.push(dg);
+                        }
+                    }
+                } else {
+                    active.push(ActiveJob {
+                        node: g,
+                        tenant: ti,
+                        pool: node_pool[g],
+                        seq: next_seq,
+                        served_at: tenants[ti].arrival,
+                        sim: JobSim::new(
+                            &pools.pool(node_pool[g]).topo,
+                            &configs[g],
+                            &node_ref[g].workload,
+                            costs,
+                        ),
+                    });
+                    next_seq += 1;
+                    went_live = true;
+                }
+            }
+            went_live
+        }};
+    }
+
+    let mut heap: BinaryHeap<Ev> = (0..nw).map(|w| Ev { t: 0.0, w }).collect();
+
+    while let Some(Ev { t, w }) = heap.pop() {
+        // Release every tenant whose arrival has passed; their roots
+        // activate at the arrival time (work begins when a worker
+        // frees, exactly as the executor's run queue would).
+        while next_arrival < arrivals.len()
+            && tenants[arrivals[next_arrival]].arrival <= t
+        {
+            let ti = arrivals[next_arrival];
+            next_arrival += 1;
+            let roots: Vec<usize> = (0..tenants[ti].shape.nodes.len())
+                .filter(|&li| pending[base[ti] + li] == 0)
+                .map(|li| base[ti] + li)
+                .collect();
+            if activate!(roots, tenants[ti].arrival) {
+                for (w2, slot) in parked.iter_mut().enumerate() {
+                    if let Some(p) = slot.take() {
+                        heap.push(Ev { t: p.max(t), w: w2 });
+                    }
+                }
+            }
+        }
+
+        let mut now = t;
+        let my_pool = pools.pool_of(w);
+        let lw = pools.local_of(w);
+
+        // retire the chunk this event marks the end of
+        if let Some((g, len)) = chunk[w].take() {
+            executed[g] += len;
+            if executed[g] == items[g] {
+                let ti = node_tenant[g];
+                remaining -= 1;
+                t_remaining[ti] -= 1;
+                if t_remaining[ti] == 0 {
+                    t_finish[ti] = t;
+                }
+                let pos = active
+                    .iter()
+                    .position(|a| a.node == g)
+                    .expect("completed node was active");
+                active.remove(pos);
+                let mut ready = Vec::new();
+                for &d in &orders[ti].dependents[node_local[g]] {
+                    let dg = base[ti] + d;
+                    pending[dg] -= 1;
+                    if pending[dg] == 0 {
+                        ready.push(dg);
+                    }
+                }
+                if activate!(ready, t) {
+                    for (w2, slot) in parked.iter_mut().enumerate() {
+                        if let Some(p) = slot.take() {
+                            heap.push(Ev { t: p.max(t), w: w2 });
+                        }
+                    }
+                }
+            }
+        }
+
+        if remaining == 0 {
+            makespan = makespan.max(now);
+            continue; // workload done; drain remaining worker events
+        }
+
+        // policy-ordered scan of this pool's active jobs — the mirror
+        // of the executor's `pick_job` comparator
+        let order = scan_order(&active, tenants, &executed, my_pool, now, policy);
+        let mut got: Option<(usize, crate::sched::queue::Pull)> = None;
+        for k in order {
+            let my_topo = &pools.pool(active[k].pool).topo;
+            let aj = &mut active[k];
+            if let Some(pull) = aj.sim.try_acquire(my_topo, lw, &mut now) {
+                got = Some((k, pull));
+                break;
+            }
+        }
+        match got {
+            Some((k, pull)) => {
+                let my_topo = &pools.pool(active[k].pool).topo;
+                let aj = &mut active[k];
+                // reset the job's priority-aging clock: served now
+                aj.served_at = now;
+                let exec = aj.sim.exec_time(my_topo, lw, &pull);
+                chunk[w] = Some((aj.node, pull.task.len()));
+                heap.push(Ev { t: now + exec, w });
+            }
+            None if next_arrival < arrivals.len() => {
+                // nothing runnable yet, but tenants are still due:
+                // come back at the next arrival
+                makespan = makespan.max(now);
+                let ta = tenants[arrivals[next_arrival]].arrival;
+                heap.push(Ev { t: ta.max(now), w });
+            }
+            None => {
+                // park until the next activation
+                makespan = makespan.max(now);
+                parked[w] = Some(now);
+            }
+        }
+    }
+
+    let makespan = t_finish.iter().copied().fold(makespan, f64::max);
+    Ok(TenancySimOutcome {
+        policy,
+        tenants: tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| TenantOutcome {
+                name: t.name.clone(),
+                tag: t.tag.clone(),
+                arrival: t.arrival,
+                finish: t_finish[ti],
+                isolated: isolated[ti],
+            })
+            .collect(),
+        makespan,
+    })
+}
+
+/// Policy-ordered indices into `active` for a worker of `my_pool` —
+/// the DES twin of the executor's `pick_job`: FIFO by activation seq,
+/// priority with one level of virtual-time aging per
+/// [`AGING_QUANTUM_SECS`] *waited since last service* (the mirror of
+/// `Job::served_ns` — an actively-served job never out-ages a late
+/// high-priority arrival), weighted fair by executed-items-per-weight
+/// over tags. Ties always break towards the older activation. Runs
+/// once per worker event, so the sort keys are computed once per job
+/// (not inside the comparator).
+fn scan_order(
+    active: &[ActiveJob<'_>],
+    tenants: &[TenantSpec],
+    executed: &[usize],
+    my_pool: usize,
+    now: f64,
+    policy: TenancyPolicy,
+) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..active.len())
+        .filter(|&k| active[k].pool == my_pool)
+        .collect();
+    match policy {
+        TenancyPolicy::Fifo => {
+            idx.sort_by_key(|&k| active[k].seq);
+        }
+        TenancyPolicy::Priority => {
+            // one cached (effective priority) key per pool job; aging
+            // counts only the time waited since the job's last service
+            let mut keyed: Vec<(usize, i64)> = idx
+                .iter()
+                .map(|&k| {
+                    let t = &tenants[active[k].tenant];
+                    let aged = ((now - active[k].served_at).max(0.0)
+                        / AGING_QUANTUM_SECS)
+                        as i64;
+                    (k, t.priority.saturating_add(aged))
+                })
+                .collect();
+            keyed.sort_by(|a, b| {
+                b.1.cmp(&a.1)
+                    .then_with(|| active[a.0].seq.cmp(&active[b.0].seq))
+            });
+            idx = keyed.into_iter().map(|(k, _)| k).collect();
+        }
+        TenancyPolicy::Fair => {
+            // per-tag (items, weight) aggregates over this pool's jobs,
+            // one pass; then one cached key per pool job
+            let mut tags: Vec<(&str, u64, u64)> = Vec::new();
+            for &k in &idx {
+                let t = &tenants[active[k].tenant];
+                let items = executed[active[k].node] as u64;
+                match tags.iter_mut().find(|(tag, _, _)| *tag == t.tag) {
+                    Some(entry) => {
+                        entry.1 += items;
+                        entry.2 = entry.2.max(t.weight);
+                    }
+                    None => tags.push((&t.tag, items, t.weight)),
+                }
+            }
+            let mut keyed: Vec<(usize, f64)> = idx
+                .iter()
+                .map(|&k| {
+                    let tag = &tenants[active[k].tenant].tag;
+                    let (_, items, weight) = tags
+                        .iter()
+                        .find(|(t, _, _)| *t == *tag)
+                        .expect("every pool job's tag was aggregated");
+                    (k, *items as f64 / (*weight).max(1) as f64)
+                })
+                .collect();
+            keyed.sort_by(|a, b| {
+                a.1.total_cmp(&b.1)
+                    .then_with(|| active[a.0].seq.cmp(&active[b.0].seq))
+            });
+            idx = keyed.into_iter().map(|(k, _)| k).collect();
+        }
+    }
+    idx
+}
+
 /// Sort node indices by descending finish time — the refinement order
 /// graph autotuning sweeps (latest finishers first). Stable, so ties
 /// keep shape order.
@@ -1015,6 +1525,184 @@ mod tests {
             dag.makespan(),
             barrier.makespan()
         );
+    }
+
+    /// One heavy batch tenant at t=0 plus short interactive tenants
+    /// arriving in a burst just behind it — the scenario where FIFO
+    /// starves the shorts and Fair/Priority should not. Per-item SS
+    /// chunks on the atomic central queue keep the preemption quantum
+    /// fine enough for the policies to act within a node.
+    fn bursty_tenants(cores: usize) -> Vec<TenantSpec> {
+        let heavy = GraphShape::new("batch")
+            .node(NodeModel::uniform("p1", cores * 64, 1e-4))
+            .node(NodeModel::uniform("p2", cores * 64, 1e-4).after("p1"));
+        let mut out =
+            vec![TenantSpec::new("batch", heavy, 0.0).tag("batch")];
+        for i in 0..4usize {
+            let shape = GraphShape::new("interactive")
+                .node(NodeModel::uniform("q", cores * 4, 1e-4));
+            out.push(
+                TenantSpec::new(&format!("short{i}"), shape, 1e-3 * (i + 1) as f64)
+                    .tag("interactive")
+                    .priority(2)
+                    .weight(4),
+            );
+        }
+        out
+    }
+
+    fn fine_cfg() -> SchedConfig {
+        SchedConfig::fine_grained()
+    }
+
+    #[test]
+    fn single_tenant_fifo_matches_dag_replay() {
+        let topo = Topology::broadwell20();
+        let shape = GraphShape::unbalanced_diamond(10);
+        let dag =
+            replay(&shape, &topo, &cfg(), &costs(), GraphMode::Dag).unwrap();
+        let tenants = vec![TenantSpec::new("only", shape, 0.0)];
+        let out = replay_tenants(
+            &tenants,
+            &topo,
+            &cfg(),
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        let rel = (out.makespan - dag.makespan()).abs() / dag.makespan();
+        assert!(
+            rel < 1e-9,
+            "lone FIFO tenant {} vs dag replay {}",
+            out.makespan,
+            dag.makespan()
+        );
+        assert_eq!(out.tenants.len(), 1);
+        assert!((out.tenants[0].slowdown() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_and_priority_beat_fifo_on_tail_slowdown() {
+        let topo = Topology::symmetric("t8", 1, 8, 1.0, 1.0);
+        let tenants = bursty_tenants(8);
+        let run = |policy| {
+            replay_tenants(&tenants, &topo, &fine_cfg(), &costs(), policy)
+                .unwrap()
+        };
+        let fifo = run(TenancyPolicy::Fifo);
+        let fair = run(TenancyPolicy::Fair);
+        let prio = run(TenancyPolicy::Priority);
+        assert!(
+            fair.p99_slowdown() < fifo.p99_slowdown() / 2.0,
+            "fair p99 {} vs fifo p99 {}",
+            fair.p99_slowdown(),
+            fifo.p99_slowdown()
+        );
+        assert!(
+            prio.p99_slowdown() < fifo.p99_slowdown() / 2.0,
+            "priority p99 {} vs fifo p99 {}",
+            prio.p99_slowdown(),
+            fifo.p99_slowdown()
+        );
+        // the interactive tenants are the ones FIFO starves
+        let short_latency = |o: &TenancySimOutcome| {
+            o.tenant("short0").unwrap().latency()
+        };
+        assert!(short_latency(&prio) < short_latency(&fifo));
+        assert!(short_latency(&fair) < short_latency(&fifo));
+        // fair's whole point: slowdowns spread more evenly
+        assert!(
+            fair.fairness() > fifo.fairness(),
+            "fair index {} vs fifo index {}",
+            fair.fairness(),
+            fifo.fairness()
+        );
+        // every policy is work-conserving: same total work, so the
+        // batch tenant still finishes (makespans in the same ballpark)
+        assert!(fair.makespan < fifo.makespan * 1.5);
+        assert!(prio.makespan < fifo.makespan * 1.5);
+    }
+
+    #[test]
+    fn tenant_replay_deterministic_per_seed() {
+        let topo = Topology::symmetric("t8", 1, 8, 1.0, 1.0);
+        let tenants = bursty_tenants(8);
+        for policy in TenancyPolicy::ALL {
+            let a = replay_tenants(
+                &tenants,
+                &topo,
+                &fine_cfg(),
+                &costs(),
+                policy,
+            )
+            .unwrap();
+            let b = replay_tenants(
+                &tenants,
+                &topo,
+                &fine_cfg(),
+                &costs(),
+                policy,
+            )
+            .unwrap();
+            assert_eq!(a.makespan, b.makespan, "{policy:?}");
+            for (x, y) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(x.finish, y.finish, "{policy:?}: {}", x.name);
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_bound_start_and_zero_cost_tenants_are_instant() {
+        let topo = Topology::broadwell20();
+        let tenants = vec![
+            TenantSpec::new(
+                "first",
+                GraphShape::new("a")
+                    .node(NodeModel::uniform("n", 1_000, 1e-6)),
+                0.0,
+            ),
+            TenantSpec::new(
+                "late-empty",
+                GraphShape::new("b").node(NodeModel::uniform("n", 0, 0.0)),
+                0.5,
+            ),
+        ];
+        let out = replay_tenants(
+            &tenants,
+            &topo,
+            &cfg(),
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        let late = out.tenant("late-empty").unwrap();
+        assert_eq!(late.finish, 0.5, "zero-item graph completes on arrival");
+        assert_eq!(late.latency(), 0.0);
+        assert_eq!(late.slowdown(), 1.0);
+        assert!(out.makespan >= 0.5);
+        assert!(out.tenant("first").unwrap().finish < 0.5);
+    }
+
+    #[test]
+    fn tenant_replay_rejects_invalid_shapes_like_the_executor() {
+        let topo = Topology::broadwell20();
+        let bad = GraphShape::new("cycle")
+            .node(NodeModel::uniform("a", 10, 1e-6).after("b"))
+            .node(NodeModel::uniform("b", 10, 1e-6).after("a"));
+        let tenants = vec![
+            TenantSpec::new("ok", GraphShape::unbalanced_diamond(4), 0.0),
+            TenantSpec::new("bad", bad, 0.1),
+        ];
+        assert!(matches!(
+            replay_tenants(
+                &tenants,
+                &topo,
+                &cfg(),
+                &costs(),
+                TenancyPolicy::Fair
+            ),
+            Err(GraphError::Cycle(_))
+        ));
     }
 
     #[test]

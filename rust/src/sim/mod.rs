@@ -31,6 +31,14 @@
 //! oracle for graph-level autotuning
 //! ([`crate::sched::autotune::tune_graph`]), including placement as a
 //! tuning dimension.
+//!
+//! Multi-tenant workloads replay through [`graph::replay_tenants`]:
+//! many [`TenantSpec`] graphs with arrival offsets and tenancy options
+//! share the modelled pool under a cross-job
+//! [`TenancyPolicy`](crate::sched::TenancyPolicy) — the virtual-time
+//! mirror of [`crate::sched::Session`] submission, and the oracle
+//! behind `figure tenancy` and
+//! [`crate::sched::autotune::tune_tenancy`].
 
 pub mod calibrate;
 pub mod engine;
@@ -39,7 +47,8 @@ pub mod model;
 
 pub use engine::{simulate, SimOutcome};
 pub use graph::{
-    replay, replay_placed, GraphShape, GraphSimOutcome, NodeModel,
-    NodeSimOutcome,
+    isolated_makespans, replay, replay_placed, replay_tenants,
+    replay_tenants_with, GraphShape, GraphSimOutcome, NodeModel,
+    NodeSimOutcome, TenancySimOutcome, TenantOutcome, TenantSpec,
 };
 pub use model::{CostModel, Workload};

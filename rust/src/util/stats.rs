@@ -61,6 +61,23 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Jain's fairness index over non-negative allocations:
+/// `(Σx)² / (n·Σx²)`, 1.0 = perfectly even, 1/n = one sample holds
+/// everything. The multi-tenancy fairness metric of `figure tenancy`
+/// (computed over per-tenant slowdowns).
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        1.0
+    } else {
+        s * s / (xs.len() as f64 * sq)
+    }
+}
+
 /// Load-imbalance as max/mean of per-worker times (1.0 = perfectly even).
 pub fn imbalance(xs: &[f64]) -> f64 {
     let m = mean(xs);
@@ -81,6 +98,18 @@ mod tests {
         assert_eq!(mean(&xs), 2.5);
         assert!((stddev(&xs) - 1.118033988749895).abs() < 1e-12);
         assert!((cov(&xs) - 0.4472135954999579).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+        assert!((jain_fairness(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        // one tenant hogging everything: index collapses to 1/n
+        let skew = jain_fairness(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12);
+        let mid = jain_fairness(&[1.0, 3.0]);
+        assert!(mid > 0.25 && mid < 1.0);
     }
 
     #[test]

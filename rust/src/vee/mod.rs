@@ -20,13 +20,13 @@
 
 pub mod pipeline;
 
-pub use pipeline::{Pipeline, PipelineReport, Stage};
+pub use pipeline::{report_from_graph, Pipeline, PipelineReport, Stage};
 
 use std::sync::{Arc, OnceLock};
 
 use crate::config::{ExecutorMode, GraphMode, SchedConfig};
 use crate::sched::executor::{Executor, JobSpec};
-use crate::sched::{SchedReport, TaskRange};
+use crate::sched::{SchedReport, Session, TaskRange, TenancyPolicy};
 use crate::topology::Topology;
 
 /// The engine: topology + default scheduling configuration + resident
@@ -110,6 +110,33 @@ impl Vee {
             executor: self.executor.clone(),
             graph_mode: self.graph_mode,
         }
+    }
+
+    /// Set the resident pool's cross-job pick policy
+    /// (`policy=fifo|fair|priority`) — how concurrent tenants share the
+    /// workers. A no-op on a one-shot engine (each operator gets a
+    /// fresh single-job pool, so there is nothing to arbitrate).
+    ///
+    /// Unlike [`Vee::with_graph_mode`] this is **not** a per-engine
+    /// setting: the policy lives on the executor's run queue, so it
+    /// applies to every engine sharing this pool (e.g.
+    /// [`Vee::with_config`] clones — and, if called on
+    /// [`Vee::host_default`], the process-wide shared engine) and to
+    /// jobs those engines already have queued. Engines that want a
+    /// private policy should own a private pool
+    /// ([`Vee::new`]/[`Vee::with_mode`]), as the CLI does per run.
+    pub fn with_tenancy_policy(self, policy: TenancyPolicy) -> Self {
+        if let Some(exec) = &self.executor {
+            exec.set_policy(policy);
+        }
+        self
+    }
+
+    /// A multi-tenant submission session on the resident pool (`None`
+    /// in oneshot mode). This is how `jobs=<n>` submits its concurrent
+    /// pipelines from one thread — see [`crate::apps::cc::run_concurrent`].
+    pub fn session(&self) -> Option<Session<'_>> {
+        self.executor.as_ref().map(|e| e.session())
     }
 
     /// The resident executor (`None` in oneshot mode). Useful for

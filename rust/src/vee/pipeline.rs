@@ -18,9 +18,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::Vee;
-use crate::config::GraphMode;
+use crate::config::{GraphMode, SchedConfig};
 use crate::sched::graph::{toposort, GraphError, GraphSpec, NodeSpec};
-use crate::sched::{SchedReport, TaskRange};
+use crate::sched::{GraphReport, SchedReport, TaskRange};
 use crate::sim::{GraphShape, NodeModel, Workload};
 
 /// One vectorized operator: a name, an item count, the names of the
@@ -135,6 +135,24 @@ impl<'a> Pipeline<'a> {
         shape
     }
 
+    /// The [`GraphSpec`] this pipeline submits in `graph=dag` mode:
+    /// same stage names, item counts, and dependency edges, every node
+    /// sharing `config`. Exposed so multi-tenant drivers can submit
+    /// many pipelines through one [`Session`](crate::sched::Session)
+    /// ([`Session::run_all`](crate::sched::Session::run_all)) instead
+    /// of one blocking [`Pipeline::run`] per thread.
+    pub fn to_graph_spec(&self, config: &Arc<SchedConfig>) -> GraphSpec<'_> {
+        let mut spec = GraphSpec::new(&self.name);
+        for stage in &self.stages {
+            let body = &stage.body;
+            let node = NodeSpec::new(&stage.name, stage.items)
+                .with_shared_config(Arc::clone(config))
+                .after_all(stage.after.iter().map(String::as_str));
+            spec.add(node, move |w, r| body(w, r));
+        }
+        spec
+    }
+
     /// Execute the pipeline on the engine; panics on an invalid stage
     /// graph (cycle, unknown or duplicate stage name) — see
     /// [`Pipeline::try_run`] for the fallible form. A stage-body panic
@@ -149,30 +167,9 @@ impl<'a> Pipeline<'a> {
     pub fn try_run(&self, vee: &Vee) -> Result<PipelineReport, GraphError> {
         match vee.executor() {
             Some(exec) if vee.graph_mode() == GraphMode::Dag => {
-                let mut spec = GraphSpec::new(&self.name);
-                for stage in &self.stages {
-                    let body = &stage.body;
-                    let node = NodeSpec::new(&stage.name, stage.items)
-                        .with_shared_config(Arc::clone(&vee.sched))
-                        .after_all(stage.after.iter().map(String::as_str));
-                    spec.add(node, move |w, r| body(w, r));
-                }
+                let spec = self.to_graph_spec(&vee.sched);
                 let graph = exec.run_graph(spec)?;
-                let stages = graph
-                    .nodes
-                    .into_iter()
-                    .map(|n| {
-                        let report = n
-                            .report
-                            .expect("run_graph resumes panics, so every node completed");
-                        (n.name, report)
-                    })
-                    .collect();
-                Ok(PipelineReport {
-                    pipeline: self.name.clone(),
-                    stages,
-                    wall_time: graph.makespan,
-                })
+                Ok(report_from_graph(graph))
             }
             _ => {
                 // Barrier mode (or a one-shot engine): serialize the
@@ -208,6 +205,29 @@ impl<'a> Pipeline<'a> {
                 })
             }
         }
+    }
+}
+
+/// Map a fully-completed [`GraphReport`] (e.g. from
+/// [`Session::run_all`](crate::sched::Session::run_all) over
+/// [`Pipeline::to_graph_spec`] specs) back into the pipeline's report
+/// shape. Panics if a node did not complete — callers that resumed the
+/// graph's panic (as `run_all`/`run_graph` do) never see that.
+pub fn report_from_graph(graph: GraphReport) -> PipelineReport {
+    let stages = graph
+        .nodes
+        .into_iter()
+        .map(|n| {
+            let report = n
+                .report
+                .expect("graph settled without panic, so every node completed");
+            (n.name, report)
+        })
+        .collect();
+    PipelineReport {
+        pipeline: graph.graph,
+        stages,
+        wall_time: graph.makespan,
     }
 }
 

@@ -1,0 +1,351 @@
+//! Multi-tenant session acceptance tests: the cross-job pick policies
+//! on the REAL executor agree with the DES prediction on policy
+//! ordering (Fair and Priority beat FIFO on interactive tail latency
+//! under bursty arrivals), cancellation mid-graph frees capacity for
+//! queued tenants deterministically, and dropped handles neither
+//! deadlock the pool nor leak the job slot.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use daphne_sched::config::SchedConfig;
+use daphne_sched::sched::{
+    Executor, GraphSpec, JobSpec, NodeSpec, NodeStatus, SubmitOpts,
+    TenancyPolicy,
+};
+use daphne_sched::sim::{self, GraphShape, NodeModel, TenantSpec};
+use daphne_sched::topology::Topology;
+
+/// Fine-grained config: per-item chunks on the atomic central queue,
+/// so the preemption quantum is one item and the pick policies can act
+/// inside a node (the same config the DES tenancy figure uses).
+fn fine_cfg() -> SchedConfig {
+    SchedConfig::fine_grained()
+}
+
+fn executor(policy: TenancyPolicy) -> Executor {
+    Executor::new_with_policy(
+        Arc::new(Topology::symmetric("t4", 1, 4, 1.0, 1.0)),
+        Arc::new(fine_cfg()),
+        policy,
+    )
+}
+
+/// ~tens of microseconds of real work per item (absolute speed is
+/// irrelevant — only latency *ratios* between policies are asserted).
+fn spin_item() {
+    let mut x = 0u64;
+    for i in 0..20_000u64 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(x);
+}
+
+const HEAVY_NODE_ITEMS: usize = 2_000;
+const SHORT_ITEMS: usize = 80;
+const N_SHORTS: usize = 4;
+
+/// Run the bursty scenario on a real 4-worker pool: one heavy 2-node
+/// batch chain submitted first, then a burst of short interactive
+/// tenants through the same session. Returns the worst
+/// submission-to-completion latency among the shorts, in seconds.
+fn real_worst_short_latency(policy: TenancyPolicy) -> f64 {
+    let exec = executor(policy);
+    let session = exec.session();
+    let t0 = Instant::now();
+
+    let heavy = GraphSpec::new("batch")
+        .node(NodeSpec::new("p1", HEAVY_NODE_ITEMS), |_w, r| {
+            for _ in r.iter() {
+                spin_item();
+            }
+        })
+        .node(
+            NodeSpec::new("p2", HEAVY_NODE_ITEMS).after("p1"),
+            |_w, r| {
+                for _ in r.iter() {
+                    spin_item();
+                }
+            },
+        );
+    let hh = session
+        .submit_graph(heavy, SubmitOpts::new().tag("batch"))
+        .unwrap();
+
+    let mut shorts = Vec::new();
+    for i in 0..N_SHORTS {
+        let done: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+        let d = Arc::clone(&done);
+        let spec = GraphSpec::new("interactive").node(
+            NodeSpec::new("q", SHORT_ITEMS),
+            move |_w, r| {
+                for _ in r.iter() {
+                    spin_item();
+                }
+                // the last task's write is the completion timestamp
+                *d.lock().unwrap() = Some(Instant::now());
+            },
+        );
+        let h = session
+            .submit_graph(
+                spec,
+                SubmitOpts::new()
+                    .tag("interactive")
+                    .priority(2)
+                    .weight(4),
+            )
+            .unwrap();
+        shorts.push((done, h, i));
+    }
+
+    let mut worst = 0f64;
+    for (done, h, i) in shorts {
+        let report = h.wait();
+        assert!(report.all_completed(), "short {i} did not complete");
+        let at = done.lock().unwrap().expect("short ran");
+        worst = worst.max(at.duration_since(t0).as_secs_f64());
+    }
+    let hr = hh.wait();
+    assert!(hr.all_completed(), "batch tenant must still complete");
+    worst
+}
+
+/// The same scenario in virtual time: worst short-tenant latency under
+/// `policy` as the DES predicts it.
+fn modelled_worst_short_latency(policy: TenancyPolicy) -> f64 {
+    let per_item = 2e-5;
+    let heavy = GraphShape::new("batch")
+        .node(NodeModel::uniform("p1", HEAVY_NODE_ITEMS, per_item))
+        .node(
+            NodeModel::uniform("p2", HEAVY_NODE_ITEMS, per_item).after("p1"),
+        );
+    let mut tenants = vec![TenantSpec::new("batch", heavy, 0.0).tag("batch")];
+    for i in 0..N_SHORTS {
+        tenants.push(
+            TenantSpec::new(
+                &format!("short{i}"),
+                GraphShape::new("interactive")
+                    .node(NodeModel::uniform("q", SHORT_ITEMS, per_item)),
+                1e-4 * (i + 1) as f64,
+            )
+            .tag("interactive")
+            .priority(2)
+            .weight(4),
+        );
+    }
+    let out = sim::replay_tenants(
+        &tenants,
+        &Topology::symmetric("t4", 1, 4, 1.0, 1.0),
+        &fine_cfg(),
+        &sim::CostModel::recorded(),
+        policy,
+    )
+    .unwrap();
+    out.tenants
+        .iter()
+        .filter(|t| t.tag == "interactive")
+        .map(|t| t.latency())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn policy_ordering_agrees_between_des_and_real_executor() {
+    // DES prediction: FIFO parks the interactive burst behind the
+    // batch backlog; Fair and Priority do not.
+    let des_fifo = modelled_worst_short_latency(TenancyPolicy::Fifo);
+    let des_fair = modelled_worst_short_latency(TenancyPolicy::Fair);
+    let des_prio = modelled_worst_short_latency(TenancyPolicy::Priority);
+    assert!(
+        des_fair < des_fifo,
+        "DES: fair {des_fair} must beat fifo {des_fifo}"
+    );
+    assert!(
+        des_prio < des_fifo,
+        "DES: priority {des_prio} must beat fifo {des_fifo}"
+    );
+
+    // Real executor: the same policy ordering on wall-clock latencies.
+    // Only the ordering is asserted (with margin) — absolute latencies
+    // depend on the host.
+    let real_fifo = real_worst_short_latency(TenancyPolicy::Fifo);
+    let real_fair = real_worst_short_latency(TenancyPolicy::Fair);
+    let real_prio = real_worst_short_latency(TenancyPolicy::Priority);
+    assert!(
+        real_fair < real_fifo,
+        "executor: fair {real_fair}s must beat fifo {real_fifo}s, \
+         as the DES predicted ({des_fair} vs {des_fifo})"
+    );
+    assert!(
+        real_prio < real_fifo,
+        "executor: priority {real_prio}s must beat fifo {real_fifo}s, \
+         as the DES predicted ({des_prio} vs {des_fifo})"
+    );
+}
+
+#[test]
+fn cancelling_a_job_mid_run_frees_capacity_for_the_queued_tenant() {
+    // Two workers, both parked inside the victim job's first two items
+    // (the gate holds them); every remaining item of the victim is
+    // undispatched, so the queued tenant can only run if cancellation
+    // actually frees the pool. Fully deterministic: no worker is free
+    // to pull more victim items while the gate is closed.
+    let exec = Executor::new_with_policy(
+        Arc::new(Topology::symmetric("t2", 1, 2, 1.0, 1.0)),
+        Arc::new(fine_cfg()),
+        TenancyPolicy::Fifo,
+    );
+    let gate = Arc::new(AtomicBool::new(false));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let (g, n) = (Arc::clone(&gate), Arc::clone(&entered));
+    let victim = exec.submit(JobSpec::new(20_000).named("victim"), move |_w, _r| {
+        n.fetch_add(1, Ordering::SeqCst);
+        while !g.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+    });
+    while entered.load(Ordering::SeqCst) < 2 {
+        std::thread::yield_now();
+    }
+    // queued tenant, submitted while both workers are held
+    let covered = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&covered);
+    let tenant = exec.submit(JobSpec::new(5_000).named("tenant"), move |_w, r| {
+        c.fetch_add(r.len(), Ordering::Relaxed);
+    });
+    victim.cancel();
+    gate.store(true, Ordering::Release);
+    // exactly the two in-flight items ran; the other 19,998 were
+    // drained by the cancel, never executed
+    let vr = victim.wait();
+    assert!(victim.was_cancelled());
+    assert_eq!(vr.total_items(), 2, "only the held items may run");
+    assert_eq!(entered.load(Ordering::SeqCst), 2);
+    // the queued tenant's makespan no longer includes the victim's
+    // 19,998-item backlog — it completes in full
+    let tr = tenant.wait();
+    assert_eq!(tr.total_items(), 5_000);
+    assert_eq!(covered.load(Ordering::Relaxed), 5_000);
+}
+
+#[test]
+fn cancelling_a_graph_mid_run_cancels_undispatched_nodes() {
+    let exec = Executor::new_with_policy(
+        Arc::new(Topology::symmetric("t2", 1, 2, 1.0, 1.0)),
+        Arc::new(fine_cfg()),
+        TenancyPolicy::Fifo,
+    );
+    let session = exec.session();
+    let gate = Arc::new(AtomicBool::new(false));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let (g, n) = (Arc::clone(&gate), Arc::clone(&entered));
+    let rest_ran = Arc::new(AtomicUsize::new(0));
+    let r2 = Arc::clone(&rest_ran);
+    let spec = GraphSpec::new("cancel-mid")
+        .node(NodeSpec::new("hold", 2), move |_w, _r| {
+            n.fetch_add(1, Ordering::SeqCst);
+            while !g.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+        })
+        .node(
+            NodeSpec::new("rest", 10_000).after("hold"),
+            move |_w, r| {
+                r2.fetch_add(r.len(), Ordering::Relaxed);
+            },
+        );
+    let h = session.submit_graph(spec, SubmitOpts::default()).unwrap();
+    while entered.load(Ordering::SeqCst) < 2 {
+        std::thread::yield_now();
+    }
+    h.cancel();
+    gate.store(true, Ordering::Release);
+    let report = h.join();
+    // both held items ran to completion, so cancellation cost the
+    // "hold" node nothing — it is Completed; only the undispatched
+    // dependent is Cancelled
+    assert_eq!(report.status("hold"), Some(NodeStatus::Completed));
+    assert_eq!(report.status("rest"), Some(NodeStatus::Cancelled));
+    assert_eq!(
+        rest_ran.load(Ordering::Relaxed),
+        0,
+        "the dependent node never dispatched"
+    );
+    // the freed pool still serves the next tenant on every worker
+    all_workers_barrier(&exec, 2);
+}
+
+/// A job with one item per worker whose body spins until *every*
+/// worker has entered it: completes only if the whole pool is free and
+/// serving — the "subsequent job completes on all workers" assertion
+/// (a leaked slot or deadlocked worker hangs this job, failing the
+/// test by timeout).
+fn all_workers_barrier(exec: &Executor, workers: usize) {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let seen: Arc<Mutex<HashSet<usize>>> = Arc::new(Mutex::new(HashSet::new()));
+    let (n, s) = (Arc::clone(&entered), Arc::clone(&seen));
+    let h = exec.submit(
+        JobSpec::new(workers).named("barrier").with_config(
+            // one STATIC chunk per worker
+            SchedConfig::default(),
+        ),
+        move |w, _r| {
+            s.lock().unwrap().insert(w);
+            n.fetch_add(1, Ordering::SeqCst);
+            while n.load(Ordering::SeqCst) < workers {
+                std::thread::yield_now();
+            }
+        },
+    );
+    let report = h.wait();
+    assert_eq!(report.total_items(), workers);
+    assert_eq!(
+        seen.lock().unwrap().len(),
+        workers,
+        "every worker participated"
+    );
+}
+
+#[test]
+fn dropped_job_handle_neither_deadlocks_nor_leaks_the_slot() {
+    let exec = executor(TenancyPolicy::Fifo);
+    let before = exec.jobs_completed();
+    {
+        // dropped without wait(): the job keeps running detached
+        let _ = exec.submit(JobSpec::new(50_000).named("dropped"), |_w, _r| {});
+    }
+    // the pool still serves a full-width job afterwards
+    all_workers_barrier(&exec, 4);
+    // and the dropped job's slot was finalized, not leaked
+    while exec.jobs_completed() < before + 2 {
+        std::thread::yield_now();
+    }
+    assert_eq!(exec.jobs_completed(), before + 2);
+}
+
+#[test]
+fn dropped_graph_handle_neither_deadlocks_nor_leaks_the_slot() {
+    let exec = executor(TenancyPolicy::Fair);
+    let session = exec.session();
+    let count = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&count);
+    {
+        let spec = GraphSpec::new("dropped")
+            .node(NodeSpec::new("a", 3_000), |_w, _r| {})
+            .node(
+                NodeSpec::new("b", 3_000).after("a"),
+                move |_w, r| {
+                    c.fetch_add(r.len(), Ordering::Relaxed);
+                },
+            );
+        let _ = session.submit_graph(spec, SubmitOpts::new().tag("x"));
+        // handle dropped here, graph still in flight
+    }
+    all_workers_barrier(&exec, 4);
+    // the detached graph still ran to completion on the same pool
+    while count.load(Ordering::Relaxed) < 3_000 {
+        std::thread::yield_now();
+    }
+    assert_eq!(count.load(Ordering::Relaxed), 3_000);
+}
