@@ -76,7 +76,7 @@ use std::fmt;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -84,12 +84,14 @@ use super::metrics::{SchedReport, WorkerStats};
 use super::partitioner::PartitionerOptions;
 use super::placement::{DevicePools, Placement, ResolveMode};
 use super::queue::{self, TaskSource};
+use super::ranks;
 use super::session::{Tenancy, TenancyPolicy};
 use super::stealing;
 use super::task::TaskRange;
 use super::victim::VictimSelector;
 use crate::config::SchedConfig;
 use crate::topology::Topology;
+use crate::util::ordered::{OrderedCondvar, OrderedMutex};
 
 pub(super) type Body = Box<dyn Fn(usize, TaskRange) + Send + Sync + 'static>;
 pub(super) type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
@@ -173,14 +175,14 @@ pub(super) struct Job {
     /// data it borrows (or that its drop glue touches) as soon as
     /// completion is observed — so it must never outlive that point,
     /// even though worker threads keep `Arc<Job>` clones around.
-    body: Mutex<Option<Body>>,
+    body: OrderedMutex<Option<Body>>,
     start: Instant,
     /// Items whose body has *returned* (or that were drained after an
     /// abort). Reaching `total` is the completion event.
     executed: AtomicUsize,
     /// Set when a body panicked: stop handing out this job's tasks.
     aborted: AtomicBool,
-    panic: Mutex<Option<PanicPayload>>,
+    panic: OrderedMutex<Option<PanicPayload>>,
     /// Set when the job was cancelled: the abort drain ran with no
     /// panic payload, so waiters complete normally and the task-graph
     /// layer reports the node `Cancelled` instead of `Failed`.
@@ -198,11 +200,11 @@ pub(super) struct Job {
     /// tail of a concurrent worker's final empty steal round — its
     /// `queue_wait`/`failed_steals` — can land after the snapshot; see
     /// the module docs.)
-    stats: Vec<Mutex<WorkerStats>>,
-    done: Mutex<Option<SchedReport>>,
-    done_cv: Condvar,
+    stats: Vec<OrderedMutex<WorkerStats>>,
+    done: OrderedMutex<Option<SchedReport>>,
+    done_cv: OrderedCondvar,
     /// Completion hook (see [`DoneCallback`]); `None` for plain jobs.
-    on_done: Mutex<Option<DoneCallback>>,
+    on_done: OrderedMutex<Option<DoneCallback>>,
 }
 
 impl Job {
@@ -247,8 +249,8 @@ pub(super) struct Shared {
     /// Per-device-class worker pools (built once at spawn). On a
     /// CPU-only topology this is a single pool covering every worker.
     pub(super) pools: DevicePools,
-    queue: Mutex<RunState>,
-    work_cv: Condvar,
+    queue: OrderedMutex<RunState>,
+    work_cv: OrderedCondvar,
 }
 
 /// The persistent worker pool. Threads are spawned once, here, and
@@ -277,13 +279,16 @@ impl Executor {
         let shared = Arc::new(Shared {
             topo: Arc::clone(&topo),
             pools: DevicePools::new(&topo),
-            queue: Mutex::new(RunState {
-                jobs: Vec::new(),
-                policy,
-                next_seq: 0,
-                shutdown: false,
-            }),
-            work_cv: Condvar::new(),
+            queue: OrderedMutex::new(
+                ranks::RUN_QUEUE,
+                RunState {
+                    jobs: Vec::new(),
+                    policy,
+                    next_seq: 0,
+                    shutdown: false,
+                },
+            ),
+            work_cv: OrderedCondvar::new(),
         });
         let jobs_completed = Arc::new(AtomicUsize::new(0));
         let threads = (0..topo.n_cores())
@@ -373,7 +378,7 @@ impl Executor {
     {
         let scope = Scope {
             exec: self,
-            pending: Mutex::new(Vec::new()),
+            pending: OrderedMutex::new(ranks::SCOPE_PENDING, Vec::new()),
             _scope: PhantomData,
             _env: PhantomData,
         };
@@ -501,18 +506,22 @@ pub(super) fn enqueue_raw(
         config,
         pool,
         source,
-        body: Mutex::new(Some(body)),
+        body: OrderedMutex::new(ranks::JOB_BODY, Some(body)),
         start: Instant::now(),
         executed: AtomicUsize::new(0),
         aborted: AtomicBool::new(false),
         cancelled: AtomicBool::new(false),
         tenancy,
         served_ns: AtomicU64::new(0),
-        panic: Mutex::new(None),
-        stats: (0..n).map(|_| Mutex::new(WorkerStats::default())).collect(),
-        done: Mutex::new(None),
-        done_cv: Condvar::new(),
-        on_done: Mutex::new(on_done),
+        panic: OrderedMutex::new(ranks::JOB_PANIC, None),
+        stats: (0..n)
+            .map(|_| {
+                OrderedMutex::new(ranks::JOB_STATS, WorkerStats::default())
+            })
+            .collect(),
+        done: OrderedMutex::new(ranks::JOB_DONE, None),
+        done_cv: OrderedCondvar::new(),
+        on_done: OrderedMutex::new(ranks::JOB_ON_DONE, on_done),
     });
     if job.total == 0 {
         // Nothing to schedule: complete inline without waking the pool.
@@ -633,7 +642,7 @@ impl fmt::Debug for Executor {
 /// Submission scope for borrowed-body jobs (see [`Executor::scope`]).
 pub struct Scope<'scope, 'env: 'scope> {
     exec: &'scope Executor,
-    pending: Mutex<Vec<Arc<Job>>>,
+    pending: OrderedMutex<Vec<Arc<Job>>>,
     _scope: PhantomData<&'scope mut &'scope ()>,
     _env: PhantomData<&'env mut &'env ()>,
 }
@@ -646,14 +655,15 @@ impl<'scope, 'env> Scope<'scope, 'env> {
     {
         let boxed: Box<dyn Fn(usize, TaskRange) + Send + Sync + 'env> =
             Box::new(body);
-        // SAFETY: `Executor::scope` blocks until this job's completion
-        // event. Before that event is published, `finalize` both (a)
-        // proves no call is in flight (items are counted only after
-        // their call returns, and completion requires all of them) and
-        // (b) takes and DROPS this box — so neither a call through the
-        // closure nor its drop glue can happen after 'env ends, even
-        // though workers hold `Arc<Job>` clones longer. Lifetime-only
-        // transmute; vtable and layout are unchanged.
+        // SOUNDNESS: lifetime-only transmute ('env erased to 'static);
+        // vtable and layout are unchanged. `Executor::scope` blocks
+        // until this job's completion event. Before that event is
+        // published, `finalize` both (a) proves no call is in flight
+        // (items are counted only after their call returns, and
+        // completion requires all of them) and (b) takes and DROPS this
+        // box — so neither a call through the closure nor its drop glue
+        // can happen after 'env ends, even though workers hold
+        // `Arc<Job>` clones longer.
         let boxed: Body = unsafe { std::mem::transmute(boxed) };
         let job = self.exec.enqueue(spec, Tenancy::default(), boxed);
         self.pending.lock().unwrap().push(Arc::clone(&job));
@@ -729,7 +739,9 @@ impl JobHandle<'_> {
 /// lengths, large enough that the global run-queue mutex and the stint
 /// setup (victim selector, body handle) amortize over several tasks
 /// even when contending tags would otherwise alternate every pick.
-const POLICY_REPICK_STRIDE: usize = 8;
+/// Public so stress tests can size workloads to straddle the re-pick
+/// boundary exactly.
+pub const POLICY_REPICK_STRIDE: usize = 8;
 
 /// The park/dispatch loop run by every pool thread: pick a job *of
 /// this worker's device pool* not yet exhausted for this worker under
@@ -847,11 +859,20 @@ fn pick_job(
                 }
             }
             let served = |j: &Job| -> f64 {
-                let (_, items, weight) = tags
-                    .iter()
-                    .find(|(t, _, _)| **t == j.tenancy.tag)
-                    .expect("every live pool job's tag was aggregated");
-                *items as f64 / (*weight).max(1) as f64
+                match tags.iter().find(|(t, _, _)| **t == j.tenancy.tag) {
+                    Some((_, items, weight)) => {
+                        *items as f64 / (*weight).max(1) as f64
+                    }
+                    // Unreachable: the candidates are a subset of the
+                    // aggregated pool jobs. A panic here would unwind a
+                    // worker thread while it holds the run-queue mutex
+                    // (poisoning every later submit), so degrade to
+                    // "least served" instead of unwrapping.
+                    None => {
+                        debug_assert!(false, "live pool job's tag missing from aggregate");
+                        0.0
+                    }
+                }
             };
             eligible
                 .min_by(|a, b| {
@@ -983,7 +1004,7 @@ fn run_job_stint(
     exhausted
 }
 
-fn flush_stats(delta: &mut WorkerStats, slot: &Mutex<WorkerStats>) {
+fn flush_stats(delta: &mut WorkerStats, slot: &OrderedMutex<WorkerStats>) {
     let mut s = slot.lock().unwrap();
     s.tasks += delta.tasks;
     s.items += delta.items;
@@ -1081,6 +1102,7 @@ mod tests {
     use crate::topology::DeviceClass;
     use std::collections::HashSet;
     use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
 
     fn host4() -> Arc<Topology> {
         Arc::new(Topology::symmetric("test4", 2, 2, 1.5, 1.0))
@@ -1124,6 +1146,43 @@ mod tests {
     }
 
     #[test]
+    fn small_borrowed_body_job_is_exactly_once() {
+        // Miri-sized: exercises the `Scope::submit` lifetime transmute,
+        // the borrowed-body completion barrier, and the ordered-lock
+        // ranks on the full submit → dispatch → finalize path.
+        let e = exec(SchedConfig::default());
+        coverage(&e, JobSpec::new(64));
+        assert_eq!(e.jobs_completed(), 1);
+    }
+
+    #[test]
+    fn small_owned_body_job_is_exactly_once() {
+        // Miri-sized twin of `owned_body_submit_and_wait`.
+        let e = exec(SchedConfig::default().with_scheme(Scheme::Gss));
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let h = e.submit(JobSpec::new(48).named("small"), move |_w, r| {
+            c.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(h.wait().total_items(), 48);
+        assert_eq!(count.load(Ordering::Relaxed), 48);
+    }
+
+    #[test]
+    fn small_cancel_of_a_finished_job_is_a_no_op() {
+        // Miri-sized: the cancel-vs-completed race's settled side.
+        let e = exec(SchedConfig::default());
+        let h = e.submit(JobSpec::new(16), |_w, _r| {});
+        while !h.is_finished() {
+            std::thread::yield_now();
+        }
+        h.cancel();
+        assert!(!h.was_cancelled(), "cancel after completion costs nothing");
+        assert_eq!(h.wait().total_items(), 16);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items across layouts")]
     fn consecutive_jobs_reuse_the_pool() {
         for layout in LAYOUTS {
             let cfg = SchedConfig::default()
@@ -1140,6 +1199,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 1000-item jobs")]
     fn one_pool_runs_static_and_gss_back_to_back() {
         let e = exec(SchedConfig::default());
         let r1 = e.run(JobSpec::new(1000), |_w, _r| {});
@@ -1158,6 +1218,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 12 × 2000-item jobs")]
     fn many_jobs_never_respawn_workers() {
         let e = exec(SchedConfig::default().with_scheme(Scheme::Fac2));
         let seen: Mutex<HashSet<std::thread::ThreadId>> =
@@ -1177,6 +1238,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items across layouts")]
     fn concurrent_jobs_multiplex_with_full_coverage() {
         for layout in LAYOUTS {
             let cfg = SchedConfig::default()
@@ -1212,6 +1274,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items")]
     fn submitters_on_separate_threads_share_one_pool() {
         let e = exec(SchedConfig::default().with_scheme(Scheme::Mfsc));
         let e = &e;
@@ -1232,6 +1295,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 9999-item job")]
     fn owned_body_submit_and_wait() {
         let e = exec(SchedConfig::default().with_scheme(Scheme::Gss));
         let count = Arc::new(AtomicUsize::new(0));
@@ -1246,6 +1310,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items")]
     fn body_panic_propagates_and_pool_survives() {
         let e = exec(SchedConfig::default().with_scheme(Scheme::Fac2));
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -1287,6 +1352,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 4000-item jobs × 5 rounds")]
     fn pinned_jobs_never_run_on_a_foreign_pool() {
         let e = Executor::new(
             hetero4(),
@@ -1323,6 +1389,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 5000-item job")]
     fn unplaced_jobs_use_the_cpu_pool_on_hetero_topologies() {
         let e = Executor::new(hetero4(), Arc::new(SchedConfig::default()));
         let used = workers_used(&e, JobSpec::new(5_000), 5_000);
@@ -1333,6 +1400,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items")]
     fn pools_overlap_concurrent_jobs_with_full_coverage() {
         let e = Executor::new(
             hetero4(),
@@ -1374,6 +1442,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: recovery job after the panic")]
     fn unsatisfiable_placement_on_plain_submit_panics_with_context() {
         let e = exec(SchedConfig::default());
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -1395,6 +1464,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items × 3 policies")]
     fn every_policy_preserves_exactly_once_execution() {
         use crate::sched::session::SubmitOpts;
         for policy in TenancyPolicy::ALL {
@@ -1442,6 +1512,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "spin-gates on all four workers")]
     fn cancelling_a_queued_job_frees_the_pool() {
         use std::sync::atomic::AtomicBool;
         let e = exec(SchedConfig::default());

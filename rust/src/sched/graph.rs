@@ -59,7 +59,7 @@ use std::fmt;
 use std::marker::PhantomData;
 use std::panic::resume_unwind;
 use std::sync::atomic::AtomicUsize;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::executor::{
@@ -68,10 +68,12 @@ use super::executor::{
 };
 use super::metrics::SchedReport;
 use super::placement::{Placement, ResolveMode};
+use super::ranks;
 use super::session::Tenancy;
 use super::task::TaskRange;
 use crate::config::SchedConfig;
 use crate::topology::DeviceClass;
+use crate::util::ordered::{OrderedCondvar, OrderedMutex};
 
 /// Description of one graph node: a name (unique within its graph), an
 /// item count, optional per-node scheduling overrides, a device-pool
@@ -393,8 +395,11 @@ struct NodeState {
     fallback: Option<String>,
     /// Taken when the node dispatches; dropped at cancellation for
     /// nodes that never dispatch. Either way it is gone before the
-    /// graph's completion is observable (see `run_graph` safety).
-    body: Mutex<Option<Body>>,
+    /// graph's completion is observable (see `run_graph` soundness).
+    /// Shares the job-body rank: cancel sweeps drop it *under* the
+    /// progress lock, which is exactly why `graph.progress` ranks
+    /// below every job lock (see [`ranks`]).
+    body: OrderedMutex<Option<Body>>,
     dependents: Vec<usize>,
 }
 
@@ -427,9 +432,9 @@ pub(super) struct GraphRun {
     /// Jobs dispatched so far (cancellation aborts them through here;
     /// entries for finished jobs are harmless — cancelling one is a
     /// no-op).
-    jobs: Mutex<Vec<Arc<Job>>>,
-    progress: Mutex<Progress>,
-    done_cv: Condvar,
+    jobs: OrderedMutex<Vec<Arc<Job>>>,
+    progress: OrderedMutex<Progress>,
+    done_cv: OrderedCondvar,
     start: Instant,
 }
 
@@ -456,17 +461,18 @@ impl Executor {
         &self,
         spec: GraphSpec<'env>,
     ) -> Result<GraphReport, GraphError> {
-        // SAFETY: lifetime-only transmute of the node bodies. `wait`
-        // below blocks until the whole graph is terminal, and by then
-        // every body is gone: dispatched bodies are dropped by job
-        // finalization *before* the node's completion publishes (and a
+        // SOUNDNESS: lifetime-only transmute of the node bodies ('env
+        // erased to 'static; layout unchanged). `wait` below blocks
+        // until the whole graph is terminal, and by then every body is
+        // gone: dispatched bodies are dropped by job finalization
+        // *before* the node's completion publishes (and a
         // counted-complete job has no call in flight), cancelled bodies
-        // are dropped at cancellation, and both happen before the
-        // graph-level `remaining` counter can reach zero. Worker
-        // threads keep `Arc`s to the run past that point, but only to
-        // already-`None` body slots. On the `Err` path nothing was
-        // dispatched and the spec (with its bodies) is dropped here,
-        // inside 'env.
+        // are dropped under the progress lock at cancellation, and both
+        // happen before the graph-level `remaining` counter can reach
+        // zero. Worker threads keep `Arc`s to the run past that point,
+        // but only to already-`None` body slots. On the `Err` path
+        // nothing was dispatched and the spec (with its bodies) is
+        // dropped here, inside 'env.
         let spec: GraphSpec<'static> = unsafe { std::mem::transmute(spec) };
         let (run, roots) = self.prepare_graph(spec, Tenancy::default())?;
         dispatch(&run, &roots);
@@ -520,7 +526,7 @@ impl Executor {
                 pool: resolved[i].pool,
                 device: pools.pool(resolved[i].pool).class,
                 fallback: resolved[i].fallback.clone(),
-                body: Mutex::new(Some(body)),
+                body: OrderedMutex::new(ranks::JOB_BODY, Some(body)),
                 dependents: topo.dependents[i].clone(),
             });
         }
@@ -531,8 +537,8 @@ impl Executor {
             completed_jobs: Arc::clone(self.completed_counter()),
             tenancy,
             nodes,
-            jobs: Mutex::new(Vec::new()),
-            progress: Mutex::new(Progress {
+            jobs: OrderedMutex::new(ranks::GRAPH_JOBS, Vec::new()),
+            progress: OrderedMutex::new(ranks::GRAPH_PROGRESS, Progress {
                 pending,
                 status: vec![None; n],
                 reports: vec![None; n],
@@ -542,7 +548,7 @@ impl Executor {
                 panic: None,
                 makespan: 0.0,
             }),
-            done_cv: Condvar::new(),
+            done_cv: OrderedCondvar::new(),
             start: Instant::now(),
         });
         Ok((run, roots))
@@ -588,12 +594,27 @@ pub(super) fn dispatch(run: &Arc<GraphRun>, ready: &[usize]) {
             }
             p.dispatched[i] = true;
         }
-        let body = node
-            .body
-            .lock()
-            .unwrap()
-            .take()
-            .expect("a node dispatches at most once");
+        let taken = node.body.lock().unwrap().take();
+        let Some(body) = taken else {
+            // Unreachable: the claim above (`dispatched[i] = true`
+            // under the progress lock) runs at most once per node, and
+            // cancel sweeps only drop bodies of *unclaimed* nodes. An
+            // unwrap here would panic a worker inside the dispatch
+            // hook, so mark the node terminal instead — the graph
+            // still drains rather than hanging.
+            debug_assert!(false, "node '{}' lost its body", node.name);
+            let mut p = run.progress.lock().unwrap();
+            if p.status[i].is_none() {
+                p.status[i] = Some(NodeStatus::Cancelled);
+                p.remaining -= 1;
+                if p.remaining == 0 {
+                    p.makespan = run.start.elapsed().as_secs_f64();
+                }
+            }
+            drop(p);
+            run.done_cv.notify_all();
+            continue;
+        };
         if node.items == 0 {
             // completes inline (no hook): record the outcome ourselves
             // and push any newly ready dependents onto the worklist
@@ -646,9 +667,24 @@ fn node_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) {
 /// on success, cancelling them transitively on failure — and return the
 /// nodes that became ready. Call with no locks held; wakes waiters.
 fn record_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) -> Vec<usize> {
-    let report = job
-        .cloned_report()
-        .expect("record_done runs after the report publishes");
+    let report = match job.cloned_report() {
+        Some(r) => r,
+        // Unreachable: completion hooks run only after the report
+        // publishes, and the zero-item inline path records after
+        // `enqueue_raw` published. An unwrap here would panic the
+        // finalizing worker, so degrade to an empty report — the node
+        // still goes terminal and the graph cannot hang.
+        None => {
+            debug_assert!(false, "record_done before the report published");
+            SchedReport {
+                scheme: String::new(),
+                layout: String::new(),
+                victim: String::new(),
+                makespan: 0.0,
+                per_worker: Vec::new(),
+            }
+        }
+    };
     // A recorded panic payload is the authoritative failure signal —
     // it always surfaces through `wait()`, even if the graph was
     // concurrently cancelled (a crashed tenant must never read as
@@ -833,6 +869,7 @@ mod tests {
     use crate::topology::Topology;
     use std::panic::{catch_unwind, AssertUnwindSafe};
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
 
     fn exec() -> Executor {
         Executor::new(
@@ -842,6 +879,36 @@ mod tests {
     }
 
     #[test]
+    fn borrowed_bodies_write_disjoint_ranges_through_the_graph() {
+        // Miri-sized: the `run_graph` lifetime transmute + `DisjointMut`
+        // unsafe paths together — a writer node fills disjoint halves,
+        // a dependent reader sums them after the dependency edge.
+        use crate::util::DisjointMut;
+        let e = exec();
+        let mut out = vec![0usize; 64];
+        let sum = AtomicUsize::new(0);
+        {
+            let d = DisjointMut::new(&mut out);
+            let spec = GraphSpec::new("disjoint")
+                .node(NodeSpec::new("write", 64), |_w, r| {
+                    for (off, x) in
+                        d.slice_mut(r.start, r.end).iter_mut().enumerate()
+                    {
+                        *x = r.start + off;
+                    }
+                })
+                .node(NodeSpec::new("read", 8).after("write"), |_w, _r| {
+                    sum.store(d.slice(0, 64).iter().sum::<usize>(), Ordering::SeqCst);
+                });
+            let report = e.run_graph(spec).unwrap();
+            assert!(report.all_completed());
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), (0..64).sum::<usize>());
+        assert!(out.iter().enumerate().all(|(i, &x)| x == i));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "heavy: four multi-hundred-item nodes")]
     fn diamond_completes_with_dependency_order() {
         let e = exec();
         let a_items = AtomicUsize::new(0);
@@ -987,6 +1054,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 1000-item recovery job")]
     fn wait_resumes_node_panic_and_join_reports_statuses() {
         let e = exec();
         let make_spec = || {
@@ -1038,6 +1106,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 500-item placed nodes")]
     fn placed_nodes_report_their_device_and_pool() {
         use crate::sched::placement::{Placement, PoolId};
         use crate::topology::DeviceClass;
@@ -1087,6 +1156,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 2000-item node")]
     fn submit_graph_handle_runs_detached() {
         let e = exec();
         let count = Arc::new(AtomicUsize::new(0));

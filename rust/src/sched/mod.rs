@@ -93,6 +93,17 @@
 //! configuration for a whole graph using replay as the oracle with a
 //! greedy critical-path-first refinement — the §5 "automatic selection"
 //! future work, lifted to pipelines.
+//!
+//! # Concurrency discipline
+//!
+//! Every scheduler mutex/condvar is an
+//! [`OrderedMutex`](crate::util::ordered::OrderedMutex) /
+//! [`OrderedCondvar`](crate::util::ordered::OrderedCondvar) tagged with
+//! a [`LockRank`](crate::util::ordered::LockRank) from [`ranks`], the
+//! declared total lock order. Debug builds panic on any down-rank
+//! acquisition or a `wait` that holds a second lock; `tools/repolint`
+//! enforces the same order (plus `SAFETY`/`SOUNDNESS` comment and
+//! layering rules) syntactically in CI.
 
 pub mod autotune;
 pub mod executor;
@@ -101,12 +112,15 @@ pub mod metrics;
 pub mod partitioner;
 pub mod placement;
 pub mod queue;
+pub mod ranks;
 pub mod session;
 pub mod stealing;
 pub mod task;
 pub mod victim;
 
-pub use executor::{Executor, JobHandle, JobSpec, Scope};
+pub use executor::{
+    Executor, JobHandle, JobSpec, Scope, POLICY_REPICK_STRIDE,
+};
 pub use graph::{
     GraphError, GraphHandle, GraphReport, GraphSpec, NodeReport, NodeSpec,
     NodeStatus,

@@ -1,0 +1,106 @@
+//! The scheduler's declared lock order — the single source of truth
+//! for deadlock freedom, enforced twice:
+//!
+//! - at **runtime** by [`crate::util::ordered::OrderedMutex`] /
+//!   [`OrderedCondvar`](crate::util::ordered::OrderedCondvar): under
+//!   `debug_assertions` every acquisition must be strictly up-rank on
+//!   its thread, so the whole test suite continuously checks the order;
+//! - **syntactically** by `tools/repolint`, which parses this file for
+//!   the numeric order and flags nested `.lock()` calls that go
+//!   down-rank (run `cargo run -p repolint`).
+//!
+//! # Why graph progress is the *outermost* rank
+//!
+//! The borrowed-body soundness argument of
+//! [`Executor::run_graph`](super::Executor::run_graph) requires that
+//! every node body is dropped **before** the graph's completion
+//! (`remaining == 0`) becomes observable: a waiter may free the `'env`
+//! data the bodies borrow the moment it wakes. Cancellation therefore
+//! *must* drop undispatched bodies while still holding the progress
+//! lock — releasing it first would open a window where a concurrent
+//! completion lets the waiter run while the cancel sweep still owns
+//! live body boxes. So `Job`-level locks (body, panic, stats, done,
+//! on_done) must be acquirable *under* the graph progress lock, which
+//! pins `graph.progress` below every job rank. The run queue sits
+//! between the graph layer and the job locks: dispatch enqueues while
+//! holding no graph lock, and nothing acquires a graph or queue lock
+//! while holding a job lock.
+//!
+//! # The order
+//!
+//! | rank | lock | guards |
+//! |-----:|------|--------|
+//! | 10 | `graph.progress` | `GraphRun.progress` — per-graph node statuses, pending counts, cancel flag |
+//! | 20 | `graph.jobs` | `GraphRun.jobs` — registry of dispatched jobs (cancellation fan-out) |
+//! | 30 | `scope.pending` | `Scope.pending` — jobs a borrowed-body scope must await |
+//! | 40 | `exec.run_queue` | `Shared.queue` — the executor's live-job run queue (`RunState`) |
+//! | 50 | `job.body` | `Job.body` — the task body box (dropped before completion publishes) |
+//! | 60 | `job.panic` | `Job.panic` — first panic payload |
+//! | 70 | `job.stats` | `Job.stats[w]` — per-worker counters |
+//! | 80 | `job.done` | `Job.done` — the published `SchedReport` (completion event) |
+//! | 90 | `job.on_done` | `Job.on_done` — the graph layer's completion hook |
+//!
+//! Condvars pair with their mutex's rank: `work_cv` with
+//! `exec.run_queue`, a job's `done_cv` with `job.done`, a graph's
+//! `done_cv` with `graph.progress`. The wait discipline (a waiter
+//! holds exactly the waited lock — see
+//! [`crate::util::ordered::OrderedCondvar::wait`]) is part of the
+//! declared order.
+//!
+//! Gaps of 10 leave room to slot new locks in without renumbering;
+//! repolint only compares relative order, never absolute values.
+
+use crate::util::ordered::LockRank;
+
+/// `GraphRun.progress`: per-graph dispatch/completion state.
+pub const GRAPH_PROGRESS: LockRank = LockRank::new(10, "graph.progress");
+/// `GraphRun.jobs`: dispatched-job registry for cancellation.
+pub const GRAPH_JOBS: LockRank = LockRank::new(20, "graph.jobs");
+/// `Scope.pending`: borrowed-body jobs the scope must await.
+pub const SCOPE_PENDING: LockRank = LockRank::new(30, "scope.pending");
+/// `Shared.queue`: the executor's policy-ordered live-job run queue.
+pub const RUN_QUEUE: LockRank = LockRank::new(40, "exec.run_queue");
+/// `Job.body`: the task body box.
+pub const JOB_BODY: LockRank = LockRank::new(50, "job.body");
+/// `Job.panic`: the recorded panic payload.
+pub const JOB_PANIC: LockRank = LockRank::new(60, "job.panic");
+/// `Job.stats[w]`: per-worker execution counters.
+pub const JOB_STATS: LockRank = LockRank::new(70, "job.stats");
+/// `Job.done`: the published completion report.
+pub const JOB_DONE: LockRank = LockRank::new(80, "job.done");
+/// `Job.on_done`: the graph layer's completion hook.
+pub const JOB_ON_DONE: LockRank = LockRank::new(90, "job.on_done");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declared_order_is_strictly_increasing() {
+        let order = [
+            GRAPH_PROGRESS,
+            GRAPH_JOBS,
+            SCOPE_PENDING,
+            RUN_QUEUE,
+            JOB_BODY,
+            JOB_PANIC,
+            JOB_STATS,
+            JOB_DONE,
+            JOB_ON_DONE,
+        ];
+        for pair in order.windows(2) {
+            assert!(
+                pair[0].rank < pair[1].rank,
+                "{} must rank below {}",
+                pair[0],
+                pair[1]
+            );
+        }
+        // names are unique (diagnostics would mislead otherwise)
+        for (i, a) in order.iter().enumerate() {
+            for b in &order[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+        }
+    }
+}

@@ -252,15 +252,16 @@ impl<'e> Session<'e> {
         &self,
         specs: Vec<(GraphSpec<'env>, SubmitOpts)>,
     ) -> Result<Vec<GraphReport>, GraphError> {
-        // SAFETY: lifetime-only transmute of the node bodies, with the
-        // same argument as `Executor::run_graph`: this function blocks
-        // (below) until every submitted graph is terminal, and by then
-        // every body is gone — dispatched bodies are dropped by job
-        // finalization before the node's completion publishes,
-        // cancelled bodies at cancellation, both before the graph-level
-        // `remaining` counter reaches zero. On the `Err` path nothing
-        // was dispatched and the specs (with their bodies) are dropped
-        // here, inside 'env.
+        // SOUNDNESS: lifetime-only transmute of the node bodies ('env
+        // erased to 'static; layout unchanged), with the same argument
+        // as `Executor::run_graph`: this function blocks (below) until
+        // every submitted graph is terminal, and by then every body is
+        // gone — dispatched bodies are dropped by job finalization
+        // before the node's completion publishes, cancelled bodies
+        // under the progress lock at cancellation, both before the
+        // graph-level `remaining` counter reaches zero. On the `Err`
+        // path nothing was dispatched and the specs (with their
+        // bodies) are dropped here, inside 'env.
         let specs: Vec<(GraphSpec<'static>, SubmitOpts)> =
             unsafe { std::mem::transmute(specs) };
         let mut prepared = Vec::with_capacity(specs.len());
@@ -349,6 +350,35 @@ mod tests {
     }
 
     #[test]
+    fn small_run_all_exercises_the_borrowed_batch_path() {
+        // Miri-sized: the `run_all` lifetime transmute with bodies that
+        // borrow the caller's stack across a fused two-graph batch.
+        let e = exec();
+        let session = e.session();
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        let specs = vec![
+            (
+                GraphSpec::new("one").node(NodeSpec::new("n", 32), |_w, r| {
+                    a.fetch_add(r.len(), Ordering::Relaxed);
+                }),
+                SubmitOpts::new().tag("one"),
+            ),
+            (
+                GraphSpec::new("two").node(NodeSpec::new("n", 24), |_w, r| {
+                    b.fetch_add(r.len(), Ordering::Relaxed);
+                }),
+                SubmitOpts::new().tag("two"),
+            ),
+        ];
+        let reports = session.run_all(specs).unwrap();
+        assert!(reports.iter().all(|r| r.all_completed()));
+        assert_eq!(a.load(Ordering::Relaxed), 32);
+        assert_eq!(b.load(Ordering::Relaxed), 24);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "heavy: 2000-item graph")]
     fn session_submit_graph_runs_like_executor_submit_graph() {
         let e = exec();
         let session = e.session();
@@ -388,6 +418,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: thousands of items")]
     fn run_all_returns_reports_in_batch_order() {
         let e = exec();
         let session = e.session();
@@ -423,6 +454,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy: 2000-item survivor graph")]
     fn run_all_settles_every_graph_before_resuming_a_panic() {
         let e = exec();
         let session = e.session();
@@ -459,6 +491,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "spin-gate body on the root node")]
     fn cancelled_graph_reports_cancelled_nodes() {
         let e = exec();
         let session = e.session();

@@ -14,10 +14,17 @@ pub struct DisjointMut<'a, T> {
     _marker: PhantomData<&'a mut [T]>,
 }
 
-// Safety: concurrent access is restricted to disjoint ranges by the
+// SAFETY: `&DisjointMut<T>` only hands out views of disjoint ranges
+// (mutable views must not overlap anything, shared views require
+// `T: Sync`), so sharing the handle across threads moves each `T` to
+// at most one writer at a time — exactly the `T: Send` contract.
+// Concurrent access is restricted to disjoint ranges by the
 // scheduler's partitioning invariant; `slice_mut` documents the
 // requirement.
 unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+// SAFETY: the handle owns no `T` storage (it borrows the caller's
+// slice), so sending it to another thread transfers only the right to
+// write `T` values there, which `T: Send` permits.
 unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
 
 impl<'a, T> DisjointMut<'a, T> {

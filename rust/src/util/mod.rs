@@ -4,11 +4,13 @@
 
 pub mod disjoint;
 pub mod json;
+pub mod ordered;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
 pub use disjoint::DisjointMut;
+pub use ordered::{LockRank, OrderedCondvar, OrderedMutex};
 pub use rng::Rng;
 
 /// Format a duration in engineer-friendly units.

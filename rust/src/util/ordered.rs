@@ -1,0 +1,406 @@
+//! Rank-ordered lock wrappers: deadlock freedom as a machine-checked
+//! runtime invariant.
+//!
+//! The scheduler's hot paths are Mutex/Condvar choreography spread over
+//! `sched::{executor,graph,session}`: coordinator-free `on_done`
+//! dispatch, policy re-picks mid-stint, cancellation racing completion.
+//! The classical way to make such a web deadlock-free is a *total lock
+//! order*: every lock carries a rank, and a thread may only acquire a
+//! lock of strictly higher rank than any lock it already holds. If
+//! every thread obeys that rule, a cycle of waiters is impossible.
+//!
+//! This module makes the rule executable:
+//!
+//! - [`LockRank`] — a named rank. The repo's declared order lives in
+//!   [`crate::sched::ranks`]; `tools/repolint` cross-checks the same
+//!   order syntactically (nested `.lock()` calls must go up-rank).
+//! - [`OrderedMutex`] / [`OrderedCondvar`] — drop-in `std::sync`
+//!   wrappers that keep a per-thread stack of held ranks and panic on a
+//!   rank inversion **under `debug_assertions` only**; in release builds
+//!   every check compiles away and the wrappers are zero-cost
+//!   pass-throughs to `std::sync::Mutex` / `Condvar`.
+//! - Waiting discipline: [`OrderedCondvar::wait`] additionally asserts
+//!   the waited lock is the *only* ranked lock the thread holds —
+//!   blocking on a condvar while holding a second ranked lock would
+//!   stall every thread that needs it, which is a deadlock in all but
+//!   name even when the rank order is respected.
+//!
+//! Because every existing test runs with `debug_assertions` on under
+//! `cargo test`, migrating a lock onto these wrappers turns the whole
+//! suite into a continuous check of the declared order.
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, LockResult, Mutex, MutexGuard, PoisonError};
+
+/// A named lock rank. Acquisition must be strictly up-rank: a thread
+/// holding a lock of rank `r` may only acquire locks of rank `> r`.
+/// Ranks are compared by number; the name only serves diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockRank {
+    pub rank: u16,
+    pub name: &'static str,
+}
+
+impl LockRank {
+    pub const fn new(rank: u16, name: &'static str) -> Self {
+        LockRank { rank, name }
+    }
+}
+
+impl fmt::Display for LockRank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}(rank {})", self.name, self.rank)
+    }
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks this thread currently holds, in acquisition order. The
+    /// up-rank rule keeps it sorted, so `last()` is the maximum.
+    static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Record an acquisition; panics on a rank inversion (debug only).
+#[inline]
+fn rank_acquire(rank: LockRank) {
+    #[cfg(debug_assertions)]
+    HELD.with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(top) = held.last() {
+            assert!(
+                rank.rank > top.rank,
+                "lock-rank inversion: acquiring {rank} while holding {top} \
+                 (held: {held:?}); see sched::ranks for the declared order"
+            );
+        }
+        held.push(rank);
+    });
+    #[cfg(not(debug_assertions))]
+    let _ = rank;
+}
+
+/// Record a release (debug only). Releases may come out of acquisition
+/// order (guards can be dropped early), so remove the newest matching
+/// entry rather than popping blindly.
+#[inline]
+fn rank_release(rank: LockRank) {
+    #[cfg(debug_assertions)]
+    HELD.with(|held| {
+        let mut held = held.borrow_mut();
+        let i = held
+            .iter()
+            .rposition(|r| r.rank == rank.rank)
+            .expect("released a rank this thread never recorded");
+        held.remove(i);
+    });
+    #[cfg(not(debug_assertions))]
+    let _ = rank;
+}
+
+/// Assert the thread is about to block on the condvar of `rank` while
+/// holding *only* that ranked lock (debug only).
+#[inline]
+fn rank_assert_lone_wait(rank: LockRank) {
+    #[cfg(debug_assertions)]
+    HELD.with(|held| {
+        let held = held.borrow();
+        assert!(
+            held.len() == 1 && held[0].rank == rank.rank,
+            "Condvar::wait on {rank} while holding {held:?}: a waiter \
+             must hold exactly the waited lock and nothing else"
+        );
+    });
+    #[cfg(not(debug_assertions))]
+    let _ = rank;
+}
+
+/// A `std::sync::Mutex` that carries a [`LockRank`] and enforces
+/// strictly up-rank acquisition per thread under `debug_assertions`.
+/// API mirrors `Mutex` for the subset the scheduler uses, so call
+/// sites keep the `.lock().unwrap()` poisoned-lock idiom.
+pub struct OrderedMutex<T: ?Sized> {
+    rank: LockRank,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub const fn new(rank: LockRank, value: T) -> Self {
+        OrderedMutex { rank, inner: Mutex::new(value) }
+    }
+
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+
+    /// Acquire the lock, checking the rank order first (debug only). A
+    /// poisoned inner mutex surfaces exactly as with `std::sync::Mutex`.
+    pub fn lock(&self) -> LockResult<OrderedMutexGuard<'_, T>> {
+        rank_acquire(self.rank);
+        match self.inner.lock() {
+            Ok(guard) => Ok(OrderedMutexGuard {
+                rank: self.rank,
+                guard: Some(guard),
+            }),
+            Err(poisoned) => Err(PoisonError::new(OrderedMutexGuard {
+                rank: self.rank,
+                guard: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        // No rank bookkeeping: consuming the mutex acquires nothing.
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Guard returned by [`OrderedMutex::lock`]; releases the rank record
+/// when dropped. The inner guard is held in an `Option` (same size —
+/// `MutexGuard` has a niche) solely so [`OrderedCondvar::wait`] can
+/// move it out without `unsafe` destructuring; it is `Some` for the
+/// guard's entire client-visible lifetime.
+pub struct OrderedMutexGuard<'a, T: ?Sized> {
+    rank: LockRank,
+    guard: Option<MutexGuard<'a, T>>,
+}
+
+impl<T: ?Sized> Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard holds its lock")
+    }
+}
+
+impl<T: ?Sized> DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard holds its lock")
+    }
+}
+
+impl<T: ?Sized> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // `None` only transiently inside `OrderedCondvar::wait`, which
+        // does its own release bookkeeping.
+        if self.guard.is_some() {
+            rank_release(self.rank);
+        }
+    }
+}
+
+/// A `std::sync::Condvar` paired with [`OrderedMutex`] guards. The
+/// rank record is parked while the thread is blocked in `wait` (the
+/// mutex is not held there) and restored on wake-up.
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> Self {
+        OrderedCondvar::new()
+    }
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> Self {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    /// Atomically release `guard`, block, and reacquire on wake-up.
+    /// Must be called from a predicate loop (spurious wake-ups are
+    /// possible — `tools/repolint` enforces the loop syntactically).
+    pub fn wait<'a, T>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+    ) -> LockResult<OrderedMutexGuard<'a, T>> {
+        let rank = guard.rank;
+        rank_assert_lone_wait(rank);
+        // Move the inner guard out (the emptied shell's Drop then skips
+        // its release) and park the rank record while blocked: the
+        // mutex is not held inside `Condvar::wait`, so the record must
+        // not claim it is.
+        let inner = guard
+            .guard
+            .take()
+            .expect("guard holds its lock until wait consumes it");
+        drop(guard);
+        rank_release(rank);
+        let result = self.inner.wait(inner);
+        rank_acquire(rank);
+        match result {
+            Ok(guard) => Ok(OrderedMutexGuard { rank, guard: Some(guard) }),
+            Err(poisoned) => Err(PoisonError::new(OrderedMutexGuard {
+                rank,
+                guard: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl fmt::Debug for OrderedCondvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("OrderedCondvar")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    const LOW: LockRank = LockRank::new(10, "test.low");
+    const HIGH: LockRank = LockRank::new(20, "test.high");
+
+    #[test]
+    fn up_rank_nesting_is_allowed() {
+        let low = OrderedMutex::new(LOW, 1u32);
+        let high = OrderedMutex::new(HIGH, 2u32);
+        let g1 = low.lock().unwrap();
+        let g2 = high.lock().unwrap();
+        assert_eq!(*g1 + *g2, 3);
+        drop(g2);
+        drop(g1);
+        // and again, to prove the records were released
+        let _g = low.lock().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_release_keeps_records_consistent() {
+        let low = OrderedMutex::new(LOW, ());
+        let high = OrderedMutex::new(HIGH, ());
+        let g1 = low.lock().unwrap();
+        let g2 = high.lock().unwrap();
+        drop(g1); // release the *older* record first
+        drop(g2);
+        let _g1 = low.lock().unwrap();
+        let _g2 = high.lock().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "release builds skip checks")]
+    fn down_rank_nesting_panics_in_debug() {
+        let low = OrderedMutex::new(LOW, ());
+        let high = OrderedMutex::new(HIGH, ());
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _g2 = high.lock().unwrap();
+            let _g1 = low.lock().unwrap(); // inversion: 10 under 20
+        }));
+        let msg = *result
+            .expect_err("rank inversion must panic under debug_assertions")
+            .downcast::<String>()
+            .unwrap();
+        assert!(msg.contains("lock-rank inversion"), "got: {msg}");
+        // The panic unwound the held guard, so this thread's rank
+        // records are clean again. (`high` is poisoned by the unwind —
+        // orthogonal to rank bookkeeping.) `low` itself was never
+        // locked: the check fires before the inner acquisition.
+        let _g2 = match high.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        drop(_g2);
+        let _g1 = low.lock().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "release builds skip checks")]
+    fn same_rank_nesting_panics_in_debug() {
+        // two *distinct* locks of equal rank still may not nest: the
+        // order between them is undeclared, which is how classic ABBA
+        // deadlocks happen.
+        let a = OrderedMutex::new(LOW, ());
+        let b = OrderedMutex::new(LOW, ());
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        }));
+        assert!(result.is_err(), "same-rank nesting must panic");
+    }
+
+    #[test]
+    fn condvar_wait_wakes_and_restores_the_record() {
+        let pair = Arc::new((OrderedMutex::new(LOW, false), OrderedCondvar::new()));
+        let woke = Arc::new(AtomicUsize::new(0));
+        let (p2, w2) = (Arc::clone(&pair), Arc::clone(&woke));
+        let waiter = std::thread::spawn(move || {
+            let (lock, cv) = &*p2;
+            let mut g = lock.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+            w2.fetch_add(1, Ordering::SeqCst);
+            // after the wait returns, the record must show the lock
+            // held: an up-rank acquisition is still legal...
+            drop(g);
+            // ...and after dropping, a fresh acquisition succeeds.
+            let _g = lock.lock().unwrap();
+        });
+        {
+            let (lock, cv) = &*pair;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        waiter.join().unwrap();
+        assert_eq!(woke.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "release builds skip checks")]
+    fn waiting_while_holding_a_second_lock_panics_in_debug() {
+        let low = OrderedMutex::new(LOW, ());
+        let high = OrderedMutex::new(HIGH, false);
+        let cv = OrderedCondvar::new();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _outer = low.lock().unwrap();
+            let g = high.lock().unwrap();
+            let _ = cv.wait(g); // would block holding `low` — forbidden
+        }));
+        assert!(result.is_err(), "lone-wait discipline must panic");
+    }
+
+    #[test]
+    fn poisoned_lock_still_releases_the_rank_record() {
+        let m = Arc::new(OrderedMutex::new(LOW, 7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        // this thread's record is untouched by the poisoner; the value
+        // is still reachable through the PoisonError
+        let g = m.lock();
+        let guard = match g {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        assert_eq!(*guard, 7);
+        drop(guard);
+        let _again = match m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+    }
+}

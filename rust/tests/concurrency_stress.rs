@@ -1,0 +1,173 @@
+//! Seeded stress test for the cross-job re-pick boundary under a
+//! cancellation storm, across all three tenancy policies.
+//!
+//! A worker re-evaluates its cross-job pick every
+//! [`POLICY_REPICK_STRIDE`] items, so the storm submits bursts of
+//! single-node graphs sized one item short of / exactly at / just past
+//! the stride (plus multiples), while a second thread cancels a seeded
+//! third of the handles mid-flight. The invariant under test is
+//! exactly-once execution: no item ever runs twice, a Completed node
+//! covered every item, and the pool keeps serving full-width jobs after
+//! every round. The schedule itself is nondeterministic — the *seeds*
+//! are fixed so the submitted workload and the cancel subset are
+//! reproducible.
+//!
+//! This suite is one of the two run under ThreadSanitizer in CI (see
+//! `.github/workflows/ci.yml`): the bodies are pure atomic traffic, so
+//! a data race in the executor's queue/pick/cancel paths is the only
+//! thing TSan can find here.
+
+#![cfg(not(miri))]
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use daphne_sched::config::SchedConfig;
+use daphne_sched::sched::{
+    Executor, GraphSpec, JobSpec, NodeSpec, NodeStatus, SubmitOpts,
+    TenancyPolicy, POLICY_REPICK_STRIDE,
+};
+use daphne_sched::topology::Topology;
+
+const ROUNDS: usize = 6;
+const JOBS_PER_ROUND: usize = 18;
+const WORKERS: usize = 4;
+
+/// xorshift64 — deterministic workload/cancel seeding without any
+/// wall-clock or OS entropy.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+/// A full-width job that completes only once every worker has entered
+/// it: hangs (failing by timeout) if a round leaked a slot or wedged a
+/// worker.
+fn all_workers_barrier(exec: &Executor) {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let seen: Arc<Mutex<HashSet<usize>>> = Arc::new(Mutex::new(HashSet::new()));
+    let (n, s) = (Arc::clone(&entered), Arc::clone(&seen));
+    let h = exec.submit(
+        JobSpec::new(WORKERS)
+            .named("barrier")
+            .with_config(SchedConfig::default()),
+        move |w, _r| {
+            s.lock().unwrap().insert(w);
+            n.fetch_add(1, Ordering::SeqCst);
+            while n.load(Ordering::SeqCst) < WORKERS {
+                std::thread::yield_now();
+            }
+        },
+    );
+    let report = h.wait();
+    assert_eq!(report.total_items(), WORKERS);
+    assert_eq!(seen.lock().unwrap().len(), WORKERS, "every worker served");
+}
+
+fn stress_policy(policy: TenancyPolicy, policy_idx: u64) {
+    let exec = Executor::new_with_policy(
+        Arc::new(Topology::symmetric("t4", 1, WORKERS, 1.0, 1.0)),
+        // per-item chunks on the central atomic queue: the preemption
+        // quantum is one item, so re-picks happen at the stride exactly
+        Arc::new(SchedConfig::fine_grained()),
+        policy,
+    );
+    let session = exec.session();
+    let s = POLICY_REPICK_STRIDE;
+    let sizes = [s - 1, s, s + 1, 2 * s, 3 * s + 1, 1];
+    let tags = ["etl", "dash", "adhoc"];
+
+    for round in 0..ROUNDS {
+        let mut rng = XorShift(
+            0x9E37_79B9_7F4A_7C15 ^ ((round as u64 + 1) << 8) ^ policy_idx,
+        );
+        let mut handles = Vec::new();
+        let mut trackers: Vec<(usize, Arc<Vec<AtomicUsize>>)> = Vec::new();
+        for j in 0..JOBS_PER_ROUND {
+            let size = sizes[(rng.next_u64() as usize) % sizes.len()];
+            let hits: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..size).map(|_| AtomicUsize::new(0)).collect());
+            let h2 = Arc::clone(&hits);
+            let spec = GraphSpec::new("stress").node(
+                NodeSpec::new("n", size),
+                move |_w, r| {
+                    for i in r.iter() {
+                        h2[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            let opts = SubmitOpts::new()
+                .tag(tags[j % tags.len()])
+                .priority((rng.next_u64() % 3) as i64)
+                .weight(1 + rng.next_u64() % 4);
+            let h = session.submit_graph(spec, opts).expect("valid spec");
+            handles.push(h);
+            trackers.push((size, hits));
+        }
+
+        // Cancel a seeded third of the round's graphs from a second
+        // thread, racing the workers mid-stint.
+        let cancel_seed = rng.next_u64() | 1;
+        std::thread::scope(|sc| {
+            let hs = &handles;
+            sc.spawn(move || {
+                let mut rng = XorShift(cancel_seed);
+                for h in hs.iter() {
+                    if rng.next_u64() % 3 == 0 {
+                        h.cancel();
+                    }
+                    std::thread::yield_now();
+                }
+            });
+        });
+
+        for (h, (size, hits)) in handles.into_iter().zip(trackers) {
+            let report = h.join();
+            let status = report.status("n").expect("node exists");
+            let ran: usize = hits.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+            for (i, a) in hits.iter().enumerate() {
+                assert!(
+                    a.load(Ordering::Relaxed) <= 1,
+                    "item {i} ran twice (policy {policy:?}, round {round})"
+                );
+            }
+            match status {
+                NodeStatus::Completed => assert_eq!(
+                    ran, size,
+                    "completed node missed items \
+                     (policy {policy:?}, round {round})"
+                ),
+                NodeStatus::Cancelled => assert!(ran <= size),
+                other => panic!(
+                    "unexpected terminal status {other:?} \
+                     (policy {policy:?}, round {round})"
+                ),
+            }
+        }
+        all_workers_barrier(&exec);
+    }
+}
+
+#[test]
+fn fifo_survives_a_repick_boundary_cancel_storm() {
+    stress_policy(TenancyPolicy::Fifo, 1);
+}
+
+#[test]
+fn fair_survives_a_repick_boundary_cancel_storm() {
+    stress_policy(TenancyPolicy::Fair, 2);
+}
+
+#[test]
+fn priority_survives_a_repick_boundary_cancel_storm() {
+    stress_policy(TenancyPolicy::Priority, 3);
+}

@@ -1,5 +1,9 @@
 //! Integration: the Fig. 5 distributed coordinator over localhost TCP.
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use std::net::TcpListener;
 
 use daphne_sched::apps::cc;

@@ -2,6 +2,10 @@
 //! lexer → parser → interpreter → VEE stack under non-default
 //! scheduling configurations.
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use std::collections::BTreeMap;
 
 use daphne_sched::config::SchedConfig;

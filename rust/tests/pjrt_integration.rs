@@ -7,6 +7,10 @@
 //! hangs, no panics), and GPU-class graph placement must degrade
 //! gracefully to the CPU pool with an annotated `NodeReport`.
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use daphne_sched::apps::{cc, linreg};
 use daphne_sched::config::SchedConfig;
 use daphne_sched::graph::{amazon_like, SnapGraph};

@@ -3,6 +3,10 @@
 //! and the DES placement oracle (accelerator wins on the modelled
 //! machines, autotuned placement beating the all-CPU baseline).
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};

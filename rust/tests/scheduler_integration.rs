@@ -5,6 +5,10 @@
 //! concurrent nodes), and the DES reproduces the paper's qualitative
 //! orderings at small scale.
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};

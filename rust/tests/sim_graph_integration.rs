@@ -5,6 +5,10 @@
 //! the modelled 56-core machine, and the apps' exported shapes agreeing
 //! with the pipelines they actually run.
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use std::sync::Arc;
 
 use daphne_sched::apps::{cc, linreg};

@@ -5,6 +5,10 @@
 //! queued tenants deterministically, and dropped handles neither
 //! deadlock the pool nor leak the job slot.
 
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};

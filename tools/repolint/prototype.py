@@ -1,0 +1,403 @@
+#!/usr/bin/env python3
+"""Reference prototype of tools/repolint (see src/main.rs).
+
+The Rust binary is the enforced implementation; this script mirrors its
+algorithm 1:1 so the rules can be exercised on the live tree without a
+Rust toolchain (the repo's standing no-local-toolchain caveat). Keep the
+two in sync when changing a rule.
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+UNSAFE_ALLOWLIST = {
+    "rust/src/util/disjoint.rs",
+    "rust/src/sched/executor.rs",
+    "rust/src/sched/graph.rs",
+    "rust/src/sched/session.rs",
+}
+
+RANK_FIELDS = {
+    "progress": "GRAPH_PROGRESS",
+    "jobs": "GRAPH_JOBS",
+    "pending": "SCOPE_PENDING",
+    "queue": "RUN_QUEUE",
+    "body": "JOB_BODY",
+    "panic": "JOB_PANIC",
+    "stats": "JOB_STATS",
+    "done": "JOB_DONE",
+    "on_done": "JOB_ON_DONE",
+}
+
+DISPATCH_PATH_FNS = {
+    "rust/src/sched/executor.rs": [
+        "worker_main", "pick_job", "run_job_stint", "flush_stats",
+        "complete_items", "finalize", "make_report", "publish_completion",
+        "abort_job", "drain_source", "cancel_job", "enqueue_raw",
+    ],
+    "rust/src/sched/graph.rs": [
+        "dispatch", "node_done", "record_done", "cancel_dependents",
+    ],
+}
+
+COMMENT_WINDOW = 14
+
+SIM_ALLOWED = {"sched", "config", "topology", "util", "sim"}
+
+
+def strip(src):
+    """Return (code_lines, comment_lines): comments and string/char
+    literal bodies blanked from code; comment text collected."""
+    code, comment = [], []
+    in_block = 0
+    raw_hashes = None
+    in_str = False
+    for line in src.split("\n"):
+        b = list(line)
+        cl, cm = [], []
+        i = 0
+        n = len(b)
+        while i < n:
+            c = b[i]
+            if in_block > 0:
+                if c == "*" and i + 1 < n and b[i + 1] == "/":
+                    in_block -= 1
+                    cl += [" ", " "]
+                    i += 2
+                elif c == "/" and i + 1 < n and b[i + 1] == "*":
+                    in_block += 1
+                    cl += [" ", " "]
+                    i += 2
+                else:
+                    cm.append(c)
+                    cl.append(" ")
+                    i += 1
+                continue
+            if raw_hashes is not None:
+                if c == '"' and b[i + 1:i + 1 + raw_hashes] == ["#"] * raw_hashes:
+                    cl += ['"'] + [" "] * raw_hashes
+                    i += 1 + raw_hashes
+                    raw_hashes = None
+                else:
+                    cl.append(" ")
+                    i += 1
+                continue
+            if in_str:
+                if c == "\\" and i + 1 < n:
+                    cl += [" ", " "]
+                    i += 2
+                elif c == '"':
+                    in_str = False
+                    cl.append('"')
+                    i += 1
+                else:
+                    cl.append(" ")
+                    i += 1
+                continue
+            if c == "/" and i + 1 < n and b[i + 1] == "/":
+                cm += b[i:]
+                break
+            if c == "/" and i + 1 < n and b[i + 1] == "*":
+                in_block = 1
+                cl += [" ", " "]
+                i += 2
+                continue
+            if c == '"':
+                in_str = True
+                cl.append('"')
+                i += 1
+                continue
+            if c == "r" and i + 1 < n and b[i + 1] in ('"', "#") \
+                    and (i == 0 or not (b[i - 1].isalnum() or b[i - 1] == "_")):
+                j = i + 1
+                h = 0
+                while j < n and b[j] == "#":
+                    h += 1
+                    j += 1
+                if j < n and b[j] == '"':
+                    raw_hashes = h
+                    cl += [" "] * (j + 1 - i)
+                    i = j + 1
+                    continue
+            if c == "'":
+                if i + 1 < n and b[i + 1] == "\\":
+                    j = i + 2
+                    if j < n:
+                        j += 1  # the escaped char
+                        while j < n and b[j] != "'":
+                            j += 1
+                    cl += ["'"] + [" "] * (j - i - 1) + ["'"]
+                    i = j + 1
+                    continue
+                if i + 2 < n and b[i + 2] == "'" and b[i + 1] != "'":
+                    cl += ["'", " ", "'"]
+                    i += 3
+                    continue
+                cl.append("'")
+                i += 1
+                continue
+            cl.append(c)
+            i += 1
+        code.append("".join(cl))
+        comment.append("".join(cm))
+    return code, comment
+
+
+def parse_ranks(path):
+    with open(path) as f:
+        code, _ = strip(f.read())
+    ranks = {}
+    pat = re.compile(r"pub const (\w+): LockRank = LockRank::new\((\d+),")
+    for line in code:
+        m = pat.search(line)
+        if m:
+            ranks[m.group(1)] = int(m.group(2))
+    return ranks
+
+
+def comment_block_above(comment, lnum, needle):
+    lo = max(0, lnum - COMMENT_WINDOW)
+    return any(needle in comment[j] for j in range(lo, lnum))
+
+
+def test_regions(code):
+    """Line spans (start, end) of #[cfg(test)] items, by brace matching."""
+    spans = []
+    i = 0
+    while i < len(code):
+        if code[i].strip().startswith("#[cfg(test)"):
+            depth = 0
+            started = False
+            j = i
+            while j < len(code):
+                for ch in code[j]:
+                    if ch == "{":
+                        depth += 1
+                        started = True
+                    elif ch == "}":
+                        depth -= 1
+                if started and depth <= 0:
+                    break
+                j += 1
+            spans.append((i, j))
+            i = j + 1
+        else:
+            i += 1
+    return spans
+
+
+def in_spans(spans, lnum):
+    return any(a <= lnum <= b for a, b in spans)
+
+
+IDENT = re.compile(r"[A-Za-z0-9_]")
+
+
+def recv_ident(code_line, lock_pos):
+    """Last identifier of the receiver chain before `.lock()`, with one
+    trailing index stripped (`job.stats[lw].lock()` -> `stats`)."""
+    i = lock_pos - 1
+    if i >= 0 and code_line[i] == "]":
+        depth = 1
+        i -= 1
+        while i >= 0 and depth > 0:
+            if code_line[i] == "]":
+                depth += 1
+            elif code_line[i] == "[":
+                depth -= 1
+            i -= 1
+    end = i + 1
+    while i >= 0 and IDENT.match(code_line[i]):
+        i -= 1
+    return code_line[i + 1:end]
+
+
+GUARD_LET = re.compile(r"^\s*let\s+(?:mut\s+)?(\w+)\s*=.*\.lock\(\)\.unwrap\(\);\s*$")
+DROP_CALL = re.compile(r"\bdrop\(\s*(\w+)\s*\)")
+FN_DEF = re.compile(r"\bfn\s+(\w+)")
+
+
+def fn_span(code, name):
+    """Body span of `fn name` (line of the def to its closing brace)."""
+    pat = re.compile(r"\bfn\s+" + re.escape(name) + r"\b")
+    for i, line in enumerate(code):
+        if pat.search(line):
+            depth = 0
+            started = False
+            j = i
+            while j < len(code):
+                for ch in code[j]:
+                    if ch == "{":
+                        depth += 1
+                        started = True
+                    elif ch == "}":
+                        depth -= 1
+                if started and depth <= 0:
+                    return (i, j)
+                j += 1
+    return None
+
+
+def lint_file(rel, src, ranks, findings):
+    code, comment = strip(src)
+    tspans = test_regions(code)
+
+    is_sched_core = rel in UNSAFE_ALLOWLIST
+
+    # --- unsafe / transmute comments + allowlist ---
+    for i, line in enumerate(code):
+        if re.search(r"\bunsafe\b", line):
+            if rel not in UNSAFE_ALLOWLIST:
+                findings.append((rel, i + 1, "unsafe-allowlist",
+                                 "`unsafe` outside the audited allowlist"))
+            elif not (comment_block_above(comment, i, "SAFETY:")
+                      or comment_block_above(comment, i, "SOUNDNESS:")):
+                findings.append((rel, i + 1, "unsafe-comment",
+                                 "`unsafe` without a SAFETY:/SOUNDNESS: comment"))
+        if re.search(r"\btransmute\b", line):
+            if rel not in UNSAFE_ALLOWLIST:
+                findings.append((rel, i + 1, "transmute-allowlist",
+                                 "`transmute` outside the audited allowlist"))
+            elif not comment_block_above(comment, i, "SOUNDNESS:"):
+                findings.append((rel, i + 1, "transmute-comment",
+                                 "`transmute` without a SOUNDNESS: comment"))
+
+    # --- lock-rank ordering (code view, whole tree) ---
+    depth = 0
+    held = []  # (rank, name, depth)
+    for i, line in enumerate(code):
+        if FN_DEF.search(line) and depth <= 1:
+            held = []
+        m = DROP_CALL.search(line)
+        if m:
+            held = [h for h in held if h[1] != m.group(1)]
+        for lm in re.finditer(r"\.lock\(\)", line):
+            ident = recv_ident(line, lm.start())
+            const = RANK_FIELDS.get(ident)
+            if const is None:
+                continue
+            rank = ranks[const]
+            for (hrank, hname, _) in held:
+                if rank <= hrank:
+                    findings.append((rel, i + 1, "lock-rank",
+                                     f"acquiring {const}({rank}) via `{ident}` while "
+                                     f"holding `{hname}` rank {hrank} inverts the "
+                                     "declared order"))
+            g = GUARD_LET.match(line)
+            if g:
+                held.append((rank, g.group(1), depth))
+        opens = line.count("{")
+        closes = line.count("}")
+        depth += opens - closes
+        held = [h for h in held if h[2] <= depth]
+
+    # --- condvar wait predicate loops ---
+    if rel != "rust/src/util/ordered.rs":
+        stack = []  # (keyword, ) parallel to brace depth
+        for i, line in enumerate(code):
+            t = line.strip()
+            m = re.search(r"\.wait\(\s*[^)\s]", line)
+            if m:
+                ok = False
+                for kw in reversed(stack):
+                    if kw == "fn":
+                        break
+                    if kw in ("while", "loop"):
+                        ok = True
+                        break
+                if not ok:
+                    findings.append((rel, i + 1, "condvar-predicate",
+                                     "`Condvar::wait` outside a predicate loop"))
+            first = True
+            for ch in line:
+                if ch == "{":
+                    if first:
+                        kw = "block"
+                        if re.search(r"\bfn\b", t):
+                            kw = "fn"
+                        elif re.search(r"\bwhile\b", t):
+                            kw = "while"
+                        elif re.search(r"\bloop\b", t):
+                            kw = "loop"
+                        stack.append(kw)
+                        first = False
+                    else:
+                        stack.append("block")
+                elif ch == "}":
+                    if stack:
+                        stack.pop()
+
+    # --- layering ---
+    if rel.startswith("rust/src/util/"):
+        for i, line in enumerate(code):
+            for m in re.finditer(r"crate::(\w+)", line):
+                if m.group(1) != "util":
+                    findings.append((rel, i + 1, "layering-util",
+                                     f"util must not import crate::{m.group(1)}"))
+    if rel.startswith("rust/src/sched/"):
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            for m in re.finditer(r"crate::(bench|apps)\b", line):
+                findings.append((rel, i + 1, "layering-sched",
+                                 f"sched must not import crate::{m.group(1)}"))
+    if rel.startswith("rust/src/sim/"):
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            for m in re.finditer(r"crate::(\w+)", line):
+                if m.group(1) not in SIM_ALLOWED:
+                    findings.append((rel, i + 1, "layering-sim",
+                                     f"sim may only use {sorted(SIM_ALLOWED)}, "
+                                     f"found crate::{m.group(1)}"))
+
+    # --- no unwrap/expect in the worker dispatch path ---
+    for fname in DISPATCH_PATH_FNS.get(rel, []):
+        span = fn_span(code, fname)
+        if span is None:
+            findings.append((rel, 1, "dispatch-unwrap",
+                             f"dispatch-path fn `{fname}` not found (update repolint)"))
+            continue
+        for i in range(span[0], span[1] + 1):
+            line = code[i]
+            for m in re.finditer(r"\.unwrap\(\)", line):
+                before = line[:m.start()].rstrip()
+                if before.endswith(".lock()") or re.search(r"\.wait\([^()]*\)$", before):
+                    continue
+                findings.append((rel, i + 1, "dispatch-unwrap",
+                                 f"`.unwrap()` in dispatch-path fn `{fname}` "
+                                 "outside the poisoned-lock idiom"))
+            if re.search(r"\.expect\(", line):
+                findings.append((rel, i + 1, "dispatch-unwrap",
+                                 f"`.expect(...)` in dispatch-path fn `{fname}`"))
+
+
+def main():
+    ranks = parse_ranks(os.path.join(ROOT, "rust/src/sched/ranks.rs"))
+    missing = [c for c in RANK_FIELDS.values() if c not in ranks]
+    if missing:
+        print(f"repolint: rank consts missing from ranks.rs: {missing}")
+        return 1
+    findings = []
+    roots = ["rust/src", "rust/tests", "rust/benches", "examples",
+             "tools/repolint/src"]
+    for top in roots:
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, top)):
+            dirnames[:] = [d for d in dirnames if d not in ("vendor", "target")]
+            for f in sorted(filenames):
+                if not f.endswith(".rs"):
+                    continue
+                p = os.path.join(dirpath, f)
+                rel = os.path.relpath(p, ROOT)
+                with open(p) as fh:
+                    lint_file(rel, fh.read(), ranks, findings)
+    for (rel, line, rule, msg) in findings:
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    print(f"repolint(prototype): {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1043 @@
+//! repolint — std-only static checks for this repository's concurrency
+//! and layering invariants. `tools/repolint/README.md` has the rule
+//! catalogue and rationale; `rust/src/sched/ranks.rs` declares the lock
+//! order that this tool cross-checks syntactically (the same order the
+//! `OrderedMutex` wrappers enforce dynamically in debug builds).
+//!
+//! The checker is line/token based, not a full parser: it first strips
+//! comments and string/char literals (structure preserving), then
+//! pattern-matches on the stripped "code view". That makes it heuristic
+//! by design — the rules are tuned so the current tree is clean and
+//! every seeded violation class is caught (see the unit tests).
+//! `prototype.py` next to this file is a 1:1 Python mirror runnable
+//! without a Rust toolchain; keep the two in sync.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files audited for (and therefore allowed to contain) `unsafe` and
+/// `transmute`. Everything else must stay safe Rust.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/util/disjoint.rs",
+    "rust/src/sched/executor.rs",
+    "rust/src/sched/graph.rs",
+    "rust/src/sched/session.rs",
+];
+
+/// Receiver field name -> rank const declared in
+/// `rust/src/sched/ranks.rs`. A `.lock()` whose receiver's last path
+/// segment is not in this table is ignored (unknown, unranked lock).
+const RANK_FIELDS: &[(&str, &str)] = &[
+    ("progress", "GRAPH_PROGRESS"),
+    ("jobs", "GRAPH_JOBS"),
+    ("pending", "SCOPE_PENDING"),
+    ("queue", "RUN_QUEUE"),
+    ("body", "JOB_BODY"),
+    ("panic", "JOB_PANIC"),
+    ("stats", "JOB_STATS"),
+    ("done", "JOB_DONE"),
+    ("on_done", "JOB_ON_DONE"),
+];
+
+/// Functions on the worker dispatch path. A panic in one of these
+/// unwinds a worker thread (and can poison the run queue for every
+/// later submitter), so `.unwrap()` / `.expect(` are banned there
+/// outside the poisoned-lock idiom (`.lock().unwrap()` /
+/// `.wait(g).unwrap()`). The list is exhaustive on purpose: a missing
+/// function is itself an error, so renames keep the lint honest.
+const DISPATCH_PATH_FNS: &[(&str, &[&str])] = &[
+    (
+        "rust/src/sched/executor.rs",
+        &[
+            "worker_main",
+            "pick_job",
+            "run_job_stint",
+            "flush_stats",
+            "complete_items",
+            "finalize",
+            "make_report",
+            "publish_completion",
+            "abort_job",
+            "drain_source",
+            "cancel_job",
+            "enqueue_raw",
+        ],
+    ),
+    (
+        "rust/src/sched/graph.rs",
+        &["dispatch", "node_done", "record_done", "cancel_dependents"],
+    ),
+];
+
+/// Crate-internal roots `sim` may import from (plus itself): the DES
+/// consumes the scheduler's public surface, never `bench`/`apps`.
+const SIM_ALLOWED: &[&str] = &["sched", "config", "topology", "util", "sim"];
+
+/// How many lines above an `unsafe`/`transmute` the justifying comment
+/// may sit. Multi-line `let` bindings put statement fragments between
+/// the comment block and the keyword, so strict adjacency is too rigid.
+const COMMENT_WINDOW: usize = 14;
+
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+/// Per-line views of a source file: `code` has comments and
+/// string/char-literal *bodies* blanked out (structure preserved, and
+/// non-ASCII replaced by spaces so byte offsets equal char offsets);
+/// `comment` collects the comment text of each line.
+struct Stripped {
+    code: Vec<String>,
+    comment: Vec<String>,
+}
+
+fn strip(src: &str) -> Stripped {
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut block_depth = 0usize;
+    let mut raw_hashes: Option<usize> = None;
+    let mut in_str = false;
+    for line in src.lines() {
+        let b: Vec<char> = line.chars().collect();
+        let n = b.len();
+        let mut cl = String::new();
+        let mut cm = String::new();
+        let mut i = 0;
+        while i < n {
+            let c = b[i];
+            if block_depth > 0 {
+                if c == '*' && b.get(i + 1) == Some(&'/') {
+                    block_depth -= 1;
+                    cl.push_str("  ");
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    block_depth += 1;
+                    cl.push_str("  ");
+                    i += 2;
+                } else {
+                    cm.push(c);
+                    cl.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if let Some(h) = raw_hashes {
+                let closes = c == '"'
+                    && i + h < n
+                    && b[i + 1..i + 1 + h].iter().all(|&x| x == '#');
+                if closes {
+                    cl.push('"');
+                    for _ in 0..h {
+                        cl.push(' ');
+                    }
+                    i += 1 + h;
+                    raw_hashes = None;
+                } else {
+                    cl.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if in_str {
+                if c == '\\' && i + 1 < n {
+                    cl.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    in_str = false;
+                    cl.push('"');
+                    i += 1;
+                } else {
+                    cl.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if c == '/' && b.get(i + 1) == Some(&'/') {
+                for &x in &b[i..] {
+                    cm.push(x);
+                }
+                break;
+            }
+            if c == '/' && b.get(i + 1) == Some(&'*') {
+                block_depth = 1;
+                cl.push_str("  ");
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                in_str = true;
+                cl.push('"');
+                i += 1;
+                continue;
+            }
+            let prev_word = i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == '_');
+            if c == 'r' && !prev_word {
+                let mut j = i + 1;
+                let mut h = 0;
+                while j < n && b[j] == '#' {
+                    h += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    raw_hashes = Some(h);
+                    for _ in i..=j {
+                        cl.push(' ');
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+            if c == '\'' {
+                if b.get(i + 1) == Some(&'\\') {
+                    // Escaped char literal: '\n', '\'', '\u{1F600}'.
+                    let mut j = i + 2;
+                    if j < n {
+                        j += 1;
+                    }
+                    while j < n && b[j] != '\'' {
+                        j += 1;
+                    }
+                    cl.push('\'');
+                    for _ in 0..j.saturating_sub(i + 1) {
+                        cl.push(' ');
+                    }
+                    cl.push('\'');
+                    i = j + 1;
+                    continue;
+                }
+                // 'x' is a char literal; 'static / 'a / 'outer are not.
+                if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                    cl.push_str("' '");
+                    i += 3;
+                    continue;
+                }
+                cl.push('\'');
+                i += 1;
+                continue;
+            }
+            cl.push(if c.is_ascii() { c } else { ' ' });
+            i += 1;
+        }
+        code.push(cl);
+        comment.push(cm);
+    }
+    Stripped { code, comment }
+}
+
+fn is_word(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of word-boundary-delimited occurrences of `word`.
+fn find_word(line: &str, word: &str) -> Vec<usize> {
+    let lb = line.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_word(lb[at - 1]);
+        let after_ok = end >= lb.len() || !is_word(lb[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = end;
+    }
+    out
+}
+
+/// Byte offsets of every occurrence of literal substring `pat`.
+fn find_all(line: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(pat) {
+        out.push(from + p);
+        from += p + pat.len();
+    }
+    out
+}
+
+/// Identifier starting at byte offset `at`.
+fn ident_at(line: &str, at: usize) -> &str {
+    let b = line.as_bytes();
+    let mut e = at;
+    while e < b.len() && is_word(b[e]) {
+        e += 1;
+    }
+    &line[at..e]
+}
+
+/// Last identifier of the receiver chain before a `.lock()` at byte
+/// offset `lock_pos`, skipping one trailing `[...]` index — so
+/// `job.stats[lw].lock()` yields `stats`, `queues[q].lock()` `queues`.
+fn recv_ident(line: &str, lock_pos: usize) -> &str {
+    let b = line.as_bytes();
+    let mut i = lock_pos;
+    if i > 0 && b[i - 1] == b']' {
+        let mut depth = 1;
+        i -= 1;
+        while i > 0 && depth > 0 {
+            i -= 1;
+            match b[i] {
+                b']' => depth += 1,
+                b'[' => depth -= 1,
+                _ => {}
+            }
+        }
+    }
+    let end = i;
+    while i > 0 && is_word(b[i - 1]) {
+        i -= 1;
+    }
+    &line[i..end]
+}
+
+/// `let [mut] NAME = <recv>.lock().unwrap();` -> Some(NAME). Only this
+/// exact shape binds a tracked guard; every other `.lock()` is treated
+/// as transient (checked against held ranks but not recorded).
+fn guard_let_name(line: &str) -> Option<&str> {
+    let t = line.trim();
+    if !t.ends_with(".lock().unwrap();") {
+        return None;
+    }
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let b = rest.as_bytes();
+    let mut e = 0;
+    while e < b.len() && is_word(b[e]) {
+        e += 1;
+    }
+    if e == 0 {
+        return None;
+    }
+    if !rest[e..].trim_start().starts_with('=') {
+        return None;
+    }
+    Some(&rest[..e])
+}
+
+/// `drop(NAME)` with a plain identifier -> Some(NAME).
+fn drop_name(line: &str) -> Option<String> {
+    for at in find_word(line, "drop") {
+        let rest = line[at + 4..].trim_start();
+        let Some(inner) = rest.strip_prefix('(') else {
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            continue;
+        };
+        let name = inner[..close].trim();
+        if !name.is_empty() && name.bytes().all(is_word) {
+            return Some(name.to_string());
+        }
+    }
+    None
+}
+
+/// Does `before` end with a `.wait(...)` call (no nested parens)?
+fn ends_with_wait_call(before: &str) -> bool {
+    let Some(stripped) = before.strip_suffix(')') else {
+        return false;
+    };
+    let Some(open) = stripped.rfind('(') else {
+        return false;
+    };
+    stripped[..open].ends_with(".wait")
+}
+
+/// Last line of the brace-delimited item opening at/after `start`.
+fn item_end(code: &[String], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut started = false;
+    let mut j = start;
+    while j < code.len() {
+        for c in code[j].bytes() {
+            match c {
+                b'{' => {
+                    depth += 1;
+                    started = true;
+                }
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            return j;
+        }
+        j += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Line spans of `#[cfg(test)]` items (attribute line to closing brace).
+fn test_regions(code: &[String]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if code[i].trim_start().starts_with("#[cfg(test)") {
+            let j = item_end(code, i);
+            spans.push((i, j));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], lnum: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= lnum && lnum <= b)
+}
+
+/// Body span of `fn name` (definition line to its closing brace).
+fn fn_span(code: &[String], name: &str) -> Option<(usize, usize)> {
+    for (i, line) in code.iter().enumerate() {
+        let hit = find_word(line, "fn").iter().any(|&p| {
+            let rest = line[p + 2..].trim_start();
+            rest.starts_with(name) && !is_word(*rest.as_bytes().get(name.len()).unwrap_or(&b' '))
+        });
+        if hit {
+            return Some((i, item_end(code, i)));
+        }
+    }
+    None
+}
+
+/// Any comment line within `COMMENT_WINDOW` lines above `lnum`
+/// containing `needle`.
+fn comment_above(comment: &[String], lnum: usize, needle: &str) -> bool {
+    let lo = lnum.saturating_sub(COMMENT_WINDOW);
+    comment[lo..lnum].iter().any(|c| c.contains(needle))
+}
+
+/// Parse `pub const NAME: LockRank = LockRank::new(N, ...)` pairs out
+/// of `ranks.rs` source, in declaration order.
+fn parse_ranks(src: &str) -> Vec<(String, u32)> {
+    let s = strip(src);
+    let mut out = Vec::new();
+    for line in &s.code {
+        let Some(cpos) = line.find("const ") else {
+            continue;
+        };
+        let Some(npos) = line.find("LockRank::new(") else {
+            continue;
+        };
+        let name = ident_at(line, cpos + 6);
+        let digits: String = line[npos + 14..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let (false, Ok(v)) = (name.is_empty(), digits.parse::<u32>()) {
+            out.push((name.to_string(), v));
+        }
+    }
+    out
+}
+
+fn lint_file(rel: &str, src: &str, ranks: &[(String, u32)], out: &mut Vec<Finding>) {
+    let s = strip(src);
+    let tspans = test_regions(&s.code);
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&rel);
+
+    // -- unsafe / transmute: allowlist + justifying comment --
+    for (i, line) in s.code.iter().enumerate() {
+        if !find_word(line, "unsafe").is_empty() {
+            if !allowlisted {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "unsafe-allowlist",
+                    msg: "`unsafe` outside the audited allowlist".to_string(),
+                });
+            } else if !comment_above(&s.comment, i, "SAFETY:")
+                && !comment_above(&s.comment, i, "SOUNDNESS:")
+            {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "unsafe-comment",
+                    msg: "`unsafe` without a SAFETY:/SOUNDNESS: comment".to_string(),
+                });
+            }
+        }
+        if !find_word(line, "transmute").is_empty() {
+            if !allowlisted {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "transmute-allowlist",
+                    msg: "`transmute` outside the audited allowlist".to_string(),
+                });
+            } else if !comment_above(&s.comment, i, "SOUNDNESS:") {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "transmute-comment",
+                    msg: "`transmute` without a SOUNDNESS: comment".to_string(),
+                });
+            }
+        }
+    }
+
+    // -- lock-rank ordering (whole tree; unknown receivers ignored) --
+    let rank_of = |ident: &str| -> Option<(&'static str, u32)> {
+        let (_, cname) = RANK_FIELDS.iter().find(|(f, _)| *f == ident)?;
+        let (_, v) = ranks.iter().find(|(n, _)| n == cname)?;
+        Some((*cname, *v))
+    };
+    let mut depth = 0i32;
+    let mut held: Vec<(u32, String, i32)> = Vec::new();
+    for (i, line) in s.code.iter().enumerate() {
+        if !find_word(line, "fn").is_empty() && depth <= 1 {
+            held.clear();
+        }
+        if let Some(name) = drop_name(line) {
+            held.retain(|h| h.1 != name);
+        }
+        for lp in find_all(line, ".lock()") {
+            let ident = recv_ident(line, lp);
+            let Some((cname, rank)) = rank_of(ident) else {
+                continue;
+            };
+            for (hrank, hname, _) in &held {
+                if rank <= *hrank {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "lock-rank",
+                        msg: format!(
+                            "acquiring {cname}({rank}) via `{ident}` while \
+                             holding `{hname}` rank {hrank} inverts the \
+                             declared order"
+                        ),
+                    });
+                }
+            }
+            if let Some(g) = guard_let_name(line) {
+                held.push((rank, g.to_string(), depth));
+            }
+        }
+        let opens = line.bytes().filter(|&c| c == b'{').count() as i32;
+        let closes = line.bytes().filter(|&c| c == b'}').count() as i32;
+        depth += opens - closes;
+        held.retain(|h| h.2 <= depth);
+    }
+
+    // -- Condvar::wait must sit inside a predicate loop --
+    // (ordered.rs is the wrapper implementation, hence exempt.)
+    if rel != "rust/src/util/ordered.rs" {
+        let mut stack: Vec<&'static str> = Vec::new();
+        for (i, line) in s.code.iter().enumerate() {
+            let has_arg_wait = find_all(line, ".wait(").iter().any(|&p| {
+                matches!(
+                    line[p + 6..].trim_start().bytes().next(),
+                    Some(c) if c != b')'
+                )
+            });
+            if has_arg_wait {
+                let mut ok = false;
+                for kw in stack.iter().rev() {
+                    match *kw {
+                        "fn" => break,
+                        "while" | "loop" => {
+                            ok = true;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                if !ok {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "condvar-predicate",
+                        msg: "`Condvar::wait` outside a predicate loop".to_string(),
+                    });
+                }
+            }
+            let t = line.trim();
+            let mut first = true;
+            for c in line.bytes() {
+                match c {
+                    b'{' => {
+                        let kw = if first {
+                            first = false;
+                            if !find_word(t, "fn").is_empty() {
+                                "fn"
+                            } else if !find_word(t, "while").is_empty() {
+                                "while"
+                            } else if !find_word(t, "loop").is_empty() {
+                                "loop"
+                            } else {
+                                "block"
+                            }
+                        } else {
+                            "block"
+                        };
+                        stack.push(kw);
+                    }
+                    b'}' => {
+                        stack.pop();
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    // -- module layering --
+    if rel.starts_with("rust/src/util/") {
+        for (i, line) in s.code.iter().enumerate() {
+            for p in find_all(line, "crate::") {
+                let seg = ident_at(line, p + 7);
+                if !seg.is_empty() && seg != "util" {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-util",
+                        msg: format!("util must not import crate::{seg}"),
+                    });
+                }
+            }
+        }
+    }
+    if rel.starts_with("rust/src/sched/") {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            for p in find_all(line, "crate::") {
+                let seg = ident_at(line, p + 7);
+                if seg == "bench" || seg == "apps" {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-sched",
+                        msg: format!("sched must not import crate::{seg}"),
+                    });
+                }
+            }
+        }
+    }
+    if rel.starts_with("rust/src/sim/") {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            for p in find_all(line, "crate::") {
+                let seg = ident_at(line, p + 7);
+                if !seg.is_empty() && !SIM_ALLOWED.contains(&seg) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-sim",
+                        msg: format!(
+                            "sim may only use {SIM_ALLOWED:?}, found crate::{seg}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // -- no unwrap/expect on the worker dispatch path --
+    for (file, fns) in DISPATCH_PATH_FNS {
+        if *file != rel {
+            continue;
+        }
+        for fname in *fns {
+            let Some((a, b)) = fn_span(&s.code, fname) else {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: 1,
+                    rule: "dispatch-unwrap",
+                    msg: format!(
+                        "dispatch-path fn `{fname}` not found (update repolint)"
+                    ),
+                });
+                continue;
+            };
+            for i in a..=b {
+                let line = &s.code[i];
+                for p in find_all(line, ".unwrap()") {
+                    let before = line[..p].trim_end();
+                    if before.ends_with(".lock()") || ends_with_wait_call(before)
+                    {
+                        continue;
+                    }
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "dispatch-unwrap",
+                        msg: format!(
+                            "`.unwrap()` in dispatch-path fn `{fname}` \
+                             outside the poisoned-lock idiom"
+                        ),
+                    });
+                }
+                if !find_all(line, ".expect(").is_empty() {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "dispatch-unwrap",
+                        msg: format!(
+                            "`.expect(...)` in dispatch-path fn `{fname}`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            let name = entry.file_name();
+            if name == "vendor" || name == "target" {
+                continue;
+            }
+            collect(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    // tools/repolint -> tools -> repo root. The lint always runs via
+    // `cargo run -p repolint` on the machine that compiled it, so the
+    // compile-time manifest path is the right anchor.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("manifest dir has a grandparent")
+        .to_path_buf();
+    let ranks_src = match fs::read_to_string(root.join("rust/src/sched/ranks.rs")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("repolint: cannot read rust/src/sched/ranks.rs: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let ranks = parse_ranks(&ranks_src);
+    for (_, cname) in RANK_FIELDS {
+        if !ranks.iter().any(|(n, _)| n == cname) {
+            eprintln!("repolint: rank const `{cname}` missing from ranks.rs");
+            return ExitCode::FAILURE;
+        }
+    }
+
+    let mut files = Vec::new();
+    for top in [
+        "rust/src",
+        "rust/tests",
+        "rust/benches",
+        "examples",
+        "tools/repolint/src",
+    ] {
+        collect(&root.join(top), &mut files);
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    for p in &files {
+        let rel = p
+            .strip_prefix(&root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        match fs::read_to_string(p) {
+            Ok(src) => lint_file(&rel, &src, &ranks, &mut findings),
+            Err(e) => eprintln!("repolint: skipping {rel}: {e}"),
+        }
+    }
+
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    if findings.is_empty() {
+        println!("repolint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("repolint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_ranks() -> Vec<(String, u32)> {
+        RANK_FIELDS
+            .iter()
+            .enumerate()
+            .map(|(i, (_, c))| (c.to_string(), (i as u32 + 1) * 10))
+            .collect()
+    }
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let mut out = Vec::new();
+        lint_file(rel, src, &test_ranks(), &mut out);
+        out
+    }
+
+    fn rules(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn strip_blanks_string_and_char_literals() {
+        let s = strip(
+            "let c = '\"'; let s = \"unsafe .lock()\"; // SAFETY: note",
+        );
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(!s.code[0].contains(".lock()"));
+        assert!(s.code[0].contains("let s ="));
+        assert!(s.comment[0].contains("SAFETY:"));
+    }
+
+    #[test]
+    fn strip_keeps_lifetimes_and_blanks_raw_strings() {
+        let s = strip("fn f<'a>(x: &'a str) { let r = r#\"transmute\"#; }");
+        assert!(s.code[0].contains("<'a>"));
+        assert!(!s.code[0].contains("transmute"));
+    }
+
+    #[test]
+    fn strip_tracks_block_comments_across_lines() {
+        let s = strip("/* unsafe\n   transmute */ fn ok() {}");
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(!s.code[1].contains("transmute"));
+        assert!(s.code[1].contains("fn ok()"));
+        assert!(s.comment[0].contains("unsafe"));
+    }
+
+    #[test]
+    fn unsafe_and_transmute_outside_allowlist_are_flagged() {
+        let src = r#"
+pub fn f(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+pub fn g(x: u64) -> f64 {
+    unsafe { std::mem::transmute(x) }
+}
+"#;
+        let f = run("rust/src/apps/x.rs", src);
+        assert_eq!(
+            rules(&f),
+            vec!["unsafe-allowlist", "unsafe-allowlist", "transmute-allowlist"]
+        );
+    }
+
+    #[test]
+    fn transmute_in_identifier_is_not_flagged() {
+        let f = run("rust/src/apps/x.rs", "fn do_not_transmute_me() {}\n");
+        assert!(f.is_empty(), "{:?}", rules(&f));
+    }
+
+    #[test]
+    fn allowlisted_unsafe_needs_a_justifying_comment() {
+        let bad = "pub fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+        let f = run("rust/src/sched/session.rs", bad);
+        assert_eq!(rules(&f), vec!["unsafe-comment"]);
+
+        let good = "// SAFETY: caller guarantees p is live.\n\
+                    pub fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+        assert!(run("rust/src/sched/session.rs", good).is_empty());
+    }
+
+    #[test]
+    fn transmute_needs_soundness_not_just_safety() {
+        let src = "// SAFETY: fine.\n\
+                   fn g(x: u64) -> f64 { unsafe { std::mem::transmute(x) } }\n";
+        let f = run("rust/src/sched/session.rs", src);
+        assert_eq!(rules(&f), vec!["transmute-comment"]);
+    }
+
+    #[test]
+    fn lock_rank_inversion_is_flagged() {
+        let src = r#"
+fn inverted(job: &Job, run: &GraphRun) {
+    let b = job.body.lock().unwrap();
+    let p = run.progress.lock().unwrap();
+    drop(p);
+    drop(b);
+}
+"#;
+        let f = run("rust/src/sched/queue.rs", src);
+        assert_eq!(rules(&f), vec!["lock-rank"]);
+        assert!(f[0].msg.contains("GRAPH_PROGRESS"));
+    }
+
+    #[test]
+    fn declared_order_nesting_is_clean() {
+        let src = r#"
+fn fine(run: &GraphRun, job: &Job) {
+    let p = run.progress.lock().unwrap();
+    let b = job.body.lock().unwrap();
+    drop(b);
+    drop(p);
+}
+"#;
+        assert!(run("rust/src/sched/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn dropped_guard_frees_its_rank() {
+        let src = r#"
+fn sequential(job: &Job, run: &GraphRun) {
+    let b = job.body.lock().unwrap();
+    drop(b);
+    let p = run.progress.lock().unwrap();
+    drop(p);
+}
+"#;
+        assert!(run("rust/src/sched/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn block_scoped_guard_is_released_at_block_end() {
+        let src = r#"
+fn scoped(job: &Job, run: &GraphRun) {
+    {
+        let b = job.body.lock().unwrap();
+        b.take();
+    }
+    let p = run.progress.lock().unwrap();
+    drop(p);
+}
+"#;
+        assert!(run("rust/src/sched/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unknown_lock_receivers_are_ignored() {
+        let src = r#"
+fn other(queues: &[Mutex<u32>], q: usize) {
+    let a = queues[q].lock().unwrap();
+    let b = self.inner.lock().unwrap();
+}
+"#;
+        assert!(run("rust/src/sched/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn condvar_wait_requires_a_predicate_loop() {
+        let bad = r#"
+fn waits(m: &Mutex<bool>, cv: &Condvar) {
+    let g = m.lock().unwrap();
+    let _g = cv.wait(g).unwrap();
+}
+"#;
+        let f = run("rust/src/apps/x.rs", bad);
+        assert_eq!(rules(&f), vec!["condvar-predicate"]);
+
+        let good = r#"
+fn waits(m: &Mutex<Option<u32>>, cv: &Condvar) {
+    let mut g = m.lock().unwrap();
+    while g.is_none() {
+        g = cv.wait(g).unwrap();
+    }
+}
+"#;
+        assert!(run("rust/src/apps/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn zero_arg_wait_is_not_a_condvar_wait() {
+        let src = "fn f(h: JobHandle) { let _r = h.wait(); }\n";
+        assert!(run("rust/src/apps/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn util_may_not_import_other_crate_modules() {
+        let src = "use crate::sched::Executor;\nuse crate::util::rng::Rng;\n";
+        let f = run("rust/src/util/x.rs", src);
+        assert_eq!(rules(&f), vec!["layering-util"]);
+    }
+
+    #[test]
+    fn sched_may_use_bench_only_under_cfg_test() {
+        let src = r#"
+use crate::config::SchedConfig;
+
+#[cfg(test)]
+mod tests {
+    use crate::bench::harness;
+}
+"#;
+        assert!(run("rust/src/sched/autotune.rs", src).is_empty());
+
+        let bad = "use crate::bench::harness;\n";
+        let f = run("rust/src/sched/autotune.rs", bad);
+        assert_eq!(rules(&f), vec!["layering-sched"]);
+    }
+
+    #[test]
+    fn sim_is_limited_to_the_scheduler_surface() {
+        let src = "use crate::sched::Executor;\nuse crate::bench::harness;\n";
+        let f = run("rust/src/sim/x.rs", src);
+        assert_eq!(rules(&f), vec!["layering-sim"]);
+    }
+
+    #[test]
+    fn dispatch_path_bans_unwrap_and_expect() {
+        let src = r#"
+fn dispatch(items: &[u32]) {
+    let v = items.first().unwrap();
+    let g = run.progress.lock().unwrap();
+    let r = report.clone().expect("published");
+}
+fn node_done() {}
+fn record_done() {}
+fn cancel_dependents() {}
+"#;
+        let f = run("rust/src/sched/graph.rs", src);
+        assert_eq!(rules(&f), vec!["dispatch-unwrap", "dispatch-unwrap"]);
+    }
+
+    #[test]
+    fn poisoned_lock_idiom_is_allowed_on_the_dispatch_path() {
+        let src = r#"
+fn dispatch(shared: &Shared) {
+    loop {
+        let mut q = shared.queue.lock().unwrap();
+        q = shared.work_cv.wait(q).unwrap();
+        drop(q);
+    }
+}
+fn node_done() {}
+fn record_done() {}
+fn cancel_dependents() {}
+"#;
+        assert!(run("rust/src/sched/graph.rs", src).is_empty());
+    }
+
+    #[test]
+    fn missing_dispatch_fn_is_itself_an_error() {
+        let src = "fn dispatch() {}\nfn node_done() {}\nfn record_done() {}\n";
+        let f = run("rust/src/sched/graph.rs", src);
+        assert_eq!(rules(&f), vec!["dispatch-unwrap"]);
+        assert!(f[0].msg.contains("cancel_dependents"));
+    }
+
+    #[test]
+    fn parse_ranks_reads_declaration_order() {
+        let src = "pub const A_LOCK: LockRank = LockRank::new(10, \"a\");\n\
+                   pub const B_LOCK: LockRank = LockRank::new(20, \"b\");\n";
+        assert_eq!(
+            parse_ranks(src),
+            vec![("A_LOCK".to_string(), 10), ("B_LOCK".to_string(), 20)]
+        );
+    }
+}
