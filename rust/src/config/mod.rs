@@ -378,6 +378,12 @@ impl RunConfig {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
+
+    /// String workload parameter with default (e.g. the serve
+    /// subcommand's `admission=open|bounded|shed` key).
+    pub fn param_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.params.get(key).map(String::as_str).unwrap_or(default)
+    }
 }
 
 /// Emits the `key = value` line format accepted by
@@ -428,6 +434,29 @@ mod tests {
         assert_eq!(cfg.topology.n_cores(), 20);
         assert_eq!(cfg.sched.seed, 7);
         assert_eq!(cfg.param_usize("rows", 0), 100_000);
+    }
+
+    #[test]
+    fn serve_keys_flow_through_params() {
+        // the serve subcommand's keys ride the free-form param map
+        let cfg = RunConfig::from_pairs([
+            "qps=800",
+            "duration=2.5",
+            "slo_ms=10",
+            "admission=bounded",
+            "max_backlog=32",
+        ])
+        .unwrap();
+        assert_eq!(cfg.param_f64("qps", 0.0), 800.0);
+        assert_eq!(cfg.param_f64("duration", 0.0), 2.5);
+        assert_eq!(cfg.param_f64("slo_ms", 0.0), 10.0);
+        assert_eq!(cfg.param_str("admission", "open"), "bounded");
+        assert_eq!(cfg.param_str("missing", "open"), "open");
+        assert_eq!(cfg.param_usize("max_backlog", 0), 32);
+        // and round-trip through the Display text format
+        let back = RunConfig::from_text(&cfg.to_string()).unwrap();
+        assert_eq!(back.param_str("admission", ""), "bounded");
+        assert_eq!(back.param_f64("qps", 0.0), 800.0);
     }
 
     #[test]

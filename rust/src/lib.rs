@@ -86,6 +86,12 @@
 //! - [`apps`] — the two evaluated IDA pipelines: connected components
 //!   (Listing 1) and linear-regression training (Listing 2), each with a
 //!   `run_with(&Vee, ..)` entry point for pool reuse across runs.
+//! - [`serve`] — open-loop request serving on top of [`sched::Session`]:
+//!   a seeded arrival trace of small request graphs (linreg inference,
+//!   cc queries) at a target QPS over batch tenants, with per-request
+//!   [`sched::AdmissionPolicy`] admission (`Open`/`Bounded`/`Shed`),
+//!   streaming latency reservoirs, and SLO attainment reporting; the
+//!   DES mirror is [`sim::serve`] (CLI `serve`, `figure serve`).
 
 pub mod apps;
 pub mod bench;
@@ -96,6 +102,7 @@ pub mod graph;
 pub mod matrix;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod topology;
 pub mod util;

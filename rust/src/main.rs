@@ -5,11 +5,18 @@
 //! ```text
 //! run        run an app natively on this host      (cc | linreg)
 //! dsl        run a DaphneDSL script file
+//! serve      open-loop request serving soak on this host: a stream of
+//!            small request graphs (linreg inference | cc queries) at a
+//!            target QPS over batch tenants, with per-request admission
+//!            (`admission=open|bounded|shed`), SLO attainment and
+//!            p50/p99/p999 reporting
 //! figure     regenerate a paper figure on a modelled machine (DES);
 //!            `figure dag` is the dag-vs-barrier graph-replay figure,
 //!            `figure hetero` the placement any|pinned|auto comparison,
 //!            `figure tenancy` the fifo|fair|priority multi-tenant
-//!            policy comparison under bursty arrivals
+//!            policy comparison under bursty arrivals,
+//!            `figure serve` the open-loop serving prediction (attained
+//!            QPS and tail latency per policy × admission setting)
 //! ablation   §4/§5 ablations (ss | atomic)
 //! calibrate  measure the DES cost-model constants on this host
 //! tune       automatic config selection via the DES oracle;
@@ -32,7 +39,11 @@
 //! (tenant arrival pattern of `figure tenancy`),
 //! `placement=any|pinned|auto` (device-pool policy for the
 //! heterogeneous pipeline), plus app parameters like `nodes=`,
-//! `scale=`, `rows=`, `cols=`.
+//! `scale=`, `rows=`, `cols=`. The `serve` soak adds `qps=`,
+//! `duration=`, `warmup=`, `slo_ms=`, `admission=open|bounded|shed`,
+//! `max_backlog=`, `deadline_ms=`, `est_cost_ms=`,
+//! `requests=linreg|cc`, `work=` and `batch=` (all riding the
+//! free-form parameter map).
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -62,7 +73,7 @@ fn main() -> ExitCode {
 }
 
 fn usage() -> String {
-    "usage: daphne-sched <run|dsl|figure|ablation|calibrate|tune|worker|leader> \
+    "usage: daphne-sched <run|dsl|serve|figure|ablation|calibrate|tune|worker|leader> \
      [args] [key=value ...]\n\
      examples:\n\
      \x20 daphne-sched run cc nodes=50000 scheme=mfsc layout=percore victim=seqpri\n\
@@ -75,6 +86,9 @@ fn usage() -> String {
      \x20 daphne-sched figure dag nodes=20000 lr_rows=100000  # dag-vs-barrier replay\n\
      \x20 daphne-sched figure hetero            # placement any|pinned|auto, hetero machines\n\
      \x20 daphne-sched figure tenancy arrival=burst  # fifo|fair|priority tenant mix\n\
+     \x20 daphne-sched figure serve              # open-loop serving, policy x admission\n\
+     \x20 daphne-sched serve qps=400 duration=2 slo_ms=10 admission=bounded \
+     max_backlog=4 policy=fair\n\
      \x20 daphne-sched tune nodes=100000 machine=broadwell20  # single-workload sweep\n\
      \x20 daphne-sched tune graph=linreg rows=100000 machine=cascadelake56\n\
      \x20 daphne-sched tune graph=hetero machine=hetero56 placement=auto\n\
@@ -97,6 +111,7 @@ fn run(args: &[String]) -> Result<(), String> {
     match cmd.as_str() {
         "run" => cmd_run(&args[1..]),
         "dsl" => cmd_dsl(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "figure" => cmd_figure(&args[1..]),
         "ablation" => cmd_ablation(&args[1..]),
         "calibrate" => cmd_calibrate(),
@@ -277,6 +292,91 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     }
 }
 
+/// Open-loop serving soak on the host executor — the real-run
+/// confirmation of `figure serve`'s DES prediction. Serve-specific
+/// options ride the free-form parameter map (`config::RunConfig`
+/// params); `policy=`, `machine=`, `seed=` and `arrival=` are the usual
+/// first-class keys. Arrivals default to `uniform` (an open-loop
+/// generator paces requests; pass `arrival=burst` explicitly for the
+/// all-at-once stress).
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    use daphne_sched::sched::{AdmissionPolicy, Executor};
+    use daphne_sched::serve::{run_serve, RequestKind, ServeReport, ServeSpec};
+
+    let cfg = parse_pairs(args)?;
+    let requests_key = cfg.param_str("requests", "linreg").to_string();
+    let requests = RequestKind::parse(&requests_key).ok_or_else(|| {
+        format!("serve: unknown requests '{requests_key}' (linreg | cc)")
+    })?;
+    let duration = cfg.param_f64("duration", 2.0);
+    let max_backlog = cfg.param_usize("max_backlog", 4);
+    let deadline = cfg.param_f64("deadline_ms", 5.0) / 1e3;
+    let admission_key = cfg.param_str("admission", "open").to_string();
+    let admission =
+        AdmissionPolicy::parse(&admission_key, max_backlog, deadline)
+            .ok_or_else(|| {
+                format!(
+                    "serve: unknown admission '{admission_key}' \
+                     (open | bounded | shed)"
+                )
+            })?;
+    let arrival = if args.iter().any(|a| a.starts_with("arrival=")) {
+        cfg.arrival
+    } else {
+        daphne_sched::config::ArrivalPattern::Uniform
+    };
+    let spec = ServeSpec {
+        requests,
+        qps: cfg.param_f64("qps", 200.0),
+        duration,
+        warmup: cfg.param_f64("warmup", duration / 4.0),
+        slo: cfg.param_f64("slo_ms", 10.0) / 1e3,
+        admission,
+        est_cost: cfg.param_f64("est_cost_ms", 1.0) / 1e3,
+        arrival,
+        seed: cfg.sched.seed,
+        rows: cfg.param_usize("rows", 32),
+        work: cfg.param_usize("work", 2_000) as u64,
+        batch_tenants: cfg.param_usize("batch", 1),
+        ..ServeSpec::default()
+    };
+    let topo = cfg.topology.clone();
+    let exec = Executor::new_with_policy(
+        Arc::new(topo.clone()),
+        Arc::new(cfg.sched.clone()),
+        cfg.policy,
+    );
+    println!(
+        "serve: {} requests at {:.0} qps ({} arrivals) for {:.2}s \
+         (warmup {:.2}s) on {} ({} cores), policy={}, admission={}, \
+         slo={:.1}ms, {} batch tenant(s)",
+        spec.requests.name(),
+        spec.qps,
+        spec.arrival.name(),
+        spec.duration,
+        spec.warmup,
+        topo.name,
+        topo.n_cores(),
+        cfg.policy.name(),
+        spec.admission.name(),
+        spec.slo * 1e3,
+        spec.batch_tenants
+    );
+    let report = run_serve(&exec, &spec).map_err(|e| e.to_string())?;
+    println!("{}", ServeReport::header());
+    println!("{}", report.row());
+    println!(
+        "offered {} ({} in measurement window), shed rate {:.1}%, mean \
+         queue delay {:.2}ms, wall {:.2}s",
+        report.offered,
+        report.measured,
+        report.shed_rate() * 100.0,
+        report.mean_queue_delay * 1e3,
+        report.wall
+    );
+    Ok(())
+}
+
 fn cmd_dsl(args: &[String]) -> Result<(), String> {
     let Some(path) = args.first() else {
         return Err("dsl: expected script path".into());
@@ -332,7 +432,7 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
     let Some(which) = args.first() else {
         return Err(
             "figure: expected id \
-             (7a 7b 8a 8b 9a 9b 10a 10b dag hetero tenancy | all)"
+             (7a 7b 8a 8b 9a 9b 10a 10b dag hetero tenancy serve | all)"
                 .into(),
         );
     };

@@ -195,6 +195,11 @@ pub(super) struct Job {
     /// measures waiting as time since last service, so a job the pool
     /// is actively serving never out-ages a late high-priority arrival.
     served_ns: AtomicU64,
+    /// Nanoseconds after `start` at which a worker *first* pulled a task
+    /// of this job (0 = never served yet). Written once; the published
+    /// report splits end-to-end latency into queueing delay
+    /// (admission → first dispatch) and service time from it.
+    first_served_ns: AtomicU64,
     /// Per-worker counters, flushed before each item-count publish so
     /// the finalizer's snapshot covers every executed task. (Only the
     /// tail of a concurrent worker's final empty steal round — its
@@ -330,6 +335,26 @@ impl Executor {
     /// The cross-job pick policy currently in effect.
     pub fn policy(&self) -> TenancyPolicy {
         self.shared.queue.lock().unwrap().policy
+    }
+
+    /// Live jobs currently in the run queue (dispatched, not yet
+    /// finalized) — the backlog admission control bounds.
+    pub fn backlog(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Live jobs in the run queue belonging to `tag` — the per-tenant
+    /// backlog [`AdmissionPolicy`](super::AdmissionPolicy) decisions
+    /// are made against.
+    pub fn tag_backlog(&self, tag: &str) -> usize {
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .jobs
+            .iter()
+            .filter(|j| &*j.tenancy.tag == tag)
+            .count()
     }
 
     /// Switch the cross-job pick policy. Takes effect at each worker's
@@ -513,6 +538,7 @@ pub(super) fn enqueue_raw(
         cancelled: AtomicBool::new(false),
         tenancy,
         served_ns: AtomicU64::new(0),
+        first_served_ns: AtomicU64::new(0),
         panic: OrderedMutex::new(ranks::JOB_PANIC, None),
         stats: (0..n)
             .map(|_| {
@@ -962,6 +988,14 @@ fn run_job_stint(
             job.tenancy.arrived.elapsed().as_nanos() as u64,
             Ordering::Relaxed,
         );
+        // first dispatch ends the queueing-delay window (write-once; a
+        // racing second writer only ever stores a near-identical value)
+        if job.first_served_ns.load(Ordering::Relaxed) == 0 {
+            job.first_served_ns.store(
+                (job.start.elapsed().as_nanos() as u64).max(1),
+                Ordering::Relaxed,
+            );
+        }
         if pull.stolen {
             local.steals += 1;
             local.stolen_items += pull.task.len();
@@ -1039,6 +1073,7 @@ fn make_report(job: &Job) -> SchedReport {
         layout: job.config.layout.name().to_string(),
         victim: job.config.victim.name().to_string(),
         makespan: job.start.elapsed().as_secs_f64(),
+        queue_delay: job.first_served_ns.load(Ordering::Relaxed) as f64 * 1e-9,
         per_worker: job.stats.iter().map(|s| s.lock().unwrap().clone()).collect(),
     }
 }

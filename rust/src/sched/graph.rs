@@ -681,6 +681,7 @@ fn record_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) -> Vec<usize> {
                 layout: String::new(),
                 victim: String::new(),
                 makespan: 0.0,
+                queue_delay: 0.0,
                 per_worker: Vec::new(),
             }
         }

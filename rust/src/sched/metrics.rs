@@ -31,6 +31,10 @@ pub struct SchedReport {
     pub victim: String,
     /// Wall-clock (real executor) or virtual (DES) makespan in seconds.
     pub makespan: f64,
+    /// Seconds between admission (enqueue) and the first chunk dispatch —
+    /// the queueing component of the end-to-end latency. 0 when the job
+    /// was served immediately (or never served at all).
+    pub queue_delay: f64,
     pub per_worker: Vec<WorkerStats>,
 }
 
@@ -70,6 +74,12 @@ impl SchedReport {
         self.per_worker.iter().map(|w| w.queue_wait).sum()
     }
 
+    /// Seconds between first dispatch and completion — the end-to-end
+    /// makespan with the admission queueing delay stripped out.
+    pub fn service_time(&self) -> f64 {
+        (self.makespan - self.queue_delay).max(0.0)
+    }
+
     /// One formatted row (used by the figure harness and CLI).
     pub fn row(&self) -> String {
         format!(
@@ -97,6 +107,7 @@ mod tests {
             layout: "CENTRAL".into(),
             victim: "SEQ".into(),
             makespan: 1.0,
+            queue_delay: 0.25,
             per_worker: busys
                 .iter()
                 .map(|&b| WorkerStats { busy: b, tasks: 1, items: 10, ..Default::default() })
@@ -118,5 +129,13 @@ mod tests {
         let r = report(&[1.0]);
         let row = r.row();
         assert!(row.contains("STATIC") && row.contains("CENTRAL"));
+    }
+
+    #[test]
+    fn service_time_strips_queue_delay() {
+        let r = report(&[1.0]);
+        assert!((r.service_time() - 0.75).abs() < 1e-12);
+        let degenerate = SchedReport { queue_delay: 2.0, ..report(&[1.0]) };
+        assert_eq!(degenerate.service_time(), 0.0);
     }
 }

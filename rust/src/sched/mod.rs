@@ -57,6 +57,11 @@
 //! tenant's undispatched work to free the pool. The DES mirrors the
 //! policies in virtual time ([`crate::sim::graph::replay_tenants`]) —
 //! the oracle behind `figure tenancy` and [`autotune::tune_tenancy`].
+//! [`Session::try_submit_graph`] adds admission control on top: an
+//! [`AdmissionPolicy`] (`Open` | `Bounded` | `Shed`) checked against
+//! the tag's live-job backlog ([`Executor::tag_backlog`]) decides
+//! accept vs. reject before anything dispatches — the load-bearing
+//! mechanism of the open-loop serving mode ([`crate::serve`]).
 //!
 //! # Heterogeneous device pools
 //!
@@ -131,6 +136,8 @@ pub use placement::{
     DevicePool, DevicePools, Placement, PlacementPolicy, PoolId,
 };
 pub use queue::{QueueLayout, TaskSource};
-pub use session::{Session, SubmitOpts, TenancyPolicy};
+pub use session::{
+    AdmissionPolicy, Admitted, Session, SubmitOpts, TenancyPolicy,
+};
 pub use task::TaskRange;
 pub use victim::VictimStrategy;

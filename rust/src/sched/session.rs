@@ -98,6 +98,66 @@ impl TenancyPolicy {
     }
 }
 
+/// Admission policy: what [`Session::try_submit_graph`] does when the
+/// submitting tag's live-job backlog is already deep. `Open` is today's
+/// accept-everything behaviour; `Bounded` and `Shed` make a saturated
+/// service degrade predictably (bounded queueing delay, counted
+/// rejections) instead of queueing unboundedly — the serving loop
+/// ([`crate::serve`]) and its DES mirror
+/// ([`crate::sim::serve::replay_open_loop`]) apply the *same* rule, so
+/// `figure serve` predicts real shed rates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Accept every submission (the pre-serve default).
+    Open,
+    /// Reject when the backlog already holds `max_backlog` entries.
+    Bounded { max_backlog: usize },
+    /// Reject when the estimated queueing delay (backlog × the
+    /// submitter's per-entry cost estimate) exceeds `deadline` seconds.
+    Shed { deadline: f64 },
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::Open
+    }
+}
+
+impl AdmissionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Open => "open",
+            AdmissionPolicy::Bounded { .. } => "bounded",
+            AdmissionPolicy::Shed { .. } => "shed",
+        }
+    }
+
+    /// Parse a policy name, taking the bound / deadline from the caller
+    /// (they arrive as separate config keys: `max_backlog=`,
+    /// `deadline_ms=`).
+    pub fn parse(s: &str, max_backlog: usize, deadline: f64) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "open" => Some(AdmissionPolicy::Open),
+            "bounded" => Some(AdmissionPolicy::Bounded { max_backlog }),
+            "shed" => Some(AdmissionPolicy::Shed { deadline }),
+            _ => None,
+        }
+    }
+
+    /// The admission rule itself, shared verbatim by the real serving
+    /// loop and the DES: given the submitting tag's current backlog
+    /// depth and the estimated wait behind it (`backlog ×
+    /// est-cost-per-entry`, in the caller's clock), may this submission
+    /// enter?
+    pub fn admits(&self, backlog: usize, est_wait: f64) -> bool {
+        match self {
+            AdmissionPolicy::Open => true,
+            AdmissionPolicy::Bounded { max_backlog } => backlog < *max_backlog,
+            AdmissionPolicy::Shed { deadline } => est_wait <= *deadline,
+        }
+    }
+}
+
 /// Per-submission tenancy options: how the cross-job pick policy
 /// weighs this tenant's work against the other live tenants.
 #[derive(Debug, Clone)]
@@ -112,11 +172,25 @@ pub struct SubmitOpts {
     /// tags*, so every graph submitted under one tag counts against
     /// one fair share. Empty (default) = the anonymous tenant.
     pub tag: String,
+    /// Admission policy applied by [`Session::try_submit_graph`]
+    /// against this tag's live-job backlog (default [`Open`]
+    /// (AdmissionPolicy::Open); plain `submit_graph` ignores it).
+    pub admission: AdmissionPolicy,
+    /// Estimated service seconds per backlog entry, used by
+    /// [`AdmissionPolicy::Shed`] to turn backlog depth into an
+    /// estimated wait (default 0.0 = Shed never rejects).
+    pub est_cost: f64,
 }
 
 impl Default for SubmitOpts {
     fn default() -> Self {
-        SubmitOpts { priority: 0, weight: 1, tag: String::new() }
+        SubmitOpts {
+            priority: 0,
+            weight: 1,
+            tag: String::new(),
+            admission: AdmissionPolicy::Open,
+            est_cost: 0.0,
+        }
     }
 }
 
@@ -138,6 +212,41 @@ impl SubmitOpts {
     pub fn tag(mut self, tag: &str) -> Self {
         self.tag = tag.to_string();
         self
+    }
+
+    pub fn admission(mut self, admission: AdmissionPolicy) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    pub fn est_cost(mut self, est_cost: f64) -> Self {
+        self.est_cost = est_cost.max(0.0);
+        self
+    }
+}
+
+/// Outcome of an admission-checked submission
+/// ([`Session::try_submit_graph`]).
+#[must_use = "a rejected submission must be counted or retried"]
+pub enum Admitted {
+    /// The graph was admitted and dispatched.
+    Accepted(GraphHandle<'static>),
+    /// The graph was rejected (shed) without dispatching anything;
+    /// `backlog` is the live-job depth that triggered the decision.
+    Rejected { backlog: usize },
+}
+
+impl Admitted {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Admitted::Accepted(_))
+    }
+
+    /// The handle, if admitted.
+    pub fn handle(self) -> Option<GraphHandle<'static>> {
+        match self {
+            Admitted::Accepted(h) => Some(h),
+            Admitted::Rejected { .. } => None,
+        }
     }
 }
 
@@ -217,6 +326,30 @@ impl<'e> Session<'e> {
         let (run, roots) = self.exec.prepare_graph(spec, tenancy)?;
         dispatch(&run, &roots);
         Ok(GraphHandle::from_run(run))
+    }
+
+    /// Admission-checked submission: consult `opts.admission` against
+    /// the tag's current live-job backlog *before* dispatching. A
+    /// rejected graph dispatches nothing (its spec is dropped here) and
+    /// the decision is returned for the caller to count — the serving
+    /// loop's shed-vs-served accounting. Validation errors still
+    /// surface as `Err` regardless of the admission decision.
+    pub fn try_submit_graph(
+        &self,
+        spec: GraphSpec<'static>,
+        opts: SubmitOpts,
+    ) -> Result<Admitted, GraphError> {
+        let backlog = self.exec.tag_backlog(&opts.tag);
+        let est_wait = backlog as f64 * opts.est_cost;
+        if !opts.admission.admits(backlog, est_wait) {
+            // still validate, so a malformed graph is an error — not a
+            // silently-counted shed
+            let tenancy = Tenancy::from_opts(&opts);
+            let (run, _roots) = self.exec.prepare_graph(spec, tenancy)?;
+            drop(run);
+            return Ok(Admitted::Rejected { backlog });
+        }
+        self.submit_graph(spec, opts).map(Admitted::Accepted)
     }
 
     /// Fused submission: validate *every* graph, then dispatch all of
@@ -333,6 +466,82 @@ mod tests {
         assert_eq!(t.priority, 0);
         assert_eq!(t.weight, 1);
         assert_eq!(&*t.tag, "");
+    }
+
+    #[test]
+    fn admission_policy_rules() {
+        let open = AdmissionPolicy::Open;
+        assert!(open.admits(usize::MAX, f64::INFINITY));
+        let bounded = AdmissionPolicy::Bounded { max_backlog: 2 };
+        assert!(bounded.admits(0, 0.0));
+        assert!(bounded.admits(1, 0.0));
+        assert!(!bounded.admits(2, 0.0));
+        let shed = AdmissionPolicy::Shed { deadline: 0.5 };
+        assert!(shed.admits(100, 0.5));
+        assert!(!shed.admits(100, 0.500001));
+        // names parse back with the bound carried from separate keys
+        assert_eq!(
+            AdmissionPolicy::parse("bounded", 2, 0.0),
+            Some(bounded)
+        );
+        assert_eq!(AdmissionPolicy::parse("shed", 0, 0.5), Some(shed));
+        assert_eq!(AdmissionPolicy::parse("open", 9, 9.0), Some(open));
+        assert_eq!(AdmissionPolicy::parse("bogus", 0, 0.0), None);
+        assert_eq!(AdmissionPolicy::default(), open);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spin-gate body holds workers")]
+    fn bounded_admission_rejects_past_backlog_and_recovers() {
+        let e = exec();
+        let session = e.session();
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let opts = || {
+            SubmitOpts::new()
+                .tag("svc")
+                .admission(AdmissionPolicy::Bounded { max_backlog: 1 })
+        };
+        let spec = |gate: &Arc<std::sync::atomic::AtomicBool>| {
+            let g = Arc::clone(gate);
+            GraphSpec::new("req").node(NodeSpec::new("n", 1), move |_w, _r| {
+                while !g.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let first = session.try_submit_graph(spec(&gate), opts()).unwrap();
+        let Admitted::Accepted(h) = first else {
+            panic!("empty backlog must admit")
+        };
+        // the gated job is live, so the tag backlog is 1 = max_backlog
+        let second = session.try_submit_graph(spec(&gate), opts()).unwrap();
+        match second {
+            Admitted::Rejected { backlog } => assert_eq!(backlog, 1),
+            Admitted::Accepted(_) => panic!("saturated tag must reject"),
+        }
+        // a foreign tag is unaffected by svc's backlog
+        let other = session
+            .try_submit_graph(
+                GraphSpec::new("other").node(NodeSpec::new("n", 0), |_, _| {}),
+                SubmitOpts::new()
+                    .tag("batch")
+                    .admission(AdmissionPolicy::Bounded { max_backlog: 1 }),
+            )
+            .unwrap();
+        assert!(other.is_accepted());
+        // draining the backlog re-opens admission
+        gate.store(true, Ordering::Release);
+        let report = h.join();
+        assert!(report.all_completed());
+        let third = session.try_submit_graph(
+            GraphSpec::new("req").node(NodeSpec::new("n", 0), |_, _| {}),
+            opts(),
+        );
+        assert!(third.unwrap().is_accepted());
+        // rejected-but-malformed graphs still error
+        let bad = GraphSpec::new("bad")
+            .node(NodeSpec::new("n", 1).after("ghost"), |_, _| {});
+        assert!(session.try_submit_graph(bad, opts()).is_err());
     }
 
     #[test]

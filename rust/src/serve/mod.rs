@@ -1,0 +1,517 @@
+//! Open-loop request serving on the real executor.
+//!
+//! A long-running service in front of [`crate::sched::Executor`]: an
+//! open-loop generator emits a continuous stream of small pipeline
+//! instances — linreg-inference prefixes or cc queries — at a target
+//! QPS under the [`SERVE_TAG`] tenant tag while batch tenants run
+//! underneath, and every arrival passes through the same
+//! [`AdmissionPolicy`] check the DES mirror
+//! ([`crate::sim::serve::replay_open_loop`]) applies in virtual time.
+//! The generator does not wait for responses (that is what "open loop"
+//! means): under overload the backlog grows, and the admission policy —
+//! not an unbounded queue — decides what happens next:
+//!
+//! - [`AdmissionPolicy::Open`] admits everything; queueing delay (and
+//!   with it the p99/p999 tail) diverges once offered load passes
+//!   capacity.
+//! - [`AdmissionPolicy::Bounded`] caps the live-job backlog per tag, so
+//!   the served tail stays bounded and the excess is counted as shed.
+//! - [`AdmissionPolicy::Shed`] rejects when `backlog × est_cost`
+//!   exceeds a deadline — a latency-denominated bound.
+//!
+//! Per-request latency lands in a bounded, seeded
+//! [`LatencyReservoir`]; [`ServeReport`] carries sustained throughput,
+//! p50/p99/p999, SLO attainment over served requests, shed counts, and
+//! the accept/reject decision sequence (what the DES-agreement
+//! integration test compares). Drive it from the CLI:
+//!
+//! ```text
+//! daphne-sched serve qps=400 duration=2 slo_ms=10 admission=bounded \
+//!     max_backlog=4 policy=fair requests=linreg
+//! ```
+//!
+//! The arrival trace is [`crate::sim::serve::arrival_times`] — the
+//! exact offsets the DES replays — so a `figure serve` prediction and a
+//! real soak see the same offered load, seed for seed.
+
+use std::hint::black_box;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::ArrivalPattern;
+use crate::sched::{
+    Admitted, AdmissionPolicy, Executor, GraphError, GraphHandle, GraphSpec,
+    NodeSpec, SubmitOpts, TenancyPolicy,
+};
+use crate::sim::serve::{arrival_times, RESERVOIR_CAPACITY, SERVE_TAG};
+use crate::util::stats::{self, LatencyReservoir};
+
+/// Tag of the batch tenants running underneath the request stream.
+pub const BATCH_TAG: &str = "batch";
+
+/// Which request pipeline the generator emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// The linreg-inference prefix: colstats → stats → standardize
+    /// (the first three nodes of the training pipeline — what scoring
+    /// a batch of rows against a fitted model exercises).
+    Linreg,
+    /// A cc query: propagate → diff (one label-propagation round).
+    Cc,
+}
+
+impl RequestKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestKind::Linreg => "linreg",
+            RequestKind::Cc => "cc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "linreg" | "lr" => Some(RequestKind::Linreg),
+            "cc" => Some(RequestKind::Cc),
+            _ => None,
+        }
+    }
+}
+
+/// Burn roughly `iters` ALU iterations — the per-item request body.
+/// Real work (not a sleep), so requests contend for cores with the
+/// batch tenants exactly as pipeline operators would.
+fn spin(iters: u64) {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_add(black_box(i ^ 0x9E37_79B9_7F4A_7C15));
+    }
+    black_box(acc);
+}
+
+/// One linreg-inference request: the training pipeline's standardize
+/// prefix as an owned-body graph (`work` spin iterations per item).
+pub fn linreg_request(rows: usize, work: u64) -> GraphSpec<'static> {
+    let body = move |_w: usize, r: crate::sched::TaskRange| {
+        for _ in r.start..r.end {
+            spin(work);
+        }
+    };
+    GraphSpec::new("linreg-infer")
+        .node(NodeSpec::new("colstats", rows), body)
+        .node(NodeSpec::new("stats", 1).after("colstats"), body)
+        .node(NodeSpec::new("standardize", rows).after("stats"), body)
+}
+
+/// One cc query: a single propagate round plus its convergence check.
+pub fn cc_request(rows: usize, work: u64) -> GraphSpec<'static> {
+    let body = move |_w: usize, r: crate::sched::TaskRange| {
+        for _ in r.start..r.end {
+            spin(work);
+        }
+    };
+    GraphSpec::new("cc-query")
+        .node(NodeSpec::new("propagate", rows), body)
+        .node(NodeSpec::new("diff", rows).after("propagate"), body)
+}
+
+fn build_request(kind: RequestKind, rows: usize, work: u64) -> GraphSpec<'static> {
+    match kind {
+        RequestKind::Linreg => linreg_request(rows, work),
+        RequestKind::Cc => cc_request(rows, work),
+    }
+}
+
+/// One wide batch graph (a long single-node sweep under [`BATCH_TAG`]).
+fn batch_graph(idx: usize, items: usize, work: u64) -> GraphSpec<'static> {
+    let body = move |_w: usize, r: crate::sched::TaskRange| {
+        for _ in r.start..r.end {
+            spin(work);
+        }
+    };
+    GraphSpec::new(&format!("batch{idx}"))
+        .node(NodeSpec::new("sweep", items), body)
+}
+
+/// One open-loop soak: the request stream, its rate and SLO, the
+/// admission setting, and the batch load underneath.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub requests: RequestKind,
+    /// Items per parallel request node (request width).
+    pub rows: usize,
+    /// Spin iterations per item (request weight).
+    pub work: u64,
+    /// Offered load, requests per second.
+    pub qps: f64,
+    /// Arrival-window length in seconds.
+    pub duration: f64,
+    /// Arrivals before this offset are served but not measured.
+    pub warmup: f64,
+    /// Latency SLO in seconds.
+    pub slo: f64,
+    /// Admission applied to every request arrival.
+    pub admission: AdmissionPolicy,
+    /// Estimated service seconds per backlog entry (the `Shed` input;
+    /// also what `figure serve` uses in the DES).
+    pub est_cost: f64,
+    /// Arrival pattern of the generator.
+    pub arrival: ArrivalPattern,
+    /// Seed for the arrival trace and the latency reservoir.
+    pub seed: u64,
+    /// Priority of every request (for `policy=priority`).
+    pub priority: i64,
+    /// Fair-share weight of the [`SERVE_TAG`] tag (for `policy=fair`).
+    pub weight: u64,
+    /// Number of batch graphs running underneath (0 = requests only).
+    pub batch_tenants: usize,
+    /// Items per batch graph — size these past the soak so batch
+    /// pressure lasts the whole window (leftovers are cancelled).
+    pub batch_items: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            requests: RequestKind::Linreg,
+            rows: 32,
+            work: 2_000,
+            qps: 200.0,
+            duration: 1.0,
+            warmup: 0.2,
+            slo: 0.010,
+            admission: AdmissionPolicy::Open,
+            est_cost: 0.0,
+            arrival: ArrivalPattern::Uniform,
+            seed: 42,
+            priority: 2,
+            weight: 4,
+            batch_tenants: 1,
+            batch_items: 1 << 20,
+        }
+    }
+}
+
+/// Serving metrics of one [`run_serve`] soak — the real-executor
+/// counterpart of [`crate::sim::serve::ServeSimOutcome`], field for
+/// field.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub policy: TenancyPolicy,
+    pub admission: AdmissionPolicy,
+    /// Requests generated over the whole window.
+    pub offered: usize,
+    /// Requests arriving inside the measurement window (≥ warmup).
+    pub measured: usize,
+    /// Measured requests admitted and completed successfully.
+    pub served: usize,
+    /// Measured requests rejected at admission.
+    pub shed: usize,
+    /// Measured requests admitted but not completed (node failure).
+    pub failed: usize,
+    /// Served requests per second over the measurement window.
+    pub attained_qps: f64,
+    /// Latency percentiles over served measured requests (seconds).
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    /// Fraction of served measured requests within the SLO.
+    pub slo_attainment: f64,
+    /// Mean admission → first-dispatch delay of served measured
+    /// requests (from the root node's `SchedReport::queue_delay`).
+    pub mean_queue_delay: f64,
+    /// Wall-clock seconds of the whole soak (drain included).
+    pub wall: f64,
+    /// Accept/reject per request in arrival order (warmup included).
+    pub decisions: Vec<bool>,
+}
+
+impl ServeReport {
+    /// Fraction of measured requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.measured == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.measured as f64
+        }
+    }
+
+    /// One aligned table row: admission, attained/offered, tail, SLO.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<8} {:>8.1} {:>7} {:>6} {:>6} {:>9.2} {:>9.2} {:>9.2} {:>6.1}%",
+            self.admission.name(),
+            self.attained_qps,
+            self.served,
+            self.shed,
+            self.failed,
+            self.p50 * 1e3,
+            self.p99 * 1e3,
+            self.p999 * 1e3,
+            self.slo_attainment * 100.0,
+        )
+    }
+
+    /// Header matching [`ServeReport::row`].
+    pub fn header() -> String {
+        format!(
+            "{:<8} {:>8} {:>7} {:>6} {:>6} {:>9} {:>9} {:>9} {:>6}",
+            "admit", "qps", "served", "shed", "failed", "p50ms", "p99ms",
+            "p999ms", "slo"
+        )
+    }
+}
+
+struct InFlight {
+    handle: GraphHandle<'static>,
+    /// Wall offset (seconds from soak start) of the actual submission.
+    submitted: f64,
+    /// Arrived inside the measurement window.
+    measured: bool,
+}
+
+struct Tally {
+    reservoir: LatencyReservoir,
+    queue_delays: Vec<f64>,
+    served: usize,
+    failed: usize,
+    within_slo: usize,
+    last_finish: f64,
+}
+
+impl Tally {
+    fn settle(&mut self, f: InFlight, slo: f64) {
+        let report = f.handle.join();
+        if !f.measured {
+            return;
+        }
+        if !report.all_completed() {
+            self.failed += 1;
+            return;
+        }
+        let latency = report.makespan;
+        let qd = report
+            .nodes
+            .first()
+            .and_then(|n| n.report.as_ref())
+            .map(|r| r.queue_delay)
+            .unwrap_or(0.0);
+        self.served += 1;
+        self.reservoir.record(latency);
+        self.queue_delays.push(qd);
+        if latency <= slo {
+            self.within_slo += 1;
+        }
+        self.last_finish = self.last_finish.max(f.submitted + latency);
+    }
+}
+
+/// Drain every finished in-flight request without blocking.
+fn drain_finished(inflight: &mut Vec<InFlight>, tally: &mut Tally, slo: f64) {
+    let mut i = 0;
+    while i < inflight.len() {
+        if inflight[i].handle.is_finished() {
+            let f = inflight.swap_remove(i);
+            tally.settle(f, slo);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Run one open-loop soak on `exec`: batch tenants submitted up front
+/// under [`BATCH_TAG`], then the request stream paced on the wall clock
+/// along the seeded arrival trace, each arrival admission-checked via
+/// [`crate::sched::Session::try_submit_graph`]. Blocks until every
+/// admitted request drains (batch leftovers are cancelled), so the
+/// report is complete.
+pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, GraphError> {
+    let arrivals =
+        arrival_times(spec.arrival, spec.qps, spec.duration, spec.seed);
+    let session = exec.session();
+
+    let mut batch_handles = Vec::with_capacity(spec.batch_tenants);
+    for b in 0..spec.batch_tenants {
+        batch_handles.push(session.submit_graph(
+            batch_graph(b, spec.batch_items, spec.work),
+            SubmitOpts::new().tag(BATCH_TAG),
+        )?);
+    }
+
+    let mut tally = Tally {
+        reservoir: LatencyReservoir::new(
+            RESERVOIR_CAPACITY,
+            spec.seed ^ 0x7E5E,
+        ),
+        queue_delays: Vec::new(),
+        served: 0,
+        failed: 0,
+        within_slo: 0,
+        last_finish: 0.0,
+    };
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut decisions = Vec::with_capacity(arrivals.len());
+    let (mut measured, mut shed) = (0usize, 0usize);
+
+    let start = Instant::now();
+    for &t in &arrivals {
+        // pace the generator, reaping completions while idle
+        loop {
+            let now = start.elapsed().as_secs_f64();
+            if now >= t {
+                break;
+            }
+            drain_finished(&mut inflight, &mut tally, spec.slo);
+            let wait = (t - start.elapsed().as_secs_f64()).max(0.0);
+            thread::sleep(Duration::from_secs_f64(wait.min(2e-4)));
+        }
+        let in_window = t >= spec.warmup;
+        if in_window {
+            measured += 1;
+        }
+        let opts = SubmitOpts::new()
+            .tag(SERVE_TAG)
+            .priority(spec.priority)
+            .weight(spec.weight)
+            .admission(spec.admission)
+            .est_cost(spec.est_cost);
+        let req = build_request(spec.requests, spec.rows, spec.work);
+        match session.try_submit_graph(req, opts)? {
+            Admitted::Accepted(handle) => {
+                decisions.push(true);
+                inflight.push(InFlight {
+                    handle,
+                    submitted: start.elapsed().as_secs_f64(),
+                    measured: in_window,
+                });
+            }
+            Admitted::Rejected { .. } => {
+                decisions.push(false);
+                if in_window {
+                    shed += 1;
+                }
+            }
+        }
+    }
+
+    // drain: every admitted request runs to terminal
+    for f in inflight.drain(..) {
+        tally.settle(f, spec.slo);
+    }
+    // release the pool: batch leftovers are cancelled, not awaited
+    for h in batch_handles {
+        h.cancel();
+        h.join();
+    }
+
+    let span = (tally.last_finish - spec.warmup)
+        .max(spec.duration - spec.warmup)
+        .max(f64::MIN_POSITIVE);
+    Ok(ServeReport {
+        policy: exec.policy(),
+        admission: spec.admission,
+        offered: arrivals.len(),
+        measured,
+        served: tally.served,
+        shed,
+        failed: tally.failed,
+        attained_qps: tally.served as f64 / span,
+        p50: tally.reservoir.p50(),
+        p99: tally.reservoir.p99(),
+        p999: tally.reservoir.p999(),
+        slo_attainment: if tally.served == 0 {
+            0.0
+        } else {
+            tally.within_slo as f64 / tally.served as f64
+        },
+        mean_queue_delay: stats::mean(&tally.queue_delays),
+        wall: start.elapsed().as_secs_f64(),
+        decisions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedConfig;
+    use crate::topology::Topology;
+    use std::sync::Arc;
+
+    fn exec(policy: TenancyPolicy) -> Executor {
+        Executor::new_with_policy(
+            Arc::new(Topology::symmetric("t4", 1, 4, 1.5, 1.0)),
+            Arc::new(SchedConfig::fine_grained()),
+            policy,
+        )
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock soak on real threads")]
+    fn open_soak_serves_everything_offered() {
+        let exec = exec(TenancyPolicy::Fifo);
+        let spec = ServeSpec {
+            qps: 100.0,
+            duration: 0.2,
+            warmup: 0.0,
+            work: 200,
+            rows: 8,
+            batch_tenants: 0,
+            slo: 5.0, // generous: correctness, not performance
+            ..ServeSpec::default()
+        };
+        let report = run_serve(&exec, &spec).unwrap();
+        assert_eq!(report.offered, 20);
+        assert_eq!(report.decisions.len(), 20);
+        assert!(report.decisions.iter().all(|&d| d), "open admits all");
+        assert_eq!(report.measured, 20);
+        assert_eq!(report.served, 20);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.slo_attainment, 1.0);
+        assert!(report.attained_qps > 0.0);
+        assert!(report.p50 > 0.0 && report.p999 >= report.p50);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock soak on real threads")]
+    fn burst_bounded_admits_exactly_the_first_k() {
+        // all arrivals at t=0 with requests heavy enough that none can
+        // finish inside the sub-millisecond submission sweep: the
+        // accept/reject sequence is first-k deterministic, matching the
+        // DES (sim::serve burst test / the integration test)
+        let exec = exec(TenancyPolicy::Fifo);
+        let spec = ServeSpec {
+            arrival: ArrivalPattern::Burst,
+            qps: 60.0,
+            duration: 0.1, // 6 requests, all at t=0
+            warmup: 0.0,
+            rows: 16,
+            work: 3_000_000,
+            batch_tenants: 0,
+            admission: AdmissionPolicy::Bounded { max_backlog: 2 },
+            slo: 30.0,
+            ..ServeSpec::default()
+        };
+        let report = run_serve(&exec, &spec).unwrap();
+        let expected: Vec<bool> = (0..6).map(|i| i < 2).collect();
+        assert_eq!(report.decisions, expected);
+        assert_eq!(report.served, 2);
+        assert_eq!(report.shed, 4);
+    }
+
+    #[test]
+    fn request_graphs_are_valid_and_named_like_the_pipelines() {
+        let lr = linreg_request(8, 1);
+        assert_eq!(
+            lr.node_names().collect::<Vec<_>>(),
+            ["colstats", "stats", "standardize"]
+        );
+        let cc = cc_request(8, 1);
+        assert_eq!(
+            cc.node_names().collect::<Vec<_>>(),
+            ["propagate", "diff"]
+        );
+        assert_eq!(RequestKind::parse("LinReg"), Some(RequestKind::Linreg));
+        assert_eq!(RequestKind::parse("cc"), Some(RequestKind::Cc));
+        assert_eq!(RequestKind::parse("nope"), None);
+    }
+}

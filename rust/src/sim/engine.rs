@@ -325,6 +325,9 @@ impl<'w> JobSim<'w> {
                 layout: self.layout.to_string(),
                 victim: self.victim.to_string(),
                 makespan,
+                // a standalone simulated job is dispatched at t=0; graph
+                // and tenant replays account queueing at their own level
+                queue_delay: 0.0,
                 per_worker: self.stats,
             },
             queue_busy: self.queue_busy,

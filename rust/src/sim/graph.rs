@@ -51,7 +51,7 @@ use crate::config::{GraphMode, SchedConfig};
 use crate::sched::graph::{toposort, GraphError, TopoOrder};
 use crate::sched::metrics::{SchedReport, WorkerStats};
 use crate::sched::placement::{DevicePools, Placement, ResolveMode};
-use crate::sched::session::AGING_QUANTUM_SECS;
+use crate::sched::session::{AdmissionPolicy, AGING_QUANTUM_SECS};
 use crate::sched::TenancyPolicy;
 use crate::topology::{DeviceClass, Topology};
 use crate::util::stats;
@@ -402,6 +402,7 @@ fn empty_outcome(topo: &Topology, config: &SchedConfig) -> SimOutcome {
             layout: config.layout.name().to_string(),
             victim: config.victim.name().to_string(),
             makespan: 0.0,
+            queue_delay: 0.0,
             per_worker: vec![WorkerStats::default(); topo.n_cores()],
         },
         queue_busy: Vec::new(),
@@ -725,6 +726,11 @@ pub struct TenantOutcome {
     pub tag: String,
     /// Virtual submission time.
     pub arrival: f64,
+    /// Virtual time a worker first acquired a chunk of this tenant's
+    /// graph (= `finish` for an all-empty graph): the end of the
+    /// queueing-delay window, mirroring the executor's
+    /// `SchedReport::queue_delay`.
+    pub started: f64,
     /// Virtual time the tenant's last node finished.
     pub finish: f64,
     /// Makespan this tenant's graph replays to *alone* on the idle
@@ -736,6 +742,18 @@ impl TenantOutcome {
     /// Submission-to-completion latency (queueing included).
     pub fn latency(&self) -> f64 {
         self.finish - self.arrival
+    }
+
+    /// Admission → first dispatch: the queueing component of
+    /// [`TenantOutcome::latency`].
+    pub fn queueing_delay(&self) -> f64 {
+        (self.started - self.arrival).max(0.0)
+    }
+
+    /// First dispatch → completion: the latency with the queueing
+    /// delay stripped out.
+    pub fn service_time(&self) -> f64 {
+        (self.finish - self.started).max(0.0)
     }
 
     /// Latency normalized by the tenant's isolated makespan — the
@@ -863,6 +881,38 @@ pub fn replay_tenants_with(
     policy: TenancyPolicy,
     isolated: &[f64],
 ) -> Result<TenancySimOutcome, GraphError> {
+    replay_tenants_admitted(tenants, topo, default, costs, policy, isolated, None)
+        .map(|(out, _)| out)
+}
+
+/// Admission applied to one tag's arrivals inside the tenant replay —
+/// the DES mirror of the serving loop's
+/// [`AdmissionPolicy`](crate::sched::AdmissionPolicy) check: at each
+/// matching tenant's arrival, `backlog` is the number of
+/// already-admitted same-tag tenants still unfinished at that virtual
+/// instant, and `est_wait = backlog × est_cost` — identical inputs to
+/// the real loop's decision, so accept/reject sequences agree.
+pub(crate) struct SimAdmission {
+    pub(crate) policy: AdmissionPolicy,
+    pub(crate) tag: String,
+    pub(crate) est_cost: f64,
+}
+
+/// [`replay_tenants_with`] plus per-arrival admission on one tag
+/// ([`SimAdmission`]). Returns the outcome and one accept/reject
+/// decision per tenant in spec order (non-matching tags are always
+/// accepted). A rejected tenant activates nothing: it finishes at its
+/// arrival with zero latency and must be counted as shed by the caller
+/// ([`super::serve::replay_open_loop`]).
+pub(crate) fn replay_tenants_admitted(
+    tenants: &[TenantSpec],
+    topo: &Topology,
+    default: &SchedConfig,
+    costs: &CostModel,
+    policy: TenancyPolicy,
+    isolated: &[f64],
+    admission: Option<&SimAdmission>,
+) -> Result<(TenancySimOutcome, Vec<bool>), GraphError> {
     assert_eq!(isolated.len(), tenants.len(), "one baseline per tenant");
     let pools = DevicePools::from_topology(topo);
     let nw = pools.n_workers();
@@ -911,6 +961,13 @@ pub fn replay_tenants_with(
     let mut t_remaining: Vec<usize> =
         tenants.iter().map(|t| t.shape.nodes.len()).collect();
     let mut t_finish: Vec<f64> = tenants.iter().map(|t| t.arrival).collect();
+    // virtual time of each tenant's first chunk acquisition (the end of
+    // its queueing-delay window); None = never served
+    let mut t_started: Vec<Option<f64>> = vec![None; nt];
+    // admission bookkeeping: which tenants have arrived, and each
+    // arrival's accept/reject decision (non-matching tags always true)
+    let mut released = vec![false; nt];
+    let mut decisions = vec![true; nt];
     let mut remaining: usize = t_remaining.iter().sum();
 
     let mut active: Vec<ActiveJob<'_>> = Vec::new();
@@ -986,6 +1043,33 @@ pub fn replay_tenants_with(
         {
             let ti = arrivals[next_arrival];
             next_arrival += 1;
+            released[ti] = true;
+            // the admission check the real serving loop runs before
+            // submitting: backlog = admitted same-tag tenants still
+            // in flight at this virtual instant
+            if let Some(adm) = admission {
+                if tenants[ti].tag == adm.tag {
+                    let backlog = (0..nt)
+                        .filter(|&o| {
+                            o != ti
+                                && released[o]
+                                && decisions[o]
+                                && t_remaining[o] > 0
+                                && tenants[o].tag == adm.tag
+                        })
+                        .count();
+                    let est_wait = backlog as f64 * adm.est_cost;
+                    if !adm.policy.admits(backlog, est_wait) {
+                        // shed: nothing activates; the tenant is
+                        // terminal at its own arrival
+                        decisions[ti] = false;
+                        remaining -= t_remaining[ti];
+                        t_remaining[ti] = 0;
+                        t_finish[ti] = tenants[ti].arrival;
+                        continue;
+                    }
+                }
+            }
             let roots: Vec<usize> = (0..tenants[ti].shape.nodes.len())
                 .filter(|&li| pending[base[ti] + li] == 0)
                 .map(|li| base[ti] + li)
@@ -1059,6 +1143,9 @@ pub fn replay_tenants_with(
                 let aj = &mut active[k];
                 // reset the job's priority-aging clock: served now
                 aj.served_at = now;
+                if t_started[aj.tenant].is_none() {
+                    t_started[aj.tenant] = Some(now);
+                }
                 let exec = aj.sim.exec_time(my_topo, lw, &pull);
                 chunk[w] = Some((aj.node, pull.task.len()));
                 heap.push(Ev { t: now + exec, w });
@@ -1079,7 +1166,7 @@ pub fn replay_tenants_with(
     }
 
     let makespan = t_finish.iter().copied().fold(makespan, f64::max);
-    Ok(TenancySimOutcome {
+    let outcome = TenancySimOutcome {
         policy,
         tenants: tenants
             .iter()
@@ -1088,12 +1175,14 @@ pub fn replay_tenants_with(
                 name: t.name.clone(),
                 tag: t.tag.clone(),
                 arrival: t.arrival,
+                started: t_started[ti].unwrap_or(t_finish[ti]),
                 finish: t_finish[ti],
                 isolated: isolated[ti],
             })
             .collect(),
         makespan,
-    })
+    };
+    Ok((outcome, decisions))
 }
 
 /// Policy-ordered indices into `active` for a worker of `my_pool` —
@@ -1681,6 +1770,59 @@ mod tests {
         assert_eq!(late.slowdown(), 1.0);
         assert!(out.makespan >= 0.5);
         assert!(out.tenant("first").unwrap().finish < 0.5);
+        // zero-item graphs are never dispatched: started = finish, so
+        // the whole (zero) latency is service-free
+        assert_eq!(late.queueing_delay(), 0.0);
+        assert_eq!(late.service_time(), 0.0);
+    }
+
+    #[test]
+    fn fifo_queueing_delay_separates_from_service_time() {
+        // Single-core machine, FIFO: a short tenant arriving behind a
+        // long batch waits for the batch to drain — its latency must
+        // decompose into a queueing delay ~ the batch remainder plus a
+        // service time ~ its isolated makespan.
+        let topo = Topology::symmetric("t1", 1, 1, 1.0, 1.0);
+        let tenants = vec![
+            TenantSpec::new(
+                "batch",
+                GraphShape::new("a")
+                    .node(NodeModel::uniform("n", 1_000, 1e-4)),
+                0.0,
+            )
+            .tag("batch"),
+            TenantSpec::new(
+                "short",
+                GraphShape::new("b").node(NodeModel::uniform("n", 10, 1e-4)),
+                1e-3,
+            )
+            .tag("short"),
+        ];
+        let out = replay_tenants(
+            &tenants,
+            &topo,
+            &cfg(),
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        let short = out.tenant("short").unwrap();
+        assert!(
+            (short.queueing_delay() + short.service_time() - short.latency())
+                .abs()
+                < 1e-12,
+            "latency must decompose exactly"
+        );
+        // the batch holds the single core for ~0.1s; the short tenant's
+        // wait dominates its ~1ms of own work
+        assert!(
+            short.queueing_delay() > 10.0 * short.service_time(),
+            "qdelay {} vs service {}",
+            short.queueing_delay(),
+            short.service_time()
+        );
+        let batch = out.tenant("batch").unwrap();
+        assert!(batch.queueing_delay() < 1e-3, "first tenant served at once");
     }
 
     #[test]

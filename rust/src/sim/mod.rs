@@ -39,11 +39,18 @@
 //! mirror of [`crate::sched::Session`] submission, and the oracle
 //! behind `figure tenancy` and
 //! [`crate::sched::autotune::tune_tenancy`].
+//!
+//! The open-loop serving regime replays through [`serve`]: a
+//! deterministic arrival trace of small request graphs, admitted per
+//! [`AdmissionPolicy`](crate::sched::AdmissionPolicy), over batch
+//! tenants — the DES mirror of [`crate::serve`] and the oracle behind
+//! `figure serve`.
 
 pub mod calibrate;
 pub mod engine;
 pub mod graph;
 pub mod model;
+pub mod serve;
 
 pub use engine::{simulate, SimOutcome};
 pub use graph::{
@@ -52,3 +59,7 @@ pub use graph::{
     NodeSimOutcome, TenancySimOutcome, TenantOutcome, TenantSpec,
 };
 pub use model::{CostModel, Workload};
+pub use serve::{
+    arrival_times, replay_open_loop, OpenLoopSpec, ServeSimOutcome,
+    SERVE_TAG,
+};

@@ -1,0 +1,467 @@
+//! Open-loop serving replay: the DES mirror of [`crate::serve`].
+//!
+//! The tenant replay ([`super::graph::replay_tenants`]) models a
+//! *closed* batch: every tenant is known up front and the run ends when
+//! the last one finishes. A service under load is the opposite shape —
+//! an open-loop generator emits requests at a target QPS regardless of
+//! how fast the system drains them, so overload shows up as unbounded
+//! queueing instead of a longer makespan. This module replays that
+//! regime in virtual time:
+//!
+//! - [`arrival_times`] expands an
+//!   [`ArrivalPattern`](crate::config::ArrivalPattern) (`burst` |
+//!   `uniform` | `poisson`) into the request arrival offsets for a
+//!   `qps × duration` window, deterministically from a seed. The real
+//!   serving loop replays the *same* trace on the wall clock, which is
+//!   what makes DES-vs-real admission agreement testable.
+//! - [`replay_open_loop`] feeds those arrivals — each a small
+//!   [`GraphShape`] request under the [`SERVE_TAG`] tag — through the
+//!   multi-tenant event loop with batch tenants underneath, applying
+//!   the [`AdmissionPolicy`] at every arrival exactly as the real
+//!   loop's [`Session::try_submit_graph`](crate::sched::Session)
+//!   would: backlog = admitted same-tag requests still in flight.
+//! - [`ServeSimOutcome`] reports the serving metrics — attained QPS
+//!   over the measurement window (arrivals after `warmup`), p50 / p99 /
+//!   p999 latency from a seeded [`LatencyReservoir`], SLO attainment,
+//!   shed counts, and the per-request accept/reject decision sequence.
+//!
+//! `figure serve` sweeps this replay over policy × admission on the
+//! modelled machines; the `serve` CLI subcommand then confirms the
+//! predicted ordering on the host executor.
+
+use crate::config::{ArrivalPattern, GraphMode, SchedConfig};
+use crate::sched::graph::GraphError;
+use crate::sched::session::AdmissionPolicy;
+use crate::sched::TenancyPolicy;
+use crate::sim::model::CostModel;
+use crate::topology::Topology;
+use crate::util::stats::LatencyReservoir;
+use crate::util::Rng;
+
+use super::graph::{
+    replay, replay_tenants_admitted, GraphShape, SimAdmission, TenantSpec,
+};
+
+/// Tenant tag of every open-loop request — the tag admission bounds and
+/// the fair policy shares against the batch tenants. Shared with the
+/// real serving loop so both count the same backlog.
+pub const SERVE_TAG: &str = "serve";
+
+/// Capacity of the per-run latency reservoir (both DES and real loop):
+/// enough for exact percentiles on every bounded soak the figures and
+/// CI run, bounded memory on long ones.
+pub const RESERVOIR_CAPACITY: usize = 8192;
+
+/// Deterministic request-arrival offsets (seconds from the serving
+/// epoch) for an open-loop `qps × duration` window: `burst` releases
+/// everything at 0 (the admission stress case), `uniform` spaces
+/// arrivals evenly, `poisson` draws exponential inter-arrival gaps from
+/// the seed. Always `ceil(qps × duration)` entries (the *offered* load;
+/// a poisson trace is clamped to the window), sorted ascending.
+pub fn arrival_times(
+    pattern: ArrivalPattern,
+    qps: f64,
+    duration: f64,
+    seed: u64,
+) -> Vec<f64> {
+    assert!(qps > 0.0 && duration > 0.0, "offered load must be positive");
+    let n = (qps * duration).ceil() as usize;
+    match pattern {
+        ArrivalPattern::Burst => vec![0.0; n],
+        ArrivalPattern::Uniform => {
+            (0..n).map(|i| i as f64 / qps).collect()
+        }
+        ArrivalPattern::Poisson => {
+            let mut rng = Rng::new(seed ^ 0x5E2F_E07A_9E1C_AB42);
+            let mut t = 0.0;
+            (0..n)
+                .map(|_| {
+                    t += rng.exponential(qps);
+                    (t - 1.0 / qps).max(0.0).min(duration)
+                })
+                .collect()
+        }
+    }
+}
+
+/// One open-loop serving scenario: the request shape and rate, the
+/// admission setting, and the batch tenants running underneath.
+#[derive(Clone)]
+pub struct OpenLoopSpec {
+    /// The per-request pipeline instance (e.g. a linreg-inference
+    /// prefix or a cc query), replayed once per arrival.
+    pub request: GraphShape,
+    /// Offered load: requests per (virtual) second.
+    pub qps: f64,
+    /// Length of the arrival window in seconds.
+    pub duration: f64,
+    /// Arrivals before this offset are served but not measured
+    /// (reservoir warm-up of the real loop mirrored here).
+    pub warmup: f64,
+    /// Latency SLO in seconds (attainment = served requests within it).
+    pub slo: f64,
+    /// Admission applied at every request arrival.
+    pub admission: AdmissionPolicy,
+    /// Estimated service seconds per backlog entry (the `Shed` input).
+    pub est_cost: f64,
+    /// Arrival pattern of the generator.
+    pub arrival: ArrivalPattern,
+    /// Seed for the arrival trace and the latency reservoir.
+    pub seed: u64,
+    /// Priority of every request tenant (for `policy=priority`).
+    pub priority: i64,
+    /// Fair-share weight of the [`SERVE_TAG`] tag (for `policy=fair`).
+    pub weight: u64,
+    /// Batch tenants running underneath the request stream.
+    pub batch: Vec<TenantSpec>,
+}
+
+/// Serving metrics of one [`replay_open_loop`] run (or, identically
+/// shaped, of one real `serve` soak — see [`crate::serve`]).
+#[derive(Debug, Clone)]
+pub struct ServeSimOutcome {
+    pub policy: TenancyPolicy,
+    pub admission: AdmissionPolicy,
+    /// Requests generated over the whole window (offered load).
+    pub offered: usize,
+    /// Requests arriving inside the measurement window (≥ warmup).
+    pub measured: usize,
+    /// Measured requests admitted and completed.
+    pub served: usize,
+    /// Measured requests rejected at admission.
+    pub shed: usize,
+    /// Served requests per second over the measurement window.
+    pub attained_qps: f64,
+    /// Latency percentiles over served measured requests (seconds).
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    /// Fraction of served measured requests within the SLO.
+    pub slo_attainment: f64,
+    /// Mean admission → first-dispatch delay of served measured
+    /// requests.
+    pub mean_queue_delay: f64,
+    /// Virtual completion time of everything (batch included).
+    pub makespan: f64,
+    /// Accept/reject per request in arrival order (warmup included) —
+    /// what the DES-vs-real agreement test compares.
+    pub decisions: Vec<bool>,
+}
+
+impl ServeSimOutcome {
+    /// Fraction of measured requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.measured == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.measured as f64
+        }
+    }
+}
+
+/// Replay an open-loop serving window in virtual time: the request
+/// stream of `spec` (admission-checked per arrival) over the batch
+/// tenants, on `topo` under `policy`. The event loop, pick policies,
+/// and admission rule are the same code paths `figure tenancy`
+/// validated against the real executor, so the attained-QPS / tail
+/// orderings this predicts are testable on the host (`serve` CLI).
+pub fn replay_open_loop(
+    spec: &OpenLoopSpec,
+    topo: &Topology,
+    default: &SchedConfig,
+    costs: &CostModel,
+    policy: TenancyPolicy,
+) -> Result<ServeSimOutcome, GraphError> {
+    let arrivals = arrival_times(
+        spec.arrival,
+        spec.qps,
+        spec.duration,
+        spec.seed,
+    );
+    let offered = arrivals.len();
+
+    // batch tenants first, then one tenant per request (spec order =
+    // arrival order: arrival_times is sorted and the replay breaks
+    // arrival ties by spec order)
+    let mut tenants = spec.batch.clone();
+    let first_req = tenants.len();
+    for (i, &t) in arrivals.iter().enumerate() {
+        tenants.push(
+            TenantSpec::new(&format!("req{i}"), spec.request.clone(), t)
+                .tag(SERVE_TAG)
+                .priority(spec.priority)
+                .weight(spec.weight),
+        );
+    }
+
+    // isolated baselines: requests are identical, so replay the shape
+    // once instead of per arrival (slowdowns are not a serving metric;
+    // the baseline only feeds TenantOutcome bookkeeping)
+    let request_isolated =
+        replay(&spec.request, topo, default, costs, GraphMode::Dag)?
+            .makespan();
+    let mut isolated = Vec::with_capacity(tenants.len());
+    for b in &spec.batch {
+        isolated.push(
+            replay(&b.shape, topo, default, costs, GraphMode::Dag)?
+                .makespan(),
+        );
+    }
+    isolated.extend(std::iter::repeat(request_isolated).take(offered));
+
+    let adm = SimAdmission {
+        policy: spec.admission,
+        tag: SERVE_TAG.to_string(),
+        est_cost: spec.est_cost,
+    };
+    let (out, decisions) = replay_tenants_admitted(
+        &tenants,
+        topo,
+        default,
+        costs,
+        policy,
+        &isolated,
+        Some(&adm),
+    )?;
+
+    let mut reservoir =
+        LatencyReservoir::new(RESERVOIR_CAPACITY, spec.seed ^ 0x7E5E);
+    let mut queue_delays = Vec::new();
+    let (mut measured, mut served, mut shed, mut within_slo) = (0, 0, 0, 0);
+    let mut last_finish: f64 = 0.0;
+    for (k, outcome) in out.tenants.iter().enumerate().skip(first_req) {
+        let admitted = decisions[k];
+        if outcome.arrival < spec.warmup {
+            continue;
+        }
+        measured += 1;
+        if !admitted {
+            shed += 1;
+            continue;
+        }
+        served += 1;
+        let lat = outcome.latency();
+        reservoir.record(lat);
+        queue_delays.push(outcome.queueing_delay());
+        if lat <= spec.slo {
+            within_slo += 1;
+        }
+        last_finish = last_finish.max(outcome.finish);
+    }
+    // attained throughput: served requests over the span from the start
+    // of the measurement window to the last served completion (the
+    // drain tail counts — a backlogged system can't bank its queue)
+    let span = (last_finish - spec.warmup).max(spec.duration - spec.warmup);
+    let attained_qps =
+        if span > 0.0 { served as f64 / span } else { 0.0 };
+
+    Ok(ServeSimOutcome {
+        policy,
+        admission: spec.admission,
+        offered,
+        measured,
+        served,
+        shed,
+        attained_qps,
+        p50: reservoir.p50(),
+        p99: reservoir.p99(),
+        p999: reservoir.p999(),
+        slo_attainment: if served == 0 {
+            0.0
+        } else {
+            within_slo as f64 / served as f64
+        },
+        mean_queue_delay: crate::util::stats::mean(&queue_delays),
+        makespan: out.makespan,
+        decisions: decisions[first_req..].to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::graph::NodeModel;
+
+    fn costs() -> CostModel {
+        CostModel::recorded()
+    }
+
+    /// A small 3-node request chain (the linreg-inference prefix
+    /// shape): colstats → stats → standardize.
+    fn request_shape(items: usize, per_item: f64) -> GraphShape {
+        GraphShape::new("linreg-infer")
+            .node(NodeModel::uniform("colstats", items, per_item))
+            .node(NodeModel::uniform("stats", 1, per_item).after("colstats"))
+            .node(
+                NodeModel::uniform("standardize", items, per_item)
+                    .after("stats"),
+            )
+    }
+
+    fn base_spec(admission: AdmissionPolicy) -> OpenLoopSpec {
+        // 8 cores, request ~ 2*32+1 items * 1e-4 = ~6.5e-3 core-sec:
+        // capacity ~ 8/6.5e-3 ≈ 1230 rps; offer well past it
+        OpenLoopSpec {
+            request: request_shape(32, 1e-4),
+            qps: 2_000.0,
+            duration: 0.1,
+            warmup: 0.02,
+            slo: 0.05,
+            admission,
+            est_cost: 6.5e-3,
+            arrival: ArrivalPattern::Uniform,
+            seed: 42,
+            priority: 0,
+            weight: 1,
+            batch: Vec::new(),
+        }
+    }
+
+    fn topo8() -> Topology {
+        Topology::symmetric("t8", 1, 8, 1.0, 1.0)
+    }
+
+    #[test]
+    fn arrival_times_shapes() {
+        let burst = arrival_times(ArrivalPattern::Burst, 100.0, 0.5, 1);
+        assert_eq!(burst.len(), 50);
+        assert!(burst.iter().all(|&t| t == 0.0));
+        let uni = arrival_times(ArrivalPattern::Uniform, 100.0, 0.5, 1);
+        assert_eq!(uni.len(), 50);
+        assert_eq!(uni[0], 0.0);
+        assert!((uni[49] - 0.49).abs() < 1e-12);
+        assert!(uni.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let poi = arrival_times(ArrivalPattern::Poisson, 100.0, 0.5, 1);
+        assert_eq!(poi.len(), 50);
+        assert!(poi.iter().all(|&t| (0.0..=0.5).contains(&t)));
+        assert!(poi.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        // deterministic per seed, distinct across seeds
+        assert_eq!(
+            poi,
+            arrival_times(ArrivalPattern::Poisson, 100.0, 0.5, 1)
+        );
+        assert_ne!(
+            poi,
+            arrival_times(ArrivalPattern::Poisson, 100.0, 0.5, 2)
+        );
+    }
+
+    #[test]
+    fn open_admission_diverges_bounded_holds_the_tail() {
+        let topo = topo8();
+        let cfg = SchedConfig::fine_grained();
+        let open = replay_open_loop(
+            &base_spec(AdmissionPolicy::Open),
+            &topo,
+            &cfg,
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        let bounded = replay_open_loop(
+            &base_spec(AdmissionPolicy::Bounded { max_backlog: 4 }),
+            &topo,
+            &cfg,
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        // open admits everything and the backlog (≈40% of 200 offered)
+        // drives p99 far past the SLO
+        assert_eq!(open.shed, 0);
+        assert!(open.p99 > base_spec(AdmissionPolicy::Open).slo);
+        // bounded sheds the excess and keeps the served tail inside it
+        assert!(bounded.shed > 0);
+        assert!(
+            bounded.p99 <= base_spec(AdmissionPolicy::Open).slo,
+            "bounded p99 {} vs slo",
+            bounded.p99
+        );
+        assert!(bounded.slo_attainment >= 0.9);
+        // latency decomposition carries through: queueing dominates
+        // under open overload
+        assert!(open.mean_queue_delay > bounded.mean_queue_delay);
+        // both keep the machine busy: attained within ~2x of each other
+        assert!(bounded.attained_qps > open.attained_qps * 0.5);
+    }
+
+    #[test]
+    fn shed_behaves_like_a_derived_bound_and_is_deterministic() {
+        let topo = topo8();
+        let cfg = SchedConfig::fine_grained();
+        let spec = base_spec(AdmissionPolicy::Shed { deadline: 0.026 });
+        let a = replay_open_loop(
+            &spec,
+            &topo,
+            &cfg,
+            &costs(),
+            TenancyPolicy::Fair,
+        )
+        .unwrap();
+        let b = replay_open_loop(
+            &spec,
+            &topo,
+            &cfg,
+            &costs(),
+            TenancyPolicy::Fair,
+        )
+        .unwrap();
+        assert_eq!(a.decisions, b.decisions, "replays are deterministic");
+        assert_eq!(a.p99, b.p99);
+        // deadline 26ms / est 6.5ms => rejects at backlog >= 5
+        assert!(a.shed > 0);
+        assert!(a.p99 <= spec.slo, "shed p99 {} vs slo {}", a.p99, spec.slo);
+        // offered - (served + shed) are the warmup arrivals
+        assert_eq!(a.measured, a.served + a.shed);
+        assert!(a.offered > a.measured);
+    }
+
+    #[test]
+    fn burst_trace_admits_exactly_the_bound_first() {
+        // all arrivals land before any completion, so Bounded{k} must
+        // accept exactly the first k requests — the deterministic
+        // sequence the DES-vs-real integration test relies on
+        let topo = topo8();
+        let cfg = SchedConfig::fine_grained();
+        let spec = OpenLoopSpec {
+            arrival: ArrivalPattern::Burst,
+            warmup: 0.0,
+            qps: 200.0,
+            duration: 0.1, // 20 requests, all at t=0
+            admission: AdmissionPolicy::Bounded { max_backlog: 5 },
+            ..base_spec(AdmissionPolicy::Open)
+        };
+        let out = replay_open_loop(
+            &spec,
+            &topo,
+            &cfg,
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        assert_eq!(out.offered, 20);
+        let expected: Vec<bool> =
+            (0..20).map(|i| i < 5).collect();
+        assert_eq!(out.decisions, expected);
+        assert_eq!(out.served, 5);
+        assert_eq!(out.shed, 15);
+        // batch tenants under a foreign tag never count against the
+        // serve backlog
+        let mut with_batch = spec.clone();
+        with_batch.batch = vec![TenantSpec::new(
+            "batch",
+            request_shape(64, 1e-4),
+            0.0,
+        )
+        .tag("batch")];
+        let out2 = replay_open_loop(
+            &with_batch,
+            &topo,
+            &cfg,
+            &costs(),
+            TenancyPolicy::Fifo,
+        )
+        .unwrap();
+        assert_eq!(out2.decisions, expected);
+    }
+}

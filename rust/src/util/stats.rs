@@ -61,6 +61,90 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// 99.9th percentile — the serving-tail metric (`figure serve`, `serve`).
+pub fn p999(xs: &[f64]) -> f64 {
+    percentile(xs, 99.9)
+}
+
+/// Bounded streaming percentile sketch: Vitter's Algorithm R reservoir
+/// over a deterministic seeded [`Rng`](super::Rng) stream.
+///
+/// The serving loop records one latency per request for an unbounded
+/// request stream; the reservoir keeps a fixed-capacity uniform sample so
+/// memory stays O(capacity) while p50/p99/p999 remain unbiased estimates.
+/// Below capacity the sample is exact (every observation retained), so
+/// percentiles agree bit-for-bit with [`percentile`] on the full stream.
+/// Same seed + same stream → same sample, keeping reports replayable.
+#[derive(Debug, Clone)]
+pub struct LatencyReservoir {
+    samples: Vec<f64>,
+    capacity: usize,
+    seen: u64,
+    rng: super::Rng,
+}
+
+impl LatencyReservoir {
+    /// A reservoir holding at most `capacity` samples (capacity ≥ 1).
+    pub fn new(capacity: usize, seed: u64) -> Self {
+        assert!(capacity > 0, "reservoir capacity must be positive");
+        LatencyReservoir {
+            samples: Vec::with_capacity(capacity),
+            capacity,
+            seen: 0,
+            rng: super::Rng::new(seed),
+        }
+    }
+
+    /// Record one observation (Algorithm R replacement above capacity).
+    pub fn record(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.capacity {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.capacity {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Total observations recorded (not the retained sample size).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained sample size (= min(seen, capacity)).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Retained sample, in arrival order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Percentile of the retained sample (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.percentile(99.9)
+    }
+}
+
 /// Jain's fairness index over non-negative allocations:
 /// `(Σx)² / (n·Σx²)`, 1.0 = perfectly even, 1/n = one sample holds
 /// everything. The multi-tenancy fairness metric of `figure tenancy`
@@ -132,5 +216,67 @@ mod tests {
     fn imbalance_of_uniform_is_one() {
         assert_eq!(imbalance(&[2.0, 2.0, 2.0]), 1.0);
         assert_eq!(imbalance(&[1.0, 3.0]), 1.5);
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        // Under capacity every observation is retained, so reservoir
+        // percentiles agree exactly with the batch functions.
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 100) as f64).collect();
+        let mut r = LatencyReservoir::new(256, 42);
+        for &x in &xs {
+            r.record(x);
+        }
+        assert_eq!(r.len(), xs.len());
+        assert_eq!(r.seen(), xs.len() as u64);
+        for p in [0.0, 25.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(r.percentile(p), percentile(&xs, p), "p{p}");
+        }
+        assert_eq!(r.p999(), p999(&xs));
+    }
+
+    #[test]
+    fn reservoir_deterministic_across_runs() {
+        let feed = |seed: u64| {
+            let mut r = LatencyReservoir::new(64, seed);
+            let mut src = super::super::Rng::new(7);
+            for _ in 0..10_000 {
+                r.record(src.next_f64() * 1e3);
+            }
+            r
+        };
+        let a = feed(42);
+        let b = feed(42);
+        assert_eq!(a.samples(), b.samples());
+        assert_eq!(a.p99(), b.p99());
+        // A different reservoir seed keeps a different (but equally
+        // sized) sample of the same stream.
+        let c = feed(43);
+        assert_eq!(c.len(), 64);
+        assert!(a.samples() != c.samples());
+    }
+
+    #[test]
+    fn reservoir_bounded_and_plausible() {
+        let mut r = LatencyReservoir::new(32, 1);
+        for i in 0..5_000 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.len(), 32);
+        assert_eq!(r.seen(), 5_000);
+        // Sample values all come from the stream and the median of a
+        // uniform ramp lands near the middle.
+        assert!(r.samples().iter().all(|&x| (0.0..5_000.0).contains(&x)));
+        let med = r.p50();
+        assert!((1_000.0..4_000.0).contains(&med), "median={med}");
+    }
+
+    #[test]
+    fn p999_tracks_extreme_tail() {
+        let mut xs = vec![1.0; 999];
+        xs.push(100.0);
+        // p99 sits on the flat body; p999 reaches into the single outlier.
+        assert!(percentile(&xs, 99.0) < 2.0);
+        assert!(p999(&xs) > 50.0);
     }
 }

@@ -46,6 +46,10 @@ COMMENT_WINDOW = 14
 
 SIM_ALLOWED = {"sched", "config", "topology", "util", "sim"}
 
+SERVE_ALLOWED = {"sched", "sim", "config", "topology", "util", "serve"}
+
+SERVE_CONSUMERS = ("rust/src/serve/", "rust/src/bench/")
+
 
 def strip(src):
     """Return (code_lines, comment_lines): comments and string/char
@@ -352,6 +356,25 @@ def lint_file(rel, src, ranks, findings):
                     findings.append((rel, i + 1, "layering-sim",
                                      f"sim may only use {sorted(SIM_ALLOWED)}, "
                                      f"found crate::{m.group(1)}"))
+
+    if rel.startswith("rust/src/serve/"):
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            for m in re.finditer(r"crate::(\w+)", line):
+                if m.group(1) not in SERVE_ALLOWED:
+                    findings.append((rel, i + 1, "layering-serve",
+                                     f"serve may only use {sorted(SERVE_ALLOWED)}, "
+                                     f"found crate::{m.group(1)}"))
+    serve_consumer = (rel.startswith(SERVE_CONSUMERS)
+                      or rel == "rust/src/main.rs")
+    if rel.startswith("rust/src/") and not serve_consumer:
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            for m in re.finditer(r"crate::serve\b", line):
+                findings.append((rel, i + 1, "layering-serve-consumers",
+                                 "only bench/ and main.rs may import crate::serve"))
 
     # --- no unwrap/expect in the worker dispatch path ---
     for fname in DISPATCH_PATH_FNS.get(rel, []):

@@ -74,6 +74,14 @@ const DISPATCH_PATH_FNS: &[(&str, &[&str])] = &[
 /// consumes the scheduler's public surface, never `bench`/`apps`.
 const SIM_ALLOWED: &[&str] = &["sched", "config", "topology", "util", "sim"];
 
+/// Crate-internal roots `serve` may import from (plus itself): the
+/// serving loop drives the scheduler's session surface and shares the
+/// arrival/reservoir machinery with its DES mirror (`sim::serve`), but
+/// never reaches into `bench`/`apps`/`vee`. The reverse direction is
+/// also closed: only `bench/` and `main.rs` may import `crate::serve`
+/// (`layering-serve-consumers`), so the serving layer stays a leaf.
+const SERVE_ALLOWED: &[&str] = &["sched", "sim", "config", "topology", "util", "serve"];
+
 /// How many lines above an `unsafe`/`transmute` the justifying comment
 /// may sit. Multi-line `let` bindings put statement fragments between
 /// the comment block and the keyword, so strict adjacency is too rigid.
@@ -644,6 +652,48 @@ fn lint_file(rel: &str, src: &str, ranks: &[(String, u32)], out: &mut Vec<Findin
         }
     }
 
+    if rel.starts_with("rust/src/serve/") {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            for p in find_all(line, "crate::") {
+                let seg = ident_at(line, p + 7);
+                if !seg.is_empty() && !SERVE_ALLOWED.contains(&seg) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-serve",
+                        msg: format!(
+                            "serve may only use {SERVE_ALLOWED:?}, found crate::{seg}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    let serve_consumer = rel.starts_with("rust/src/serve/")
+        || rel.starts_with("rust/src/bench/")
+        || rel == "rust/src/main.rs";
+    if rel.starts_with("rust/src/") && !serve_consumer {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            for p in find_all(line, "crate::") {
+                if ident_at(line, p + 7) == "serve" {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-serve-consumers",
+                        msg: "only bench/ and main.rs may import crate::serve"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+
     // -- no unwrap/expect on the worker dispatch path --
     for (file, fns) in DISPATCH_PATH_FNS {
         if *file != rel {
@@ -988,6 +1038,37 @@ mod tests {
         let src = "use crate::sched::Executor;\nuse crate::bench::harness;\n";
         let f = run("rust/src/sim/x.rs", src);
         assert_eq!(rules(&f), vec!["layering-sim"]);
+    }
+
+    #[test]
+    fn serve_is_limited_to_sched_sim_and_shared_surface() {
+        let src = "use crate::sim::serve::SERVE_TAG;\n\
+                   use crate::sched::SubmitOpts;\n\
+                   use crate::apps::cc;\n";
+        let f = run("rust/src/serve/mod.rs", src);
+        assert_eq!(rules(&f), vec!["layering-serve"]);
+        assert!(f[0].msg.contains("crate::apps"));
+    }
+
+    #[test]
+    fn only_bench_and_main_may_import_serve() {
+        let src = "use crate::serve::ServeSpec;\n";
+        let f = run("rust/src/vee/mod.rs", src);
+        assert_eq!(rules(&f), vec!["layering-serve-consumers"]);
+        assert!(run("rust/src/bench/figures.rs", src).is_empty());
+        assert!(run("rust/src/main.rs", src).is_empty());
+        assert!(run("rust/src/serve/report.rs", src).is_empty());
+    }
+
+    #[test]
+    fn serve_import_under_cfg_test_is_allowed() {
+        let src = "use crate::matrix::Dense;\n\
+                   \n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use crate::serve::ServeSpec;\n\
+                   }\n";
+        assert!(run("rust/src/vee/mod.rs", src).is_empty());
     }
 
     #[test]
