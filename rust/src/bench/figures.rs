@@ -226,14 +226,27 @@ pub struct Row {
     pub vs_static: f64,
     pub steals: usize,
     pub cov: f64,
+    /// Accumulated per-worker queue-acquisition wait
+    /// ([`WorkerStats::queue_wait`](crate::sched::metrics::WorkerStats)),
+    /// seconds summed over workers — the contention cost a scheme pays
+    /// for its chunk strategy. Zero for rows derived from replays that
+    /// do not expose per-worker reports.
+    pub queue_wait: f64,
 }
 
 impl Row {
     pub fn print(&self) {
         let victim = self.victim.unwrap_or("-");
         println!(
-            "  {:<7} {:<7} time={:>9.3}s vs_STATIC={:>6.3} steals={:<8} cov={:.3}",
-            self.scheme, victim, self.time, self.vs_static, self.steals, self.cov
+            "  {:<7} {:<7} time={:>9.3}s vs_STATIC={:>6.3} steals={:<8} \
+             cov={:.3} qwait={:.4}s",
+            self.scheme,
+            victim,
+            self.time,
+            self.vs_static,
+            self.steals,
+            self.cov,
+            self.queue_wait
         );
     }
 }
@@ -293,6 +306,7 @@ pub fn cc_figure(
             let mut time = 0.0;
             let mut steals = 0usize;
             let mut cov = 0.0;
+            let mut qwait = 0.0;
             for (rep, (g, iters)) in reps.iter().enumerate() {
                 let sched = SchedConfig {
                     scheme,
@@ -320,6 +334,10 @@ pub fn cc_figure(
                     .first()
                     .map(|o| o.report.cov())
                     .unwrap_or(0.0);
+                qwait += outcomes
+                    .iter()
+                    .map(|o| o.report.total_queue_wait())
+                    .sum::<f64>();
             }
             let n = reps.len() as f64;
             rows.push(Row {
@@ -329,6 +347,7 @@ pub fn cc_figure(
                 vs_static: 1.0,
                 steals: steals / reps.len(),
                 cov: cov / n,
+                queue_wait: qwait / n,
             });
         }
     }
@@ -355,6 +374,7 @@ pub fn linreg_figure(machine: &Topology, params: &FigureParams) -> Vec<Row> {
         let mut time = 0.0;
         let mut steals = 0;
         let mut cov = 0.0;
+        let mut qwait = 0.0;
         let reps = params.repetitions.max(1);
         for rep in 0..reps {
             for pass in 0..passes {
@@ -376,6 +396,7 @@ pub fn linreg_figure(machine: &Topology, params: &FigureParams) -> Vec<Row> {
                 time += out.makespan();
                 steals += out.report.total_steals();
                 cov = out.report.cov();
+                qwait += out.report.total_queue_wait();
             }
         }
         let (time, steals) = (time / reps as f64, steals / reps);
@@ -386,6 +407,7 @@ pub fn linreg_figure(machine: &Topology, params: &FigureParams) -> Vec<Row> {
             vs_static: 1.0,
             steals,
             cov,
+            queue_wait: qwait / reps as f64,
         });
     }
     fill_vs_static(&mut rows);
@@ -883,6 +905,7 @@ fn dag_row_to_row(r: DagRow) -> Row {
         vs_static: r.dag / r.barrier,
         steals: 0,
         cov: 0.0,
+        queue_wait: 0.0,
     }
 }
 
@@ -894,6 +917,7 @@ fn hetero_row_to_row(r: HeteroRow) -> Row {
         vs_static: r.vs_any,
         steals: 0,
         cov: 0.0,
+        queue_wait: 0.0,
     }
 }
 
@@ -919,6 +943,7 @@ fn tenancy_rows_to_rows(rows: &[TenancyRow]) -> Vec<Row> {
                 },
                 steals: 0,
                 cov: 0.0,
+                queue_wait: 0.0,
             }
         })
         .collect()
@@ -965,6 +990,7 @@ fn serve_rows_to_rows(rows: &[ServeRow]) -> Vec<Row> {
                 },
                 steals: 0,
                 cov: 0.0,
+                queue_wait: 0.0,
             }
         })
         .collect()

@@ -173,6 +173,43 @@ impl ArrivalPattern {
     }
 }
 
+/// Event-trace gate (`trace=`): whether the `obs::trace` ring buffers
+/// record scheduler events. `Off` compiles the hook points down to one
+/// relaxed load and a branch; `Sampled(n)` keeps every n-th job
+/// (job-id modulo, so a job's events are kept or dropped together).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// No recording (default): hook points are a branch-on-relaxed-load.
+    #[default]
+    Off,
+    /// Record every event.
+    On,
+    /// Record events of every n-th job (plus job-less events).
+    Sampled(u32),
+}
+
+impl TraceMode {
+    pub fn name(&self) -> String {
+        match self {
+            TraceMode::Off => "off".to_string(),
+            TraceMode::On => "on".to_string(),
+            TraceMode::Sampled(n) => format!("sampled:{n}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "off" | "0" | "false" => Some(TraceMode::Off),
+            "on" | "1" | "true" => Some(TraceMode::On),
+            _ => {
+                let n = s.strip_prefix("sampled:")?;
+                n.parse().ok().filter(|&n| n >= 1).map(TraceMode::Sampled)
+            }
+        }
+    }
+}
+
 /// A full experiment configuration (scheduling + machine + workload).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -196,6 +233,9 @@ pub struct RunConfig {
     /// Arrival pattern of the multi-tenant workload
     /// (`arrival=burst|uniform|poisson`; used by `figure tenancy`).
     pub arrival: ArrivalPattern,
+    /// Event-trace gate (`trace=off|on|sampled:<n>`; see
+    /// [`crate::obs::trace`]).
+    pub trace: TraceMode,
     /// Free-form workload parameters (apps interpret their own keys).
     pub params: BTreeMap<String, String>,
 }
@@ -211,6 +251,7 @@ impl Default for RunConfig {
             placement: PlacementPolicy::default(),
             policy: TenancyPolicy::default(),
             arrival: ArrivalPattern::default(),
+            trace: TraceMode::default(),
             params: BTreeMap::new(),
         }
     }
@@ -317,6 +358,14 @@ impl RunConfig {
                     ))
                 })?;
             }
+            "trace" => {
+                self.trace = TraceMode::parse(value).ok_or_else(|| {
+                    ConfigError(format!(
+                        "unknown trace mode '{value}' \
+                         (off | on | sampled:<n>)"
+                    ))
+                })?;
+            }
             _ => {
                 self.params.insert(key.to_string(), value.to_string());
             }
@@ -407,6 +456,7 @@ impl fmt::Display for RunConfig {
         writeln!(f, "placement = {}", self.placement.name())?;
         writeln!(f, "policy = {}", self.policy.name())?;
         writeln!(f, "arrival = {}", self.arrival.name())?;
+        writeln!(f, "trace = {}", self.trace.name())?;
         for (k, v) in &self.params {
             writeln!(f, "{k} = {v}")?;
         }
@@ -541,6 +591,23 @@ mod tests {
             ArrivalPattern::Poisson,
         ] {
             assert_eq!(ArrivalPattern::parse(a.name()), Some(a));
+        }
+    }
+
+    #[test]
+    fn trace_key_parses_and_round_trips() {
+        assert_eq!(RunConfig::default().trace, TraceMode::Off);
+        let cfg = RunConfig::from_pairs(["trace=on"]).unwrap();
+        assert_eq!(cfg.trace, TraceMode::On);
+        assert!(cfg.params.is_empty(), "trace is a typed key, not a param");
+        let cfg = RunConfig::from_pairs(["trace=sampled:8"]).unwrap();
+        assert_eq!(cfg.trace, TraceMode::Sampled(8));
+        assert!(RunConfig::from_pairs(["trace=bogus"]).is_err());
+        assert!(RunConfig::from_pairs(["trace=sampled:0"]).is_err());
+        let back = RunConfig::from_text(&cfg.to_string()).unwrap();
+        assert_eq!(back.trace, TraceMode::Sampled(8));
+        for mode in [TraceMode::Off, TraceMode::On, TraceMode::Sampled(4)] {
+            assert_eq!(TraceMode::parse(&mode.name()), Some(mode));
         }
     }
 

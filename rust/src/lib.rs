@@ -92,6 +92,12 @@
 //!   [`sched::AdmissionPolicy`] admission (`Open`/`Bounded`/`Shed`),
 //!   streaming latency reservoirs, and SLO attainment reporting; the
 //!   DES mirror is [`sim::serve`] (CLI `serve`, `figure serve`).
+//! - [`obs`] — observability: lock-free per-worker trace rings
+//!   ([`obs::trace`], CLI `trace=off|on|sampled:<n>`), Chrome
+//!   trace-event export + [`obs::ObsSummary`] ([`obs::export`]), and
+//!   the live [`obs::MetricsRegistry`] snapshotted during `serve`
+//!   soaks ([`obs::live`]). The DES emits the same event stream in
+//!   virtual time, making real and simulated timelines diffable.
 
 pub mod apps;
 pub mod bench;
@@ -100,6 +106,7 @@ pub mod coordinator;
 pub mod dsl;
 pub mod graph;
 pub mod matrix;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

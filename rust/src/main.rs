@@ -44,6 +44,13 @@
 //! `max_backlog=`, `deadline_ms=`, `est_cost_ms=`,
 //! `requests=linreg|cc`, `work=` and `batch=` (all riding the
 //! free-form parameter map).
+//!
+//! Observability: `trace=off|on|sampled:<n>` arms the per-worker event
+//! trace (`run`, `serve` and the DES-backed `figure` replays all emit
+//! the same stream), `trace_file=` picks the Chrome-trace output path
+//! (default `trace.json`, loadable in Perfetto), and
+//! `metrics_interval=<secs>` samples the live metrics registry during
+//! `serve` soaks.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -89,6 +96,9 @@ fn usage() -> String {
      \x20 daphne-sched figure serve              # open-loop serving, policy x admission\n\
      \x20 daphne-sched serve qps=400 duration=2 slo_ms=10 admission=bounded \
      max_backlog=4 policy=fair\n\
+     \x20 daphne-sched serve qps=400 trace=on trace_file=serve.json \
+     metrics_interval=0.5  # traced soak\n\
+     \x20 daphne-sched run cc nodes=50000 trace=sampled:8  # 1-in-8 jobs traced\n\
      \x20 daphne-sched tune nodes=100000 machine=broadwell20  # single-workload sweep\n\
      \x20 daphne-sched tune graph=linreg rows=100000 machine=cascadelake56\n\
      \x20 daphne-sched tune graph=hetero machine=hetero56 placement=auto\n\
@@ -102,6 +112,43 @@ fn usage() -> String {
 fn parse_pairs(rest: &[String]) -> Result<RunConfig, String> {
     RunConfig::from_pairs(rest.iter().map(|s| s.as_str()))
         .map_err(|e| e.to_string())
+}
+
+/// Arm the event trace per the `trace=` key, sized for `workers` lanes
+/// (plus the control lane). Must run before the executor spawns (or the
+/// replay starts) so every hook sees the gate open; a no-op for
+/// `trace=off`, which leaves the hooks as one relaxed load each.
+fn trace_init(cfg: &RunConfig, workers: usize) {
+    use daphne_sched::obs::trace;
+    if cfg.trace != daphne_sched::config::TraceMode::Off {
+        trace::enable(cfg.trace, workers, trace::DEFAULT_CAPACITY);
+    }
+}
+
+/// Drain the rings into a Chrome-trace JSON file (`trace_file=`,
+/// default `trace.json`) and print the [`ObsSummary`]; a no-op when
+/// tracing never armed. `queue_wait` is the run's accumulated
+/// per-worker `WorkerStats::queue_wait`, when the caller has a
+/// scheduler report to read it from.
+fn trace_finish(cfg: &RunConfig, queue_wait: Option<f64>) -> Result<(), String> {
+    use daphne_sched::obs::{export, trace, ObsSummary};
+    if !trace::enabled() {
+        return Ok(());
+    }
+    let events = trace::drain();
+    let path = cfg.param_str("trace_file", "trace.json").to_string();
+    export::write_chrome_trace(std::path::Path::new(&path), &events)
+        .map_err(|e| format!("writing trace file {path}: {e}"))?;
+    let mut summary = ObsSummary::from_events(&events);
+    if let Some(qw) = queue_wait {
+        summary = summary.with_queue_wait(qw);
+    }
+    println!("{summary}");
+    println!(
+        "trace: {} event(s) -> {path} (open in Perfetto or chrome://tracing)",
+        events.len()
+    );
+    Ok(())
 }
 
 fn run(args: &[String]) -> Result<(), String> {
@@ -134,6 +181,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     // `run` executes natively on this host; `machine=` presets are for
     // `figure` (DES). Still allowed here for thread-count experiments.
     let topo = cfg.topology.clone();
+    trace_init(&cfg, topo.n_cores());
     match app.as_str() {
         "cc" => {
             let nodes = cfg.param_usize("nodes", 50_000);
@@ -216,6 +264,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             for (i, r) in result.reports.iter().enumerate().take(3) {
                 println!("  iter {i}: {}", r.row());
             }
+            let qwait: f64 =
+                result.reports.iter().map(|r| r.total_queue_wait()).sum();
+            trace_finish(&cfg, Some(qwait))?;
             Ok(())
         }
         "linreg" => {
@@ -286,6 +337,13 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             for (name, r) in &result.report.stages {
                 println!("  {name}: {}", r.row());
             }
+            let qwait: f64 = result
+                .report
+                .stages
+                .iter()
+                .map(|(_, r)| r.total_queue_wait())
+                .sum();
+            trace_finish(&cfg, Some(qwait))?;
             Ok(())
         }
         other => Err(format!("unknown app '{other}'")),
@@ -338,9 +396,11 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         rows: cfg.param_usize("rows", 32),
         work: cfg.param_usize("work", 2_000) as u64,
         batch_tenants: cfg.param_usize("batch", 1),
+        metrics_interval: cfg.param_f64("metrics_interval", 0.0),
         ..ServeSpec::default()
     };
     let topo = cfg.topology.clone();
+    trace_init(&cfg, topo.n_cores());
     let exec = Executor::new_with_policy(
         Arc::new(topo.clone()),
         Arc::new(cfg.sched.clone()),
@@ -374,6 +434,15 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         report.mean_queue_delay * 1e3,
         report.wall
     );
+    if !report.metrics.is_empty() {
+        use daphne_sched::obs::MetricsSnapshot;
+        println!("live metrics ({} snapshot(s)):", report.metrics.len());
+        println!("{}", MetricsSnapshot::header());
+        for snap in &report.metrics {
+            println!("{}", snap.row());
+        }
+    }
+    trace_finish(&cfg, None)?;
     Ok(())
 }
 
@@ -438,15 +507,20 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
     };
     let cfg = parse_pairs(&args[1..])?;
     let params = figure_params(&cfg);
+    // Figures replay on modelled machines whose virtual worker count
+    // varies per figure; 64 lanes covers the largest (cascadelake56).
+    trace_init(&cfg, 64);
     if which == "all" {
         for id in FigureId::ALL {
             figures::print_figure(id, &params);
         }
+        trace_finish(&cfg, None)?;
         return Ok(());
     }
     let id = FigureId::parse(which)
         .ok_or_else(|| format!("unknown figure '{which}'"))?;
     figures::print_figure(id, &params);
+    trace_finish(&cfg, None)?;
     Ok(())
 }
 

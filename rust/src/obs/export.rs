@@ -1,0 +1,384 @@
+//! Trace export: merge drained ring buffers into a Chrome trace-event
+//! JSON file (loadable in Perfetto / `chrome://tracing`) and distill a
+//! compact [`ObsSummary`] for the CLI.
+//!
+//! The Chrome format is the stable subset every viewer understands: a
+//! top-level `traceEvents` array of objects with `ph` (phase), `pid`,
+//! `tid`, `ts` (microseconds, f64) and `name`. We emit one `tid` lane
+//! per worker (plus the control lane), `B`/`E` duration pairs for
+//! chunk execution, `i` instants for everything else, `C` counter
+//! tracks for backlog and admissions, and `M` metadata naming the
+//! lanes. Written via `util::json` — no serializer dependency.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::obs::trace::{tag_name, TraceEvent, TraceKind};
+use crate::util::json::{self, Json};
+
+/// The process id used for every emitted event (single-process traces).
+const TRACE_PID: f64 = 1.0;
+
+/// Queue-delay histogram buckets, log decades in nanoseconds:
+/// `<10µs, <100µs, <1ms, <10ms, <100ms, ≥100ms`.
+const DELAY_BUCKET_EDGES_NS: [u64; 5] = [10_000, 100_000, 1_000_000, 10_000_000, 100_000_000];
+const DELAY_BUCKET_LABELS: [&str; 6] = ["<10us", "<100us", "<1ms", "<10ms", "<100ms", ">=100ms"];
+
+fn bucket_of(delay_ns: u64) -> usize {
+    DELAY_BUCKET_EDGES_NS
+        .iter()
+        .position(|edge| delay_ns < *edge)
+        .unwrap_or(DELAY_BUCKET_EDGES_NS.len())
+}
+
+/// Resolve a hash to a human-readable label: the interned string when
+/// one exists (tags always; job names when a submission site interned
+/// them), a short hex form otherwise.
+fn label(hash: u64) -> String {
+    if hash == 0 {
+        return "(untagged)".to_string();
+    }
+    tag_name(hash).unwrap_or_else(|| format!("{:012x}", hash & 0xFFFF_FFFF_FFFF))
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn event_args(e: &TraceEvent) -> Json {
+    let mut fields = vec![("job", Json::Num(e.job as f64))];
+    if e.name_hash != 0 {
+        fields.push(("name", Json::Str(label(e.name_hash))));
+    }
+    if e.tag_hash != 0 {
+        fields.push(("tag", Json::Str(label(e.tag_hash))));
+    }
+    obj(fields)
+}
+
+/// Build the Chrome trace-event document for a drained event stream.
+/// Events must be timestamp-sorted, which [`crate::obs::trace::drain`]
+/// guarantees.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+
+    // Lane metadata: name every tid that appears. The highest lane is
+    // the control lane (submission-side events) by construction.
+    let max_worker = events.iter().map(|e| e.worker).max();
+    for w in events.iter().map(|e| e.worker).collect::<std::collections::BTreeSet<_>>() {
+        let name = if Some(w) == max_worker && events.iter().any(|e| {
+            e.worker == w && matches!(e.kind, TraceKind::Admit | TraceKind::Shed | TraceKind::Enqueue)
+        }) {
+            "control".to_string()
+        } else {
+            format!("worker {}", w)
+        };
+        out.push(obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("thread_name".to_string())),
+            ("pid", Json::Num(TRACE_PID)),
+            ("tid", Json::Num(w as f64)),
+            ("ts", Json::Num(0.0)),
+            ("args", obj(vec![("name", Json::Str(name))])),
+        ]));
+    }
+
+    // Counter-track state, sampled at each contributing event.
+    let (mut enq, mut done, mut admitted, mut shed) = (0u64, 0u64, 0u64, 0u64);
+    // Per-lane open-slice depth so an orphaned TaskEnd (its TaskStart
+    // was overwritten in the ring) cannot emit an unbalanced `E`.
+    let mut depth: BTreeMap<u32, u64> = BTreeMap::new();
+
+    for e in events {
+        let ts_us = e.ts_ns as f64 / 1_000.0;
+        let base = |ph: &str| {
+            vec![
+                ("ph", Json::Str(ph.to_string())),
+                ("pid", Json::Num(TRACE_PID)),
+                ("tid", Json::Num(e.worker as f64)),
+                ("ts", Json::Num(ts_us)),
+            ]
+        };
+        match e.kind {
+            TraceKind::TaskStart => {
+                let mut f = base("B");
+                f.push(("name", Json::Str(format!("run {}", label(e.name_hash)))));
+                f.push(("cat", Json::Str("task".to_string())));
+                f.push(("args", event_args(e)));
+                out.push(obj(f));
+                *depth.entry(e.worker).or_insert(0) += 1;
+            }
+            TraceKind::TaskEnd => {
+                let d = depth.entry(e.worker).or_insert(0);
+                if *d > 0 {
+                    *d -= 1;
+                    let mut f = base("E");
+                    f.push(("name", Json::Str(format!("run {}", label(e.name_hash)))));
+                    f.push(("cat", Json::Str("task".to_string())));
+                    out.push(obj(f));
+                }
+            }
+            kind => {
+                let mut f = base("i");
+                f.push(("name", Json::Str(kind.name().to_string())));
+                f.push(("cat", Json::Str("sched".to_string())));
+                f.push(("s", Json::Str("t".to_string())));
+                f.push(("args", event_args(e)));
+                out.push(obj(f));
+            }
+        }
+        // Counter tracks: backlog (enqueued minus completed jobs) and
+        // cumulative admission decisions.
+        match e.kind {
+            TraceKind::Enqueue | TraceKind::NodeComplete | TraceKind::Cancel => {
+                match e.kind {
+                    TraceKind::Enqueue => enq += 1,
+                    _ => done += 1,
+                }
+                out.push(obj(vec![
+                    ("ph", Json::Str("C".to_string())),
+                    ("pid", Json::Num(TRACE_PID)),
+                    ("name", Json::Str("backlog".to_string())),
+                    ("ts", Json::Num(ts_us)),
+                    ("args", obj(vec![("jobs", Json::Num(enq.saturating_sub(done) as f64))])),
+                ]));
+            }
+            TraceKind::Admit | TraceKind::Shed => {
+                match e.kind {
+                    TraceKind::Admit => admitted += 1,
+                    _ => shed += 1,
+                }
+                out.push(obj(vec![
+                    ("ph", Json::Str("C".to_string())),
+                    ("pid", Json::Num(TRACE_PID)),
+                    ("name", Json::Str("admissions".to_string())),
+                    ("ts", Json::Num(ts_us)),
+                    ("args", obj(vec![
+                        ("admitted", Json::Num(admitted as f64)),
+                        ("shed", Json::Num(shed as f64)),
+                    ])),
+                ]));
+            }
+            _ => {}
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Serialize a drained event stream to `path` as Chrome trace-event
+/// JSON. Load the file in <https://ui.perfetto.dev> or
+/// `chrome://tracing`.
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> io::Result<()> {
+    fs::write(path, json::to_string(&chrome_trace_json(events)))
+}
+
+/// Compact digest of a drained trace, printed by the CLI after traced
+/// runs: steal efficiency, park/unpark churn, and a per-tag queue-delay
+/// histogram (first `Dispatch` minus `Enqueue` per job).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsSummary {
+    pub events: usize,
+    pub steals: u64,
+    pub failed_steals: u64,
+    pub parks: u64,
+    pub unparks: u64,
+    /// tag hash -> delay histogram (buckets per [`DELAY_BUCKET_LABELS`]).
+    pub queue_delay_hist: BTreeMap<u64, [u64; 6]>,
+    /// Summed `WorkerStats.queue_wait` (seconds) when the caller has a
+    /// `SchedReport` in hand — see [`ObsSummary::with_queue_wait`].
+    pub queue_wait_secs: Option<f64>,
+}
+
+impl ObsSummary {
+    pub fn from_events(events: &[TraceEvent]) -> ObsSummary {
+        let mut s = ObsSummary { events: events.len(), ..ObsSummary::default() };
+        // (tag, job) -> (enqueue ts, first dispatch ts)
+        let mut jobs: BTreeMap<(u64, u64), (Option<u64>, Option<u64>)> = BTreeMap::new();
+        for e in events {
+            match e.kind {
+                TraceKind::Steal => s.steals += 1,
+                TraceKind::FailedSteal => s.failed_steals += 1,
+                TraceKind::Park => s.parks += 1,
+                TraceKind::Unpark => s.unparks += 1,
+                TraceKind::Enqueue => {
+                    let entry = jobs.entry((e.tag_hash, e.job)).or_default();
+                    entry.0.get_or_insert(e.ts_ns);
+                }
+                TraceKind::Dispatch => {
+                    let entry = jobs.entry((e.tag_hash, e.job)).or_default();
+                    entry.1.get_or_insert(e.ts_ns);
+                }
+                _ => {}
+            }
+        }
+        for ((tag, _job), (enq, disp)) in jobs {
+            if let (Some(e), Some(d)) = (enq, disp) {
+                let hist = s.queue_delay_hist.entry(tag).or_insert([0; 6]);
+                hist[bucket_of(d.saturating_sub(e))] += 1;
+            }
+        }
+        s
+    }
+
+    /// Attach the summed per-worker `queue_wait` from a `SchedReport`,
+    /// surfacing queue-acquisition overhead next to the event digest.
+    pub fn with_queue_wait(mut self, secs: f64) -> ObsSummary {
+        self.queue_wait_secs = Some(secs);
+        self
+    }
+
+    /// `steals / (steals + failed_steals)`, or `None` when no steal
+    /// rounds ran.
+    pub fn steal_efficiency(&self) -> Option<f64> {
+        let total = self.steals + self.failed_steals;
+        (total > 0).then(|| self.steals as f64 / total as f64)
+    }
+}
+
+impl fmt::Display for ObsSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "obs summary: {} events", self.events)?;
+        match self.steal_efficiency() {
+            Some(eff) => writeln!(
+                f,
+                "  steal efficiency: {:.1}% ({} hit / {} missed)",
+                eff * 100.0,
+                self.steals,
+                self.failed_steals
+            )?,
+            None => writeln!(f, "  steal efficiency: n/a (no steal rounds)")?,
+        }
+        writeln!(f, "  park/unpark churn: {} parks, {} unparks", self.parks, self.unparks)?;
+        if let Some(qw) = self.queue_wait_secs {
+            writeln!(f, "  worker queue_wait total: {:.6} s", qw)?;
+        }
+        if !self.queue_delay_hist.is_empty() {
+            writeln!(f, "  queue delay (enqueue -> first dispatch), jobs per tag:")?;
+            for (tag, hist) in &self.queue_delay_hist {
+                let cells: Vec<String> = DELAY_BUCKET_LABELS
+                    .iter()
+                    .zip(hist.iter())
+                    .map(|(l, n)| format!("{}:{}", l, n))
+                    .collect();
+                writeln!(f, "    {:<12} {}", label(*tag), cells.join(" "))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::intern_tag;
+
+    fn ev(ts_ns: u64, worker: u32, kind: TraceKind, job: u64, tag_hash: u64) -> TraceEvent {
+        TraceEvent { ts_ns, worker, kind, job, name_hash: 0, tag_hash }
+    }
+
+    #[test]
+    fn delay_buckets_split_on_log_decades() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(9_999), 0);
+        assert_eq!(bucket_of(10_000), 1);
+        assert_eq!(bucket_of(999_999), 2);
+        assert_eq!(bucket_of(5_000_000), 3);
+        assert_eq!(bucket_of(250_000_000), 5);
+    }
+
+    #[test]
+    fn summary_counts_steals_parks_and_queue_delay() {
+        let tag = intern_tag("export-test");
+        let events = vec![
+            ev(0, 2, TraceKind::Enqueue, 1, tag),
+            ev(5_000, 0, TraceKind::Dispatch, 1, tag),
+            ev(6_000, 0, TraceKind::Dispatch, 1, tag), // later re-dispatch ignored
+            ev(7_000, 1, TraceKind::Steal, 1, tag),
+            ev(8_000, 1, TraceKind::FailedSteal, u64::MAX, 0),
+            ev(9_000, 1, TraceKind::Park, u64::MAX, 0),
+            ev(9_500, 1, TraceKind::Unpark, u64::MAX, 0),
+            ev(10_000, 2, TraceKind::Enqueue, 2, tag),
+            ev(2_010_000, 0, TraceKind::Dispatch, 2, tag),
+        ];
+        let s = ObsSummary::from_events(&events);
+        assert_eq!(s.events, 9);
+        assert_eq!((s.steals, s.failed_steals), (1, 1));
+        assert_eq!((s.parks, s.unparks), (1, 1));
+        assert_eq!(s.steal_efficiency(), Some(0.5));
+        let hist = s.queue_delay_hist.get(&tag).expect("tag histogram");
+        assert_eq!(hist[0], 1, "5us delay lands in <10us");
+        assert_eq!(hist[3], 1, "2ms delay lands in <10ms");
+        let rendered = format!("{}", s.with_queue_wait(0.5));
+        assert!(rendered.contains("export-test"));
+        assert!(rendered.contains("queue_wait total: 0.500000 s"));
+    }
+
+    #[test]
+    fn empty_summary_renders_without_panicking() {
+        let s = ObsSummary::from_events(&[]);
+        assert_eq!(s.steal_efficiency(), None);
+        let rendered = format!("{}", s);
+        assert!(rendered.contains("0 events"));
+        assert!(rendered.contains("n/a"));
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_util_json() {
+        let tag = intern_tag("chrome-test");
+        let events = vec![
+            ev(1_000, 2, TraceKind::Admit, 0, tag),
+            ev(1_100, 2, TraceKind::Enqueue, 0, tag),
+            ev(2_000, 0, TraceKind::Dispatch, 0, tag),
+            ev(2_000, 0, TraceKind::TaskStart, 0, tag),
+            ev(3_000, 0, TraceKind::TaskEnd, 0, tag),
+            ev(3_500, 0, TraceKind::NodeComplete, 0, tag),
+            ev(4_000, 2, TraceKind::Shed, 1, tag),
+        ];
+        let doc = json::parse(&json::to_string(&chrome_trace_json(&events))).expect("valid json");
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+        assert!(!evs.is_empty());
+        for e in evs {
+            for key in ["ph", "pid", "ts"] {
+                assert!(e.get(key).is_some(), "every event carries {}", key);
+            }
+        }
+        let phases: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert!(phases.contains(&"M"), "lane metadata present");
+        assert!(phases.contains(&"B") && phases.contains(&"E"), "duration pair present");
+        assert!(phases.contains(&"C"), "counter track present");
+        assert!(phases.contains(&"i"), "instants present");
+        // B/E balance per tid
+        assert_eq!(
+            phases.iter().filter(|p| **p == "B").count(),
+            phases.iter().filter(|p| **p == "E").count()
+        );
+        // control lane named: highest tid with admission events
+        let control = evs.iter().find(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("M")
+                && e.get("tid").and_then(|t| t.as_f64()) == Some(2.0)
+        });
+        let name = control
+            .and_then(|e| e.get("args"))
+            .and_then(|a| a.get("name"))
+            .and_then(|n| n.as_str());
+        assert_eq!(name, Some("control"));
+    }
+
+    #[test]
+    fn orphaned_task_end_does_not_emit_unbalanced_e() {
+        let events = vec![ev(1_000, 0, TraceKind::TaskEnd, 0, 0)];
+        let doc = chrome_trace_json(&events);
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+        assert!(evs
+            .iter()
+            .all(|e| e.get("ph").and_then(|p| p.as_str()) != Some("E")));
+    }
+}

@@ -1,0 +1,235 @@
+//! Live scheduler metrics: a fixed registry of atomic counters,
+//! snapshotted on an interval during `serve` soaks.
+//!
+//! The registry is a *struct of atomics*, not a dynamic map — there is
+//! nothing to look up, lock, or allocate when a counter is bumped, so
+//! it is safe to touch from anywhere. Two update disciplines coexist:
+//!
+//! - **Admission-side counters** (`admitted`, `shed`,
+//!   `backlog_high_water`) are maintained unconditionally by
+//!   `Session::try_submit_graph` and the serving loop — they are off
+//!   the worker dispatch path and cost one relaxed RMW per *arrival*.
+//! - **Dispatch-side counters** (`enqueued`, `completed`, `steals`,
+//!   `failed_steals`, `parks`, `unparks`, `cancelled`, `repicks`) are
+//!   bumped only while tracing is enabled, inside the trace-record
+//!   slow path ([`MetricsRegistry::count_kind`]) or behind the same
+//!   one-relaxed-load gate ([`note_repick`]) — `trace=off` leaves the
+//!   dispatch path exactly as it was.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::obs::trace::TraceKind;
+
+/// Process-global counter registry. All counters are cumulative since
+/// process start; [`MetricsRegistry::snapshot`] turns them into plain
+/// numbers, [`MetricsRegistry::reset`] zeroes them between soaks.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    /// Arrivals accepted by admission (`Session::try_submit_graph`).
+    pub admitted: AtomicU64,
+    /// Arrivals rejected by admission.
+    pub shed: AtomicU64,
+    /// High-water mark of the request tag's live-job backlog
+    /// (`fetch_max` per arrival from the serving loop).
+    pub backlog_high_water: AtomicU64,
+    /// Jobs pushed to the run queue (trace-gated).
+    pub enqueued: AtomicU64,
+    /// Graph nodes completed (trace-gated).
+    pub completed: AtomicU64,
+    /// Jobs cancelled (trace-gated).
+    pub cancelled: AtomicU64,
+    /// Successful chunk steals (trace-gated).
+    pub steals: AtomicU64,
+    /// Steal rounds that found nothing (trace-gated).
+    pub failed_steals: AtomicU64,
+    /// Workers parked on the run-queue condvar (trace-gated).
+    pub parks: AtomicU64,
+    /// ...and woken (trace-gated).
+    pub unparks: AtomicU64,
+    /// Policy re-pick evaluations under non-FIFO policies
+    /// (trace-gated; see `POLICY_REPICK_STRIDE`).
+    pub repicks: AtomicU64,
+}
+
+static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-global registry.
+pub fn metrics() -> &'static MetricsRegistry {
+    REGISTRY.get_or_init(MetricsRegistry::default)
+}
+
+/// Bump `repicks` iff tracing is enabled — the dispatch-path re-pick
+/// site has no trace event kind of its own, but the counter rides the
+/// same one-relaxed-load gate.
+#[inline]
+pub fn note_repick() {
+    if crate::obs::trace::enabled() {
+        metrics().repicks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl MetricsRegistry {
+    /// Dispatch-side counting, driven from the trace-record slow path
+    /// (so it inherits the `trace=` gate). Admission kinds are counted
+    /// at their submission sites instead — unconditionally — and are
+    /// skipped here to avoid double counting.
+    pub(crate) fn count_kind(&self, kind: TraceKind) {
+        let counter = match kind {
+            TraceKind::Enqueue => &self.enqueued,
+            TraceKind::NodeComplete => &self.completed,
+            TraceKind::Cancel => &self.cancelled,
+            TraceKind::Steal => &self.steals,
+            TraceKind::FailedSteal => &self.failed_steals,
+            TraceKind::Park => &self.parks,
+            TraceKind::Unpark => &self.unparks,
+            TraceKind::Dispatch
+            | TraceKind::TaskStart
+            | TraceKind::TaskEnd
+            | TraceKind::Admit
+            | TraceKind::Shed => return,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Plain-number snapshot at soak offset `t` seconds.
+    pub fn snapshot(&self, t: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            t,
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            backlog_high_water: self.backlog_high_water.load(Ordering::Relaxed),
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            failed_steals: self.failed_steals.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            unparks: self.unparks.load(Ordering::Relaxed),
+            repicks: self.repicks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter (between soaks; counters are process-global).
+    pub fn reset(&self) {
+        for c in [
+            &self.admitted,
+            &self.shed,
+            &self.backlog_high_water,
+            &self.enqueued,
+            &self.completed,
+            &self.cancelled,
+            &self.steals,
+            &self.failed_steals,
+            &self.parks,
+            &self.unparks,
+            &self.repicks,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One interval sample of the registry, appended to `ServeReport`
+/// during soaks (`metrics_interval=` seconds; cumulative values).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Wall-clock soak offset of the sample, in seconds.
+    pub t: f64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub backlog_high_water: u64,
+    pub enqueued: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub steals: u64,
+    pub failed_steals: u64,
+    pub parks: u64,
+    pub unparks: u64,
+    pub repicks: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn header() -> String {
+        format!(
+            "{:>7} {:>9} {:>6} {:>8} {:>9} {:>9} {:>7} {:>8} {:>7} {:>7}",
+            "t(s)",
+            "admitted",
+            "shed",
+            "backlog*",
+            "enqueued",
+            "completed",
+            "steals",
+            "fsteals",
+            "parks",
+            "repicks"
+        )
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:>7.2} {:>9} {:>6} {:>8} {:>9} {:>9} {:>7} {:>8} {:>7} {:>7}",
+            self.t,
+            self.admitted,
+            self.shed,
+            self.backlog_high_water,
+            self.enqueued,
+            self.completed,
+            self.steals,
+            self.failed_steals,
+            self.parks,
+            self.repicks
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_kind_routes_dispatch_side_counters() {
+        let reg = MetricsRegistry::default();
+        reg.count_kind(TraceKind::Steal);
+        reg.count_kind(TraceKind::Steal);
+        reg.count_kind(TraceKind::FailedSteal);
+        reg.count_kind(TraceKind::Park);
+        reg.count_kind(TraceKind::Unpark);
+        reg.count_kind(TraceKind::Enqueue);
+        reg.count_kind(TraceKind::NodeComplete);
+        reg.count_kind(TraceKind::Cancel);
+        // admission kinds are counted at their submission sites
+        reg.count_kind(TraceKind::Admit);
+        reg.count_kind(TraceKind::Shed);
+        let s = reg.snapshot(1.0);
+        assert_eq!(s.steals, 2);
+        assert_eq!(s.failed_steals, 1);
+        assert_eq!(s.parks, 1);
+        assert_eq!(s.unparks, 1);
+        assert_eq!(s.enqueued, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!((s.admitted, s.shed), (0, 0));
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let reg = MetricsRegistry::default();
+        reg.admitted.fetch_add(3, Ordering::Relaxed);
+        reg.backlog_high_water.fetch_max(9, Ordering::Relaxed);
+        reg.count_kind(TraceKind::Steal);
+        reg.reset();
+        let s = reg.snapshot(0.0);
+        assert_eq!((s.admitted, s.backlog_high_water, s.steals), (0, 0, 0));
+    }
+
+    #[test]
+    fn snapshot_rows_align_with_header() {
+        let reg = MetricsRegistry::default();
+        let s = reg.snapshot(0.5);
+        assert_eq!(
+            MetricsSnapshot::header().split_whitespace().count(),
+            s.row().split_whitespace().count()
+        );
+    }
+}

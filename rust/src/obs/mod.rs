@@ -1,0 +1,37 @@
+//! Observability: event-level scheduler tracing, live serve metrics,
+//! and Chrome-trace export with DES timeline parity.
+//!
+//! Three pieces, all designed around the executor's coordinator-free
+//! dispatch and the PR 6 lock-rank discipline — the dispatch path must
+//! never gain a lock (or an allocation) on account of being observed:
+//!
+//! - [`trace`] — bounded per-worker ring buffers of [`trace::TraceEvent`]s
+//!   (atomics only; a disabled trace is one relaxed load and a branch).
+//!   The hook points live in `sched::executor` / `sched::graph` /
+//!   `sched::session` / `serve`, gated by the `trace=off|on|sampled:<n>`
+//!   config key ([`crate::config::TraceMode`]).
+//! - [`export`] — merges the rings into a Chrome trace-event JSON file
+//!   (one lane per worker plus counter tracks; loadable in Perfetto)
+//!   and distills an [`export::ObsSummary`] (steal efficiency,
+//!   park/unpark churn, per-tag queue-delay histogram) for the CLI.
+//! - [`live`] — a [`live::MetricsRegistry`] of atomic counters
+//!   (admitted, shed, backlog high-water, steals, re-picks) snapshotted
+//!   on an interval during `serve` soaks.
+//!
+//! The DES (`sim::graph` / `sim::serve`) emits the *same* event stream
+//! in virtual time via [`trace::record_at`], so a real run and its
+//! virtual-time replay are diffable timeline-for-timeline
+//! (`rust/tests/obs_trace_integration.rs` pins per-job event-ordering
+//! and admission-decision parity on a shared burst trace).
+//!
+//! Layering: `obs` imports only `util` / `topology` / `config`
+//! (repolint `layering-obs`); `sched`, `sim` and `serve` may import
+//! `obs`, never the reverse.
+
+pub mod export;
+pub mod live;
+pub mod trace;
+
+pub use export::ObsSummary;
+pub use live::{metrics, MetricsRegistry, MetricsSnapshot};
+pub use trace::{TraceEvent, TraceKind, OBS_CONTROL_WORKER};

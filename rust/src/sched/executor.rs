@@ -90,6 +90,7 @@ use super::stealing;
 use super::task::TaskRange;
 use super::victim::VictimSelector;
 use crate::config::SchedConfig;
+use crate::obs::trace::{self, TraceKind, NO_JOB, OBS_CONTROL_WORKER};
 use crate::topology::Topology;
 use crate::util::ordered::{OrderedCondvar, OrderedMutex};
 
@@ -163,6 +164,10 @@ pub(super) struct Job {
     /// workers to remember which jobs they have already exhausted.
     seq: u64,
     name: String,
+    /// FNV-1a of `name`, precomputed at enqueue while tracing is
+    /// enabled (0 otherwise) so dispatch-path trace records never hash
+    /// or touch the string.
+    name_hash: u64,
     total: usize,
     config: Arc<SchedConfig>,
     /// Device pool the job is scoped to: only that pool's workers scan
@@ -236,6 +241,13 @@ impl Job {
     /// Take the recorded panic payload, if any (first caller wins).
     pub(super) fn take_panic(&self) -> Option<PanicPayload> {
         self.panic.lock().unwrap().take()
+    }
+
+    /// Record a trace event for this job through the lock-free trace
+    /// API, carrying the job's precomputed hashes — for sibling modules
+    /// (the graph layer) whose hook points sit on the dispatch path.
+    pub(super) fn record_trace(&self, kind: TraceKind, worker: usize) {
+        trace::record(kind, worker, self.seq, self.name_hash, self.tenancy.tag_hash);
     }
 }
 
@@ -521,12 +533,14 @@ pub(super) fn enqueue_raw(
     // replay of the same placed node, instead of padding cov()/
     // imbalance() with permanently-idle foreign-pool slots.
     let n = shared.pools.pool(pool).topo.n_cores();
+    let name_hash = if trace::enabled() { trace::fnv1a(&name) } else { 0 };
     let mut q = shared.queue.lock().unwrap();
     let seq = q.next_seq;
     q.next_seq += 1;
     let job = Arc::new(Job {
         seq,
         name,
+        name_hash,
         total: items,
         config,
         pool,
@@ -549,6 +563,7 @@ pub(super) fn enqueue_raw(
         done_cv: OrderedCondvar::new(),
         on_done: OrderedMutex::new(ranks::JOB_ON_DONE, on_done),
     });
+    trace::record(TraceKind::Enqueue, OBS_CONTROL_WORKER, seq, name_hash, job.tenancy.tag_hash);
     if job.total == 0 {
         // Nothing to schedule: complete inline without waking the pool.
         drop(q);
@@ -618,6 +633,7 @@ pub(super) fn cancel_job(
             return;
         }
     }
+    trace::record(TraceKind::Cancel, OBS_CONTROL_WORKER, job.seq, job.name_hash, job.tenancy.tag_hash);
     job.aborted.store(true, Ordering::Release);
     // worker id 0 is valid in every pool; the `stolen` attribution of
     // a drained (never-run) pull is irrelevant
@@ -799,7 +815,9 @@ fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
                 if q.shutdown {
                     return;
                 }
+                trace::record(TraceKind::Park, w, NO_JOB, 0, 0);
                 q = shared.work_cv.wait(q).unwrap();
+                trace::record(TraceKind::Unpark, w, NO_JOB, 0, 0);
             }
         };
         let r = reeval.then_some(exhausted.as_slice());
@@ -973,16 +991,24 @@ fn run_job_stint(
             break true;
         }
         let t0 = Instant::now();
+        let mut steal_misses = 0usize;
         let pull = source.pull_local(lw).or_else(|| {
             let selector = selector.as_mut()?;
             let out = stealing::steal_round(source, selector, lw);
-            local.failed_steals +=
-                out.attempts - usize::from(out.pull.is_some());
+            steal_misses = out.attempts - usize::from(out.pull.is_some());
             out.pull
         });
+        local.failed_steals += steal_misses;
         local.queue_wait += t0.elapsed().as_secs_f64();
 
-        let Some(pull) = pull else { break true };
+        let Some(pull) = pull else {
+            // the round found nothing at all: one FailedSteal event
+            // (WorkerStats keeps the exact per-attempt miss count)
+            if steal_misses > 0 {
+                trace::record(TraceKind::FailedSteal, w, job.seq, job.name_hash, job.tenancy.tag_hash);
+            }
+            break true;
+        };
         // reset the job's priority-aging clock: it is being served now
         job.served_ns.store(
             job.tenancy.arrived.elapsed().as_nanos() as u64,
@@ -995,17 +1021,21 @@ fn run_job_stint(
                 (job.start.elapsed().as_nanos() as u64).max(1),
                 Ordering::Relaxed,
             );
+            trace::record(TraceKind::Dispatch, w, job.seq, job.name_hash, job.tenancy.tag_hash);
         }
         if pull.stolen {
             local.steals += 1;
             local.stolen_items += pull.task.len();
+            trace::record(TraceKind::Steal, w, job.seq, job.name_hash, job.tenancy.tag_hash);
         }
 
         let t1 = Instant::now();
+        trace::record(TraceKind::TaskStart, w, job.seq, job.name_hash, job.tenancy.tag_hash);
         // SAFETY: see `body_ptr` above — a pulled, not-yet-counted task
         // keeps `executed < total`, so the body cannot have been freed.
         let outcome =
             catch_unwind(AssertUnwindSafe(|| unsafe { (*body_ptr)(w, pull.task) }));
+        trace::record(TraceKind::TaskEnd, w, job.seq, job.name_hash, job.tenancy.tag_hash);
         local.busy += t1.elapsed().as_secs_f64();
         local.tasks += 1;
         local.items += pull.task.len();
@@ -1024,6 +1054,7 @@ fn run_job_stint(
             since_repick += 1;
             if since_repick >= POLICY_REPICK_STRIDE {
                 since_repick = 0;
+                crate::obs::live::note_repick();
                 let next = {
                     let q = shared.queue.lock().unwrap();
                     pick_job(&q, job.pool, exhausted_seqs).map(|j| j.seq)

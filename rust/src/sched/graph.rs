@@ -72,6 +72,7 @@ use super::ranks;
 use super::session::Tenancy;
 use super::task::TaskRange;
 use crate::config::SchedConfig;
+use crate::obs::trace::{TraceKind, OBS_CONTROL_WORKER};
 use crate::topology::DeviceClass;
 use crate::util::ordered::{OrderedCondvar, OrderedMutex};
 
@@ -667,6 +668,9 @@ fn node_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) {
 /// on success, cancelling them transitively on failure — and return the
 /// nodes that became ready. Call with no locks held; wakes waiters.
 fn record_done(run: &Arc<GraphRun>, i: usize, job: &Arc<Job>) -> Vec<usize> {
+    // recorded before dependents release, so a child's Enqueue always
+    // trails its parent's NodeComplete in the merged timeline
+    job.record_trace(TraceKind::NodeComplete, OBS_CONTROL_WORKER);
     let report = match job.cloned_report() {
         Some(r) => r,
         // Unreachable: completion hooks run only after the report

@@ -41,6 +41,7 @@
 //! ([`crate::sim::graph::replay_tenants`]), which is what `figure
 //! tenancy` and [`crate::sched::autotune::tune_tenancy`] predict with.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -48,6 +49,7 @@ use super::executor::{Executor, JobHandle, JobSpec};
 use super::graph::{
     dispatch, wait_terminal, GraphError, GraphHandle, GraphReport, GraphSpec,
 };
+use crate::obs::trace::{self, TraceKind, NO_JOB, OBS_CONTROL_WORKER};
 
 /// Aging quantum for [`TenancyPolicy::Priority`]: a job gains one
 /// effective priority level per this many seconds (wall-clock on the
@@ -257,15 +259,27 @@ pub(super) struct Tenancy {
     pub(super) priority: i64,
     pub(super) weight: u64,
     pub(super) tag: Arc<str>,
+    /// FNV-1a of `tag` (0 = anonymous), carried so trace records on the
+    /// dispatch path never touch the string. Interned for the exporter
+    /// only while tracing is enabled.
+    pub(super) tag_hash: u64,
     pub(super) arrived: Instant,
 }
 
 impl Tenancy {
     pub(super) fn from_opts(opts: &SubmitOpts) -> Self {
+        let tag_hash = if opts.tag.is_empty() {
+            0
+        } else if trace::enabled() {
+            trace::intern_tag(&opts.tag)
+        } else {
+            trace::fnv1a(&opts.tag)
+        };
         Tenancy {
             priority: opts.priority,
             weight: opts.weight.max(1),
             tag: Arc::from(opts.tag.as_str()),
+            tag_hash,
             arrived: Instant::now(),
         }
     }
@@ -341,13 +355,46 @@ impl<'e> Session<'e> {
     ) -> Result<Admitted, GraphError> {
         let backlog = self.exec.tag_backlog(&opts.tag);
         let est_wait = backlog as f64 * opts.est_cost;
+        crate::obs::metrics()
+            .backlog_high_water
+            .fetch_max(backlog as u64, Ordering::Relaxed);
         if !opts.admission.admits(backlog, est_wait) {
             // still validate, so a malformed graph is an error — not a
             // silently-counted shed
             let tenancy = Tenancy::from_opts(&opts);
+            let tag_hash = tenancy.tag_hash;
+            let name_hash = trace::enabled().then(|| trace::intern_tag(&spec.name));
             let (run, _roots) = self.exec.prepare_graph(spec, tenancy)?;
             drop(run);
+            // the shed counter is authoritative here (not trace-gated);
+            // the trace event only exists while tracing is on
+            crate::obs::metrics().shed.fetch_add(1, Ordering::Relaxed);
+            if let Some(name_hash) = name_hash {
+                trace::record(
+                    TraceKind::Shed,
+                    OBS_CONTROL_WORKER,
+                    NO_JOB,
+                    name_hash,
+                    tag_hash,
+                );
+            }
             return Ok(Admitted::Rejected { backlog });
+        }
+        crate::obs::metrics().admitted.fetch_add(1, Ordering::Relaxed);
+        if trace::enabled() {
+            let name_hash = trace::intern_tag(&spec.name);
+            let tag_hash = if opts.tag.is_empty() {
+                0
+            } else {
+                trace::intern_tag(&opts.tag)
+            };
+            trace::record(
+                TraceKind::Admit,
+                OBS_CONTROL_WORKER,
+                NO_JOB,
+                name_hash,
+                tag_hash,
+            );
         }
         self.submit_graph(spec, opts).map(Admitted::Accepted)
     }

@@ -39,6 +39,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::config::ArrivalPattern;
+use crate::obs::MetricsSnapshot;
 use crate::sched::{
     Admitted, AdmissionPolicy, Executor, GraphError, GraphHandle, GraphSpec,
     NodeSpec, SubmitOpts, TenancyPolicy,
@@ -167,6 +168,9 @@ pub struct ServeSpec {
     /// Items per batch graph — size these past the soak so batch
     /// pressure lasts the whole window (leftovers are cancelled).
     pub batch_items: usize,
+    /// Seconds between [`MetricsSnapshot`]s of the live
+    /// [`crate::obs::MetricsRegistry`] during the soak (0 = none).
+    pub metrics_interval: f64,
 }
 
 impl Default for ServeSpec {
@@ -187,6 +191,7 @@ impl Default for ServeSpec {
             weight: 4,
             batch_tenants: 1,
             batch_items: 1 << 20,
+            metrics_interval: 0.0,
         }
     }
 }
@@ -223,6 +228,10 @@ pub struct ServeReport {
     pub wall: f64,
     /// Accept/reject per request in arrival order (warmup included).
     pub decisions: Vec<bool>,
+    /// Interval snapshots of the live metrics registry (empty when
+    /// `metrics_interval` is 0); cumulative counters, see
+    /// [`MetricsSnapshot`]. The final entry is taken after the drain.
+    pub metrics: Vec<MetricsSnapshot>,
 }
 
 impl ServeReport {
@@ -351,6 +360,13 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
     let mut inflight: Vec<InFlight> = Vec::new();
     let mut decisions = Vec::with_capacity(arrivals.len());
     let (mut measured, mut shed) = (0usize, 0usize);
+    let mut metrics_log: Vec<MetricsSnapshot> = Vec::new();
+    let mut next_snap = spec.metrics_interval;
+    if spec.metrics_interval > 0.0 {
+        // the registry is process-cumulative; zero it so snapshots read
+        // as this soak's counters
+        crate::obs::metrics().reset();
+    }
 
     let start = Instant::now();
     for &t in &arrivals {
@@ -361,6 +377,10 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
                 break;
             }
             drain_finished(&mut inflight, &mut tally, spec.slo);
+            if spec.metrics_interval > 0.0 && now >= next_snap {
+                metrics_log.push(crate::obs::metrics().snapshot(now));
+                next_snap += spec.metrics_interval;
+            }
             let wait = (t - start.elapsed().as_secs_f64()).max(0.0);
             thread::sleep(Duration::from_secs_f64(wait.min(2e-4)));
         }
@@ -402,6 +422,10 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
         h.cancel();
         h.join();
     }
+    if spec.metrics_interval > 0.0 {
+        metrics_log
+            .push(crate::obs::metrics().snapshot(start.elapsed().as_secs_f64()));
+    }
 
     let span = (tally.last_finish - spec.warmup)
         .max(spec.duration - spec.warmup)
@@ -426,6 +450,7 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
         mean_queue_delay: stats::mean(&tally.queue_delays),
         wall: start.elapsed().as_secs_f64(),
         decisions,
+        metrics: metrics_log,
     })
 }
 

@@ -27,6 +27,12 @@
 //!   so cyclic / unknown-dependency / duplicate-name shapes are
 //!   rejected with the same [`GraphError`]s the real submission would
 //!   produce.
+//! - When event tracing is enabled ([`crate::obs::trace`]) the replay
+//!   stamps the same `TraceEvent` stream the real executor records —
+//!   Enqueue / Dispatch / TaskStart / TaskEnd / Steal / NodeComplete
+//!   (plus Admit / Shed under [`SimAdmission`]) at *virtual*
+//!   timestamps via [`trace::record_at`] — so one seeded workload can
+//!   be replayed on both engines and diffed event-for-event.
 //!
 //! Heterogeneous machines replay with the same pool semantics the real
 //! executor dispatches: [`NodeModel`] carries a
@@ -48,6 +54,7 @@ use std::collections::BinaryHeap;
 use super::engine::{Ev, JobSim, SimOutcome};
 use super::model::{CostModel, Workload};
 use crate::config::{GraphMode, SchedConfig};
+use crate::obs::trace::{self, TraceKind, NO_JOB, OBS_CONTROL_WORKER};
 use crate::sched::graph::{toposort, GraphError, TopoOrder};
 use crate::sched::metrics::{SchedReport, WorkerStats};
 use crate::sched::placement::{DevicePools, Placement, ResolveMode};
@@ -55,6 +62,14 @@ use crate::sched::session::{AdmissionPolicy, AGING_QUANTUM_SECS};
 use crate::sched::TenancyPolicy;
 use crate::topology::{DeviceClass, Topology};
 use crate::util::stats;
+
+/// Virtual seconds → integer nanoseconds for the shared trace stream
+/// ([`crate::obs::trace`]): the DES stamps events with
+/// [`trace::record_at`] so a simulated replay and a real run of the
+/// same workload produce one diffable event sequence.
+fn vns(t: f64) -> u64 {
+    (t * 1e9).round() as u64
+}
 
 /// Cost model of one graph node: a name (unique within its shape), a
 /// [`Workload`] of per-item virtual costs, an optional per-node
@@ -500,6 +515,20 @@ fn replay_dag(
     let mut parked: Vec<Option<f64>> = vec![None; nw];
     let mut makespan = 0f64;
 
+    // Trace emission: the DES half of the shared event stream. Name
+    // hashes are precomputed once per replay; every `record_at` sits
+    // behind the same `enabled()` gate as the executor's hooks, so an
+    // untraced replay pays one relaxed load up front and nothing per
+    // event.
+    let tracing = trace::enabled();
+    let name_hash: Vec<u64> = if tracing {
+        shape.nodes.iter().map(|n| trace::fnv1a(&n.name)).collect()
+    } else {
+        Vec::new()
+    };
+    // first-acquisition latch per node: Dispatch is recorded once
+    let mut node_started = vec![false; n_nodes];
+
     // Activate every node in `ready` at virtual time `t`. Zero-item
     // nodes complete inline (worklist, so chains of them stay
     // iterative); the rest get a live JobSim over their pool's
@@ -511,6 +540,16 @@ fn replay_dag(
             let mut went_live = false;
             while let Some(i) = worklist.pop() {
                 start[i] = $t;
+                if tracing {
+                    trace::record_at(
+                        vns($t),
+                        TraceKind::Enqueue,
+                        OBS_CONTROL_WORKER,
+                        i as u64,
+                        name_hash[i],
+                        0,
+                    );
+                }
                 if items[i] == 0 {
                     finish[i] = $t;
                     remaining -= 1;
@@ -518,6 +557,18 @@ fn replay_dag(
                         &pools.pool(node_pool[i]).topo,
                         &configs[i],
                     ));
+                    if tracing {
+                        // inline completion: terminal the instant it
+                        // activates, before any dependent's Enqueue
+                        trace::record_at(
+                            vns($t),
+                            TraceKind::NodeComplete,
+                            OBS_CONTROL_WORKER,
+                            i as u64,
+                            name_hash[i],
+                            0,
+                        );
+                    }
                     for &d in &order.dependents[i] {
                         pending[d] -= 1;
                         if pending[d] == 0 {
@@ -557,6 +608,16 @@ fn replay_dag(
         // retire the chunk this event marks the end of
         if let Some((node, len)) = chunk[w].take() {
             executed[node] += len;
+            if tracing {
+                trace::record_at(
+                    vns(t),
+                    TraceKind::TaskEnd,
+                    w,
+                    node as u64,
+                    name_hash[node],
+                    0,
+                );
+            }
             if executed[node] == items[node] {
                 // the node's last item finished right now: complete it,
                 // release dependents, wake parked workers
@@ -568,6 +629,19 @@ fn replay_dag(
                     .expect("completed node was active");
                 let (_, job) = active.remove(pos);
                 outcomes[node] = Some(job.into_outcome(t - start[node]));
+                if tracing {
+                    // before dependents release, like the executor's
+                    // `record_done`: parent NodeComplete always trails
+                    // into a child's Enqueue in the merged timeline
+                    trace::record_at(
+                        vns(t),
+                        TraceKind::NodeComplete,
+                        OBS_CONTROL_WORKER,
+                        node as u64,
+                        name_hash[node],
+                        0,
+                    );
+                }
                 let mut ready = Vec::new();
                 for &d in &order.dependents[node] {
                     pending[d] -= 1;
@@ -606,6 +680,38 @@ fn replay_dag(
         match got {
             Some((idx, pull)) => {
                 let (node, job) = &mut active[idx];
+                if tracing {
+                    let g = *node;
+                    if !node_started[g] {
+                        node_started[g] = true;
+                        trace::record_at(
+                            vns(now),
+                            TraceKind::Dispatch,
+                            w,
+                            g as u64,
+                            name_hash[g],
+                            0,
+                        );
+                    }
+                    if pull.stolen {
+                        trace::record_at(
+                            vns(now),
+                            TraceKind::Steal,
+                            w,
+                            g as u64,
+                            name_hash[g],
+                            0,
+                        );
+                    }
+                    trace::record_at(
+                        vns(now),
+                        TraceKind::TaskStart,
+                        w,
+                        g as u64,
+                        name_hash[g],
+                        0,
+                    );
+                }
                 let exec = job.exec_time(my_topo, lw, &pull);
                 chunk[w] = Some((*node, pull.task.len()));
                 heap.push(Ev { t: now + exec, w });
@@ -892,10 +998,10 @@ pub fn replay_tenants_with(
 /// already-admitted same-tag tenants still unfinished at that virtual
 /// instant, and `est_wait = backlog × est_cost` — identical inputs to
 /// the real loop's decision, so accept/reject sequences agree.
-pub(crate) struct SimAdmission {
-    pub(crate) policy: AdmissionPolicy,
-    pub(crate) tag: String,
-    pub(crate) est_cost: f64,
+pub struct SimAdmission {
+    pub policy: AdmissionPolicy,
+    pub tag: String,
+    pub est_cost: f64,
 }
 
 /// [`replay_tenants_with`] plus per-arrival admission on one tag
@@ -904,7 +1010,15 @@ pub(crate) struct SimAdmission {
 /// accepted). A rejected tenant activates nothing: it finishes at its
 /// arrival with zero latency and must be counted as shed by the caller
 /// ([`super::serve::replay_open_loop`]).
-pub(crate) fn replay_tenants_admitted(
+///
+/// When tracing is enabled ([`crate::obs::trace`]) and `admission` is
+/// `Some`, every arrival additionally records an `Admit`/`Shed` event
+/// at its virtual arrival time — the mirror of
+/// [`Session::try_submit_graph`](crate::sched::Session::try_submit_graph)
+/// — so a real run and a replay of the same request stream can be
+/// diffed decision-for-decision (the obs trace-agreement test pins
+/// exactly this).
+pub fn replay_tenants_admitted(
     tenants: &[TenantSpec],
     topo: &Topology,
     default: &SchedConfig,
@@ -970,6 +1084,29 @@ pub(crate) fn replay_tenants_admitted(
     let mut decisions = vec![true; nt];
     let mut remaining: usize = t_remaining.iter().sum();
 
+    // Trace emission: hashes precomputed once per replay. Tenant tags
+    // and graph names are interned (resolvable in the export), node
+    // names are plain FNV-1a — exactly the real submission path's
+    // convention, so per-node streams diff across engines by hash.
+    let tracing = trace::enabled();
+    let node_name_hash: Vec<u64> = if tracing {
+        node_ref.iter().map(|n| trace::fnv1a(&n.name)).collect()
+    } else {
+        Vec::new()
+    };
+    let tenant_name_hash: Vec<u64> = if tracing {
+        tenants.iter().map(|t| trace::intern_tag(&t.name)).collect()
+    } else {
+        Vec::new()
+    };
+    let tag_hash: Vec<u64> = if tracing {
+        tenants.iter().map(|t| trace::intern_tag(&t.tag)).collect()
+    } else {
+        Vec::new()
+    };
+    // first-acquisition latch per node: Dispatch is recorded once
+    let mut node_started = vec![false; n_nodes];
+
     let mut active: Vec<ActiveJob<'_>> = Vec::new();
     let mut next_seq = 0u64;
     // What each worker is currently executing: (global node, chunk len).
@@ -997,11 +1134,33 @@ pub(crate) fn replay_tenants_admitted(
             let mut went_live = false;
             while let Some(g) = worklist.pop() {
                 let (ti, li) = (node_tenant[g], node_local[g]);
+                if tracing {
+                    trace::record_at(
+                        vns($t),
+                        TraceKind::Enqueue,
+                        OBS_CONTROL_WORKER,
+                        g as u64,
+                        node_name_hash[g],
+                        tag_hash[ti],
+                    );
+                }
                 if items[g] == 0 {
                     remaining -= 1;
                     t_remaining[ti] -= 1;
                     if t_remaining[ti] == 0 {
                         t_finish[ti] = $t;
+                    }
+                    if tracing {
+                        // inline completion, before any dependent's
+                        // Enqueue (mirrors `record_done` ordering)
+                        trace::record_at(
+                            vns($t),
+                            TraceKind::NodeComplete,
+                            OBS_CONTROL_WORKER,
+                            g as u64,
+                            node_name_hash[g],
+                            tag_hash[ti],
+                        );
                     }
                     for &d in &orders[ti].dependents[li] {
                         let dg = base[ti] + d;
@@ -1066,9 +1225,33 @@ pub(crate) fn replay_tenants_admitted(
                         remaining -= t_remaining[ti];
                         t_remaining[ti] = 0;
                         t_finish[ti] = tenants[ti].arrival;
+                        if tracing {
+                            trace::record_at(
+                                vns(tenants[ti].arrival),
+                                TraceKind::Shed,
+                                OBS_CONTROL_WORKER,
+                                NO_JOB,
+                                tenant_name_hash[ti],
+                                tag_hash[ti],
+                            );
+                        }
                         continue;
                     }
                 }
+            }
+            if tracing && admission.is_some() {
+                // with admission in play every arrival models a
+                // `try_submit_graph` call, so accepts record Admit
+                // (NO_JOB, like the real control-side events, so
+                // sampled mode never drops an admission decision)
+                trace::record_at(
+                    vns(tenants[ti].arrival),
+                    TraceKind::Admit,
+                    OBS_CONTROL_WORKER,
+                    NO_JOB,
+                    tenant_name_hash[ti],
+                    tag_hash[ti],
+                );
             }
             let roots: Vec<usize> = (0..tenants[ti].shape.nodes.len())
                 .filter(|&li| pending[base[ti] + li] == 0)
@@ -1090,6 +1273,16 @@ pub(crate) fn replay_tenants_admitted(
         // retire the chunk this event marks the end of
         if let Some((g, len)) = chunk[w].take() {
             executed[g] += len;
+            if tracing {
+                trace::record_at(
+                    vns(t),
+                    TraceKind::TaskEnd,
+                    w,
+                    g as u64,
+                    node_name_hash[g],
+                    tag_hash[node_tenant[g]],
+                );
+            }
             if executed[g] == items[g] {
                 let ti = node_tenant[g];
                 remaining -= 1;
@@ -1102,6 +1295,17 @@ pub(crate) fn replay_tenants_admitted(
                     .position(|a| a.node == g)
                     .expect("completed node was active");
                 active.remove(pos);
+                if tracing {
+                    // before dependents release (`record_done` order)
+                    trace::record_at(
+                        vns(t),
+                        TraceKind::NodeComplete,
+                        OBS_CONTROL_WORKER,
+                        g as u64,
+                        node_name_hash[g],
+                        tag_hash[ti],
+                    );
+                }
                 let mut ready = Vec::new();
                 for &d in &orders[ti].dependents[node_local[g]] {
                     let dg = base[ti] + d;
@@ -1145,6 +1349,38 @@ pub(crate) fn replay_tenants_admitted(
                 aj.served_at = now;
                 if t_started[aj.tenant].is_none() {
                     t_started[aj.tenant] = Some(now);
+                }
+                if tracing {
+                    let g = aj.node;
+                    if !node_started[g] {
+                        node_started[g] = true;
+                        trace::record_at(
+                            vns(now),
+                            TraceKind::Dispatch,
+                            w,
+                            g as u64,
+                            node_name_hash[g],
+                            tag_hash[aj.tenant],
+                        );
+                    }
+                    if pull.stolen {
+                        trace::record_at(
+                            vns(now),
+                            TraceKind::Steal,
+                            w,
+                            g as u64,
+                            node_name_hash[g],
+                            tag_hash[aj.tenant],
+                        );
+                    }
+                    trace::record_at(
+                        vns(now),
+                        TraceKind::TaskStart,
+                        w,
+                        g as u64,
+                        node_name_hash[g],
+                        tag_hash[aj.tenant],
+                    );
                 }
                 let exec = aj.sim.exec_time(my_topo, lw, &pull);
                 chunk[w] = Some((aj.node, pull.task.len()));

@@ -55,8 +55,9 @@ pub mod serve;
 pub use engine::{simulate, SimOutcome};
 pub use graph::{
     isolated_makespans, replay, replay_placed, replay_tenants,
-    replay_tenants_with, GraphShape, GraphSimOutcome, NodeModel,
-    NodeSimOutcome, TenancySimOutcome, TenantOutcome, TenantSpec,
+    replay_tenants_admitted, replay_tenants_with, GraphShape,
+    GraphSimOutcome, NodeModel, NodeSimOutcome, SimAdmission,
+    TenancySimOutcome, TenantOutcome, TenantSpec,
 };
 pub use model::{CostModel, Workload};
 pub use serve::{

@@ -373,4 +373,83 @@ mod tests {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
     }
+
+    // The Chrome-trace writer (`obs::export`) leans on exactly these
+    // paths: escaped event names, nested event objects, and large
+    // fractional microsecond timestamps.
+
+    #[test]
+    fn escapes_control_chars_and_round_trips() {
+        let s = "tab\tnl\nquote\"back\\slash bell\u{7}";
+        let v = Json::Str(s.into());
+        let enc = to_string(&v);
+        assert!(enc.contains("\\t") && enc.contains("\\n"), "{enc}");
+        assert!(enc.contains("\\\"") && enc.contains("\\\\"), "{enc}");
+        assert!(enc.contains("\\u0007"), "{enc}");
+        assert_eq!(parse(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_passes_through_unescaped() {
+        let v = Json::Str("wörker λ → ✓".into());
+        let enc = to_string(&v);
+        assert!(enc.contains("wörker λ → ✓"), "{enc}");
+        assert_eq!(parse(&enc).unwrap(), v);
+        // and the escaped spelling decodes to the same string
+        assert_eq!(
+            parse(r#""w\u00f6rker""#).unwrap(),
+            Json::Str("wörker".into())
+        );
+    }
+
+    #[test]
+    fn large_f64_timestamps_round_trip() {
+        // trace timestamps are ts_ns / 1e3 microseconds: fractional,
+        // and up to u64::MAX / 1e3 for the latest representable event
+        let stamps = [
+            0.001f64,
+            1.5,
+            123_456_789.25,
+            1e15 + 0.5,
+            u64::MAX as f64 / 1e3,
+        ];
+        for &ts in &stamps {
+            let v = Json::Num(ts);
+            match parse(&to_string(&v)).unwrap() {
+                Json::Num(back) => assert_eq!(back, ts, "ts {ts}"),
+                other => panic!("expected number, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nested_trace_shape_round_trips() {
+        // the writer's document shape: {"traceEvents": [{...}, ...]}
+        // with a per-event args object holding nested values
+        let mut ev = BTreeMap::new();
+        ev.insert("name".to_string(), Json::Str("run q1\t\"x\"".into()));
+        ev.insert("ph".to_string(), Json::Str("B".into()));
+        ev.insert("ts".to_string(), Json::Num(1_234_567.891));
+        ev.insert(
+            "args".to_string(),
+            Json::Obj(BTreeMap::from([(
+                "stack".to_string(),
+                Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())]),
+            )])),
+        );
+        let mut top = BTreeMap::new();
+        top.insert(
+            "traceEvents".to_string(),
+            Json::Arr(vec![Json::Obj(ev.clone()), Json::Obj(ev)]),
+        );
+        let doc = Json::Obj(top);
+        let back = parse(&to_string(&doc)).unwrap();
+        assert_eq!(back, doc);
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(
+            evs[0].get("name").unwrap().as_str(),
+            Some("run q1\t\"x\"")
+        );
+    }
 }

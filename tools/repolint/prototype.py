@@ -44,9 +44,11 @@ DISPATCH_PATH_FNS = {
 
 COMMENT_WINDOW = 14
 
-SIM_ALLOWED = {"sched", "config", "topology", "util", "sim"}
+SIM_ALLOWED = {"sched", "config", "topology", "util", "sim", "obs"}
 
-SERVE_ALLOWED = {"sched", "sim", "config", "topology", "util", "serve"}
+SERVE_ALLOWED = {"sched", "sim", "config", "topology", "util", "serve", "obs"}
+
+OBS_ALLOWED = {"util", "topology", "config", "obs"}
 
 SERVE_CONSUMERS = ("rust/src/serve/", "rust/src/bench/")
 
@@ -376,6 +378,16 @@ def lint_file(rel, src, ranks, findings):
                 findings.append((rel, i + 1, "layering-serve-consumers",
                                  "only bench/ and main.rs may import crate::serve"))
 
+    if rel.startswith("rust/src/obs/"):
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            for m in re.finditer(r"crate::(\w+)", line):
+                if m.group(1) not in OBS_ALLOWED:
+                    findings.append((rel, i + 1, "layering-obs",
+                                     f"obs may only use {sorted(OBS_ALLOWED)}, "
+                                     f"found crate::{m.group(1)}"))
+
     # --- no unwrap/expect in the worker dispatch path ---
     for fname in DISPATCH_PATH_FNS.get(rel, []):
         span = fn_span(code, fname)
@@ -395,6 +407,29 @@ def lint_file(rel, src, ranks, findings):
             if re.search(r"\.expect\(", line):
                 findings.append((rel, i + 1, "dispatch-unwrap",
                                  f"`.expect(...)` in dispatch-path fn `{fname}`"))
+
+        # --- obs recording on the dispatch path is lock-free ---
+        # A trace/metrics call must never acquire a lock: the statement
+        # containing a record call (hit line extended forward to the
+        # terminating `;`) may not contain `.lock(`. Holding a lock
+        # *around* a record is fine -- the obs API itself acquires
+        # nothing.
+        i = span[0]
+        while i <= span[1]:
+            line = code[i]
+            if not ("obs::" in line or "trace::record" in line
+                    or "record_trace" in line):
+                i += 1
+                continue
+            j = i
+            while j < span[1] and not code[j].rstrip().endswith(";"):
+                j += 1
+            if any(".lock(" in code[k] for k in range(i, j + 1)):
+                findings.append((rel, i + 1, "obs-lockfree",
+                                 f"obs record in dispatch-path fn `{fname}` "
+                                 "shares a statement with `.lock(` -- trace "
+                                 "and metrics calls must stay lock-free"))
+            i = j + 1
 
 
 def main():

@@ -71,8 +71,9 @@ const DISPATCH_PATH_FNS: &[(&str, &[&str])] = &[
 ];
 
 /// Crate-internal roots `sim` may import from (plus itself): the DES
-/// consumes the scheduler's public surface, never `bench`/`apps`.
-const SIM_ALLOWED: &[&str] = &["sched", "config", "topology", "util", "sim"];
+/// consumes the scheduler's public surface (and since PR 8 emits the
+/// shared `obs::trace` event stream), never `bench`/`apps`.
+const SIM_ALLOWED: &[&str] = &["sched", "config", "topology", "util", "sim", "obs"];
 
 /// Crate-internal roots `serve` may import from (plus itself): the
 /// serving loop drives the scheduler's session surface and shares the
@@ -80,7 +81,15 @@ const SIM_ALLOWED: &[&str] = &["sched", "config", "topology", "util", "sim"];
 /// never reaches into `bench`/`apps`/`vee`. The reverse direction is
 /// also closed: only `bench/` and `main.rs` may import `crate::serve`
 /// (`layering-serve-consumers`), so the serving layer stays a leaf.
-const SERVE_ALLOWED: &[&str] = &["sched", "sim", "config", "topology", "util", "serve"];
+const SERVE_ALLOWED: &[&str] =
+    &["sched", "sim", "config", "topology", "util", "serve", "obs"];
+
+/// Crate-internal roots `obs` may import from (plus itself). The trace
+/// and metrics layer is recorded into from the scheduler's hottest
+/// paths, so it must stay a near-leaf: shared utilities, topology, and
+/// the config knob that gates it — never `sched`/`sim`/`serve` (which
+/// all import *it*) and never `bench`/`apps`.
+const OBS_ALLOWED: &[&str] = &["util", "topology", "config", "obs"];
 
 /// How many lines above an `unsafe`/`transmute` the justifying comment
 /// may sit. Multi-line `let` bindings put statement fragments between
@@ -694,6 +703,27 @@ fn lint_file(rel: &str, src: &str, ranks: &[(String, u32)], out: &mut Vec<Findin
         }
     }
 
+    if rel.starts_with("rust/src/obs/") {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            for p in find_all(line, "crate::") {
+                let seg = ident_at(line, p + 7);
+                if !seg.is_empty() && !OBS_ALLOWED.contains(&seg) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-obs",
+                        msg: format!(
+                            "obs may only use {OBS_ALLOWED:?}, found crate::{seg}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
     // -- no unwrap/expect on the worker dispatch path --
     for (file, fns) in DISPATCH_PATH_FNS {
         if *file != rel {
@@ -739,6 +769,41 @@ fn lint_file(rel: &str, src: &str, ranks: &[(String, u32)], out: &mut Vec<Findin
                         ),
                     });
                 }
+            }
+
+            // -- obs recording on the dispatch path is lock-free --
+            // A trace/metrics call must never acquire a lock: the
+            // statement containing a record call (hit line extended
+            // forward to the terminating `;`) may not contain
+            // `.lock(`. Holding a lock *around* a record is fine —
+            // the obs API itself acquires nothing.
+            let mut i = a;
+            while i <= b {
+                let line = &s.code[i];
+                let hit = line.contains("obs::")
+                    || line.contains("trace::record")
+                    || line.contains("record_trace");
+                if !hit {
+                    i += 1;
+                    continue;
+                }
+                let mut j = i;
+                while j < b && !s.code[j].trim_end().ends_with(';') {
+                    j += 1;
+                }
+                if (i..=j).any(|k| s.code[k].contains(".lock(")) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "obs-lockfree",
+                        msg: format!(
+                            "obs record in dispatch-path fn `{fname}` \
+                             shares a statement with `.lock(` -- trace \
+                             and metrics calls must stay lock-free"
+                        ),
+                    });
+                }
+                i = j + 1;
             }
         }
     }
@@ -1069,6 +1134,68 @@ mod tests {
                        use crate::serve::ServeSpec;\n\
                    }\n";
         assert!(run("rust/src/vee/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn obs_is_limited_to_util_topology_config() {
+        let src = "use crate::util::json::Json;\n\
+                   use crate::config::TraceMode;\n\
+                   use crate::sched::Executor;\n";
+        let f = run("rust/src/obs/export.rs", src);
+        assert_eq!(rules(&f), vec!["layering-obs"]);
+        assert!(f[0].msg.contains("crate::sched"));
+    }
+
+    #[test]
+    fn sim_and_serve_may_use_obs() {
+        let src = "use crate::obs::trace::{self, TraceKind};\n";
+        assert!(run("rust/src/sim/graph.rs", src).is_empty());
+        assert!(run("rust/src/serve/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn obs_record_sharing_a_statement_with_a_lock_is_flagged() {
+        let src = r#"
+fn dispatch(job: &Job) {
+    trace::record(TraceKind::Dispatch, job.stats.lock().unwrap().w, 0, 0, 0);
+}
+fn node_done() {}
+fn record_done() {}
+fn cancel_dependents() {}
+"#;
+        let f = run("rust/src/sched/graph.rs", src);
+        assert_eq!(rules(&f), vec!["obs-lockfree"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn multiline_obs_record_statement_is_scanned_to_its_semicolon() {
+        let src = r#"
+fn dispatch(job: &Job, run: &GraphRun) {
+    job.record_trace(TraceKind::NodeComplete,
+        run.progress.lock().unwrap().worker);
+}
+fn node_done() {}
+fn record_done() {}
+fn cancel_dependents() {}
+"#;
+        let f = run("rust/src/sched/graph.rs", src);
+        assert_eq!(rules(&f), vec!["obs-lockfree"]);
+    }
+
+    #[test]
+    fn obs_record_near_but_not_inside_a_lock_statement_is_clean() {
+        let src = r#"
+fn dispatch(job: &Job) {
+    let g = job.stats.lock().unwrap();
+    trace::record(TraceKind::Dispatch, g.w, 0, 0, 0);
+    drop(g);
+}
+fn node_done() {}
+fn record_done() {}
+fn cancel_dependents() {}
+"#;
+        assert!(run("rust/src/sched/graph.rs", src).is_empty());
     }
 
     #[test]
