@@ -5,6 +5,7 @@ use crate::apps::{cc, hetero, linreg};
 use crate::config::{ArrivalPattern, GraphMode, SchedConfig};
 use crate::graph::{amazon_like, scale_up, SnapGraph};
 use crate::matrix::CsrMatrix;
+use crate::obs::critical_span_ratio;
 use crate::sched::autotune::{self, SearchSpace};
 use crate::sched::{
     AdmissionPolicy, Placement, QueueLayout, Scheme, TenancyPolicy,
@@ -232,23 +233,75 @@ pub struct Row {
     /// for its chunk strategy. Zero for rows derived from replays that
     /// do not expose per-worker reports.
     pub queue_wait: f64,
+    /// Critical-path attribution: summed spans of the replay's
+    /// critical-path nodes over its makespan
+    /// ([`critical_span_ratio`]) — 1.0 means the reported chain tiles
+    /// the makespan exactly, so every row doubles as an attribution
+    /// check. Single-workload rows (Figs 7-10) are trivially 1.0 (the
+    /// whole run is the chain); `None` for rows whose metric is not a
+    /// graph makespan (tenancy/serve tail latencies).
+    pub crit: Option<f64>,
 }
 
 impl Row {
     pub fn print(&self) {
         let victim = self.victim.unwrap_or("-");
+        let crit = match self.crit {
+            Some(c) => format!("{:.3}", c),
+            None => "-".to_string(),
+        };
         println!(
             "  {:<7} {:<7} time={:>9.3}s vs_STATIC={:>6.3} steals={:<8} \
-             cov={:.3} qwait={:.4}s",
+             cov={:.3} qwait={:.4}s crit={}",
             self.scheme,
             victim,
             self.time,
             self.vs_static,
             self.steals,
             self.cov,
-            self.queue_wait
+            self.queue_wait,
+            crit
         );
     }
+
+    /// Stable JSON form for `BENCH_*.json` reports.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(
+            [
+                (
+                    "scheme".to_string(),
+                    Json::Str(self.scheme.to_string()),
+                ),
+                (
+                    "victim".to_string(),
+                    match self.victim {
+                        Some(v) => Json::Str(v.to_string()),
+                        None => Json::Null,
+                    },
+                ),
+                ("time".to_string(), Json::Num(self.time)),
+                ("vs_static".to_string(), Json::Num(self.vs_static)),
+                ("steals".to_string(), Json::Num(self.steals as f64)),
+                ("cov".to_string(), Json::Num(self.cov)),
+                ("queue_wait".to_string(), Json::Num(self.queue_wait)),
+                (
+                    "crit".to_string(),
+                    match self.crit {
+                        Some(c) => Json::Num(c),
+                        None => Json::Null,
+                    },
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// Serialize figure rows for the `report=json` emitter.
+pub fn rows_json(rows: &[Row]) -> crate::util::json::Json {
+    crate::util::json::Json::Arr(rows.iter().map(Row::to_json).collect())
 }
 
 fn fill_vs_static(rows: &mut [Row]) {
@@ -348,6 +401,8 @@ pub fn cc_figure(
                 steals: steals / reps.len(),
                 cov: cov / n,
                 queue_wait: qwait / n,
+                // single-workload sweep: the run is its own chain
+                crit: Some(1.0),
             });
         }
     }
@@ -408,6 +463,8 @@ pub fn linreg_figure(machine: &Topology, params: &FigureParams) -> Vec<Row> {
             steals,
             cov,
             queue_wait: qwait / reps as f64,
+            // single-workload sweep: the run is its own chain
+            crit: Some(1.0),
         });
     }
     fill_vs_static(&mut rows);
@@ -424,6 +481,9 @@ pub struct DagRow {
     pub barrier: f64,
     /// Replayed makespan under dependency-aware dispatch, seconds.
     pub dag: f64,
+    /// Critical-path attribution of the dag-mode replay
+    /// ([`critical_span_ratio`]).
+    pub crit: f64,
 }
 
 impl DagRow {
@@ -434,12 +494,14 @@ impl DagRow {
 
     pub fn print(&self) {
         println!(
-            "  {:<14} {:<9} barrier={:>9.4}s dag={:>9.4}s speedup={:.2}x",
+            "  {:<14} {:<9} barrier={:>9.4}s dag={:>9.4}s speedup={:.2}x \
+             crit={:.3}",
             self.machine,
             self.shape,
             self.barrier,
             self.dag,
-            self.speedup()
+            self.speedup(),
+            self.crit
         );
     }
 }
@@ -473,13 +535,14 @@ pub fn dag_figure(params: &FigureParams) -> Vec<DagRow> {
             let run = |mode: GraphMode| {
                 sim::replay(shape, &machine, &sched, &params.costs, mode)
                     .expect("app shapes are acyclic")
-                    .makespan()
             };
+            let dag = run(GraphMode::Dag);
             out.push(DagRow {
                 machine: machine_name,
                 shape: label,
-                barrier: run(GraphMode::Barrier),
-                dag: run(GraphMode::Dag),
+                barrier: run(GraphMode::Barrier).makespan(),
+                dag: dag.makespan(),
+                crit: critical_span_ratio(&dag),
             });
         }
     }
@@ -500,13 +563,16 @@ pub struct HeteroRow {
     /// Relative to the all-CPU `any` baseline on the same machine
     /// (< 1 = the accelerator pool paid off).
     pub vs_any: f64,
+    /// Critical-path attribution of the tuned assignment's replay
+    /// ([`critical_span_ratio`]).
+    pub crit: f64,
 }
 
 impl HeteroRow {
     pub fn print(&self) {
         println!(
-            "  {:<9} {:<7} makespan={:>9.4}s vs_any={:>6.3}",
-            self.machine, self.policy, self.makespan, self.vs_any
+            "  {:<9} {:<7} makespan={:>9.4}s vs_any={:>6.3} crit={:.3}",
+            self.machine, self.policy, self.makespan, self.vs_any, self.crit
         );
     }
 }
@@ -535,7 +601,7 @@ pub fn hetero_figure(params: &FigureParams) -> Vec<HeteroRow> {
                 victims: vec![VictimStrategy::SeqPri],
                 placements,
             };
-            autotune::tune_graph(
+            let tuning = autotune::tune_graph(
                 shape,
                 &machine,
                 &params.costs,
@@ -543,24 +609,40 @@ pub fn hetero_figure(params: &FigureParams) -> Vec<HeteroRow> {
                 params.seed,
                 1,
             )
-            .expect("hetero shapes resolve on the hetero machines")
-            .predicted
+            .expect("hetero shapes resolve on the hetero machines");
+            let configs: Vec<SchedConfig> =
+                tuning.per_node.iter().map(|c| c.config.clone()).collect();
+            let places: Vec<Placement> =
+                tuning.per_node.iter().map(|c| c.placement).collect();
+            let replayed = sim::replay_placed(
+                shape,
+                &machine,
+                &configs,
+                &places,
+                &params.costs,
+                GraphMode::Dag,
+            )
+            .expect("tuned assignments replay on the machine they tuned on");
+            (tuning.predicted, critical_span_ratio(&replayed))
         };
         let any_shape = hetero::diamond_shape(w);
-        let any = tune(&any_shape, vec![Placement::Any]);
+        let (any, any_crit) = tune(&any_shape, vec![Placement::Any]);
         // empty placement list = keep the shape's hand-pinned classes
-        let pinned =
+        let (pinned, pinned_crit) =
             tune(&hetero::pinned_diamond(w, DeviceClass::Gpu), Vec::new());
-        let auto =
+        let (auto, auto_crit) =
             tune(&any_shape, SearchSpace::for_machine(&machine).placements);
-        for (policy, makespan) in
-            [("any", any), ("pinned", pinned), ("auto", auto)]
-        {
+        for (policy, makespan, crit) in [
+            ("any", any, any_crit),
+            ("pinned", pinned, pinned_crit),
+            ("auto", auto, auto_crit),
+        ] {
             out.push(HeteroRow {
                 machine: machine_name,
                 policy,
                 makespan,
                 vs_any: makespan / any,
+                crit,
             });
         }
     }
@@ -906,6 +988,7 @@ fn dag_row_to_row(r: DagRow) -> Row {
         steals: 0,
         cov: 0.0,
         queue_wait: 0.0,
+        crit: Some(r.crit),
     }
 }
 
@@ -918,6 +1001,7 @@ fn hetero_row_to_row(r: HeteroRow) -> Row {
         steals: 0,
         cov: 0.0,
         queue_wait: 0.0,
+        crit: Some(r.crit),
     }
 }
 
@@ -944,6 +1028,8 @@ fn tenancy_rows_to_rows(rows: &[TenancyRow]) -> Vec<Row> {
                 steals: 0,
                 cov: 0.0,
                 queue_wait: 0.0,
+                // slowdown rows aggregate many graphs; no single chain
+                crit: None,
             }
         })
         .collect()
@@ -991,6 +1077,8 @@ fn serve_rows_to_rows(rows: &[ServeRow]) -> Vec<Row> {
                 steals: 0,
                 cov: 0.0,
                 queue_wait: 0.0,
+                // tail-latency rows aggregate many requests; no chain
+                crit: None,
             }
         })
         .collect()
@@ -1210,10 +1298,23 @@ mod tests {
                 r.barrier
             );
         }
+        // critical-path attribution: every replay has a chain covering
+        // a meaningful share of its makespan, and never more than all
+        // of it
+        for r in &rows {
+            assert!(
+                r.crit > 0.0 && r.crit <= 1.0 + 1e-9,
+                "{} {}: crit {}",
+                r.machine,
+                r.shape,
+                r.crit
+            );
+        }
         // mapped Row form preserves the comparison
         let mapped = run_figure(FigureId::FigDag, &params);
         assert_eq!(mapped.len(), rows.len());
         assert!(mapped.iter().all(|r| r.vs_static <= 1.15));
+        assert!(mapped.iter().all(|r| r.crit.is_some()));
     }
 
     #[test]
@@ -1258,6 +1359,15 @@ mod tests {
         // mapped Row form preserves the comparison (map the rows we
         // already computed — re-running the figure would double the
         // tuner cost for a shape check)
+        for r in &rows {
+            assert!(
+                r.crit > 0.0 && r.crit <= 1.0 + 1e-9,
+                "{} {}: crit {}",
+                r.machine,
+                r.policy,
+                r.crit
+            );
+        }
         let mapped: Vec<Row> =
             rows.into_iter().map(hetero_row_to_row).collect();
         assert_eq!(mapped.len(), 6);

@@ -510,6 +510,25 @@ mod tests {
     }
 
     #[test]
+    fn report_keys_flow_through_params() {
+        // report=json / bench_name= / calibrate= ride the free-form
+        // param map like the serve keys do
+        let cfg = RunConfig::from_pairs([
+            "report=json",
+            "bench_name=smoke",
+            "calibrate=trace.json",
+        ])
+        .unwrap();
+        assert_eq!(cfg.param_str("report", ""), "json");
+        assert_eq!(cfg.param_str("bench_name", ""), "smoke");
+        assert_eq!(cfg.param_str("calibrate", ""), "trace.json");
+        let back = RunConfig::from_text(&cfg.to_string()).unwrap();
+        assert_eq!(back.param_str("report", ""), "json");
+        assert_eq!(back.param_str("bench_name", ""), "smoke");
+        assert_eq!(back.param_str("calibrate", ""), "trace.json");
+    }
+
+    #[test]
     fn unknown_scheme_is_error() {
         assert!(RunConfig::from_pairs(["scheme=bogus"]).is_err());
         assert!(RunConfig::from_pairs(["machine=bogus"]).is_err());

@@ -50,7 +50,14 @@
 //! the same stream), `trace_file=` picks the Chrome-trace output path
 //! (default `trace.json`, loadable in Perfetto), and
 //! `metrics_interval=<secs>` samples the live metrics registry during
-//! `serve` soaks.
+//! `serve` soaks. Traced runs also print the critical-path attribution
+//! ([`daphne_sched::obs::Analysis`]). `report=json` writes a
+//! machine-readable `BENCH_<name>.json` (`bench_name=` overrides the
+//! stem) collecting the run's figure rows, serve report, obs summary
+//! and critical-path breakdown under a stable schema; `tune
+//! graph=<app> calibrate=<trace.json>` re-costs the graph's nodes from
+//! a recorded Chrome trace before tuning, so the DES oracle tunes on
+//! observed — not assumed — workloads.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -99,8 +106,10 @@ fn usage() -> String {
      \x20 daphne-sched serve qps=400 trace=on trace_file=serve.json \
      metrics_interval=0.5  # traced soak\n\
      \x20 daphne-sched run cc nodes=50000 trace=sampled:8  # 1-in-8 jobs traced\n\
+     \x20 daphne-sched figure dag trace=on report=json bench_name=smoke  # BENCH_smoke.json\n\
      \x20 daphne-sched tune nodes=100000 machine=broadwell20  # single-workload sweep\n\
      \x20 daphne-sched tune graph=linreg rows=100000 machine=cascadelake56\n\
+     \x20 daphne-sched tune graph=linreg calibrate=trace.json  # trace-calibrated costs\n\
      \x20 daphne-sched tune graph=hetero machine=hetero56 placement=auto\n\
      \x20 daphne-sched tune tenancy machine=cascadelake56 arrival=poisson\n\
      \x20 daphne-sched ablation ss\n\
@@ -126,12 +135,18 @@ fn trace_init(cfg: &RunConfig, workers: usize) {
 }
 
 /// Drain the rings into a Chrome-trace JSON file (`trace_file=`,
-/// default `trace.json`) and print the [`ObsSummary`]; a no-op when
-/// tracing never armed. `queue_wait` is the run's accumulated
-/// per-worker `WorkerStats::queue_wait`, when the caller has a
-/// scheduler report to read it from.
-fn trace_finish(cfg: &RunConfig, queue_wait: Option<f64>) -> Result<(), String> {
-    use daphne_sched::obs::{export, trace, ObsSummary};
+/// default `trace.json`) and print the [`ObsSummary`] plus the
+/// critical-path attribution; a no-op when tracing never armed.
+/// `queue_wait` is the run's accumulated per-worker
+/// `WorkerStats::queue_wait`, when the caller has a scheduler report
+/// to read it from. When a `report=json` bench report is accumulating,
+/// the summary and the attribution land in it as sections.
+fn trace_finish(
+    cfg: &RunConfig,
+    queue_wait: Option<f64>,
+    report: Option<&mut daphne_sched::obs::BenchReport>,
+) -> Result<(), String> {
+    use daphne_sched::obs::{export, trace, Analysis, ObsSummary};
     if !trace::enabled() {
         return Ok(());
     }
@@ -144,10 +159,45 @@ fn trace_finish(cfg: &RunConfig, queue_wait: Option<f64>) -> Result<(), String> 
         summary = summary.with_queue_wait(qw);
     }
     println!("{summary}");
+    let analysis = Analysis::from_events(&events);
+    print!("{}", analysis.render());
     println!(
         "trace: {} event(s) -> {path} (open in Perfetto or chrome://tracing)",
         events.len()
     );
+    if let Some(rep) = report {
+        rep.section("obs_summary", summary.to_json());
+        rep.section("critical_path", analysis.to_json());
+    }
+    Ok(())
+}
+
+/// `report=json` support: start an accumulating [`BenchReport`]
+/// (`daphne_sched::obs::BenchReport`) named by `bench_name=` (falling
+/// back to the subcommand's default stem); `None` when no report was
+/// requested.
+fn bench_report(
+    cfg: &RunConfig,
+    default_name: &str,
+) -> Option<daphne_sched::obs::BenchReport> {
+    if cfg.param_str("report", "") != "json" {
+        return None;
+    }
+    let name = cfg.param_str("bench_name", default_name).to_string();
+    Some(daphne_sched::obs::BenchReport::new(&name))
+}
+
+/// Write an accumulated bench report as `BENCH_<name>.json` in the
+/// working directory; a no-op for `None`.
+fn write_report(
+    rep: Option<daphne_sched::obs::BenchReport>,
+) -> Result<(), String> {
+    if let Some(rep) = rep {
+        let path = rep
+            .write_to(std::path::Path::new("."))
+            .map_err(|e| format!("writing bench report: {e}"))?;
+        println!("bench report -> {}", path.display());
+    }
     Ok(())
 }
 
@@ -181,6 +231,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     // `run` executes natively on this host; `machine=` presets are for
     // `figure` (DES). Still allowed here for thread-count experiments.
     let topo = cfg.topology.clone();
+    let mut rep = bench_report(&cfg, &format!("run_{app}"));
     trace_init(&cfg, topo.n_cores());
     match app.as_str() {
         "cc" => {
@@ -266,7 +317,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             }
             let qwait: f64 =
                 result.reports.iter().map(|r| r.total_queue_wait()).sum();
-            trace_finish(&cfg, Some(qwait))?;
+            trace_finish(&cfg, Some(qwait), rep.as_mut())?;
+            write_report(rep)?;
             Ok(())
         }
         "linreg" => {
@@ -343,7 +395,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 .iter()
                 .map(|(_, r)| r.total_queue_wait())
                 .sum();
-            trace_finish(&cfg, Some(qwait))?;
+            trace_finish(&cfg, Some(qwait), rep.as_mut())?;
+            write_report(rep)?;
             Ok(())
         }
         other => Err(format!("unknown app '{other}'")),
@@ -442,7 +495,12 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             println!("{}", snap.row());
         }
     }
-    trace_finish(&cfg, None)?;
+    let mut rep = bench_report(&cfg, "serve");
+    if let Some(r) = rep.as_mut() {
+        r.section("serve", report.to_json());
+    }
+    trace_finish(&cfg, None, rep.as_mut())?;
+    write_report(rep)?;
     Ok(())
 }
 
@@ -507,20 +565,25 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
     };
     let cfg = parse_pairs(&args[1..])?;
     let params = figure_params(&cfg);
+    let mut rep = bench_report(&cfg, &format!("figure_{which}"));
     // Figures replay on modelled machines whose virtual worker count
     // varies per figure; 64 lanes covers the largest (cascadelake56).
     trace_init(&cfg, 64);
-    if which == "all" {
-        for id in FigureId::ALL {
-            figures::print_figure(id, &params);
-        }
-        trace_finish(&cfg, None)?;
-        return Ok(());
+    let rows: Vec<figures::Row> = if which == "all" {
+        FigureId::ALL
+            .into_iter()
+            .flat_map(|id| figures::print_figure(id, &params))
+            .collect()
+    } else {
+        let id = FigureId::parse(which)
+            .ok_or_else(|| format!("unknown figure '{which}'"))?;
+        figures::print_figure(id, &params)
+    };
+    if let Some(r) = rep.as_mut() {
+        r.section("figures", figures::rows_json(&rows));
     }
-    let id = FigureId::parse(which)
-        .ok_or_else(|| format!("unknown figure '{which}'"))?;
-    figures::print_figure(id, &params);
-    trace_finish(&cfg, None)?;
+    trace_finish(&cfg, None, rep.as_mut())?;
+    write_report(rep)?;
     Ok(())
 }
 
@@ -782,15 +845,52 @@ fn cmd_tune(args: &[String]) -> Result<(), String> {
             format!(", {} placement candidates", space.placements.len())
         }
     );
-    let tuning = autotune::tune_graph(
-        &shape,
-        &machine,
-        &CostModel::daphne_like(),
-        &space,
-        cfg.sched.seed,
-        1,
-    )
-    .map_err(|e| e.to_string())?;
+    // `calibrate=<trace.json>`: re-cost the shape's nodes from a
+    // recorded Chrome trace (measured per-node service time replaces
+    // the assumed workload total) before searching — online graph
+    // retuning on the observed workload.
+    let calibrate_path = cfg.param_str("calibrate", "").to_string();
+    let tuning = if calibrate_path.is_empty() {
+        autotune::tune_graph(
+            &shape,
+            &machine,
+            &CostModel::daphne_like(),
+            &space,
+            cfg.sched.seed,
+            1,
+        )
+        .map_err(|e| e.to_string())?
+    } else {
+        let src = std::fs::read_to_string(&calibrate_path).map_err(|e| {
+            format!("reading calibration trace {calibrate_path}: {e}")
+        })?;
+        let doc = daphne_sched::util::json::parse(&src).map_err(|e| {
+            format!("parsing calibration trace {calibrate_path}: {e}")
+        })?;
+        let cal = daphne_sched::sim::TraceCalibration::from_chrome_trace(&doc);
+        if cal.is_empty() {
+            return Err(format!(
+                "calibration trace {calibrate_path} holds no task slices \
+                 (was it recorded with trace=on?)"
+            ));
+        }
+        println!(
+            "calibrating node costs from {calibrate_path} \
+             ({} measured node(s))",
+            cal.len()
+        );
+        let (_, tuning) = autotune::tune_graph_calibrated(
+            &shape,
+            &machine,
+            &CostModel::daphne_like(),
+            &space,
+            cfg.sched.seed,
+            1,
+            &cal,
+        )
+        .map_err(|e| e.to_string())?;
+        tuning
+    };
     println!(
         "best uniform: {:<7} {:<14} {:<7} {:<10} predicted {:.4}s",
         tuning.uniform.config.scheme.name(),

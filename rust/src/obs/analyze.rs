@@ -1,0 +1,679 @@
+//! Post-hoc trace analysis: critical-path extraction with per-node
+//! attribution and a per-worker utilization waterfall.
+//!
+//! Everything here is computed from the drained [`TraceEvent`] stream
+//! alone — the same stream both the real executor and the DES emit
+//! (the DES in virtual time via `trace::record_at`), so one analysis
+//! answers "where did the makespan go" for either engine.
+//!
+//! **Span reconstruction.** Per node (keyed by `name_hash`): first
+//! `Enqueue` opens the span, first `Dispatch` splits queueing from
+//! execution, paired `TaskStart`/`TaskEnd` per worker accumulate pure
+//! service time, `Steal` events and the set of executing workers mark
+//! steal-induced migration, and the last `NodeComplete` closes it. A
+//! `Cancel` without a completion marks the span cancelled; cancelled
+//! spans never join the critical path.
+//!
+//! **Critical-path recovery.** Both engines record a parent's
+//! `NodeComplete` *before* the dependent's `Enqueue`, so the chain that
+//! bounded the makespan is recoverable without the graph: walk back
+//! from the last-completing node, binding each node to the
+//! latest-completing span whose `NodeComplete` is at or before the
+//! node's `Enqueue`. In the DES that inequality is exact equality and
+//! the per-node spans tile the makespan; on a real trace residual gaps
+//! show up as `1 - crit_ratio`. When the caller has the graph's edges,
+//! [`Analysis::from_events_with_edges`] restricts the walk to true
+//! parents.
+//!
+//! Layering: like the rest of `obs` this module never reads `sched`
+//! internals; it may additionally read `sim` *public* replay outcomes
+//! (repolint `layering-obs`) so figure code can report the DES's own
+//! critical path via [`critical_span_ratio`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::obs::export::label;
+use crate::obs::trace::{TraceEvent, TraceKind, NO_JOB};
+use crate::sim::GraphSimOutcome;
+use crate::util::json::Json;
+
+/// Reconstructed lifetime of one graph node, nanoseconds since trace
+/// start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSpan {
+    pub name_hash: u64,
+    /// Interned name when known, short hex otherwise (see
+    /// [`crate::obs::export`]'s label rules).
+    pub label: String,
+    pub enqueue_ns: u64,
+    /// First `Dispatch` — absent for spans that never started.
+    pub dispatch_ns: Option<u64>,
+    /// Last `NodeComplete` — absent for cancelled/unfinished spans.
+    pub complete_ns: Option<u64>,
+    /// Summed paired `TaskStart`→`TaskEnd` time across workers: pure
+    /// service, excluding queueing and inter-chunk scheduling gaps.
+    pub service_ns: u64,
+    /// `Steal` events charged to this node.
+    pub steals: u64,
+    /// Distinct workers that executed chunks of this node.
+    pub workers: usize,
+    pub cancelled: bool,
+}
+
+impl NodeSpan {
+    fn new(name_hash: u64) -> NodeSpan {
+        NodeSpan {
+            name_hash,
+            label: label(name_hash),
+            enqueue_ns: u64::MAX,
+            dispatch_ns: None,
+            complete_ns: None,
+            service_ns: 0,
+            steals: 0,
+            workers: 0,
+            cancelled: false,
+        }
+    }
+
+    /// Time spent waiting for the first worker: `Dispatch - Enqueue`.
+    pub fn queue_ns(&self) -> u64 {
+        self.dispatch_ns
+            .map(|d| d.saturating_sub(self.enqueue_ns))
+            .unwrap_or(0)
+    }
+
+    /// Time from first dispatch to completion (service plus chunk
+    /// scheduling plus any stranding on the node's own tail).
+    pub fn exec_ns(&self) -> u64 {
+        match (self.dispatch_ns, self.complete_ns) {
+            (Some(d), Some(c)) => c.saturating_sub(d),
+            _ => 0,
+        }
+    }
+
+    /// Whole span, `NodeComplete - Enqueue`.
+    pub fn span_ns(&self) -> u64 {
+        self.complete_ns
+            .map(|c| c.saturating_sub(self.enqueue_ns))
+            .unwrap_or(0)
+    }
+
+    /// Did chunks of this node run on more than one worker (the
+    /// signature of steal-induced migration)?
+    pub fn migrated(&self) -> bool {
+        self.workers > 1
+    }
+}
+
+/// One worker's share of the utilization waterfall.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerLane {
+    pub worker: u32,
+    /// Summed paired `TaskStart`→`TaskEnd` time.
+    pub busy_ns: u64,
+    /// Summed `Park`→`Unpark` time (an unmatched trailing `Park` is
+    /// charged until the last event in the stream).
+    pub parked_ns: u64,
+    pub tasks: u64,
+    pub steals: u64,
+    pub failed_steals: u64,
+    pub parks: u64,
+}
+
+/// Critical-path attribution plus the per-worker waterfall for one
+/// drained trace.
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    /// Every reconstructed node span, keyed by `name_hash`.
+    pub spans: BTreeMap<u64, NodeSpan>,
+    /// The chain that bounded the makespan, root first.
+    pub critical_path: Vec<NodeSpan>,
+    /// Last `NodeComplete` minus first `Enqueue` over all spans.
+    pub makespan_ns: u64,
+    /// Sum of critical-path spans (`queue + exec` per node). Equal to
+    /// `makespan_ns` when the chain tiles the trace exactly (the DES
+    /// guarantees it); the shortfall is unexplained residual.
+    pub attributed_ns: u64,
+    pub lanes: Vec<WorkerLane>,
+}
+
+impl Analysis {
+    /// Analyze a drained, timestamp-sorted stream without graph edges
+    /// (binding parents recovered from completion order — exact for DES
+    /// streams).
+    pub fn from_events(events: &[TraceEvent]) -> Analysis {
+        Analysis::from_events_with_edges(events, &[])
+    }
+
+    /// Analyze with explicit `(parent, child)` edges (hashes as in
+    /// `TraceEvent::name_hash`); the critical-path walk then only binds
+    /// true parents.
+    pub fn from_events_with_edges(
+        events: &[TraceEvent],
+        edges: &[(u64, u64)],
+    ) -> Analysis {
+        let mut a = Analysis::default();
+        // worker -> (name_hash, TaskStart ts) of the open chunk
+        let mut open: BTreeMap<u32, (u64, u64)> = BTreeMap::new();
+        // worker -> Park ts of the open park interval
+        let mut parked: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut node_workers: BTreeMap<u64, BTreeSet<u32>> = BTreeMap::new();
+        let mut lanes: BTreeMap<u32, WorkerLane> = BTreeMap::new();
+        let is_node = |e: &TraceEvent| e.name_hash != 0 && e.job != NO_JOB;
+        for e in events {
+            match e.kind {
+                TraceKind::Enqueue if is_node(e) => {
+                    let s = a
+                        .spans
+                        .entry(e.name_hash)
+                        .or_insert_with(|| NodeSpan::new(e.name_hash));
+                    s.enqueue_ns = s.enqueue_ns.min(e.ts_ns);
+                }
+                TraceKind::Dispatch if is_node(e) => {
+                    let s = a
+                        .spans
+                        .entry(e.name_hash)
+                        .or_insert_with(|| NodeSpan::new(e.name_hash));
+                    s.dispatch_ns.get_or_insert(e.ts_ns);
+                }
+                TraceKind::NodeComplete if is_node(e) => {
+                    let s = a
+                        .spans
+                        .entry(e.name_hash)
+                        .or_insert_with(|| NodeSpan::new(e.name_hash));
+                    // events are sorted: the last one seen is the max
+                    s.complete_ns = Some(e.ts_ns);
+                    s.enqueue_ns = s.enqueue_ns.min(e.ts_ns);
+                }
+                TraceKind::Cancel if e.name_hash != 0 => {
+                    a.spans
+                        .entry(e.name_hash)
+                        .or_insert_with(|| NodeSpan::new(e.name_hash))
+                        .cancelled = true;
+                }
+                TraceKind::Steal => {
+                    if is_node(e) {
+                        a.spans
+                            .entry(e.name_hash)
+                            .or_insert_with(|| NodeSpan::new(e.name_hash))
+                            .steals += 1;
+                    }
+                    let l = lanes.entry(e.worker).or_default();
+                    l.worker = e.worker;
+                    l.steals += 1;
+                }
+                TraceKind::FailedSteal => {
+                    let l = lanes.entry(e.worker).or_default();
+                    l.worker = e.worker;
+                    l.failed_steals += 1;
+                }
+                TraceKind::TaskStart => {
+                    open.insert(e.worker, (e.name_hash, e.ts_ns));
+                    if e.name_hash != 0 {
+                        node_workers
+                            .entry(e.name_hash)
+                            .or_default()
+                            .insert(e.worker);
+                    }
+                }
+                TraceKind::TaskEnd => {
+                    if let Some((nh, start)) = open.remove(&e.worker) {
+                        let d = e.ts_ns.saturating_sub(start);
+                        let l = lanes.entry(e.worker).or_default();
+                        l.worker = e.worker;
+                        l.busy_ns += d;
+                        l.tasks += 1;
+                        if let Some(s) = a.spans.get_mut(&nh) {
+                            s.service_ns += d;
+                        }
+                    }
+                }
+                TraceKind::Park => {
+                    parked.entry(e.worker).or_insert(e.ts_ns);
+                    let l = lanes.entry(e.worker).or_default();
+                    l.worker = e.worker;
+                    l.parks += 1;
+                }
+                TraceKind::Unpark => {
+                    if let Some(since) = parked.remove(&e.worker) {
+                        let l = lanes.entry(e.worker).or_default();
+                        l.worker = e.worker;
+                        l.parked_ns += e.ts_ns.saturating_sub(since);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let last_ts = events.last().map(|e| e.ts_ns).unwrap_or(0);
+        for (w, since) in parked {
+            let l = lanes.entry(w).or_default();
+            l.worker = w;
+            l.parked_ns += last_ts.saturating_sub(since);
+        }
+        for (nh, ws) in node_workers {
+            if let Some(s) = a.spans.get_mut(&nh) {
+                s.workers = ws.len();
+            }
+        }
+        a.lanes = lanes.into_values().collect();
+
+        let start = a
+            .spans
+            .values()
+            .map(|s| s.enqueue_ns)
+            .min()
+            .unwrap_or(0);
+        let end = a
+            .spans
+            .values()
+            .filter_map(|s| s.complete_ns)
+            .max()
+            .unwrap_or(start);
+        a.makespan_ns = end.saturating_sub(start);
+
+        // child -> parents, when the caller supplied edges
+        let mut in_edges: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for &(parent, child) in edges {
+            in_edges.entry(child).or_default().push(parent);
+        }
+
+        // Walk back from the last-completing span, binding each node to
+        // the latest-completing candidate at or before its Enqueue.
+        let sink = a
+            .spans
+            .values()
+            .filter(|s| s.complete_ns == Some(end) && !s.cancelled)
+            .map(|s| s.name_hash)
+            .next();
+        let mut chain: Vec<u64> = Vec::new();
+        let mut visited: BTreeSet<u64> = BTreeSet::new();
+        let mut cur = sink;
+        while let Some(h) = cur {
+            visited.insert(h);
+            chain.push(h);
+            let enq = a.spans[&h].enqueue_ns;
+            let candidates: Vec<u64> = match in_edges.get(&h) {
+                Some(parents) => parents.clone(),
+                None => a.spans.keys().copied().collect(),
+            };
+            cur = candidates
+                .into_iter()
+                .filter(|p| !visited.contains(p))
+                .filter_map(|p| {
+                    let s = a.spans.get(&p)?;
+                    match s.complete_ns {
+                        Some(c) if c <= enq && !s.cancelled => {
+                            Some((c, p))
+                        }
+                        _ => None,
+                    }
+                })
+                .max()
+                .map(|(_, p)| p);
+        }
+        chain.reverse();
+        a.critical_path =
+            chain.iter().map(|h| a.spans[h].clone()).collect();
+        a.attributed_ns =
+            a.critical_path.iter().map(|s| s.span_ns()).sum();
+        a
+    }
+
+    /// `attributed_ns / makespan_ns` — how much of the makespan the
+    /// recovered chain explains (1.0 when the spans tile it exactly).
+    pub fn crit_ratio(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return if self.critical_path.is_empty() { 0.0 } else { 1.0 };
+        }
+        self.attributed_ns as f64 / self.makespan_ns as f64
+    }
+
+    /// Human-readable breakdown for the CLI.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let ms = |ns: u64| ns as f64 / 1e6;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "critical path: {} node(s), attributed {:.3} ms of {:.3} ms \
+             makespan ({:.1}%)",
+            self.critical_path.len(),
+            ms(self.attributed_ns),
+            ms(self.makespan_ns),
+            self.crit_ratio() * 100.0
+        );
+        for s in &self.critical_path {
+            let _ = writeln!(
+                out,
+                "  {:<16} queue={:>9.3}ms exec={:>9.3}ms \
+                 service={:>9.3}ms steals={}{}",
+                s.label,
+                ms(s.queue_ns()),
+                ms(s.exec_ns()),
+                ms(s.service_ns),
+                s.steals,
+                if s.migrated() { " migrated" } else { "" }
+            );
+        }
+        if !self.lanes.is_empty() {
+            let _ = writeln!(out, "worker waterfall:");
+            for l in &self.lanes {
+                let _ = writeln!(
+                    out,
+                    "  w{:<3} busy={:>9.3}ms parked={:>9.3}ms tasks={:<6} \
+                     steals={:<4} failed={:<4} parks={}",
+                    l.worker,
+                    ms(l.busy_ns),
+                    ms(l.parked_ns),
+                    l.tasks,
+                    l.steals,
+                    l.failed_steals,
+                    l.parks
+                );
+            }
+        }
+        out
+    }
+
+    /// Stable JSON form for `BENCH_*.json` reports.
+    pub fn to_json(&self) -> Json {
+        let node = |s: &NodeSpan| {
+            Json::Obj(
+                [
+                    ("name".to_string(), Json::Str(s.label.clone())),
+                    (
+                        "queue_ns".to_string(),
+                        Json::Num(s.queue_ns() as f64),
+                    ),
+                    ("exec_ns".to_string(), Json::Num(s.exec_ns() as f64)),
+                    (
+                        "service_ns".to_string(),
+                        Json::Num(s.service_ns as f64),
+                    ),
+                    ("steals".to_string(), Json::Num(s.steals as f64)),
+                    ("migrated".to_string(), Json::Bool(s.migrated())),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        };
+        let lane = |l: &WorkerLane| {
+            Json::Obj(
+                [
+                    ("worker".to_string(), Json::Num(l.worker as f64)),
+                    ("busy_ns".to_string(), Json::Num(l.busy_ns as f64)),
+                    (
+                        "parked_ns".to_string(),
+                        Json::Num(l.parked_ns as f64),
+                    ),
+                    ("tasks".to_string(), Json::Num(l.tasks as f64)),
+                    ("steals".to_string(), Json::Num(l.steals as f64)),
+                    (
+                        "failed_steals".to_string(),
+                        Json::Num(l.failed_steals as f64),
+                    ),
+                    ("parks".to_string(), Json::Num(l.parks as f64)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        };
+        Json::Obj(
+            [
+                (
+                    "makespan_ns".to_string(),
+                    Json::Num(self.makespan_ns as f64),
+                ),
+                (
+                    "attributed_ns".to_string(),
+                    Json::Num(self.attributed_ns as f64),
+                ),
+                (
+                    "crit_ratio".to_string(),
+                    Json::Num(self.crit_ratio()),
+                ),
+                (
+                    "nodes".to_string(),
+                    Json::Arr(
+                        self.critical_path.iter().map(node).collect(),
+                    ),
+                ),
+                (
+                    "workers".to_string(),
+                    Json::Arr(self.lanes.iter().map(lane).collect()),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// The DES's own critical-path attribution as a ratio: summed spans of
+/// the replay's [`GraphSimOutcome::critical_path`] nodes over its
+/// makespan. This is the `crit=` column of the figures — computed from
+/// the replay outcome directly, so figures stay valid with tracing off.
+pub fn critical_span_ratio(out: &GraphSimOutcome) -> f64 {
+    let mk = out.makespan();
+    if mk <= 0.0 {
+        return 0.0;
+    }
+    let sum: f64 = out
+        .critical_path
+        .iter()
+        .filter_map(|name| out.node(name))
+        .map(|n| (n.finish - n.start).max(0.0))
+        .sum();
+    (sum / mk).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::fnv1a;
+
+    fn ev(
+        ts_ns: u64,
+        worker: u32,
+        kind: TraceKind,
+        job: u64,
+        name: &str,
+    ) -> TraceEvent {
+        TraceEvent {
+            ts_ns,
+            worker,
+            kind,
+            job,
+            name_hash: fnv1a(name),
+            tag_hash: 0,
+        }
+    }
+
+    #[test]
+    fn chain_spans_tile_the_makespan() {
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(10, 0, TraceKind::Dispatch, 0, "a"),
+            ev(10, 0, TraceKind::TaskStart, 0, "a"),
+            ev(100, 0, TraceKind::TaskEnd, 0, "a"),
+            ev(100, 9, TraceKind::NodeComplete, 0, "a"),
+            ev(100, 9, TraceKind::Enqueue, 1, "b"),
+            ev(120, 1, TraceKind::Dispatch, 1, "b"),
+            ev(120, 1, TraceKind::TaskStart, 1, "b"),
+            ev(300, 1, TraceKind::TaskEnd, 1, "b"),
+            ev(300, 9, TraceKind::NodeComplete, 1, "b"),
+        ];
+        let a = Analysis::from_events(&events);
+        assert_eq!(a.makespan_ns, 300);
+        assert_eq!(a.attributed_ns, 300);
+        assert_eq!(a.crit_ratio(), 1.0);
+        let names: Vec<&str> =
+            a.critical_path.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(names.len(), 2);
+        let (first, second) = (&a.critical_path[0], &a.critical_path[1]);
+        assert_eq!((first.queue_ns(), first.exec_ns()), (10, 90));
+        assert_eq!((second.queue_ns(), second.exec_ns()), (20, 180));
+        assert_eq!(second.service_ns, 180);
+        // waterfall: each worker served exactly its chunk
+        let w0 =
+            a.lanes.iter().find(|l| l.worker == 0).expect("lane 0");
+        let w1 =
+            a.lanes.iter().find(|l| l.worker == 1).expect("lane 1");
+        assert_eq!((w0.busy_ns, w0.tasks), (90, 1));
+        assert_eq!((w1.busy_ns, w1.tasks), (180, 1));
+    }
+
+    #[test]
+    fn diamond_picks_the_heavy_branch() {
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(0, 0, TraceKind::Dispatch, 0, "a"),
+            ev(50, 9, TraceKind::NodeComplete, 0, "a"),
+            ev(50, 9, TraceKind::Enqueue, 1, "b"),
+            ev(50, 9, TraceKind::Enqueue, 2, "c"),
+            ev(50, 0, TraceKind::Dispatch, 1, "b"),
+            ev(60, 1, TraceKind::Dispatch, 2, "c"),
+            ev(100, 9, TraceKind::NodeComplete, 1, "b"),
+            ev(200, 9, TraceKind::NodeComplete, 2, "c"),
+            ev(200, 9, TraceKind::Enqueue, 3, "d"),
+            ev(210, 0, TraceKind::Dispatch, 3, "d"),
+            ev(260, 9, TraceKind::NodeComplete, 3, "d"),
+        ];
+        let a = Analysis::from_events(&events);
+        assert_eq!(a.makespan_ns, 260);
+        let names: Vec<&str> =
+            a.critical_path.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(names.len(), 3, "{names:?}");
+        // the light branch "b" (done at 100) is not on the path; the
+        // chain binds d to c (complete 200 == d's enqueue)
+        assert_eq!(a.attributed_ns, 50 + 150 + 60);
+        assert_eq!(a.crit_ratio(), 1.0);
+        assert!(a
+            .critical_path
+            .iter()
+            .all(|s| s.name_hash != fnv1a("b")));
+    }
+
+    #[test]
+    fn explicit_edges_override_the_completion_heuristic() {
+        // unrelated node u completes at 150, exactly child x's enqueue;
+        // without edges the walk binds x to u, with edges it binds the
+        // true parent p (complete 100)
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "p"),
+            ev(0, 9, TraceKind::Enqueue, 1, "u"),
+            ev(100, 9, TraceKind::NodeComplete, 0, "p"),
+            ev(150, 9, TraceKind::NodeComplete, 1, "u"),
+            ev(150, 9, TraceKind::Enqueue, 2, "x"),
+            ev(160, 0, TraceKind::Dispatch, 2, "x"),
+            ev(220, 9, TraceKind::NodeComplete, 2, "x"),
+        ];
+        let heuristic = Analysis::from_events(&events);
+        assert_eq!(heuristic.critical_path[0].name_hash, fnv1a("u"));
+        let edges = [(fnv1a("p"), fnv1a("x"))];
+        let exact = Analysis::from_events_with_edges(&events, &edges);
+        let names: Vec<u64> = exact
+            .critical_path
+            .iter()
+            .map(|s| s.name_hash)
+            .collect();
+        assert_eq!(names, vec![fnv1a("p"), fnv1a("x")]);
+    }
+
+    #[test]
+    fn stolen_task_migration_is_attributed() {
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "s"),
+            ev(10, 0, TraceKind::Dispatch, 0, "s"),
+            ev(10, 0, TraceKind::TaskStart, 0, "s"),
+            ev(50, 0, TraceKind::TaskEnd, 0, "s"),
+            ev(50, 1, TraceKind::Steal, 0, "s"),
+            ev(50, 1, TraceKind::TaskStart, 0, "s"),
+            ev(90, 1, TraceKind::TaskEnd, 0, "s"),
+            ev(90, 9, TraceKind::NodeComplete, 0, "s"),
+        ];
+        let a = Analysis::from_events(&events);
+        let s = &a.critical_path[0];
+        assert_eq!(s.steals, 1);
+        assert!(s.migrated());
+        assert_eq!(s.service_ns, 80);
+        assert_eq!(a.attributed_ns, 90);
+        assert_eq!(a.crit_ratio(), 1.0);
+        let w1 =
+            a.lanes.iter().find(|l| l.worker == 1).expect("lane 1");
+        assert_eq!(w1.steals, 1);
+    }
+
+    #[test]
+    fn cancelled_branch_stays_off_the_critical_path() {
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(40, 9, TraceKind::NodeComplete, 0, "a"),
+            ev(40, 9, TraceKind::Enqueue, 1, "b"),
+            ev(40, 9, TraceKind::Enqueue, 2, "c"),
+            ev(60, 9, TraceKind::Cancel, 1, "b"),
+            ev(140, 9, TraceKind::NodeComplete, 2, "c"),
+            ev(140, 9, TraceKind::Enqueue, 3, "d"),
+            ev(200, 9, TraceKind::NodeComplete, 3, "d"),
+        ];
+        let a = Analysis::from_events(&events);
+        let b = &a.spans[&fnv1a("b")];
+        assert!(b.cancelled);
+        assert!(b.complete_ns.is_none());
+        assert!(a
+            .critical_path
+            .iter()
+            .all(|s| s.name_hash != fnv1a("b")));
+        assert_eq!(a.critical_path.len(), 3, "a -> c -> d");
+        assert_eq!(a.attributed_ns, a.makespan_ns);
+    }
+
+    #[test]
+    fn park_intervals_and_empty_streams() {
+        let a = Analysis::from_events(&[]);
+        assert_eq!(a.makespan_ns, 0);
+        assert!(a.critical_path.is_empty());
+        assert_eq!(a.crit_ratio(), 0.0);
+
+        let events = vec![
+            ev(0, 0, TraceKind::Park, NO_JOB, ""),
+            ev(500, 0, TraceKind::Unpark, NO_JOB, ""),
+            ev(700, 1, TraceKind::Park, NO_JOB, ""),
+            ev(900, 0, TraceKind::FailedSteal, NO_JOB, ""),
+        ];
+        let a = Analysis::from_events(&events);
+        let w0 =
+            a.lanes.iter().find(|l| l.worker == 0).expect("lane 0");
+        assert_eq!((w0.parked_ns, w0.parks), (500, 1));
+        assert_eq!(w0.failed_steals, 1);
+        // trailing park runs to the last event
+        let w1 =
+            a.lanes.iter().find(|l| l.worker == 1).expect("lane 1");
+        assert_eq!(w1.parked_ns, 200);
+    }
+
+    #[test]
+    fn render_and_json_cover_the_breakdown() {
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "solo"),
+            ev(10, 0, TraceKind::Dispatch, 0, "solo"),
+            ev(10, 0, TraceKind::TaskStart, 0, "solo"),
+            ev(110, 0, TraceKind::TaskEnd, 0, "solo"),
+            ev(110, 9, TraceKind::NodeComplete, 0, "solo"),
+        ];
+        let a = Analysis::from_events(&events);
+        let rendered = a.render();
+        assert!(rendered.contains("critical path: 1 node(s)"));
+        assert!(rendered.contains("worker waterfall"));
+        let j = a.to_json();
+        assert_eq!(
+            j.get("makespan_ns").and_then(|v| v.as_f64()),
+            Some(110.0)
+        );
+        let nodes =
+            j.get("nodes").and_then(|v| v.as_arr()).expect("nodes");
+        assert_eq!(nodes.len(), 1);
+        assert!(nodes[0].get("queue_ns").is_some());
+        assert!(j.get("workers").is_some());
+    }
+}

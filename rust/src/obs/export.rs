@@ -18,26 +18,22 @@ use std::path::Path;
 
 use crate::obs::trace::{tag_name, TraceEvent, TraceKind};
 use crate::util::json::{self, Json};
+use crate::util::stats::LatencyReservoir;
 
 /// The process id used for every emitted event (single-process traces).
 const TRACE_PID: f64 = 1.0;
 
-/// Queue-delay histogram buckets, log decades in nanoseconds:
-/// `<10µs, <100µs, <1ms, <10ms, <100ms, ≥100ms`.
-const DELAY_BUCKET_EDGES_NS: [u64; 5] = [10_000, 100_000, 1_000_000, 10_000_000, 100_000_000];
-const DELAY_BUCKET_LABELS: [&str; 6] = ["<10us", "<100us", "<1ms", "<10ms", "<100ms", ">=100ms"];
-
-fn bucket_of(delay_ns: u64) -> usize {
-    DELAY_BUCKET_EDGES_NS
-        .iter()
-        .position(|edge| delay_ns < *edge)
-        .unwrap_or(DELAY_BUCKET_EDGES_NS.len())
-}
+/// Reservoir capacity of the per-tag queue-delay digest. Bounded so a
+/// long soak cannot grow the summary; Algorithm R keeps the sample
+/// uniform over everything seen.
+const QUEUE_DELAY_RESERVOIR: usize = 4096;
 
 /// Resolve a hash to a human-readable label: the interned string when
 /// one exists (tags always; job names when a submission site interned
-/// them), a short hex form otherwise.
-fn label(hash: u64) -> String {
+/// them), a short hex form otherwise. Shared with [`super::analyze`] /
+/// [`super::report`] and with `sim`'s trace calibration, which must key
+/// measured service times the same way the export names its slices.
+pub fn label(hash: u64) -> String {
     if hash == 0 {
         return "(untagged)".to_string();
     }
@@ -179,9 +175,22 @@ pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> io::Result<()> 
     fs::write(path, json::to_string(&chrome_trace_json(events)))
 }
 
+/// Per-tag queue-delay percentiles (first `Dispatch` minus `Enqueue`
+/// per job), reservoir-sampled with the same
+/// [`LatencyReservoir`]/linear-interpolation semantics `figure` and
+/// `serve` report — so the CLI summary and the JSON report quote
+/// percentiles comparable with every other surface in the repo.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QueueDelayStats {
+    /// Jobs with both an `Enqueue` and a `Dispatch` in the stream.
+    pub jobs: u64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
 /// Compact digest of a drained trace, printed by the CLI after traced
-/// runs: steal efficiency, park/unpark churn, and a per-tag queue-delay
-/// histogram (first `Dispatch` minus `Enqueue` per job).
+/// runs: steal efficiency, park/unpark churn, and per-tag queue-delay
+/// percentiles.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ObsSummary {
     pub events: usize,
@@ -189,8 +198,8 @@ pub struct ObsSummary {
     pub failed_steals: u64,
     pub parks: u64,
     pub unparks: u64,
-    /// tag hash -> delay histogram (buckets per [`DELAY_BUCKET_LABELS`]).
-    pub queue_delay_hist: BTreeMap<u64, [u64; 6]>,
+    /// tag hash -> reservoir-backed delay percentiles.
+    pub queue_delay: BTreeMap<u64, QueueDelayStats>,
     /// Summed `WorkerStats.queue_wait` (seconds) when the caller has a
     /// `SchedReport` in hand — see [`ObsSummary::with_queue_wait`].
     pub queue_wait_secs: Option<f64>,
@@ -218,11 +227,31 @@ impl ObsSummary {
                 _ => {}
             }
         }
+        let mut reservoirs: BTreeMap<u64, LatencyReservoir> = BTreeMap::new();
         for ((tag, _job), (enq, disp)) in jobs {
             if let (Some(e), Some(d)) = (enq, disp) {
-                let hist = s.queue_delay_hist.entry(tag).or_insert([0; 6]);
-                hist[bucket_of(d.saturating_sub(e))] += 1;
+                reservoirs
+                    .entry(tag)
+                    .or_insert_with(|| {
+                        // deterministic per-tag seed: summaries of the
+                        // same stream are reproducible
+                        LatencyReservoir::new(
+                            QUEUE_DELAY_RESERVOIR,
+                            0x9E37_79B9 ^ tag,
+                        )
+                    })
+                    .record(d.saturating_sub(e) as f64);
             }
+        }
+        for (tag, r) in reservoirs {
+            s.queue_delay.insert(
+                tag,
+                QueueDelayStats {
+                    jobs: r.seen(),
+                    p50_ns: r.p50(),
+                    p99_ns: r.p99(),
+                },
+            );
         }
         s
     }
@@ -239,6 +268,44 @@ impl ObsSummary {
     pub fn steal_efficiency(&self) -> Option<f64> {
         let total = self.steals + self.failed_steals;
         (total > 0).then(|| self.steals as f64 / total as f64)
+    }
+
+    /// Stable JSON form for `BENCH_*.json` reports.
+    pub fn to_json(&self) -> Json {
+        let tags: Vec<Json> = self
+            .queue_delay
+            .iter()
+            .map(|(tag, d)| {
+                Json::Obj(
+                    [
+                        ("tag".to_string(), Json::Str(label(*tag))),
+                        ("jobs".to_string(), Json::Num(d.jobs as f64)),
+                        ("p50_ns".to_string(), Json::Num(d.p50_ns)),
+                        ("p99_ns".to_string(), Json::Num(d.p99_ns)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        let mut obj: BTreeMap<String, Json> = BTreeMap::from([
+            ("events".to_string(), Json::Num(self.events as f64)),
+            ("steals".to_string(), Json::Num(self.steals as f64)),
+            (
+                "failed_steals".to_string(),
+                Json::Num(self.failed_steals as f64),
+            ),
+            ("parks".to_string(), Json::Num(self.parks as f64)),
+            ("unparks".to_string(), Json::Num(self.unparks as f64)),
+            ("queue_delay".to_string(), Json::Arr(tags)),
+        ]);
+        if let Some(eff) = self.steal_efficiency() {
+            obj.insert("steal_efficiency".to_string(), Json::Num(eff));
+        }
+        if let Some(qw) = self.queue_wait_secs {
+            obj.insert("queue_wait_secs".to_string(), Json::Num(qw));
+        }
+        Json::Obj(obj)
     }
 }
 
@@ -259,15 +326,17 @@ impl fmt::Display for ObsSummary {
         if let Some(qw) = self.queue_wait_secs {
             writeln!(f, "  worker queue_wait total: {:.6} s", qw)?;
         }
-        if !self.queue_delay_hist.is_empty() {
-            writeln!(f, "  queue delay (enqueue -> first dispatch), jobs per tag:")?;
-            for (tag, hist) in &self.queue_delay_hist {
-                let cells: Vec<String> = DELAY_BUCKET_LABELS
-                    .iter()
-                    .zip(hist.iter())
-                    .map(|(l, n)| format!("{}:{}", l, n))
-                    .collect();
-                writeln!(f, "    {:<12} {}", label(*tag), cells.join(" "))?;
+        if !self.queue_delay.is_empty() {
+            writeln!(f, "  queue delay (enqueue -> first dispatch), per tag:")?;
+            for (tag, d) in &self.queue_delay {
+                writeln!(
+                    f,
+                    "    {:<12} jobs={} p50={:.3}ms p99={:.3}ms",
+                    label(*tag),
+                    d.jobs,
+                    d.p50_ns / 1e6,
+                    d.p99_ns / 1e6
+                )?;
             }
         }
         Ok(())
@@ -281,16 +350,6 @@ mod tests {
 
     fn ev(ts_ns: u64, worker: u32, kind: TraceKind, job: u64, tag_hash: u64) -> TraceEvent {
         TraceEvent { ts_ns, worker, kind, job, name_hash: 0, tag_hash }
-    }
-
-    #[test]
-    fn delay_buckets_split_on_log_decades() {
-        assert_eq!(bucket_of(0), 0);
-        assert_eq!(bucket_of(9_999), 0);
-        assert_eq!(bucket_of(10_000), 1);
-        assert_eq!(bucket_of(999_999), 2);
-        assert_eq!(bucket_of(5_000_000), 3);
-        assert_eq!(bucket_of(250_000_000), 5);
     }
 
     #[test]
@@ -312,12 +371,28 @@ mod tests {
         assert_eq!((s.steals, s.failed_steals), (1, 1));
         assert_eq!((s.parks, s.unparks), (1, 1));
         assert_eq!(s.steal_efficiency(), Some(0.5));
-        let hist = s.queue_delay_hist.get(&tag).expect("tag histogram");
-        assert_eq!(hist[0], 1, "5us delay lands in <10us");
-        assert_eq!(hist[3], 1, "2ms delay lands in <10ms");
-        let rendered = format!("{}", s.with_queue_wait(0.5));
+        // delays: 5us (job 1, the 6us re-dispatch ignored) and 2ms
+        // (job 2); linear interpolation over two samples
+        let d = s.queue_delay.get(&tag).expect("tag stats");
+        assert_eq!(d.jobs, 2);
+        assert!((d.p50_ns - 1_002_500.0).abs() < 1e-6, "p50 {}", d.p50_ns);
+        assert!((d.p99_ns - 1_980_050.0).abs() < 1e-6, "p99 {}", d.p99_ns);
+        let rendered = format!("{}", s.clone().with_queue_wait(0.5));
         assert!(rendered.contains("export-test"));
+        assert!(rendered.contains("jobs=2"));
         assert!(rendered.contains("queue_wait total: 0.500000 s"));
+        let j = s.to_json();
+        assert_eq!(j.get("events").and_then(|v| v.as_f64()), Some(9.0));
+        let tags = j
+            .get("queue_delay")
+            .and_then(|v| v.as_arr())
+            .expect("queue_delay array");
+        assert_eq!(tags.len(), 1);
+        assert_eq!(
+            tags[0].get("tag").and_then(|v| v.as_str()),
+            Some("export-test")
+        );
+        assert!(tags[0].get("p99_ns").is_some());
     }
 
     #[test]

@@ -24,14 +24,30 @@
 //! (`rust/tests/obs_trace_integration.rs` pins per-job event-ordering
 //! and admission-decision parity on a shared burst trace).
 //!
-//! Layering: `obs` imports only `util` / `topology` / `config`
-//! (repolint `layering-obs`); `sched`, `sim` and `serve` may import
-//! `obs`, never the reverse.
+//! On top of the recorder sit the post-hoc consumers:
+//!
+//! - [`analyze`] — critical-path extraction with queueing/service/
+//!   migration attribution and a per-worker utilization waterfall,
+//!   reconstructed from the event stream alone.
+//! - [`report`] — the real-vs-DES divergence diff ([`report::diff_traces`])
+//!   and the machine-readable `BENCH_<name>.json` emitter
+//!   ([`report::BenchReport`]), plus the Chrome-trace service-time
+//!   reader behind `tune ... calibrate=<trace.json>`.
+//!
+//! Layering: the recorder modules (`trace` / `export` / `live`) import
+//! only `util` / `topology` / `config`; the analysis modules
+//! (`analyze` / `report`) may additionally read `sim` *public* types —
+//! never `sched` internals (repolint `layering-obs`). `sched`, `sim`
+//! and `serve` may import `obs`, never the reverse.
 
+pub mod analyze;
 pub mod export;
 pub mod live;
+pub mod report;
 pub mod trace;
 
+pub use analyze::{critical_span_ratio, Analysis};
 pub use export::ObsSummary;
 pub use live::{metrics, MetricsRegistry, MetricsSnapshot};
+pub use report::{diff_traces, BenchReport, TraceDiff};
 pub use trace::{TraceEvent, TraceKind, OBS_CONTROL_WORKER};

@@ -1,0 +1,553 @@
+//! Real-vs-DES divergence diffing and machine-readable bench reports.
+//!
+//! Two consumers of the PR 8 trace stream that close the loop the
+//! recorder opened:
+//!
+//! - [`diff_traces`] aligns a real run's drained stream with its
+//!   virtual-time DES replay (diffable by design: both engines emit the
+//!   same per-node `Enqueue`/`Dispatch`/`NodeComplete` skeleton) and
+//!   reports per-node modelled-vs-measured skew ranked by contribution
+//!   to the makespan error, plus an ordering-skew count — nodes whose
+//!   event-kind sequence differs between the engines, or that appear in
+//!   only one stream.
+//! - [`BenchReport`] serializes analysis results, figure rows and serve
+//!   reports into the stable `BENCH_<name>.json` schema
+//!   ([`BENCH_SCHEMA`]) so CI and the perf trajectory get a
+//!   machine-readable record of every measured run.
+//!
+//! [`service_times_from_chrome_trace`] is the calibration bridge: it
+//! re-derives per-node service seconds from an exported Chrome trace so
+//! `tune graph=<app> calibrate=<trace.json>` can re-tune on measured
+//! rather than assumed workloads (see
+//! `crate::sim::model::TraceCalibration`).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::obs::export::label;
+use crate::obs::trace::{TraceEvent, TraceKind, NO_JOB};
+use crate::util::json::{self, Json};
+
+/// Schema identifier stamped into every report; bump on breaking
+/// changes so downstream tooling can dispatch on it.
+pub const BENCH_SCHEMA: &str = "daphne-sched/bench/v1";
+
+/// Per-node modelled-vs-measured comparison.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSkew {
+    pub name_hash: u64,
+    pub label: String,
+    /// Span (first `Enqueue` to last `NodeComplete`, ns) in the DES
+    /// stream; `None` when the node never appeared there.
+    pub modelled_ns: Option<u64>,
+    /// Same span in the measured stream.
+    pub measured_ns: Option<u64>,
+    /// `modelled - measured` (one-sided nodes count their full span).
+    pub skew_ns: i64,
+    /// The per-node `Enqueue`/`Dispatch`/`NodeComplete` sequence
+    /// differs between the streams, or the node is one-sided.
+    pub ordering_mismatch: bool,
+}
+
+/// Result of [`diff_traces`], ranked by `|skew_ns|` descending.
+#[derive(Debug, Clone, Default)]
+pub struct TraceDiff {
+    pub nodes: Vec<NodeSkew>,
+    /// Count of nodes with an ordering mismatch (zero when the DES
+    /// reproduced the real run's per-node event skeleton exactly).
+    pub ordering_skew: usize,
+    pub modelled_makespan_ns: u64,
+    pub measured_makespan_ns: u64,
+}
+
+/// Per-node state collected from one stream: span bounds plus the
+/// shared-kind sequence as `(ts, rank)` pairs — sorted by `(ts, rank)`
+/// before comparison, so same-timestamp ties (a DES burst stamps
+/// Enqueue and first Dispatch at the same virtual instant, and lane
+/// merge order on ties is arbitrary) collapse to the canonical
+/// Enqueue < Dispatch < NodeComplete order instead of registering as
+/// skew. Genuinely reordered kinds still differ: their *timestamps*
+/// order them the wrong way on one side.
+#[derive(Default)]
+struct SideSpan {
+    enqueue_ns: Option<u64>,
+    complete_ns: Option<u64>,
+    seq: Vec<(u64, u8)>,
+}
+
+impl SideSpan {
+    fn kinds(&self) -> Vec<u8> {
+        self.seq.iter().map(|&(_, r)| r).collect()
+    }
+}
+
+fn kind_rank(k: TraceKind) -> u8 {
+    match k {
+        TraceKind::Enqueue => 0,
+        TraceKind::Dispatch => 1,
+        _ => 2, // NodeComplete (the only other kind collected)
+    }
+}
+
+fn side_spans(events: &[TraceEvent]) -> BTreeMap<u64, SideSpan> {
+    let mut out: BTreeMap<u64, SideSpan> = BTreeMap::new();
+    for e in events {
+        if e.name_hash == 0 || e.job == NO_JOB {
+            continue;
+        }
+        match e.kind {
+            TraceKind::Enqueue
+            | TraceKind::Dispatch
+            | TraceKind::NodeComplete => {
+                let s = out.entry(e.name_hash).or_default();
+                s.seq.push((e.ts_ns, kind_rank(e.kind)));
+                match e.kind {
+                    TraceKind::Enqueue => {
+                        s.enqueue_ns.get_or_insert(e.ts_ns);
+                    }
+                    TraceKind::NodeComplete => {
+                        s.complete_ns = Some(e.ts_ns);
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+    for s in out.values_mut() {
+        s.seq.sort_unstable();
+    }
+    out
+}
+
+fn stream_makespan(spans: &BTreeMap<u64, SideSpan>) -> u64 {
+    let start = spans.values().filter_map(|s| s.enqueue_ns).min();
+    let end = spans.values().filter_map(|s| s.complete_ns).max();
+    match (start, end) {
+        (Some(a), Some(b)) => b.saturating_sub(a),
+        _ => 0,
+    }
+}
+
+/// Diff a DES replay's stream (`modelled`) against the real run's
+/// stream (`measured`). Both must be drained, timestamp-sorted streams
+/// of the *same* workload; node identity is `name_hash` (job ids differ
+/// between the engines by construction).
+pub fn diff_traces(
+    modelled: &[TraceEvent],
+    measured: &[TraceEvent],
+) -> TraceDiff {
+    let m = side_spans(modelled);
+    let r = side_spans(measured);
+    let mut diff = TraceDiff {
+        modelled_makespan_ns: stream_makespan(&m),
+        measured_makespan_ns: stream_makespan(&r),
+        ..TraceDiff::default()
+    };
+    let span = |s: &SideSpan| -> Option<u64> {
+        match (s.enqueue_ns, s.complete_ns) {
+            (Some(e), Some(c)) => Some(c.saturating_sub(e)),
+            _ => None,
+        }
+    };
+    let hashes: std::collections::BTreeSet<u64> =
+        m.keys().chain(r.keys()).copied().collect();
+    for h in hashes {
+        let (ms, rs) = (m.get(&h), r.get(&h));
+        let modelled_ns = ms.and_then(span);
+        let measured_ns = rs.and_then(span);
+        let ordering_mismatch = match (ms, rs) {
+            (Some(a), Some(b)) => a.kinds() != b.kinds(),
+            _ => true,
+        };
+        if ordering_mismatch {
+            diff.ordering_skew += 1;
+        }
+        diff.nodes.push(NodeSkew {
+            name_hash: h,
+            label: label(h),
+            modelled_ns,
+            measured_ns,
+            skew_ns: modelled_ns.unwrap_or(0) as i64
+                - measured_ns.unwrap_or(0) as i64,
+            ordering_mismatch,
+        });
+    }
+    diff.nodes
+        .sort_by(|a, b| b.skew_ns.abs().cmp(&a.skew_ns.abs()));
+    diff
+}
+
+impl TraceDiff {
+    /// `modelled - measured` end-to-end, ns.
+    pub fn makespan_error_ns(&self) -> i64 {
+        self.modelled_makespan_ns as i64 - self.measured_makespan_ns as i64
+    }
+
+    /// Human-readable digest: headline plus the top skew contributors.
+    pub fn render(&self, top: usize) -> String {
+        use std::fmt::Write as _;
+        let ms = |ns: f64| ns / 1e6;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "real-vs-DES diff: {} node(s), ordering skew {}, makespan \
+             modelled {:.3} ms / measured {:.3} ms (error {:+.3} ms)",
+            self.nodes.len(),
+            self.ordering_skew,
+            ms(self.modelled_makespan_ns as f64),
+            ms(self.measured_makespan_ns as f64),
+            ms(self.makespan_error_ns() as f64)
+        );
+        for n in self.nodes.iter().take(top) {
+            let fmt_side = |v: Option<u64>| match v {
+                Some(ns) => format!("{:.3}ms", ms(ns as f64)),
+                None => "absent".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  {:<16} modelled={:<10} measured={:<10} \
+                 skew={:+.3}ms{}",
+                n.label,
+                fmt_side(n.modelled_ns),
+                fmt_side(n.measured_ns),
+                ms(n.skew_ns as f64),
+                if n.ordering_mismatch { " ORDER" } else { "" }
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let node = |n: &NodeSkew| {
+            let side = |v: Option<u64>| match v {
+                Some(ns) => Json::Num(ns as f64),
+                None => Json::Null,
+            };
+            Json::Obj(
+                [
+                    ("name".to_string(), Json::Str(n.label.clone())),
+                    ("modelled_ns".to_string(), side(n.modelled_ns)),
+                    ("measured_ns".to_string(), side(n.measured_ns)),
+                    (
+                        "skew_ns".to_string(),
+                        Json::Num(n.skew_ns as f64),
+                    ),
+                    (
+                        "ordering_mismatch".to_string(),
+                        Json::Bool(n.ordering_mismatch),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        };
+        Json::Obj(
+            [
+                (
+                    "ordering_skew".to_string(),
+                    Json::Num(self.ordering_skew as f64),
+                ),
+                (
+                    "modelled_makespan_ns".to_string(),
+                    Json::Num(self.modelled_makespan_ns as f64),
+                ),
+                (
+                    "measured_makespan_ns".to_string(),
+                    Json::Num(self.measured_makespan_ns as f64),
+                ),
+                (
+                    "nodes".to_string(),
+                    Json::Arr(self.nodes.iter().map(node).collect()),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// A named bundle of JSON sections written as `BENCH_<name>.json` —
+/// the machine-readable perf record of one CLI invocation. `schema`
+/// and `name` are reserved top-level keys; every section lands beside
+/// them.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    name: String,
+    sections: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), sections: BTreeMap::new() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Add (or replace) one section. `schema` / `name` are reserved.
+    pub fn section(&mut self, key: &str, value: Json) {
+        debug_assert!(
+            key != "schema" && key != "name",
+            "reserved report key: {key}"
+        );
+        self.sections.insert(key.to_string(), value);
+    }
+
+    pub fn has_section(&self, key: &str) -> bool {
+        self.sections.contains_key(key)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj: BTreeMap<String, Json> = self.sections.clone();
+        obj.insert(
+            "schema".to_string(),
+            Json::Str(BENCH_SCHEMA.to_string()),
+        );
+        obj.insert("name".to_string(), Json::Str(self.name.clone()));
+        Json::Obj(obj)
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path written.
+    pub fn write_to(&self, dir: &Path) -> io::Result<PathBuf> {
+        let path = dir.join(self.file_name());
+        fs::write(&path, json::to_string(&self.to_json()))?;
+        Ok(path)
+    }
+}
+
+/// Re-derive per-node service seconds from an exported Chrome trace
+/// document: paired `B`/`E` slices named `run <label>` are summed per
+/// label (`ts` is microseconds). The inverse of
+/// [`crate::obs::export::chrome_trace_json`]'s task slices, and the
+/// file-based entry point of trace calibration.
+pub fn service_times_from_chrome_trace(
+    doc: &Json,
+) -> BTreeMap<String, f64> {
+    let mut out: BTreeMap<String, f64> = BTreeMap::new();
+    let events = match doc.get("traceEvents").and_then(|v| v.as_arr()) {
+        Some(evs) => evs,
+        None => return out,
+    };
+    // per-tid stack of open B slices: (label, ts_us)
+    let mut open: BTreeMap<i64, Vec<(String, f64)>> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let tid = e
+            .get("tid")
+            .and_then(|t| t.as_f64())
+            .map(|t| t as i64)
+            .unwrap_or(-1);
+        match ph {
+            "B" => {
+                let name =
+                    e.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                if let Some(label) = name.strip_prefix("run ") {
+                    let ts = e
+                        .get("ts")
+                        .and_then(|t| t.as_f64())
+                        .unwrap_or(0.0);
+                    open.entry(tid)
+                        .or_default()
+                        .push((label.to_string(), ts));
+                }
+            }
+            "E" => {
+                if let Some((label, ts0)) =
+                    open.entry(tid).or_default().pop()
+                {
+                    let ts = e
+                        .get("ts")
+                        .and_then(|t| t.as_f64())
+                        .unwrap_or(ts0);
+                    *out.entry(label).or_insert(0.0) +=
+                        (ts - ts0).max(0.0) * 1e-6;
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::chrome_trace_json;
+    use crate::obs::trace::fnv1a;
+
+    fn ev(
+        ts_ns: u64,
+        worker: u32,
+        kind: TraceKind,
+        job: u64,
+        name: &str,
+    ) -> TraceEvent {
+        TraceEvent {
+            ts_ns,
+            worker,
+            kind,
+            job,
+            name_hash: fnv1a(name),
+            tag_hash: 0,
+        }
+    }
+
+    fn node_stream(scale: u64) -> Vec<TraceEvent> {
+        vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(10 * scale, 0, TraceKind::Dispatch, 0, "a"),
+            ev(100 * scale, 9, TraceKind::NodeComplete, 0, "a"),
+            ev(100 * scale, 9, TraceKind::Enqueue, 1, "b"),
+            ev(110 * scale, 1, TraceKind::Dispatch, 1, "b"),
+            ev(300 * scale, 9, TraceKind::NodeComplete, 1, "b"),
+        ]
+    }
+
+    #[test]
+    fn identical_streams_diff_to_zero_skew() {
+        let s = node_stream(1);
+        let d = diff_traces(&s, &s);
+        assert_eq!(d.ordering_skew, 0);
+        assert_eq!(d.makespan_error_ns(), 0);
+        assert!(d.nodes.iter().all(|n| n.skew_ns == 0));
+        assert!(d.nodes.iter().all(|n| !n.ordering_mismatch));
+    }
+
+    #[test]
+    fn skew_is_ranked_and_ordering_mismatches_counted() {
+        let modelled = node_stream(1);
+        // measured: node b takes 3x longer, and an extra node c appears
+        // only on the measured side
+        let mut measured = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(10, 0, TraceKind::Dispatch, 0, "a"),
+            ev(100, 9, TraceKind::NodeComplete, 0, "a"),
+            ev(100, 9, TraceKind::Enqueue, 1, "b"),
+            ev(110, 1, TraceKind::Dispatch, 1, "b"),
+            ev(700, 9, TraceKind::NodeComplete, 1, "b"),
+        ];
+        measured.push(ev(700, 9, TraceKind::Enqueue, 2, "c"));
+        measured.push(ev(750, 9, TraceKind::NodeComplete, 2, "c"));
+        let d = diff_traces(&modelled, &measured);
+        assert_eq!(d.ordering_skew, 1, "only the one-sided node c");
+        assert_eq!(
+            d.nodes[0].name_hash,
+            fnv1a("b"),
+            "largest |skew| first"
+        );
+        assert_eq!(d.nodes[0].skew_ns, 200 - 600);
+        let c = d
+            .nodes
+            .iter()
+            .find(|n| n.name_hash == fnv1a("c"))
+            .expect("c");
+        assert!(c.ordering_mismatch);
+        assert_eq!(c.modelled_ns, None);
+        assert!(d.makespan_error_ns() < 0);
+        let rendered = d.render(10);
+        assert!(rendered.contains("ordering skew 1"));
+        assert!(rendered.contains("ORDER"));
+        let j = d.to_json();
+        assert_eq!(
+            j.get("ordering_skew").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn reordered_kinds_are_ordering_skew() {
+        let a = node_stream(1);
+        let mut b = node_stream(1);
+        // swap node a's Enqueue/Dispatch kinds in place
+        b[0].kind = TraceKind::Dispatch;
+        b[1].kind = TraceKind::Enqueue;
+        let d = diff_traces(&a, &b);
+        assert_eq!(d.ordering_skew, 1);
+    }
+
+    #[test]
+    fn same_timestamp_tie_order_is_not_skew() {
+        // a DES burst stamps Enqueue and first Dispatch at the same
+        // virtual instant; lane merge order on the tie must not read
+        // as ordering skew
+        let a = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(0, 0, TraceKind::Dispatch, 0, "a"),
+            ev(100, 9, TraceKind::NodeComplete, 0, "a"),
+        ];
+        let b = vec![
+            ev(0, 0, TraceKind::Dispatch, 0, "a"),
+            ev(0, 9, TraceKind::Enqueue, 0, "a"),
+            ev(100, 9, TraceKind::NodeComplete, 0, "a"),
+        ];
+        let d = diff_traces(&a, &b);
+        assert_eq!(d.ordering_skew, 0);
+        assert!(d.nodes.iter().all(|n| !n.ordering_mismatch));
+    }
+
+    #[test]
+    fn bench_report_schema_and_write() {
+        let mut rep = BenchReport::new("unit");
+        rep.section("figures", Json::Arr(vec![]));
+        rep.section(
+            "obs_summary",
+            Json::Obj(BTreeMap::from([(
+                "events".to_string(),
+                Json::Num(3.0),
+            )])),
+        );
+        assert!(rep.has_section("figures"));
+        let j = rep.to_json();
+        assert_eq!(
+            j.get("schema").and_then(|v| v.as_str()),
+            Some(BENCH_SCHEMA)
+        );
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("unit"));
+        assert!(j.get("figures").is_some());
+        assert_eq!(rep.file_name(), "BENCH_unit.json");
+        let dir = std::env::temp_dir()
+            .join(format!("bench-report-test-{}", std::process::id()));
+        fs::create_dir_all(&dir).expect("temp dir");
+        let path = rep.write_to(&dir).expect("write");
+        let round = json::parse(
+            &fs::read_to_string(&path).expect("read back"),
+        )
+        .expect("valid json");
+        assert_eq!(
+            round.get("schema").and_then(|v| v.as_str()),
+            Some(BENCH_SCHEMA)
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chrome_trace_service_times_round_trip() {
+        let events = vec![
+            ev(0, 9, TraceKind::Enqueue, 0, "node-a"),
+            ev(1_000, 0, TraceKind::Dispatch, 0, "node-a"),
+            ev(1_000, 0, TraceKind::TaskStart, 0, "node-a"),
+            ev(2_000_000, 0, TraceKind::TaskEnd, 0, "node-a"),
+            ev(2_000_000, 1, TraceKind::TaskStart, 0, "node-a"),
+            ev(3_000_000, 1, TraceKind::TaskEnd, 0, "node-a"),
+            ev(3_000_000, 9, TraceKind::NodeComplete, 0, "node-a"),
+        ];
+        let doc = chrome_trace_json(&events);
+        let times = service_times_from_chrome_trace(&doc);
+        // labels are the export's: hex of the un-interned name hash
+        assert_eq!(times.len(), 1);
+        let (_, secs) = times.iter().next().expect("one label");
+        // 1.999 ms + 1 ms of B/E slices
+        assert!(
+            (secs - 2.999e-3).abs() < 1e-9,
+            "summed service {secs}"
+        );
+    }
+}

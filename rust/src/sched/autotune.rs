@@ -446,6 +446,28 @@ pub fn tune_graph(
     })
 }
 
+/// Calibrated graph tuning — the online-retuning loop closed: re-cost
+/// `shape` from measured per-node service times
+/// ([`crate::sim::TraceCalibration`], distilled from a real or DES
+/// trace by `CostModel::calibrate_from_trace` or loaded from an
+/// exported Chrome trace) and run [`tune_graph`] on the calibrated
+/// shape. Returns the calibrated shape alongside the tuning so callers
+/// can replay/validate the chosen assignment against the workloads the
+/// tuner actually saw.
+pub fn tune_graph_calibrated(
+    shape: &GraphShape,
+    topo: &Topology,
+    costs: &CostModel,
+    space: &SearchSpace,
+    seed: u64,
+    repeats: usize,
+    cal: &sim::TraceCalibration,
+) -> Result<(GraphShape, GraphTuning), GraphError> {
+    let calibrated = shape.recosted(cal);
+    let tuning = tune_graph(&calibrated, topo, costs, space, seed, repeats)?;
+    Ok((calibrated, tuning))
+}
+
 /// One evaluated cross-job policy for a tenant mix.
 #[derive(Debug, Clone)]
 pub struct TenancyCandidate {
@@ -521,6 +543,60 @@ mod tests {
         // 10 schemes x (2 central + 2 stealing x 4 victims) = 100
         assert_eq!(ranked.len(), 100);
         assert!(ranked.windows(2).all(|w| w[0].predicted <= w[1].predicted));
+    }
+
+    #[test]
+    fn calibrated_tuning_recosts_measured_nodes() {
+        // a shape whose assumed costs are wrong by 10x on one node;
+        // after calibration the tuner sees (and predicts) the measured
+        // magnitude while unmeasured nodes keep assumed costs
+        let shape = GraphShape::new("cal")
+            .node(simgraph::NodeModel::uniform("fast", 64, 1e-5))
+            .node(
+                simgraph::NodeModel::uniform("slow", 64, 1e-5)
+                    .after("fast"),
+            );
+        let mut cal = sim::TraceCalibration::default();
+        cal.insert("slow", 64.0 * 1e-4); // measured: 10x assumed
+        let topo = Topology::broadwell20();
+        let space = SearchSpace {
+            schemes: vec![Scheme::Static, Scheme::Gss],
+            layouts: vec![QueueLayout::Centralized { atomic: false }],
+            victims: vec![VictimStrategy::Seq],
+            placements: Vec::new(),
+        };
+        let costs = CostModel::recorded();
+        let assumed =
+            tune_graph(&shape, &topo, &costs, &space, 1, 1).expect("tunes");
+        let (calibrated_shape, calibrated) = tune_graph_calibrated(
+            &shape, &topo, &costs, &space, 1, 1, &cal,
+        )
+        .expect("tunes calibrated");
+        let slow = calibrated_shape
+            .nodes()
+            .iter()
+            .find(|n| n.name == "slow")
+            .expect("slow node kept");
+        assert!(
+            (slow.workload.total_cost() - 64.0 * 1e-4).abs() < 1e-12,
+            "slow recosted to the measured total"
+        );
+        let fast = calibrated_shape
+            .nodes()
+            .iter()
+            .find(|n| n.name == "fast")
+            .expect("fast node kept");
+        assert!(
+            (fast.workload.total_cost() - 64.0 * 1e-5).abs() < 1e-12,
+            "unmeasured node keeps assumed costs"
+        );
+        assert!(
+            calibrated.predicted > assumed.predicted,
+            "the tuner now sees the measured (heavier) workload: \
+             {} vs {}",
+            calibrated.predicted,
+            assumed.predicted
+        );
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::sched::{
     NodeSpec, SubmitOpts, TenancyPolicy,
 };
 use crate::sim::serve::{arrival_times, RESERVOIR_CAPACITY, SERVE_TAG};
+use crate::util::json::Json;
 use crate::util::stats::{self, LatencyReservoir};
 
 /// Tag of the batch tenants running underneath the request stream.
@@ -266,6 +267,79 @@ impl ServeReport {
             "{:<8} {:>8} {:>7} {:>6} {:>6} {:>9} {:>9} {:>9} {:>6}",
             "admit", "qps", "served", "shed", "failed", "p50ms", "p99ms",
             "p999ms", "slo"
+        )
+    }
+
+    /// Stable JSON form for `report=json` bench reports
+    /// ([`crate::obs::BenchReport`]). Decisions are collapsed to a
+    /// count (the full accept/reject sequence is an in-process
+    /// comparison artifact, not a report metric).
+    pub fn to_json(&self) -> Json {
+        let snap = |m: &MetricsSnapshot| {
+            Json::Obj(
+                [
+                    ("t".to_string(), Json::Num(m.t)),
+                    ("admitted".to_string(), Json::Num(m.admitted as f64)),
+                    ("shed".to_string(), Json::Num(m.shed as f64)),
+                    (
+                        "backlog_high_water".to_string(),
+                        Json::Num(m.backlog_high_water as f64),
+                    ),
+                    ("enqueued".to_string(), Json::Num(m.enqueued as f64)),
+                    ("completed".to_string(), Json::Num(m.completed as f64)),
+                    ("cancelled".to_string(), Json::Num(m.cancelled as f64)),
+                    ("steals".to_string(), Json::Num(m.steals as f64)),
+                    (
+                        "failed_steals".to_string(),
+                        Json::Num(m.failed_steals as f64),
+                    ),
+                    ("parks".to_string(), Json::Num(m.parks as f64)),
+                    ("unparks".to_string(), Json::Num(m.unparks as f64)),
+                    ("repicks".to_string(), Json::Num(m.repicks as f64)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        };
+        Json::Obj(
+            [
+                (
+                    "policy".to_string(),
+                    Json::Str(self.policy.name().to_string()),
+                ),
+                (
+                    "admission".to_string(),
+                    Json::Str(self.admission.name().to_string()),
+                ),
+                ("offered".to_string(), Json::Num(self.offered as f64)),
+                ("measured".to_string(), Json::Num(self.measured as f64)),
+                ("served".to_string(), Json::Num(self.served as f64)),
+                ("shed".to_string(), Json::Num(self.shed as f64)),
+                ("failed".to_string(), Json::Num(self.failed as f64)),
+                ("attained_qps".to_string(), Json::Num(self.attained_qps)),
+                ("p50".to_string(), Json::Num(self.p50)),
+                ("p99".to_string(), Json::Num(self.p99)),
+                ("p999".to_string(), Json::Num(self.p999)),
+                (
+                    "slo_attainment".to_string(),
+                    Json::Num(self.slo_attainment),
+                ),
+                (
+                    "mean_queue_delay".to_string(),
+                    Json::Num(self.mean_queue_delay),
+                ),
+                ("wall".to_string(), Json::Num(self.wall)),
+                (
+                    "decisions".to_string(),
+                    Json::Num(self.decisions.len() as f64),
+                ),
+                (
+                    "metrics".to_string(),
+                    Json::Arr(self.metrics.iter().map(snap).collect()),
+                ),
+            ]
+            .into_iter()
+            .collect(),
         )
     }
 }
@@ -494,6 +568,16 @@ mod tests {
         assert_eq!(report.slo_attainment, 1.0);
         assert!(report.attained_qps > 0.0);
         assert!(report.p50 > 0.0 && report.p999 >= report.p50);
+        // JSON form round-trips through the report serializer
+        let j = crate::util::json::parse(&crate::util::json::to_string(
+            &report.to_json(),
+        ))
+        .unwrap();
+        assert_eq!(j.get("policy").and_then(Json::as_str), Some("fifo"));
+        assert_eq!(j.get("admission").and_then(Json::as_str), Some("open"));
+        assert_eq!(j.get("served").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(j.get("decisions").and_then(Json::as_f64), Some(20.0));
+        assert!(j.get("metrics").and_then(Json::as_arr).is_some());
     }
 
     #[test]

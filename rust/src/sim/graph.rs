@@ -52,7 +52,7 @@
 use std::collections::BinaryHeap;
 
 use super::engine::{Ev, JobSim, SimOutcome};
-use super::model::{CostModel, Workload};
+use super::model::{CostModel, TraceCalibration, Workload};
 use crate::config::{GraphMode, SchedConfig};
 use crate::obs::trace::{self, TraceKind, NO_JOB, OBS_CONTROL_WORKER};
 use crate::sched::graph::{toposort, GraphError, TopoOrder};
@@ -226,6 +226,25 @@ impl GraphShape {
                     .after("heavy")
                     .after("light"),
             )
+    }
+
+    /// Apply measured per-node service totals from a
+    /// [`TraceCalibration`]: every node the trace measured gets its
+    /// workload rescaled to the measured total (per-item distribution
+    /// preserved — see [`Workload::scaled_to`]); unmeasured nodes keep
+    /// their assumed costs. This is how `tune_graph` re-tunes on
+    /// observed rather than assumed workloads
+    /// ([`crate::sched::autotune::tune_graph_calibrated`]).
+    pub fn recosted(&self, cal: &TraceCalibration) -> GraphShape {
+        let mut out = self.clone();
+        for n in &mut out.nodes {
+            if let Some(secs) = cal.service_secs(&n.name) {
+                if secs > 0.0 {
+                    n.workload = n.workload.scaled_to(secs);
+                }
+            }
+        }
+        out
     }
 }
 

@@ -59,7 +59,7 @@ pub use graph::{
     GraphSimOutcome, NodeModel, NodeSimOutcome, SimAdmission,
     TenancySimOutcome, TenantOutcome, TenantSpec,
 };
-pub use model::{CostModel, Workload};
+pub use model::{CostModel, TraceCalibration, Workload};
 pub use serve::{
     arrival_times, replay_open_loop, OpenLoopSpec, ServeSimOutcome,
     SERVE_TAG,

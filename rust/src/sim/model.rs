@@ -1,6 +1,14 @@
-//! Cost models for the DES: what each scheduler action costs in seconds.
+//! Cost models for the DES: what each scheduler action costs in
+//! seconds, plus trace-derived calibration of per-node workloads
+//! ([`TraceCalibration`]) — the feedback half of online graph
+//! retuning.
 
+use std::collections::BTreeMap;
+
+use crate::obs::export::label;
+use crate::obs::trace::{fnv1a, TraceEvent, TraceKind};
 use crate::topology::Topology;
+use crate::util::json::Json;
 
 /// Per-item execution costs of a workload, as a prefix-sum so any chunk
 /// `[a, b)` costs `O(1)` to evaluate.
@@ -43,6 +51,30 @@ impl Workload {
     /// Total sequential cost.
     pub fn total_cost(&self) -> f64 {
         *self.prefix.last().unwrap()
+    }
+
+    /// Rescale so the total sequential cost equals `total` seconds,
+    /// preserving the per-item cost *distribution* (a heavy-tailed
+    /// workload stays heavy-tailed — only the magnitude is measured by
+    /// a trace, not the shape). A zero-cost workload spreads `total`
+    /// uniformly instead.
+    pub fn scaled_to(&self, total: f64) -> Workload {
+        let current = self.total_cost();
+        if total <= 0.0 || self.items() == 0 {
+            return self.clone();
+        }
+        if current <= 0.0 {
+            return Workload::uniform(
+                &self.name,
+                self.items(),
+                total / self.items() as f64,
+            );
+        }
+        let factor = total / current;
+        Workload {
+            prefix: self.prefix.iter().map(|p| p * factor).collect(),
+            name: self.name.clone(),
+        }
     }
 }
 
@@ -143,6 +175,90 @@ impl CostModel {
             (1.0 + (s - 1.0) * topo.remote_numa_factor) / s;
         self
     }
+
+    /// Distill measured per-node service times out of a drained trace
+    /// stream (real or DES) into a [`TraceCalibration`] — the entry
+    /// point of the online graph retuning loop: replay/tune against
+    /// `shape.recosted(&calibration)` instead of the assumed costs.
+    pub fn calibrate_from_trace(events: &[TraceEvent]) -> TraceCalibration {
+        TraceCalibration::from_events(events)
+    }
+}
+
+/// Measured per-node service totals (seconds), keyed the way the trace
+/// export labels nodes: the interned name when one exists, the short
+/// hex of the name hash otherwise. Apply with
+/// [`GraphShape::recosted`](super::GraphShape::recosted); look up with
+/// [`TraceCalibration::service_secs`], which matches a shape node by
+/// plain name *or* by the hex spelling of its hash — so calibrations
+/// loaded from exported Chrome traces (where graph-node names are
+/// usually un-interned) still bind to the right nodes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceCalibration {
+    by_label: BTreeMap<String, f64>,
+}
+
+impl TraceCalibration {
+    /// Sum paired `TaskStart`→`TaskEnd` durations per worker per node
+    /// label over a drained, timestamp-sorted stream.
+    pub fn from_events(events: &[TraceEvent]) -> TraceCalibration {
+        // worker -> (name_hash, TaskStart ts) of the open chunk
+        let mut open: BTreeMap<u32, (u64, u64)> = BTreeMap::new();
+        let mut cal = TraceCalibration::default();
+        for e in events {
+            match e.kind {
+                TraceKind::TaskStart => {
+                    open.insert(e.worker, (e.name_hash, e.ts_ns));
+                }
+                TraceKind::TaskEnd => {
+                    if let Some((nh, start)) = open.remove(&e.worker) {
+                        if nh != 0 {
+                            let secs = e.ts_ns.saturating_sub(start)
+                                as f64
+                                / 1e9;
+                            *cal.by_label
+                                .entry(label(nh))
+                                .or_insert(0.0) += secs;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        cal
+    }
+
+    /// Load from an exported Chrome trace document (the
+    /// `trace_file=<f>.json` a previous run wrote) — the file-based
+    /// path behind `tune graph=<app> calibrate=<trace.json>`.
+    pub fn from_chrome_trace(doc: &Json) -> TraceCalibration {
+        TraceCalibration {
+            by_label: crate::obs::report::service_times_from_chrome_trace(
+                doc,
+            ),
+        }
+    }
+
+    /// Record a measured total directly (tests, synthetic feeds).
+    pub fn insert(&mut self, label: &str, secs: f64) {
+        self.by_label.insert(label.to_string(), secs);
+    }
+
+    /// Measured total for a shape node, matched by plain name first,
+    /// then by the export's hex spelling of the name's hash.
+    pub fn service_secs(&self, name: &str) -> Option<f64> {
+        self.by_label.get(name).copied().or_else(|| {
+            self.by_label.get(&label(fnv1a(name))).copied()
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_label.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_label.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +280,55 @@ mod tests {
         let w = Workload::uniform("u", 100, 0.5);
         assert_eq!(w.total_cost(), 50.0);
         assert_eq!(w.chunk_cost(10, 20), 5.0);
+    }
+
+    #[test]
+    fn scaled_to_preserves_the_distribution() {
+        let w = Workload::from_costs("skew", &[1.0, 2.0, 3.0, 4.0]);
+        let s = w.scaled_to(20.0);
+        assert!((s.total_cost() - 20.0).abs() < 1e-12);
+        assert!((s.chunk_cost(0, 1) - 2.0).abs() < 1e-12);
+        assert!((s.chunk_cost(3, 4) - 8.0).abs() < 1e-12);
+        // zero-cost workloads spread the total uniformly
+        let z = Workload::from_costs("zero", &[0.0, 0.0]);
+        let zs = z.scaled_to(4.0);
+        assert!((zs.chunk_cost(0, 1) - 2.0).abs() < 1e-12);
+        // non-positive targets are a no-op
+        assert_eq!(w.scaled_to(0.0).total_cost(), w.total_cost());
+    }
+
+    #[test]
+    fn calibration_from_events_and_lookup() {
+        use crate::obs::trace::{fnv1a, TraceEvent, TraceKind};
+        let ev = |ts_ns: u64, worker: u32, kind: TraceKind, name: &str| {
+            TraceEvent {
+                ts_ns,
+                worker,
+                kind,
+                job: 0,
+                name_hash: fnv1a(name),
+                tag_hash: 0,
+            }
+        };
+        let events = vec![
+            ev(0, 0, TraceKind::TaskStart, "dense"),
+            ev(2_000_000, 0, TraceKind::TaskEnd, "dense"),
+            ev(2_000_000, 1, TraceKind::TaskStart, "dense"),
+            ev(3_000_000, 1, TraceKind::TaskEnd, "dense"),
+            ev(0, 2, TraceKind::TaskStart, "sparse"),
+            ev(500_000, 2, TraceKind::TaskEnd, "sparse"),
+        ];
+        let cal = CostModel::calibrate_from_trace(&events);
+        assert_eq!(cal.len(), 2);
+        let dense = cal.service_secs("dense").expect("dense measured");
+        assert!((dense - 3e-3).abs() < 1e-12, "summed across workers");
+        let sparse = cal.service_secs("sparse").expect("sparse");
+        assert!((sparse - 5e-4).abs() < 1e-12);
+        assert_eq!(cal.service_secs("absent"), None);
+        // direct inserts by plain name bind too
+        let mut manual = TraceCalibration::default();
+        manual.insert("dense", 1.0);
+        assert_eq!(manual.service_secs("dense"), Some(1.0));
     }
 
     #[test]

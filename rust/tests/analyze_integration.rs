@@ -1,0 +1,208 @@
+//! Trace-analysis acceptance (the PR 9 tentpole pins):
+//!
+//! 1. **Critical-path attribution**: a traced DES replay of the
+//!    unbalanced diamond on the modelled 20-core machine yields an
+//!    `obs::Analysis` whose attributed span sum lands within 5% of the
+//!    measured makespan (in virtual time the chain tiles it exactly —
+//!    a parent's `NodeComplete` and its dependent's `Enqueue` share a
+//!    timestamp).
+//! 2. **Trace-calibrated retuning**: the *true* workload is a skewed
+//!    diamond (one branch 10x heavier than the tuner's assumed shape
+//!    says). A traced replay of the truth feeds
+//!    `CostModel::calibrate_from_trace`; `tune_graph_calibrated` on
+//!    the assumed shape must then reproduce-or-beat plain assumed-cost
+//!    `tune_graph` when both tuned assignments are replayed against
+//!    the true shape on the modelled hetero56 machine.
+//!
+//! This suite owns its process, so arming the global trace gate is
+//! safe (the lib unit tests deliberately never touch it).
+
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
+use daphne_sched::config::{GraphMode, SchedConfig, TraceMode};
+use daphne_sched::obs::{trace, Analysis};
+use daphne_sched::sched::autotune::{self, SearchSpace};
+use daphne_sched::sched::{Placement, QueueLayout, Scheme, VictimStrategy};
+use daphne_sched::sim::{
+    self, CostModel, GraphShape, NodeModel, TraceCalibration,
+};
+use daphne_sched::topology::Topology;
+
+const SEED: u64 = 42;
+/// Items per diamond branch — small enough that the per-chunk
+/// `TaskStart`/`TaskEnd` stream fits the trace rings with room to
+/// spare.
+const ITEMS: usize = 48;
+const PER_ITEM: f64 = 1e-5;
+/// The true workload's heavy-branch multiplier (what the assumed shape
+/// gets wrong).
+const SKEW: f64 = 10.0;
+
+/// The diamond the tuner *assumes*: both branches equally cheap.
+fn assumed_shape() -> GraphShape {
+    GraphShape::new("skewed-diamond")
+        .node(NodeModel::uniform("src", ITEMS, PER_ITEM))
+        .node(NodeModel::uniform("lhs", ITEMS, PER_ITEM).after("src"))
+        .node(NodeModel::uniform("rhs", ITEMS, PER_ITEM).after("src"))
+        .node(
+            NodeModel::uniform("sink", ITEMS, PER_ITEM)
+                .after("lhs")
+                .after("rhs"),
+        )
+}
+
+/// The *true* workload: identical topology, but `rhs` is SKEW× heavier
+/// per item.
+fn true_shape() -> GraphShape {
+    GraphShape::new("skewed-diamond")
+        .node(NodeModel::uniform("src", ITEMS, PER_ITEM))
+        .node(NodeModel::uniform("lhs", ITEMS, PER_ITEM).after("src"))
+        .node(
+            NodeModel::uniform("rhs", ITEMS, PER_ITEM * SKEW).after("src"),
+        )
+        .node(
+            NodeModel::uniform("sink", ITEMS, PER_ITEM)
+                .after("lhs")
+                .after("rhs"),
+        )
+}
+
+fn hetero_space(machine: &Topology) -> SearchSpace {
+    SearchSpace {
+        schemes: vec![Scheme::Static, Scheme::Gss],
+        layouts: vec![QueueLayout::Centralized { atomic: false }],
+        victims: vec![VictimStrategy::SeqPri],
+        placements: SearchSpace::for_machine(machine).placements,
+    }
+}
+
+/// Replay a tuned assignment against the TRUE workload — the measure
+/// both tunings are judged by.
+fn replay_on_truth(
+    machine: &Topology,
+    tuning: &autotune::GraphTuning,
+) -> f64 {
+    let configs: Vec<SchedConfig> =
+        tuning.per_node.iter().map(|c| c.config.clone()).collect();
+    let places: Vec<Placement> =
+        tuning.per_node.iter().map(|c| c.placement).collect();
+    sim::replay_placed(
+        &true_shape(),
+        machine,
+        &configs,
+        &places,
+        &CostModel::recorded(),
+        GraphMode::Dag,
+    )
+    .expect("the diamond replays on the hetero machine")
+    .makespan()
+}
+
+/// One test function: the trace buffer is process-global, so both
+/// halves must run sequentially in a single test.
+#[test]
+fn critical_path_attribution_and_calibrated_retuning() {
+    trace::enable(TraceMode::On, 64, trace::DEFAULT_CAPACITY);
+    let _ = trace::drain();
+
+    // --- 1. critical-path attribution on the traced diamond replay ---
+    let machine = Topology::broadwell20();
+    let shape = GraphShape::unbalanced_diamond(10);
+    let out = sim::replay(
+        &shape,
+        &machine,
+        &SchedConfig::fine_grained().with_seed(SEED),
+        &CostModel::daphne_like(),
+        GraphMode::Dag,
+    )
+    .expect("the diamond is acyclic");
+    let events = trace::drain();
+    assert!(!events.is_empty(), "the DES replay must emit trace events");
+    let analysis = Analysis::from_events(&events);
+    assert!(
+        !analysis.critical_path.is_empty(),
+        "the replay must recover a critical path"
+    );
+    // acceptance pin: attributed span sum within 5% of the measured
+    // makespan (exact in virtual time)
+    let ratio = analysis.crit_ratio();
+    assert!(
+        (ratio - 1.0).abs() <= 0.05,
+        "attributed {} of {} makespan ns (ratio {ratio})",
+        analysis.attributed_ns,
+        analysis.makespan_ns
+    );
+    // the trace's makespan is the replay's makespan (both virtual ns)
+    let replayed_ns = out.makespan() * 1e9;
+    assert!(
+        (analysis.makespan_ns as f64 - replayed_ns).abs()
+            <= 0.05 * replayed_ns,
+        "trace makespan {} vs replayed {}",
+        analysis.makespan_ns,
+        replayed_ns
+    );
+
+    // --- 2. trace-calibrated retuning beats assumed-cost tuning ---
+    let machine = Topology::hetero56();
+    // trace the TRUE workload once (the "observed production run")
+    let _ = sim::replay(
+        &true_shape(),
+        &machine,
+        &SchedConfig::fine_grained().with_seed(SEED),
+        &CostModel::recorded(),
+        GraphMode::Dag,
+    )
+    .expect("the true diamond replays");
+    let events = trace::drain();
+    let cal: TraceCalibration =
+        CostModel::calibrate_from_trace(&events);
+    assert!(!cal.is_empty(), "the traced replay must yield calibration");
+    // the calibration saw the skew the assumed shape misses
+    let (lhs, rhs) = (
+        cal.service_secs("lhs").expect("lhs measured"),
+        cal.service_secs("rhs").expect("rhs measured"),
+    );
+    assert!(
+        rhs > 3.0 * lhs,
+        "calibration must surface the heavy branch: lhs {lhs} rhs {rhs}"
+    );
+
+    let space = hetero_space(&machine);
+    let costs = CostModel::recorded();
+    let assumed =
+        autotune::tune_graph(&assumed_shape(), &machine, &costs, &space, SEED, 1)
+            .expect("assumed tuning resolves");
+    let (recosted, calibrated) = autotune::tune_graph_calibrated(
+        &assumed_shape(),
+        &machine,
+        &costs,
+        &space,
+        SEED,
+        1,
+        &cal,
+    )
+    .expect("calibrated tuning resolves");
+    // the recosted shape carries the measured skew into the oracle
+    let heavy = recosted
+        .nodes()
+        .iter()
+        .find(|n| n.name == "rhs")
+        .expect("rhs survives recosting");
+    assert!(
+        heavy.workload.total_cost() > 3.0 * PER_ITEM * ITEMS as f64,
+        "recosted rhs total {}",
+        heavy.workload.total_cost()
+    );
+
+    // judged on the TRUE workload, calibration reproduces or beats the
+    // assumed-cost tuning (acceptance pin)
+    let assumed_makespan = replay_on_truth(&machine, &assumed);
+    let calibrated_makespan = replay_on_truth(&machine, &calibrated);
+    assert!(
+        calibrated_makespan <= assumed_makespan * 1.01,
+        "calibrated {calibrated_makespan}s must reproduce or beat \
+         assumed {assumed_makespan}s on the true workload"
+    );
+}

@@ -292,6 +292,23 @@ fn real_and_des_traces_agree_on_a_shared_admitted_burst() {
         "per-node shared-kind subsequences must match across engines"
     );
 
+    // the differential differ agrees with the hand-rolled comparison:
+    // the two engines replayed the same burst, so no node's shared-kind
+    // sequence differs and no node is one-sided (acceptance criterion:
+    // zero ordering skew on the shared burst)
+    let diff = daphne_sched::obs::diff_traces(&des_events, &real_events);
+    assert_eq!(
+        diff.ordering_skew, 0,
+        "real-vs-DES diff must report zero ordering skew on the shared \
+         burst: {}",
+        diff.render(6)
+    );
+    // both sides saw the same admitted node set
+    assert!(diff
+        .nodes
+        .iter()
+        .all(|n| n.modelled_ns.is_some() && n.measured_ns.is_some()));
+
     // the exporter renders the real stream to well-formed Chrome-trace
     // JSON (the CI smoke validates the CLI-written file the same way)
     let doc = export::chrome_trace_json(&real_events);

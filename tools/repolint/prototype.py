@@ -50,6 +50,12 @@ SERVE_ALLOWED = {"sched", "sim", "config", "topology", "util", "serve", "obs"}
 
 OBS_ALLOWED = {"util", "topology", "config", "obs"}
 
+# The obs *analysis* modules (critical-path attribution, trace diffing,
+# bench reports) consume replay outcomes, so they may additionally read
+# `sim` public types -- but never `sched` internals.
+OBS_ANALYSIS_FILES = ("rust/src/obs/analyze.rs", "rust/src/obs/report.rs")
+OBS_ANALYSIS_ALLOWED = {"util", "topology", "config", "obs", "sim"}
+
 SERVE_CONSUMERS = ("rust/src/serve/", "rust/src/bench/")
 
 
@@ -379,14 +385,22 @@ def lint_file(rel, src, ranks, findings):
                                  "only bench/ and main.rs may import crate::serve"))
 
     if rel.startswith("rust/src/obs/"):
+        analysis = rel in OBS_ANALYSIS_FILES
+        allowed = OBS_ANALYSIS_ALLOWED if analysis else OBS_ALLOWED
         for i, line in enumerate(code):
             if in_spans(tspans, i):
                 continue
             for m in re.finditer(r"crate::(\w+)", line):
-                if m.group(1) not in OBS_ALLOWED:
-                    findings.append((rel, i + 1, "layering-obs",
-                                     f"obs may only use {sorted(OBS_ALLOWED)}, "
-                                     f"found crate::{m.group(1)}"))
+                if m.group(1) not in allowed:
+                    if analysis:
+                        msg = (f"obs analysis modules may only use "
+                               f"{sorted(OBS_ANALYSIS_ALLOWED)} (sim public "
+                               f"types, never sched internals), "
+                               f"found crate::{m.group(1)}")
+                    else:
+                        msg = (f"obs may only use {sorted(OBS_ALLOWED)}, "
+                               f"found crate::{m.group(1)}")
+                    findings.append((rel, i + 1, "layering-obs", msg))
 
     # --- no unwrap/expect in the worker dispatch path ---
     for fname in DISPATCH_PATH_FNS.get(rel, []):

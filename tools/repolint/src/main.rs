@@ -91,6 +91,16 @@ const SERVE_ALLOWED: &[&str] =
 /// all import *it*) and never `bench`/`apps`.
 const OBS_ALLOWED: &[&str] = &["util", "topology", "config", "obs"];
 
+/// The obs *analysis* modules (critical-path attribution, trace
+/// diffing, bench reports) consume replay outcomes, so they may
+/// additionally read `sim` public types — but never `sched` internals:
+/// the recorder/analysis split keeps the hot-path modules a strict
+/// near-leaf while the offline consumers see the DES surface.
+const OBS_ANALYSIS_FILES: &[&str] =
+    &["rust/src/obs/analyze.rs", "rust/src/obs/report.rs"];
+const OBS_ANALYSIS_ALLOWED: &[&str] =
+    &["util", "topology", "config", "obs", "sim"];
+
 /// How many lines above an `unsafe`/`transmute` the justifying comment
 /// may sit. Multi-line `let` bindings put statement fragments between
 /// the comment block and the keyword, so strict adjacency is too rigid.
@@ -704,20 +714,32 @@ fn lint_file(rel: &str, src: &str, ranks: &[(String, u32)], out: &mut Vec<Findin
     }
 
     if rel.starts_with("rust/src/obs/") {
+        let analysis = OBS_ANALYSIS_FILES.contains(&rel);
+        let allowed: &[&str] =
+            if analysis { OBS_ANALYSIS_ALLOWED } else { OBS_ALLOWED };
         for (i, line) in s.code.iter().enumerate() {
             if in_spans(&tspans, i) {
                 continue;
             }
             for p in find_all(line, "crate::") {
                 let seg = ident_at(line, p + 7);
-                if !seg.is_empty() && !OBS_ALLOWED.contains(&seg) {
+                if !seg.is_empty() && !allowed.contains(&seg) {
+                    let msg = if analysis {
+                        format!(
+                            "obs analysis modules may only use \
+                             {OBS_ANALYSIS_ALLOWED:?} (sim public types, \
+                             never sched internals), found crate::{seg}"
+                        )
+                    } else {
+                        format!(
+                            "obs may only use {OBS_ALLOWED:?}, found crate::{seg}"
+                        )
+                    };
                     out.push(Finding {
                         file: rel.to_string(),
                         line: i + 1,
                         rule: "layering-obs",
-                        msg: format!(
-                            "obs may only use {OBS_ALLOWED:?}, found crate::{seg}"
-                        ),
+                        msg,
                     });
                 }
             }
@@ -1151,6 +1173,24 @@ mod tests {
         let src = "use crate::obs::trace::{self, TraceKind};\n";
         assert!(run("rust/src/sim/graph.rs", src).is_empty());
         assert!(run("rust/src/serve/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn obs_analyze_may_read_sim_but_not_sched() {
+        // the analysis modules get the wider allowlist...
+        let sim_src = "use crate::sim::GraphSimOutcome;\n";
+        assert!(run("rust/src/obs/analyze.rs", sim_src).is_empty());
+        assert!(run("rust/src/obs/report.rs", sim_src).is_empty());
+        // ...the recorder modules do not...
+        let f = run("rust/src/obs/export.rs", sim_src);
+        assert_eq!(rules(&f), vec!["layering-obs"]);
+        assert!(f[0].msg.contains("crate::sim"));
+        // ...and sched stays off-limits even for analysis
+        let sched_src = "use crate::sched::Executor;\n";
+        let f = run("rust/src/obs/analyze.rs", sched_src);
+        assert_eq!(rules(&f), vec!["layering-obs"]);
+        assert!(f[0].msg.contains("never sched internals"));
+        assert!(f[0].msg.contains("crate::sched"));
     }
 
     #[test]
