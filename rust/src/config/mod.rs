@@ -433,6 +433,17 @@ impl RunConfig {
     pub fn param_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.params.get(key).map(String::as_str).unwrap_or(default)
     }
+
+    /// Switch workload parameter with default (e.g. the serve
+    /// subcommand's `elastic=on` key). Accepts `on|true|1|yes` and
+    /// `off|false|0|no`; anything else falls back to the default.
+    pub fn param_bool(&self, key: &str, default: bool) -> bool {
+        match self.params.get(key).map(String::as_str) {
+            Some("on") | Some("true") | Some("1") | Some("yes") => true,
+            Some("off") | Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
 }
 
 /// Emits the `key = value` line format accepted by
@@ -507,6 +518,30 @@ mod tests {
         let back = RunConfig::from_text(&cfg.to_string()).unwrap();
         assert_eq!(back.param_str("admission", ""), "bounded");
         assert_eq!(back.param_f64("qps", 0.0), 800.0);
+    }
+
+    #[test]
+    fn elastic_keys_flow_through_params() {
+        // the serve subcommand's elastic-pool keys ride the free-form
+        // param map and round-trip through the Display text format
+        let cfg = RunConfig::from_pairs([
+            "elastic=on",
+            "min_workers=4",
+            "max_workers=6",
+        ])
+        .unwrap();
+        assert!(cfg.param_bool("elastic", false));
+        assert!(!cfg.param_bool("missing", false));
+        assert!(cfg.param_bool("missing", true));
+        assert_eq!(cfg.param_usize("min_workers", 0), 4);
+        assert_eq!(cfg.param_usize("max_workers", 0), 6);
+        let back = RunConfig::from_text(&cfg.to_string()).unwrap();
+        assert!(back.param_bool("elastic", false));
+        assert_eq!(back.param_usize("min_workers", 0), 4);
+        assert_eq!(back.param_usize("max_workers", 0), 6);
+        // off/false/0 parse as false even with a true default
+        let off = RunConfig::from_pairs(["elastic=off"]).unwrap();
+        assert!(!off.param_bool("elastic", true));
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //!            `figure tenancy` the fifo|fair|priority multi-tenant
 //!            policy comparison under bursty arrivals,
 //!            `figure serve` the open-loop serving prediction (attained
-//!            QPS and tail latency per policy × admission setting)
+//!            QPS and tail latency per policy × admission setting),
+//!            `figure elastic` the static-vs-elastic device-pool
+//!            comparison (utilization and interactive p99 on hetero56)
 //! ablation   §4/§5 ablations (ss | atomic)
 //! calibrate  measure the DES cost-model constants on this host
 //! tune       automatic config selection via the DES oracle;
@@ -43,7 +45,10 @@
 //! `duration=`, `warmup=`, `slo_ms=`, `admission=open|bounded|shed`,
 //! `max_backlog=`, `deadline_ms=`, `est_cost_ms=`,
 //! `requests=linreg|cc`, `work=` and `batch=` (all riding the
-//! free-form parameter map).
+//! free-form parameter map), and on heterogeneous machines
+//! `elastic=on` arms the SLO-driven scaling controller over the
+//! elastic device pools (`min_workers=` / `max_workers=` bound the
+//! serving pool's width; 0 = derive from the machine).
 //!
 //! Observability: `trace=off|on|sampled:<n>` arms the per-worker event
 //! trace (`run`, `serve` and the DES-backed `figure` replays all emit
@@ -101,8 +106,11 @@ fn usage() -> String {
      \x20 daphne-sched figure hetero            # placement any|pinned|auto, hetero machines\n\
      \x20 daphne-sched figure tenancy arrival=burst  # fifo|fair|priority tenant mix\n\
      \x20 daphne-sched figure serve              # open-loop serving, policy x admission\n\
+     \x20 daphne-sched figure elastic            # static vs elastic pools, hetero56\n\
      \x20 daphne-sched serve qps=400 duration=2 slo_ms=10 admission=bounded \
      max_backlog=4 policy=fair\n\
+     \x20 daphne-sched serve machine=hetero56 elastic=on metrics_interval=0.5 \
+     # elastic soak\n\
      \x20 daphne-sched serve qps=400 trace=on trace_file=serve.json \
      metrics_interval=0.5  # traced soak\n\
      \x20 daphne-sched run cc nodes=50000 trace=sampled:8  # 1-in-8 jobs traced\n\
@@ -450,6 +458,9 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         work: cfg.param_usize("work", 2_000) as u64,
         batch_tenants: cfg.param_usize("batch", 1),
         metrics_interval: cfg.param_f64("metrics_interval", 0.0),
+        elastic: cfg.param_bool("elastic", false),
+        min_workers: cfg.param_usize("min_workers", 0),
+        max_workers: cfg.param_usize("max_workers", 0),
         ..ServeSpec::default()
     };
     let topo = cfg.topology.clone();

@@ -66,7 +66,11 @@ pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
     let max_worker = events.iter().map(|e| e.worker).max();
     for w in events.iter().map(|e| e.worker).collect::<std::collections::BTreeSet<_>>() {
         let name = if Some(w) == max_worker && events.iter().any(|e| {
-            e.worker == w && matches!(e.kind, TraceKind::Admit | TraceKind::Shed | TraceKind::Enqueue)
+            e.worker == w
+                && matches!(
+                    e.kind,
+                    TraceKind::Admit | TraceKind::Shed | TraceKind::Enqueue | TraceKind::Resize
+                )
         }) {
             "control".to_string()
         } else {
@@ -84,6 +88,9 @@ pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
 
     // Counter-track state, sampled at each contributing event.
     let (mut enq, mut done, mut admitted, mut shed) = (0u64, 0u64, 0u64, 0u64);
+    // Last published width per pool (Resize packs pool id / width into
+    // the name/tag slots — see `TraceKind::Resize`).
+    let mut widths: BTreeMap<u64, u64> = BTreeMap::new();
     // Per-lane open-slice depth so an orphaned TaskEnd (its TaskStart
     // was overwritten in the ring) cannot emit an unbalanced `E`.
     let mut depth: BTreeMap<u32, u64> = BTreeMap::new();
@@ -116,6 +123,21 @@ pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
                     f.push(("cat", Json::Str("task".to_string())));
                     out.push(obj(f));
                 }
+            }
+            TraceKind::Resize => {
+                // The hash slots carry pool id / width, not labels.
+                let mut f = base("i");
+                f.push(("name", Json::Str("resize".to_string())));
+                f.push(("cat", Json::Str("sched".to_string())));
+                f.push(("s", Json::Str("t".to_string())));
+                f.push((
+                    "args",
+                    obj(vec![
+                        ("pool", Json::Num(e.name_hash as f64)),
+                        ("width", Json::Num(e.tag_hash as f64)),
+                    ]),
+                ));
+                out.push(obj(f));
             }
             kind => {
                 let mut f = base("i");
@@ -156,6 +178,24 @@ pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
                         ("admitted", Json::Num(admitted as f64)),
                         ("shed", Json::Num(shed as f64)),
                     ])),
+                ]));
+            }
+            TraceKind::Resize => {
+                widths.insert(e.name_hash, e.tag_hash);
+                out.push(obj(vec![
+                    ("ph", Json::Str("C".to_string())),
+                    ("pid", Json::Num(TRACE_PID)),
+                    ("name", Json::Str("pool_width".to_string())),
+                    ("ts", Json::Num(ts_us)),
+                    (
+                        "args",
+                        Json::Obj(
+                            widths
+                                .iter()
+                                .map(|(p, w)| (format!("pool{}", p), Json::Num(*w as f64)))
+                                .collect(),
+                        ),
+                    ),
                 ]));
             }
             _ => {}
@@ -415,6 +455,8 @@ mod tests {
             ev(3_000, 0, TraceKind::TaskEnd, 0, tag),
             ev(3_500, 0, TraceKind::NodeComplete, 0, tag),
             ev(4_000, 2, TraceKind::Shed, 1, tag),
+            // pool 0 resized to width 3 (pool/width ride the hash slots)
+            ev(4_500, 2, TraceKind::Resize, u64::MAX, 3),
         ];
         let doc = json::parse(&json::to_string(&chrome_trace_json(&events))).expect("valid json");
         let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
@@ -445,6 +487,21 @@ mod tests {
             .and_then(|a| a.get("name"))
             .and_then(|n| n.as_str());
         assert_eq!(name, Some("control"));
+        // the Resize event feeds a pool_width counter track
+        let width_track = evs
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.as_str()) == Some("C")
+                    && e.get("name").and_then(|n| n.as_str()) == Some("pool_width")
+            })
+            .expect("pool_width counter track");
+        assert_eq!(
+            width_track
+                .get("args")
+                .and_then(|a| a.get("pool0"))
+                .and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
     }
 
     #[test]

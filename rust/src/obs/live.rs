@@ -50,7 +50,19 @@ pub struct MetricsRegistry {
     /// Policy re-pick evaluations under non-FIFO policies
     /// (trace-gated; see `POLICY_REPICK_STRIDE`).
     pub repicks: AtomicU64,
+    /// Elastic pool-width changes (trace-gated; one per pool per
+    /// lend/reclaim/resize — see `crate::sched::elastic`).
+    pub resizes: AtomicU64,
+    /// Per-pool width gauges (maintained unconditionally by the elastic
+    /// control plane — `set_pool_widths` — so `metrics_interval=`
+    /// snapshots record every resize even with `trace=off`). Value 0 =
+    /// pool absent or never published.
+    pub pool_width: [AtomicU64; MAX_POOL_GAUGES],
 }
+
+/// Gauge slots for per-pool widths. Pools beyond this many (no built-in
+/// topology has more than two) are simply not gauged.
+pub const MAX_POOL_GAUGES: usize = 8;
 
 static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
 
@@ -83,6 +95,7 @@ impl MetricsRegistry {
             TraceKind::FailedSteal => &self.failed_steals,
             TraceKind::Park => &self.parks,
             TraceKind::Unpark => &self.unparks,
+            TraceKind::Resize => &self.resizes,
             TraceKind::Dispatch
             | TraceKind::TaskStart
             | TraceKind::TaskEnd
@@ -90,6 +103,15 @@ impl MetricsRegistry {
             | TraceKind::Shed => return,
         };
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the current pool widths (control-plane side, one relaxed
+    /// store per pool — unconditional, so snapshots see widths even
+    /// with tracing off). Pools beyond [`MAX_POOL_GAUGES`] are dropped.
+    pub fn set_pool_widths(&self, widths: &[usize]) {
+        for (slot, &w) in self.pool_width.iter().zip(widths) {
+            slot.store(w as u64, Ordering::Relaxed);
+        }
     }
 
     /// Plain-number snapshot at soak offset `t` seconds.
@@ -107,6 +129,14 @@ impl MetricsRegistry {
             parks: self.parks.load(Ordering::Relaxed),
             unparks: self.unparks.load(Ordering::Relaxed),
             repicks: self.repicks.load(Ordering::Relaxed),
+            resizes: self.resizes.load(Ordering::Relaxed),
+            pool_width: {
+                let mut w = [0u64; MAX_POOL_GAUGES];
+                for (out, slot) in w.iter_mut().zip(&self.pool_width) {
+                    *out = slot.load(Ordering::Relaxed);
+                }
+                w
+            },
         }
     }
 
@@ -124,8 +154,12 @@ impl MetricsRegistry {
             &self.parks,
             &self.unparks,
             &self.repicks,
+            &self.resizes,
         ] {
             c.store(0, Ordering::Relaxed);
+        }
+        for slot in &self.pool_width {
+            slot.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -147,12 +181,15 @@ pub struct MetricsSnapshot {
     pub parks: u64,
     pub unparks: u64,
     pub repicks: u64,
+    pub resizes: u64,
+    /// Per-pool width gauges at sample time (0 = pool absent).
+    pub pool_width: [u64; MAX_POOL_GAUGES],
 }
 
 impl MetricsSnapshot {
     pub fn header() -> String {
         format!(
-            "{:>7} {:>9} {:>6} {:>8} {:>9} {:>9} {:>7} {:>8} {:>7} {:>7}",
+            "{:>7} {:>9} {:>6} {:>8} {:>9} {:>9} {:>7} {:>8} {:>7} {:>7} {:>7} {:>8}",
             "t(s)",
             "admitted",
             "shed",
@@ -162,13 +199,15 @@ impl MetricsSnapshot {
             "steals",
             "fsteals",
             "parks",
-            "repicks"
+            "repicks",
+            "resizes",
+            "widths"
         )
     }
 
     pub fn row(&self) -> String {
         format!(
-            "{:>7.2} {:>9} {:>6} {:>8} {:>9} {:>9} {:>7} {:>8} {:>7} {:>7}",
+            "{:>7.2} {:>9} {:>6} {:>8} {:>9} {:>9} {:>7} {:>8} {:>7} {:>7} {:>7} {:>8}",
             self.t,
             self.admitted,
             self.shed,
@@ -178,8 +217,29 @@ impl MetricsSnapshot {
             self.steals,
             self.failed_steals,
             self.parks,
-            self.repicks
+            self.repicks,
+            self.resizes,
+            self.widths_str()
         )
+    }
+
+    /// The non-empty prefix of the width gauges as one `a/b` token
+    /// (`"-"` when no pool has published a width yet) — a single
+    /// whitespace-free column so rows keep aligning with the header.
+    pub fn widths_str(&self) -> String {
+        let n = self
+            .pool_width
+            .iter()
+            .rposition(|&w| w > 0)
+            .map_or(0, |i| i + 1);
+        if n == 0 {
+            return "-".to_string();
+        }
+        self.pool_width[..n]
+            .iter()
+            .map(|w| w.to_string())
+            .collect::<Vec<_>>()
+            .join("/")
     }
 }
 

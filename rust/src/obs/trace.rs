@@ -75,6 +75,11 @@ pub enum TraceKind {
     Shed = 11,
     /// A job was cancelled.
     Cancel = 12,
+    /// A pool's width changed (elastic lend / reclaim / resize): the
+    /// pool id rides the `name_hash` slot and the new width the
+    /// `tag_hash` slot — the exporter turns these into a per-pool
+    /// counter track.
+    Resize = 13,
 }
 
 impl TraceKind {
@@ -92,6 +97,7 @@ impl TraceKind {
             TraceKind::Admit => "admit",
             TraceKind::Shed => "shed",
             TraceKind::Cancel => "cancel",
+            TraceKind::Resize => "resize",
         }
     }
 
@@ -109,6 +115,7 @@ impl TraceKind {
             10 => TraceKind::Admit,
             11 => TraceKind::Shed,
             12 => TraceKind::Cancel,
+            13 => TraceKind::Resize,
             _ => return None,
         })
     }
@@ -436,6 +443,7 @@ mod tests {
             TraceKind::Admit,
             TraceKind::Shed,
             TraceKind::Cancel,
+            TraceKind::Resize,
         ] {
             assert_eq!(TraceKind::from_code(kind as u8), Some(kind));
         }

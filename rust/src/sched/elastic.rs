@@ -1,0 +1,495 @@
+//! Elastic device pools: runtime-resizable worker↔pool assignment and
+//! the SLO-driven scaling controller.
+//!
+//! [`DevicePools`](super::placement::DevicePools) partitions workers by
+//! device class once, at executor construction, and stays immutable —
+//! the placement oracle, task sources, and per-pool sub-topologies all
+//! key off it. Elasticity is layered *on top* as an overlay:
+//! [`ElasticPools`] tracks, per worker, which pool it currently serves
+//! (`assignment`) and whether it participates at all (`active`), both
+//! as atomics so the dispatch path stays lock-free. The worker's
+//! *home* pool (its `DevicePools` pool) never changes; a lease moves
+//! only the assignment.
+//!
+//! The eligibility rule the executor enforces with this overlay:
+//!
+//! - a worker picks jobs from its **assigned** pool only;
+//! - on a **foreign** pool (assignment ≠ home) it serves **moldable**
+//!   jobs only ([`SubmitOpts::moldable`](super::SubmitOpts::moldable)).
+//!
+//! Together these preserve the placement invariant under resizing: a
+//! pinned (non-moldable) job only ever runs on workers whose *home* is
+//! its pool, because a borrowed worker is never eligible for it — and
+//! the moment a non-moldable job is enqueued on a lending pool, the
+//! executor snaps every lease back ([`ElasticPools::reclaim_if_lent`]).
+//!
+//! Mutations (lend / reclaim / resize) serialize on the `lease` lock at
+//! rank [`ranks::ELASTIC_LEASE`] — below the run queue, so a caller may
+//! still take the queue lock to wake parked workers while deciding.
+//! In-flight tasks are never dropped: a re-homed worker finishes its
+//! current chunk, notices the assignment change at the next pull, and
+//! yields the stint; the remaining task ranges stay in the job's source
+//! for the pool's other workers.
+//!
+//! This module is pure scheduler state: no `obs` dependency (repolint's
+//! `layering-elastic` rule). Trace events ([`TraceKind::Resize`]) and
+//! the pool-width gauges are recorded by the call sites in `session`
+//! and the executor, keeping the controller replayable in the DES
+//! mirror (`sim::elastic`) byte-for-byte.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use super::placement::DevicePools;
+use super::ranks;
+use crate::util::ordered::OrderedMutex;
+
+/// Lease table: which workers are currently lent away from home.
+struct LeaseState {
+    /// Global worker ids currently assigned to a foreign pool.
+    lent: Vec<usize>,
+}
+
+/// Runtime-resizable overlay over an immutable [`DevicePools`]
+/// partition. Reads (`assignment_of` / `is_active` / `epoch`) are
+/// single relaxed atomic loads — safe on the dispatch path; mutations
+/// serialize on the ranked `lease` lock.
+pub struct ElasticPools {
+    /// Worker → home pool (the immutable `DevicePools` partition).
+    home: Vec<usize>,
+    /// Worker → pool it currently serves.
+    assignment: Vec<AtomicUsize>,
+    /// Worker → participating? `false` = parked out by `set_width`.
+    active: Vec<AtomicBool>,
+    /// Bumped on every assignment/active mutation (resize-cycle count).
+    epoch: AtomicU64,
+    /// Serializes lend / reclaim / resize (rank `elastic.lease`).
+    lease: OrderedMutex<LeaseState>,
+    n_pools: usize,
+}
+
+impl ElasticPools {
+    pub fn new(pools: &DevicePools) -> Self {
+        let n = pools.n_workers();
+        let home: Vec<usize> = (0..n).map(|w| pools.pool_of(w)).collect();
+        ElasticPools {
+            assignment: home.iter().map(|&p| AtomicUsize::new(p)).collect(),
+            active: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            epoch: AtomicU64::new(0),
+            lease: OrderedMutex::new(ranks::ELASTIC_LEASE, LeaseState { lent: Vec::new() }),
+            n_pools: pools.n_pools(),
+            home,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.home.len()
+    }
+
+    pub fn n_pools(&self) -> usize {
+        self.n_pools
+    }
+
+    /// The worker's immutable home pool.
+    #[inline]
+    pub fn home_of(&self, w: usize) -> usize {
+        self.home[w]
+    }
+
+    /// The pool the worker currently serves (relaxed load).
+    #[inline]
+    pub fn assignment_of(&self, w: usize) -> usize {
+        self.assignment[w].load(Ordering::Relaxed)
+    }
+
+    /// Whether the worker participates in dispatch at all.
+    #[inline]
+    pub fn is_active(&self, w: usize) -> bool {
+        self.active[w].load(Ordering::Relaxed)
+    }
+
+    /// Resize-cycle counter: bumped on every mutation.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Current width of `pool`: active workers assigned to it
+    /// (home members minus parked/lent, plus borrowed).
+    pub fn width(&self, pool: usize) -> usize {
+        (0..self.home.len())
+            .filter(|&w| self.assignment_of(w) == pool && self.is_active(w))
+            .count()
+    }
+
+    /// Widths of every pool, indexed by pool id.
+    pub fn widths(&self) -> Vec<usize> {
+        (0..self.n_pools).map(|p| self.width(p)).collect()
+    }
+
+    /// How many of `pool`'s home workers are currently lent away.
+    /// Lock-free (derived from the assignment atomics), so the enqueue
+    /// path can use it as a cheap snap-back trigger test.
+    pub fn lent_out(&self, pool: usize) -> usize {
+        (0..self.home.len())
+            .filter(|&w| self.home[w] == pool && self.assignment_of(w) != pool)
+            .count()
+    }
+
+    /// Lend up to `n` idle-eligible workers from pool `from` to pool
+    /// `to`: active workers resident at home (`assignment == home ==
+    /// from`). Returns how many moved. The caller is responsible for
+    /// waking parked workers afterwards.
+    pub fn lend(&self, from: usize, to: usize, n: usize) -> usize {
+        if from == to || from >= self.n_pools || to >= self.n_pools || n == 0 {
+            return 0;
+        }
+        let mut lease = self.lease.lock().unwrap();
+        let mut moved = 0;
+        for w in 0..self.home.len() {
+            if moved == n {
+                break;
+            }
+            if self.home[w] == from && self.assignment_of(w) == from && self.is_active(w) {
+                self.assignment[w].store(to, Ordering::Relaxed);
+                lease.lent.push(w);
+                moved += 1;
+            }
+        }
+        if moved > 0 {
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(lease);
+        moved
+    }
+
+    /// Return every worker whose home is `pool` to it (snap-back).
+    /// Returns how many came home.
+    pub fn reclaim(&self, pool: usize) -> usize {
+        let mut lease = self.lease.lock().unwrap();
+        let mut returned = 0;
+        lease.lent.retain(|&w| {
+            if self.home[w] == pool {
+                self.assignment[w].store(pool, Ordering::Relaxed);
+                returned += 1;
+                false
+            } else {
+                true
+            }
+        });
+        if returned > 0 {
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(lease);
+        returned
+    }
+
+    /// Snap-back fast path for the enqueue hook: a lock-free check
+    /// first, the lease lock only when a lease actually exists.
+    pub fn reclaim_if_lent(&self, pool: usize) -> usize {
+        if self.lent_out(pool) == 0 {
+            return 0;
+        }
+        self.reclaim(pool)
+    }
+
+    /// Park or unpark home-resident workers of `pool` so its resident
+    /// width becomes `width` (clamped to `1..=residents`; a pool never
+    /// drops to zero by resizing — only lends can empty it, and those
+    /// snap back on demand). Workers lent away are untouched. Returns
+    /// the resulting resident width.
+    pub fn set_width(&self, pool: usize, width: usize) -> usize {
+        if pool >= self.n_pools {
+            return 0;
+        }
+        let lease = self.lease.lock().unwrap();
+        let residents: Vec<usize> = (0..self.home.len())
+            .filter(|&w| self.home[w] == pool && self.assignment_of(w) == pool)
+            .collect();
+        let target = width.clamp(1, residents.len().max(1));
+        let mut changed = false;
+        for (i, &w) in residents.iter().enumerate() {
+            let want = i < target;
+            if self.active[w].load(Ordering::Relaxed) != want {
+                self.active[w].store(want, Ordering::Relaxed);
+                changed = true;
+            }
+        }
+        if changed {
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(lease);
+        target.min(residents.len())
+    }
+}
+
+/// Tuning knobs for the serve-soak scaling controller. All decisions
+/// derive from these plus the per-interval [`Signals`], so the DES
+/// mirror replays the exact controller the real soak runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerCfg {
+    /// The latency objective in seconds (serve's `slo_ms` / 1000).
+    pub slo: f64,
+    /// Width floor for the serving pool — `Reclaim` is only issued
+    /// while the pool is wider than this (normally its base width).
+    pub min_workers: usize,
+    /// Width ceiling for the serving pool — `Lend` stops here.
+    pub max_workers: usize,
+    /// Consecutive breached-and-climbing intervals before lending.
+    pub patience: usize,
+    /// Workers moved per `Lend` decision.
+    pub step: usize,
+    /// Failed-steal ratio above which a non-breached pool is judged
+    /// too wide and gives borrowed workers back.
+    pub fail_steal_hi: f64,
+}
+
+impl Default for ControllerCfg {
+    fn default() -> Self {
+        ControllerCfg {
+            slo: 0.010,
+            min_workers: 1,
+            max_workers: usize::MAX,
+            patience: 2,
+            step: 2,
+            fail_steal_hi: 0.5,
+        }
+    }
+}
+
+/// One control interval's observations, assembled by the caller from
+/// the latency reservoir and the `obs::live` counters (real soak) or
+/// their virtual-time analogues (DES).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Signals {
+    /// Rolling p99 of served request latency, seconds.
+    pub p99: f64,
+    /// Backlog high-water observed this interval.
+    pub backlog: u64,
+    /// failed steals / steal attempts this interval (0 if none).
+    pub failed_steal_ratio: f64,
+    /// The donor pool has live non-moldable work of its own.
+    pub donor_busy: bool,
+    /// Current width of the serving pool.
+    pub width: usize,
+}
+
+/// A resize decision for the serving pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Borrow `n` workers from the donor pool.
+    Lend(usize),
+    /// Return every borrowed worker to its home pool.
+    Reclaim,
+}
+
+impl ScaleDecision {
+    pub fn describe(&self) -> String {
+        match self {
+            ScaleDecision::Hold => "hold".to_string(),
+            ScaleDecision::Lend(n) => format!("lend:{n}"),
+            ScaleDecision::Reclaim => "reclaim".to_string(),
+        }
+    }
+}
+
+/// The SLO-driven scaling controller: pure, deterministic state machine
+/// over [`Signals`] — identical in the real soak and the DES mirror.
+///
+/// Policy, in priority order:
+/// 1. the donor needs its cores back (`donor_busy` while lent) ⇒
+///    [`ScaleDecision::Reclaim`] — placement snaps back first;
+/// 2. p99 over SLO *and* backlog high-water climbing for `patience`
+///    consecutive intervals ⇒ capacity gap ⇒ [`ScaleDecision::Lend`];
+/// 3. lent, SLO met, and a sustained failed-steal ratio ⇒ the pool is
+///    too wide for the offered load ⇒ [`ScaleDecision::Reclaim`];
+/// 4. otherwise hold. Admission (`bounded`/`shed`) stays the guard
+///    while capacity catches up — the controller never sheds.
+#[derive(Debug, Clone)]
+pub struct ScalingController {
+    cfg: ControllerCfg,
+    streak: usize,
+    prev_backlog: u64,
+}
+
+impl ScalingController {
+    pub fn new(cfg: ControllerCfg) -> Self {
+        ScalingController {
+            cfg,
+            streak: 0,
+            prev_backlog: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &ControllerCfg {
+        &self.cfg
+    }
+
+    /// Evaluate one control interval.
+    pub fn decide(&mut self, s: &Signals) -> ScaleDecision {
+        let over_floor = s.width > self.cfg.min_workers;
+        let breach = s.p99 > self.cfg.slo;
+        // "Climbing" includes holding a saturated high-water: under a
+        // bounded-admission burst the high-water pins at max_backlog.
+        let climbing = s.backlog > 0 && s.backlog >= self.prev_backlog;
+        self.prev_backlog = s.backlog;
+        if over_floor && s.donor_busy {
+            self.streak = 0;
+            return ScaleDecision::Reclaim;
+        }
+        if breach && climbing {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        if self.streak >= self.cfg.patience && s.width < self.cfg.max_workers {
+            self.streak = 0;
+            let room = self.cfg.max_workers - s.width;
+            return ScaleDecision::Lend(self.cfg.step.clamp(1, room));
+        }
+        if over_floor && !breach && s.failed_steal_ratio > self.cfg.fail_steal_hi {
+            return ScaleDecision::Reclaim;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DeviceClass, Topology};
+    use std::sync::Arc;
+
+    fn hetero_pools() -> (Arc<Topology>, DevicePools) {
+        let topo = Arc::new(Topology::heterogeneous(
+            "h",
+            1,
+            2,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 2.0)],
+        ));
+        let pools = DevicePools::new(&topo);
+        (topo, pools)
+    }
+
+    #[test]
+    fn lend_moves_assignment_and_reclaim_restores_it() {
+        let (_t, pools) = hetero_pools();
+        let el = ElasticPools::new(&pools);
+        assert_eq!(el.widths(), vec![2, 2]);
+        assert_eq!(el.epoch(), 0);
+
+        let moved = el.lend(1, 0, 2);
+        assert_eq!(moved, 2);
+        assert_eq!(el.widths(), vec![4, 0]);
+        assert_eq!(el.lent_out(1), 2);
+        assert_eq!(el.home_of(2), 1);
+        assert_eq!(el.assignment_of(2), 0);
+        assert_eq!(el.epoch(), 1);
+
+        // Idempotent: nothing left to lend.
+        assert_eq!(el.lend(1, 0, 2), 0);
+        assert_eq!(el.epoch(), 1);
+
+        assert_eq!(el.reclaim(1), 2);
+        assert_eq!(el.widths(), vec![2, 2]);
+        assert_eq!(el.lent_out(1), 0);
+        assert_eq!(el.epoch(), 2);
+        assert_eq!(el.reclaim_if_lent(1), 0);
+    }
+
+    #[test]
+    fn lend_caps_at_available_and_rejects_self_lease() {
+        let (_t, pools) = hetero_pools();
+        let el = ElasticPools::new(&pools);
+        assert_eq!(el.lend(1, 1, 2), 0);
+        assert_eq!(el.lend(7, 0, 2), 0);
+        assert_eq!(el.lend(1, 0, 99), 2);
+        assert_eq!(el.width(0), 4);
+    }
+
+    #[test]
+    fn set_width_parks_and_unparks_residents_with_floor_of_one() {
+        let (_t, pools) = hetero_pools();
+        let el = ElasticPools::new(&pools);
+        assert_eq!(el.set_width(0, 1), 1);
+        assert_eq!(el.width(0), 1);
+        assert!(el.is_active(0) && !el.is_active(1));
+        // Clamps: can't go to zero, can't exceed residents.
+        assert_eq!(el.set_width(0, 0), 1);
+        assert_eq!(el.set_width(0, 99), 2);
+        assert_eq!(el.width(0), 2);
+        // Parked donors are not lendable.
+        el.set_width(1, 1);
+        assert_eq!(el.lend(1, 0, 2), 1);
+    }
+
+    #[test]
+    fn controller_lends_after_sustained_breach_with_climbing_backlog() {
+        let mut ctl = ScalingController::new(ControllerCfg {
+            slo: 0.010,
+            min_workers: 4,
+            max_workers: 6,
+            patience: 2,
+            step: 2,
+            fail_steal_hi: 0.5,
+        });
+        let mut s = Signals {
+            p99: 0.002,
+            backlog: 0,
+            failed_steal_ratio: 0.0,
+            donor_busy: false,
+            width: 4,
+        };
+        assert_eq!(ctl.decide(&s), ScaleDecision::Hold);
+        s.p99 = 0.050;
+        s.backlog = 3;
+        assert_eq!(ctl.decide(&s), ScaleDecision::Hold); // streak 1
+        s.backlog = 5;
+        assert_eq!(ctl.decide(&s), ScaleDecision::Lend(2));
+        // At the ceiling, no further lend even under breach.
+        s.width = 6;
+        assert_eq!(ctl.decide(&s), ScaleDecision::Hold);
+        assert_eq!(ctl.decide(&s), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn controller_reclaims_for_busy_donor_and_failed_steals() {
+        let mut ctl = ScalingController::new(ControllerCfg {
+            slo: 0.010,
+            min_workers: 4,
+            max_workers: 6,
+            patience: 2,
+            step: 2,
+            fail_steal_hi: 0.5,
+        });
+        // Donor pressure wins even mid-breach.
+        let s = Signals {
+            p99: 0.050,
+            backlog: 9,
+            failed_steal_ratio: 0.0,
+            donor_busy: true,
+            width: 6,
+        };
+        assert_eq!(ctl.decide(&s), ScaleDecision::Reclaim);
+        // SLO met + mostly-failing steals ⇒ the pool is too wide.
+        let s = Signals {
+            p99: 0.001,
+            backlog: 0,
+            failed_steal_ratio: 0.9,
+            donor_busy: false,
+            width: 6,
+        };
+        assert_eq!(ctl.decide(&s), ScaleDecision::Reclaim);
+        // At the floor, never reclaim.
+        let s = Signals { width: 4, ..s };
+        assert_eq!(ctl.decide(&s), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn decisions_describe_compactly() {
+        assert_eq!(ScaleDecision::Hold.describe(), "hold");
+        assert_eq!(ScaleDecision::Lend(2).describe(), "lend:2");
+        assert_eq!(ScaleDecision::Reclaim.describe(), "reclaim");
+    }
+}

@@ -80,6 +80,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::elastic::ElasticPools;
 use super::metrics::{SchedReport, WorkerStats};
 use super::partitioner::PartitionerOptions;
 use super::placement::{DevicePools, Placement, ResolveMode};
@@ -266,6 +267,11 @@ pub(super) struct Shared {
     /// Per-device-class worker pools (built once at spawn). On a
     /// CPU-only topology this is a single pool covering every worker.
     pub(super) pools: DevicePools,
+    /// Runtime-resizable worker↔pool assignment overlay (see
+    /// [`super::elastic`]): the dispatch path reads it with relaxed
+    /// atomic loads only; `Session::lend`/`reclaim`/`resize_pool`
+    /// mutate it under its own ranked lease lock.
+    pub(super) elastic: ElasticPools,
     queue: OrderedMutex<RunState>,
     work_cv: OrderedCondvar,
 }
@@ -293,9 +299,12 @@ impl Executor {
         default_config: Arc<SchedConfig>,
         policy: TenancyPolicy,
     ) -> Self {
+        let pools = DevicePools::new(&topo);
+        let elastic = ElasticPools::new(&pools);
         let shared = Arc::new(Shared {
             topo: Arc::clone(&topo),
-            pools: DevicePools::new(&topo),
+            pools,
+            elastic,
             queue: OrderedMutex::new(
                 ranks::RUN_QUEUE,
                 RunState {
@@ -485,6 +494,29 @@ impl Executor {
         &self.shared.pools
     }
 
+    /// The elastic worker↔pool assignment overlay (pool widths, lease
+    /// state, resize epoch). Mutate it through
+    /// [`Session`](super::Session) — `lend`/`reclaim`/`resize_pool` —
+    /// which also records the resize trace events and wakes the pool.
+    pub fn elastic(&self) -> &ElasticPools {
+        &self.shared.elastic
+    }
+
+    /// Live non-moldable jobs currently queued on `pool` — the donor-
+    /// pressure signal: while this is non-zero the pool must not lend
+    /// workers away, and existing leases should snap back.
+    pub fn pool_backlog(&self, pool: usize) -> usize {
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .jobs
+            .iter()
+            .filter(|j| j.pool == pool && !j.tenancy.moldable)
+            .count()
+    }
+
+
     /// Shared pool state (handed to the task-graph dispatcher so node
     /// completion hooks can enqueue dependents without an `&Executor`).
     pub(super) fn shared(&self) -> &Arc<Shared> {
@@ -574,7 +606,36 @@ pub(super) fn enqueue_raw(
         drop(q);
         shared.work_cv.notify_all();
     }
+    // Snap-back: an arrival on a pool that lent workers away reclaims
+    // them immediately — this is what guarantees a `Placement::Class`-
+    // pinned node never waits on an emptied home pool (borrowed
+    // workers are never eligible for it, so its pool must be restored
+    // the moment it is enqueued).
+    if shared.elastic.reclaim_if_lent(pool) > 0 {
+        publish_pool_widths(shared);
+    }
     job
+}
+
+/// Publish the pool widths after an elastic mutation: update the
+/// `obs::live` gauges, record one [`TraceKind::Resize`] event per pool
+/// (pool id in the name-hash slot, new width in the tag-hash slot —
+/// the Chrome-trace exporter turns these into a counter track), and
+/// wake every parked worker so it re-reads its assignment. The empty
+/// lock/unlock of the run-queue mutex is load-bearing: a worker that
+/// read the *old* assignment under the queue lock is either still
+/// holding it (we cannot acquire until it releases, and it will be
+/// notified once it waits) or already waiting (the notify reaches it)
+/// — no lost wakeup either way.
+pub(super) fn publish_pool_widths(shared: &Shared) {
+    let widths = shared.elastic.widths();
+    crate::obs::live::metrics().set_pool_widths(&widths);
+    for (p, width) in widths.iter().enumerate() {
+        trace::record(TraceKind::Resize, OBS_CONTROL_WORKER, NO_JOB, p as u64, *width as u64);
+    }
+    let q = shared.queue.lock().unwrap();
+    drop(q);
+    shared.work_cv.notify_all();
 }
 
 /// The one completion-publish sequence, shared by `finalize` and the
@@ -797,8 +858,15 @@ pub const POLICY_REPICK_STRIDE: usize = 8;
 /// touches a job placed on a foreign pool — the pool boundary is
 /// enforced here and by the pool-scoped task source, not by
 /// victim-selection policy.
+///
+/// Elasticity rides the same loop: the worker's pool is re-read from
+/// the [`ElasticPools`] overlay on every pick (two relaxed loads), so a
+/// lend/reclaim takes effect at the next pick; a worker parked out by
+/// `resize_pool` (`!is_active`) skips picking entirely and waits. On a
+/// *foreign* pool (assignment ≠ home) only moldable jobs are eligible —
+/// pinned work never runs on borrowed workers.
 fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
-    let my_pool = shared.pools.pool_of(w);
+    let home = shared.pools.pool_of(w);
     // Jobs whose source this worker has already found empty. Sources
     // never refill, so membership is permanent; entries are garbage-
     // collected once the job leaves the run queue.
@@ -808,9 +876,12 @@ fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 exhausted.retain(|s| q.jobs.iter().any(|j| j.seq == *s));
-                if let Some(job) = pick_job(&q, my_pool, &exhausted) {
-                    let reeval = q.policy != TenancyPolicy::Fifo;
-                    break (job, reeval);
+                let my_pool = shared.elastic.assignment_of(w);
+                if shared.elastic.is_active(w) {
+                    if let Some(job) = pick_job(&q, my_pool, home, &exhausted) {
+                        let reeval = q.policy != TenancyPolicy::Fifo;
+                        break (job, reeval);
+                    }
                 }
                 if q.shutdown {
                     return;
@@ -834,15 +905,22 @@ fn worker_main(w: usize, shared: &Shared, completed: &AtomicUsize) {
 /// under the run-queue mutex — once per *task* under the non-FIFO
 /// policies — so it allocates nothing on the FIFO and Priority paths
 /// and only one small per-tag aggregate on the Fair path.
+///
+/// `home` is the worker's immutable home pool: on a borrowed worker
+/// (`my_pool != home`, see [`super::elastic`]) only *moldable* jobs are
+/// eligible, which is what keeps pinned work off foreign workers under
+/// resizing.
 fn pick_job(
     q: &RunState,
     my_pool: usize,
+    home: usize,
     exhausted: &[u64],
 ) -> Option<Arc<Job>> {
-    let mut eligible = q
-        .jobs
-        .iter()
-        .filter(|j| j.pool == my_pool && !exhausted.contains(&j.seq));
+    let mut eligible = q.jobs.iter().filter(|j| {
+        j.pool == my_pool
+            && (my_pool == home || j.tenancy.moldable)
+            && !exhausted.contains(&j.seq)
+    });
     // Fast path for the common uncontended case (and for the per-task
     // re-pick inside non-FIFO stints): a lone eligible job needs no
     // arbitration under any policy.
@@ -949,10 +1027,19 @@ fn run_job_stint(
     // Everything about this job is pool-local: the source was built
     // over the pool's sub-topology and the stats vector has one slot
     // per pool worker, so both are indexed by the worker's *local* id
-    // (bodies still receive the global id).
+    // (bodies still receive the global id). A *borrowed* worker (its
+    // elastic assignment differs from its home pool — then the job is
+    // necessarily moldable) has no slot of its own in a foreign pool,
+    // so it folds onto a resident slot: sources and stats slots are
+    // mutex/atomic-protected, so sharing a slot is safe, and the fold
+    // keeps `per_worker` the same shape the DES models.
     let topo = &shared.pools.pool(job.pool).topo;
-    let lw = shared.pools.local_of(w);
-    debug_assert_eq!(shared.pools.pool_of(w), job.pool);
+    let lw = shared.pools.local_of(w) % topo.n_cores();
+    debug_assert_eq!(shared.elastic.assignment_of(w), job.pool);
+    debug_assert!(
+        shared.pools.pool_of(w) == job.pool || job.tenancy.moldable,
+        "non-moldable job dispatched to a borrowed worker"
+    );
     let config = &job.config;
 
     // One handle to the body for this stint. SAFETY of later derefs: the
@@ -989,6 +1076,17 @@ fn run_job_stint(
     let exhausted = loop {
         if job.aborted.load(Ordering::Acquire) {
             break true;
+        }
+        // Elastic re-homing takes effect at chunk granularity: a worker
+        // whose assignment moved (lend / reclaim) or that was parked
+        // out (`resize_pool`) yields the stint before the next pull —
+        // the task it is mid-way through always finishes, and the
+        // unclaimed remainder stays in the source for the pool's
+        // other workers, so nothing is lost or re-run.
+        if shared.elastic.assignment_of(w) != job.pool
+            || !shared.elastic.is_active(w)
+        {
+            break false;
         }
         let t0 = Instant::now();
         let mut steal_misses = 0usize;
@@ -1057,7 +1155,8 @@ fn run_job_stint(
                 crate::obs::live::note_repick();
                 let next = {
                     let q = shared.queue.lock().unwrap();
-                    pick_job(&q, job.pool, exhausted_seqs).map(|j| j.seq)
+                    pick_job(&q, job.pool, shared.pools.pool_of(w), exhausted_seqs)
+                        .map(|j| j.seq)
                 };
                 if next != Some(job.seq) {
                     break false;

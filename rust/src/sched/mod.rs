@@ -79,6 +79,14 @@
 //! placement the fourth tuned dimension
 //! (scheme × layout × victim × placement) of [`autotune::tune_graph`].
 //!
+//! Pool *widths* are no longer fixed for the life of the executor:
+//! [`elastic`] overlays a runtime worker↔pool assignment on the
+//! immutable partition, so [`Session::lend`]/[`Session::reclaim`]/
+//! [`Session::resize_pool`] can move idle accelerator workers to a
+//! CPU-bound moldable tenant ([`SubmitOpts::moldable`]) and snap them
+//! back the moment a pinned node arrives, while an SLO-driven
+//! [`ScalingController`] automates the same moves during `serve` soaks.
+//!
 //! The legacy spawn-per-run shims (`worker::run_once`, `ThreadPool`)
 //! were removed after every caller migrated to the persistent
 //! `Executor` (spawn-per-stage remains reproducible as
@@ -111,6 +119,7 @@
 //! layering rules) syntactically in CI.
 
 pub mod autotune;
+pub mod elastic;
 pub mod executor;
 pub mod graph;
 pub mod metrics;
@@ -123,6 +132,9 @@ pub mod stealing;
 pub mod task;
 pub mod victim;
 
+pub use elastic::{
+    ControllerCfg, ElasticPools, ScaleDecision, ScalingController, Signals,
+};
 pub use executor::{
     Executor, JobHandle, JobSpec, Scope, POLICY_REPICK_STRIDE,
 };

@@ -33,6 +33,7 @@
 //! | 10 | `graph.progress` | `GraphRun.progress` — per-graph node statuses, pending counts, cancel flag |
 //! | 20 | `graph.jobs` | `GraphRun.jobs` — registry of dispatched jobs (cancellation fan-out) |
 //! | 30 | `scope.pending` | `Scope.pending` — jobs a borrowed-body scope must await |
+//! | 35 | `elastic.lease` | `ElasticPools.lease` — worker-lease table for runtime pool resizing |
 //! | 40 | `exec.run_queue` | `Shared.queue` — the executor's live-job run queue (`RunState`) |
 //! | 50 | `job.body` | `Job.body` — the task body box (dropped before completion publishes) |
 //! | 60 | `job.panic` | `Job.panic` — first panic payload |
@@ -58,6 +59,13 @@ pub const GRAPH_PROGRESS: LockRank = LockRank::new(10, "graph.progress");
 pub const GRAPH_JOBS: LockRank = LockRank::new(20, "graph.jobs");
 /// `Scope.pending`: borrowed-body jobs the scope must await.
 pub const SCOPE_PENDING: LockRank = LockRank::new(30, "scope.pending");
+/// `ElasticPools.lease`: the worker-lease table serializing runtime
+/// pool resizing (lend/reclaim/resize). Sits below the run queue so a
+/// resize decision may briefly take the queue lock (e.g. to check the
+/// donor's live jobs or to wake parked workers) while the lease is
+/// held, but never the reverse — the dispatch path reads the elastic
+/// assignment through atomics only and never touches this lock.
+pub const ELASTIC_LEASE: LockRank = LockRank::new(35, "elastic.lease");
 /// `Shared.queue`: the executor's policy-ordered live-job run queue.
 pub const RUN_QUEUE: LockRank = LockRank::new(40, "exec.run_queue");
 /// `Job.body`: the task body box.
@@ -81,6 +89,7 @@ mod tests {
             GRAPH_PROGRESS,
             GRAPH_JOBS,
             SCOPE_PENDING,
+            ELASTIC_LEASE,
             RUN_QUEUE,
             JOB_BODY,
             JOB_PANIC,

@@ -45,7 +45,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::executor::{Executor, JobHandle, JobSpec};
+use super::executor::{publish_pool_widths, Executor, JobHandle, JobSpec};
 use super::graph::{
     dispatch, wait_terminal, GraphError, GraphHandle, GraphReport, GraphSpec,
 };
@@ -182,6 +182,14 @@ pub struct SubmitOpts {
     /// [`AdmissionPolicy::Shed`] to turn backlog depth into an
     /// estimated wait (default 0.0 = Shed never rejects).
     pub est_cost: f64,
+    /// Moldable width range `(min, max)` in workers: `Some` declares
+    /// that this tenant tolerates its pool being resized while it runs
+    /// — and, crucially, that its jobs may execute on *borrowed*
+    /// workers lent from another pool ([`Session::lend`] / the elastic
+    /// scaling controller). `None` (default) pins the work to its
+    /// pool's own workers; a pinned arrival snaps outstanding leases
+    /// back (see [`crate::sched::elastic`]).
+    pub moldable: Option<(usize, usize)>,
 }
 
 impl Default for SubmitOpts {
@@ -192,6 +200,7 @@ impl Default for SubmitOpts {
             tag: String::new(),
             admission: AdmissionPolicy::Open,
             est_cost: 0.0,
+            moldable: None,
         }
     }
 }
@@ -223,6 +232,15 @@ impl SubmitOpts {
 
     pub fn est_cost(mut self, est_cost: f64) -> Self {
         self.est_cost = est_cost.max(0.0);
+        self
+    }
+
+    /// Declare the tenant moldable over `min..=max` workers (`min` is
+    /// clamped to ≥ 1 and `max` to ≥ `min`): its jobs may run on
+    /// borrowed workers and tolerate pool resizes mid-flight.
+    pub fn moldable(mut self, min: usize, max: usize) -> Self {
+        let min = min.max(1);
+        self.moldable = Some((min, max.max(min)));
         self
     }
 }
@@ -264,6 +282,10 @@ pub(super) struct Tenancy {
     /// only while tracing is enabled.
     pub(super) tag_hash: u64,
     pub(super) arrived: Instant,
+    /// Whether this tenant's jobs may run on borrowed (foreign-home)
+    /// workers — see [`SubmitOpts::moldable`] and
+    /// [`crate::sched::elastic`].
+    pub(super) moldable: bool,
 }
 
 impl Tenancy {
@@ -281,6 +303,7 @@ impl Tenancy {
             tag: Arc::from(opts.tag.as_str()),
             tag_hash,
             arrived: Instant::now(),
+            moldable: opts.moldable.is_some(),
         }
     }
 
@@ -470,6 +493,51 @@ impl<'e> Session<'e> {
         }
         Ok(reports)
     }
+
+    // -----------------------------------------------------------------
+    // elastic pool control (see [`crate::sched::elastic`])
+    // -----------------------------------------------------------------
+
+    /// Resize `pool` to `width` resident workers (clamped to
+    /// `1..=members`): surplus workers park until widened again, so the
+    /// pool's jobs keep running on fewer cores without losing tasks.
+    /// Returns the resulting resident width. Publishes the new widths
+    /// (gauges + [`TraceKind::Resize`] events) and wakes the pool.
+    pub fn resize_pool(&self, pool: usize, width: usize) -> usize {
+        let before = self.exec.elastic().epoch();
+        let got = self.exec.elastic().set_width(pool, width);
+        if self.exec.elastic().epoch() != before {
+            publish_pool_widths(self.exec.shared());
+        }
+        got
+    }
+
+    /// Lend up to `n` idle workers from pool `from` to pool `to`, where
+    /// they serve **moldable** jobs only. Refused (returns 0) while the
+    /// donor has live non-moldable work of its own — and any later
+    /// non-moldable arrival on the donor snaps the lease back
+    /// automatically. Returns how many workers moved.
+    pub fn lend(&self, from: usize, to: usize, n: usize) -> usize {
+        if self.exec.pool_backlog(from) > 0 {
+            return 0;
+        }
+        let moved = self.exec.elastic().lend(from, to, n);
+        if moved > 0 {
+            publish_pool_widths(self.exec.shared());
+        }
+        moved
+    }
+
+    /// Return every worker lent out of `pool` to its home (the manual
+    /// form of the automatic pinned-arrival snap-back). Returns how
+    /// many came home.
+    pub fn reclaim(&self, pool: usize) -> usize {
+        let returned = self.exec.elastic().reclaim(pool);
+        if returned > 0 {
+            publish_pool_widths(self.exec.shared());
+        }
+        returned
+    }
 }
 
 impl Executor {
@@ -513,6 +581,10 @@ mod tests {
         assert_eq!(t.priority, 0);
         assert_eq!(t.weight, 1);
         assert_eq!(&*t.tag, "");
+        assert!(!t.moldable, "default tenancy is pinned");
+        let m = SubmitOpts::new().moldable(0, 0);
+        assert_eq!(m.moldable, Some((1, 1)), "moldable range is clamped");
+        assert!(Tenancy::from_opts(&m).moldable);
     }
 
     #[test]

@@ -41,8 +41,9 @@ use std::time::{Duration, Instant};
 use crate::config::ArrivalPattern;
 use crate::obs::MetricsSnapshot;
 use crate::sched::{
-    Admitted, AdmissionPolicy, Executor, GraphError, GraphHandle, GraphSpec,
-    NodeSpec, SubmitOpts, TenancyPolicy,
+    Admitted, AdmissionPolicy, ControllerCfg, Executor, GraphError,
+    GraphHandle, GraphSpec, NodeSpec, ScaleDecision, ScalingController,
+    Signals, SubmitOpts, TenancyPolicy,
 };
 use crate::sim::serve::{arrival_times, RESERVOIR_CAPACITY, SERVE_TAG};
 use crate::util::json::Json;
@@ -172,6 +173,18 @@ pub struct ServeSpec {
     /// Seconds between [`MetricsSnapshot`]s of the live
     /// [`crate::obs::MetricsRegistry`] during the soak (0 = none).
     pub metrics_interval: f64,
+    /// Run the SLO-driven [`ScalingController`] during the soak: the
+    /// serving pool (pool 0) borrows workers from the accelerator pool
+    /// (pool 1) on sustained SLO breach and gives them back when the
+    /// donor gets busy or steals keep failing. No-op on single-pool
+    /// topologies.
+    pub elastic: bool,
+    /// Controller width floor for the serving pool (0 = its base
+    /// width — never reclaim below the resident workers).
+    pub min_workers: usize,
+    /// Controller width ceiling for the serving pool (0 = base width
+    /// plus every donor worker).
+    pub max_workers: usize,
 }
 
 impl Default for ServeSpec {
@@ -193,6 +206,9 @@ impl Default for ServeSpec {
             batch_tenants: 1,
             batch_items: 1 << 20,
             metrics_interval: 0.0,
+            elastic: false,
+            min_workers: 0,
+            max_workers: 0,
         }
     }
 }
@@ -233,6 +249,9 @@ pub struct ServeReport {
     /// `metrics_interval` is 0); cumulative counters, see
     /// [`MetricsSnapshot`]. The final entry is taken after the drain.
     pub metrics: Vec<MetricsSnapshot>,
+    /// Non-`Hold` controller decisions in issue order (empty unless
+    /// `elastic` was on and the controller acted).
+    pub scale_decisions: Vec<ScaleDecision>,
 }
 
 impl ServeReport {
@@ -296,6 +315,20 @@ impl ServeReport {
                     ("parks".to_string(), Json::Num(m.parks as f64)),
                     ("unparks".to_string(), Json::Num(m.unparks as f64)),
                     ("repicks".to_string(), Json::Num(m.repicks as f64)),
+                    ("resizes".to_string(), Json::Num(m.resizes as f64)),
+                    ("pool_width".to_string(), {
+                        let n = m
+                            .pool_width
+                            .iter()
+                            .rposition(|&w| w > 0)
+                            .map_or(0, |i| i + 1);
+                        Json::Arr(
+                            m.pool_width[..n]
+                                .iter()
+                                .map(|&w| Json::Num(w as f64))
+                                .collect(),
+                        )
+                    }),
                 ]
                 .into_iter()
                 .collect(),
@@ -336,6 +369,15 @@ impl ServeReport {
                 (
                     "metrics".to_string(),
                     Json::Arr(self.metrics.iter().map(snap).collect()),
+                ),
+                (
+                    "scale_decisions".to_string(),
+                    Json::Arr(
+                        self.scale_decisions
+                            .iter()
+                            .map(|d| Json::Str(d.describe()))
+                            .collect(),
+                    ),
                 ),
             ]
             .into_iter()
@@ -436,11 +478,45 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
     let (mut measured, mut shed) = (0usize, 0usize);
     let mut metrics_log: Vec<MetricsSnapshot> = Vec::new();
     let mut next_snap = spec.metrics_interval;
-    if spec.metrics_interval > 0.0 {
-        // the registry is process-cumulative; zero it so snapshots read
-        // as this soak's counters
+    if spec.metrics_interval > 0.0 || spec.elastic {
+        // the registry is process-cumulative; zero it so snapshots (and
+        // the controller's high-water / steal-ratio signals) read as
+        // this soak's counters
         crate::obs::metrics().reset();
     }
+
+    // Elastic scaling: the serving pool (0) borrows from the
+    // accelerator pool (1) under controller decisions. Signals come
+    // from the same surfaces the report quotes — the latency reservoir,
+    // the live counters (the steal-ratio reclaim path needs `trace=on`;
+    // with tracing off the ratio reads 0 and that path stays inert),
+    // and the donor's non-moldable queue backlog.
+    let mut controller = if spec.elastic && exec.elastic().n_pools() >= 2 {
+        let base = exec.elastic().width(0);
+        let donor_cap = exec.elastic().width(1);
+        let cfg = ControllerCfg {
+            slo: spec.slo,
+            min_workers: if spec.min_workers > 0 { spec.min_workers } else { base },
+            max_workers: if spec.max_workers > 0 {
+                spec.max_workers
+            } else {
+                base + donor_cap
+            },
+            ..ControllerCfg::default()
+        };
+        crate::obs::metrics().set_pool_widths(&exec.elastic().widths());
+        Some(ScalingController::new(cfg))
+    } else {
+        None
+    };
+    let ctl_interval = if spec.metrics_interval > 0.0 {
+        spec.metrics_interval
+    } else {
+        0.05
+    };
+    let mut next_ctl = ctl_interval;
+    let mut scale_decisions: Vec<ScaleDecision> = Vec::new();
+    let (mut prev_steals, mut prev_failed) = (0u64, 0u64);
 
     let start = Instant::now();
     for &t in &arrivals {
@@ -454,6 +530,40 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
             if spec.metrics_interval > 0.0 && now >= next_snap {
                 metrics_log.push(crate::obs::metrics().snapshot(now));
                 next_snap += spec.metrics_interval;
+            }
+            if controller.is_some() && now >= next_ctl {
+                let ctl = controller.as_mut().unwrap();
+                let m = crate::obs::metrics().snapshot(now);
+                let attempts = (m.steals + m.failed_steals)
+                    .saturating_sub(prev_steals + prev_failed);
+                let fails = m.failed_steals.saturating_sub(prev_failed);
+                prev_steals = m.steals;
+                prev_failed = m.failed_steals;
+                let sig = Signals {
+                    p99: tally.reservoir.p99(),
+                    backlog: m.backlog_high_water,
+                    failed_steal_ratio: if attempts > 0 {
+                        fails as f64 / attempts as f64
+                    } else {
+                        0.0
+                    },
+                    donor_busy: exec.pool_backlog(1) > 0,
+                    width: exec.elastic().width(0),
+                };
+                match ctl.decide(&sig) {
+                    ScaleDecision::Hold => {}
+                    d @ ScaleDecision::Lend(n) => {
+                        if session.lend(1, 0, n) > 0 {
+                            scale_decisions.push(d);
+                        }
+                    }
+                    ScaleDecision::Reclaim => {
+                        if session.reclaim(1) > 0 {
+                            scale_decisions.push(ScaleDecision::Reclaim);
+                        }
+                    }
+                }
+                next_ctl += ctl_interval;
             }
             let wait = (t - start.elapsed().as_secs_f64()).max(0.0);
             thread::sleep(Duration::from_secs_f64(wait.min(2e-4)));
@@ -496,6 +606,11 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
         h.cancel();
         h.join();
     }
+    // restore the base pool assignment before the executor outlives
+    // this soak
+    if controller.is_some() {
+        session.reclaim(1);
+    }
     if spec.metrics_interval > 0.0 {
         metrics_log
             .push(crate::obs::metrics().snapshot(start.elapsed().as_secs_f64()));
@@ -525,6 +640,7 @@ pub fn run_serve(exec: &Executor, spec: &ServeSpec) -> Result<ServeReport, Graph
         wall: start.elapsed().as_secs_f64(),
         decisions,
         metrics: metrics_log,
+        scale_decisions,
     })
 }
 
@@ -605,6 +721,57 @@ mod tests {
         assert_eq!(report.decisions, expected);
         assert_eq!(report.served, 2);
         assert_eq!(report.shed, 4);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock soak on real threads")]
+    fn elastic_soak_restores_pools_and_reports_decisions() {
+        use crate::topology::DeviceClass;
+        let exec = Executor::new_with_policy(
+            Arc::new(Topology::heterogeneous(
+                "h",
+                1,
+                2,
+                1.0,
+                1.0,
+                &[(DeviceClass::Gpu, 2, 2.0)],
+            )),
+            Arc::new(SchedConfig::fine_grained()),
+            TenancyPolicy::Fifo,
+        );
+        let spec = ServeSpec {
+            qps: 200.0,
+            duration: 0.3,
+            warmup: 0.0,
+            work: 2_000,
+            rows: 16,
+            batch_tenants: 0,
+            slo: 0.0005, // tight on purpose: give the controller breaches
+            elastic: true,
+            metrics_interval: 0.02,
+            ..ServeSpec::default()
+        };
+        let report = run_serve(&exec, &spec).unwrap();
+        // whatever the controller did mid-soak, the base assignment is
+        // restored before the executor outlives the soak
+        assert_eq!(exec.elastic().lent_out(1), 0);
+        assert_eq!(exec.elastic().width(0), 2);
+        assert_eq!(exec.elastic().width(1), 2);
+        assert_eq!(report.failed, 0);
+        let j = crate::util::json::parse(&crate::util::json::to_string(
+            &report.to_json(),
+        ))
+        .unwrap();
+        let dec = j
+            .get("scale_decisions")
+            .and_then(Json::as_arr)
+            .expect("scale_decisions array");
+        assert_eq!(dec.len(), report.scale_decisions.len());
+        // interval snapshots carry the width gauges
+        let metrics = j.get("metrics").and_then(Json::as_arr).unwrap();
+        assert!(metrics
+            .iter()
+            .all(|m| m.get("pool_width").and_then(Json::as_arr).is_some()));
     }
 
     #[test]

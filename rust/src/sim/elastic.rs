@@ -1,0 +1,552 @@
+//! Virtual-time mirror of [`crate::sched::elastic`]: stepped-capacity
+//! replay of elastic device pools under the *same*
+//! [`ScalingController`] the real `serve` soak runs.
+//!
+//! The replay drives a light cost model (uniform-speed workers, fixed
+//! per-item virtual cost per job — this mirror predicts *controller
+//! behaviour and pool shape*, not host-calibrated makespans) over the
+//! real overlay arithmetic: worker↔pool assignment goes through an
+//! actual [`ElasticPools`] instance, so lend/reclaim/width semantics
+//! cannot drift from the executor's. Eligibility is the executor's
+//! rule verbatim — a borrowed worker serves only moldable jobs; home
+//! workers serve their pool's pinned tenants first — and a pinned
+//! arrival on a lending pool snaps borrowed workers home immediately
+//! ([`ElasticPools::reclaim_if_lent`]), exactly like the executor's
+//! enqueue hook.
+//!
+//! Two entry points:
+//!
+//! - [`replay_elastic`]: a full workload replay (static pools when
+//!   [`ElasticSimSpec::controller`] is `None`), the oracle behind
+//!   `figure elastic`;
+//! - [`replay_steps`]: a scripted lend/reclaim/resize schedule, used by
+//!   the DES-vs-real parity test to compare `Resize` trace-event
+//!   ordering against a real [`crate::sched::Session`] applying the
+//!   same schedule.
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use super::engine::Ev;
+use crate::obs::trace::{self, TraceKind, NO_JOB, OBS_CONTROL_WORKER};
+use crate::sched::elastic::{ElasticPools, ScaleDecision, ScalingController, Signals};
+pub use crate::sched::elastic::ControllerCfg;
+use crate::sched::placement::DevicePools;
+use crate::topology::Topology;
+use crate::util::stats::LatencyReservoir;
+
+/// Virtual seconds → integer nanoseconds for the shared trace stream
+/// (same convention as [`super::graph`]).
+fn vns(t: f64) -> u64 {
+    (t * 1e9).round() as u64
+}
+
+/// Chunks per job: items are claimed in `items / CHUNKS_PER_JOB`-sized
+/// chunks (floor 1), the granularity at which a re-homed worker lets go
+/// of a job mid-flight — the DES analogue of the executor's per-chunk
+/// yield check.
+const CHUNKS_PER_JOB: usize = 64;
+
+/// Reservoir capacity for the interactive-latency digest.
+const ELASTIC_RESERVOIR: usize = 4096;
+
+/// One cost-described job in the elastic replay.
+#[derive(Debug, Clone)]
+pub struct ElasticJob {
+    pub name: String,
+    /// Virtual arrival offset, seconds.
+    pub arrival: f64,
+    /// Parallel items.
+    pub items: usize,
+    /// Virtual seconds per item (uniform-speed workers).
+    pub per_item: f64,
+    /// Device pool the job is placed on.
+    pub pool: usize,
+    /// Moldable jobs may run on workers borrowed into their pool;
+    /// pinned (`false`) jobs only ever run on home residents.
+    pub moldable: bool,
+    /// Counted in the interactive-latency reservoir ([`interactive_p99`](ElasticSimOutcome::interactive_p99)).
+    pub interactive: bool,
+}
+
+impl ElasticJob {
+    pub fn new(name: &str, arrival: f64, items: usize, per_item: f64) -> Self {
+        ElasticJob {
+            name: name.to_string(),
+            arrival,
+            items,
+            per_item,
+            pool: 0,
+            moldable: false,
+            interactive: false,
+        }
+    }
+
+    pub fn pool(mut self, pool: usize) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    pub fn moldable(mut self) -> Self {
+        self.moldable = true;
+        self
+    }
+
+    pub fn interactive(mut self) -> Self {
+        self.interactive = true;
+        self
+    }
+}
+
+/// One elastic replay: the workload, the control cadence, and the
+/// controller configuration (`None` = static pools — the baseline leg
+/// of `figure elastic`).
+#[derive(Debug, Clone)]
+pub struct ElasticSimSpec {
+    pub jobs: Vec<ElasticJob>,
+    /// Seconds between controller evaluations.
+    pub check_interval: f64,
+    /// Reservoir seed (determinism, not randomness of outcome).
+    pub seed: u64,
+    /// `Some` runs the [`ScalingController`] at every check;
+    /// `None` keeps the base pool assignment throughout.
+    pub controller: Option<ControllerCfg>,
+}
+
+impl Default for ElasticSimSpec {
+    fn default() -> Self {
+        ElasticSimSpec {
+            jobs: Vec::new(),
+            check_interval: 0.01,
+            seed: 42,
+            controller: None,
+        }
+    }
+}
+
+/// What one [`replay_elastic`] run produced.
+#[derive(Debug, Clone)]
+pub struct ElasticSimOutcome {
+    /// Virtual completion time of the last chunk.
+    pub makespan: f64,
+    /// Total busy time / (workers × makespan) — the figure's pool
+    /// utilization metric.
+    pub utilization: f64,
+    /// Busy time per *placement* pool over (base width × makespan);
+    /// a borrowing pool can exceed 1.0.
+    pub per_pool_util: Vec<f64>,
+    /// p99 latency (arrival → completion) over interactive jobs.
+    pub interactive_p99: f64,
+    /// Non-`Hold` controller decisions that moved workers, in order.
+    pub decisions: Vec<ScaleDecision>,
+    /// `(t, widths)` after every assignment change, starting at the
+    /// base assignment.
+    pub widths: Vec<(f64, Vec<usize>)>,
+    /// Eager reclaims triggered by arrivals on a lending pool.
+    pub snapbacks: usize,
+    /// Jobs run to completion.
+    pub completed: usize,
+    /// No pinned chunk ever executed on a borrowed worker.
+    pub invariant_ok: bool,
+}
+
+/// Replay `spec` on a modelled `topo`.
+pub fn replay_elastic(topo: &Arc<Topology>, spec: &ElasticSimSpec) -> ElasticSimOutcome {
+    let pools = DevicePools::new(topo);
+    let el = ElasticPools::new(&pools);
+    let nw = el.n_workers();
+    let np = el.n_pools();
+    let n = spec.jobs.len();
+    let base_widths = el.widths();
+
+    // arrival cursor over jobs sorted by (arrival, index)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        spec.jobs[a]
+            .arrival
+            .total_cmp(&spec.jobs[b].arrival)
+            .then(a.cmp(&b))
+    });
+    let mut next_arr = 0usize;
+    let mut arrived = vec![false; n];
+    // monotonic high-water of the interactive (pinned pool-0) backlog —
+    // the signal the real soak reads from `backlog_high_water`
+    let mut backlog_hi: u64 = 0;
+
+    // `remaining` = unclaimed items; `inflight` = claimed, not retired
+    let mut remaining: Vec<usize> = spec.jobs.iter().map(|j| j.items).collect();
+    let mut inflight = vec![0usize; n];
+    let chunk: Vec<usize> =
+        spec.jobs.iter().map(|j| (j.items / CHUNKS_PER_JOB).max(1)).collect();
+    let mut done = vec![false; n];
+
+    let mut controller = spec.controller.map(ScalingController::new);
+    let mut next_check = spec.check_interval;
+
+    let mut latencies = LatencyReservoir::new(ELASTIC_RESERVOIR, spec.seed ^ 0xE1A5);
+    let mut decisions: Vec<ScaleDecision> = Vec::new();
+    let mut widths_log: Vec<(f64, Vec<usize>)> = vec![(0.0, base_widths.clone())];
+    let mut snapbacks = 0usize;
+    let mut invariant_ok = true;
+    let (mut scan_rounds, mut idle_scans) = (0u64, 0u64);
+    let mut busy_total = 0.0f64;
+    let mut pool_busy = vec![0.0f64; np];
+    let mut makespan = 0.0f64;
+    let mut completed = 0usize;
+
+    fn record_widths(el: &ElasticPools, t: f64) {
+        for (p, wd) in el.widths().iter().enumerate() {
+            trace::record_at(
+                vns(t),
+                TraceKind::Resize,
+                OBS_CONTROL_WORKER,
+                NO_JOB,
+                p as u64,
+                *wd as u64,
+            );
+        }
+    }
+
+    // current chunk per worker: (job, claimed items)
+    let mut cur: Vec<Option<(usize, usize)>> = vec![None; nw];
+    let mut heap: BinaryHeap<Ev> = (0..nw).map(|w| Ev { t: 0.0, w }).collect();
+
+    while let Some(Ev { t, w }) = heap.pop() {
+        // 1) admit arrivals up to t; an arrival on a lending pool snaps
+        //    borrowed workers home (the executor's enqueue hook)
+        while next_arr < n && spec.jobs[order[next_arr]].arrival <= t {
+            let j = order[next_arr];
+            next_arr += 1;
+            arrived[j] = true;
+            if !spec.jobs[j].moldable && spec.jobs[j].pool == 0 {
+                let now_backlog = (0..n)
+                    .filter(|&k| {
+                        arrived[k]
+                            && !done[k]
+                            && !spec.jobs[k].moldable
+                            && spec.jobs[k].pool == 0
+                    })
+                    .count() as u64;
+                backlog_hi = backlog_hi.max(now_backlog);
+            }
+            let at = spec.jobs[j].arrival;
+            if el.reclaim_if_lent(spec.jobs[j].pool) > 0 {
+                snapbacks += 1;
+                record_widths(&el, at);
+                widths_log.push((at, el.widths()));
+            }
+        }
+
+        // 2) controller checks due at or before t
+        while controller.is_some() && next_check <= t {
+            let ct = next_check;
+            next_check += spec.check_interval;
+            let donor_busy = (0..n).any(|j| {
+                arrived[j] && !done[j] && !spec.jobs[j].moldable && spec.jobs[j].pool == 1
+            });
+            let sig = Signals {
+                p99: latencies.p99(),
+                backlog: backlog_hi,
+                failed_steal_ratio: if scan_rounds > 0 {
+                    idle_scans as f64 / scan_rounds as f64
+                } else {
+                    0.0
+                },
+                donor_busy,
+                width: el.width(0),
+            };
+            scan_rounds = 0;
+            idle_scans = 0;
+            let decision = controller.as_mut().unwrap().decide(&sig);
+            let moved = match decision {
+                ScaleDecision::Hold => 0,
+                // a busy donor refuses the lease — Session::lend's
+                // pool-backlog guard
+                ScaleDecision::Lend(_) if donor_busy => 0,
+                ScaleDecision::Lend(k) => el.lend(1, 0, k),
+                ScaleDecision::Reclaim => el.reclaim(1),
+            };
+            if moved > 0 {
+                decisions.push(decision);
+                record_widths(&el, ct);
+                widths_log.push((ct, el.widths()));
+            }
+        }
+
+        // 3) retire the chunk this event marks the end of
+        if let Some((j, len)) = cur[w].take() {
+            inflight[j] -= len;
+            makespan = makespan.max(t);
+            if remaining[j] == 0 && inflight[j] == 0 && !done[j] {
+                done[j] = true;
+                completed += 1;
+                if spec.jobs[j].interactive {
+                    latencies.record(t - spec.jobs[j].arrival);
+                }
+            }
+        }
+
+        // 4) pick the next chunk: the executor's eligibility rule, with
+        //    pinned tenants ahead of moldable batch in scan order
+        let my_pool = el.assignment_of(w);
+        let home = el.home_of(w);
+        let mut pick: Option<usize> = None;
+        if el.is_active(w) {
+            scan_rounds += 1;
+            for j in 0..n {
+                if !arrived[j] || remaining[j] == 0 {
+                    continue;
+                }
+                let jb = &spec.jobs[j];
+                if jb.pool != my_pool || (my_pool != home && !jb.moldable) {
+                    continue;
+                }
+                let better = pick.map_or(true, |b| {
+                    let bb = &spec.jobs[b];
+                    jb.moldable
+                        .cmp(&bb.moldable)
+                        .then(jb.arrival.total_cmp(&bb.arrival))
+                        .then(j.cmp(&b))
+                        .is_lt()
+                });
+                if better {
+                    pick = Some(j);
+                }
+            }
+            if pick.is_none() {
+                idle_scans += 1;
+            }
+        }
+
+        if let Some(j) = pick {
+            let jb = &spec.jobs[j];
+            if !jb.moldable && home != jb.pool {
+                invariant_ok = false;
+            }
+            let len = chunk[j].min(remaining[j]);
+            remaining[j] -= len;
+            inflight[j] += len;
+            let dur = len as f64 * jb.per_item;
+            busy_total += dur;
+            pool_busy[jb.pool] += dur;
+            cur[w] = Some((j, len));
+            heap.push(Ev { t: t + dur, w });
+            continue;
+        }
+
+        // idle: re-fire when eligibility can change — the next arrival
+        // or the next controller check — else retire this worker
+        let work_left = remaining.iter().any(|&r| r > 0) || next_arr < n;
+        if !work_left {
+            continue;
+        }
+        let mut wake = f64::INFINITY;
+        if next_arr < n {
+            wake = wake.min(spec.jobs[order[next_arr]].arrival.max(t));
+        }
+        if controller.is_some() {
+            wake = wake.min(next_check);
+        }
+        if wake.is_finite() {
+            heap.push(Ev { t: wake, w });
+        }
+    }
+
+    let span = makespan.max(f64::MIN_POSITIVE);
+    ElasticSimOutcome {
+        makespan,
+        utilization: busy_total / (nw as f64 * span),
+        per_pool_util: base_widths
+            .iter()
+            .zip(&pool_busy)
+            .map(|(&bw, &b)| b / (bw.max(1) as f64 * span))
+            .collect(),
+        interactive_p99: latencies.p99(),
+        decisions,
+        widths: widths_log,
+        snapbacks,
+        completed,
+        invariant_ok,
+    }
+}
+
+/// One scripted resize step for [`replay_steps`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ElasticStep {
+    /// Lend `n` workers `from` → `to` at virtual time `t`.
+    Lend { t: f64, from: usize, to: usize, n: usize },
+    /// Return every borrowed `pool`-homed worker at `t`.
+    Reclaim { t: f64, pool: usize },
+    /// Park/unpark `pool` residents to `width` at `t`.
+    Resize { t: f64, pool: usize, width: usize },
+}
+
+/// Apply a scripted schedule through the real overlay arithmetic,
+/// recording the same per-pool `Resize` trace events a
+/// [`crate::sched::Session`] publishes (only when workers actually
+/// moved). Returns the widths after each step — the parity test
+/// compares both this and the drained event stream against a real
+/// session applying the identical schedule.
+pub fn replay_steps(topo: &Arc<Topology>, steps: &[ElasticStep]) -> Vec<Vec<usize>> {
+    let pools = DevicePools::new(topo);
+    let el = ElasticPools::new(&pools);
+    let mut out = Vec::with_capacity(steps.len());
+    for s in steps {
+        let (t, moved) = match *s {
+            ElasticStep::Lend { t, from, to, n } => (t, el.lend(from, to, n)),
+            ElasticStep::Reclaim { t, pool } => (t, el.reclaim(pool)),
+            ElasticStep::Resize { t, pool, width } => {
+                let before = el.epoch();
+                el.set_width(pool, width);
+                (t, (el.epoch() != before) as usize)
+            }
+        };
+        if moved > 0 {
+            for (p, wd) in el.widths().iter().enumerate() {
+                trace::record_at(
+                    vns(t),
+                    TraceKind::Resize,
+                    OBS_CONTROL_WORKER,
+                    NO_JOB,
+                    p as u64,
+                    *wd as u64,
+                );
+            }
+        }
+        out.push(el.widths());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::DeviceClass;
+
+    fn hetero() -> Arc<Topology> {
+        Arc::new(Topology::heterogeneous(
+            "h",
+            1,
+            4,
+            1.0,
+            1.0,
+            &[(DeviceClass::Gpu, 2, 2.0)],
+        ))
+    }
+
+    /// A tight objective the static 4-worker pool cannot hold once a
+    /// burst queues behind the batch.
+    fn test_cfg() -> ControllerCfg {
+        ControllerCfg {
+            slo: 0.0005,
+            min_workers: 4,
+            max_workers: 6,
+            patience: 1,
+            ..ControllerCfg::default()
+        }
+    }
+
+    /// Bursty interactive tenants + a moldable batch on pool 0, idle
+    /// GPU pool — the miniature of the `figure elastic` workload. The
+    /// batch is many *small* moldable jobs (0.2 ms chunks), so home
+    /// workers are never stuck behind a coarse chunk: elastic latencies
+    /// dominate static ones sample for sample, because borrowed workers
+    /// only ever drain the batch and home-worker timelines stay
+    /// identical until the batch runs dry (earlier under lending).
+    fn bursty_mix() -> Vec<ElasticJob> {
+        let mut jobs: Vec<ElasticJob> = (0..20)
+            .map(|b| {
+                ElasticJob::new(&format!("batch{b}"), 0.0, 128, 1e-4)
+                    .moldable()
+            })
+            .collect();
+        for i in 0..20 {
+            let t = 0.02 + 0.015 * (i / 4) as f64 + 0.002 * (i % 4) as f64;
+            jobs.push(
+                ElasticJob::new(&format!("rq{i}"), t, 64, 1e-4).interactive(),
+            );
+        }
+        jobs
+    }
+
+    #[test]
+    fn elastic_beats_static_on_the_bursty_mix() {
+        let topo = hetero();
+        let mix = bursty_mix();
+        let stat = replay_elastic(
+            &topo,
+            &ElasticSimSpec { jobs: mix.clone(), ..ElasticSimSpec::default() },
+        );
+        let elas = replay_elastic(
+            &topo,
+            &ElasticSimSpec {
+                jobs: mix,
+                controller: Some(test_cfg()),
+                ..ElasticSimSpec::default()
+            },
+        );
+        assert!(stat.invariant_ok && elas.invariant_ok);
+        assert_eq!(stat.decisions, Vec::new());
+        assert!(!elas.decisions.is_empty(), "controller acted: {:?}", elas.decisions);
+        assert!(
+            elas.utilization >= stat.utilization,
+            "elastic util {} < static {}",
+            elas.utilization,
+            stat.utilization
+        );
+        assert!(
+            elas.interactive_p99 <= stat.interactive_p99,
+            "elastic p99 {} > static {}",
+            elas.interactive_p99,
+            stat.interactive_p99
+        );
+        assert!(elas.makespan <= stat.makespan);
+        assert_eq!(elas.completed, 40);
+    }
+
+    #[test]
+    fn pinned_arrival_on_donor_pool_snaps_lent_workers_back() {
+        let topo = hetero();
+        // interactive pressure makes the controller lend the GPU pool
+        // away; the pinned GPU arrival at t=0.08 must snap it back
+        let mut jobs = bursty_mix();
+        jobs.push(ElasticJob::new("gpu", 0.08, 64, 1e-4).pool(1));
+        let out = replay_elastic(
+            &topo,
+            &ElasticSimSpec {
+                jobs,
+                controller: Some(test_cfg()),
+                ..ElasticSimSpec::default()
+            },
+        );
+        assert!(out.invariant_ok, "pinned work stayed on its pool");
+        assert_eq!(out.completed, 41);
+        assert!(
+            out.decisions.iter().any(|d| matches!(d, ScaleDecision::Lend(_))),
+            "controller lent before the pinned arrival: {:?}",
+            out.decisions
+        );
+        assert!(out.snapbacks >= 1, "pinned arrival forced a snap-back");
+        // the snap-back restored the base assignment (4/2) mid-replay
+        // (the controller may lend again afterwards)
+        assert!(
+            out.widths[1..].iter().any(|(_, w)| w == &vec![4, 2]),
+            "no snap-back to the base widths in {:?}",
+            out.widths
+        );
+    }
+
+    #[test]
+    fn scripted_steps_report_widths_like_the_overlay() {
+        let topo = hetero();
+        let widths = replay_steps(
+            &topo,
+            &[
+                ElasticStep::Lend { t: 0.01, from: 1, to: 0, n: 2 },
+                ElasticStep::Resize { t: 0.02, pool: 0, width: 3 },
+                ElasticStep::Reclaim { t: 0.03, pool: 1 },
+            ],
+        );
+        assert_eq!(widths, vec![vec![6, 0], vec![5, 0], vec![3, 2]]);
+    }
+}

@@ -45,13 +45,25 @@
 //! [`AdmissionPolicy`](crate::sched::AdmissionPolicy), over batch
 //! tenants — the DES mirror of [`crate::serve`] and the oracle behind
 //! `figure serve`.
+//!
+//! Elastic pools replay through [`elastic`]: stepped-capacity
+//! schedules and the SLO-driven
+//! [`ScalingController`](crate::sched::ScalingController) run over the
+//! real [`crate::sched::elastic`] overlay arithmetic in virtual time —
+//! the mirror of runtime pool resizing and the oracle behind
+//! `figure elastic`.
 
 pub mod calibrate;
+pub mod elastic;
 pub mod engine;
 pub mod graph;
 pub mod model;
 pub mod serve;
 
+pub use elastic::{
+    replay_elastic, replay_steps, ElasticJob, ElasticSimOutcome,
+    ElasticSimSpec, ElasticStep,
+};
 pub use engine::{simulate, SimOutcome};
 pub use graph::{
     isolated_makespans, replay, replay_placed, replay_tenants,

@@ -1,0 +1,252 @@
+//! Integration: elastic device pools end-to-end — lend/resize/reclaim
+//! churn on the real executor never loses or double-executes work,
+//! pool-pinned jobs never cross onto borrowed or foreign workers
+//! mid-resize, and a scripted resize schedule produces the same
+//! `Resize` event stream on a real `Session` and the DES mirror
+//! (`sim::replay_steps`).
+
+// Real-thread integration suites are too heavy (and too
+// timing-dependent) for the interpreter; Miri covers the unit suites.
+#![cfg(not(miri))]
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use daphne_sched::config::{SchedConfig, TraceMode};
+use daphne_sched::obs::trace;
+use daphne_sched::obs::TraceKind;
+use daphne_sched::sched::{Executor, JobSpec, Placement, PoolId, SubmitOpts};
+use daphne_sched::sim::{self, ElasticStep};
+use daphne_sched::topology::{DeviceClass, Topology};
+
+/// The suite touches process-global state (the trace gate, the metrics
+/// gauges) and hammers the same small machine — serialize the tests.
+static SEQ: Mutex<()> = Mutex::new(());
+
+/// 2 CPU cores (pool 0: workers 0,1) + 2 GPU devices (pool 1: workers
+/// 2,3) — the smallest topology where lending, parking and pinning are
+/// all observable with real threads.
+fn hetero4() -> Arc<Topology> {
+    Arc::new(Topology::heterogeneous(
+        "t-elastic",
+        1,
+        2,
+        1.0,
+        1.0,
+        &[(DeviceClass::Gpu, 2, 2.0)],
+    ))
+}
+
+fn executor() -> Executor {
+    Executor::new(hetero4(), Arc::new(SchedConfig::default()))
+}
+
+/// ACCEPTANCE: across 100 lend/resize/reclaim cycles racing moldable
+/// submissions and concurrent cancellation, no task is lost and no
+/// task executes twice — per-item hit counts agree exactly with each
+/// job's report, cancelled or not.
+#[test]
+fn resize_churn_never_loses_or_duplicates_work() {
+    let _guard = SEQ.lock().unwrap();
+    const JOBS: usize = 48;
+    const ITEMS: usize = 4_000;
+    let exec = executor();
+    let hits: Arc<Vec<AtomicUsize>> = Arc::new(
+        (0..JOBS * ITEMS).map(|_| AtomicUsize::new(0)).collect(),
+    );
+    std::thread::scope(|s| {
+        let churn = s.spawn(|| {
+            let session = exec.session();
+            for cycle in 0..100 {
+                session.lend(1, 0, 2);
+                session.resize_pool(0, 1 + cycle % 2);
+                session.reclaim(1);
+                session.resize_pool(0, 2);
+                std::thread::yield_now();
+            }
+        });
+        let session = exec.session();
+        let mut handles = Vec::new();
+        for j in 0..JOBS {
+            let hits = Arc::clone(&hits);
+            let h = session.submit(
+                JobSpec::new(ITEMS).named(&format!("mold{j}")),
+                SubmitOpts::new().moldable(1, 4),
+                move |_w, r| {
+                    for i in r.start..r.end {
+                        hits[j * ITEMS + i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            handles.push(h);
+            if j % 4 == 3 {
+                // stagger submissions so cancels land mid-flight
+                std::thread::yield_now();
+            }
+        }
+        for (j, h) in handles.iter().enumerate() {
+            if j % 3 == 0 {
+                h.cancel();
+            }
+        }
+        for (j, h) in handles.into_iter().enumerate() {
+            let report = h.wait();
+            let row = &hits[j * ITEMS..(j + 1) * ITEMS];
+            let executed: usize =
+                row.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+            assert!(
+                row.iter().all(|c| c.load(Ordering::Relaxed) <= 1),
+                "job {j}: an item executed twice"
+            );
+            assert_eq!(
+                executed,
+                report.total_items(),
+                "job {j}: counted items disagree with the report"
+            );
+            if j % 3 != 0 {
+                assert_eq!(report.total_items(), ITEMS, "job {j} lost work");
+            }
+        }
+        churn.join().unwrap();
+    });
+    // the final cycle reclaimed and re-widened: base assignment restored
+    assert_eq!(exec.elastic().widths(), vec![2, 2]);
+    assert_eq!(exec.elastic().lent_out(1), 0);
+}
+
+/// ACCEPTANCE: a pool-pinned job is never observed on a foreign pool's
+/// worker mid-resize, and a pinned arrival on a lending pool snaps the
+/// lease back before the job needs its workers.
+#[test]
+fn pinned_pool_jobs_never_run_on_borrowed_or_foreign_workers() {
+    let _guard = SEQ.lock().unwrap();
+    let exec = executor();
+    let violation = Arc::new(AtomicBool::new(false));
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let churn = s.spawn(|| {
+            let session = exec.session();
+            while !stop.load(Ordering::Acquire) {
+                // lend is refused while the pinned jobs are live; the
+                // resizes park/unpark the GPU pool under them
+                session.lend(1, 0, 2);
+                session.resize_pool(1, 1);
+                session.resize_pool(1, 2);
+                session.reclaim(1);
+                std::thread::yield_now();
+            }
+        });
+        let session = exec.session();
+        for g in 0..40 {
+            let violation = Arc::clone(&violation);
+            let h = session.submit(
+                JobSpec::new(800)
+                    .named(&format!("gpu{g}"))
+                    .with_placement(Placement::Pool(PoolId(1))),
+                SubmitOpts::new(),
+                move |w, _r| {
+                    // pool 1 owns workers 2 and 3 on this topology
+                    if w < 2 {
+                        violation.store(true, Ordering::Release);
+                    }
+                },
+            );
+            h.wait();
+        }
+        stop.store(true, Ordering::Release);
+        churn.join().unwrap();
+    });
+    assert!(
+        !violation.load(Ordering::Acquire),
+        "a pool-1-pinned task executed on a CPU worker"
+    );
+
+    // with the donor idle the lease goes through — and the next pinned
+    // arrival on the lending pool snaps it back automatically
+    let session = exec.session();
+    assert_eq!(session.lend(1, 0, 2), 2);
+    assert_eq!(exec.elastic().lent_out(1), 2);
+    let vflag = Arc::clone(&violation);
+    let h = session.submit(
+        JobSpec::new(800)
+            .named("gpu-snap")
+            .with_placement(Placement::Pool(PoolId(1))),
+        SubmitOpts::new(),
+        move |w, _r| {
+            if w < 2 {
+                vflag.store(true, Ordering::Release);
+            }
+        },
+    );
+    let report = h.wait();
+    assert_eq!(report.total_items(), 800);
+    assert!(!violation.load(Ordering::Acquire));
+    assert_eq!(
+        exec.elastic().lent_out(1),
+        0,
+        "the pinned arrival must have reclaimed the lease"
+    );
+    assert_eq!(exec.elastic().widths(), vec![2, 2]);
+}
+
+/// ACCEPTANCE: a scripted lend/resize/reclaim schedule applied through
+/// a real `Session` and through the DES mirror produces the same width
+/// trajectory AND the same ordered `Resize` trace-event stream.
+#[test]
+fn scripted_resize_schedule_matches_the_des_mirror() {
+    let _guard = SEQ.lock().unwrap();
+    trace::enable(TraceMode::On, 4, 4096);
+    let _ = trace::drain();
+    let steps = [
+        ElasticStep::Lend { t: 0.01, from: 1, to: 0, n: 2 },
+        ElasticStep::Resize { t: 0.02, pool: 0, width: 1 },
+        ElasticStep::Resize { t: 0.03, pool: 0, width: 2 },
+        ElasticStep::Reclaim { t: 0.04, pool: 1 },
+    ];
+
+    // real session applying the schedule
+    let exec = executor();
+    let session = exec.session();
+    let mut real_widths = Vec::new();
+    for s in &steps {
+        match *s {
+            ElasticStep::Lend { from, to, n, .. } => {
+                session.lend(from, to, n);
+            }
+            ElasticStep::Resize { pool, width, .. } => {
+                session.resize_pool(pool, width);
+            }
+            ElasticStep::Reclaim { pool, .. } => {
+                session.reclaim(pool);
+            }
+        }
+        real_widths.push(exec.elastic().widths());
+    }
+    // (pool, width) pairs; timestamps are engine-local and not compared
+    let real: Vec<(u64, u64)> = trace::drain()
+        .into_iter()
+        .filter(|e| e.kind == TraceKind::Resize)
+        .map(|e| (e.name_hash, e.tag_hash))
+        .collect();
+
+    // DES mirror applying the identical schedule
+    let sim_widths = sim::replay_steps(&hetero4(), &steps);
+    let des: Vec<(u64, u64)> = trace::drain()
+        .into_iter()
+        .filter(|e| e.kind == TraceKind::Resize)
+        .map(|e| (e.name_hash, e.tag_hash))
+        .collect();
+    trace::enable(TraceMode::Off, 4, 4096);
+
+    assert_eq!(real_widths, sim_widths, "width trajectories diverge");
+    assert_eq!(
+        real_widths.last(),
+        Some(&vec![2, 2]),
+        "the schedule ends at the base assignment"
+    );
+    assert!(
+        !real.is_empty(),
+        "every effective step must publish Resize events"
+    );
+    assert_eq!(real, des, "Resize event streams diverge");
+}

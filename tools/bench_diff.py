@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Regression gate over BENCH_<name>.json bench reports (stdlib only).
+
+Compares the figure rows of a candidate report (normally the CI's
+BENCH_smoke.json) against a blessed baseline (BENCH_baseline.json at the
+repo root), keyed by (scheme, victim, occurrence). The compared metric
+is each row's `time` column — virtual-time DES makespans, so they are
+deterministic for a fixed workload and the thresholds guard against
+modelling regressions, not host noise.
+
+Policy:
+  * regression  > --fail (default 15%)  -> finding, exit 1
+  * regression  > --warn (default  5%)  -> warning, exit 0
+  * improvements and sub-threshold drift are reported, never fatal
+  * row-set drift (a figure row added/removed/renamed) is a warning:
+    the gate asks for a re-bless rather than failing refactors that
+    legitimately reshape a figure
+
+A baseline with `"provisional": true` downgrades every finding to a
+warning (exit 0): the gate is armed but not yet enforcing, because the
+blessed numbers were not produced by the canonical CI runner. Re-bless
+with `--bless` from a trusted report to drop the flag.
+
+Usage:
+  python3 tools/bench_diff.py BENCH_baseline.json BENCH_smoke.json
+  python3 tools/bench_diff.py --bless BENCH_smoke.json BENCH_baseline.json
+"""
+import argparse
+import json
+import sys
+
+SCHEMA = "daphne-sched/bench/v1"
+
+
+def load_report(path):
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("schema") != SCHEMA:
+        sys.exit(f"bench_diff: {path}: schema {d.get('schema')!r} != {SCHEMA!r}")
+    if not isinstance(d.get("figures"), list):
+        sys.exit(f"bench_diff: {path}: missing figures rows")
+    return d
+
+
+def keyed_rows(report):
+    """(scheme, victim, occurrence) -> row; occurrence disambiguates
+    repeated (scheme, victim) pairs within one report."""
+    seen = {}
+    out = {}
+    for row in report["figures"]:
+        base = (row.get("scheme"), row.get("victim"))
+        n = seen.get(base, 0)
+        seen[base] = n + 1
+        out[base + (n,)] = row
+    return out
+
+
+def key_str(key):
+    scheme, victim, occ = key
+    s = f"{scheme}/{victim if victim is not None else '-'}"
+    return f"{s}#{occ}" if occ else s
+
+
+def bless(candidate_path, baseline_path):
+    d = load_report(candidate_path)
+    d["provisional"] = False
+    with open(baseline_path, "w") as f:
+        json.dump(d, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench_diff: blessed {candidate_path} -> {baseline_path} "
+          f"({len(d['figures'])} rows)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--warn", type=float, default=0.05,
+                    help="warn above this relative regression (default 0.05)")
+    ap.add_argument("--fail", type=float, default=0.15,
+                    help="fail above this relative regression (default 0.15)")
+    ap.add_argument("--bless", action="store_true",
+                    help="write the first argument as the new baseline "
+                         "named by the second, clearing `provisional`")
+    args = ap.parse_args()
+    if args.bless:
+        bless(args.baseline, args.candidate)
+        return 0
+
+    base = load_report(args.baseline)
+    cand = load_report(args.candidate)
+    provisional = bool(base.get("provisional"))
+    brows, crows = keyed_rows(base), keyed_rows(cand)
+
+    warnings, failures = [], []
+    for key in sorted(set(brows) - set(crows), key=key_str):
+        warnings.append(f"row {key_str(key)} in baseline only (re-bless?)")
+    for key in sorted(set(crows) - set(brows), key=key_str):
+        warnings.append(f"row {key_str(key)} in candidate only (re-bless?)")
+
+    compared = 0
+    for key in sorted(set(brows) & set(crows), key=key_str):
+        b, c = brows[key]["time"], crows[key]["time"]
+        if not (b > 0.0):
+            warnings.append(f"{key_str(key)}: baseline time {b} not positive")
+            continue
+        compared += 1
+        delta = (c - b) / b
+        line = f"{key_str(key)}: {b:.6g}s -> {c:.6g}s ({delta:+.1%})"
+        if delta > args.fail:
+            failures.append(line)
+        elif delta > args.warn:
+            warnings.append(line)
+        elif delta < -args.warn:
+            print(f"bench_diff: improvement {line}")
+
+    for w in warnings:
+        print(f"bench_diff: WARN {w}")
+    for f in failures:
+        print(f"bench_diff: FAIL {f}")
+    verdict = "provisional baseline — findings downgraded" if provisional \
+        else f"warn>{args.warn:.0%} fail>{args.fail:.0%}"
+    print(f"bench_diff: {compared} rows compared, {len(warnings)} warning(s), "
+          f"{len(failures)} failure(s) [{verdict}]")
+    if failures and provisional:
+        print("bench_diff: baseline is provisional; re-bless with "
+              "`python3 tools/bench_diff.py --bless BENCH_smoke.json "
+              "BENCH_baseline.json` once the numbers are trusted")
+        return 0
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

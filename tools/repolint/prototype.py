@@ -23,6 +23,7 @@ RANK_FIELDS = {
     "progress": "GRAPH_PROGRESS",
     "jobs": "GRAPH_JOBS",
     "pending": "SCOPE_PENDING",
+    "lease": "ELASTIC_LEASE",
     "queue": "RUN_QUEUE",
     "body": "JOB_BODY",
     "panic": "JOB_PANIC",
@@ -57,6 +58,13 @@ OBS_ANALYSIS_FILES = ("rust/src/obs/analyze.rs", "rust/src/obs/report.rs")
 OBS_ANALYSIS_ALLOWED = {"util", "topology", "config", "obs", "sim"}
 
 SERVE_CONSUMERS = ("rust/src/serve/", "rust/src/bench/")
+
+# The elastic lease overlay is consulted from the dispatch hot path, so
+# it stays a near-leaf; and its module path is API only for sched/, the
+# DES mirror and the serving loop (everything else goes through the
+# crate::sched re-exports).
+ELASTIC_ALLOWED = {"sched", "util", "topology", "config"}
+ELASTIC_CONSUMERS = ("rust/src/sched/", "rust/src/sim/", "rust/src/serve/")
 
 
 def strip(src):
@@ -401,6 +409,27 @@ def lint_file(rel, src, ranks, findings):
                         msg = (f"obs may only use {sorted(OBS_ALLOWED)}, "
                                f"found crate::{m.group(1)}")
                     findings.append((rel, i + 1, "layering-obs", msg))
+
+    # --- elastic overlay layering ---
+    if rel == "rust/src/sched/elastic.rs":
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            for m in re.finditer(r"crate::(\w+)", line):
+                if m.group(1) not in ELASTIC_ALLOWED:
+                    findings.append((rel, i + 1, "layering-elastic",
+                                     f"sched/elastic.rs may only use "
+                                     f"{sorted(ELASTIC_ALLOWED)}, "
+                                     f"found crate::{m.group(1)}"))
+    if rel.startswith("rust/src/") and not rel.startswith(ELASTIC_CONSUMERS):
+        for i, line in enumerate(code):
+            if in_spans(tspans, i):
+                continue
+            if "sched::elastic" in line:
+                findings.append((rel, i + 1, "layering-elastic",
+                                 "only sched/, sim/ and serve/ may name "
+                                 "sched::elastic directly (use the "
+                                 "crate::sched re-exports)"))
 
     # --- no unwrap/expect in the worker dispatch path ---
     for fname in DISPATCH_PATH_FNS.get(rel, []):

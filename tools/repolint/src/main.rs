@@ -32,6 +32,7 @@ const RANK_FIELDS: &[(&str, &str)] = &[
     ("progress", "GRAPH_PROGRESS"),
     ("jobs", "GRAPH_JOBS"),
     ("pending", "SCOPE_PENDING"),
+    ("lease", "ELASTIC_LEASE"),
     ("queue", "RUN_QUEUE"),
     ("body", "JOB_BODY"),
     ("panic", "JOB_PANIC"),
@@ -90,6 +91,13 @@ const SERVE_ALLOWED: &[&str] =
 /// the config knob that gates it — never `sched`/`sim`/`serve` (which
 /// all import *it*) and never `bench`/`apps`.
 const OBS_ALLOWED: &[&str] = &["util", "topology", "config", "obs"];
+
+/// Crate-internal roots `sched/elastic.rs` may import (plus `sched`
+/// itself). The lease overlay is consulted from the dispatch hot path,
+/// so it must stay a near-leaf: never `obs`/`sim`/`serve` (width
+/// changes are published by the executor/session, not by the overlay)
+/// and never `bench`/`apps`.
+const ELASTIC_ALLOWED: &[&str] = &["sched", "util", "topology", "config"];
 
 /// The obs *analysis* modules (critical-path attribution, trace
 /// diffing, bench reports) consume replay outcomes, so they may
@@ -746,6 +754,54 @@ fn lint_file(rel: &str, src: &str, ranks: &[(String, u32)], out: &mut Vec<Findin
         }
     }
 
+    // -- elastic overlay layering --
+    // The lease overlay itself is a near-leaf (the dispatch path reads
+    // it between queue-lock acquisitions), and its module path is API
+    // only for the scheduler, the DES mirror and the serving loop:
+    // everything else goes through the `crate::sched` re-exports.
+    if rel == "rust/src/sched/elastic.rs" {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            for p in find_all(line, "crate::") {
+                let seg = ident_at(line, p + 7);
+                if !seg.is_empty() && !ELASTIC_ALLOWED.contains(&seg) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "layering-elastic",
+                        msg: format!(
+                            "sched/elastic.rs may only use \
+                             {ELASTIC_ALLOWED:?}, found crate::{seg}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    let elastic_consumer = rel.starts_with("rust/src/sched/")
+        || rel.starts_with("rust/src/sim/")
+        || rel.starts_with("rust/src/serve/");
+    if rel.starts_with("rust/src/") && !elastic_consumer {
+        for (i, line) in s.code.iter().enumerate() {
+            if in_spans(&tspans, i) {
+                continue;
+            }
+            if !find_all(line, "sched::elastic").is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "layering-elastic",
+                    msg: "only sched/, sim/ and serve/ may name \
+                          sched::elastic directly (use the crate::sched \
+                          re-exports)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+
     // -- no unwrap/expect on the worker dispatch path --
     for (file, fns) in DISPATCH_PATH_FNS {
         if *file != rel {
@@ -1191,6 +1247,39 @@ mod tests {
         assert_eq!(rules(&f), vec!["layering-obs"]);
         assert!(f[0].msg.contains("never sched internals"));
         assert!(f[0].msg.contains("crate::sched"));
+    }
+
+    #[test]
+    fn elastic_overlay_is_a_near_leaf() {
+        let ok = "use crate::util::ordered::OrderedMutex;\n\
+                  use crate::topology::Topology;\n\
+                  use crate::sched::ranks::ELASTIC_LEASE;\n";
+        assert!(run("rust/src/sched/elastic.rs", ok).is_empty());
+        let bad = "use crate::obs::trace;\nuse crate::sim::replay;\n";
+        let f = run("rust/src/sched/elastic.rs", bad);
+        assert_eq!(rules(&f), vec!["layering-elastic", "layering-elastic"]);
+        assert!(f[0].msg.contains("crate::obs"));
+        // the same imports are fine in any other sched module
+        assert!(run("rust/src/sched/executor.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn elastic_module_path_is_private_to_sched_sim_and_serve() {
+        let src = "use crate::sched::elastic::ElasticPools;\n";
+        let f = run("rust/src/bench/figures.rs", src);
+        assert_eq!(rules(&f), vec!["layering-elastic"]);
+        let f = run("rust/src/main.rs", src);
+        assert_eq!(rules(&f), vec!["layering-elastic"]);
+        // the session, the DES mirror and the serving loop own the path
+        assert!(run("rust/src/sched/session.rs", src).is_empty());
+        assert!(run("rust/src/sim/elastic.rs", src).is_empty());
+        assert!(run("rust/src/serve/mod.rs", src).is_empty());
+        // and a test-only reference is exempt, as everywhere else
+        let test_only = "#[cfg(test)]\n\
+                         mod tests {\n\
+                             use crate::sched::elastic::ControllerCfg;\n\
+                         }\n";
+        assert!(run("rust/src/bench/figures.rs", test_only).is_empty());
     }
 
     #[test]
